@@ -1,0 +1,51 @@
+//! Figure 1 bench: per-selection speed-up of Fast-MWEM (IVF / HNSW) over
+//! the exhaustive exponential mechanism, as a function of m.
+//!
+//! The full paper-scale sweep lives in `repro eval fig1`; this bench keeps
+//! sizes moderate so `cargo bench` finishes quickly while preserving the
+//! shape (speed-up grows with m).
+
+use fast_mwem::dp::exponential_mechanism;
+use fast_mwem::lazy::{LazyEm, ScoreTransform};
+use fast_mwem::mips::{build_index, IndexKind};
+use fast_mwem::util::bench::{bench, header};
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads::{binary_queries, gaussian_histogram};
+use std::time::Duration;
+
+fn main() {
+    let u = 512;
+    let n = 500;
+    let budget = Duration::from_millis(400);
+
+    for m in [2_000usize, 8_000, 16_000] {
+        header(&format!("fig1: one private selection, m={m}, U={u}"));
+        let mut rng = Rng::new(1);
+        let h = gaussian_histogram(&mut rng, u, n);
+        let q = binary_queries(&mut rng, m, u);
+        let p0 = vec![1.0 / u as f32; u];
+        let d: Vec<f32> =
+            h.probs().iter().zip(&p0).map(|(&a, &b)| a - b).collect();
+        let sens = 1.0 / n as f64;
+
+        let mut rng_b = Rng::new(2);
+        let exhaustive = bench("exhaustive EM (scores + scan)", budget, || {
+            let scores = q.abs_scores(&d);
+            exponential_mechanism(&mut rng_b, &scores, 1.0, sens)
+        });
+
+        for kind in [IndexKind::Ivf, IndexKind::Hnsw] {
+            let index = build_index(kind, q.vectors().clone(), 3);
+            let em = LazyEm::new(index.as_ref(), q.vectors(), ScoreTransform::Abs);
+            let mut rng_c = Rng::new(4);
+            let fast =
+                bench(&format!("lazy EM over {kind}"), budget, || {
+                    em.select(&mut rng_c, &d, 1.0, sens).index
+                });
+            println!(
+                "  -> speed-up over exhaustive: {:.1}x",
+                exhaustive.p50.as_secs_f64() / fast.p50.as_secs_f64()
+            );
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmarks of the request-path hot spots — the §Perf targets in
+//! EXPERIMENTS.md. Covers all three layers:
+//!   L3 native: dot, flat scan, HNSW query, lazy EM draw, binomial tail,
+//!              Bregman projection, MWU update;
+//!   runtime  : XLA scores / mwu round trips (if artifacts are built).
+
+use fast_mwem::dp::exponential_mechanism;
+use fast_mwem::lazy::{LazyEm, ScoreTransform};
+use fast_mwem::lp::bregman_project;
+use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
+use fast_mwem::mwem::{MwemBackend, NativeBackend, QuerySet};
+use fast_mwem::runtime::XlaBackend;
+use fast_mwem::sampling::binomial;
+use fast_mwem::util::bench::{bench, header};
+use fast_mwem::util::math::dot;
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads::binary_queries;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+    let mut rng = Rng::new(1);
+
+    // ---------------- L3 primitives ----------------
+    header("L3 primitives");
+    let a: Vec<f32> = (0..3000).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let b: Vec<f32> = (0..3000).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    bench("dot product, d=3000", budget, || dot(&a, &b));
+
+    bench("binomial(1e5, 3e-3) geometric skipping", budget, || {
+        binomial(&mut rng, 100_000, 0.003)
+    });
+
+    let weights: Vec<f32> = (0..10_000).map(|_| rng.uniform(0.01, 2.0) as f32).collect();
+    bench("bregman projection, m=10000, s=100", budget, || {
+        bregman_project(&weights, 100)
+    });
+
+    // ---------------- selection paths ----------------
+    let u = 512;
+    let m = 20_000;
+    let q = binary_queries(&mut rng, m, u);
+    let d: Vec<f32> = (0..u).map(|_| rng.uniform(-0.005, 0.005) as f32).collect();
+    let sens = 1.0 / 500.0;
+
+    header(&format!("selection paths (m={m}, U={u})"));
+    let mut rng2 = Rng::new(2);
+    bench("exhaustive: abs_scores + EM scan", budget, || {
+        let scores = q.abs_scores(&d);
+        exponential_mechanism(&mut rng2, &scores, 1.0, sens)
+    });
+
+    let flat = FlatIndex::new(q.vectors().clone());
+    bench("flat top-k (k=√m)", budget, || flat.top_k(&d, 142));
+
+    let hnsw = build_index(IndexKind::Hnsw, q.vectors().clone(), 3);
+    fast_mwem::mips::augment::reset_dist_evals();
+    let r = bench("hnsw top-k (k=√m)", budget, || hnsw.top_k(&d, 142));
+    println!(
+        "  -> {:.0} dist evals per hnsw query",
+        fast_mwem::mips::augment::dist_evals() as f64 / (r.iters + 1) as f64
+    );
+
+    let ivf = build_index(IndexKind::Ivf, q.vectors().clone(), 4);
+    bench("ivf top-k (k=√m)", budget, || ivf.top_k(&d, 142));
+
+    let em = LazyEm::new(hnsw.as_ref(), q.vectors(), ScoreTransform::Abs);
+    let mut rng3 = Rng::new(5);
+    bench("lazy EM draw (hnsw)", budget, || {
+        em.select(&mut rng3, &d, 1.0, sens).index
+    });
+
+    // ---------------- MWU update ----------------
+    header("MWU update (U=3000)");
+    let mut w: Vec<f32> = vec![1.0; 3000];
+    let c: Vec<f32> = (0..3000).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let mut native = NativeBackend;
+    bench("native mwu_update + normalize", budget, || {
+        native.mwu_update(&mut w, &c, -0.01)
+    });
+
+    // ---------------- XLA round trips ----------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        header("XLA artifact round trips (PJRT CPU)");
+        let mut xla = XlaBackend::load("artifacts").unwrap();
+        let mq = 1000;
+        let qx: QuerySet = binary_queries(&mut rng, mq, 1024);
+        let dx: Vec<f32> = (0..1024).map(|_| rng.uniform(-0.005, 0.005) as f32).collect();
+        bench("xla abs_scores (m=1000, U=1024, padded)", budget, || {
+            xla.abs_scores(&qx, &dx)
+        });
+        let mut wx = vec![1.0f32; 1024];
+        let cx: Vec<f32> = (0..1024).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        bench("xla mwu_update (U=1024)", budget, || {
+            xla.mwu_update(&mut wx, &cx, -0.01)
+        });
+    } else {
+        println!("\n(artifacts/ missing — skipping XLA round-trip benches)");
+    }
+}
+
+// (dist-eval accounting is printed by the hnsw block above when enabled)

@@ -1,0 +1,79 @@
+//! Private linear programming demo (§4): solve a scalar-private feasibility
+//! LP with every selection mode, and a constraint-private packing LP with
+//! the dense-MWU dual solver.
+//!
+//! Run:  cargo run --release --example private_lp
+
+use fast_mwem::lp::{run_dense, run_scalar, DenseLpConfig, ScalarLpConfig, SelectionMode};
+use fast_mwem::lp::dense::violated_constraints;
+use fast_mwem::mips::IndexKind;
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads::{random_feasibility_lp, random_packing_lp};
+
+fn main() {
+    // ---- scalar-private feasibility LP (Algorithm 3) -----------------------
+    let (m, d, t) = (20_000usize, 20usize, 1_000usize);
+    let mut rng = Rng::new(3);
+    let lp = random_feasibility_lp(&mut rng, m, d, 0.6);
+    println!("scalar-private LP: m={m} d={d} T={t} (Δ∞=0.1, ε=1)");
+    println!(
+        "  {:<12} {:>14} {:>12} {:>12} {:>10}",
+        "mode", "max violation", "select/iter", "work/iter", "build"
+    );
+
+    for (name, mode) in [
+        ("exhaustive", SelectionMode::Exhaustive),
+        ("lazy-flat", SelectionMode::Lazy(IndexKind::Flat)),
+        ("lazy-ivf", SelectionMode::Lazy(IndexKind::Ivf)),
+        ("lazy-hnsw", SelectionMode::Lazy(IndexKind::Hnsw)),
+    ] {
+        let cfg = ScalarLpConfig {
+            t,
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode,
+            seed: 17,
+            log_every: 0,
+        };
+        let res = run_scalar(&cfg, &lp);
+        println!(
+            "  {:<12} {:>+14.4} {:>10.1}µs {:>12.0} {:>9.2}s",
+            name,
+            lp.max_violation(&res.x),
+            res.avg_select_time.as_secs_f64() * 1e6,
+            res.avg_select_work,
+            res.index_build_time.as_secs_f64(),
+        );
+    }
+
+    // ---- constraint-private packing LP via dense MWU (§4.2) ---------------
+    let (m2, d2, t2, s) = (2_000usize, 24usize, 400usize, 100usize);
+    let mut rng = Rng::new(4);
+    let plp = random_packing_lp(&mut rng, m2, d2);
+    println!("\nconstraint-private packing LP (dense MWU): m={m2} d={d2} T={t2} s={s}");
+    for (name, mode) in [
+        ("exhaustive", SelectionMode::Exhaustive),
+        ("lazy-hnsw", SelectionMode::Lazy(IndexKind::Hnsw)),
+    ] {
+        let cfg = DenseLpConfig {
+            t: t2,
+            eps: 2.0,
+            delta: 1e-3,
+            s,
+            mode,
+            seed: 23,
+        };
+        let res = run_dense(&cfg, &plp);
+        let cx: f64 = res.x.iter().zip(&plp.c).map(|(&x, &c)| (x * c) as f64).sum();
+        println!(
+            "  {:<12} c·x̄ = {:.4} (OPT {:.4}), violated(α=0.5) {}/{}  work/iter {:.0}",
+            name,
+            cx,
+            plp.opt,
+            violated_constraints(&plp, &res.x, 0.5),
+            m2,
+            res.avg_select_work,
+        );
+    }
+}

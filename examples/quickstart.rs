@@ -1,0 +1,87 @@
+//! End-to-end quickstart — the full three-layer stack on a real workload.
+//!
+//! Reproduces the paper's headline result in miniature:
+//!   1. generate the §5.1 workload (Gaussian histogram, binary queries);
+//!   2. run classic MWEM with the dense steps executing through the AOT
+//!      XLA artifacts (L1 Pallas kernels → L2 JAX graphs → L3 Rust runtime);
+//!   3. run Fast-MWEM with the from-scratch HNSW index;
+//!   4. print the error trajectory ("loss curve") and the per-iteration
+//!      selection cost of both, demonstrating equal utility at Θ(√m) work.
+//!
+//! Run:  make artifacts && cargo run --release --example quickstart
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use fast_mwem::mips::IndexKind;
+use fast_mwem::mwem::{
+    run_classic, run_fast, FastMwemConfig, MwemBackend, MwemConfig, NativeBackend,
+};
+use fast_mwem::runtime::XlaBackend;
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads::{binary_queries, gaussian_histogram};
+
+fn main() -> anyhow::Result<()> {
+    // ---- workload (paper §5.1, scaled to the small artifact grid) --------
+    let (u, m, n, t) = (1024usize, 1000usize, 500usize, 400usize);
+    let eps = 1.0;
+    let delta = 1e-3;
+    let mut rng = Rng::new(7);
+    let h = gaussian_histogram(&mut rng, u, n);
+    let q = binary_queries(&mut rng, m, u);
+    let p0 = vec![1.0 / u as f32; u];
+    println!("workload: U={u} m={m} n={n} T={t} (ε={eps}, δ={delta})");
+    println!("initial max query error: {:.4}\n", q.max_error(h.probs(), &p0));
+
+    let mut cfg = MwemConfig::paper(t, u, eps, delta, 1234);
+    cfg.log_every = t / 8;
+
+    // ---- classic MWEM through the XLA artifacts ---------------------------
+    println!("[1/3] classic MWEM, dense ops on XLA (artifacts/)...");
+    let use_xla = std::path::Path::new("artifacts/manifest.json").exists();
+    let classic = if use_xla {
+        let mut backend = XlaBackend::load("artifacts")?;
+        let res = run_classic(&cfg, &q, &h, &mut backend);
+        println!("      ({} XLA executions)", backend.calls);
+        res
+    } else {
+        println!("      (artifacts/ missing — falling back to the native backend;");
+        println!("       run `make artifacts` for the full three-layer path)");
+        run_classic(&cfg, &q, &h, &mut NativeBackend)
+    };
+
+    // ---- Fast-MWEM with HNSW ----------------------------------------------
+    println!("[2/3] Fast-MWEM (lazy EM over from-scratch HNSW)...");
+    let mut native = NativeBackend;
+    let backend: &mut dyn MwemBackend = &mut native;
+    let fast = run_fast(&FastMwemConfig::new(cfg, IndexKind::Hnsw), &q, &h, backend);
+
+    // ---- report -------------------------------------------------------------
+    println!("\n[3/3] error trajectory (max query error of running average p̂):");
+    println!("  iter    classic     fast-hnsw");
+    for (c, f) in classic.stats.iter().zip(fast.result.stats.iter()) {
+        println!(
+            "  {:>5}   {:.4}      {:.4}",
+            c.iter, c.max_error_avg, f.max_error_avg
+        );
+    }
+
+    let e_classic = q.max_error(h.probs(), &classic.p_avg);
+    let e_fast = q.max_error(h.probs(), &fast.result.p_avg);
+    println!("\nfinal error    : classic {e_classic:.4} | fast-hnsw {e_fast:.4}");
+    println!(
+        "selection cost : classic {:.0} score-evals/iter | fast {:.0} ({:.1}x less, √m = {:.0})",
+        classic.avg_select_work,
+        fast.result.avg_select_work,
+        classic.avg_select_work / fast.result.avg_select_work,
+        (m as f64).sqrt()
+    );
+    println!(
+        "selection time : classic {:.1}µs/iter | fast {:.1}µs/iter",
+        classic.avg_select_time.as_secs_f64() * 1e6,
+        fast.result.avg_select_time.as_secs_f64() * 1e6
+    );
+    println!(
+        "privacy spent  : classic ε={:.3} | fast ε={:.3} (budget ε={eps})",
+        classic.privacy_spent.0, fast.result.privacy_spent.0
+    );
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Coordinator demo: a batch of private-analysis jobs through the
+//! leader/worker pool with a global privacy cap.
+//!
+//! Run:  cargo run --release --example serve
+
+use fast_mwem::coordinator::{
+    Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
+};
+use fast_mwem::lp::SelectionMode;
+use fast_mwem::mips::IndexKind;
+
+fn main() {
+    let mut coord = Coordinator::start(CoordinatorConfig {
+        workers: 4,
+        eps_cap: Some(10.0), // global privacy budget across accepted jobs
+    });
+
+    let mut submitted = 0;
+    let mut rejected = 0;
+    for i in 0..12 {
+        let spec = if i % 3 == 2 {
+            JobSpec::Lp(LpJobSpec {
+                m: 4_000,
+                d: 16,
+                t: 300,
+                eps: 1.0,
+                delta: 1e-3,
+                delta_inf: 0.1,
+                mode: SelectionMode::Lazy(IndexKind::Hnsw),
+                seed: i,
+            })
+        } else {
+            JobSpec::Release(ReleaseJobSpec {
+                u: 512,
+                m: 800,
+                n: 500,
+                t: 300,
+                eps: 1.0,
+                delta: 1e-3,
+                index: Some(if i % 3 == 0 { IndexKind::Hnsw } else { IndexKind::Ivf }),
+                seed: i,
+            })
+        };
+        match coord.submit(spec) {
+            Ok(id) => {
+                submitted += 1;
+                println!("submitted job {id}");
+            }
+            Err(e) => {
+                rejected += 1;
+                println!("rejected: {e}");
+            }
+        }
+    }
+
+    let (results, metrics) = coord.finish();
+    println!("\n{submitted} accepted, {rejected} rejected by the budget manager\n");
+    let mut total_eps = 0.0;
+    for r in &results {
+        match &r.outcome {
+            Ok(o) => {
+                total_eps += o.eps_spent;
+                println!(
+                    "job {:>2} [{:<7}] quality {:.4}  ε {:.3}  work/iter {:>7.0}  {:>7.1}ms",
+                    r.job_id,
+                    r.kind,
+                    o.quality,
+                    o.eps_spent,
+                    o.avg_select_work,
+                    o.total_time.as_secs_f64() * 1e3,
+                );
+            }
+            Err(e) => println!("job {:>2} FAILED: {e}", r.job_id),
+        }
+    }
+    println!("\ntotal ε spent: {total_eps:.2} (cap 10.0)");
+    println!("metrics: {}", metrics.to_json());
+}

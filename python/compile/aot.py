@@ -1,0 +1,144 @@
+"""AOT-lower the L2 graphs to HLO *text* artifacts + a manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+        python -m compile.aot --out-dir /tmp/a --grid small   # test grid
+
+The Rust runtime discovers artifacts through ``manifest.json``; every entry
+records the function, shapes, dtypes and output arity so the loader can
+pick the smallest artifact that fits a request and pad inputs accordingly.
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (M, U) grid for query-scoring artifacts; (U,) grid for MWU updates;
+# (M, D) grid for LP constraint scoring. Kept deliberately small: each
+# shape is one compiled executable held by the Rust runtime.
+GRIDS = {
+    "default": {
+        "scores": [(1024, 1024), (8192, 4096)],
+        "step": [(1024, 1024), (8192, 4096)],
+        "mwu": [1024, 4096],
+        "dot": [(1024, 32), (8192, 32)],
+    },
+    "small": {
+        "scores": [(256, 512)],
+        "step": [(256, 512)],
+        "mwu": [512],
+        "dot": [(256, 32)],
+    },
+}
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _entry(name, fn, in_specs, out_specs, out_dir):
+    lowered = jax.jit(fn).lower(*[_spec(s, d) for s, d in in_specs])
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    (out_dir / fname).write_text(text)
+    return {
+        "name": name,
+        "file": fname,
+        "inputs": [{"shape": list(s), "dtype": str(jnp.dtype(d))} for s, d in in_specs],
+        "outputs": [{"shape": list(s), "dtype": str(jnp.dtype(d))} for s, d in out_specs],
+    }
+
+
+def build(out_dir: pathlib.Path, grid_name: str) -> dict:
+    grid = GRIDS[grid_name]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    entries = []
+
+    for m, u in grid["scores"]:
+        entries.append(
+            _entry(
+                f"scores_m{m}_u{u}",
+                model.scores_fn,
+                [((m, u), F32), ((u,), F32)],
+                [((m,), F32)],
+                out_dir,
+            )
+        )
+
+    for m, d in grid["dot"]:
+        entries.append(
+            _entry(
+                f"dot_m{m}_d{d}",
+                model.dot_scores_fn,
+                [((m, d), F32), ((d,), F32)],
+                [((m,), F32)],
+                out_dir,
+            )
+        )
+
+    for u in grid["mwu"]:
+        entries.append(
+            _entry(
+                f"mwu_u{u}",
+                model.mwu_update_fn,
+                [((u,), F32), ((u,), F32), ((), F32)],
+                [((u,), F32), ((u,), F32)],
+                out_dir,
+            )
+        )
+
+    for m, u in grid["step"]:
+        entries.append(
+            _entry(
+                f"step_m{m}_u{u}",
+                model.mwem_step_fn,
+                [
+                    ((u,), F32),
+                    ((m, u), F32),
+                    ((u,), F32),
+                    ((u,), F32),
+                    ((), F32),
+                    ((), F32),
+                ],
+                [((u,), F32), ((u,), F32), ((m,), F32)],
+                out_dir,
+            )
+        )
+
+    manifest = {"version": 1, "grid": grid_name, "entries": entries}
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--grid", default="default", choices=sorted(GRIDS))
+    args = ap.parse_args()
+    manifest = build(pathlib.Path(args.out_dir), args.grid)
+    total = len(manifest["entries"])
+    print(f"wrote {total} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

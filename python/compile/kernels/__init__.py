@@ -1,0 +1,5 @@
+"""Layer-1 Pallas kernels for Fast-MWEM (interpret=True lowering)."""
+from .absdot import absdot, dot, make_matvec
+from .mwu import mwu_update
+
+__all__ = ["absdot", "dot", "make_matvec", "mwu_update"]

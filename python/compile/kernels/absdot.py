@@ -1,0 +1,100 @@
+"""Tiled (abs-)matvec Pallas kernel: scores = |Q @ d| (or signed Q @ d).
+
+This is the dense hot-spot of MWEM's exponential mechanism: scoring every
+candidate (query / LP constraint) against the evolving difference vector
+``d = h - p`` (linear queries) or ``x' = x̃ ∘ -1`` (LPs).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation):
+  * grid = (M/BM, U/BU); each step streams one (BM, BU) tile of Q from HBM
+    into VMEM while a (BU,) slice of d stays resident.
+  * the contraction (BM,BU)x(BU,) targets the MXU; partial sums accumulate
+    in the output block, which is revisited across the U-tile axis (its
+    index map ignores ``j``) — the canonical Pallas accumulation pattern.
+  * |.| is applied once on the final U-tile, avoiding a second pass.
+
+VMEM footprint per step (f32): BM*BU + BU + BM floats. With the default
+BM=256, BU=512 that is ~0.5 MiB, comfortably inside a 4 MiB/core budget and
+leaving room for double-buffering the Q tile stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BU = 512
+
+
+def _matvec_kernel(q_ref, d_ref, o_ref, *, absolute: bool):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    # (BM, BU) @ (BU,) -> (BM,) partial contraction for this U-tile.
+    partial = jnp.dot(q_ref[...], d_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + partial
+
+    if absolute:
+
+        @pl.when(j == nj - 1)
+        def _abs():
+            o_ref[...] = jnp.abs(o_ref[...])
+
+
+def _fit_block(dim: int, block: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``block``.
+
+    The AOT shape grid is block-aligned so this is a no-op there; odd test
+    shapes fall back to a smaller (possibly degenerate) tile instead of
+    failing to lower.
+    """
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _block_sizes(m: int, u: int, bm: int, bu: int) -> tuple[int, int]:
+    return _fit_block(m, bm), _fit_block(u, bu)
+
+
+def make_matvec(absolute: bool, bm: int = DEFAULT_BM, bu: int = DEFAULT_BU):
+    """Build a pallas matvec ``f(Q[m,u], d[u]) -> scores[m]``.
+
+    ``absolute=True`` yields |Q·d| (linear-query EM scores); ``False`` the
+    signed product (LP constraint scores). Shapes must be multiples of the
+    (clamped) block sizes; the AOT shape grid guarantees this and the Rust
+    runtime pads to the grid.
+    """
+
+    def matvec(q: jax.Array, d: jax.Array) -> jax.Array:
+        m, u = q.shape
+        bm_, bu_ = _block_sizes(m, u, bm, bu)
+        if m % bm_ or u % bu_:
+            raise ValueError(f"shape ({m},{u}) not divisible by blocks ({bm_},{bu_})")
+        grid = (m // bm_, u // bu_)
+        kernel = functools.partial(_matvec_kernel, absolute=absolute)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm_, bu_), lambda i, j: (i, j)),
+                pl.BlockSpec((bu_,), lambda i, j: (j,)),
+            ],
+            out_specs=pl.BlockSpec((bm_,), lambda i, j: (i,)),
+            out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+            interpret=True,  # CPU-PJRT execution; TPU would emit Mosaic.
+        )(q, d)
+
+    return matvec
+
+
+absdot = make_matvec(absolute=True)
+dot = make_matvec(absolute=False)

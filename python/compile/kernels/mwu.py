@@ -1,0 +1,60 @@
+"""Pallas kernel for the multiplicative-weights update.
+
+Computes ``w' = w * exp(s * c)`` elementwise plus per-block partial sums, so
+the surrounding L2 graph can normalize with a single tree-reduce over
+``num_blocks`` partials instead of re-reading the full ``w'`` vector.
+
+``s`` is a scalar carrying the whole update rule, chosen by the Rust
+coordinator per iteration:
+  * paper rule   (Alg 1/2):  s = -eta
+  * classic MWEM (Hardt et al. 2012): s = (m_t - <q, p>) / 2
+so one artifact serves both update rules.
+
+TPU mapping: 1-D grid over U-tiles; each step holds (BU,) slices of w and c
+in VMEM (~8 KiB at BU=1024), exp on the VPU, one local reduction per block.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BU = 1024
+
+
+def _mwu_kernel(s_ref, w_ref, c_ref, w_out_ref, psum_ref):
+    s = s_ref[0]
+    w_new = w_ref[...] * jnp.exp(s * c_ref[...])
+    w_out_ref[...] = w_new
+    psum_ref[0] = jnp.sum(w_new)
+
+
+def mwu_update(w: jax.Array, c: jax.Array, s: jax.Array):
+    """Return ``(w', partial_sums)`` with ``w' = w * exp(s*c)``.
+
+    ``partial_sums`` has one entry per U-tile; ``sum(partial_sums)`` is the
+    normalizer for the synthetic distribution ``p = w' / sum(w')``.
+    """
+    (u,) = w.shape
+    bu = min(DEFAULT_BU, u)
+    if u % bu:
+        raise ValueError(f"domain size {u} not divisible by block {bu}")
+    grid = (u // bu,)
+    s_arr = jnp.reshape(s.astype(jnp.float32), (1,))
+    return pl.pallas_call(
+        _mwu_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bu,), lambda i: (i,)),
+            pl.BlockSpec((bu,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bu,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((u,), jnp.float32),
+            jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        ],
+        interpret=True,
+    )(s_arr, w, c)

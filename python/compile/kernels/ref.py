@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+pytest (python/tests/) asserts allclose between these and the kernels across
+a hypothesis-driven sweep of shapes and inputs; the same expressions are
+re-implemented in Rust tests to validate the runtime end of the bridge.
+"""
+
+import jax.numpy as jnp
+
+
+def absdot_ref(q, d):
+    return jnp.abs(q.astype(jnp.float32) @ d.astype(jnp.float32))
+
+
+def dot_ref(q, d):
+    return q.astype(jnp.float32) @ d.astype(jnp.float32)
+
+
+def mwu_update_ref(w, c, s):
+    w_new = w * jnp.exp(s * c)
+    return w_new, jnp.sum(w_new)
+
+
+def normalize_ref(w):
+    return w / jnp.sum(w)
+
+
+def mwem_step_ref(w, q_sel, m_t, s_scale):
+    """One classic-MWEM iteration given the already-selected query row.
+
+    s = s_scale * (m_t - <q_sel, p>) where p = normalize(w); the caller
+    chooses s_scale (1/2 for Hardt et al.; s_scale=-eta with m_t chosen so
+    that m_t - <q,p> = 1 degenerates to the paper's Alg-1 rule).
+    """
+    p = normalize_ref(w)
+    s = s_scale * (m_t - q_sel @ p)
+    w_new, z = mwu_update_ref(w, q_sel, s)
+    p_new = w_new / z
+    return w_new, p_new

@@ -1,0 +1,67 @@
+"""Layer-2 JAX compute graphs for Fast-MWEM, built on the L1 Pallas kernels.
+
+Each public function here is a pure jax function that ``aot.py`` lowers once
+to HLO text for the Rust runtime. Privacy-critical randomness (Gumbel,
+Laplace, binomial tail) deliberately does NOT live here — the Rust
+coordinator samples it and passes noise in as plain inputs, so the artifacts
+are deterministic functions.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import absdot, dot, mwu_update
+
+
+def scores_fn(q, d):
+    """EM scores for linear queries: ``|Q @ d|`` with ``d = h - p``.
+
+    Padding contract: rows of Q beyond the true m are zero → score 0; the
+    Rust side masks them out before sampling.
+    """
+    return (absdot(q, d),)
+
+
+def dot_scores_fn(k, x):
+    """Signed scores for LP constraints: ``K @ x`` (K rows are A_i ∘ b_i)."""
+    return (dot(k, x),)
+
+
+def mwu_update_fn(w, c, s):
+    """Multiplicative update + normalize: ``w' = w·exp(s·c)``, ``p' = w'/Σw'``.
+
+    ``s`` is a scalar chosen by the coordinator (−η for the paper rule,
+    (m_t − ⟨q,p⟩)/2 for classic MWEM). Zero-padded tail entries of ``w``
+    stay zero and do not perturb the normalizer.
+    """
+    w_new, psums = mwu_update(w, c, s)
+    z = jnp.sum(psums)
+    return w_new, w_new / z
+
+
+def mwem_step_fn(w, q, h, q_sel, noise, s_scale):
+    """One fused classic-MWEM iteration (Hardt et al. 2012 update).
+
+    Inputs:
+      w[U]      current (unnormalized) weights
+      q[M,U]    full query matrix (device-resident across calls)
+      h[U]      private histogram
+      q_sel[U]  the query row selected by the (Rust-side) exponential
+                mechanism. Passed as a vector, not an index: a gather with
+                an i32 operand crashes the xla_extension 0.5.1 text path
+                ("Unhandled primitive type"), and the O(U) host transfer is
+                already on the coordinator's per-round budget.
+      noise     Laplace noise for the measurement, sampled in Rust
+      s_scale   update scale (1/2 for classic MWEM)
+
+    Returns (w', p', scores') where scores' = |Q (h − p')| feeds the next
+    selection round on the flat/exact path.
+    """
+    z = jnp.sum(w)
+    p = w / z
+    m_t = jnp.dot(q_sel, h) + noise
+    s = s_scale * (m_t - jnp.dot(q_sel, p))
+    w_new, psums = mwu_update(w, q_sel, s)
+    z_new = jnp.sum(psums)
+    p_new = w_new / z_new
+    new_scores = absdot(q, h - p_new)
+    return w_new, p_new, new_scores

@@ -1,0 +1,45 @@
+"""AOT artifact emission: manifest structure + HLO text sanity."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_build(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(out, "small")
+    return out, manifest
+
+
+def test_manifest_written(small_build):
+    out, manifest = small_build
+    on_disk = json.loads((out / "manifest.json").read_text())
+    assert on_disk == manifest
+    assert on_disk["version"] == 1
+    names = {e["name"] for e in on_disk["entries"]}
+    assert names == {"scores_m256_u512", "dot_m256_d32", "mwu_u512", "step_m256_u512"}
+
+
+def test_hlo_text_files_exist_and_parse_shapes(small_build):
+    out, manifest = small_build
+    for e in manifest["entries"]:
+        text = (out / e["file"]).read_text()
+        assert text.startswith("HloModule"), e["name"]
+        assert "ENTRY" in text
+        # every input shape should appear as a parameter type in the text
+        for inp in e["inputs"]:
+            if inp["shape"]:
+                dims = ",".join(str(d) for d in inp["shape"])
+                assert f"[{dims}]" in text, (e["name"], inp)
+
+
+def test_entry_io_arity(small_build):
+    _, manifest = small_build
+    by_name = {e["name"]: e for e in manifest["entries"]}
+    assert len(by_name["step_m256_u512"]["inputs"]) == 6
+    assert len(by_name["step_m256_u512"]["outputs"]) == 3
+    assert len(by_name["mwu_u512"]["outputs"]) == 2

@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes (block-aligned and clamped), value ranges, and
+signs; the allclose tolerances reflect f32 accumulation differences only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import absdot, dot, make_matvec, mwu_update
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- absdot --
+
+
+@pytest.mark.parametrize(
+    "m,u",
+    [(1, 1), (4, 8), (256, 512), (512, 1024), (300, 500), (1024, 37)],
+)
+def test_absdot_matches_ref(m, u):
+    r = _rng(m * 1000 + u)
+    q = r.uniform(0, 1, size=(m, u)).astype(np.float32)
+    d = r.uniform(-1, 1, size=(u,)).astype(np.float32)
+    got = absdot(jnp.asarray(q), jnp.asarray(d))
+    want = ref.absdot_ref(jnp.asarray(q), jnp.asarray(d))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,u", [(4, 8), (256, 512), (128, 1024)])
+def test_dot_matches_ref_signed(m, u):
+    r = _rng(7 * m + u)
+    q = r.normal(size=(m, u)).astype(np.float32)
+    d = r.normal(size=(u,)).astype(np.float32)
+    got = dot(jnp.asarray(q), jnp.asarray(d))
+    want = ref.dot_ref(jnp.asarray(q), jnp.asarray(d))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_absdot_nonaligned_shapes_fall_back_to_divisor_blocks():
+    # 300 rows with bm=256: block clamps to the largest divisor (150).
+    mv = make_matvec(absolute=True, bm=256, bu=512)
+    q = np.ones((300, 512), np.float32)
+    d = np.full((512,), -0.5, np.float32)
+    got = mv(jnp.asarray(q), jnp.asarray(d))
+    np.testing.assert_allclose(got, np.abs(q @ d), rtol=1e-5)
+
+
+def test_absdot_zero_padding_rows_score_zero():
+    r = _rng(3)
+    q = np.zeros((8, 16), np.float32)
+    q[:5] = r.uniform(0, 1, size=(5, 16))
+    d = r.normal(size=(16,)).astype(np.float32)
+    got = np.asarray(absdot(jnp.asarray(q), jnp.asarray(d)))
+    assert np.all(got[5:] == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(1, 6),
+    ub=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_absdot_hypothesis_sweep(mb, ub, seed, scale):
+    m, u = mb * 64, ub * 64
+    mv = make_matvec(absolute=True, bm=64, bu=64)
+    r = _rng(seed)
+    q = (r.uniform(0, 1, size=(m, u)) * scale).astype(np.float32)
+    d = r.normal(size=(u,)).astype(np.float32)
+    got = mv(jnp.asarray(q), jnp.asarray(d))
+    want = ref.absdot_ref(jnp.asarray(q), jnp.asarray(d))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale)
+
+
+# ------------------------------------------------------------------- mwu --
+
+
+@pytest.mark.parametrize("u,s", [(8, -0.5), (512, 0.3), (1024, -1.0), (2048, 0.0)])
+def test_mwu_update_matches_ref(u, s):
+    r = _rng(u)
+    w = r.uniform(0, 1, size=(u,)).astype(np.float32)
+    c = r.uniform(0, 1, size=(u,)).astype(np.float32)
+    w_new, psums = mwu_update(jnp.asarray(w), jnp.asarray(c), jnp.float32(s))
+    want_w, want_z = ref.mwu_update_ref(jnp.asarray(w), jnp.asarray(c), s)
+    np.testing.assert_allclose(w_new, want_w, rtol=1e-5)
+    np.testing.assert_allclose(jnp.sum(psums), want_z, rtol=1e-5)
+
+
+def test_mwu_zero_tail_stays_zero():
+    w = np.zeros((1024,), np.float32)
+    w[:100] = 0.5
+    c = np.ones((1024,), np.float32)
+    w_new, psums = mwu_update(jnp.asarray(w), jnp.asarray(c), jnp.float32(-0.7))
+    w_new = np.asarray(w_new)
+    assert np.all(w_new[100:] == 0.0)
+    np.testing.assert_allclose(
+        float(jnp.sum(psums)), float(np.sum(w_new)), rtol=1e-6
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ub=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+    s=st.floats(-2.0, 2.0),
+)
+def test_mwu_hypothesis_sweep(ub, seed, s):
+    u = ub * 128
+    r = _rng(seed)
+    w = r.uniform(1e-6, 1, size=(u,)).astype(np.float32)
+    c = r.uniform(0, 1, size=(u,)).astype(np.float32)
+    w_new, psums = mwu_update(jnp.asarray(w), jnp.asarray(c), jnp.float32(s))
+    want_w, want_z = ref.mwu_update_ref(jnp.asarray(w), jnp.asarray(c), np.float32(s))
+    np.testing.assert_allclose(w_new, want_w, rtol=1e-4)
+    np.testing.assert_allclose(float(jnp.sum(psums)), float(want_z), rtol=1e-4)

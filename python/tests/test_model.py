@@ -1,0 +1,110 @@
+"""L2 semantics: model graphs vs numpy references and MWEM invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+def test_scores_fn_is_absdot():
+    r = _rng(1)
+    q = r.uniform(0, 1, size=(256, 512)).astype(np.float32)
+    d = r.normal(size=(512,)).astype(np.float32)
+    (got,) = model.scores_fn(jnp.asarray(q), jnp.asarray(d))
+    np.testing.assert_allclose(got, np.abs(q @ d), rtol=1e-5, atol=1e-5)
+
+
+def test_mwu_update_fn_normalizes():
+    r = _rng(2)
+    w = r.uniform(0.1, 1, size=(1024,)).astype(np.float32)
+    c = r.uniform(0, 1, size=(1024,)).astype(np.float32)
+    w_new, p_new = model.mwu_update_fn(
+        jnp.asarray(w), jnp.asarray(c), jnp.float32(-0.4)
+    )
+    np.testing.assert_allclose(float(jnp.sum(p_new)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(w_new), w * np.exp(-0.4 * c), rtol=1e-5
+    )
+
+
+def test_mwem_step_fn_matches_numpy_reference():
+    r = _rng(3)
+    m, u = 256, 512
+    q = (r.uniform(0, 1, size=(m, u)) < 0.25).astype(np.float32)
+    h = r.uniform(0, 1, size=(u,)).astype(np.float32)
+    h /= h.sum()
+    w = np.ones((u,), np.float32)
+    i_t, noise, s_scale = 17, 0.01, 0.5
+
+    w_new, p_new, scores = model.mwem_step_fn(
+        jnp.asarray(w),
+        jnp.asarray(q),
+        jnp.asarray(h),
+        jnp.asarray(q[i_t]),
+        jnp.float32(noise),
+        jnp.float32(s_scale),
+    )
+
+    # numpy reference
+    p = w / w.sum()
+    m_t = q[i_t] @ h + noise
+    s = s_scale * (m_t - q[i_t] @ p)
+    w_want = w * np.exp(s * q[i_t])
+    p_want = w_want / w_want.sum()
+    scores_want = np.abs(q @ (h - p_want))
+
+    np.testing.assert_allclose(np.asarray(w_new), w_want, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_new), p_want, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(scores), scores_want, rtol=1e-4, atol=1e-5)
+
+
+def test_mwem_step_reduces_selected_query_error():
+    """One classic-MWEM step against the worst query must shrink its error."""
+    r = _rng(4)
+    m, u = 256, 512
+    q = (r.uniform(0, 1, size=(m, u)) < 0.25).astype(np.float32)
+    h = r.uniform(0, 1, size=(u,)).astype(np.float32)
+    h /= h.sum()
+    w = np.ones((u,), np.float32)
+    p0 = w / w.sum()
+    errs = np.abs(q @ (h - p0))
+    i_t = int(np.argmax(errs))
+    _, p_new, scores = model.mwem_step_fn(
+        jnp.asarray(w),
+        jnp.asarray(q),
+        jnp.asarray(h),
+        jnp.asarray(q[i_t]),
+        jnp.float32(0.0),
+        jnp.float32(0.5),
+    )
+    assert float(np.asarray(scores)[i_t]) < float(errs[i_t])
+
+
+def test_ref_step_consistency():
+    """ref.mwem_step_ref agrees with the fused model step."""
+    r = _rng(5)
+    m, u = 256, 512
+    q = r.uniform(0, 1, size=(m, u)).astype(np.float32)
+    h = r.uniform(0, 1, size=(u,)).astype(np.float32)
+    w = r.uniform(0.5, 1.5, size=(u,)).astype(np.float32)
+    i_t = 9
+    m_t = float(q[i_t] @ h) + 0.02
+    w_ref, p_ref = ref.mwem_step_ref(
+        jnp.asarray(w), jnp.asarray(q[i_t]), m_t, 0.5
+    )
+    w_got, p_got, _ = model.mwem_step_fn(
+        jnp.asarray(w),
+        jnp.asarray(q),
+        jnp.asarray(h),
+        jnp.asarray(q[i_t]),
+        jnp.float32(0.02),
+        jnp.float32(0.5),
+    )
+    np.testing.assert_allclose(np.asarray(w_got), np.asarray(w_ref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p_got), np.asarray(p_ref), rtol=1e-5)

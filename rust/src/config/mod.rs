@@ -1,0 +1,165 @@
+//! Layered configuration: an INI/TOML-subset file format plus `--key=value`
+//! CLI overrides (the offline build vendors no clap/toml — see DESIGN.md §3).
+//!
+//! Format:
+//! ```text
+//! # comment
+//! seed = 42
+//! [mwem]
+//! t = 2000
+//! index = "hnsw"
+//! ```
+//! Keys are addressed as `section.key` (top-level keys have no prefix).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse the INI/TOML subset.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        Self::parse(&text)
+    }
+
+    /// Apply `--key=value` style CLI overrides (highest precedence).
+    pub fn apply_overrides<'a>(&mut self, args: impl IntoIterator<Item = &'a str>) -> Result<()> {
+        for a in args {
+            let Some(rest) = a.strip_prefix("--") else {
+                bail!("override {a:?} must start with --");
+            };
+            let Some((k, v)) = rest.split_once('=') else {
+                bail!("override {a:?} must be --key=value");
+            };
+            self.values.insert(k.to_string(), v.to_string());
+        }
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get_str(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("config key {key}: cannot parse {s:?}")),
+        }
+    }
+
+    pub fn or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        Ok(self.get(key)?.unwrap_or(default))
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+        # top-level
+        seed = 42
+        results_dir = "results"
+
+        [mwem]
+        t = 2000
+        eps = 1.0
+        index = "hnsw"
+
+        [lp]
+        delta_inf = 0.1
+    "#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.or("seed", 0u64).unwrap(), 42);
+        assert_eq!(c.str_or("results_dir", "x"), "results");
+        assert_eq!(c.or("mwem.t", 0usize).unwrap(), 2000);
+        assert_eq!(c.or("mwem.eps", 0.0f64).unwrap(), 1.0);
+        assert_eq!(c.str_or("mwem.index", ""), "hnsw");
+        assert_eq!(c.or("lp.delta_inf", 0.0f64).unwrap(), 0.1);
+        // default when missing
+        assert_eq!(c.or("missing", 7i32).unwrap(), 7);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.apply_overrides(["--mwem.t=500", "--new.key=hello"]).unwrap();
+        assert_eq!(c.or("mwem.t", 0usize).unwrap(), 500);
+        assert_eq!(c.str_or("new.key", ""), "hello");
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        let mut c = Config::new();
+        assert!(c.apply_overrides(["--bad"]).is_err());
+        assert!(c.apply_overrides(["noprefix=1"]).is_err());
+    }
+
+    #[test]
+    fn bad_type_is_error() {
+        let c = Config::parse("x = notanumber").unwrap();
+        assert!(c.or("x", 1u32).is_err());
+    }
+}

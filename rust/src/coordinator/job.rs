@@ -1,0 +1,170 @@
+//! Job specifications and results for the coordinator.
+
+use crate::mips::IndexKind;
+use crate::mwem::{FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet};
+use crate::lp::{run_scalar, ScalarLpConfig, SelectionMode};
+use crate::util::rng::Rng;
+use crate::workloads::{self, LpInstance};
+use std::time::Duration;
+
+/// Private linear query release job (§3).
+#[derive(Clone, Debug)]
+pub struct ReleaseJobSpec {
+    /// Domain size U.
+    pub u: usize,
+    /// Number of queries m.
+    pub m: usize,
+    /// Dataset size n.
+    pub n: usize,
+    pub t: usize,
+    pub eps: f64,
+    pub delta: f64,
+    /// None → classic MWEM; Some(kind) → Fast-MWEM with that index.
+    pub index: Option<IndexKind>,
+    pub seed: u64,
+}
+
+/// Scalar-private LP job (§4.1).
+#[derive(Clone, Debug)]
+pub struct LpJobSpec {
+    pub m: usize,
+    pub d: usize,
+    pub t: usize,
+    pub eps: f64,
+    pub delta: f64,
+    pub delta_inf: f64,
+    pub mode: SelectionMode,
+    pub seed: u64,
+}
+
+#[derive(Clone, Debug)]
+pub enum JobSpec {
+    Release(ReleaseJobSpec),
+    Lp(LpJobSpec),
+}
+
+impl JobSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::Release(_) => "release",
+            JobSpec::Lp(_) => "lp",
+        }
+    }
+}
+
+/// What a finished job reports back.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    /// Final quality metric: max query error (release) / max violation (LP).
+    pub quality: f64,
+    /// Privacy spent (ε, δ) per the accountant.
+    pub eps_spent: f64,
+    pub delta_spent: f64,
+    /// Mean selection work per round (score evaluations).
+    pub avg_select_work: f64,
+    pub total_time: Duration,
+}
+
+#[derive(Debug)]
+pub struct JobResult {
+    pub job_id: usize,
+    pub kind: &'static str,
+    pub outcome: anyhow::Result<JobOutcome>,
+}
+
+/// Execute a job (called on a worker thread). Workloads are synthesized
+/// from the spec's seed — a stand-in for loading a caller-provided dataset.
+pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
+    match spec {
+        JobSpec::Release(r) => {
+            let mut rng = Rng::new(r.seed);
+            let h: Histogram = workloads::gaussian_histogram(&mut rng, r.u, r.n);
+            let q: QuerySet = workloads::binary_queries(&mut rng, r.m, r.u);
+            let cfg = MwemConfig::paper(r.t, r.u, r.eps, r.delta, r.seed ^ 0xC0FFEE);
+            let (result, work) = match r.index {
+                None => {
+                    let res = crate::mwem::run_classic(&cfg, &q, &h, &mut NativeBackend);
+                    let w = res.avg_select_work;
+                    (res, w)
+                }
+                Some(kind) => {
+                    let out = crate::mwem::run_fast(
+                        &FastMwemConfig::new(cfg, kind),
+                        &q,
+                        &h,
+                        &mut NativeBackend,
+                    );
+                    let w = out.result.avg_select_work;
+                    (out.result, w)
+                }
+            };
+            let quality = q.max_error(h.probs(), &result.p_avg);
+            Ok(JobOutcome {
+                quality,
+                eps_spent: result.privacy_spent.0,
+                delta_spent: result.privacy_spent.1,
+                avg_select_work: work,
+                total_time: result.total_time,
+            })
+        }
+        JobSpec::Lp(l) => {
+            let mut rng = Rng::new(l.seed);
+            let lp: LpInstance = workloads::random_feasibility_lp(&mut rng, l.m, l.d, 0.6);
+            let cfg = ScalarLpConfig {
+                t: l.t,
+                eps: l.eps,
+                delta: l.delta,
+                delta_inf: l.delta_inf,
+                mode: l.mode,
+                seed: l.seed ^ 0xBEEF,
+                log_every: 0,
+            };
+            let res = run_scalar(&cfg, &lp);
+            Ok(JobOutcome {
+                quality: lp.max_violation(&res.x),
+                eps_spent: l.eps,
+                delta_spent: l.delta,
+                avg_select_work: res.avg_select_work,
+                total_time: res.total_time,
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn release_job_executes() {
+        let spec = JobSpec::Release(ReleaseJobSpec {
+            u: 64,
+            m: 50,
+            n: 300,
+            t: 50,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Flat),
+            seed: 1,
+        });
+        let out = execute(&spec).unwrap();
+        assert!(out.quality.is_finite() && out.quality >= 0.0);
+        assert!(out.eps_spent > 0.0);
+    }
+
+    #[test]
+    fn lp_job_executes() {
+        let spec = JobSpec::Lp(LpJobSpec {
+            m: 100,
+            d: 8,
+            t: 60,
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Exhaustive,
+            seed: 2,
+        });
+        let out = execute(&spec).unwrap();
+        assert!(out.quality.is_finite());
+    }
+}

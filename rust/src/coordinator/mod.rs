@@ -1,0 +1,14 @@
+//! Job coordinator: a thread-pool service that runs private-release and
+//! private-LP jobs with per-job privacy budgets and aggregated metrics.
+//!
+//! This is the "serving" face of the library: callers submit [`JobSpec`]s,
+//! a leader thread dispatches them to workers over channels, each worker
+//! runs the requested solver, and results stream back with privacy spend
+//! recorded by the [`crate::dp::Accountant`]. (The offline build vendors
+//! no tokio; the pool is std::thread + mpsc — see DESIGN.md §3.)
+
+pub mod job;
+pub mod pool;
+
+pub use job::{JobOutcome, JobResult, JobSpec, LpJobSpec, ReleaseJobSpec};
+pub use pool::{Coordinator, CoordinatorConfig};

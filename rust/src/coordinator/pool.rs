@@ -1,0 +1,183 @@
+//! Leader/worker thread pool with bounded queueing and metrics.
+
+use super::job::{execute, JobResult, JobSpec};
+use crate::metrics::Metrics;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub workers: usize,
+    /// Global privacy cap across all accepted jobs (ε). Jobs whose budget
+    /// would exceed the cap are rejected at submission.
+    pub eps_cap: Option<f64>,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 4, eps_cap: None }
+    }
+}
+
+enum Message {
+    Run(usize, JobSpec),
+    Shutdown,
+}
+
+/// A running coordinator: submit jobs, then `finish()` to collect results.
+pub struct Coordinator {
+    tx: mpsc::Sender<Message>,
+    results_rx: mpsc::Receiver<JobResult>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: usize,
+    submitted_eps: f64,
+    cfg: CoordinatorConfig,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorConfig) -> Self {
+        let (tx, rx) = mpsc::channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (results_tx, results_rx) = mpsc::channel::<JobResult>();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let results_tx = results_tx.clone();
+                let metrics = Arc::clone(&metrics);
+                std::thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job_id, spec)) => {
+                            let started = Instant::now();
+                            let kind = spec.kind();
+                            let outcome = execute(&spec);
+                            {
+                                let mut m = metrics.lock().unwrap();
+                                m.inc("jobs_completed", 1);
+                                m.inc(&format!("jobs_{kind}"), 1);
+                                m.observe("job_duration", started.elapsed());
+                                if outcome.is_err() {
+                                    m.inc("jobs_failed", 1);
+                                }
+                            }
+                            let _ = results_tx.send(JobResult { job_id, kind, outcome });
+                        }
+                        Ok(Message::Shutdown) | Err(_) => return,
+                    }
+                })
+            })
+            .collect();
+
+        Coordinator {
+            tx,
+            results_rx,
+            workers,
+            next_id: 0,
+            submitted_eps: 0.0,
+            cfg,
+            metrics,
+        }
+    }
+
+    /// Submit a job; returns its id, or an error if the global ε cap would
+    /// be exceeded (the budget-manager role of the coordinator).
+    pub fn submit(&mut self, spec: JobSpec) -> anyhow::Result<usize> {
+        let eps = match &spec {
+            JobSpec::Release(r) => r.eps,
+            JobSpec::Lp(l) => l.eps,
+        };
+        if let Some(cap) = self.cfg.eps_cap {
+            anyhow::ensure!(
+                self.submitted_eps + eps <= cap + 1e-12,
+                "privacy cap exceeded: {} + {} > {}",
+                self.submitted_eps,
+                eps,
+                cap
+            );
+        }
+        self.submitted_eps += eps;
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tx.send(Message::Run(id, spec)).expect("workers alive");
+        Ok(id)
+    }
+
+    pub fn submitted(&self) -> usize {
+        self.next_id
+    }
+
+    /// Shut down and return all results (unordered) plus merged metrics.
+    pub fn finish(self) -> (Vec<JobResult>, Metrics) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        drop(self.tx);
+        let mut results = Vec::with_capacity(self.next_id);
+        for _ in 0..self.next_id {
+            match self.results_rx.recv() {
+                Ok(r) => results.push(r),
+                Err(_) => break,
+            }
+        }
+        for w in self.workers {
+            let _ = w.join();
+        }
+        results.sort_by_key(|r| r.job_id);
+        let metrics = Arc::try_unwrap(self.metrics)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_default();
+        (results, metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::ReleaseJobSpec;
+    use crate::mips::IndexKind;
+
+    fn small_release(seed: u64, eps: f64) -> JobSpec {
+        JobSpec::Release(ReleaseJobSpec {
+            u: 32,
+            m: 30,
+            n: 200,
+            t: 20,
+            eps,
+            delta: 1e-3,
+            index: Some(IndexKind::Flat),
+            seed,
+        })
+    }
+
+    #[test]
+    fn runs_jobs_in_parallel_and_collects_all() {
+        let mut c = Coordinator::start(CoordinatorConfig { workers: 3, eps_cap: None });
+        for i in 0..6 {
+            c.submit(small_release(i, 1.0)).unwrap();
+        }
+        let (results, metrics) = c.finish();
+        assert_eq!(results.len(), 6);
+        assert!(results.iter().all(|r| r.outcome.is_ok()));
+        // sorted by id
+        assert!(results.windows(2).all(|w| w[0].job_id < w[1].job_id));
+        assert_eq!(metrics.counter("jobs_completed"), 6);
+        assert_eq!(metrics.counter("jobs_failed"), 0);
+        assert_eq!(metrics.timing_summary("job_duration").unwrap().count, 6);
+    }
+
+    #[test]
+    fn privacy_cap_rejects_over_budget() {
+        let mut c =
+            Coordinator::start(CoordinatorConfig { workers: 1, eps_cap: Some(2.5) });
+        assert!(c.submit(small_release(1, 1.0)).is_ok());
+        assert!(c.submit(small_release(2, 1.0)).is_ok());
+        assert!(c.submit(small_release(3, 1.0)).is_err(), "third job busts the cap");
+        let (results, _) = c.finish();
+        assert_eq!(results.len(), 2);
+    }
+}

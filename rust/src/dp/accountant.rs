@@ -1,0 +1,133 @@
+//! Privacy accounting via (advanced) composition (Theorem B.1).
+
+/// Total (ε̃, δ̃) after `k` adaptive uses of an (ε, δ)-DP mechanism
+/// (Dwork–Rothblum–Vadhan advanced composition, Theorem B.1):
+/// ε̃ = ε·√(2k·ln(1/δ')) + 2kε², δ̃ = kδ + δ'.
+pub fn advanced_composition(eps: f64, delta: f64, k: u64, delta_prime: f64) -> (f64, f64) {
+    let kf = k as f64;
+    let eps_total = eps * (2.0 * kf * (1.0 / delta_prime).ln()).sqrt() + 2.0 * kf * eps * eps;
+    let delta_total = kf * delta + delta_prime;
+    (eps_total, delta_total)
+}
+
+/// The paper's inverse budgeting rule: per-iteration ε₀ so that T
+/// compositions stay within (ε, δ). Algorithm 2 uses
+/// ε₀ = ε / √(T·ln(1/δ)); Algorithm 3 the more conservative
+/// ε₀ = ε / √(8T·log(1/δ)). `slack` selects the constant (1.0 or 8.0).
+pub fn per_step_epsilon(eps: f64, delta: f64, t: u64, slack: f64) -> f64 {
+    assert!(t > 0 && eps > 0.0 && (0.0..1.0).contains(&delta) && delta > 0.0);
+    eps / (slack * t as f64 * (1.0 / delta).ln()).sqrt()
+}
+
+/// Running budget tracker for a job: records every mechanism invocation and
+/// reports the composed total. Used by the coordinator to expose per-job
+/// privacy spend in metrics and to fail-fast when a config would overshoot.
+#[derive(Debug, Clone)]
+pub struct Accountant {
+    /// (ε, δ) of each recorded invocation.
+    events: Vec<(f64, f64)>,
+    /// δ' slack used when composing.
+    delta_prime: f64,
+}
+
+impl Accountant {
+    pub fn new(delta_prime: f64) -> Self {
+        Accountant { events: Vec::new(), delta_prime }
+    }
+
+    pub fn record(&mut self, eps: f64, delta: f64) {
+        self.events.push((eps, delta));
+    }
+
+    pub fn record_n(&mut self, eps: f64, delta: f64, n: u64) {
+        for _ in 0..n {
+            self.events.push((eps, delta));
+        }
+    }
+
+    pub fn steps(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Basic (sequential) composition: sums ε and δ.
+    pub fn basic_total(&self) -> (f64, f64) {
+        let eps: f64 = self.events.iter().map(|e| e.0).sum();
+        let delta: f64 = self.events.iter().map(|e| e.1).sum();
+        (eps, delta)
+    }
+
+    /// Advanced composition assuming homogeneous events (uses the max ε and
+    /// max δ across events — a sound upper bound for mixed runs).
+    pub fn advanced_total(&self) -> (f64, f64) {
+        if self.events.is_empty() {
+            return (0.0, 0.0);
+        }
+        let eps = self.events.iter().map(|e| e.0).fold(0.0, f64::max);
+        let delta = self.events.iter().map(|e| e.1).fold(0.0, f64::max);
+        advanced_composition(eps, delta, self.events.len() as u64, self.delta_prime)
+    }
+
+    /// The tighter of basic vs advanced composition.
+    pub fn best_total(&self) -> (f64, f64) {
+        let (eb, db) = self.basic_total();
+        let (ea, da) = self.advanced_total();
+        if ea < eb {
+            (ea, da)
+        } else {
+            (eb, db)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advanced_beats_basic_for_many_steps() {
+        let eps0 = 0.01;
+        let k = 10_000;
+        let (adv, _) = advanced_composition(eps0, 0.0, k, 1e-6);
+        let basic = eps0 * k as f64;
+        assert!(adv < basic, "advanced {adv} basic {basic}");
+    }
+
+    #[test]
+    fn per_step_round_trips_within_budget() {
+        let (eps, delta, t) = (1.0, 1e-3, 500u64);
+        let eps0 = per_step_epsilon(eps, delta, t, 8.0);
+        // composing T steps of eps0 must stay within ~eps for small eps0
+        let (total, _) = advanced_composition(eps0, 0.0, t, delta);
+        // the √8 slack makes this strictly under budget incl. the 2kε² term
+        assert!(total <= eps * 1.01, "total {total}");
+    }
+
+    #[test]
+    fn accountant_basic_and_advanced() {
+        let mut a = Accountant::new(1e-6);
+        a.record_n(0.005, 0.0, 2000);
+        assert_eq!(a.steps(), 2000);
+        let (eb, _) = a.basic_total();
+        assert!((eb - 10.0).abs() < 1e-9);
+        let (ea, da) = a.advanced_total();
+        assert!(ea < eb);
+        assert!(da >= 1e-6);
+        let (best, _) = a.best_total();
+        assert!((best - ea).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accountant_prefers_basic_for_few_steps() {
+        let mut a = Accountant::new(1e-6);
+        a.record(0.5, 0.0);
+        let (eb, _) = a.basic_total();
+        let (best, _) = a.best_total();
+        assert!((best - eb).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_accountant_is_zero() {
+        let a = Accountant::new(1e-6);
+        assert_eq!(a.best_total(), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,131 @@
+//! The classic private-selection mechanisms (Definition 2.2).
+//!
+//! `exponential_mechanism` is the exhaustive O(m) baseline the paper
+//! accelerates; the sublinear replacement lives in [`crate::lazy`]. Both
+//! are implemented through the Gumbel-Max trick (Lemma 3.2) so their output
+//! distributions are *identical* — which is exactly the paper's Theorem 3.3
+//! argument — and so experiments can share noise-generation code paths.
+
+use crate::util::rng::Rng;
+
+/// ε-DP exponential mechanism over `scores` with the given sensitivity:
+/// samples index i with probability ∝ exp(ε·s_i / (2Δ)). O(m) time.
+pub fn exponential_mechanism(rng: &mut Rng, scores: &[f32], eps: f64, sensitivity: f64) -> usize {
+    debug_assert!(!scores.is_empty());
+    let scale = eps / (2.0 * sensitivity);
+    let mut best = 0usize;
+    let mut best_val = f64::NEG_INFINITY;
+    for (i, &s) in scores.iter().enumerate() {
+        let v = scale * s as f64 + rng.gumbel();
+        if v > best_val {
+            best_val = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Report-noisy-max with Gumbel noise at temperature 2Δ/ε — distributionally
+/// the same as the exponential mechanism (Gumbel-max trick); exposed
+/// separately because some callers want the noisy *score* too.
+pub fn report_noisy_max(
+    rng: &mut Rng,
+    scores: &[f32],
+    eps: f64,
+    sensitivity: f64,
+) -> (usize, f64) {
+    debug_assert!(!scores.is_empty());
+    let scale = eps / (2.0 * sensitivity);
+    let mut best = 0usize;
+    let mut best_val = f64::NEG_INFINITY;
+    for (i, &s) in scores.iter().enumerate() {
+        let v = scale * s as f64 + rng.gumbel();
+        if v > best_val {
+            best_val = v;
+            best = i;
+        }
+    }
+    (best, best_val)
+}
+
+/// ε-DP Laplace mechanism for a scalar statistic with the given sensitivity.
+pub fn laplace_mechanism(rng: &mut Rng, value: f64, sensitivity: f64, eps: f64) -> f64 {
+    value + rng.laplace(sensitivity / eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// χ²-style check that EM's empirical distribution matches
+    /// exp(ε s/(2Δ)) / Z over a small candidate set.
+    #[test]
+    fn em_matches_target_distribution() {
+        let scores = [0.0f32, 0.5, 1.0, 0.25];
+        let (eps, sens) = (2.0, 0.5);
+        let scale = eps / (2.0 * sens);
+        let weights: Vec<f64> = scores.iter().map(|&s| (scale * s as f64).exp()).collect();
+        let z: f64 = weights.iter().sum();
+
+        let mut rng = Rng::new(99);
+        let trials = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..trials {
+            counts[exponential_mechanism(&mut rng, &scores, eps, sens)] += 1;
+        }
+        for i in 0..4 {
+            let want = weights[i] / z;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - want).abs() < 0.01,
+                "candidate {i}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn em_prefers_max_under_high_eps() {
+        let scores = [0.1f32, 0.9, 0.2];
+        let mut rng = Rng::new(7);
+        let mut hits = 0;
+        for _ in 0..1_000 {
+            if exponential_mechanism(&mut rng, &scores, 200.0, 1.0) == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 990, "hits {hits}");
+    }
+
+    #[test]
+    fn em_uniform_under_zero_scores() {
+        let scores = [0.5f32; 5];
+        let mut rng = Rng::new(8);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[exponential_mechanism(&mut rng, &scores, 1.0, 1.0)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as i64 - 10_000).abs() < 600, "count {c}");
+        }
+    }
+
+    #[test]
+    fn rnm_returns_consistent_argmax() {
+        let scores = [0.0f32, 10.0];
+        let mut rng = Rng::new(9);
+        let (idx, val) = report_noisy_max(&mut rng, &scores, 100.0, 1.0);
+        assert_eq!(idx, 1);
+        assert!(val > 0.0);
+    }
+
+    #[test]
+    fn laplace_mechanism_centred_on_value() {
+        let mut rng = Rng::new(10);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += laplace_mechanism(&mut rng, 5.0, 1.0, 2.0);
+        }
+        assert!((sum / n as f64 - 5.0).abs() < 0.02);
+    }
+}

@@ -1,0 +1,8 @@
+//! Differential-privacy substrate: composition accounting and the basic
+//! mechanisms (exponential mechanism, report-noisy-max, Laplace).
+
+pub mod accountant;
+pub mod mechanisms;
+
+pub use accountant::{advanced_composition, per_step_epsilon, Accountant};
+pub use mechanisms::{exponential_mechanism, laplace_mechanism, report_noisy_max};

@@ -1,0 +1,49 @@
+//! Shared plumbing for the figure drivers.
+
+use std::path::PathBuf;
+
+#[derive(Clone, Debug)]
+pub struct EvalOpts {
+    /// Shrink sweeps for CI-speed runs (shapes preserved).
+    pub quick: bool,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { quick: false, out_dir: PathBuf::from("results"), seed: 20260204 }
+    }
+}
+
+impl EvalOpts {
+    pub fn quick() -> Self {
+        EvalOpts { quick: true, ..Default::default() }
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(format!("{name}.csv"))
+    }
+
+    /// Pick between full-scale and quick-scale parameters.
+    pub fn pick<T: Copy>(&self, full: T, quick: T) -> T {
+        if self.quick {
+            quick
+        } else {
+            full
+        }
+    }
+
+    pub fn pick_vec<T: Clone>(&self, full: &[T], quick: &[T]) -> Vec<T> {
+        if self.quick {
+            quick.to_vec()
+        } else {
+            full.to_vec()
+        }
+    }
+}
+
+/// Pretty-print one table row to stdout.
+pub fn print_row(cols: &[String]) {
+    println!("  {}", cols.join("  |  "));
+}

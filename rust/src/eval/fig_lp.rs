@@ -1,0 +1,151 @@
+//! Figure drivers for the private-LP experiments (§5.2, §J).
+
+use super::common::{print_row, EvalOpts};
+use crate::lp::{run_scalar, ScalarLpConfig, SelectionMode};
+use crate::mips::IndexKind;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::workloads::random_feasibility_lp;
+use anyhow::Result;
+
+const MODES: &[(&str, SelectionMode)] = &[
+    ("exhaustive", SelectionMode::Exhaustive),
+    ("flat", SelectionMode::Lazy(IndexKind::Flat)),
+    ("ivf", SelectionMode::Lazy(IndexKind::Ivf)),
+    ("hnsw", SelectionMode::Lazy(IndexKind::Hnsw)),
+];
+
+fn lp_config(t: usize, mode: SelectionMode, seed: u64, log_every: usize) -> ScalarLpConfig {
+    ScalarLpConfig {
+        t,
+        eps: 1.0,
+        delta: 1e-3,
+        delta_inf: 0.1,
+        mode,
+        seed,
+        log_every,
+    }
+}
+
+/// Figure 5: fraction of violated constraints over iterations per index —
+/// Fast-MWEM tracks the exhaustive baseline (d=20, Δ∞=0.1, α=0.5).
+pub fn fig5_violations(opts: &EvalOpts) -> Result<()> {
+    let d = 20;
+    let m = opts.pick(5_000usize, 1_000);
+    let t = opts.pick(5_000usize, 500);
+    let log_every = t / 20;
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig5_violations"),
+        &["mode", "iter", "violation_fraction", "max_violation"],
+    )?;
+    println!("Fig 5: violated constraints across indices (m={m}, d={d}, T={t})");
+
+    let mut rng = Rng::new(opts.seed ^ 0xF5);
+    let lp = random_feasibility_lp(&mut rng, m, d, 0.6);
+
+    for (name, mode) in MODES {
+        let cfg = lp_config(t, *mode, opts.seed, log_every);
+        let res = run_scalar(&cfg, &lp);
+        for s in &res.stats {
+            csv.row(&[
+                name.to_string(),
+                s.iter.to_string(),
+                format!("{}", s.violation_fraction),
+                format!("{}", s.max_violation),
+            ])?;
+        }
+        let last = res.stats.last().unwrap();
+        print_row(&[
+            name.to_string(),
+            format!("final violation fraction {:.4}", last.violation_fraction),
+            format!("max violation {:.4}", last.max_violation),
+        ]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 8 (§J) + the §5.2 runtime plot: per-iteration time and build time
+/// at large m — HNSW shows the sublinear win, IVF may not (as in the paper).
+pub fn fig8_runtime_large_m(opts: &EvalOpts) -> Result<()> {
+    let d = 20;
+    let t = opts.pick(40usize, 10);
+    let ms = opts.pick_vec(
+        &[50_000usize, 100_000, 200_000, 400_000],
+        &[5_000usize, 10_000, 20_000],
+    );
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig8_lp_runtime"),
+        &["m", "mode", "select_us", "build_s", "work"],
+    )?;
+    println!("Fig 8: LP selection time vs m (d={d}, T={t})");
+    print_row(&["m".into(), "mode".into(), "per-iter select".into(), "build".into()]);
+
+    for &m in &ms {
+        let mut rng = Rng::new(opts.seed ^ 0xF8 ^ m as u64);
+        let lp = random_feasibility_lp(&mut rng, m, d, 0.6);
+        for (name, mode) in MODES {
+            let cfg = lp_config(t, *mode, opts.seed, 0);
+            let res = run_scalar(&cfg, &lp);
+            let sel_us = res.avg_select_time.as_secs_f64() * 1e6;
+            let build_s = res.index_build_time.as_secs_f64();
+            csv.row(&[
+                m.to_string(),
+                name.to_string(),
+                format!("{sel_us}"),
+                format!("{build_s}"),
+                format!("{}", res.avg_select_work),
+            ])?;
+            print_row(&[
+                format!("{m}"),
+                name.to_string(),
+                format!("{sel_us:.0}us"),
+                format!("{build_s:.2}s"),
+            ]);
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 9 (§J): error (max violation) trajectories for solving the LP —
+/// IVF/HNSW behave like the exhaustive baseline.
+pub fn fig9_error_and_violations(opts: &EvalOpts) -> Result<()> {
+    let d = 20;
+    let m = opts.pick(20_000usize, 2_000);
+    let t = opts.pick(2_000usize, 400);
+    let log_every = t / 20;
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig9_lp_error"),
+        &["mode", "iter", "max_violation", "violation_fraction", "select_work"],
+    )?;
+    println!("Fig 9: LP max violation over iterations (m={m}, d={d}, T={t})");
+
+    let mut rng = Rng::new(opts.seed ^ 0xF9);
+    let lp = random_feasibility_lp(&mut rng, m, d, 0.6);
+
+    for (name, mode) in MODES {
+        let cfg = lp_config(t, *mode, opts.seed, log_every);
+        let res = run_scalar(&cfg, &lp);
+        for s in &res.stats {
+            csv.row(&[
+                name.to_string(),
+                s.iter.to_string(),
+                format!("{}", s.max_violation),
+                format!("{}", s.violation_fraction),
+                s.selection_work.to_string(),
+            ])?;
+        }
+        let last = res.stats.last().unwrap();
+        print_row(&[
+            name.to_string(),
+            format!("final max violation {:.4}", last.max_violation),
+            format!("avg work {:.0}", res.avg_select_work),
+        ]);
+    }
+    csv.flush()?;
+    Ok(())
+}

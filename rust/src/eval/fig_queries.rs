@@ -1,0 +1,303 @@
+//! Figure drivers for the linear-query experiments (§5.1, §I).
+
+use super::common::{print_row, EvalOpts};
+use crate::mips::IndexKind;
+use crate::mwem::{
+    run_classic, run_fast, FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet,
+};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::workloads::{binary_queries, gaussian_histogram};
+use anyhow::Result;
+
+fn workload(opts: &EvalOpts, u: usize, n: usize, m: usize, salt: u64) -> (Histogram, QuerySet) {
+    let mut rng = Rng::new(opts.seed ^ salt);
+    (gaussian_histogram(&mut rng, u, n), binary_queries(&mut rng, m, u))
+}
+
+/// Figure 1 + Figure 4 share a sweep of per-iteration selection time vs m;
+/// Figure 1 reports the speed-up factor of IVF/HNSW over exhaustive search.
+pub fn fig1_speedup(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(3000usize, 512);
+    let n = 500;
+    let t = opts.pick(30usize, 10);
+    let ms = opts.pick_vec(&[10_000usize, 20_000, 50_000, 100_000], &[2_000usize, 5_000, 10_000]);
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig1_speedup"),
+        &["m", "classic_us", "ivf_us", "hnsw_us", "speedup_ivf", "speedup_hnsw"],
+    )?;
+    println!("Fig 1: Fast-MWEM speed-up over exhaustive search (U={u}, T={t})");
+    print_row(&["m".into(), "speedup IVF".into(), "speedup HNSW".into()]);
+
+    for &m in &ms {
+        let (h, q) = workload(opts, u, n, m, m as u64);
+        let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+        cfg.log_every = 0;
+
+        let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let t_classic = classic.avg_select_time.as_secs_f64() * 1e6;
+
+        let mut times = std::collections::BTreeMap::new();
+        for kind in [IndexKind::Ivf, IndexKind::Hnsw] {
+            let out = run_fast(
+                &FastMwemConfig::new(cfg.clone(), kind),
+                &q,
+                &h,
+                &mut NativeBackend,
+            );
+            times.insert(kind.to_string(), out.result.avg_select_time.as_secs_f64() * 1e6);
+        }
+        let (t_ivf, t_hnsw) = (times["ivf"], times["hnsw"]);
+        csv.row_f64(&[
+            m as f64,
+            t_classic,
+            t_ivf,
+            t_hnsw,
+            t_classic / t_ivf,
+            t_classic / t_hnsw,
+        ])?;
+        print_row(&[
+            format!("{m}"),
+            format!("{:.1}x", t_classic / t_ivf),
+            format!("{:.1}x", t_classic / t_hnsw),
+        ]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 2: per-iteration error difference MWEM − FastMWEM(flat) ≈ 0.
+pub fn fig2_error_diff(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(3000usize, 512);
+    let n = 500;
+    let t = opts.pick(20_000usize, 1_000);
+    let log_every = t / 20;
+    let ms = opts.pick_vec(&[200usize, 500, 1000], &[100usize, 200]);
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig2_error_diff"),
+        &["m", "iter", "err_classic", "err_fast_flat", "diff"],
+    )?;
+    println!("Fig 2: error difference MWEM vs Fast-MWEM(flat) (U={u}, T={t})");
+
+    for &m in &ms {
+        let (h, q) = workload(opts, u, n, m, 0xF2 ^ m as u64);
+        let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+        cfg.log_every = log_every;
+
+        let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let fast = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Flat),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+
+        let mut max_diff = 0.0f64;
+        for (c, f) in classic.stats.iter().zip(fast.result.stats.iter()) {
+            let diff = c.max_error_avg - f.max_error_avg;
+            max_diff = max_diff.max(diff.abs());
+            csv.row_f64(&[m as f64, c.iter as f64, c.max_error_avg, f.max_error_avg, diff])?;
+        }
+        print_row(&[format!("m={m}"), format!("max |err diff| = {max_diff:.4}")]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 3: error over iterations per index — all indices track each other.
+pub fn fig3_error_over_iters(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(3000usize, 512);
+    let n = 500;
+    let m = opts.pick(1000usize, 200);
+    let t = opts.pick(20_000usize, 1_000);
+    let log_every = t / 20;
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig3_error_over_iters"),
+        &["index", "iter", "max_error"],
+    )?;
+    println!("Fig 3: error over iterations per index (U={u}, m={m}, T={t})");
+
+    let (h, q) = workload(opts, u, n, m, 0xF3);
+    let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+    cfg.log_every = log_every;
+
+    let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+    for s in &classic.stats {
+        csv.row(&["classic".into(), s.iter.to_string(), format!("{}", s.max_error_avg)])?;
+    }
+    let mut finals = vec![("classic".to_string(), classic.stats.last().unwrap().max_error_avg)];
+
+    for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+        let out = run_fast(
+            &FastMwemConfig::new(cfg.clone(), kind),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        for s in &out.result.stats {
+            csv.row(&[kind.to_string(), s.iter.to_string(), format!("{}", s.max_error_avg)])?;
+        }
+        finals.push((kind.to_string(), out.result.stats.last().unwrap().max_error_avg));
+    }
+    for (name, err) in finals {
+        print_row(&[name, format!("final error {err:.4}")]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 4: per-iteration selection runtime vs m for all indices.
+pub fn fig4_runtime_vs_m(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(3000usize, 512);
+    let n = 500;
+    let t = opts.pick(30usize, 10);
+    let ms = opts.pick_vec(
+        &[10_000usize, 20_000, 40_000, 70_000, 100_000],
+        &[1_000usize, 2_000, 5_000, 10_000],
+    );
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig4_runtime"),
+        &["m", "classic_us", "fast_flat_us", "ivf_us", "hnsw_us", "ivf_build_s", "hnsw_build_s"],
+    )?;
+    println!("Fig 4: per-iteration selection time vs m (U={u}, T={t})");
+    print_row(&[
+        "m".into(),
+        "classic".into(),
+        "fast-flat".into(),
+        "ivf".into(),
+        "hnsw".into(),
+    ]);
+
+    for &m in &ms {
+        let (h, q) = workload(opts, u, n, m, 0xF4 ^ m as u64);
+        let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+        cfg.log_every = 0;
+
+        let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let t_classic = classic.avg_select_time.as_secs_f64() * 1e6;
+
+        let mut sel = std::collections::BTreeMap::new();
+        let mut build = std::collections::BTreeMap::new();
+        for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+            let out = run_fast(
+                &FastMwemConfig::new(cfg.clone(), kind),
+                &q,
+                &h,
+                &mut NativeBackend,
+            );
+            sel.insert(kind.to_string(), out.result.avg_select_time.as_secs_f64() * 1e6);
+            build.insert(kind.to_string(), out.lazy.build_time.as_secs_f64());
+        }
+        csv.row_f64(&[
+            m as f64,
+            t_classic,
+            sel["flat"],
+            sel["ivf"],
+            sel["hnsw"],
+            build["ivf"],
+            build["hnsw"],
+        ])?;
+        print_row(&[
+            format!("{m}"),
+            format!("{t_classic:.0}us"),
+            format!("{:.0}us", sel["flat"]),
+            format!("{:.0}us", sel["ivf"]),
+            format!("{:.0}us", sel["hnsw"]),
+        ]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 6 (§I.1): the margin B and the tail sample count C = O(√m).
+pub fn fig6_margin(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(3000usize, 512);
+    let n = 500;
+    let t = opts.pick(500usize, 100);
+    let ms = opts.pick_vec(&[500usize, 2_000, 20_000], &[500usize, 2_000]);
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig6_margin"),
+        &["m", "sqrt_m", "mean_C", "mean_C_over_m", "mean_B"],
+    )?;
+    println!("Fig 6: tail sample count C (T={t})");
+    print_row(&["m".into(), "√m".into(), "E[C]".into(), "E[C]/m".into()]);
+
+    for &m in &ms {
+        let (h, q) = workload(opts, u, n, m, 0xF6 ^ m as u64);
+        let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+        cfg.log_every = 0;
+        let out = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Flat),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let mean_c = out.lazy.tail_counts.iter().sum::<usize>() as f64
+            / out.lazy.tail_counts.len() as f64;
+        let mean_b = out
+            .lazy
+            .margins
+            .iter()
+            .filter(|b| b.is_finite())
+            .sum::<f64>()
+            / out.lazy.margins.len() as f64;
+        csv.row_f64(&[
+            m as f64,
+            (m as f64).sqrt(),
+            mean_c,
+            mean_c / m as f64,
+            mean_b,
+        ])?;
+        print_row(&[
+            format!("{m}"),
+            format!("{:.0}", (m as f64).sqrt()),
+            format!("{mean_c:.1}"),
+            format!("{:.5}", mean_c / m as f64),
+        ]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Figure 7 (§I.2): final error vs number of samples n (m = 100, T = n²
+/// capped), MWEM vs Fast-MWEM(flat).
+pub fn fig7_error_vs_n(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(1024usize, 256);
+    let m = 100;
+    let ns = opts.pick_vec(&[30usize, 60, 100, 180, 300], &[30usize, 60, 100]);
+    let t_cap = opts.pick(4_000usize, 800);
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig7_error_vs_n"),
+        &["n", "t", "err_classic", "err_fast_flat"],
+    )?;
+    println!("Fig 7: final error vs n (U={u}, m={m}, T=min(n², {t_cap}))");
+    print_row(&["n".into(), "classic".into(), "fast-flat".into()]);
+
+    for &n in &ns {
+        let t = (n * n).min(t_cap);
+        let (h, q) = workload(opts, u, n, m, 0xF7 ^ n as u64);
+        let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+        cfg.update = crate::mwem::UpdateRule::Hardt; // n-sensitive noise path
+        cfg.log_every = 0;
+
+        let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let e_classic = q.max_error(h.probs(), &classic.p_avg);
+        let fast = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Flat),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let e_fast = q.max_error(h.probs(), &fast.result.p_avg);
+        csv.row_f64(&[n as f64, t as f64, e_classic, e_fast])?;
+        print_row(&[format!("{n}"), format!("{e_classic:.4}"), format!("{e_fast:.4}")]);
+    }
+    csv.flush()?;
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Evaluation harness: one driver per paper figure (see DESIGN.md §4).
+//!
+//! Every driver prints the paper-style series to stdout and writes a CSV
+//! under the results directory; EXPERIMENTS.md records paper-vs-measured.
+//!
+//! `quick` mode shrinks the sweeps so the full suite runs in minutes —
+//! the shapes (who wins, scaling exponents, crossovers) are preserved.
+
+pub mod common;
+pub mod fig_lp;
+pub mod fig_queries;
+
+pub use common::EvalOpts;
+
+use anyhow::{bail, Result};
+
+/// All figure ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+];
+
+/// Run one driver (or "all").
+pub fn run(which: &str, opts: &EvalOpts) -> Result<()> {
+    match which {
+        "fig1" => fig_queries::fig1_speedup(opts),
+        "fig2" => fig_queries::fig2_error_diff(opts),
+        "fig3" => fig_queries::fig3_error_over_iters(opts),
+        "fig4" => fig_queries::fig4_runtime_vs_m(opts),
+        "fig5" => fig_lp::fig5_violations(opts),
+        "fig6" => fig_queries::fig6_margin(opts),
+        "fig7" => fig_queries::fig7_error_vs_n(opts),
+        "fig8" => fig_lp::fig8_runtime_large_m(opts),
+        "fig9" => fig_lp::fig9_error_and_violations(opts),
+        "all" => {
+            for f in ALL {
+                println!("\n================ {f} ================");
+                run(f, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other}; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,247 @@
+//! Lazy Gumbel sampling (Algorithm 4) and its approximate-top-k variants
+//! (Algorithm 5: runtime-preserving; Algorithm 6: privacy-preserving).
+//!
+//! Given the (approximate) top-k of n scores, sample from the softmax over
+//! *all* n scores while only ever evaluating Θ(√n) of them:
+//!
+//! 1. perturb the k known scores with Gumbel(0,1) noise; let M be the max,
+//!    L the smallest known score, B = M − L (− c for Algorithm 6);
+//! 2. any unseen score is ≤ L (+ c), so it can only win if its Gumbel noise
+//!    exceeds B — which happens with probability `1 − exp(−exp(−B))` ≈ e^−B;
+//! 3. draw `C ~ Bin(n − k, tail)` — the number of tail winners — place them
+//!    uniformly in [n] \ S, give each a truncated Gumbel (Lemma C.3), and
+//!    return the overall argmax.
+//!
+//! With k = √n, E[C] = O(√n) (Theorem D.1), so the whole draw is Θ(√n)
+//! expected score evaluations.
+
+use crate::sampling::{binomial::binomial, subset::sample_distinct_excluding, truncated::gumbel_tail_prob, truncated_gumbel};
+use crate::util::rng::Rng;
+
+/// Outcome of one lazy Gumbel draw, with the diagnostics the paper plots
+/// (Figure 6 studies `tail_count`; Figure 4 the total work).
+#[derive(Clone, Copy, Debug)]
+pub struct LazySample {
+    /// The sampled candidate (index into [0, n)).
+    pub index: usize,
+    /// The margin B = M − L − margin_slack.
+    pub b: f64,
+    /// C — how many tail candidates needed scoring.
+    pub tail_count: usize,
+    /// Total score evaluations charged to this draw (k + C).
+    pub work: usize,
+}
+
+/// One draw from `p_i ∝ exp(score_i)` over `n` candidates.
+///
+/// * `top`: the (approximate) top-k as `(candidate index, score)` pairs —
+///   scores already scaled by ε₀/(2Δ) by the caller. Need not be sorted.
+/// * `margin_slack`: the paper's `c` for Algorithm 6 (lower B by c to keep
+///   exactness under a c-approximate top-k, at e^c extra samples); 0 for
+///   Algorithms 4/5.
+/// * `tail_score`: oracle for scaled scores of candidates outside `top`
+///   (exact inner products in all our applications).
+///
+/// Panics if `top` is empty or contains out-of-range indices.
+pub fn lazy_gumbel_max(
+    rng: &mut Rng,
+    top: &[(usize, f64)],
+    n: usize,
+    margin_slack: f64,
+    mut tail_score: impl FnMut(usize) -> f64,
+) -> LazySample {
+    assert!(!top.is_empty(), "lazy_gumbel_max needs a non-empty top-k");
+    let k = top.len();
+
+    // Gumbel-perturb the known scores; track max (M) and min raw score (L).
+    let mut best_idx = top[0].0;
+    let mut best_val = f64::NEG_INFINITY;
+    let mut min_score = f64::INFINITY;
+    for &(idx, s) in top {
+        debug_assert!(idx < n);
+        let v = s + rng.gumbel();
+        if v > best_val {
+            best_val = v;
+            best_idx = idx;
+        }
+        if s < min_score {
+            min_score = s;
+        }
+    }
+
+    if k >= n {
+        return LazySample { index: best_idx, b: f64::INFINITY, tail_count: 0, work: k };
+    }
+
+    let b = best_val - min_score - margin_slack;
+    let tail_p = gumbel_tail_prob(b);
+    let c = binomial(rng, (n - k) as u64, tail_p) as usize;
+
+    let mut tail_count = 0usize;
+    if c > 0 {
+        let mut excluded: Vec<usize> = top.iter().map(|&(i, _)| i).collect();
+        excluded.sort_unstable();
+        excluded.dedup();
+        let tail = sample_distinct_excluding(rng, n, &excluded, c.min(n - excluded.len()));
+        tail_count = tail.len();
+        for t in tail {
+            let v = tail_score(t) + truncated_gumbel(rng, b);
+            if v > best_val {
+                best_val = v;
+                best_idx = t;
+            }
+        }
+    }
+
+    LazySample { index: best_idx, b, tail_count, work: k + tail_count }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The heart of Theorem 3.3: with an exact top-k, lazy sampling draws
+    /// from exactly the softmax distribution. χ²-style frequency check.
+    #[test]
+    fn matches_softmax_distribution_exact_topk() {
+        let scores: Vec<f64> = vec![1.2, 0.3, -0.5, 2.0, 0.0, 1.0, -1.0, 0.8];
+        let n = scores.len();
+        let k = 3;
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+        let top: Vec<(usize, f64)> = order[..k].iter().map(|&i| (i, scores[i])).collect();
+
+        let weights: Vec<f64> = scores.iter().map(|&s| s.exp()).collect();
+        let z: f64 = weights.iter().sum();
+
+        let mut rng = Rng::new(42);
+        let trials = 300_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let s = lazy_gumbel_max(&mut rng, &top, n, 0.0, |i| scores[i]);
+            counts[s.index] += 1;
+        }
+        for i in 0..n {
+            let want = weights[i] / z;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - want).abs() < 0.01,
+                "candidate {i}: got {got:.4} want {want:.4}"
+            );
+        }
+    }
+
+    /// Expected tail work is O(√n) when k = √n (Theorem D.1).
+    #[test]
+    fn tail_work_is_sqrt_n() {
+        let n = 10_000;
+        let k = 100; // √n
+        // uniform scores: worst case for the margin
+        let scores = vec![0.0f64; n];
+        let top: Vec<(usize, f64)> = (0..k).map(|i| (i, 0.0)).collect();
+        let mut rng = Rng::new(7);
+        let trials = 300;
+        let mut total_work = 0usize;
+        for _ in 0..trials {
+            let s = lazy_gumbel_max(&mut rng, &top, n, 0.0, |i| scores[i]);
+            total_work += s.work;
+        }
+        let avg = total_work as f64 / trials as f64;
+        // E[C] ≤ n/k = √n = 100, so avg work ≤ k + n/k = 200 (+ slack)
+        assert!(avg < 320.0, "avg work {avg}");
+    }
+
+    /// Algorithm 6: lowering the margin by c inflates tail sampling ~e^c.
+    #[test]
+    fn margin_slack_increases_tail_samples() {
+        let n = 5_000;
+        let k = 70;
+        let top: Vec<(usize, f64)> = (0..k).map(|i| (i, 0.0)).collect();
+        let mut rng = Rng::new(8);
+        let avg = |rng: &mut Rng, slack: f64| {
+            let trials = 200;
+            let mut w = 0usize;
+            for _ in 0..trials {
+                w += lazy_gumbel_max(rng, &top, n, slack, |_| 0.0).tail_count;
+            }
+            w as f64 / trials as f64
+        };
+        let w0 = avg(&mut rng, 0.0);
+        let w1 = avg(&mut rng, 1.0);
+        let ratio = w1 / w0.max(1e-9);
+        assert!(
+            (ratio - std::f64::consts::E).abs() < 0.8,
+            "ratio {ratio} (w0={w0}, w1={w1})"
+        );
+    }
+
+    /// With k = n there is no tail; the draw degenerates to plain Gumbel-max.
+    #[test]
+    fn full_topk_has_no_tail() {
+        let scores = vec![0.5f64, 1.5, -0.5];
+        let top: Vec<(usize, f64)> = scores.iter().cloned().enumerate().collect();
+        let mut rng = Rng::new(9);
+        let s = lazy_gumbel_max(&mut rng, &top, 3, 0.0, |_| unreachable!());
+        assert_eq!(s.tail_count, 0);
+        assert!(s.index < 3);
+    }
+
+    /// Theorem F.4: with a c-approximate top-k (a candidate outside S
+    /// exceeds the worst of S by c), every candidate's sampling probability
+    /// stays within [e^{-c}·p_i, e^{c}·p_i] of the true softmax.
+    #[test]
+    fn approximate_topk_respects_f4_bounds() {
+        let n = 50;
+        let c = 0.5;
+        // candidate 49 slightly beats the provided top-k but is excluded
+        let scores: Vec<f64> = (0..n).map(|i| if i == 49 { c } else { 0.0 }).collect();
+        let top: Vec<(usize, f64)> = (0..7).map(|i| (i, scores[i])).collect();
+
+        let z: f64 = scores.iter().map(|&s| s.exp()).sum();
+        let p_true = c.exp() / z;
+
+        let mut rng = Rng::new(10);
+        let mut wins = 0usize;
+        let trials = 120_000;
+        for _ in 0..trials {
+            let s = lazy_gumbel_max(&mut rng, &top, n, 0.0, |i| scores[i]);
+            if s.index == 49 {
+                wins += 1;
+            }
+        }
+        let got = wins as f64 / trials as f64;
+        let (lo, hi) = ((-c).exp() * p_true, c.exp() * p_true);
+        assert!(
+            got >= lo * 0.9 && got <= hi * 1.1,
+            "win rate {got} outside F.4 bounds [{lo}, {hi}]"
+        );
+    }
+
+    /// Algorithm 6: lowering the margin by c restores exactness even with a
+    /// c-approximate top-k (Theorem F.10).
+    #[test]
+    fn margin_slack_restores_exactness_under_approximation() {
+        let n = 50;
+        let c = 0.5;
+        let scores: Vec<f64> = (0..n).map(|i| if i == 49 { c } else { 0.0 }).collect();
+        let top: Vec<(usize, f64)> = (0..7).map(|i| (i, scores[i])).collect();
+
+        let z: f64 = scores.iter().map(|&s| s.exp()).sum();
+        let p_true = c.exp() / z;
+
+        let mut rng = Rng::new(11);
+        let mut wins = 0usize;
+        let trials = 200_000;
+        for _ in 0..trials {
+            let s = lazy_gumbel_max(&mut rng, &top, n, c, |i| scores[i]);
+            if s.index == 49 {
+                wins += 1;
+            }
+        }
+        let got = wins as f64 / trials as f64;
+        assert!(
+            (got - p_true).abs() < 0.15 * p_true + 0.003,
+            "win rate {got} vs exact {p_true}"
+        );
+    }
+}

@@ -1,0 +1,219 @@
+//! LazyEM: the exponential mechanism in Θ(√m) expected time (Algorithm 2's
+//! `LazyEM` procedure), backed by any [`MipsIndex`].
+//!
+//! Scores must be inner products ⟨v_i, q⟩ of a static vector set against the
+//! evolving query — exactly the structure of MWEM (scores |⟨q_i, h−p⟩|) and
+//! of the private LP solvers (scores ⟨A_i∘b_i, x̃∘−1⟩ and ⟨y, N_j⟩).
+//!
+//! For absolute-value scores we do NOT double the dataset with complements
+//! as the paper suggests (if q ∈ Q then 1−q ∈ Q): since both h and p are
+//! distributions, ⟨1−q, h−p⟩ = −⟨q, h−p⟩, so querying the index with both
+//! `d` and `−d` and merging by |·| retrieves the same top-k with half the
+//! memory. This is documented as a substitution in DESIGN.md §3.
+
+use super::gumbel::{lazy_gumbel_max, LazySample};
+use crate::mips::{MipsIndex, VectorSet};
+use crate::util::math::dot;
+use crate::util::rng::Rng;
+
+/// How raw inner products map to EM scores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreTransform {
+    /// score_i = ⟨v_i, q⟩ (LP constraint selection).
+    Signed,
+    /// score_i = |⟨v_i, q⟩| (linear-query error selection).
+    Abs,
+}
+
+pub struct LazyEm<'a> {
+    index: &'a dyn MipsIndex,
+    vectors: &'a VectorSet,
+    transform: ScoreTransform,
+    /// Top-k size; the paper uses k = √m.
+    pub k: usize,
+    /// Algorithm 6's margin reduction c (0 for Algorithms 4/5).
+    pub margin_slack: f64,
+}
+
+impl<'a> LazyEm<'a> {
+    pub fn new(
+        index: &'a dyn MipsIndex,
+        vectors: &'a VectorSet,
+        transform: ScoreTransform,
+    ) -> Self {
+        let m = index.len();
+        let k = ((m as f64).sqrt().ceil() as usize).clamp(1, m);
+        LazyEm { index, vectors, transform, k, margin_slack: 0.0 }
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k.clamp(1, self.index.len());
+        self
+    }
+
+    pub fn with_margin_slack(mut self, c: f64) -> Self {
+        self.margin_slack = c;
+        self
+    }
+
+    /// Raw (untransformed-scale) score of candidate i for `query`.
+    #[inline]
+    pub fn raw_score(&self, i: usize, query: &[f32]) -> f64 {
+        let ip = dot(self.vectors.row(i), query) as f64;
+        match self.transform {
+            ScoreTransform::Signed => ip,
+            ScoreTransform::Abs => ip.abs(),
+        }
+    }
+
+    /// Retrieve the (approximate) top-k candidates by transformed score.
+    pub fn retrieve_top_k(&self, query: &[f32]) -> Vec<(usize, f64)> {
+        match self.transform {
+            ScoreTransform::Signed => self
+                .index
+                .top_k(query, self.k)
+                .into_iter()
+                .map(|nb| (nb.id as usize, nb.score as f64))
+                .collect(),
+            ScoreTransform::Abs => {
+                // |⟨v,q⟩| = max(⟨v,q⟩, ⟨v,−q⟩): query both directions, merge.
+                let neg: Vec<f32> = query.iter().map(|&x| -x).collect();
+                let mut best: std::collections::HashMap<usize, f64> =
+                    std::collections::HashMap::with_capacity(2 * self.k);
+                for nb in self
+                    .index
+                    .top_k(query, self.k)
+                    .into_iter()
+                    .chain(self.index.top_k(&neg, self.k))
+                {
+                    let e = best.entry(nb.id as usize).or_insert(f64::NEG_INFINITY);
+                    *e = e.max(nb.score as f64);
+                }
+                let mut v: Vec<(usize, f64)> = best.into_iter().collect();
+                v.sort_by(|a, b| b.1.total_cmp(&a.1));
+                v.truncate(self.k);
+                v
+            }
+        }
+    }
+
+    /// One ε₀-DP selection: sample i ∝ exp(ε₀·score_i/(2Δ)) in Θ(√m)
+    /// expected time.
+    pub fn select(
+        &self,
+        rng: &mut Rng,
+        query: &[f32],
+        eps0: f64,
+        sensitivity: f64,
+    ) -> LazySample {
+        let scale = eps0 / (2.0 * sensitivity);
+        let mut top = self.retrieve_top_k(query);
+        for t in top.iter_mut() {
+            t.1 *= scale;
+        }
+        lazy_gumbel_max(rng, &top, self.index.len(), self.margin_slack, |i| {
+            scale * self.raw_score(i, query)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::FlatIndex;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    /// With a perfect (flat) index, LazyEM's output distribution is exactly
+    /// the exponential mechanism's — Theorem 3.3's key claim.
+    #[test]
+    fn lazy_em_equals_exhaustive_em_distribution() {
+        let m = 40;
+        let d = 6;
+        let vs = random_set(m, d, 1);
+        let flat = FlatIndex::new(vs.clone());
+        let em = LazyEm::new(&flat, &vs, ScoreTransform::Abs).with_k(7);
+
+        let mut rng = Rng::new(2);
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let (eps0, sens) = (1.0, 0.05);
+        let scale = eps0 / (2.0 * sens);
+
+        // target softmax over |<v_i, q>|
+        let weights: Vec<f64> = (0..m)
+            .map(|i| (scale * (dot(vs.row(i), &q) as f64).abs()).exp())
+            .collect();
+        let z: f64 = weights.iter().sum();
+
+        let trials = 150_000;
+        let mut counts = vec![0usize; m];
+        for _ in 0..trials {
+            counts[em.select(&mut rng, &q, eps0, sens).index] += 1;
+        }
+        let mut max_err = 0.0f64;
+        for i in 0..m {
+            let want = weights[i] / z;
+            let got = counts[i] as f64 / trials as f64;
+            max_err = max_err.max((got - want).abs());
+        }
+        assert!(max_err < 0.012, "max abs prob error {max_err}");
+    }
+
+    #[test]
+    fn signed_transform_prefers_largest_ip() {
+        let m = 100;
+        let d = 8;
+        let vs = random_set(m, d, 3);
+        let flat = FlatIndex::new(vs.clone());
+        let em = LazyEm::new(&flat, &vs, ScoreTransform::Signed);
+        let mut rng = Rng::new(4);
+        let q = vec![1.0f32; 8];
+        // very high eps → near-deterministic argmax
+        let best = (0..m)
+            .max_by(|&a, &b| dot(vs.row(a), &q).total_cmp(&dot(vs.row(b), &q)))
+            .unwrap();
+        let mut hits = 0;
+        for _ in 0..200 {
+            if em.select(&mut rng, &q, 5_000.0, 1.0).index == best {
+                hits += 1;
+            }
+        }
+        assert!(hits > 190, "hits {hits}");
+    }
+
+    #[test]
+    fn abs_transform_finds_negative_direction() {
+        // one vector strongly anti-aligned with q must be retrievable by |.|
+        let d = 4;
+        let mut data = vec![0.1f32; 20 * d];
+        data[5 * d..6 * d].copy_from_slice(&[-5.0, -5.0, -5.0, -5.0]);
+        let vs = VectorSet::new(data, 20, d);
+        let flat = FlatIndex::new(vs.clone());
+        let em = LazyEm::new(&flat, &vs, ScoreTransform::Abs).with_k(4);
+        let top = em.retrieve_top_k(&[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(top[0].0, 5, "anti-aligned vector must rank first");
+        assert!((top[0].1 - 20.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn work_is_sublinear() {
+        let m = 4_096;
+        let d = 8;
+        let vs = random_set(m, d, 5);
+        let flat = FlatIndex::new(vs.clone());
+        let em = LazyEm::new(&flat, &vs, ScoreTransform::Abs);
+        let mut rng = Rng::new(6);
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+        let mut total_work = 0usize;
+        let trials = 50;
+        for _ in 0..trials {
+            total_work += em.select(&mut rng, &q, 1.0, 1.0).work;
+        }
+        let avg = total_work as f64 / trials as f64;
+        assert!(avg < 6.0 * (m as f64).sqrt(), "avg work {avg}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Lazy exponential mechanism — the paper's core contribution (§3.3–3.5).
+//!
+//! [`lazy_gumbel_max`] implements Algorithms 4/5/6 (Mussmann et al. 2017's
+//! lazy Gumbel sampling plus the paper's approximate-top-k variants);
+//! [`LazyEm`] wires it to a k-MIPS index so a single EM draw over m
+//! candidates costs Θ(√m) expected time instead of Θ(m).
+
+pub mod gumbel;
+pub mod lazy_em;
+
+pub use gumbel::{lazy_gumbel_max, LazySample};
+pub use lazy_em::{LazyEm, ScoreTransform};

@@ -1,0 +1,39 @@
+//! # fast-mwem
+//!
+//! A production-grade reproduction of **"Fast-MWEM: Private Data Release in
+//! Sublinear Time"** (Haris, Choi, Laksanawisit, 2026) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: the MWEM / Fast-MWEM
+//!   iteration loops, all privacy-critical randomness, the from-scratch
+//!   k-MIPS indices (flat / IVF / HNSW), the lazy Gumbel exponential
+//!   mechanism, private LP solvers, job coordination, config, CLI, metrics
+//!   and the paper's full evaluation harness.
+//! * **Layer 2 (python/compile/model.py, build time)** — JAX compute graphs
+//!   for the dense hot-spots (score matvecs, multiplicative-weight updates),
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels/, build time)** — Pallas kernels the
+//!   L2 graphs are built from, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: [`runtime::XlaEngine`] loads the
+//! AOT artifacts through the PJRT C API (`xla` crate) once and executes them
+//! from Rust.
+//!
+//! See `DESIGN.md` for the module inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod dp;
+pub mod eval;
+pub mod lazy;
+pub mod lp;
+pub mod metrics;
+pub mod mips;
+pub mod mwem;
+pub mod runtime;
+pub mod sampling;
+pub mod util;
+pub mod workloads;
+
+pub use util::rng::Rng;

@@ -1,0 +1,165 @@
+//! Bregman (KL) projection onto the set of 1/s-dense distributions
+//! (Definition A.2): Γ_s(A)_a = (1/s)·min{1, c·A_a} with c chosen so that
+//! Σ_a min{1, c·A_a} = s.
+//!
+//! Solved exactly by water-filling over the sorted weights: if the j
+//! largest entries are capped at 1, then c = (s − j)/Σ_{rest} A, valid when
+//! it caps exactly those j entries. O(n log n).
+
+/// Project a non-negative measure onto the 1/s-dense simplex.
+/// Returns the projected distribution (entries ≤ 1/s, summing to 1).
+///
+/// Panics if fewer than ⌈s⌉ entries are positive (the projection does not
+/// exist); dense MWU keeps all weights strictly positive so this never
+/// triggers on the solver path.
+pub fn bregman_project(weights: &[f32], s: usize) -> Vec<f32> {
+    let n = weights.len();
+    assert!(s >= 1 && s <= n, "density parameter s={s} outside [1, {n}]");
+    let positive = weights.iter().filter(|&&w| w > 0.0).count();
+    assert!(positive >= s, "projection needs ≥ s positive entries ({positive} < {s})");
+
+    // sort descending
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_unstable_by(|&a, &b| weights[b].total_cmp(&weights[a]));
+
+    // suffix sums of the sorted weights
+    let sorted: Vec<f64> = order.iter().map(|&i| weights[i] as f64).collect();
+    let mut suffix = vec![0.0f64; n + 1];
+    for i in (0..n).rev() {
+        suffix[i] = suffix[i + 1] + sorted[i];
+    }
+
+    // find j = number of capped entries
+    let sf = s as f64;
+    let mut c = 0.0f64;
+    let mut j_cap = 0usize;
+    for j in 0..s {
+        let denom = suffix[j];
+        if denom <= 0.0 {
+            break;
+        }
+        let cand = (sf - j as f64) / denom;
+        // valid iff cand·A_(j) ≥ 1 for capped (or j = 0) and cand·A_(j+1) < 1… i.e.
+        // the j-th largest is capped, the (j+1)-th is not.
+        let caps_prev = j == 0 || cand * sorted[j - 1] >= 1.0 - 1e-12;
+        let spares_next = cand * sorted[j] < 1.0 + 1e-12;
+        if caps_prev && spares_next {
+            c = cand;
+            j_cap = j;
+            break;
+        }
+        // otherwise continue; if we exhaust, cap the top s entries
+        c = cand;
+        j_cap = j + 1;
+    }
+
+    let mut out = vec![0f32; n];
+    let inv_s = 1.0 / sf;
+    for (rank, &i) in order.iter().enumerate() {
+        let v = if rank < j_cap { 1.0 } else { (c * weights[i] as f64).min(1.0) };
+        out[i] = (v * inv_s) as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_dense(y: &[f32], s: usize) {
+        let sum: f64 = y.iter().map(|&x| x as f64).sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum {sum}");
+        let cap = 1.0 / s as f32 + 1e-6;
+        for (i, &v) in y.iter().enumerate() {
+            assert!(v <= cap, "entry {i} = {v} exceeds 1/s");
+            assert!(v >= 0.0);
+        }
+    }
+
+    #[test]
+    fn uniform_input_stays_uniform() {
+        let w = vec![1.0f32; 10];
+        let y = bregman_project(&w, 5);
+        check_dense(&y, 5);
+        for &v in &y {
+            assert!((v - 0.1).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn peaked_input_gets_clipped() {
+        let mut w = vec![1.0f32; 10];
+        w[0] = 1000.0;
+        let y = bregman_project(&w, 4);
+        check_dense(&y, 4);
+        assert!((y[0] - 0.25).abs() < 1e-6, "heavy entry clipped to 1/s");
+        // remaining mass spread over the rest proportionally
+        let rest: f64 = y[1..].iter().map(|&x| x as f64).sum();
+        assert!((rest - 0.75).abs() < 1e-4);
+    }
+
+    #[test]
+    fn s_equals_n_gives_uniform() {
+        let w = vec![5.0f32, 1.0, 0.1, 3.0];
+        let y = bregman_project(&w, 4);
+        check_dense(&y, 4);
+        for &v in &y {
+            assert!((v - 0.25).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn s_equals_one_is_unconstrained_normalize() {
+        let w = vec![2.0f32, 6.0, 2.0];
+        let y = bregman_project(&w, 1);
+        check_dense(&y, 1);
+        assert!((y[1] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn neighboring_measures_project_close() {
+        // Lemma A.3: measures identical except one extra element project to
+        // within 1/s in L1.
+        let mut w1 = vec![0f32; 101];
+        let mut rng = crate::util::rng::Rng::new(5);
+        for v in w1.iter_mut() {
+            *v = rng.uniform(0.1, 2.0) as f32;
+        }
+        let mut w2 = w1.clone();
+        w2[100] = 0.0; // w2 lacks the extra row
+        // give w2 at least s positive entries still
+        let s = 20;
+        let y1 = bregman_project(&w1, s);
+        let y2 = bregman_project(&w2[..100].to_vec().as_slice(), s);
+        let l1: f64 = (0..100)
+            .map(|i| ((y1[i] - y2[i]) as f64).abs())
+            .sum::<f64>()
+            + y1[100] as f64;
+        assert!(l1 <= 2.0 / s as f64 + 1e-3, "L1 distance {l1}");
+    }
+
+    /// Property sweep: random weights, random s — output always 1/s-dense.
+    #[test]
+    fn property_random_inputs_dense() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for trial in 0..200 {
+            let n = 5 + rng.usize_below(50);
+            let s = 1 + rng.usize_below(n);
+            let w: Vec<f32> =
+                (0..n).map(|_| rng.uniform(0.001, 10.0) as f32).collect();
+            let y = bregman_project(&w, s);
+            check_dense(&y, s);
+            // order preservation: larger weight ⇒ no smaller projection
+            for i in 0..n {
+                for j in 0..n {
+                    if w[i] > w[j] {
+                        assert!(
+                            y[i] >= y[j] - 1e-6,
+                            "trial {trial}: order violated"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Private linear programming (§4): the scalar-private solver (Algorithm 3)
+//! and the constraint-private dense-MWU solver (§4.2), both in classic
+//! (exhaustive EM) and fast (LazyEM) variants.
+
+pub mod bregman;
+pub mod dense;
+pub mod scalar;
+
+pub use bregman::bregman_project;
+pub use dense::{run_dense, DenseLpConfig, DenseLpResult};
+pub use scalar::{run_scalar, ScalarLpConfig, ScalarLpResult, SelectionMode};

@@ -1,0 +1,267 @@
+//! Scalar-private, low-sensitivity LP solver (Algorithm 3).
+//!
+//! MWU over the primal simplex; each round the *worst constraint* is
+//! selected privately with score `Q_t(i) = A_i x̃ − b_i` — an inner product
+//! `⟨A_i ∘ b_i, x̃ ∘ −1⟩` of static vectors against the evolving iterate,
+//! so LazyEM applies and the per-round cost drops from Θ(d·m) to Θ(d·√m)
+//! expected (Theorem 4.1).
+
+use crate::dp::accountant::per_step_epsilon;
+use crate::dp::mechanisms::exponential_mechanism;
+use crate::lazy::{LazyEm, ScoreTransform};
+use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
+use crate::util::math::{dot, normalize_l1};
+use crate::util::rng::Rng;
+use crate::workloads::LpInstance;
+use std::time::{Duration, Instant};
+
+/// Exhaustive EM (classic baseline) vs LazyEM over a k-MIPS index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SelectionMode {
+    Exhaustive,
+    Lazy(IndexKind),
+}
+
+impl std::fmt::Display for SelectionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SelectionMode::Exhaustive => write!(f, "exhaustive"),
+            SelectionMode::Lazy(k) => write!(f, "lazy-{k}"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ScalarLpConfig {
+    /// Number of MWU rounds T (paper: 9ρ²·log d / α²).
+    pub t: usize,
+    pub eps: f64,
+    pub delta: f64,
+    /// b-vector sensitivity Δ∞ between neighboring databases.
+    pub delta_inf: f64,
+    pub mode: SelectionMode,
+    pub seed: u64,
+    /// Record violation stats every `log_every` rounds (0 = never).
+    pub log_every: usize,
+}
+
+impl ScalarLpConfig {
+    /// Paper parameterization given a width estimate and target accuracy.
+    pub fn paper(rho: f64, d: usize, alpha: f64, eps: f64, delta: f64, seed: u64) -> Self {
+        let t = ((9.0 * rho * rho * (d as f64).ln() / (alpha * alpha)).ceil() as usize).max(1);
+        ScalarLpConfig {
+            t,
+            eps,
+            delta,
+            delta_inf: 0.1,
+            mode: SelectionMode::Exhaustive,
+            seed,
+            log_every: 0,
+        }
+    }
+
+    /// Per-round ε₀ = ε / √(8T·log(1/δ)) (Algorithm 3 line 6).
+    pub fn eps0(&self) -> f64 {
+        per_step_epsilon(self.eps, self.delta, self.t as u64, 8.0)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LpIterStat {
+    pub iter: usize,
+    pub violation_fraction: f64,
+    pub max_violation: f64,
+    pub selection_work: usize,
+}
+
+#[derive(Debug)]
+pub struct ScalarLpResult {
+    /// Averaged iterate x̄ = (1/T) Σ x̃⁽ᵗ⁾ (Algorithm 3's output).
+    pub x: Vec<f32>,
+    pub stats: Vec<LpIterStat>,
+    pub total_time: Duration,
+    pub index_build_time: Duration,
+    pub avg_select_time: Duration,
+    pub avg_select_work: f64,
+    pub eps0: f64,
+}
+
+/// Concatenate rows `A_i ∘ b_i` — the static MIPS dataset of Theorem 4.1.
+pub fn concat_constraints(lp: &LpInstance) -> VectorSet {
+    let (m, d) = (lp.m(), lp.d());
+    let mut data = vec![0f32; m * (d + 1)];
+    for i in 0..m {
+        data[i * (d + 1)..i * (d + 1) + d].copy_from_slice(lp.a.row(i));
+        data[i * (d + 1) + d] = lp.b[i];
+    }
+    VectorSet::new(data, m, d + 1)
+}
+
+/// Run Algorithm 3 on a feasibility LP over the simplex.
+pub fn run_scalar(cfg: &ScalarLpConfig, lp: &LpInstance) -> ScalarLpResult {
+    let mut rng = Rng::new(cfg.seed);
+    let (m, d) = (lp.m(), lp.d());
+    let rho = lp.width().max(1e-12);
+    let eps0 = cfg.eps0();
+    let eta = ((d as f64).ln() / cfg.t as f64).sqrt();
+
+    // Static MIPS dataset {A_i ∘ b_i}; query x̃ ∘ −1 gives A_i x̃ − b_i.
+    let build_started = Instant::now();
+    let cat = concat_constraints(lp);
+    let index: Option<Box<dyn MipsIndex>> = match cfg.mode {
+        SelectionMode::Exhaustive => None,
+        SelectionMode::Lazy(kind) => Some(build_index(kind, cat.clone(), cfg.seed ^ 0xA11CE)),
+    };
+    let index_build_time = build_started.elapsed();
+
+    let mut x = vec![1.0 / d as f32; d];
+    let mut w = vec![1.0f32; d];
+    let mut x_sum = vec![0.0f64; d];
+    let mut stats = Vec::new();
+    let started = Instant::now();
+    let mut select_total = Duration::ZERO;
+    let mut work_total = 0usize;
+
+    // query vector buffer x' = x̃ ∘ −1
+    let mut xq = vec![0f32; d + 1];
+
+    for t in 0..cfg.t {
+        xq[..d].copy_from_slice(&x);
+        xq[d] = -1.0;
+
+        let sel_started = Instant::now();
+        let (p_t, work) = match (&index, cfg.mode) {
+            (None, _) => {
+                let scores: Vec<f32> =
+                    (0..m).map(|i| dot(cat.row(i), &xq)).collect();
+                (exponential_mechanism(&mut rng, &scores, eps0, cfg.delta_inf), m)
+            }
+            (Some(idx), _) => {
+                let em = LazyEm::new(idx.as_ref(), &cat, ScoreTransform::Signed);
+                let s = em.select(&mut rng, &xq, eps0, cfg.delta_inf);
+                (s.index, s.work)
+            }
+        };
+        select_total += sel_started.elapsed();
+        work_total += work;
+
+        // MWU on the primal: losses ℓ = A_{p_t} / ρ
+        let a_row = lp.a.row(p_t);
+        for j in 0..d {
+            w[j] *= (-eta * (a_row[j] as f64 / rho)).exp() as f32;
+        }
+        x.copy_from_slice(&w);
+        normalize_l1(&mut x);
+        // rebase weights to avoid f32 under/overflow over long horizons
+        w.copy_from_slice(&x);
+        for (acc, &xi) in x_sum.iter_mut().zip(x.iter()) {
+            *acc += xi as f64;
+        }
+
+        if cfg.log_every > 0 && (t + 1) % cfg.log_every == 0 {
+            let inv = 1.0 / (t + 1) as f64;
+            let x_avg: Vec<f32> = x_sum.iter().map(|&v| (v * inv) as f32).collect();
+            stats.push(LpIterStat {
+                iter: t + 1,
+                violation_fraction: lp.violation_fraction(&x_avg, 0.0),
+                max_violation: lp.max_violation(&x_avg),
+                selection_work: work,
+            });
+        }
+    }
+
+    let total_time = started.elapsed();
+    let inv = 1.0 / cfg.t.max(1) as f64;
+    ScalarLpResult {
+        x: x_sum.iter().map(|&v| (v * inv) as f32).collect(),
+        stats,
+        total_time,
+        index_build_time,
+        avg_select_time: select_total / cfg.t.max(1) as u32,
+        avg_select_work: work_total as f64 / cfg.t.max(1) as f64,
+        eps0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::random_feasibility_lp;
+
+    fn solve(mode: SelectionMode, seed: u64) -> (LpInstance, ScalarLpResult) {
+        let mut rng = Rng::new(seed);
+        let lp = random_feasibility_lp(&mut rng, 400, 12, 0.6);
+        let cfg = ScalarLpConfig {
+            t: 400,
+            eps: 2.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode,
+            seed: seed ^ 99,
+            log_every: 0,
+        };
+        let res = run_scalar(&cfg, &lp);
+        (lp, res)
+    }
+
+    #[test]
+    fn exhaustive_reduces_violations() {
+        let (lp, res) = solve(SelectionMode::Exhaustive, 1);
+        let x0 = vec![1.0 / 12.0f32; 12];
+        let before = lp.max_violation(&x0);
+        let after = lp.max_violation(&res.x);
+        assert!(after < before, "before {before} after {after}");
+        assert!((res.x.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lazy_flat_matches_exhaustive_quality() {
+        let (lp, ex) = solve(SelectionMode::Exhaustive, 2);
+        let (_, lz) = {
+            let mut rng = Rng::new(2);
+            let lp2 = random_feasibility_lp(&mut rng, 400, 12, 0.6);
+            let cfg = ScalarLpConfig {
+                t: 400,
+                eps: 2.0,
+                delta: 1e-3,
+                delta_inf: 0.1,
+                mode: SelectionMode::Lazy(IndexKind::Flat),
+                seed: 2 ^ 99,
+                log_every: 0,
+            };
+            let res = run_scalar(&cfg, &lp2);
+            (lp2, res)
+        };
+        let v_ex = lp.max_violation(&ex.x);
+        let v_lz = lp.max_violation(&lz.x);
+        assert!(
+            (v_ex - v_lz).abs() < 0.5,
+            "exhaustive {v_ex} lazy {v_lz} (should be comparable)"
+        );
+    }
+
+    #[test]
+    fn lazy_work_is_sublinear_in_m() {
+        let mut rng = Rng::new(3);
+        let lp = random_feasibility_lp(&mut rng, 2_500, 10, 0.6);
+        let cfg = ScalarLpConfig {
+            t: 50,
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Lazy(IndexKind::Flat),
+            seed: 4,
+            log_every: 0,
+        };
+        let res = run_scalar(&cfg, &lp);
+        assert!(res.avg_select_work < 8.0 * 50.0, "work {}", res.avg_select_work);
+    }
+
+    #[test]
+    fn paper_config_t_formula() {
+        let cfg = ScalarLpConfig::paper(1.0, 20, 0.5, 1.0, 1e-3, 5);
+        // T = 9·1·ln(20)/0.25 ≈ 108
+        assert!((100..=120).contains(&cfg.t), "T = {}", cfg.t);
+        assert!(cfg.eps0() > 0.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! `repro` — the Fast-MWEM coordinator CLI.
+//!
+//! Subcommands:
+//!   eval <fig1..fig9|all> [--quick] [--out=DIR] [--seed=N]
+//!       regenerate a paper figure (CSV + stdout table)
+//!   release [--m=..] [--u=..] [--n=..] [--t=..] [--index=flat|ivf|hnsw|none]
+//!           [--eps=..] [--delta=..] [--xla] run one private release job
+//!   lp [--m=..] [--d=..] [--t=..] [--mode=exhaustive|flat|ivf|hnsw]
+//!       run one scalar-private LP job
+//!   serve [--jobs=N] [--workers=N] [--eps-cap=..]
+//!       drive the thread-pool coordinator with a batch of jobs
+//!   check-artifacts [--dir=artifacts]
+//!       load + compile + smoke-run every AOT artifact
+//!
+//! Flags may also come from a config file: `--config=path.toml` (the
+//! key=value / [section] subset, see config/mod.rs).
+
+use anyhow::{bail, Context, Result};
+use fast_mwem::config::Config;
+use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
+use fast_mwem::eval::{self, EvalOpts};
+use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
+use fast_mwem::mips::IndexKind;
+use fast_mwem::mwem::{run_classic, run_fast, FastMwemConfig, MwemConfig, NativeBackend};
+use fast_mwem::runtime::{XlaBackend, XlaEngine};
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, Config)> {
+    let mut positional = Vec::new();
+    let mut cfg = Config::new();
+    for a in args {
+        if let Some(rest) = a.strip_prefix("--") {
+            if let Some((k, v)) = rest.split_once('=') {
+                if k == "config" {
+                    let file = Config::from_file(v)?;
+                    for key in file.keys().map(str::to_string).collect::<Vec<_>>() {
+                        if cfg.get_str(&key).is_none() {
+                            cfg.set(&key, file.str_or(&key, ""));
+                        }
+                    }
+                } else {
+                    cfg.set(k, v);
+                }
+            } else {
+                cfg.set(rest, "true"); // bare flag
+            }
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Ok((positional, cfg))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let (pos, cfg) = parse_flags(args)?;
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "eval" => cmd_eval(&pos, &cfg),
+        "release" => cmd_release(&cfg),
+        "lp" => cmd_lp(&cfg),
+        "serve" => cmd_serve(&cfg),
+        "check-artifacts" => cmd_check_artifacts(&cfg),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; try `repro help`"),
+    }
+}
+
+const HELP: &str = "\
+repro — Fast-MWEM reproduction CLI
+
+USAGE:
+  repro eval <fig1..fig9|all> [--quick] [--out=DIR] [--seed=N]
+  repro release [--m=1000] [--u=1024] [--n=500] [--t=2000]
+                [--index=hnsw|ivf|flat|none] [--eps=1.0] [--delta=1e-3] [--xla]
+  repro lp [--m=20000] [--d=20] [--t=2000] [--mode=hnsw|ivf|flat|exhaustive]
+  repro serve [--jobs=8] [--workers=4] [--eps-cap=N]
+  repro check-artifacts [--dir=artifacts]
+";
+
+fn cmd_eval(pos: &[String], cfg: &Config) -> Result<()> {
+    let which = pos.get(1).map(String::as_str).unwrap_or("all");
+    let opts = EvalOpts {
+        quick: cfg.get_str("quick").is_some(),
+        out_dir: cfg.str_or("out", "results").into(),
+        seed: cfg.or("seed", 20260204u64)?,
+    };
+    eval::run(which, &opts)
+}
+
+fn cmd_release(cfg: &Config) -> Result<()> {
+    let u: usize = cfg.or("u", 1024)?;
+    let m: usize = cfg.or("m", 1000)?;
+    let n: usize = cfg.or("n", 500)?;
+    let t: usize = cfg.or("t", 2000)?;
+    let eps: f64 = cfg.or("eps", 1.0)?;
+    let delta: f64 = cfg.or("delta", 1e-3)?;
+    let seed: u64 = cfg.or("seed", 1u64)?;
+    let index = cfg.str_or("index", "hnsw");
+    let use_xla = cfg.get_str("xla").is_some();
+
+    let mut rng = Rng::new(seed);
+    let h = workloads::gaussian_histogram(&mut rng, u, n);
+    let q = workloads::binary_queries(&mut rng, m, u);
+    let mut mwem_cfg = MwemConfig::paper(t, u, eps, delta, seed ^ 7);
+    mwem_cfg.log_every = (t / 10).max(1);
+
+    println!("release: U={u} m={m} n={n} T={t} eps={eps} index={index} xla={use_xla}");
+    let p0 = vec![1.0 / u as f32; u];
+    println!("initial max error: {:.4}", q.max_error(h.probs(), &p0));
+
+    let mut native = NativeBackend;
+    let mut xla_backend;
+    let backend: &mut dyn fast_mwem::mwem::MwemBackend = if use_xla {
+        let dir = cfg.str_or("artifacts", "artifacts");
+        xla_backend = XlaBackend::load(dir).context("loading XLA artifacts")?;
+        &mut xla_backend
+    } else {
+        &mut native
+    };
+
+    let (result, extra) = if index == "none" {
+        (run_classic(&mwem_cfg, &q, &h, backend), None)
+    } else {
+        let kind: IndexKind = index.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        let out = run_fast(&FastMwemConfig::new(mwem_cfg, kind), &q, &h, backend);
+        (out.result, Some(out.lazy))
+    };
+
+    for s in &result.stats {
+        println!(
+            "  iter {:>6}  max_error(avg) {:.4}  work {:>8}",
+            s.iter, s.max_error_avg, s.selection_work
+        );
+    }
+    println!("final max error (avg p̂): {:.4}", q.max_error(h.probs(), &result.p_avg));
+    println!(
+        "per-iter selection: {:.1}us, work {:.0} score-evals (m={m})",
+        result.avg_select_time.as_secs_f64() * 1e6,
+        result.avg_select_work,
+    );
+    if let Some(lazy) = extra {
+        let mean_c: f64 =
+            lazy.tail_counts.iter().sum::<usize>() as f64 / lazy.tail_counts.len().max(1) as f64;
+        println!("index build {:.2}s, mean tail C {:.1}", lazy.build_time.as_secs_f64(), mean_c);
+    }
+    println!(
+        "privacy spent: eps={:.3} delta={:.1e} (budget eps={eps} delta={delta:.1e})",
+        result.privacy_spent.0, result.privacy_spent.1
+    );
+    Ok(())
+}
+
+fn cmd_lp(cfg: &Config) -> Result<()> {
+    let m: usize = cfg.or("m", 20_000)?;
+    let d: usize = cfg.or("d", 20)?;
+    let t: usize = cfg.or("t", 2_000)?;
+    let seed: u64 = cfg.or("seed", 1u64)?;
+    let mode = match cfg.str_or("mode", "hnsw").as_str() {
+        "exhaustive" => SelectionMode::Exhaustive,
+        other => SelectionMode::Lazy(
+            other.parse::<IndexKind>().map_err(|e| anyhow::anyhow!(e))?,
+        ),
+    };
+    let mut rng = Rng::new(seed);
+    let lp = workloads::random_feasibility_lp(&mut rng, m, d, 0.6);
+    let lp_cfg = ScalarLpConfig {
+        t,
+        eps: cfg.or("eps", 1.0)?,
+        delta: cfg.or("delta", 1e-3)?,
+        delta_inf: cfg.or("delta-inf", 0.1)?,
+        mode,
+        seed: seed ^ 3,
+        log_every: (t / 10).max(1),
+    };
+    println!("lp: m={m} d={d} T={t} mode={mode}");
+    let res = run_scalar(&lp_cfg, &lp);
+    for s in &res.stats {
+        println!(
+            "  iter {:>6}  max_violation {:+.4}  violated {:.3}",
+            s.iter, s.max_violation, s.violation_fraction
+        );
+    }
+    println!(
+        "final: max violation {:+.4}, per-iter select {:.1}us, build {:.2}s",
+        lp.max_violation(&res.x),
+        res.avg_select_time.as_secs_f64() * 1e6,
+        res.index_build_time.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let jobs: usize = cfg.or("jobs", 8)?;
+    let workers: usize = cfg.or("workers", 4)?;
+    let eps_cap: Option<f64> = cfg.get("eps-cap")?;
+    println!("serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?})");
+
+    let mut coord = Coordinator::start(CoordinatorConfig { workers, eps_cap });
+    let mut accepted = 0usize;
+    for i in 0..jobs {
+        let spec = if i % 2 == 0 {
+            JobSpec::Release(ReleaseJobSpec {
+                u: 256,
+                m: 400,
+                n: 500,
+                t: 200,
+                eps: 1.0,
+                delta: 1e-3,
+                index: Some(IndexKind::Hnsw),
+                seed: i as u64,
+            })
+        } else {
+            JobSpec::Lp(LpJobSpec {
+                m: 2_000,
+                d: 16,
+                t: 200,
+                eps: 1.0,
+                delta: 1e-3,
+                delta_inf: 0.1,
+                mode: SelectionMode::Lazy(IndexKind::Hnsw),
+                seed: i as u64,
+            })
+        };
+        match coord.submit(spec) {
+            Ok(_) => accepted += 1,
+            Err(e) => println!("  job {i} rejected: {e}"),
+        }
+    }
+    let (results, metrics) = coord.finish();
+    for r in &results {
+        match &r.outcome {
+            Ok(o) => println!(
+                "  job {:>3} [{}] quality {:.4}  eps {:.3}  {:.1}ms",
+                r.job_id,
+                r.kind,
+                o.quality,
+                o.eps_spent,
+                o.total_time.as_secs_f64() * 1e3
+            ),
+            Err(e) => println!("  job {:>3} [{}] FAILED: {e}", r.job_id, r.kind),
+        }
+    }
+    println!("accepted {accepted}/{jobs}; metrics: {}", metrics.to_json());
+    Ok(())
+}
+
+fn cmd_check_artifacts(cfg: &Config) -> Result<()> {
+    let dir = cfg.str_or("dir", "artifacts");
+    let mut engine = XlaEngine::load(&dir)?;
+    println!(
+        "platform {}, manifest grid {:?}, {} artifacts",
+        engine.platform(),
+        engine.manifest().grid,
+        engine.manifest().entries.len()
+    );
+    let names: Vec<String> = engine.manifest().entries.keys().cloned().collect();
+    for name in names {
+        let entry = engine.entry(&name)?.clone();
+        // build inputs of the right shapes (i32 scalar for step's i_t)
+        let mut bufs = Vec::new();
+        for (i, spec) in entry.inputs.iter().enumerate() {
+            if spec.dtype == "int32" {
+                bufs.push(engine.buffer_scalar_i32(0)?);
+            } else if spec.shape.is_empty() {
+                bufs.push(engine.buffer_scalar_f32(0.0)?);
+            } else {
+                let data = vec![if i == 0 { 1.0f32 } else { 0.0 }; spec.elements()];
+                bufs.push(engine.buffer_f32(&data, &spec.shape)?);
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = engine.execute(&name, &refs)?;
+        println!(
+            "  {name}: OK ({} outputs, first len {})",
+            outs.len(),
+            outs.first().map(Vec::len).unwrap_or(0)
+        );
+    }
+    Ok(())
+}

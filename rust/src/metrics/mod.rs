@@ -1,0 +1,170 @@
+//! Lightweight metrics registry: counters, gauges and timing histograms for
+//! the coordinator and the eval harness. JSON-dumpable via `util::json`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+#[derive(Default, Debug)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timings: BTreeMap<String, Vec<f64>>, // seconds
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn observe(&mut self, name: &str, d: Duration) {
+        self.timings.entry(name.to_string()).or_default().push(d.as_secs_f64());
+    }
+
+    /// Time a closure and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let started = Instant::now();
+        let out = f();
+        self.observe(name, started.elapsed());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// (count, mean, p50, p95, max) of a timing series, in seconds.
+    pub fn timing_summary(&self, name: &str) -> Option<TimingSummary> {
+        let xs = self.timings.get(name)?;
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| sorted[((sorted.len() - 1) as f64 * p) as usize];
+        Some(TimingSummary {
+            count: xs.len(),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            p50: pct(0.5),
+            p95: pct(0.95),
+            max: *sorted.last().unwrap(),
+        })
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.timings {
+            self.timings.entry(k.clone()).or_default().extend(v.iter().cloned());
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        obj.insert("counters".into(), Json::Obj(counters));
+        let gauges: BTreeMap<String, Json> =
+            self.gauges.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        obj.insert("gauges".into(), Json::Obj(gauges));
+        let timings: BTreeMap<String, Json> = self
+            .timings
+            .keys()
+            .filter_map(|k| {
+                self.timing_summary(k).map(|s| {
+                    let mut t = BTreeMap::new();
+                    t.insert("count".to_string(), Json::Num(s.count as f64));
+                    t.insert("mean_s".to_string(), Json::Num(s.mean));
+                    t.insert("p50_s".to_string(), Json::Num(s.p50));
+                    t.insert("p95_s".to_string(), Json::Num(s.p95));
+                    t.insert("max_s".to_string(), Json::Num(s.max));
+                    (k.clone(), Json::Obj(t))
+                })
+            })
+            .collect();
+        obj.insert("timings".into(), Json::Obj(timings));
+        Json::Obj(obj)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let mut m = Metrics::new();
+        m.inc("jobs", 1);
+        m.inc("jobs", 2);
+        m.set_gauge("eps", 0.5);
+        assert_eq!(m.counter("jobs"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        assert_eq!(m.gauge("eps"), Some(0.5));
+    }
+
+    #[test]
+    fn timing_summary_percentiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("op", Duration::from_millis(i));
+        }
+        let s = m.timing_summary("op").unwrap();
+        assert_eq!(s.count, 100);
+        assert!((s.p50 - 0.050).abs() < 0.002);
+        assert!((s.p95 - 0.095).abs() < 0.002);
+        assert!((s.max - 0.100).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics::new();
+        a.inc("x", 1);
+        let mut b = Metrics::new();
+        b.inc("x", 2);
+        b.observe("t", Duration::from_secs(1));
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.timing_summary("t").unwrap().count, 1);
+    }
+
+    #[test]
+    fn json_dump_parses_back() {
+        let mut m = Metrics::new();
+        m.inc("a", 5);
+        m.observe("t", Duration::from_millis(10));
+        let j = m.to_json().to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("counters").unwrap().get("a").unwrap().as_f64(),
+            Some(5.0)
+        );
+    }
+}

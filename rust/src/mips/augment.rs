@@ -1,0 +1,186 @@
+//! MIPS → kNN reduction (§E of the paper).
+//!
+//! Append `aux_i = √(M − ‖k_i‖²)` to every key and `0` to every query: all
+//! augmented keys then share norm √M, so L2 order equals inner-product
+//! order:  ‖q̃ − k̃_i‖² = ‖q‖² + M − 2⟨q, k_i⟩.
+//!
+//! We never materialize the augmented vectors. [`AugmentedSpace`] stores the
+//! original rows plus the aux column and evaluates the three distance forms
+//! the L2 indices need (point↔point, query↔point, explicit-vector↔point)
+//! algebraically — halving memory traffic on the HNSW/IVF hot paths.
+
+use super::VectorSet;
+use crate::util::math::dot;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Global distance-evaluation counter (diagnostics for benches/tests; the
+/// relaxed increment is ~1ns against a ≥100ns distance computation).
+static DIST_EVALS: AtomicU64 = AtomicU64::new(0);
+
+/// Read (and optionally reset) the global distance-evaluation counter.
+pub fn dist_evals() -> u64 {
+    DIST_EVALS.load(Ordering::Relaxed)
+}
+
+pub fn reset_dist_evals() {
+    DIST_EVALS.store(0, Ordering::Relaxed);
+}
+
+#[inline]
+fn count_eval() {
+    DIST_EVALS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub struct AugmentedSpace {
+    vs: VectorSet,
+    aux: Vec<f32>,
+    /// Shared squared norm M = max_i ‖k_i‖².
+    big_m: f32,
+}
+
+impl AugmentedSpace {
+    pub fn new(vs: VectorSet) -> Self {
+        let mut big_m = 0f32;
+        for i in 0..vs.len() {
+            big_m = big_m.max(dot(vs.row(i), vs.row(i)));
+        }
+        let aux: Vec<f32> = (0..vs.len())
+            .map(|i| (big_m - dot(vs.row(i), vs.row(i))).max(0.0).sqrt())
+            .collect();
+        AugmentedSpace { vs, aux, big_m }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vs.is_empty()
+    }
+
+    /// Original (un-augmented) dimension.
+    pub fn dim(&self) -> usize {
+        self.vs.dim()
+    }
+
+    /// Augmented dimension (dim + 1).
+    pub fn aug_dim(&self) -> usize {
+        self.vs.dim() + 1
+    }
+
+    pub fn big_m(&self) -> f32 {
+        self.big_m
+    }
+
+    pub fn vectors(&self) -> &VectorSet {
+        &self.vs
+    }
+
+    /// Exact inner product between original key `i` and an original query.
+    #[inline]
+    pub fn ip(&self, i: usize, query: &[f32]) -> f32 {
+        dot(self.vs.row(i), query)
+    }
+
+    /// Squared L2 distance between augmented keys i and j:
+    /// 2M − 2⟨x_i, x_j⟩ − 2·aux_i·aux_j.
+    #[inline]
+    pub fn dist_pp(&self, i: usize, j: usize) -> f32 {
+        count_eval();
+        2.0 * self.big_m
+            - 2.0 * dot(self.vs.row(i), self.vs.row(j))
+            - 2.0 * self.aux[i] * self.aux[j]
+    }
+
+    /// Squared L2 distance between the augmented query [q, 0] and key i:
+    /// ‖q‖² + M − 2⟨q, x_i⟩. (‖q‖² is rank-preserving; we drop it so the
+    /// caller does not need to precompute the query norm.)
+    #[inline]
+    pub fn dist_qp(&self, query: &[f32], i: usize) -> f32 {
+        count_eval();
+        self.big_m - 2.0 * dot(self.vs.row(i), query)
+    }
+
+    /// Squared L2 distance between an explicit *augmented-space* vector
+    /// (dim + 1 entries, e.g. a k-means centroid) and augmented key i.
+    #[inline]
+    pub fn dist_cp(&self, centroid: &[f32], i: usize) -> f32 {
+        count_eval();
+        debug_assert_eq!(centroid.len(), self.aug_dim());
+        let d = self.vs.dim();
+        let c_norm = dot(centroid, centroid);
+        c_norm + self.big_m
+            - 2.0 * (dot(&centroid[..d], self.vs.row(i)) + centroid[d] * self.aux[i])
+    }
+
+    /// Materialize the augmented row i (used by k-means centroid updates).
+    pub fn materialize(&self, i: usize, out: &mut [f32]) {
+        let d = self.vs.dim();
+        out[..d].copy_from_slice(self.vs.row(i));
+        out[d] = self.aux[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn space(n: usize, d: usize, seed: u64) -> AugmentedSpace {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        AugmentedSpace::new(VectorSet::new(data, n, d))
+    }
+
+    #[test]
+    fn augmented_norms_are_constant() {
+        let s = space(50, 8, 1);
+        let mut row = vec![0.0f32; s.aug_dim()];
+        for i in 0..s.len() {
+            s.materialize(i, &mut row);
+            let norm_sq = dot(&row, &row);
+            assert!((norm_sq - s.big_m()).abs() < 1e-4, "row {i}: {norm_sq}");
+        }
+    }
+
+    #[test]
+    fn dist_pp_matches_materialized() {
+        let s = space(20, 6, 2);
+        let mut a = vec![0.0f32; s.aug_dim()];
+        let mut b = vec![0.0f32; s.aug_dim()];
+        for i in 0..5 {
+            for j in 5..10 {
+                s.materialize(i, &mut a);
+                s.materialize(j, &mut b);
+                let want = crate::util::math::l2_sq(&a, &b);
+                assert!((s.dist_pp(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn qp_order_equals_ip_order() {
+        // smaller dist_qp ⇔ larger inner product (the whole point of §E)
+        let s = space(100, 10, 3);
+        let mut rng = Rng::new(4);
+        let q: Vec<f32> = (0..10).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut by_ip: Vec<usize> = (0..100).collect();
+        by_ip.sort_by(|&a, &b| s.ip(b, &q).total_cmp(&s.ip(a, &q)));
+        let mut by_dist: Vec<usize> = (0..100).collect();
+        by_dist.sort_by(|&a, &b| s.dist_qp(&q, a).total_cmp(&s.dist_qp(&q, b)));
+        assert_eq!(by_ip, by_dist);
+    }
+
+    #[test]
+    fn dist_cp_matches_materialized_centroid() {
+        let s = space(20, 6, 5);
+        let mut rng = Rng::new(6);
+        let c: Vec<f32> = (0..7).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let mut row = vec![0.0f32; 7];
+        for i in 0..20 {
+            s.materialize(i, &mut row);
+            let want = crate::util::math::l2_sq(&c, &row);
+            assert!((s.dist_cp(&c, i) - want).abs() < 1e-3, "row {i}");
+        }
+    }
+}

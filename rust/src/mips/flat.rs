@@ -1,0 +1,95 @@
+//! Exact k-MIPS by linear scan — the paper's `Flat` baseline index.
+//!
+//! O(m·d) per query. This is both (a) the exhaustive-search baseline that
+//! Fast-MWEM is benchmarked against, and (b) the "perfect index" H of
+//! Theorem 3.3 used to validate that lazy sampling leaves the output
+//! distribution unchanged.
+
+use super::topk::TopK;
+use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
+use crate::util::math::dot;
+
+pub struct FlatIndex {
+    vs: VectorSet,
+}
+
+impl FlatIndex {
+    pub fn new(vs: VectorSet) -> Self {
+        FlatIndex { vs }
+    }
+
+    pub fn vectors(&self) -> &VectorSet {
+        &self.vs
+    }
+}
+
+impl MipsIndex for FlatIndex {
+    fn len(&self) -> usize {
+        self.vs.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.vs.dim()
+    }
+
+    fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
+        let k = k.min(self.vs.len());
+        let mut top = TopK::new(k);
+        for i in 0..self.vs.len() {
+            top.push(i as u32, dot(self.vs.row(i), query));
+        }
+        top.into_sorted()
+    }
+
+    fn kind(&self) -> IndexKind {
+        IndexKind::Flat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    #[test]
+    fn finds_exact_top_k() {
+        let vs = random_set(200, 16, 1);
+        let idx = FlatIndex::new(vs.clone());
+        let mut rng = Rng::new(2);
+        let q: Vec<f32> = (0..16).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+        let got = idx.top_k(&q, 5);
+
+        let mut all: Vec<(f32, u32)> =
+            (0..200).map(|i| (dot(vs.row(i), &q), i as u32)).collect();
+        all.sort_by(|a, b| b.0.total_cmp(&a.0));
+        for (g, (s, id)) in got.iter().zip(all.iter()) {
+            assert_eq!(g.id, *id);
+            assert!((g.score - s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n_returns_all_sorted() {
+        let vs = random_set(7, 4, 3);
+        let idx = FlatIndex::new(vs);
+        let got = idx.top_k(&[1.0, 0.0, 0.0, 0.0], 50);
+        assert_eq!(got.len(), 7);
+        assert!(got.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+
+    #[test]
+    fn scores_are_true_inner_products() {
+        let vs = VectorSet::new(vec![1.0, 0.0, 0.5, 0.5], 2, 2);
+        let idx = FlatIndex::new(vs);
+        let got = idx.top_k(&[2.0, 2.0], 2);
+        assert_eq!(got[0].score, 2.0); // both rows give 2.0
+        assert_eq!(got[1].score, 2.0);
+    }
+}

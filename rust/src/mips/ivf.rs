@@ -1,0 +1,203 @@
+//! IVF (inverted file) k-MIPS index, following FAISS IndexIVFFlat and the
+//! paper's §H configuration: the keys are partitioned into
+//! `nlist = max(2√m, 20)` Voronoi cells by k-means in the augmented space,
+//! and a query scans only the `nprobe = min(nlist/4, 10)` nearest cells —
+//! about `m·nprobe/nlist` candidates instead of m.
+
+use super::augment::AugmentedSpace;
+use super::kmeans::{kmeans, KmeansParams};
+use super::topk::TopK;
+use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
+use crate::util::math::dot;
+
+#[derive(Clone, Debug)]
+pub struct IvfParams {
+    pub nlist: Option<usize>,
+    pub nprobe: Option<usize>,
+    pub kmeans_iters: usize,
+    pub points_per_centroid: usize,
+}
+
+impl IvfParams {
+    /// The paper's §H defaults (nlist/nprobe derived from m at build time).
+    pub fn paper() -> Self {
+        IvfParams { nlist: None, nprobe: None, kmeans_iters: 8, points_per_centroid: 64 }
+    }
+
+    pub fn nlist_for(&self, m: usize) -> usize {
+        self.nlist
+            .unwrap_or_else(|| ((2.0 * (m as f64).sqrt()) as usize).max(20))
+            .min(m.max(1))
+    }
+
+    pub fn nprobe_for(&self, nlist: usize) -> usize {
+        self.nprobe.unwrap_or_else(|| (nlist / 4).clamp(1, 10))
+    }
+}
+
+pub struct IvfIndex {
+    space: AugmentedSpace,
+    centroids: Vec<f32>, // nlist × (dim+1), augmented space
+    lists: Vec<Vec<u32>>,
+    nlist: usize,
+    nprobe: usize,
+    aug_dim: usize,
+}
+
+impl IvfIndex {
+    pub fn build(vs: VectorSet, params: IvfParams, seed: u64) -> Self {
+        let m = vs.len();
+        assert!(m > 0, "cannot build IVF over an empty set");
+        let space = AugmentedSpace::new(vs);
+        let nlist = params.nlist_for(m);
+        let nprobe = params.nprobe_for(nlist);
+
+        let km = kmeans(
+            &space,
+            nlist,
+            &KmeansParams {
+                iters: params.kmeans_iters,
+                points_per_centroid: params.points_per_centroid,
+            },
+            seed,
+        );
+
+        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); nlist];
+        for (i, &c) in km.assignment.iter().enumerate() {
+            lists[c as usize].push(i as u32);
+        }
+
+        IvfIndex { aug_dim: space.aug_dim(), space, centroids: km.centroids, lists, nlist, nprobe }
+    }
+
+    pub fn nlist(&self) -> usize {
+        self.nlist
+    }
+
+    pub fn nprobe(&self) -> usize {
+        self.nprobe
+    }
+
+    /// Average number of candidates scanned per query (for runtime models).
+    pub fn expected_scan(&self) -> f64 {
+        self.space.len() as f64 * self.nprobe as f64 / self.nlist as f64
+    }
+
+    /// Coarse-quantizer score of cell c for a query: the inner product of
+    /// the centroid's original-space part with the query (FAISS
+    /// METRIC_INNER_PRODUCT cell ranking). Ranking cells by augmented-L2
+    /// distance instead degrades badly for small-norm queries — the
+    /// centroid-norm term dominates and probing becomes query-independent.
+    #[inline]
+    fn centroid_score(&self, query: &[f32], c: usize) -> f32 {
+        let dim = self.aug_dim;
+        let cent = &self.centroids[c * dim..(c + 1) * dim];
+        dot(&cent[..dim - 1], query)
+    }
+}
+
+impl MipsIndex for IvfIndex {
+    fn len(&self) -> usize {
+        self.space.len()
+    }
+
+    fn dim(&self) -> usize {
+        self.space.dim()
+    }
+
+    fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
+        // 1. rank cells by centroid inner product (descending)
+        let mut cells: Vec<(f32, u32)> = (0..self.nlist)
+            .map(|c| (self.centroid_score(query, c), c as u32))
+            .collect();
+        let probes = self.nprobe.min(self.nlist);
+        cells.select_nth_unstable_by(probes - 1, |a, b| b.0.total_cmp(&a.0));
+
+        // 2. exact inner products over the selected lists
+        let mut top = TopK::new(k);
+        for &(_, c) in &cells[..probes] {
+            for &id in &self.lists[c as usize] {
+                top.push(id, self.space.ip(id as usize, query));
+            }
+        }
+        top.into_sorted()
+    }
+
+    fn kind(&self) -> IndexKind {
+        IndexKind::Ivf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::FlatIndex;
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    #[test]
+    fn paper_params_formulae() {
+        let p = IvfParams::paper();
+        assert_eq!(p.nlist_for(10_000), 200);
+        assert_eq!(p.nlist_for(25), 20);
+        assert_eq!(p.nprobe_for(200), 10);
+        assert_eq!(p.nprobe_for(20), 5);
+        assert_eq!(p.nprobe_for(2), 1);
+    }
+
+    #[test]
+    fn recall_against_flat_is_high() {
+        let n = 2_000;
+        let d = 24;
+        let vs = random_set(n, d, 1);
+        let flat = FlatIndex::new(vs.clone());
+        let ivf = IvfIndex::build(vs, IvfParams::paper(), 2);
+
+        let mut rng = Rng::new(3);
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        let k = 10;
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let want: std::collections::HashSet<u32> =
+                flat.top_k(&q, k).into_iter().map(|nb| nb.id).collect();
+            let got = ivf.top_k(&q, k);
+            hits += got.iter().filter(|nb| want.contains(&nb.id)).count();
+            total += k;
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.5, "recall@{k} = {recall}");
+    }
+
+    #[test]
+    fn scores_are_exact_inner_products() {
+        let vs = random_set(500, 8, 4);
+        let ivf = IvfIndex::build(vs.clone(), IvfParams::paper(), 5);
+        let q = vec![0.3f32; 8];
+        for nb in ivf.top_k(&q, 5) {
+            let want = crate::util::math::dot(vs.row(nb.id as usize), &q);
+            assert!((nb.score - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scans_fraction_of_dataset() {
+        let vs = random_set(5_000, 8, 6);
+        let ivf = IvfIndex::build(vs, IvfParams::paper(), 7);
+        // nlist = 2√5000 ≈ 141, nprobe = 10 → ~7% of the data
+        assert!(ivf.expected_scan() < 0.1 * 5_000.0);
+    }
+
+    #[test]
+    fn tiny_dataset_works() {
+        let vs = random_set(5, 4, 8);
+        let ivf = IvfIndex::build(vs, IvfParams::paper(), 9);
+        let got = ivf.top_k(&[1.0, 1.0, 1.0, 1.0], 3);
+        assert!(!got.is_empty());
+    }
+}

@@ -1,0 +1,199 @@
+//! k-means++ / Lloyd clustering in the augmented space — the coarse
+//! quantizer behind [`super::IvfIndex`].
+//!
+//! Follows FAISS's practical recipe: train on a subsample (a fixed number
+//! of points per centroid) and then assign the full set in one pass; empty
+//! clusters are re-seeded from the largest cluster's members.
+
+use super::augment::AugmentedSpace;
+use crate::util::rng::Rng;
+
+pub struct KmeansResult {
+    /// Row-major centroids in augmented space: `k × (dim+1)`.
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub dim: usize,
+    /// Assignment of every input point to its nearest centroid.
+    pub assignment: Vec<u32>,
+}
+
+pub struct KmeansParams {
+    pub iters: usize,
+    /// Training subsample size = `points_per_centroid * k` (capped at n).
+    pub points_per_centroid: usize,
+}
+
+impl Default for KmeansParams {
+    fn default() -> Self {
+        KmeansParams { iters: 8, points_per_centroid: 64 }
+    }
+}
+
+/// Cluster the augmented vectors of `space` into k cells.
+pub fn kmeans(space: &AugmentedSpace, k: usize, params: &KmeansParams, seed: u64) -> KmeansResult {
+    let n = space.len();
+    let dim = space.aug_dim();
+    assert!(k >= 1 && k <= n, "k={k} must be in [1, {n}]");
+    let mut rng = Rng::new(seed);
+
+    // --- training subsample -------------------------------------------------
+    let train_size = (params.points_per_centroid * k).min(n);
+    let train: Vec<usize> = if train_size == n {
+        (0..n).collect()
+    } else {
+        crate::sampling::sample_distinct(&mut rng, n, train_size)
+    };
+
+    // --- k-means++ seeding on the subsample ---------------------------------
+    let mut centroids = vec![0.0f32; k * dim];
+    let first = train[rng.usize_below(train.len())];
+    space.materialize(first, &mut centroids[0..dim]);
+
+    let mut d2: Vec<f32> = train.iter().map(|&i| space.dist_cp(&centroids[0..dim], i)).collect();
+    for c in 1..k {
+        // D² sampling
+        let total: f64 = d2.iter().map(|&x| x.max(0.0) as f64).sum();
+        let pick = if total <= 0.0 {
+            train[rng.usize_below(train.len())]
+        } else {
+            let mut target = rng.f64() * total;
+            let mut chosen = train[train.len() - 1];
+            for (ti, &i) in train.iter().enumerate() {
+                target -= d2[ti].max(0.0) as f64;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        space.materialize(pick, &mut centroids[c * dim..(c + 1) * dim]);
+        // refresh distances with the new centroid
+        for (ti, &i) in train.iter().enumerate() {
+            let nd = space.dist_cp(&centroids[c * dim..(c + 1) * dim], i);
+            if nd < d2[ti] {
+                d2[ti] = nd;
+            }
+        }
+    }
+
+    // --- Lloyd iterations on the subsample ----------------------------------
+    let mut assign_train = vec![0u32; train.len()];
+    let mut sums = vec![0.0f64; k * dim];
+    let mut counts = vec![0usize; k];
+    let mut row = vec![0.0f32; dim];
+
+    for _iter in 0..params.iters {
+        // assign
+        for (ti, &i) in train.iter().enumerate() {
+            assign_train[ti] = nearest_centroid(space, &centroids, k, dim, i).0;
+        }
+        // update
+        sums.iter_mut().for_each(|s| *s = 0.0);
+        counts.iter_mut().for_each(|c| *c = 0);
+        for (ti, &i) in train.iter().enumerate() {
+            let c = assign_train[ti] as usize;
+            space.materialize(i, &mut row);
+            for (s, &x) in sums[c * dim..(c + 1) * dim].iter_mut().zip(row.iter()) {
+                *s += x as f64;
+            }
+            counts[c] += 1;
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed an empty cluster from a random training point
+                let i = train[rng.usize_below(train.len())];
+                space.materialize(i, &mut centroids[c * dim..(c + 1) * dim]);
+            } else {
+                let inv = 1.0 / counts[c] as f64;
+                for (dst, &s) in centroids[c * dim..(c + 1) * dim].iter_mut().zip(&sums[c * dim..]) {
+                    *dst = (s * inv) as f32;
+                }
+            }
+        }
+    }
+
+    // --- full assignment pass ------------------------------------------------
+    let assignment: Vec<u32> =
+        (0..n).map(|i| nearest_centroid(space, &centroids, k, dim, i).0).collect();
+
+    KmeansResult { centroids, k, dim, assignment }
+}
+
+/// (argmin, min distance) over centroids for augmented point i.
+#[inline]
+pub fn nearest_centroid(
+    space: &AugmentedSpace,
+    centroids: &[f32],
+    k: usize,
+    dim: usize,
+    i: usize,
+) -> (u32, f32) {
+    let mut best = 0u32;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let d = space.dist_cp(&centroids[c * dim..(c + 1) * dim], i);
+        if d < best_d {
+            best_d = d;
+            best = c as u32;
+        }
+    }
+    (best, best_d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::VectorSet;
+
+    /// Three well-separated Gaussian blobs must be recovered.
+    #[test]
+    fn separable_blobs_recovered() {
+        let mut rng = Rng::new(1);
+        let n_per = 60;
+        let centers = [[0.0f32, 0.0], [10.0, 10.0], [-10.0, 10.0]];
+        let mut data = Vec::new();
+        for c in &centers {
+            for _ in 0..n_per {
+                data.push(c[0] + rng.normal() as f32 * 0.3);
+                data.push(c[1] + rng.normal() as f32 * 0.3);
+            }
+        }
+        let space = AugmentedSpace::new(VectorSet::new(data, 3 * n_per, 2));
+        let res = kmeans(&space, 3, &KmeansParams { iters: 10, points_per_centroid: 64 }, 7);
+
+        // all points of one blob share a cluster, different blobs differ
+        for b in 0..3 {
+            let first = res.assignment[b * n_per];
+            for i in 0..n_per {
+                assert_eq!(res.assignment[b * n_per + i], first, "blob {b} point {i}");
+            }
+        }
+        let mut labels: Vec<u32> =
+            (0..3).map(|b| res.assignment[b * n_per]).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), 3);
+    }
+
+    #[test]
+    fn assignment_is_nearest() {
+        let mut rng = Rng::new(2);
+        let n = 100;
+        let data: Vec<f32> = (0..n * 4).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let space = AugmentedSpace::new(VectorSet::new(data, n, 4));
+        let res = kmeans(&space, 5, &KmeansParams::default(), 3);
+        for i in 0..n {
+            let (want, _) = nearest_centroid(&space, &res.centroids, res.k, res.dim, i);
+            assert_eq!(res.assignment[i], want);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_is_fine() {
+        let data = vec![0.0f32, 1.0, 2.0, 3.0, 4.0, 5.0];
+        let space = AugmentedSpace::new(VectorSet::new(data, 3, 2));
+        let res = kmeans(&space, 3, &KmeansParams::default(), 4);
+        assert_eq!(res.assignment.len(), 3);
+    }
+}

@@ -1,0 +1,160 @@
+//! From-scratch k-MIPS (maximum inner product search) indices.
+//!
+//! The paper borrows FAISS's Flat / IVF / HNSW indices (§H); this module
+//! reimplements all three in Rust with the same hyper-parameters so the
+//! coordinator has no C++ dependency and the request path stays in-process:
+//!
+//! * [`FlatIndex`] — exact linear scan, the paper's baseline.
+//! * [`IvfIndex`]  — inverted file over a k-means++ coarse quantizer,
+//!   `nlist = max(2√m, 20)`, `nprobe = min(nlist/4, 10)`.
+//! * [`HnswIndex`] — hierarchical navigable small world graph,
+//!   `M = 32`, `efConstruction = 100`, `efSearch = 64`.
+//!
+//! IVF and HNSW are *L2* structures; MIPS is reduced to nearest-neighbor
+//! search through the augmentation of §E ([`augment::AugmentedSpace`]):
+//! each key `k_i` gains a coordinate `√(M − ‖k_i‖²)` and queries gain a 0,
+//! making L2 order equal inner-product order.
+
+pub mod augment;
+pub mod flat;
+pub mod hnsw;
+pub mod ivf;
+pub mod kmeans;
+pub mod topk;
+
+pub use augment::AugmentedSpace;
+pub use flat::FlatIndex;
+pub use hnsw::{HnswIndex, HnswParams};
+pub use ivf::{IvfIndex, IvfParams};
+
+/// A dense, row-major set of vectors. The canonical storage for query
+/// matrices `Q[m, U]` and LP constraint matrices `[A | b]`.
+#[derive(Clone, Debug)]
+pub struct VectorSet {
+    data: Vec<f32>,
+    n: usize,
+    d: usize,
+}
+
+impl VectorSet {
+    pub fn new(data: Vec<f32>, n: usize, d: usize) -> Self {
+        assert_eq!(data.len(), n * d, "data length must be n*d");
+        VectorSet { data, n, d }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> Self {
+        VectorSet { data: vec![0.0; n * d], n, d }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// One search hit: candidate id + *exact* inner product with the query.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub score: f32,
+}
+
+/// Which index implementation to use — mirrors the paper's §5 ablation axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IndexKind {
+    Flat,
+    Ivf,
+    Hnsw,
+}
+
+impl std::fmt::Display for IndexKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IndexKind::Flat => write!(f, "flat"),
+            IndexKind::Ivf => write!(f, "ivf"),
+            IndexKind::Hnsw => write!(f, "hnsw"),
+        }
+    }
+}
+
+impl std::str::FromStr for IndexKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" => Ok(IndexKind::Flat),
+            "ivf" => Ok(IndexKind::Ivf),
+            "hnsw" => Ok(IndexKind::Hnsw),
+            other => Err(format!("unknown index kind: {other}")),
+        }
+    }
+}
+
+/// A k-MIPS index over a fixed vector set. `top_k` returns up to k hits
+/// sorted by descending inner product; approximate indices may miss true
+/// top-k members (the c-approximation of Definition 3.4), which the lazy
+/// EM layer compensates for (Theorems F.2/F.10).
+pub trait MipsIndex: Send + Sync {
+    fn len(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor>;
+    fn kind(&self) -> IndexKind;
+}
+
+/// Build an index of the requested kind over `vs` (consumed).
+pub fn build_index(kind: IndexKind, vs: VectorSet, seed: u64) -> Box<dyn MipsIndex> {
+    match kind {
+        IndexKind::Flat => Box::new(FlatIndex::new(vs)),
+        IndexKind::Ivf => Box::new(IvfIndex::build(vs, IvfParams::paper(), seed)),
+        IndexKind::Hnsw => Box::new(HnswIndex::build(vs, HnswParams::paper(), seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vectorset_rows() {
+        let vs = VectorSet::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(vs.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(vs.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs.dim(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn vectorset_rejects_bad_length() {
+        VectorSet::new(vec![1.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn index_kind_round_trips() {
+        for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+            let s = kind.to_string();
+            assert_eq!(s.parse::<IndexKind>().unwrap(), kind);
+        }
+        assert!("bogus".parse::<IndexKind>().is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Bounded top-k selection helpers (min-heap of size k over f32 scores).
+
+use super::Neighbor;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Wrapper giving f32 a total order (NaN sorts last) so it can live in heaps.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF32(pub f32);
+
+impl Eq for OrdF32 {}
+
+impl PartialOrd for OrdF32 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF32 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Collects the k largest (score, id) pairs seen so far.
+pub struct TopK {
+    k: usize,
+    // min-heap via Reverse ordering on score
+    heap: BinaryHeap<std::cmp::Reverse<(OrdF32, u32)>>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
+    }
+
+    #[inline]
+    pub fn push(&mut self, id: u32, score: f32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(std::cmp::Reverse((OrdF32(score), id)));
+        } else if let Some(&std::cmp::Reverse((OrdF32(worst), _))) = self.heap.peek() {
+            if score > worst {
+                self.heap.pop();
+                self.heap.push(std::cmp::Reverse((OrdF32(score), id)));
+            }
+        }
+    }
+
+    /// Current k-th best score (threshold for admission), if full.
+    #[inline]
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() < self.k {
+            None
+        } else {
+            self.heap.peek().map(|r| r.0 .0 .0)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain into a descending-score Vec<Neighbor>.
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut v: Vec<Neighbor> = self
+            .heap
+            .into_iter()
+            .map(|std::cmp::Reverse((OrdF32(score), id))| Neighbor { id, score })
+            .collect();
+        v.sort_unstable_by(|a, b| b.score.total_cmp(&a.score));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_k_largest() {
+        let mut t = TopK::new(3);
+        for (i, s) in [5.0f32, 1.0, 9.0, 3.0, 7.0, 2.0].iter().enumerate() {
+            t.push(i as u32, *s);
+        }
+        let out = t.into_sorted();
+        let scores: Vec<f32> = out.iter().map(|n| n.score).collect();
+        assert_eq!(scores, vec![9.0, 7.0, 5.0]);
+        assert_eq!(out[0].id, 2);
+    }
+
+    #[test]
+    fn fewer_items_than_k() {
+        let mut t = TopK::new(10);
+        t.push(0, 1.0);
+        t.push(1, 2.0);
+        assert_eq!(t.len(), 2);
+        let out = t.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].score, 2.0);
+    }
+
+    #[test]
+    fn zero_k_collects_nothing() {
+        let mut t = TopK::new(0);
+        t.push(0, 1.0);
+        assert!(t.is_empty());
+        assert!(t.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn threshold_tracks_kth_best() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.threshold(), None);
+        t.push(0, 1.0);
+        assert_eq!(t.threshold(), None);
+        t.push(1, 5.0);
+        assert_eq!(t.threshold(), Some(1.0));
+        t.push(2, 3.0);
+        assert_eq!(t.threshold(), Some(3.0));
+    }
+
+    #[test]
+    fn handles_negative_and_nan_scores() {
+        let mut t = TopK::new(2);
+        t.push(0, -5.0);
+        t.push(1, f32::NAN);
+        t.push(2, -1.0);
+        let out = t.into_sorted();
+        // NaN sorts below real numbers under total_cmp-max ordering;
+        // we only require the two real scores to be ordered correctly.
+        assert_eq!(out.len(), 2);
+        assert!(out[0].score.is_nan() || out[0].score >= out[1].score);
+    }
+}

@@ -1,0 +1,260 @@
+//! Classic MWEM (Algorithm 1): exhaustive exponential mechanism per round.
+
+use super::{Histogram, MwemBackend, MwuState, QuerySet};
+use crate::dp::{accountant::per_step_epsilon, mechanisms::exponential_mechanism, Accountant};
+use crate::util::math::dot;
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Multiplicative-update rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateRule {
+    /// Algorithm 1's simplified rule `w ← w·e^{−η·q}`, with the error sign
+    /// restored (the paper's experiments implicitly need it for the error
+    /// to decrease): s = −η·sgn(⟨q,p⟩ − ⟨q,h⟩). Uses the exact sign, as in
+    /// the paper's presentation, which omits a private measurement step.
+    Paper { eta: f64 },
+    /// Hardt–Ligett–McSherry (2012) classic MWEM: the round budget is split
+    /// between EM selection and a Laplace measurement m_t of ⟨q,h⟩; the
+    /// update is w ← w·exp(q·(m_t − ⟨q,p⟩)/2). Fully private end to end.
+    Hardt,
+}
+
+#[derive(Clone, Debug)]
+pub struct MwemConfig {
+    /// Number of MWU rounds T.
+    pub t: usize,
+    /// Total privacy budget (ε, δ).
+    pub eps: f64,
+    pub delta: f64,
+    pub update: UpdateRule,
+    pub seed: u64,
+    /// Evaluate ‖Q(h−p̂)‖∞ every `log_every` rounds (0 = never; evaluation
+    /// is non-private and O(mU), so runtime benches disable it).
+    pub log_every: usize,
+}
+
+impl MwemConfig {
+    /// Paper defaults: T rounds with η = √(ln U / T).
+    pub fn paper(t: usize, u: usize, eps: f64, delta: f64, seed: u64) -> Self {
+        let eta = ((u as f64).ln() / t as f64).sqrt();
+        MwemConfig { t, eps, delta, update: UpdateRule::Paper { eta }, seed, log_every: 0 }
+    }
+
+    /// Per-round ε₀ from the advanced-composition budget split (Alg 1/2).
+    pub fn eps0(&self) -> f64 {
+        per_step_epsilon(self.eps, self.delta, self.t as u64, 1.0)
+    }
+}
+
+/// Per-logged-round statistics.
+#[derive(Clone, Debug)]
+pub struct IterStat {
+    pub iter: usize,
+    /// ‖Q(h − p̄)‖∞ of the running average p̄ (NaN if not evaluated).
+    pub max_error_avg: f64,
+    /// ‖Q(h − p⁽ᵗ⁾)‖∞ of the current iterate.
+    pub max_error_cur: f64,
+    /// Candidate selected by the mechanism this round.
+    pub selected: usize,
+    /// Score evaluations charged to selection (m for classic, k+C for lazy).
+    pub selection_work: usize,
+    pub selection_time: Duration,
+}
+
+#[derive(Debug)]
+pub struct MwemResult {
+    /// Averaged synthetic distribution p̂ (the paper's output).
+    pub p_avg: Vec<f32>,
+    /// Final iterate p⁽ᵀ⁾.
+    pub p_final: Vec<f32>,
+    pub stats: Vec<IterStat>,
+    pub total_time: Duration,
+    /// Mean selection time per round.
+    pub avg_select_time: Duration,
+    /// Mean selection work (score evaluations) per round.
+    pub avg_select_work: f64,
+    pub eps0: f64,
+    /// Composed privacy spend as tracked by the accountant.
+    pub privacy_spent: (f64, f64),
+}
+
+/// Shared per-round post-selection step: (optionally) measure the selected
+/// query's answer and apply the multiplicative update. Returns (s, c).
+pub(crate) fn measured_update(
+    rng: &mut Rng,
+    rule: UpdateRule,
+    q: &QuerySet,
+    h: &Histogram,
+    state: &MwuState,
+    i_t: usize,
+    eps0: f64,
+) -> f32 {
+    let q_row = q.query(i_t);
+    match rule {
+        UpdateRule::Paper { eta } => {
+            let err = dot(q_row, h.probs()) as f64 - dot(q_row, &state.p) as f64;
+            (-(eta) * (-err).signum()) as f32 // s = −η·sgn(⟨q,p⟩−⟨q,h⟩) = +η·sgn(err)
+        }
+        UpdateRule::Hardt => {
+            let sens = 1.0 / h.record_count() as f64;
+            // Clip the noisy measurement to the query's range [0,1] (as in
+            // Hardt et al.'s implementation) — unbounded Laplace noise at
+            // small ε·n would otherwise blow up the multiplicative update.
+            let m_t = (dot(q_row, h.probs()) as f64 + rng.laplace(sens / (eps0 / 2.0)))
+                .clamp(0.0, 1.0);
+            let s = (m_t - dot(q_row, &state.p) as f64) / 2.0;
+            s as f32
+        }
+    }
+}
+
+/// Run Algorithm 1. `backend` supplies the dense numeric ops.
+pub fn run_classic(
+    cfg: &MwemConfig,
+    q: &QuerySet,
+    h: &Histogram,
+    backend: &mut dyn MwemBackend,
+) -> MwemResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut state = MwuState::new(q.u());
+    let mut accountant = Accountant::new(cfg.delta);
+    let eps0 = cfg.eps0();
+    let sens = 1.0 / h.record_count() as f64;
+    // Hardt splits the round budget between EM and the measurement.
+    let eps_em = match cfg.update {
+        UpdateRule::Paper { .. } => eps0,
+        UpdateRule::Hardt => eps0 / 2.0,
+    };
+
+    let mut stats = Vec::new();
+    let started = Instant::now();
+    let mut select_total = Duration::ZERO;
+    let mut work_total = 0usize;
+
+    for t in 0..cfg.t {
+        let d: Vec<f32> =
+            h.probs().iter().zip(state.p.iter()).map(|(&a, &b)| a - b).collect();
+
+        let sel_started = Instant::now();
+        let scores = backend.abs_scores(q, &d);
+        let i_t = exponential_mechanism(&mut rng, &scores, eps_em, sens);
+        let sel_time = sel_started.elapsed();
+        select_total += sel_time;
+        work_total += q.m();
+        accountant.record(eps0, 0.0);
+
+        let s = measured_update(&mut rng, cfg.update, q, h, &state, i_t, eps0);
+        let c = q.query(i_t).to_vec();
+        state.update(backend, &c, s);
+
+        if cfg.log_every > 0 && (t + 1) % cfg.log_every == 0 {
+            stats.push(IterStat {
+                iter: t + 1,
+                max_error_avg: q.max_error(h.probs(), &state.p_avg()),
+                max_error_cur: q.max_error(h.probs(), &state.p),
+                selected: i_t,
+                selection_work: q.m(),
+                selection_time: sel_time,
+            });
+        }
+    }
+
+    let total_time = started.elapsed();
+    MwemResult {
+        p_avg: state.p_avg(),
+        p_final: state.p,
+        stats,
+        total_time,
+        avg_select_time: select_total / cfg.t.max(1) as u32,
+        avg_select_work: work_total as f64 / cfg.t.max(1) as f64,
+        eps0,
+        privacy_spent: accountant.best_total(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::VectorSet;
+    use crate::mwem::NativeBackend;
+    use crate::workloads::linear_queries::{gaussian_histogram, binary_queries};
+
+    #[test]
+    fn error_decreases_on_easy_instance() {
+        let u = 128;
+        let mut rng = Rng::new(1);
+        let h = gaussian_histogram(&mut rng, u, 500);
+        let q = binary_queries(&mut rng, 60, u);
+        let mut cfg = MwemConfig::paper(300, u, 1.0, 1e-3, 7);
+        cfg.log_every = 50;
+        let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+
+        let p0 = vec![1.0 / u as f32; u];
+        let initial = q.max_error(h.probs(), &p0);
+        let last = res.stats.last().unwrap();
+        assert!(
+            last.max_error_avg < initial * 0.8,
+            "initial {initial} final {}",
+            last.max_error_avg
+        );
+        assert!((res.p_avg.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn hardt_rule_also_converges() {
+        let u = 128;
+        let mut rng = Rng::new(2);
+        let h = gaussian_histogram(&mut rng, u, 2_000);
+        let q = binary_queries(&mut rng, 60, u);
+        let mut cfg = MwemConfig::paper(300, u, 2.0, 1e-3, 8);
+        cfg.update = UpdateRule::Hardt;
+        cfg.log_every = 300;
+        let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let p0 = vec![1.0 / u as f32; u];
+        let initial = q.max_error(h.probs(), &p0);
+        assert!(res.stats.last().unwrap().max_error_avg < initial);
+    }
+
+    /// Regression: tiny ε·n with the Hardt rule must not blow up the
+    /// weights (unclipped Laplace noise once drove w → inf → NaN scores →
+    /// an unbounded geometric-skip loop in the lazy tail sampler).
+    #[test]
+    fn hardt_rule_stays_finite_under_huge_noise() {
+        let u = 64;
+        let mut rng = Rng::new(3);
+        let h = gaussian_histogram(&mut rng, u, 30); // n=30 → large noise scale
+        let q = binary_queries(&mut rng, 40, u);
+        let mut cfg = MwemConfig::paper(800, u, 1.0, 1e-3, 9);
+        cfg.update = UpdateRule::Hardt;
+        let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        assert!(res.p_avg.iter().all(|x| x.is_finite()));
+        assert!(res.p_final.iter().all(|x| x.is_finite()));
+        assert!((res.p_final.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+    }
+
+    /// MWU weights are rebased each round — no drift over long horizons.
+    #[test]
+    fn weights_stay_bounded_over_many_rounds() {
+        let u = 32;
+        let mut rng = Rng::new(4);
+        let h = gaussian_histogram(&mut rng, u, 500);
+        let q = binary_queries(&mut rng, 30, u);
+        let cfg = MwemConfig::paper(5_000, u, 1.0, 1e-3, 11);
+        let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        assert!(res.p_final.iter().all(|x| x.is_finite() && *x >= 0.0));
+    }
+
+    #[test]
+    fn accountant_tracks_t_rounds() {
+        let u = 16;
+        let h = Histogram::uniform(u, 100);
+        let q = QuerySet::new(VectorSet::new(vec![0.5; 8 * u], 8, u));
+        let cfg = MwemConfig::paper(25, u, 1.0, 1e-3, 3);
+        let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let (eps_spent, _) = res.privacy_spent;
+        assert!(eps_spent > 0.0);
+        // 25 rounds at eps0 each, basic-composed upper bound
+        assert!(eps_spent <= 25.0 * res.eps0 + 1e-9);
+    }
+}

@@ -1,0 +1,225 @@
+//! Fast-MWEM (Algorithm 2): MWEM with the lazy exponential mechanism.
+//!
+//! Identical MWU loop to Algorithm 1; the only change is the selection
+//! oracle — `LazyEM` backed by a k-MIPS index over the query vectors —
+//! which drops the per-round selection cost from Θ(m·U) to Θ(√m·U)
+//! expected (Theorem 3.3).
+
+use super::classic::{measured_update, IterStat, MwemConfig, MwemResult};
+use super::{Histogram, MwemBackend, MwuState, QuerySet};
+use crate::dp::Accountant;
+use crate::lazy::{LazyEm, ScoreTransform};
+use crate::mips::{build_index, IndexKind, MipsIndex};
+use crate::mwem::classic::UpdateRule;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct FastMwemConfig {
+    pub base: MwemConfig,
+    pub index: IndexKind,
+    /// Top-k size (defaults to ⌈√m⌉ per the paper).
+    pub k: Option<usize>,
+    /// Algorithm 6's margin reduction `c` (0 = Algorithms 4/5 behaviour).
+    pub margin_slack: f64,
+}
+
+impl FastMwemConfig {
+    pub fn new(base: MwemConfig, index: IndexKind) -> Self {
+        FastMwemConfig { base, index, k: None, margin_slack: 0.0 }
+    }
+}
+
+/// Extra diagnostics specific to the lazy mechanism.
+#[derive(Debug, Default, Clone)]
+pub struct LazyDiagnostics {
+    /// Per-round C (tail sample count) — Figure 6's subject.
+    pub tail_counts: Vec<usize>,
+    /// Per-round margin B.
+    pub margins: Vec<f64>,
+    /// Index build time.
+    pub build_time: Duration,
+}
+
+pub struct FastMwemOutput {
+    pub result: MwemResult,
+    pub lazy: LazyDiagnostics,
+}
+
+/// Run Algorithm 2. The index is built once (the paper's preprocessing) and
+/// queried every round with the evolving difference vector d = h − p.
+pub fn run_fast(
+    cfg: &FastMwemConfig,
+    q: &QuerySet,
+    h: &Histogram,
+    backend: &mut dyn MwemBackend,
+) -> FastMwemOutput {
+    let build_started = Instant::now();
+    let index = build_index(cfg.index, q.vectors().clone(), cfg.base.seed ^ 0x5EED);
+    let build_time = build_started.elapsed();
+    run_fast_with_index(cfg, q, h, backend, index.as_ref(), build_time)
+}
+
+/// Same as [`run_fast`] but with a caller-supplied (pre-built) index, so
+/// benchmark sweeps can amortize index construction across runs.
+pub fn run_fast_with_index(
+    cfg: &FastMwemConfig,
+    q: &QuerySet,
+    h: &Histogram,
+    backend: &mut dyn MwemBackend,
+    index: &dyn MipsIndex,
+    build_time: Duration,
+) -> FastMwemOutput {
+    let mut rng = crate::util::rng::Rng::new(cfg.base.seed);
+    let mut state = MwuState::new(q.u());
+    let mut accountant = Accountant::new(cfg.base.delta);
+    let eps0 = cfg.base.eps0();
+    let sens = 1.0 / h.record_count() as f64;
+    let eps_em = match cfg.base.update {
+        UpdateRule::Paper { .. } => eps0,
+        UpdateRule::Hardt => eps0 / 2.0,
+    };
+
+    let mut em = LazyEm::new(index, q.vectors(), ScoreTransform::Abs)
+        .with_margin_slack(cfg.margin_slack);
+    if let Some(k) = cfg.k {
+        em = em.with_k(k);
+    }
+
+    let mut stats = Vec::new();
+    let mut lazy = LazyDiagnostics { build_time, ..Default::default() };
+    let started = Instant::now();
+    let mut select_total = Duration::ZERO;
+    let mut work_total = 0usize;
+
+    for t in 0..cfg.base.t {
+        let d: Vec<f32> =
+            h.probs().iter().zip(state.p.iter()).map(|(&a, &b)| a - b).collect();
+
+        let sel_started = Instant::now();
+        let sample = em.select(&mut rng, &d, eps_em, sens);
+        let sel_time = sel_started.elapsed();
+        select_total += sel_time;
+        work_total += sample.work;
+        accountant.record(eps0, 0.0);
+        lazy.tail_counts.push(sample.tail_count);
+        lazy.margins.push(sample.b);
+
+        let i_t = sample.index;
+        let s = measured_update(&mut rng, cfg.base.update, q, h, &state, i_t, eps0);
+        let c = q.query(i_t).to_vec();
+        state.update(backend, &c, s);
+
+        if cfg.base.log_every > 0 && (t + 1) % cfg.base.log_every == 0 {
+            stats.push(IterStat {
+                iter: t + 1,
+                max_error_avg: q.max_error(h.probs(), &state.p_avg()),
+                max_error_cur: q.max_error(h.probs(), &state.p),
+                selected: i_t,
+                selection_work: sample.work,
+                selection_time: sel_time,
+            });
+        }
+    }
+
+    let total_time = started.elapsed();
+    let t = cfg.base.t.max(1);
+    FastMwemOutput {
+        result: MwemResult {
+            p_avg: state.p_avg(),
+            p_final: state.p,
+            stats,
+            total_time,
+            avg_select_time: select_total / t as u32,
+            avg_select_work: work_total as f64 / t as f64,
+            eps0,
+            privacy_spent: accountant.best_total(),
+        },
+        lazy,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mwem::NativeBackend;
+    use crate::util::rng::Rng;
+    use crate::workloads::linear_queries::{binary_queries, gaussian_histogram};
+
+    fn workload(u: usize, m: usize, seed: u64) -> (Histogram, QuerySet) {
+        let mut rng = Rng::new(seed);
+        let h = gaussian_histogram(&mut rng, u, 500);
+        let q = binary_queries(&mut rng, m, u);
+        (h, q)
+    }
+
+    #[test]
+    fn fast_flat_matches_classic_error_closely() {
+        // Figure 2's claim: Fast-MWEM(flat) ≈ MWEM in error.
+        let (h, q) = workload(128, 80, 1);
+        let mut cfg = MwemConfig::paper(400, 128, 1.0, 1e-3, 11);
+        cfg.log_every = 400;
+        let classic = crate::mwem::run_classic(&cfg, &q, &h, &mut NativeBackend);
+        let fast = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Flat),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let e_classic = classic.stats.last().unwrap().max_error_avg;
+        let e_fast = fast.result.stats.last().unwrap().max_error_avg;
+        assert!(
+            (e_classic - e_fast).abs() < 0.1,
+            "classic {e_classic} fast {e_fast}"
+        );
+    }
+
+    #[test]
+    fn fast_selection_work_is_sublinear() {
+        let (h, q) = workload(64, 2_500, 2);
+        let mut cfg = MwemConfig::paper(30, 64, 1.0, 1e-3, 5);
+        cfg.log_every = 0;
+        let fast = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Flat),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        // √2500 = 50; expected work ≈ k + C ≤ a small multiple of √m
+        assert!(
+            fast.result.avg_select_work < 8.0 * 50.0,
+            "avg work {}",
+            fast.result.avg_select_work
+        );
+    }
+
+    #[test]
+    fn hnsw_index_converges_too() {
+        let (h, q) = workload(96, 400, 3);
+        let mut cfg = MwemConfig::paper(200, 96, 1.0, 1e-3, 13);
+        cfg.log_every = 200;
+        let fast = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Hnsw),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let p0 = vec![1.0 / 96.0f32; 96];
+        let initial = q.max_error(h.probs(), &p0);
+        let e = fast.result.stats.last().unwrap().max_error_avg;
+        assert!(e < initial, "initial {initial} fast-hnsw {e}");
+    }
+
+    #[test]
+    fn diagnostics_are_recorded() {
+        let (h, q) = workload(32, 100, 4);
+        let cfg = MwemConfig::paper(10, 32, 1.0, 1e-3, 17);
+        let fast = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Ivf),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        assert_eq!(fast.lazy.tail_counts.len(), 10);
+        assert_eq!(fast.lazy.margins.len(), 10);
+    }
+}

@@ -1,0 +1,71 @@
+//! Normalized histogram representation of a dataset (§3.1).
+
+/// `h_x = |{i : x_i = x}| / n` over a finite domain of size U.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    probs: Vec<f32>,
+    /// Number of underlying records (drives EM sensitivity 1/n).
+    n: usize,
+}
+
+impl Histogram {
+    /// Build from raw domain-element samples.
+    pub fn from_samples(samples: &[usize], u: usize) -> Self {
+        let mut counts = vec![0u64; u];
+        for &s in samples {
+            assert!(s < u, "sample {s} outside domain [0,{u})");
+            counts[s] += 1;
+        }
+        Self::from_counts(&counts)
+    }
+
+    pub fn from_counts(counts: &[u64]) -> Self {
+        let n: u64 = counts.iter().sum();
+        assert!(n > 0, "empty histogram");
+        let probs = counts.iter().map(|&c| c as f32 / n as f32).collect();
+        Histogram { probs, n: n as usize }
+    }
+
+    /// Uniform distribution with a nominal record count.
+    pub fn uniform(u: usize, n: usize) -> Self {
+        Histogram { probs: vec![1.0 / u as f32; u], n }
+    }
+
+    pub fn probs(&self) -> &[f32] {
+        &self.probs
+    }
+
+    pub fn domain_size(&self) -> usize {
+        self.probs.len()
+    }
+
+    /// Number of records — EM score sensitivity is 1/n.
+    pub fn record_count(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_samples_normalizes() {
+        let h = Histogram::from_samples(&[0, 0, 1, 3], 4);
+        assert_eq!(h.probs(), &[0.5, 0.25, 0.0, 0.25]);
+        assert_eq!(h.record_count(), 4);
+        assert_eq!(h.domain_size(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_domain_sample_panics() {
+        Histogram::from_samples(&[5], 4);
+    }
+
+    #[test]
+    fn uniform_sums_to_one() {
+        let h = Histogram::uniform(10, 100);
+        assert!((h.probs().iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,123 @@
+//! Private linear query release: classic MWEM (Algorithm 1) and Fast-MWEM
+//! (Algorithm 2).
+//!
+//! Both algorithms share the MWU state ([`MwuState`]) and differ only in
+//! how the exponential-mechanism "adversary" is implemented: an exhaustive
+//! O(m) scan (classic) vs the Θ(√m) [`crate::lazy::LazyEm`] (fast).
+//!
+//! The dense numeric steps (score matvec, multiplicative update) go through
+//! the [`MwemBackend`] trait so they can run either natively or through the
+//! AOT XLA artifacts ([`crate::runtime::XlaBackend`]).
+
+pub mod classic;
+pub mod fast;
+pub mod histogram;
+pub mod queries;
+
+pub use classic::{run_classic, IterStat, MwemConfig, MwemResult, UpdateRule};
+pub use fast::{run_fast, FastMwemConfig};
+pub use histogram::Histogram;
+pub use queries::QuerySet;
+
+use crate::util::math::normalize_l1;
+
+/// Pluggable dense-compute backend for MWEM's two hot numeric steps.
+pub trait MwemBackend {
+    /// `|Q · d|` for all m queries.
+    fn abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Vec<f32>;
+
+    /// `w ← w · exp(s·c)`; returns the normalized distribution p = w/‖w‖₁.
+    fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32>;
+}
+
+/// Pure-Rust backend (no XLA round trip) — used by the large benchmark
+/// sweeps where per-call PJRT overhead would distort scaling measurements.
+pub struct NativeBackend;
+
+impl MwemBackend for NativeBackend {
+    fn abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Vec<f32> {
+        q.abs_scores(d)
+    }
+
+    fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32> {
+        for (wi, &ci) in w.iter_mut().zip(c.iter()) {
+            *wi *= (s * ci).exp();
+        }
+        let mut p = w.to_vec();
+        normalize_l1(&mut p);
+        p
+    }
+}
+
+/// Multiplicative-weights state shared by classic and fast MWEM.
+pub struct MwuState {
+    /// Unnormalized weights over the domain.
+    pub w: Vec<f32>,
+    /// Current synthetic distribution p = w/‖w‖₁.
+    pub p: Vec<f32>,
+    /// Running sum of p across iterations (for the averaged output p̂).
+    pub p_sum: Vec<f64>,
+    pub iters: usize,
+}
+
+impl MwuState {
+    pub fn new(u: usize) -> Self {
+        MwuState {
+            w: vec![1.0; u],
+            p: vec![1.0 / u as f32; u],
+            p_sum: vec![0.0; u],
+            iters: 0,
+        }
+    }
+
+    /// Apply one multiplicative update through `backend` and accumulate the
+    /// running average.
+    pub fn update(&mut self, backend: &mut dyn MwemBackend, c: &[f32], s: f32) {
+        self.p = backend.mwu_update(&mut self.w, c, s);
+        // Rebase the weights onto the normalized distribution (MWU only
+        // depends on weight ratios): over 10⁴+ rounds the raw products
+        // would drift to f32 overflow/underflow.
+        let u = self.w.len() as f32;
+        for (wi, &pi) in self.w.iter_mut().zip(self.p.iter()) {
+            *wi = pi * u;
+        }
+        for (acc, &pi) in self.p_sum.iter_mut().zip(self.p.iter()) {
+            *acc += pi as f64;
+        }
+        self.iters += 1;
+    }
+
+    /// The averaged synthetic distribution p̂ = (1/T)Σₜ p⁽ᵗ⁾.
+    pub fn p_avg(&self) -> Vec<f32> {
+        if self.iters == 0 {
+            return self.p.clone();
+        }
+        let inv = 1.0 / self.iters as f64;
+        self.p_sum.iter().map(|&x| (x * inv) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mwu_state_updates_and_averages() {
+        let mut st = MwuState::new(4);
+        let mut be = NativeBackend;
+        st.update(&mut be, &[1.0, 0.0, 0.0, 0.0], -1.0);
+        assert!((st.p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(st.p[0] < st.p[1]); // coordinate 0 was down-weighted
+        let avg = st.p_avg();
+        assert!((avg.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn empty_state_avg_is_uniform() {
+        let st = MwuState::new(5);
+        let avg = st.p_avg();
+        for &x in &avg {
+            assert!((x - 0.2).abs() < 1e-6);
+        }
+    }
+}

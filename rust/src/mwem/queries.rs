@@ -1,0 +1,88 @@
+//! Linear query sets: `Q ∈ [0,1]^{m×U}`, one row per query (§3.1).
+
+use crate::mips::VectorSet;
+use crate::util::math::dot;
+
+#[derive(Clone, Debug)]
+pub struct QuerySet {
+    vs: VectorSet,
+}
+
+impl QuerySet {
+    pub fn new(vs: VectorSet) -> Self {
+        QuerySet { vs }
+    }
+
+    /// Number of queries m.
+    pub fn m(&self) -> usize {
+        self.vs.len()
+    }
+
+    /// Domain size U.
+    pub fn u(&self) -> usize {
+        self.vs.dim()
+    }
+
+    pub fn query(&self, i: usize) -> &[f32] {
+        self.vs.row(i)
+    }
+
+    pub fn vectors(&self) -> &VectorSet {
+        &self.vs
+    }
+
+    /// True answer of query i on distribution `dist`: ⟨q_i, dist⟩.
+    pub fn answer(&self, i: usize, dist: &[f32]) -> f64 {
+        dot(self.vs.row(i), dist) as f64
+    }
+
+    /// `|Q·d|` for all queries — the exhaustive EM score vector.
+    pub fn abs_scores(&self, d: &[f32]) -> Vec<f32> {
+        (0..self.m()).map(|i| dot(self.vs.row(i), d).abs()).collect()
+    }
+
+    /// Max error of a synthetic distribution: ‖Q(h − p)‖∞ (Equation 1).
+    /// Evaluation-only — never called on the private path.
+    pub fn max_error(&self, h: &[f32], p: &[f32]) -> f64 {
+        let d: Vec<f32> = h.iter().zip(p.iter()).map(|(&a, &b)| a - b).collect();
+        self.abs_scores(&d).iter().fold(0.0f64, |acc, &s| acc.max(s as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn qs() -> QuerySet {
+        // 2 queries over a domain of 3
+        QuerySet::new(VectorSet::new(vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0], 2, 3))
+    }
+
+    #[test]
+    fn answers_are_inner_products() {
+        let q = qs();
+        let dist = [0.5f32, 0.25, 0.25];
+        assert!((q.answer(0, &dist) - 0.5).abs() < 1e-9);
+        assert!((q.answer(1, &dist) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_error_is_linf() {
+        let q = qs();
+        let h = [1.0f32, 0.0, 0.0];
+        let p = [0.0f32, 1.0, 0.0];
+        // q0 error = |1-0| = 1; q1 error = |0-1| = 1
+        assert!((q.max_error(&h, &p) - 1.0).abs() < 1e-6);
+        let p2 = [0.9f32, 0.1, 0.0];
+        assert!((q.max_error(&h, &p2) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn abs_scores_match_manual() {
+        let q = qs();
+        let d = [0.2f32, -0.3, 0.1];
+        let s = q.abs_scores(&d);
+        assert!((s[0] - 0.2).abs() < 1e-6);
+        assert!((s[1] - 0.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,109 @@
+//! [`XlaBackend`]: the [`crate::mwem::MwemBackend`] implementation that runs
+//! MWEM's dense numeric steps through the AOT artifacts.
+//!
+//! The query matrix Q is uploaded to the device once (padded to the
+//! artifact's shape grid) and reused across iterations via `execute_b`, so
+//! the per-round transfer is only the O(U) difference vector.
+
+use super::engine::XlaEngine;
+use crate::mwem::{MwemBackend, QuerySet};
+use anyhow::{anyhow, Result};
+use xla::PjRtBuffer;
+
+pub struct XlaBackend {
+    engine: XlaEngine,
+    /// Device-resident padded Q + its artifact binding.
+    q_cache: Option<QCache>,
+    /// Number of XLA executions performed (for perf accounting).
+    pub calls: usize,
+}
+
+struct QCache {
+    buf: PjRtBuffer,
+    art: String,
+    art_u: usize,
+    m: usize,
+    u: usize,
+}
+
+impl XlaBackend {
+    pub fn new(engine: XlaEngine) -> Self {
+        XlaBackend { engine, q_cache: None, calls: 0 }
+    }
+
+    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self::new(XlaEngine::load(artifacts_dir)?))
+    }
+
+    pub fn engine(&self) -> &XlaEngine {
+        &self.engine
+    }
+
+    fn ensure_q(&mut self, q: &QuerySet) -> Result<()> {
+        let (m, u) = (q.m(), q.u());
+        if let Some(c) = &self.q_cache {
+            if c.m == m && c.u == u {
+                return Ok(());
+            }
+        }
+        let entry = self
+            .engine
+            .manifest()
+            .best_scores(m, u)
+            .ok_or_else(|| anyhow!("no scores artifact fits m={m}, u={u}"))?;
+        let (art_m, art_u) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
+        let name = entry.name.clone();
+        let padded = XlaEngine::pad_matrix(q.vectors().as_slice(), m, u, art_m, art_u);
+        let buf = self.engine.buffer_f32(&padded, &[art_m, art_u])?;
+        self.q_cache = Some(QCache { buf, art: name, art_u, m, u });
+        Ok(())
+    }
+
+    fn try_abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Result<Vec<f32>> {
+        self.ensure_q(q)?;
+        let cache = self.q_cache.as_ref().unwrap();
+        let d_pad = XlaEngine::pad_vec(d, cache.art_u);
+        let d_buf = self.engine.buffer_f32(&d_pad, &[cache.art_u])?;
+        let art = cache.art.clone();
+        let m = cache.m;
+        let cache = self.q_cache.as_ref().unwrap();
+        let outs = self.engine.execute(&art, &[&cache.buf, &d_buf])?;
+        self.calls += 1;
+        Ok(outs[0][..m].to_vec())
+    }
+
+    fn try_mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Result<Vec<f32>> {
+        let u = w.len();
+        let entry = self
+            .engine
+            .manifest()
+            .best_mwu(u)
+            .ok_or_else(|| anyhow!("no mwu artifact fits u={u}"))?;
+        let art_u = entry.inputs[0].shape[0];
+        let name = entry.name.clone();
+        let w_pad = XlaEngine::pad_vec(w, art_u);
+        let c_pad = XlaEngine::pad_vec(c, art_u);
+        let w_buf = self.engine.buffer_f32(&w_pad, &[art_u])?;
+        let c_buf = self.engine.buffer_f32(&c_pad, &[art_u])?;
+        let s_buf = self.engine.buffer_scalar_f32(s)?;
+        let outs = self.engine.execute(&name, &[&w_buf, &c_buf, &s_buf])?;
+        self.calls += 1;
+        w.copy_from_slice(&outs[0][..u]);
+        Ok(outs[1][..u].to_vec())
+    }
+}
+
+impl MwemBackend for XlaBackend {
+    fn abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Vec<f32> {
+        self.try_abs_scores(q, d)
+            .expect("XLA abs_scores failed — are artifacts built for this shape?")
+    }
+
+    fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32> {
+        self.try_mwu_update(w, c, s)
+            .expect("XLA mwu_update failed — are artifacts built for this shape?")
+    }
+}
+
+// Integration tests (requiring built artifacts) live in
+// rust/tests/runtime_integration.rs.

@@ -1,0 +1,162 @@
+//! PJRT execution engine: compile-once cache over the HLO-text artifacts.
+
+use super::manifest::{ArtifactEntry, Manifest};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub struct XlaEngine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl XlaEngine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir.as_ref())?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(XlaEngine { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .entries
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.entry(name)?.clone();
+            let proto = HloModuleProto::from_text_file(
+                entry.file.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {:?}: {e:?}", entry.file))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Upload an f32 tensor to the device (reusable across executions).
+    pub fn buffer_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("host→device: {e:?}"))
+    }
+
+    // Scalars go through buffer_from_host_buffer with empty dims:
+    // buffer_from_host_literal(Literal::scalar(..)) aborts inside
+    // xla_extension 0.5.1 ("Unhandled primitive type") when the process has
+    // created more than one PJRT client.
+    pub fn buffer_scalar_f32(&self, x: f32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[x], &[], None)
+            .map_err(|e| anyhow!("scalar f32: {e:?}"))
+    }
+
+    pub fn buffer_scalar_i32(&self, x: i32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(&[x], &[], None)
+            .map_err(|e| anyhow!("scalar i32: {e:?}"))
+    }
+
+    /// Execute artifact `name` with device-resident arguments; returns all
+    /// outputs as f32 vectors (artifacts are lowered with return_tuple=True).
+    pub fn execute(&mut self, name: &str, args: &[&PjRtBuffer]) -> Result<Vec<Vec<f32>>> {
+        let n_outputs = self.entry(name)?.outputs.len();
+        let exe = self.executable(name)?;
+        let results = exe.execute_b(args).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = results[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("device→host: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == n_outputs,
+            "artifact {name}: expected {n_outputs} outputs, got {}",
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Convenience: execute with host slices (one-shot upload).
+    pub fn execute_host(
+        &mut self,
+        name: &str,
+        args: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let bufs: Vec<PjRtBuffer> = args
+            .iter()
+            .map(|(data, dims)| self.buffer_f32(data, dims))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        self.execute(name, &refs)
+    }
+
+    /// Pad a (rows × cols) matrix into a (target_rows × target_cols) zero
+    /// matrix — the shape-grid contract with `aot.py` (padded rows/cols are
+    /// zero so scores/updates are unaffected; see model.py docstrings).
+    pub fn pad_matrix(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        target_rows: usize,
+        target_cols: usize,
+    ) -> Vec<f32> {
+        assert!(rows <= target_rows && cols <= target_cols);
+        let mut out = vec![0f32; target_rows * target_cols];
+        for r in 0..rows {
+            out[r * target_cols..r * target_cols + cols]
+                .copy_from_slice(&data[r * cols..(r + 1) * cols]);
+        }
+        out
+    }
+
+    /// Pad a vector with zeros to `target` length.
+    pub fn pad_vec(data: &[f32], target: usize) -> Vec<f32> {
+        assert!(data.len() <= target);
+        let mut out = vec![0f32; target];
+        out[..data.len()].copy_from_slice(data);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_matrix_places_rows() {
+        let m = XlaEngine::pad_matrix(&[1.0, 2.0, 3.0, 4.0], 2, 2, 3, 4);
+        assert_eq!(
+            m,
+            vec![1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+        );
+    }
+
+    #[test]
+    fn pad_vec_appends_zeros() {
+        assert_eq!(XlaEngine::pad_vec(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    // Execution tests live in rust/tests/runtime_integration.rs (they need
+    // the artifacts directory built by `make artifacts`).
+}

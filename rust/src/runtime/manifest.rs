@@ -1,0 +1,184 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub grid: String,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let version =
+            j.get("version").and_then(Json::as_usize).ok_or_else(|| anyhow!("no version"))?;
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let grid =
+            j.get("grid").and_then(Json::as_str).unwrap_or("default").to_string();
+        let mut entries = BTreeMap::new();
+        for e in j.get("entries").and_then(Json::as_arr).ok_or_else(|| anyhow!("no entries"))? {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry without name"))?
+                .to_string();
+            let file = dir.join(
+                e.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("entry without file"))?,
+            );
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("no inputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("no outputs"))?
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(name.clone(), ArtifactEntry { name, file, inputs, outputs });
+        }
+        Ok(Manifest { version, grid, entries })
+    }
+
+    /// Smallest `scores_m*_u*` artifact that fits (m, u), if any.
+    pub fn best_scores(&self, m: usize, u: usize) -> Option<&ArtifactEntry> {
+        self.best_2d("scores_m", m, u)
+    }
+
+    /// Smallest `step_m*_u*` artifact that fits (m, u), if any.
+    pub fn best_step(&self, m: usize, u: usize) -> Option<&ArtifactEntry> {
+        self.best_2d("step_m", m, u)
+    }
+
+    /// Smallest `dot_m*_d*` artifact that fits (m, d), if any.
+    pub fn best_dot(&self, m: usize, d: usize) -> Option<&ArtifactEntry> {
+        self.best_2d("dot_m", m, d)
+    }
+
+    /// Smallest `mwu_u*` artifact with domain ≥ u.
+    pub fn best_mwu(&self, u: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.name.starts_with("mwu_u"))
+            .filter(|e| e.inputs[0].shape[0] >= u)
+            .min_by_key(|e| e.inputs[0].shape[0])
+    }
+
+    fn best_2d(&self, prefix: &str, a: usize, b: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| e.name.starts_with(prefix))
+            .filter(|e| {
+                let s = &e.inputs[if prefix.starts_with("step") { 1 } else { 0 }].shape;
+                s.len() == 2 && s[0] >= a && s[1] >= b
+            })
+            .min_by_key(|e| {
+                let s = &e.inputs[if prefix.starts_with("step") { 1 } else { 0 }].shape;
+                s[0] * s[1]
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = r#"{
+          "version": 1, "grid": "test",
+          "entries": [
+            {"name": "scores_m64_u32", "file": "scores_m64_u32.hlo.txt",
+             "inputs": [{"shape": [64, 32], "dtype": "float32"},
+                         {"shape": [32], "dtype": "float32"}],
+             "outputs": [{"shape": [64], "dtype": "float32"}]},
+            {"name": "scores_m128_u64", "file": "scores_m128_u64.hlo.txt",
+             "inputs": [{"shape": [128, 64], "dtype": "float32"},
+                         {"shape": [64], "dtype": "float32"}],
+             "outputs": [{"shape": [128], "dtype": "float32"}]},
+            {"name": "mwu_u64", "file": "mwu_u64.hlo.txt",
+             "inputs": [{"shape": [64], "dtype": "float32"},
+                         {"shape": [64], "dtype": "float32"},
+                         {"shape": [], "dtype": "float32"}],
+             "outputs": [{"shape": [64], "dtype": "float32"},
+                          {"shape": [64], "dtype": "float32"}]}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_selects_best_fit() {
+        let dir = std::env::temp_dir().join("fast_mwem_manifest_test");
+        write_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        // exact fit
+        assert_eq!(m.best_scores(64, 32).unwrap().name, "scores_m64_u32");
+        // needs padding → larger artifact
+        assert_eq!(m.best_scores(65, 32).unwrap().name, "scores_m128_u64");
+        assert_eq!(m.best_scores(10, 40).unwrap().name, "scores_m128_u64");
+        // too large → none
+        assert!(m.best_scores(1024, 1024).is_none());
+        assert_eq!(m.best_mwu(10).unwrap().name, "mwu_u64");
+        assert!(m.best_mwu(100).is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load(Path::new("/nonexistent/x")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime: loads the AOT HLO-text artifacts produced by `make artifacts`
+//! and executes them on the PJRT CPU client via the `xla` crate.
+//!
+//! Python never runs here — artifacts are compiled once per process
+//! ([`XlaEngine`] caches executables) and the request path is pure Rust.
+
+pub mod backend;
+pub mod engine;
+pub mod manifest;
+
+pub use backend::XlaBackend;
+pub use engine::XlaEngine;
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};

@@ -1,0 +1,154 @@
+//! Exact Binomial(n, p) sampling via geometric skipping.
+//!
+//! Step 9 of Algorithm 2 needs `C ~ Bin(m - √m, 1 - exp(-exp(-B)))` where
+//! the success probability is tiny (E[C] = Θ(√m)); enumerating n Bernoulli
+//! trials would reintroduce the Θ(m) cost the paper removes. Geometric
+//! skipping jumps directly between successes: the gap until the next
+//! success is `⌊ln U / ln(1-p)⌋ + 1`, giving O(np) expected time and an
+//! exact Binomial distribution (it is just a re-parametrization of the
+//! i.i.d. Bernoulli sequence).
+//!
+//! For p > 1/2 we sample the complement so the expected cost is
+//! O(n·min(p, 1-p)).
+
+use crate::util::rng::Rng;
+
+/// Draw an exact sample from Binomial(n, p).
+/// Non-finite p is treated as 0 (defensive: a NaN success probability must
+/// not turn the geometric skip into an unbounded loop).
+pub fn binomial(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    debug_assert!(!p.is_nan(), "binomial called with NaN probability");
+    if n == 0 || !(p > 0.0) {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    if p > 0.5 {
+        return n - binomial_skip(rng, n, 1.0 - p);
+    }
+    binomial_skip(rng, n, p)
+}
+
+fn binomial_skip(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    // log(1-p) via log1p for accuracy at small p.
+    let log_q = (-p).ln_1p();
+    debug_assert!(log_q < 0.0);
+    let mut count = 0u64;
+    let mut pos = 0u64; // trials consumed
+    loop {
+        let u = rng.f64_open();
+        // gap ∈ {1, 2, ...}: number of trials up to and including the next success
+        let gap_f = (u.ln() / log_q).floor() + 1.0;
+        if gap_f > (n - pos) as f64 {
+            return count;
+        }
+        pos += gap_f as u64;
+        if pos > n {
+            return count;
+        }
+        count += 1;
+        if pos == n {
+            return count;
+        }
+    }
+}
+
+/// Positions (0-based trial indices) of the successes of a Bernoulli(p) run
+/// of length n — used to sample the tail set T of Algorithms 4–6 in one
+/// pass (each element of [n]\S independently "wins" with probability p).
+pub fn bernoulli_positions(rng: &mut Rng, n: u64, p: f64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if n == 0 || p <= 0.0 {
+        return out;
+    }
+    if p >= 1.0 {
+        return (0..n).collect();
+    }
+    let log_q = (-p).ln_1p();
+    let mut pos: u64 = 0;
+    loop {
+        let u = rng.f64_open();
+        let gap_f = (u.ln() / log_q).floor() + 1.0;
+        if gap_f > (n - pos) as f64 {
+            return out;
+        }
+        pos += gap_f as u64;
+        if pos > n {
+            return out;
+        }
+        out.push(pos - 1);
+        if pos == n {
+            return out;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_cases() {
+        let mut r = Rng::new(1);
+        assert_eq!(binomial(&mut r, 0, 0.3), 0);
+        assert_eq!(binomial(&mut r, 10, 0.0), 0);
+        assert_eq!(binomial(&mut r, 10, 1.0), 10);
+    }
+
+    #[test]
+    fn mean_and_variance_small_p() {
+        let mut r = Rng::new(2);
+        let (n, p) = (10_000u64, 0.001);
+        let trials = 20_000;
+        let (mut sum, mut sq) = (0.0f64, 0.0f64);
+        for _ in 0..trials {
+            let c = binomial(&mut r, n, p) as f64;
+            sum += c;
+            sq += c * c;
+        }
+        let mean = sum / trials as f64;
+        let var = sq / trials as f64 - mean * mean;
+        let want_mean = n as f64 * p; // 10
+        let want_var = n as f64 * p * (1.0 - p);
+        assert!((mean - want_mean).abs() < 0.15, "mean {mean}");
+        assert!((var - want_var).abs() < 0.5, "var {var}");
+    }
+
+    #[test]
+    fn mean_large_p_uses_complement() {
+        let mut r = Rng::new(3);
+        let (n, p) = (1_000u64, 0.9);
+        let trials = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            sum += binomial(&mut r, n, p) as f64;
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - 900.0).abs() < 1.0, "mean {mean}");
+    }
+
+    #[test]
+    fn positions_match_count_distribution() {
+        let mut r = Rng::new(4);
+        let (n, p) = (5_000u64, 0.002);
+        let trials = 5_000;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let pos = bernoulli_positions(&mut r, n, p);
+            assert!(pos.windows(2).all(|w| w[0] < w[1]), "sorted distinct");
+            assert!(pos.iter().all(|&i| i < n));
+            sum += pos.len() as f64;
+        }
+        let mean = sum / trials as f64;
+        assert!((mean - 10.0).abs() < 0.4, "mean {mean}");
+    }
+
+    #[test]
+    fn count_is_never_above_n() {
+        let mut r = Rng::new(5);
+        for _ in 0..1_000 {
+            assert!(binomial(&mut r, 50, 0.3) <= 50);
+        }
+    }
+}

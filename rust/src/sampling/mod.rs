@@ -1,0 +1,12 @@
+//! Exact samplers backing the lazy exponential mechanism (Algorithms 4–6).
+//!
+//! All of these run on the request path in the Rust coordinator; none of
+//! them exist in the AOT artifacts (determinism of the XLA side).
+
+pub mod binomial;
+pub mod subset;
+pub mod truncated;
+
+pub use binomial::binomial;
+pub use subset::{sample_distinct, sample_distinct_excluding};
+pub use truncated::truncated_gumbel;

@@ -1,0 +1,140 @@
+//! Uniform sampling of distinct indices, with and without an exclusion set.
+//!
+//! Step 10 of Algorithm 2 samples C distinct queries from `Q \ S` where
+//! |S| = √m. Floyd's algorithm gives C distinct draws in O(C) expected
+//! time; the exclusion is handled by sampling from a compacted range of
+//! size `n - |S|` and mapping each draw past the sorted excluded indices
+//! with a binary search (O(C log |S|) total, no O(n) scan).
+
+use crate::util::rng::Rng;
+use std::collections::HashSet;
+
+/// Floyd's algorithm: `c` distinct values uniform over `[0, n)`.
+pub fn sample_distinct(rng: &mut Rng, n: usize, c: usize) -> Vec<usize> {
+    assert!(c <= n, "cannot draw {c} distinct from {n}");
+    let mut chosen: HashSet<usize> = HashSet::with_capacity(c * 2);
+    let mut out = Vec::with_capacity(c);
+    for j in (n - c)..n {
+        let t = rng.usize_below(j + 1);
+        let v = if chosen.contains(&t) { j } else { t };
+        chosen.insert(v);
+        out.push(v);
+    }
+    out
+}
+
+/// Map a rank in the compacted range `[0, n - excluded.len())` to the
+/// corresponding index of `[0, n)` that skips `excluded` (must be sorted,
+/// distinct). Binary search over the invariant
+/// `index = rank + #{e ∈ excluded : e ≤ index}`.
+pub fn rank_to_index(rank: usize, excluded_sorted: &[usize]) -> usize {
+    let mut lo = 0usize;
+    let mut hi = excluded_sorted.len();
+    // find the number of excluded elements that fall at or below the result
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if excluded_sorted[mid] <= rank + mid {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    rank + lo
+}
+
+/// `c` distinct values uniform over `[0, n) \ excluded`.
+/// `excluded` must be sorted and duplicate-free.
+pub fn sample_distinct_excluding(
+    rng: &mut Rng,
+    n: usize,
+    excluded_sorted: &[usize],
+    c: usize,
+) -> Vec<usize> {
+    let avail = n - excluded_sorted.len();
+    let ranks = sample_distinct(rng, avail, c);
+    ranks
+        .into_iter()
+        .map(|r| rank_to_index(r, excluded_sorted))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distinct_and_in_range() {
+        let mut r = Rng::new(1);
+        for _ in 0..100 {
+            let v = sample_distinct(&mut r, 50, 20);
+            let set: HashSet<_> = v.iter().cloned().collect();
+            assert_eq!(set.len(), 20);
+            assert!(v.iter().all(|&x| x < 50));
+        }
+    }
+
+    #[test]
+    fn full_draw_is_permutation_set() {
+        let mut r = Rng::new(2);
+        let v = sample_distinct(&mut r, 10, 10);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rank_mapping_skips_excluded() {
+        let excluded = vec![2, 5, 6];
+        // available indices of [0,10): 0,1,3,4,7,8,9
+        let want = [0usize, 1, 3, 4, 7, 8, 9];
+        for (rank, &idx) in want.iter().enumerate() {
+            assert_eq!(rank_to_index(rank, &excluded), idx, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn rank_mapping_empty_exclusion_is_identity() {
+        for rank in 0..20 {
+            assert_eq!(rank_to_index(rank, &[]), rank);
+        }
+    }
+
+    #[test]
+    fn excluding_never_returns_excluded() {
+        let mut r = Rng::new(3);
+        let excluded = vec![0, 3, 4, 9, 17, 18, 19];
+        for _ in 0..200 {
+            let v = sample_distinct_excluding(&mut r, 20, &excluded, 5);
+            let set: HashSet<_> = v.iter().cloned().collect();
+            assert_eq!(set.len(), 5);
+            for x in &v {
+                assert!(!excluded.contains(x), "returned excluded {x}");
+                assert!(*x < 20);
+            }
+        }
+    }
+
+    #[test]
+    fn excluding_is_uniform_over_complement() {
+        let mut r = Rng::new(4);
+        let excluded = vec![1, 2];
+        let mut counts = [0usize; 8];
+        let trials = 60_000;
+        for _ in 0..trials {
+            for x in sample_distinct_excluding(&mut r, 8, &excluded, 1) {
+                counts[x] += 1;
+            }
+        }
+        assert_eq!(counts[1] + counts[2], 0);
+        for (i, &c) in counts.iter().enumerate() {
+            if i == 1 || i == 2 {
+                continue;
+            }
+            let expect = trials / 6;
+            assert!(
+                (c as i64 - expect as i64).abs() < (expect / 10) as i64,
+                "bucket {i}: {c}"
+            );
+        }
+    }
+}

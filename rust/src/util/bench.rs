@@ -1,0 +1,104 @@
+//! Tiny benchmarking harness (the offline build vendors no criterion).
+//!
+//! `cargo bench` runs each `benches/*.rs` binary (harness = false); they
+//! use [`bench`] / [`bench_n`] for warmup + repeated timing with median and
+//! spread reporting, printing aligned rows that EXPERIMENTS.md quotes.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "  {:<44} {:>12} {:>12} {:>12}  x{}",
+            self.name,
+            fmt_dur(self.p50),
+            fmt_dur(self.mean),
+            fmt_dur(self.p90),
+            self.iters
+        );
+    }
+}
+
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!("  {:<44} {:>12} {:>12} {:>12}", "case", "p50", "mean", "p90");
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench_n<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples: Vec<Duration> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    let total: Duration = samples.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters as u32,
+        p50: samples[iters / 2],
+        p90: samples[(iters * 9) / 10],
+        min: samples[0],
+    };
+    res.print();
+    res
+}
+
+/// Auto-calibrated variant: picks an iteration count so the run takes
+/// roughly `budget` wall-clock.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // calibrate with one run
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 3_000.0) as usize;
+    bench_n(name, 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_n_reports_ordered_percentiles() {
+        let r = bench_n("noop", 2, 20, || 1 + 1);
+        assert_eq!(r.iters, 20);
+        assert!(r.min <= r.p50 && r.p50 <= r.p90);
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).ends_with("us"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with("s"));
+    }
+}

@@ -1,0 +1,65 @@
+//! Minimal CSV writer for experiment results (no external dependency).
+//!
+//! Every eval driver emits one CSV per figure under `results/`, with the
+//! same series the paper plots; EXPERIMENTS.md references these files.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (and parent dirs), writing `header` as the first row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        debug_assert_eq!(values.len(), self.cols, "column count mismatch");
+        writeln!(self.out, "{}", values.join(","))
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Convenience macro-free row builder mixing types.
+pub fn cells(parts: &[&dyn std::fmt::Display]) -> Vec<String> {
+    parts.iter().map(|p| format!("{p}")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("fast_mwem_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&cells(&[&1, &2.5])).unwrap();
+            w.row_f64(&[3.0, 4.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n3,4\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,9 @@
+//! Shared utilities: deterministic RNG, numeric helpers, CSV emission.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod math;
+pub mod rng;
+
+pub use rng::Rng;

@@ -1,0 +1,81 @@
+//! §5.1 workload: Gaussian data histogram + random binary range-style
+//! queries.
+//!
+//! * data: n points from N(U/3, U/15), clamped to the domain;
+//! * each query: a binary vector with U/4 coordinates set, positions drawn
+//!   from N(U/2, U/5).
+
+use crate::mips::VectorSet;
+use crate::mwem::{Histogram, QuerySet};
+use crate::util::rng::Rng;
+
+/// The paper's data distribution: n samples from N(U/3, U/15) over [0, U).
+pub fn gaussian_histogram(rng: &mut Rng, u: usize, n: usize) -> Histogram {
+    let mean = u as f64 / 3.0;
+    let std = u as f64 / 15.0;
+    let samples: Vec<usize> = (0..n)
+        .map(|_| {
+            let x = mean + std * rng.normal();
+            (x.round().max(0.0) as usize).min(u - 1)
+        })
+        .collect();
+    Histogram::from_samples(&samples, u)
+}
+
+/// The paper's query distribution: binary indicator vectors with ~U/4 set
+/// coordinates drawn from N(U/2, U/5).
+pub fn binary_queries(rng: &mut Rng, m: usize, u: usize) -> QuerySet {
+    let mut data = vec![0f32; m * u];
+    let mean = u as f64 / 2.0;
+    let std = u as f64 / 5.0;
+    let hits = (u / 4).max(1);
+    for qi in 0..m {
+        let row = &mut data[qi * u..(qi + 1) * u];
+        for _ in 0..hits {
+            let x = mean + std * rng.normal();
+            let idx = (x.round().max(0.0) as usize).min(u - 1);
+            row[idx] = 1.0;
+        }
+    }
+    QuerySet::new(VectorSet::new(data, m, u))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_is_distribution_concentrated_near_third() {
+        let mut rng = Rng::new(1);
+        let u = 300;
+        let h = gaussian_histogram(&mut rng, u, 5_000);
+        assert!((h.probs().iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        // mass near U/3 should dominate mass near 2U/3
+        let lo: f32 = h.probs()[60..140].iter().sum();
+        let hi: f32 = h.probs()[200..280].iter().sum();
+        assert!(lo > 0.8, "mass near U/3: {lo}");
+        assert!(hi < 0.05, "mass near 2U/3+: {hi}");
+    }
+
+    #[test]
+    fn queries_are_binary_with_bounded_support() {
+        let mut rng = Rng::new(2);
+        let u = 200;
+        let q = binary_queries(&mut rng, 20, u);
+        for i in 0..q.m() {
+            let row = q.query(i);
+            assert!(row.iter().all(|&x| x == 0.0 || x == 1.0));
+            let support = row.iter().filter(|&&x| x == 1.0).count();
+            assert!(support >= 1 && support <= u / 4, "support {support}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let q1 = binary_queries(&mut Rng::new(3), 5, 64);
+        let q2 = binary_queries(&mut Rng::new(3), 5, 64);
+        for i in 0..5 {
+            assert_eq!(q1.query(i), q2.query(i));
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! §5.2 workload: random feasibility LPs with a planted solution, plus
+//! random packing LPs for the constraint-private dense-MWU solver (§4.2).
+
+use crate::mips::VectorSet;
+use crate::util::rng::Rng;
+
+/// A feasibility LP `Ax ≤ b` over the probability simplex (x ∈ Δ(d)),
+/// with a known planted feasible point.
+#[derive(Clone, Debug)]
+pub struct LpInstance {
+    /// Constraint matrix, m × d.
+    pub a: VectorSet,
+    pub b: Vec<f32>,
+    /// The planted feasible solution (diagnostics only).
+    pub planted: Vec<f32>,
+}
+
+impl LpInstance {
+    pub fn m(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.dim()
+    }
+
+    /// Width ρ = max_ij |A_ij|.
+    pub fn width(&self) -> f64 {
+        self.a.as_slice().iter().fold(0.0f64, |acc, &x| acc.max(x.abs() as f64))
+    }
+
+    /// Fraction of constraints violated by more than `alpha`.
+    pub fn violation_fraction(&self, x: &[f32], alpha: f64) -> f64 {
+        let m = self.m();
+        let mut violated = 0usize;
+        for i in 0..m {
+            let ax = crate::util::math::dot(self.a.row(i), x) as f64;
+            if ax > self.b[i] as f64 + alpha {
+                violated += 1;
+            }
+        }
+        violated as f64 / m as f64
+    }
+
+    /// Maximum constraint violation max_i (A_i x − b_i).
+    pub fn max_violation(&self, x: &[f32]) -> f64 {
+        (0..self.m())
+            .map(|i| crate::util::math::dot(self.a.row(i), x) as f64 - self.b[i] as f64)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// The paper's generator: A ~ N(0, 1)^{m×d}, planted x* ∈ Δ(d), and
+/// b = A·x* + δ with δ_i ~ Uniform(0, slack) keeping x* strictly feasible.
+pub fn random_feasibility_lp(rng: &mut Rng, m: usize, d: usize, slack: f64) -> LpInstance {
+    let data: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+    let a = VectorSet::new(data, m, d);
+
+    // planted point on the simplex
+    let mut x: Vec<f32> = (0..d).map(|_| rng.exponential(1.0) as f32).collect();
+    crate::util::math::normalize_l1(&mut x);
+
+    let b: Vec<f32> = (0..m)
+        .map(|i| {
+            crate::util::math::dot(a.row(i), &x) + rng.uniform(0.0, slack) as f32
+        })
+        .collect();
+
+    LpInstance { a, b, planted: x }
+}
+
+/// A packing LP `max c·x s.t. Ax ≤ b, x ≥ 0` with positive A and c — the
+/// §4.2 setting where the dual oracle's vertices are (OPT/c_j)·e_j.
+#[derive(Clone, Debug)]
+pub struct PackingLp {
+    pub a: VectorSet,
+    pub b: Vec<f32>,
+    pub c: Vec<f32>,
+    /// Target objective value for the feasibility reduction.
+    pub opt: f64,
+}
+
+impl PackingLp {
+    pub fn m(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn d(&self) -> usize {
+        self.a.dim()
+    }
+}
+
+/// Positive A ~ U(0,1), c ~ U(0.5, 1.5); OPT chosen so that the problem is
+/// feasible but not trivially slack.
+pub fn random_packing_lp(rng: &mut Rng, m: usize, d: usize) -> PackingLp {
+    let data: Vec<f32> = (0..m * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let a = VectorSet::new(data, m, d);
+    let c: Vec<f32> = (0..d).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
+
+    // Feasible-by-construction: take x0 uniform with c·x0 = OPT, set
+    // b = A x0 + small positive slack.
+    let x0: Vec<f32> = vec![1.0 / d as f32; d];
+    let opt: f64 = x0.iter().zip(&c).map(|(&x, &ci)| (x * ci) as f64).sum();
+    let b: Vec<f32> = (0..m)
+        .map(|i| crate::util::math::dot(a.row(i), &x0) + rng.uniform(0.01, 0.1) as f32)
+        .collect();
+
+    PackingLp { a, b, c, opt }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn planted_point_is_feasible() {
+        let mut rng = Rng::new(1);
+        let lp = random_feasibility_lp(&mut rng, 200, 12, 0.5);
+        assert_eq!(lp.m(), 200);
+        assert_eq!(lp.d(), 12);
+        assert!((lp.planted.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert_eq!(lp.violation_fraction(&lp.planted, 1e-6), 0.0);
+        assert!(lp.max_violation(&lp.planted) <= 0.0);
+    }
+
+    #[test]
+    fn uniform_point_usually_infeasible() {
+        let mut rng = Rng::new(2);
+        let lp = random_feasibility_lp(&mut rng, 500, 10, 0.05);
+        let x0 = vec![0.1f32; 10];
+        // Gaussian rows: ~half the constraints should be near-tight or violated
+        assert!(lp.violation_fraction(&x0, 0.0) > 0.05);
+    }
+
+    #[test]
+    fn packing_instance_is_feasible_at_x0() {
+        let mut rng = Rng::new(3);
+        let lp = random_packing_lp(&mut rng, 300, 20);
+        let x0 = vec![1.0 / 20.0f32; 20];
+        for i in 0..lp.m() {
+            let ax = crate::util::math::dot(lp.a.row(i), &x0);
+            assert!(ax <= lp.b[i] + 1e-6);
+        }
+        let cx: f64 = x0.iter().zip(&lp.c).map(|(&x, &c)| (x * c) as f64).sum();
+        assert!((cx - lp.opt).abs() < 1e-6);
+    }
+
+    #[test]
+    fn width_is_positive() {
+        let mut rng = Rng::new(4);
+        let lp = random_feasibility_lp(&mut rng, 50, 5, 0.1);
+        assert!(lp.width() > 0.5);
+    }
+}

@@ -1,0 +1,7 @@
+//! Synthetic workload generators matching the paper's §5 experimental setup.
+
+pub mod linear_queries;
+pub mod lp;
+
+pub use linear_queries::{binary_queries, gaussian_histogram};
+pub use lp::{random_feasibility_lp, random_packing_lp, LpInstance, PackingLp};

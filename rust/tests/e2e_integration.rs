@@ -1,0 +1,179 @@
+//! Cross-module integration tests: full algorithm runs over synthesized
+//! workloads, exercising workloads → mips → lazy → dp → mwem/lp together.
+
+use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
+use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
+use fast_mwem::mwem::{
+    run_classic, run_fast, FastMwemConfig, MwemConfig, NativeBackend,
+};
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads::{binary_queries, gaussian_histogram, random_feasibility_lp};
+
+/// The paper's headline claim on a small instance: Fast-MWEM (HNSW) reaches
+/// the same error ballpark as classic MWEM while doing far less selection
+/// work per round.
+#[test]
+fn fast_mwem_matches_error_with_sublinear_work() {
+    let (u, m, n, t) = (256, 2_000, 500, 300);
+    let mut rng = Rng::new(1);
+    let h = gaussian_histogram(&mut rng, u, n);
+    let q = binary_queries(&mut rng, m, u);
+    let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, 42);
+    cfg.log_every = t;
+
+    let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+    let fast = run_fast(
+        &FastMwemConfig::new(cfg, IndexKind::Hnsw),
+        &q,
+        &h,
+        &mut NativeBackend,
+    );
+
+    let e_classic = classic.stats.last().unwrap().max_error_avg;
+    let e_fast = fast.result.stats.last().unwrap().max_error_avg;
+    assert!(
+        e_fast < e_classic + 0.05,
+        "classic {e_classic} fast-hnsw {e_fast}"
+    );
+    // work: classic does m per round; fast should do ≤ ~8√m
+    assert_eq!(classic.avg_select_work, m as f64);
+    assert!(
+        fast.result.avg_select_work < 8.0 * (m as f64).sqrt(),
+        "fast work {}",
+        fast.result.avg_select_work
+    );
+}
+
+/// Error decreases as the privacy budget grows (sanity of the DP plumbing).
+#[test]
+fn more_budget_less_error() {
+    let (u, m, n, t) = (128, 200, 2_000, 400);
+    let mut rng = Rng::new(2);
+    let h = gaussian_histogram(&mut rng, u, n);
+    let q = binary_queries(&mut rng, m, u);
+
+    let run_with = |eps: f64| {
+        let mut cfg = MwemConfig::paper(t, u, eps, 1e-3, 7);
+        cfg.update = fast_mwem::mwem::UpdateRule::Hardt;
+        cfg.log_every = 0;
+        let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+        q.max_error(h.probs(), &res.p_avg)
+    };
+    let hi_noise = run_with(0.05);
+    let lo_noise = run_with(5.0);
+    assert!(
+        lo_noise < hi_noise,
+        "eps=5 error {lo_noise} should beat eps=0.05 error {hi_noise}"
+    );
+}
+
+/// LP: all three lazy index modes land near the exhaustive baseline.
+#[test]
+fn lp_all_modes_agree() {
+    let (m, d, t) = (3_000, 16, 300);
+    let mut rng = Rng::new(3);
+    let lp = random_feasibility_lp(&mut rng, m, d, 0.6);
+
+    let run_mode = |mode| {
+        let cfg = ScalarLpConfig {
+            t,
+            eps: 2.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode,
+            seed: 11,
+            log_every: 0,
+        };
+        let res = run_scalar(&cfg, &lp);
+        lp.max_violation(&res.x)
+    };
+
+    let base = run_mode(SelectionMode::Exhaustive);
+    for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+        let v = run_mode(SelectionMode::Lazy(kind));
+        assert!(
+            (v - base).abs() < 0.6,
+            "{kind}: violation {v} vs exhaustive {base}"
+        );
+    }
+}
+
+/// Property-style test: over many random workloads, LazyEM(flat) and the
+/// exhaustive EM select the worst query with similar frequency.
+#[test]
+fn lazy_and_exhaustive_pick_argmax_equally_often() {
+    let mut meta_rng = Rng::new(4);
+    let mut lazy_hits = 0usize;
+    let mut exact_hits = 0usize;
+    let trials = 300;
+    for t in 0..trials {
+        let u = 32 + meta_rng.usize_below(64);
+        let m = 50 + meta_rng.usize_below(100);
+        let seed = meta_rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let h = gaussian_histogram(&mut rng, u, 400);
+        let q = binary_queries(&mut rng, m, u);
+        let p0 = vec![1.0 / u as f32; u];
+        let d: Vec<f32> =
+            h.probs().iter().zip(&p0).map(|(&a, &b)| a - b).collect();
+        let scores = q.abs_scores(&d);
+        let best = fast_mwem::util::math::argmax_f32(&scores);
+
+        let mut rng_a = Rng::new(t as u64 * 2 + 1);
+        let pick_exact = fast_mwem::dp::exponential_mechanism(
+            &mut rng_a, &scores, 50.0, 1.0 / 400.0,
+        );
+
+        let flat = FlatIndex::new(q.vectors().clone());
+        let em = fast_mwem::lazy::LazyEm::new(
+            &flat,
+            q.vectors(),
+            fast_mwem::lazy::ScoreTransform::Abs,
+        );
+        let mut rng_b = Rng::new(t as u64 * 2 + 2);
+        let pick_lazy = em.select(&mut rng_b, &d, 50.0, 1.0 / 400.0).index;
+
+        if pick_exact == best {
+            exact_hits += 1;
+        }
+        if pick_lazy == best {
+            lazy_hits += 1;
+        }
+    }
+    let diff = (lazy_hits as f64 - exact_hits as f64).abs() / trials as f64;
+    assert!(
+        diff < 0.08,
+        "argmax hit rates differ: lazy {lazy_hits} vs exact {exact_hits} of {trials}"
+    );
+}
+
+/// Index recall does not silently regress across kinds at moderate size.
+#[test]
+fn index_recall_floor() {
+    let mut rng = Rng::new(5);
+    let m = 4_000;
+    let u = 64;
+    let q = binary_queries(&mut rng, m, u);
+    let flat = FlatIndex::new(q.vectors().clone());
+
+    for kind in [IndexKind::Ivf, IndexKind::Hnsw] {
+        let idx = build_index(kind, q.vectors().clone(), 6);
+        let mut hits = 0usize;
+        let trials = 30u64;
+        let k = 20usize;
+        for t in 0..trials {
+            let mut qr = Rng::new(100 + t);
+            let d: Vec<f32> =
+                (0..u).map(|_| qr.uniform(-0.01, 0.01) as f32).collect();
+            let want: std::collections::HashSet<u32> =
+                flat.top_k(&d, k).into_iter().map(|n| n.id).collect();
+            hits += idx.top_k(&d, k).iter().filter(|n| want.contains(&n.id)).count();
+        }
+        let recall = hits as f64 / (trials as usize * k) as f64;
+        let floor = match kind {
+            IndexKind::Hnsw => 0.7,
+            _ => 0.3, // IVF on near-duplicate binary rows is genuinely hard
+        };
+        assert!(recall >= floor, "{kind} recall {recall}");
+    }
+}

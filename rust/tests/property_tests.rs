@@ -1,0 +1,282 @@
+//! Property-based tests (seeded random sweeps — the offline build vendors
+//! no proptest, so properties are driven by the in-tree RNG).
+//!
+//! Each test states an invariant from the paper or the system design and
+//! checks it across hundreds of randomized instances.
+
+use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
+use fast_mwem::lazy::{lazy_gumbel_max, LazyEm, ScoreTransform};
+use fast_mwem::lp::bregman_project;
+use fast_mwem::lp::SelectionMode;
+use fast_mwem::mips::{augment::AugmentedSpace, FlatIndex, IndexKind, MipsIndex, VectorSet};
+use fast_mwem::sampling::{binomial, sample_distinct_excluding};
+use fast_mwem::util::math::dot;
+use fast_mwem::util::rng::Rng;
+
+fn random_vs(rng: &mut Rng, n: usize, d: usize, lo: f64, hi: f64) -> VectorSet {
+    let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(lo, hi) as f32).collect();
+    VectorSet::new(data, n, d)
+}
+
+/// §E invariant: augmentation preserves inner-product order as L2 order,
+/// for arbitrary data and queries.
+#[test]
+fn prop_augmentation_preserves_order() {
+    let mut rng = Rng::new(101);
+    for _ in 0..100 {
+        let n = 5 + rng.usize_below(40);
+        let d = 2 + rng.usize_below(12);
+        let vs = random_vs(&mut rng, n, d, -2.0, 2.0);
+        let space = AugmentedSpace::new(vs.clone());
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        for i in 0..n {
+            for j in 0..n {
+                let ip_i = dot(vs.row(i), &q);
+                let ip_j = dot(vs.row(j), &q);
+                let d_i = space.dist_qp(&q, i);
+                let d_j = space.dist_qp(&q, j);
+                if ip_i > ip_j + 1e-4 {
+                    assert!(d_i < d_j + 1e-4, "order violated at ({i},{j})");
+                }
+            }
+        }
+    }
+}
+
+/// Flat top-k returns exactly the k best in descending order, any data.
+#[test]
+fn prop_flat_topk_exact() {
+    let mut rng = Rng::new(102);
+    for _ in 0..100 {
+        let n = 1 + rng.usize_below(60);
+        let d = 1 + rng.usize_below(8);
+        let k = 1 + rng.usize_below(n + 3); // may exceed n
+        let vs = random_vs(&mut rng, n, d, -1.0, 1.0);
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let idx = FlatIndex::new(vs.clone());
+        let got = idx.top_k(&q, k);
+
+        let mut all: Vec<f32> = (0..n).map(|i| dot(vs.row(i), &q)).collect();
+        all.sort_by(|a, b| b.total_cmp(a));
+        assert_eq!(got.len(), k.min(n));
+        for (g, want) in got.iter().zip(all.iter()) {
+            assert!((g.score - want).abs() < 1e-5);
+        }
+        assert!(got.windows(2).all(|w| w[0].score >= w[1].score));
+    }
+}
+
+/// Binomial sampler matches the exact PMF on small n (χ² at 1% tolerance).
+#[test]
+fn prop_binomial_matches_pmf() {
+    let mut rng = Rng::new(103);
+    let (n, p) = (12u64, 0.23);
+    let trials = 120_000;
+    let mut counts = vec![0usize; (n + 1) as usize];
+    for _ in 0..trials {
+        counts[binomial(&mut rng, n, p) as usize] += 1;
+    }
+    // exact PMF
+    let mut pmf = vec![0f64; (n + 1) as usize];
+    for k in 0..=n {
+        let mut logc = 0f64;
+        for i in 0..k {
+            logc += ((n - i) as f64).ln() - ((i + 1) as f64).ln();
+        }
+        pmf[k as usize] =
+            (logc + k as f64 * p.ln() + (n - k) as f64 * (1.0 - p).ln()).exp();
+    }
+    for k in 0..=n as usize {
+        let got = counts[k] as f64 / trials as f64;
+        assert!(
+            (got - pmf[k]).abs() < 0.01,
+            "P(X={k}): got {got:.4} want {:.4}",
+            pmf[k]
+        );
+    }
+}
+
+/// Exclusion sampling: never returns excluded, always distinct, any shape.
+#[test]
+fn prop_exclusion_sampling_sound() {
+    let mut rng = Rng::new(104);
+    for _ in 0..300 {
+        let n = 2 + rng.usize_below(200);
+        let n_ex = rng.usize_below(n / 2 + 1);
+        let mut excluded = fast_mwem::sampling::sample_distinct(&mut rng, n, n_ex);
+        excluded.sort_unstable();
+        let avail = n - excluded.len();
+        let c = rng.usize_below(avail + 1);
+        let got = sample_distinct_excluding(&mut rng, n, &excluded, c);
+        assert_eq!(got.len(), c);
+        let set: std::collections::HashSet<usize> = got.iter().cloned().collect();
+        assert_eq!(set.len(), c, "duplicates returned");
+        for x in got {
+            assert!(x < n);
+            assert!(excluded.binary_search(&x).is_err(), "excluded {x} returned");
+        }
+    }
+}
+
+/// Bregman projection: idempotent (projecting a projection is a no-op).
+#[test]
+fn prop_bregman_idempotent() {
+    let mut rng = Rng::new(105);
+    for _ in 0..100 {
+        let n = 4 + rng.usize_below(60);
+        let s = 1 + rng.usize_below(n);
+        let w: Vec<f32> = (0..n).map(|_| rng.uniform(0.01, 5.0) as f32).collect();
+        let y1 = bregman_project(&w, s);
+        let y2 = bregman_project(&y1, s);
+        for i in 0..n {
+            assert!((y1[i] - y2[i]).abs() < 1e-4, "not idempotent at {i}");
+        }
+    }
+}
+
+/// Lazy Gumbel work bound: across random score sets with k = √n, expected
+/// work stays within a constant multiple of √n (Theorem D.1).
+#[test]
+fn prop_lazy_work_bound() {
+    let mut rng = Rng::new(106);
+    for round in 0..10 {
+        let n = 1_000 * (round + 1);
+        let k = (n as f64).sqrt().ceil() as usize;
+        let scores: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+        let top: Vec<(usize, f64)> = order[..k].iter().map(|&i| (i, scores[i])).collect();
+
+        let trials = 80;
+        let mut work = 0usize;
+        for _ in 0..trials {
+            work += lazy_gumbel_max(&mut rng, &top, n, 0.0, |i| scores[i]).work;
+        }
+        let avg = work as f64 / trials as f64;
+        assert!(
+            avg < 8.0 * (n as f64).sqrt() + 50.0,
+            "n={n}: avg work {avg} vs √n={k}"
+        );
+    }
+}
+
+/// LazyEM with flat index ≡ exhaustive EM: statistical equality of selection
+/// frequencies across random workloads (not just one fixed instance).
+#[test]
+fn prop_lazy_em_distribution_equality_random_instances() {
+    let mut meta = Rng::new(107);
+    for inst in 0..5 {
+        let m = 20 + meta.usize_below(30);
+        let d = 4 + meta.usize_below(6);
+        let vs = random_vs(&mut meta, m, d, 0.0, 1.0);
+        let flat = FlatIndex::new(vs.clone());
+        let em = LazyEm::new(&flat, &vs, ScoreTransform::Abs);
+        let q: Vec<f32> = (0..d).map(|_| meta.uniform(-0.3, 0.3) as f32).collect();
+        let (eps0, sens) = (1.0, 0.1);
+        let scale = eps0 / (2.0 * sens);
+
+        let weights: Vec<f64> = (0..m)
+            .map(|i| (scale * (dot(vs.row(i), &q) as f64).abs()).exp())
+            .collect();
+        let z: f64 = weights.iter().sum();
+
+        let mut rng = Rng::new(1000 + inst as u64);
+        let trials = 60_000;
+        let mut counts = vec![0usize; m];
+        for _ in 0..trials {
+            counts[em.select(&mut rng, &q, eps0, sens).index] += 1;
+        }
+        for i in 0..m {
+            let want = weights[i] / z;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - want).abs() < 0.015 + 0.1 * want,
+                "instance {inst}, candidate {i}: {got:.4} vs {want:.4}"
+            );
+        }
+    }
+}
+
+/// Coordinator invariants under random job mixes: every accepted job
+/// completes exactly once, ids are unique and dense, the ε cap is never
+/// exceeded by accepted jobs, and results arrive sorted.
+#[test]
+fn prop_coordinator_invariants() {
+    let mut rng = Rng::new(108);
+    for round in 0..5 {
+        let cap = 3.0 + rng.usize_below(5) as f64;
+        let workers = 1 + rng.usize_below(4);
+        let njobs = 3 + rng.usize_below(8);
+        let mut coord =
+            Coordinator::start(CoordinatorConfig { workers, eps_cap: Some(cap) });
+        let mut accepted_eps = 0.0;
+        let mut accepted = 0usize;
+        for j in 0..njobs {
+            let eps = 0.5 + rng.usize_below(3) as f64 * 0.5;
+            let spec = if rng.f64() < 0.5 {
+                JobSpec::Release(ReleaseJobSpec {
+                    u: 32,
+                    m: 20 + rng.usize_below(30),
+                    n: 200,
+                    t: 10,
+                    eps,
+                    delta: 1e-3,
+                    index: Some(IndexKind::Flat),
+                    seed: round as u64 * 100 + j as u64,
+                })
+            } else {
+                JobSpec::Lp(LpJobSpec {
+                    m: 50 + rng.usize_below(100),
+                    d: 6,
+                    t: 10,
+                    eps,
+                    delta: 1e-3,
+                    delta_inf: 0.1,
+                    mode: SelectionMode::Exhaustive,
+                    seed: round as u64 * 100 + j as u64,
+                })
+            };
+            if coord.submit(spec).is_ok() {
+                accepted += 1;
+                accepted_eps += eps;
+            }
+        }
+        assert!(accepted_eps <= cap + 1e-9, "cap violated: {accepted_eps} > {cap}");
+        let (results, metrics) = coord.finish();
+        assert_eq!(results.len(), accepted);
+        let ids: Vec<usize> = results.iter().map(|r| r.job_id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "duplicate job ids");
+        assert_eq!(ids, sorted, "results not sorted by id");
+        assert_eq!(metrics.counter("jobs_completed") as usize, accepted);
+        assert!(results.iter().all(|r| r.outcome.is_ok()));
+    }
+}
+
+/// Padding invariance: scores over zero-padded rows/cols equal the
+/// unpadded scores (the runtime's shape-grid contract).
+#[test]
+fn prop_padding_invariance_native() {
+    use fast_mwem::runtime::XlaEngine;
+    let mut rng = Rng::new(109);
+    for _ in 0..50 {
+        let m = 1 + rng.usize_below(20);
+        let u = 1 + rng.usize_below(20);
+        let (tm, tu) = (m + rng.usize_below(10), u + rng.usize_below(10));
+        let vs = random_vs(&mut rng, m, u, 0.0, 1.0);
+        let d: Vec<f32> = (0..u).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+        let padded = XlaEngine::pad_matrix(vs.as_slice(), m, u, tm, tu);
+        let d_pad = XlaEngine::pad_vec(&d, tu);
+        for i in 0..m {
+            let orig = dot(vs.row(i), &d);
+            let pad = dot(&padded[i * tu..(i + 1) * tu], &d_pad);
+            assert!((orig - pad).abs() < 1e-5);
+        }
+        for i in m..tm {
+            assert_eq!(dot(&padded[i * tu..(i + 1) * tu], &d_pad), 0.0);
+        }
+    }
+}
