@@ -25,6 +25,8 @@ fn main() {
             ("lazy-flat", SelectionMode::Lazy(IndexKind::Flat)),
             ("lazy-ivf", SelectionMode::Lazy(IndexKind::Ivf)),
             ("lazy-hnsw", SelectionMode::Lazy(IndexKind::Hnsw)),
+            // sharded axis: same selection law, 4-way parallel index build
+            ("lazy-hnsw-x4", SelectionMode::LazySharded(IndexKind::Hnsw, 4)),
         ] {
             let cfg = ScalarLpConfig {
                 t,

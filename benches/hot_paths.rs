@@ -5,17 +5,17 @@
 //!   runtime  : XLA scores / mwu round trips (if artifacts are built).
 
 use fast_mwem::dp::exponential_mechanism;
-use fast_mwem::lazy::{LazyEm, ScoreTransform};
+use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use fast_mwem::lp::bregman_project;
 use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
 use fast_mwem::mwem::{MwemBackend, NativeBackend, QuerySet};
 use fast_mwem::runtime::XlaBackend;
 use fast_mwem::sampling::binomial;
-use fast_mwem::util::bench::{bench, header};
+use fast_mwem::util::bench::{bench, fmt_dur, header};
 use fast_mwem::util::math::dot;
 use fast_mwem::util::rng::Rng;
 use fast_mwem::workloads::binary_queries;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     let budget = Duration::from_millis(300);
@@ -69,6 +69,34 @@ fn main() {
     bench("lazy EM draw (hnsw)", budget, || {
         em.select(&mut rng3, &d, 1.0, sens).index
     });
+
+    // ---------------- shard-count axis (DESIGN.md §5) ----------------
+    // Build time is the headline: S per-shard HNSW builds run in parallel
+    // on the pool, and each shard is smaller, so build drops superlinearly
+    // in S. Select stays a √(m/S)-per-shard draw, exact by max-stability.
+    header(&format!("sharded lazy EM, S ∈ {{1,2,4,8}} (m={m}, hnsw)"));
+    let mut mono_build = None;
+    for s in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        let sharded =
+            ShardedLazyEm::build(IndexKind::Hnsw, q.vectors(), s, ScoreTransform::Abs, 9);
+        let build = t0.elapsed();
+        let speedup = match mono_build {
+            None => {
+                mono_build = Some(build);
+                1.0
+            }
+            Some(b0) => b0.as_secs_f64() / build.as_secs_f64(),
+        };
+        println!(
+            "  index build S={s}: {} ({speedup:.1}x vs S=1)",
+            fmt_dur(build)
+        );
+        let mut rng4 = Rng::new(6);
+        bench(&format!("sharded EM draw S={s}"), budget, || {
+            sharded.select(&mut rng4, &d, 1.0, sens).index
+        });
+    }
 
     // ---------------- MWU update ----------------
     header("MWU update (U=3000)");

@@ -26,6 +26,7 @@ fn main() {
         ("lazy-flat", SelectionMode::Lazy(IndexKind::Flat)),
         ("lazy-ivf", SelectionMode::Lazy(IndexKind::Ivf)),
         ("lazy-hnsw", SelectionMode::Lazy(IndexKind::Hnsw)),
+        ("lazy-hnsw-x4", SelectionMode::LazySharded(IndexKind::Hnsw, 4)),
     ] {
         let cfg = ScalarLpConfig {
             t,

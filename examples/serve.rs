@@ -38,6 +38,8 @@ fn main() {
                 eps: 1.0,
                 delta: 1e-3,
                 index: Some(if i % 3 == 0 { IndexKind::Hnsw } else { IndexKind::Ivf }),
+                // every other release job exercises the sharded lazy EM
+                shards: if i % 2 == 0 { 4 } else { 1 },
                 seed: i,
             })
         };

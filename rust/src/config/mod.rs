@@ -15,12 +15,14 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// Flat `section.key → value` configuration store.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     values: BTreeMap<String, String>,
 }
 
 impl Config {
+    /// An empty configuration.
     pub fn new() -> Self {
         Self::default()
     }
@@ -58,6 +60,7 @@ impl Config {
         Ok(Config { values })
     }
 
+    /// Parse a config file from disk.
     pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading config {:?}", path.as_ref()))?;
@@ -78,18 +81,22 @@ impl Config {
         Ok(())
     }
 
+    /// Set a key programmatically (same precedence as a CLI override).
     pub fn set(&mut self, key: &str, value: impl ToString) {
         self.values.insert(key.to_string(), value.to_string());
     }
 
+    /// Raw string value of a key, if present.
     pub fn get_str(&self, key: &str) -> Option<&str> {
         self.values.get(key).map(|s| s.as_str())
     }
 
+    /// String value with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get_str(key).unwrap_or(default).to_string()
     }
 
+    /// Typed value of a key, if present (error on parse failure).
     pub fn get<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
         match self.values.get(key) {
             None => Ok(None),
@@ -100,12 +107,59 @@ impl Config {
         }
     }
 
+    /// Typed value with a default (error on parse failure).
     pub fn or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
         Ok(self.get(key)?.unwrap_or(default))
     }
 
+    /// All known keys, in sorted order.
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Typed view of the `[sharding]` section (DESIGN.md §5): how the lazy
+/// exponential mechanism is split across per-shard k-MIPS indices.
+///
+/// ```text
+/// [sharding]
+/// shards = 4            # 1 = monolithic index (the default)
+/// workers = 0           # pool width for shard jobs; 0 = one per shard
+/// parallel_select = false  # fan per-draw shard searches onto the pool
+/// ```
+///
+/// The CLI also accepts `--shards=N` as shorthand for
+/// `--sharding.shards=N`. `shards` applies everywhere; the two
+/// select-time parallelism knobs are consumed by the Fast-MWEM release
+/// path (`FastMwemConfig::with_sharding`) — the LP solvers' sharded mode
+/// carries only the shard count and runs its per-draw searches inline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardingConfig {
+    /// Number of lazy-EM shards (≤ 1 → one monolithic index).
+    pub shards: usize,
+    /// Pool width for per-draw shard searches (0 → one per shard).
+    /// Index *builds* always use one pool thread per shard.
+    pub workers: usize,
+    /// Run each draw's S shard searches on the pool instead of inline.
+    pub parallel_select: bool,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig { shards: 1, workers: 0, parallel_select: false }
+    }
+}
+
+impl ShardingConfig {
+    /// Read the `[sharding]` section, honoring the `--shards=N` shorthand
+    /// (the shorthand wins over `sharding.shards`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let section = cfg.or("sharding.shards", 1usize)?;
+        Ok(ShardingConfig {
+            shards: cfg.or("shards", section)?,
+            workers: cfg.or("sharding.workers", 0usize)?,
+            parallel_select: cfg.or("sharding.parallel_select", false)?,
+        })
     }
 }
 
@@ -161,5 +215,25 @@ mod tests {
     fn bad_type_is_error() {
         let c = Config::parse("x = notanumber").unwrap();
         assert!(c.or("x", 1u32).is_err());
+    }
+
+    #[test]
+    fn sharding_section_parses_with_defaults_and_shorthand() {
+        // defaults when nothing is set
+        let c = Config::new();
+        assert_eq!(ShardingConfig::from_config(&c).unwrap(), ShardingConfig::default());
+
+        // full section
+        let c = Config::parse(
+            "[sharding]\nshards = 4\nworkers = 2\nparallel_select = true\n",
+        )
+        .unwrap();
+        let s = ShardingConfig::from_config(&c).unwrap();
+        assert_eq!(s, ShardingConfig { shards: 4, workers: 2, parallel_select: true });
+
+        // --shards=8 shorthand beats the section value
+        let mut c = Config::parse("[sharding]\nshards = 4\n").unwrap();
+        c.apply_overrides(["--shards=8"]).unwrap();
+        assert_eq!(ShardingConfig::from_config(&c).unwrap().shards, 8);
     }
 }

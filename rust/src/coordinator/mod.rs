@@ -10,5 +10,8 @@
 pub mod job;
 pub mod pool;
 
-pub use job::{JobOutcome, JobResult, JobSpec, LpJobSpec, ReleaseJobSpec};
-pub use pool::{Coordinator, CoordinatorConfig};
+pub use job::{
+    execute_shard_search, JobOutcome, JobResult, JobSpec, LpJobSpec, ReleaseJobSpec,
+    ShardSearchJob,
+};
+pub use pool::{parallel_map, Coordinator, CoordinatorConfig};

@@ -7,8 +7,58 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// Fan a batch of independent jobs across `workers` scoped threads and
+/// return the results in input order.
+///
+/// This is the pool's synchronous sibling of [`Coordinator`]: the same
+/// leader/worker decomposition, but for borrowed, short-lived work — shard
+/// index builds and per-shard search jobs
+/// ([`crate::coordinator::job::ShardSearchJob`]) — where the caller blocks
+/// until the whole batch is done. Items are dealt round-robin so similarly
+/// sized shards land on distinct threads. `workers = 0` or `1` (or a
+/// single-item batch) degrades to an inline sequential map with no thread
+/// overhead.
+pub fn parallel_map<T, R>(
+    workers: usize,
+    items: Vec<T>,
+    f: impl Fn(T) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = items.len();
+    let workers = workers.clamp(1, n.max(1));
+    if workers <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let f = &f;
+    let mut chunks: Vec<Vec<(usize, T)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        chunks[i % workers].push((i, item));
+    }
+    let mut indexed: Vec<(usize, R)> = Vec::with_capacity(n);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = chunks
+            .into_iter()
+            .map(|chunk| {
+                s.spawn(move || {
+                    chunk.into_iter().map(|(i, item)| (i, f(item))).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            indexed.extend(h.join().expect("parallel_map worker panicked"));
+        }
+    });
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Pool sizing and admission control for a [`Coordinator`].
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
+    /// Number of worker threads.
     pub workers: usize,
     /// Global privacy cap across all accepted jobs (ε). Jobs whose budget
     /// would exceed the cap are rejected at submission.
@@ -38,6 +88,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Spawn the worker threads and start accepting jobs.
     pub fn start(cfg: CoordinatorConfig) -> Self {
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
@@ -107,6 +158,7 @@ impl Coordinator {
         Ok(id)
     }
 
+    /// Number of jobs accepted so far.
     pub fn submitted(&self) -> usize {
         self.next_id
     }
@@ -150,8 +202,20 @@ mod tests {
             eps,
             delta: 1e-3,
             index: Some(IndexKind::Flat),
+            shards: 1,
             seed,
         })
+    }
+
+    #[test]
+    fn parallel_map_preserves_order_and_runs_everything() {
+        for workers in [0usize, 1, 2, 3, 16] {
+            let items: Vec<usize> = (0..23).collect();
+            let out = parallel_map(workers, items, |i| i * i);
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>(), "workers={workers}");
+        }
+        let empty: Vec<usize> = Vec::new();
+        assert!(parallel_map(4, empty, |i: usize| i).is_empty());
     }
 
     #[test]

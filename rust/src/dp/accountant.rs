@@ -31,20 +31,24 @@ pub struct Accountant {
 }
 
 impl Accountant {
+    /// Fresh accountant with the composition slack δ'.
     pub fn new(delta_prime: f64) -> Self {
         Accountant { events: Vec::new(), delta_prime }
     }
 
+    /// Record one (ε, δ)-DP mechanism invocation.
     pub fn record(&mut self, eps: f64, delta: f64) {
         self.events.push((eps, delta));
     }
 
+    /// Record `n` identical invocations.
     pub fn record_n(&mut self, eps: f64, delta: f64, n: u64) {
         for _ in 0..n {
             self.events.push((eps, delta));
         }
     }
 
+    /// Number of recorded invocations.
     pub fn steps(&self) -> usize {
         self.events.len()
     }

@@ -2,25 +2,39 @@
 
 use std::path::PathBuf;
 
+/// Options shared by every figure driver.
 #[derive(Clone, Debug)]
 pub struct EvalOpts {
     /// Shrink sweeps for CI-speed runs (shapes preserved).
     pub quick: bool,
+    /// Directory the per-figure CSVs are written to.
     pub out_dir: PathBuf,
+    /// Base seed; each driver salts it per sweep point.
     pub seed: u64,
+    /// Lazy-EM shard count applied to the Fast-MWEM runs of the figure
+    /// drivers (1 = the paper's monolithic index). The `shards` driver
+    /// sweeps this axis explicitly regardless of the value here.
+    pub shards: usize,
 }
 
 impl Default for EvalOpts {
     fn default() -> Self {
-        EvalOpts { quick: false, out_dir: PathBuf::from("results"), seed: 20260204 }
+        EvalOpts {
+            quick: false,
+            out_dir: PathBuf::from("results"),
+            seed: 20260204,
+            shards: 1,
+        }
     }
 }
 
 impl EvalOpts {
+    /// Defaults with quick mode on.
     pub fn quick() -> Self {
         EvalOpts { quick: true, ..Default::default() }
     }
 
+    /// `out_dir/<name>.csv`.
     pub fn csv_path(&self, name: &str) -> PathBuf {
         self.out_dir.join(format!("{name}.csv"))
     }
@@ -34,6 +48,7 @@ impl EvalOpts {
         }
     }
 
+    /// Pick between full-scale and quick-scale sweeps.
     pub fn pick_vec<T: Clone>(&self, full: &[T], quick: &[T]) -> Vec<T> {
         if self.quick {
             quick.to_vec()

@@ -13,6 +13,9 @@ const MODES: &[(&str, SelectionMode)] = &[
     ("flat", SelectionMode::Lazy(IndexKind::Flat)),
     ("ivf", SelectionMode::Lazy(IndexKind::Ivf)),
     ("hnsw", SelectionMode::Lazy(IndexKind::Hnsw)),
+    // the sharded-LazyEM axis (DESIGN.md §5): same selection distribution,
+    // S-way parallel index build
+    ("hnsw-x4", SelectionMode::LazySharded(IndexKind::Hnsw, 4)),
 ];
 
 fn lp_config(t: usize, mode: SelectionMode, seed: u64, log_every: usize) -> ScalarLpConfig {

@@ -25,9 +25,12 @@ pub fn fig1_speedup(opts: &EvalOpts) -> Result<()> {
 
     let mut csv = CsvWriter::create(
         opts.csv_path("fig1_speedup"),
-        &["m", "classic_us", "ivf_us", "hnsw_us", "speedup_ivf", "speedup_hnsw"],
+        &["m", "shards", "classic_us", "ivf_us", "hnsw_us", "speedup_ivf", "speedup_hnsw"],
     )?;
-    println!("Fig 1: Fast-MWEM speed-up over exhaustive search (U={u}, T={t})");
+    println!(
+        "Fig 1: Fast-MWEM speed-up over exhaustive search (U={u}, T={t}, shards={})",
+        opts.shards
+    );
     print_row(&["m".into(), "speedup IVF".into(), "speedup HNSW".into()]);
 
     for &m in &ms {
@@ -41,7 +44,7 @@ pub fn fig1_speedup(opts: &EvalOpts) -> Result<()> {
         let mut times = std::collections::BTreeMap::new();
         for kind in [IndexKind::Ivf, IndexKind::Hnsw] {
             let out = run_fast(
-                &FastMwemConfig::new(cfg.clone(), kind),
+                &FastMwemConfig::new(cfg.clone(), kind).with_shards(opts.shards),
                 &q,
                 &h,
                 &mut NativeBackend,
@@ -51,6 +54,7 @@ pub fn fig1_speedup(opts: &EvalOpts) -> Result<()> {
         let (t_ivf, t_hnsw) = (times["ivf"], times["hnsw"]);
         csv.row_f64(&[
             m as f64,
+            opts.shards as f64,
             t_classic,
             t_ivf,
             t_hnsw,
@@ -161,9 +165,21 @@ pub fn fig4_runtime_vs_m(opts: &EvalOpts) -> Result<()> {
 
     let mut csv = CsvWriter::create(
         opts.csv_path("fig4_runtime"),
-        &["m", "classic_us", "fast_flat_us", "ivf_us", "hnsw_us", "ivf_build_s", "hnsw_build_s"],
+        &[
+            "m",
+            "shards",
+            "classic_us",
+            "fast_flat_us",
+            "ivf_us",
+            "hnsw_us",
+            "ivf_build_s",
+            "hnsw_build_s",
+        ],
     )?;
-    println!("Fig 4: per-iteration selection time vs m (U={u}, T={t})");
+    println!(
+        "Fig 4: per-iteration selection time vs m (U={u}, T={t}, shards={})",
+        opts.shards
+    );
     print_row(&[
         "m".into(),
         "classic".into(),
@@ -184,7 +200,7 @@ pub fn fig4_runtime_vs_m(opts: &EvalOpts) -> Result<()> {
         let mut build = std::collections::BTreeMap::new();
         for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
             let out = run_fast(
-                &FastMwemConfig::new(cfg.clone(), kind),
+                &FastMwemConfig::new(cfg.clone(), kind).with_shards(opts.shards),
                 &q,
                 &h,
                 &mut NativeBackend,
@@ -194,6 +210,7 @@ pub fn fig4_runtime_vs_m(opts: &EvalOpts) -> Result<()> {
         }
         csv.row_f64(&[
             m as f64,
+            opts.shards as f64,
             t_classic,
             sel["flat"],
             sel["ivf"],
@@ -207,6 +224,62 @@ pub fn fig4_runtime_vs_m(opts: &EvalOpts) -> Result<()> {
             format!("{:.0}us", sel["flat"]),
             format!("{:.0}us", sel["ivf"]),
             format!("{:.0}us", sel["hnsw"]),
+        ]);
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+/// Extension figure `shards` (DESIGN.md §5): sweep the shard count S on the
+/// Fig. 1 workload. Reports per-S index build time (the parallel-build win),
+/// per-iteration selection time and work (≈ S·√(m/S) total evaluations),
+/// and the final error (unchanged — the decomposition is exact).
+pub fn fig_shards_sweep(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(3000usize, 512);
+    let n = 500;
+    let m = opts.pick(50_000usize, 5_000);
+    let t = opts.pick(200usize, 50);
+    let shard_counts = opts.pick_vec(&[1usize, 2, 4, 8, 16], &[1usize, 2, 4]);
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig_shards"),
+        &["shards", "build_s", "select_us", "work", "max_error"],
+    )?;
+    println!("Shards sweep: Fast-MWEM(hnsw) vs S (U={u}, m={m}, T={t})");
+    print_row(&[
+        "S".into(),
+        "build".into(),
+        "select/iter".into(),
+        "work/iter".into(),
+        "final error".into(),
+    ]);
+
+    let (h, q) = workload(opts, u, n, m, 0x5A);
+    for &s in &shard_counts {
+        let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed);
+        cfg.log_every = 0;
+        let out = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Hnsw).with_shards(s),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let build_s = out.lazy.build_time.as_secs_f64();
+        let select_us = out.result.avg_select_time.as_secs_f64() * 1e6;
+        let err = q.max_error(h.probs(), &out.result.p_avg);
+        csv.row_f64(&[
+            s as f64,
+            build_s,
+            select_us,
+            out.result.avg_select_work,
+            err,
+        ])?;
+        print_row(&[
+            format!("{s}"),
+            format!("{build_s:.2}s"),
+            format!("{select_us:.0}us"),
+            format!("{:.0}", out.result.avg_select_work),
+            format!("{err:.4}"),
         ]);
     }
     csv.flush()?;

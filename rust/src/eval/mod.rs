@@ -14,9 +14,10 @@ pub use common::EvalOpts;
 
 use anyhow::{bail, Result};
 
-/// All figure ids, in paper order.
+/// All figure ids: the paper's figures in paper order, then the repo's own
+/// extension figures (`shards` — the sharded-LazyEM sweep of DESIGN.md §5).
 pub const ALL: &[&str] = &[
-    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9",
+    "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "shards",
 ];
 
 /// Run one driver (or "all").
@@ -31,6 +32,7 @@ pub fn run(which: &str, opts: &EvalOpts) -> Result<()> {
         "fig7" => fig_queries::fig7_error_vs_n(opts),
         "fig8" => fig_lp::fig8_runtime_large_m(opts),
         "fig9" => fig_lp::fig9_error_and_violations(opts),
+        "shards" => fig_queries::fig_shards_sweep(opts),
         "all" => {
             for f in ALL {
                 println!("\n================ {f} ================");

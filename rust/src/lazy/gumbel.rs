@@ -24,6 +24,12 @@ use crate::util::rng::Rng;
 pub struct LazySample {
     /// The sampled candidate (index into [0, n)).
     pub index: usize,
+    /// The winner's Gumbel-perturbed score, `max_i (score_i + G_i)`. By
+    /// Gumbel max-stability this is what lets independent draws be combined
+    /// with a plain max: the argmax across disjoint candidate sets of their
+    /// per-set perturbed maxima is an exact softmax sample over the union —
+    /// the identity [`crate::lazy::ShardedLazyEm`] is built on.
+    pub value: f64,
     /// The margin B = M − L − margin_slack.
     pub b: f64,
     /// C — how many tail candidates needed scoring.
@@ -70,7 +76,13 @@ pub fn lazy_gumbel_max(
     }
 
     if k >= n {
-        return LazySample { index: best_idx, b: f64::INFINITY, tail_count: 0, work: k };
+        return LazySample {
+            index: best_idx,
+            value: best_val,
+            b: f64::INFINITY,
+            tail_count: 0,
+            work: k,
+        };
     }
 
     let b = best_val - min_score - margin_slack;
@@ -93,7 +105,7 @@ pub fn lazy_gumbel_max(
         }
     }
 
-    LazySample { index: best_idx, b, tail_count, work: k + tail_count }
+    LazySample { index: best_idx, value: best_val, b, tail_count, work: k + tail_count }
 }
 
 #[cfg(test)]
@@ -172,6 +184,30 @@ mod tests {
         assert!(
             (ratio - std::f64::consts::E).abs() < 0.8,
             "ratio {ratio} (w0={w0}, w1={w1})"
+        );
+    }
+
+    /// Max-stability: the winner's perturbed value `max_i (s_i + G_i)` is
+    /// itself Gumbel(logsumexp(s)) distributed, so its mean must be
+    /// `logsumexp(s) + γ`. This is the identity the sharded EM combines on.
+    #[test]
+    fn winning_value_is_gumbel_of_logsumexp() {
+        let scores = vec![1.2f64, 0.3, -0.5, 2.0, 0.0, 1.0];
+        let top: Vec<(usize, f64)> = scores.iter().cloned().enumerate().collect();
+        let lse = crate::util::math::logsumexp(&scores);
+        let mut rng = Rng::new(12);
+        let trials = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..trials {
+            let s = lazy_gumbel_max(&mut rng, &top, scores.len(), 0.0, |_| unreachable!());
+            sum += s.value;
+        }
+        let mean = sum / trials as f64;
+        let gamma = 0.577_215_664_901_532_9;
+        assert!(
+            (mean - (lse + gamma)).abs() < 0.02,
+            "mean {mean} vs logsumexp+γ {}",
+            lse + gamma
         );
     }
 

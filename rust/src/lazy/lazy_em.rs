@@ -25,6 +25,53 @@ pub enum ScoreTransform {
     Abs,
 }
 
+/// Apply a [`ScoreTransform`] to a raw inner product.
+#[inline]
+pub(crate) fn transform_ip(transform: ScoreTransform, ip: f64) -> f64 {
+    match transform {
+        ScoreTransform::Signed => ip,
+        ScoreTransform::Abs => ip.abs(),
+    }
+}
+
+/// Retrieve the (approximate) top-k of `index` by transformed score.
+///
+/// For [`ScoreTransform::Abs`] the index is probed with both `query` and
+/// `−query` and the hits merged by `max` — the complement trick of
+/// DESIGN.md §3 (`|⟨v,q⟩| = max(⟨v,q⟩, ⟨v,−q⟩)`), shared by [`LazyEm`] and
+/// the per-shard retrieval of [`super::ShardedLazyEm`].
+pub(crate) fn retrieve_top_k_from(
+    index: &dyn MipsIndex,
+    transform: ScoreTransform,
+    k: usize,
+    query: &[f32],
+) -> Vec<(usize, f64)> {
+    match transform {
+        ScoreTransform::Signed => index
+            .top_k(query, k)
+            .into_iter()
+            .map(|nb| (nb.id as usize, nb.score as f64))
+            .collect(),
+        ScoreTransform::Abs => {
+            // |⟨v,q⟩| = max(⟨v,q⟩, ⟨v,−q⟩): query both directions, merge.
+            let neg: Vec<f32> = query.iter().map(|&x| -x).collect();
+            let mut best: std::collections::HashMap<usize, f64> =
+                std::collections::HashMap::with_capacity(2 * k);
+            for nb in index.top_k(query, k).into_iter().chain(index.top_k(&neg, k)) {
+                let e = best.entry(nb.id as usize).or_insert(f64::NEG_INFINITY);
+                *e = e.max(nb.score as f64);
+            }
+            let mut v: Vec<(usize, f64)> = best.into_iter().collect();
+            v.sort_by(|a, b| b.1.total_cmp(&a.1));
+            v.truncate(k);
+            v
+        }
+    }
+}
+
+/// The lazy exponential mechanism over a single monolithic k-MIPS index
+/// (Algorithm 2's `LazyEM` procedure). Borrows the index and the raw
+/// vectors; one instance serves any number of [`LazyEm::select`] draws.
 pub struct LazyEm<'a> {
     index: &'a dyn MipsIndex,
     vectors: &'a VectorSet,
@@ -36,6 +83,24 @@ pub struct LazyEm<'a> {
 }
 
 impl<'a> LazyEm<'a> {
+    /// Create a lazy EM over `index`, defaulting k to ⌈√m⌉.
+    ///
+    /// ```
+    /// use fast_mwem::lazy::{LazyEm, ScoreTransform};
+    /// use fast_mwem::mips::{FlatIndex, VectorSet};
+    /// use fast_mwem::util::rng::Rng;
+    ///
+    /// // 4 candidate vectors in 2 dimensions
+    /// let vs = VectorSet::new(vec![1.0, 0.0, 0.0, 1.0, -1.0, 0.0, 0.5, 0.5], 4, 2);
+    /// let index = FlatIndex::new(vs.clone());
+    /// let em = LazyEm::new(&index, &vs, ScoreTransform::Abs);
+    /// assert_eq!(em.k, 2); // ⌈√4⌉
+    ///
+    /// // one ε₀-DP draw ∝ exp(ε₀·|⟨v_i, q⟩|/(2Δ))
+    /// let mut rng = Rng::new(7);
+    /// let sample = em.select(&mut rng, &[1.0, 0.0], 1.0, 0.1);
+    /// assert!(sample.index < 4);
+    /// ```
     pub fn new(
         index: &'a dyn MipsIndex,
         vectors: &'a VectorSet,
@@ -46,11 +111,13 @@ impl<'a> LazyEm<'a> {
         LazyEm { index, vectors, transform, k, margin_slack: 0.0 }
     }
 
+    /// Override the top-k size (clamped to `[1, m]`).
     pub fn with_k(mut self, k: usize) -> Self {
         self.k = k.clamp(1, self.index.len());
         self
     }
 
+    /// Set Algorithm 6's margin reduction `c` (see [`lazy_gumbel_max`]).
     pub fn with_margin_slack(mut self, c: f64) -> Self {
         self.margin_slack = c;
         self
@@ -59,42 +126,12 @@ impl<'a> LazyEm<'a> {
     /// Raw (untransformed-scale) score of candidate i for `query`.
     #[inline]
     pub fn raw_score(&self, i: usize, query: &[f32]) -> f64 {
-        let ip = dot(self.vectors.row(i), query) as f64;
-        match self.transform {
-            ScoreTransform::Signed => ip,
-            ScoreTransform::Abs => ip.abs(),
-        }
+        transform_ip(self.transform, dot(self.vectors.row(i), query) as f64)
     }
 
     /// Retrieve the (approximate) top-k candidates by transformed score.
     pub fn retrieve_top_k(&self, query: &[f32]) -> Vec<(usize, f64)> {
-        match self.transform {
-            ScoreTransform::Signed => self
-                .index
-                .top_k(query, self.k)
-                .into_iter()
-                .map(|nb| (nb.id as usize, nb.score as f64))
-                .collect(),
-            ScoreTransform::Abs => {
-                // |⟨v,q⟩| = max(⟨v,q⟩, ⟨v,−q⟩): query both directions, merge.
-                let neg: Vec<f32> = query.iter().map(|&x| -x).collect();
-                let mut best: std::collections::HashMap<usize, f64> =
-                    std::collections::HashMap::with_capacity(2 * self.k);
-                for nb in self
-                    .index
-                    .top_k(query, self.k)
-                    .into_iter()
-                    .chain(self.index.top_k(&neg, self.k))
-                {
-                    let e = best.entry(nb.id as usize).or_insert(f64::NEG_INFINITY);
-                    *e = e.max(nb.score as f64);
-                }
-                let mut v: Vec<(usize, f64)> = best.into_iter().collect();
-                v.sort_by(|a, b| b.1.total_cmp(&a.1));
-                v.truncate(self.k);
-                v
-            }
-        }
+        retrieve_top_k_from(self.index, self.transform, self.k, query)
     }
 
     /// One ε₀-DP selection: sample i ∝ exp(ε₀·score_i/(2Δ)) in Θ(√m)

@@ -3,10 +3,15 @@
 //! [`lazy_gumbel_max`] implements Algorithms 4/5/6 (Mussmann et al. 2017's
 //! lazy Gumbel sampling plus the paper's approximate-top-k variants);
 //! [`LazyEm`] wires it to a k-MIPS index so a single EM draw over m
-//! candidates costs Θ(√m) expected time instead of Θ(m).
+//! candidates costs Θ(√m) expected time instead of Θ(m); and
+//! [`ShardedLazyEm`] splits the candidates across S per-shard indices —
+//! exact by Gumbel max-stability — so index construction and the per-draw
+//! search parallelize on the coordinator pool (DESIGN.md §5).
 
 pub mod gumbel;
 pub mod lazy_em;
+pub mod sharded;
 
 pub use gumbel::{lazy_gumbel_max, LazySample};
 pub use lazy_em::{LazyEm, ScoreTransform};
+pub use sharded::ShardedLazyEm;

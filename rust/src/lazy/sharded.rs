@@ -1,0 +1,470 @@
+//! Sharded lazy exponential mechanism (DESIGN.md §5).
+//!
+//! [`super::LazyEm`] answers one EM draw over m candidates in Θ(√m)
+//! expected time, but it builds and probes a single monolithic k-MIPS
+//! index — index construction (and any rebuild) is serial, and every draw
+//! is a single-threaded walk of one index. [`ShardedLazyEm`] removes that
+//! bottleneck by partitioning the candidate set into S contiguous shards,
+//! building one index per shard **in parallel** via the pool module's
+//! scoped fan-out ([`crate::coordinator::pool::parallel_map`] — short-lived
+//! scoped threads, not the [`crate::coordinator::Coordinator`]'s persistent
+//! workers), and answering `select()` by drawing each shard's lazy Gumbel
+//! max and taking the argmax across shards.
+//!
+//! The decomposition is *exact*, not approximate, by Gumbel max-stability:
+//! a softmax sample over all m candidates is the argmax of the perturbed
+//! scores `s_i + G_i`, and partitioning the candidates into disjoint
+//! shards commutes with that argmax —
+//!
+//! ```text
+//! argmax_{i ∈ [m]} (s_i + G_i)  =  argmax over shards of
+//!                                  [ argmax_{i ∈ shard} (s_i + G_i) ].
+//! ```
+//!
+//! Each shard draw is itself a lazy Gumbel draw ([`lazy_gumbel_max`]),
+//! whose [`LazySample::value`] is exactly its shard's perturbed max, so the
+//! outer combine is a plain `max` over S scalars. With per-shard
+//! k = ⌈√(m/S)⌉ each shard does Θ(√(m/S)) expected work (the paper's bound
+//! applied at shard size m/S); the S shard draws are independent and can
+//! run on the pool, so expected wall-clock drops from Θ(√m) to Θ(√(m/S))
+//! at S-way parallelism, and index build — the dominant preprocessing cost
+//! for IVF/HNSW — parallelizes S ways with no cross-shard coupling.
+
+use super::gumbel::{lazy_gumbel_max, LazySample};
+use super::lazy_em::{retrieve_top_k_from, transform_ip};
+use super::ScoreTransform;
+use crate::coordinator::job::{execute_shard_search, ShardSearchJob};
+use crate::coordinator::pool::parallel_map;
+use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
+use crate::util::math::dot;
+use crate::util::rng::Rng;
+
+/// One contiguous slice of the candidate set with its own k-MIPS index.
+struct Shard {
+    /// Global id of the shard's first candidate.
+    offset: usize,
+    /// Number of candidates in the shard.
+    len: usize,
+    /// Index over the shard's rows only (local ids `0..len`).
+    index: Box<dyn MipsIndex>,
+}
+
+/// The exponential mechanism over S independently-indexed shards — exact
+/// by Gumbel max-stability, parallel by construction.
+///
+/// ```
+/// use fast_mwem::lazy::{ScoreTransform, ShardedLazyEm};
+/// use fast_mwem::mips::{IndexKind, VectorSet};
+/// use fast_mwem::util::rng::Rng;
+///
+/// let mut rng = Rng::new(1);
+/// let data: Vec<f32> = (0..64 * 4).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+/// let vs = VectorSet::new(data, 64, 4);
+/// let em = ShardedLazyEm::build(
+///     IndexKind::Flat,
+///     &vs,
+///     4, // shards
+///     ScoreTransform::Abs,
+///     7, // seed
+/// );
+/// assert_eq!(em.num_shards(), 4);
+/// let sample = em.select(&mut rng, &[0.1, -0.2, 0.3, 0.0], 1.0, 0.1);
+/// assert!(sample.index < 64);
+/// ```
+pub struct ShardedLazyEm<'a> {
+    shards: Vec<Shard>,
+    /// The full candidate set (borrowed, like [`super::LazyEm`]'s), for
+    /// exact tail scoring by global row id — only the per-shard index
+    /// copies are owned.
+    vectors: &'a VectorSet,
+    transform: ScoreTransform,
+    /// Per-shard top-k size (default ⌈√(m/S)⌉, clamped to each shard).
+    k: usize,
+    margin_slack: f64,
+    parallel_select: bool,
+    workers: usize,
+}
+
+impl<'a> ShardedLazyEm<'a> {
+    /// Partition `vectors` into `shards` contiguous shards and build one
+    /// index of `kind` per shard, in parallel (one scoped build job per
+    /// shard via [`parallel_map`]).
+    ///
+    /// `shards` is clamped to `[1, m]`; shard sizes differ by at most one.
+    /// Panics if `vectors` is empty.
+    pub fn build(
+        kind: IndexKind,
+        vectors: &'a VectorSet,
+        shards: usize,
+        transform: ScoreTransform,
+        seed: u64,
+    ) -> Self {
+        let m = vectors.len();
+        assert!(m > 0, "ShardedLazyEm needs a non-empty vector set");
+        let s = shards.clamp(1, m);
+        let d = vectors.dim();
+
+        let (base, rem) = (m / s, m % s);
+        // independent, well-mixed build seed per shard via the tested
+        // Rng::split primitive (derived up front, on the calling thread)
+        let mut seed_rng = Rng::new(seed);
+        let mut specs: Vec<(usize, usize, u64, VectorSet)> = Vec::with_capacity(s);
+        let mut offset = 0usize;
+        for i in 0..s {
+            let len = base + usize::from(i < rem);
+            let rows = vectors.as_slice()[offset * d..(offset + len) * d].to_vec();
+            let shard_seed = seed_rng.split(i as u64).next_u64();
+            specs.push((offset, len, shard_seed, VectorSet::new(rows, len, d)));
+            offset += len;
+        }
+
+        let shards_built: Vec<Shard> = parallel_map(s, specs, |(offset, len, shard_seed, vs)| {
+            Shard { offset, len, index: build_index(kind, vs, shard_seed) }
+        });
+
+        let k = ((m as f64 / s as f64).sqrt().ceil() as usize).max(1);
+        ShardedLazyEm {
+            shards: shards_built,
+            vectors,
+            transform,
+            k,
+            margin_slack: 0.0,
+            parallel_select: false,
+            workers: s,
+        }
+    }
+
+    /// Override the per-shard top-k size (clamped to ≥ 1; further clamped
+    /// to each shard's length at draw time).
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k.max(1);
+        self
+    }
+
+    /// Set Algorithm 6's margin reduction `c` (applied within each shard).
+    pub fn with_margin_slack(mut self, c: f64) -> Self {
+        self.margin_slack = c;
+        self
+    }
+
+    /// Run the S shard draws of each `select` on scoped threads instead of
+    /// inline. Each draw pays an S-thread spawn/join, so this only wins
+    /// once per-shard work (√(m/S) score evaluations) dominates thread
+    /// dispatch — keep it off for small shards. The result is bit-identical
+    /// either way because every shard consumes its own pre-split RNG stream.
+    pub fn with_parallel_select(mut self, parallel: bool) -> Self {
+        self.parallel_select = parallel;
+        self
+    }
+
+    /// Cap the pool width used for parallel selection (default: one worker
+    /// per shard).
+    pub fn with_workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Total number of candidates m.
+    pub fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    /// True when the candidate set is empty (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+
+    /// Number of shards S.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard top-k size.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// `(offset, len)` of every shard, in candidate-id order.
+    pub fn shard_bounds(&self) -> Vec<(usize, usize)> {
+        self.shards.iter().map(|s| (s.offset, s.len)).collect()
+    }
+
+    /// One shard's lazy Gumbel draw: retrieve the shard-local top-k, take
+    /// the lazy perturbed max over the shard, and translate the winner to
+    /// its global candidate id. Called from
+    /// [`crate::coordinator::job::execute_shard_search`].
+    pub(crate) fn shard_draw(
+        &self,
+        shard_id: usize,
+        mut rng: Rng,
+        query: &[f32],
+        scale: f64,
+    ) -> LazySample {
+        let shard = &self.shards[shard_id];
+        let k = self.k.clamp(1, shard.len);
+        let mut top = retrieve_top_k_from(shard.index.as_ref(), self.transform, k, query);
+        for t in top.iter_mut() {
+            t.1 *= scale;
+        }
+        let (offset, transform, vectors) = (shard.offset, self.transform, self.vectors);
+        let mut local = lazy_gumbel_max(&mut rng, &top, shard.len, self.margin_slack, |i| {
+            scale * transform_ip(transform, dot(vectors.row(offset + i), query) as f64)
+        });
+        local.index += offset;
+        local
+    }
+
+    /// One ε₀-DP selection: sample i ∝ exp(ε₀·score_i/(2Δ)) — identical in
+    /// distribution to [`super::LazyEm::select`] over the same candidates.
+    pub fn select(
+        &self,
+        rng: &mut Rng,
+        query: &[f32],
+        eps0: f64,
+        sensitivity: f64,
+    ) -> LazySample {
+        self.select_detailed(rng, query, eps0, sensitivity).0
+    }
+
+    /// Like [`ShardedLazyEm::select`], additionally returning every shard's
+    /// own draw (diagnostics and the max-stability tests). The combined
+    /// sample's `index`, `value` and `b` come from the winning shard;
+    /// `work` and `tail_count` are summed across shards (total score
+    /// evaluations charged to the draw — wall-clock divides by the pool
+    /// width when parallel selection is on).
+    pub fn select_detailed(
+        &self,
+        rng: &mut Rng,
+        query: &[f32],
+        eps0: f64,
+        sensitivity: f64,
+    ) -> (LazySample, Vec<LazySample>) {
+        let scale = eps0 / (2.0 * sensitivity);
+        // Pre-split one RNG stream per shard on the caller's thread: the
+        // draw is deterministic in `rng` no matter how jobs are scheduled.
+        let jobs: Vec<ShardSearchJob> = (0..self.shards.len())
+            .map(|i| ShardSearchJob { shard_id: i, rng: rng.split(i as u64) })
+            .collect();
+
+        let draws: Vec<LazySample> = if self.parallel_select && self.shards.len() > 1 {
+            parallel_map(self.workers, jobs, |job| {
+                execute_shard_search(self, query, scale, job)
+            })
+        } else {
+            jobs.into_iter()
+                .map(|job| execute_shard_search(self, query, scale, job))
+                .collect()
+        };
+
+        // Gumbel max-stability: the global sample is the shard draw with
+        // the largest perturbed value.
+        let mut combined = draws[0];
+        for d in &draws[1..] {
+            if d.value > combined.value {
+                combined.index = d.index;
+                combined.value = d.value;
+                combined.b = d.b;
+            }
+            combined.tail_count += d.tail_count;
+            combined.work += d.work;
+        }
+        (combined, draws)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lazy::{LazyEm, ScoreTransform};
+    use crate::mips::FlatIndex;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    #[test]
+    fn shard_bounds_partition_the_candidates() {
+        for (m, s) in [(10, 1), (10, 2), (10, 7), (10, 10), (10, 25), (64, 4)] {
+            let vs = random_set(m, 3, 1);
+            let em = ShardedLazyEm::build(IndexKind::Flat, &vs, s, ScoreTransform::Abs, 2);
+            let bounds = em.shard_bounds();
+            assert_eq!(em.num_shards(), s.min(m));
+            let mut next = 0usize;
+            for &(offset, len) in &bounds {
+                assert_eq!(offset, next, "shards must be contiguous");
+                assert!(len >= 1);
+                next += len;
+            }
+            assert_eq!(next, m, "shards must cover all m candidates");
+            // balanced: sizes differ by at most one
+            let lens: Vec<usize> = bounds.iter().map(|&(_, l)| l).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced shards {lens:?}");
+        }
+    }
+
+    /// The acceptance bar of this subsystem: for S ∈ {1, 2, 7} the sharded
+    /// mechanism's selection distribution equals the exact softmax (and
+    /// hence [`LazyEm`]'s — Theorem 3.3 plus max-stability).
+    #[test]
+    fn sharded_matches_exhaustive_em_distribution() {
+        let m = 40;
+        let d = 6;
+        let vs = random_set(m, d, 1);
+        let mut rng = Rng::new(2);
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+        let (eps0, sens) = (1.0, 0.05);
+        let scale = eps0 / (2.0 * sens);
+
+        // target softmax over |<v_i, q>|
+        let weights: Vec<f64> = (0..m)
+            .map(|i| (scale * (dot(vs.row(i), &q) as f64).abs()).exp())
+            .collect();
+        let z: f64 = weights.iter().sum();
+
+        for s in [1usize, 2, 7] {
+            let em = ShardedLazyEm::build(IndexKind::Flat, &vs, s, ScoreTransform::Abs, 3);
+            let trials = 120_000;
+            let mut counts = vec![0usize; m];
+            for _ in 0..trials {
+                counts[em.select(&mut rng, &q, eps0, sens).index] += 1;
+            }
+            let mut max_err = 0.0f64;
+            for i in 0..m {
+                let want = weights[i] / z;
+                let got = counts[i] as f64 / trials as f64;
+                max_err = max_err.max((got - want).abs());
+            }
+            assert!(max_err < 0.013, "S={s}: max abs prob error {max_err}");
+        }
+    }
+
+    /// Max-stability identity, checked exactly per draw: the combined
+    /// sample IS the shard draw with the maximal perturbed value, its
+    /// index lies inside the winning shard, and work/tails are summed.
+    #[test]
+    fn combine_is_exact_argmax_over_shard_values() {
+        let m = 50;
+        let d = 4;
+        let vs = random_set(m, d, 5);
+        let mut rng = Rng::new(6);
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+
+        for s in [1usize, 2, 7] {
+            let em = ShardedLazyEm::build(IndexKind::Flat, &vs, s, ScoreTransform::Signed, 7);
+            let bounds = em.shard_bounds();
+            for _ in 0..200 {
+                let (combined, draws) = em.select_detailed(&mut rng, &q, 2.0, 0.5);
+                assert_eq!(draws.len(), em.num_shards());
+                let best = draws
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.value.total_cmp(&b.1.value))
+                    .unwrap();
+                assert_eq!(combined.index, best.1.index);
+                assert_eq!(combined.value, best.1.value);
+                let (offset, len) = bounds[best.0];
+                assert!(
+                    combined.index >= offset && combined.index < offset + len,
+                    "winner {} outside its shard [{offset}, {})",
+                    combined.index,
+                    offset + len
+                );
+                assert_eq!(
+                    combined.work,
+                    draws.iter().map(|d| d.work).sum::<usize>()
+                );
+                assert_eq!(
+                    combined.tail_count,
+                    draws.iter().map(|d| d.tail_count).sum::<usize>()
+                );
+                // every shard draw stays within its own candidate range
+                for (i, dr) in draws.iter().enumerate() {
+                    let (o, l) = bounds[i];
+                    assert!(dr.index >= o && dr.index < o + l);
+                }
+            }
+        }
+    }
+
+    /// At near-deterministic ε the sharded and monolithic mechanisms must
+    /// agree exactly: both return the true argmax.
+    #[test]
+    fn sharded_and_monolithic_agree_at_high_eps() {
+        let m = 100;
+        let d = 8;
+        let vs = random_set(m, d, 3);
+        let q = vec![1.0f32; d];
+        let best = (0..m)
+            .max_by(|&a, &b| dot(vs.row(a), &q).total_cmp(&dot(vs.row(b), &q)))
+            .unwrap();
+
+        let flat = FlatIndex::new(vs.clone());
+        let mono = LazyEm::new(&flat, &vs, ScoreTransform::Signed);
+        let mut rng = Rng::new(4);
+        for s in [1usize, 2, 7] {
+            let em = ShardedLazyEm::build(IndexKind::Flat, &vs, s, ScoreTransform::Signed, 9);
+            let mut agree = 0usize;
+            for _ in 0..100 {
+                let a = em.select(&mut rng, &q, 5_000.0, 1.0).index;
+                let b = mono.select(&mut rng, &q, 5_000.0, 1.0).index;
+                if a == best {
+                    agree += 1;
+                }
+                assert_eq!(
+                    a, b,
+                    "S={s}: at ε→∞ both must return the argmax deterministically"
+                );
+            }
+            assert!(agree > 95, "S={s}: hit rate {agree}/100");
+        }
+    }
+
+    /// Parallel shard search returns exactly the sequential result (the
+    /// RNG streams are pre-split, so scheduling cannot change the draw).
+    #[test]
+    fn parallel_select_is_deterministic() {
+        let m = 200;
+        let d = 6;
+        let vs = random_set(m, d, 8);
+        let q: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).sin()).collect();
+
+        let seq = ShardedLazyEm::build(IndexKind::Flat, &vs, 4, ScoreTransform::Abs, 11)
+            .with_parallel_select(false);
+        let par = ShardedLazyEm::build(IndexKind::Flat, &vs, 4, ScoreTransform::Abs, 11)
+            .with_parallel_select(true);
+
+        let mut rng_a = Rng::new(12);
+        let mut rng_b = Rng::new(12);
+        for _ in 0..50 {
+            let a = seq.select(&mut rng_a, &q, 1.0, 0.1);
+            let b = par.select(&mut rng_b, &q, 1.0, 0.1);
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.work, b.work);
+            assert!((a.value - b.value).abs() == 0.0);
+        }
+    }
+
+    /// Expected per-draw work obeys the sharded bound: about S·√(m/S) score
+    /// evaluations in total (√(m/S) per shard), i.e. √(S·m) — not S·√m.
+    #[test]
+    fn total_work_tracks_sharded_bound() {
+        let m = 4_096;
+        let d = 8;
+        let s = 4;
+        let vs = random_set(m, d, 9);
+        let em = ShardedLazyEm::build(IndexKind::Flat, &vs, s, ScoreTransform::Abs, 10);
+        let mut rng = Rng::new(13);
+        let q: Vec<f32> = (0..d).map(|_| rng.uniform(-0.1, 0.1) as f32).collect();
+        let trials = 50;
+        let mut total = 0usize;
+        for _ in 0..trials {
+            total += em.select(&mut rng, &q, 1.0, 1.0).work;
+        }
+        let avg = total as f64 / trials as f64;
+        let bound = 6.0 * (s as f64) * (m as f64 / s as f64).sqrt();
+        assert!(avg < bound, "avg work {avg} vs bound {bound}");
+    }
+}

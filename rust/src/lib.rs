@@ -19,8 +19,12 @@
 //! AOT artifacts through the PJRT C API (`xla` crate) once and executes them
 //! from Rust.
 //!
-//! See `DESIGN.md` for the module inventory and the per-figure experiment
-//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` for the module inventory, the offline-build
+//! substitutions (§3), the per-figure experiment index (§4) and the
+//! sharded-LazyEM design (§5); `EXPERIMENTS.md` records paper-vs-measured
+//! results; `README.md` has the build/run quickstart.
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

@@ -11,7 +11,7 @@
 
 use crate::dp::accountant::per_step_epsilon;
 use crate::dp::mechanisms::exponential_mechanism;
-use crate::lazy::{LazyEm, ScoreTransform};
+use crate::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use crate::mips::{build_index, MipsIndex, VectorSet};
 #[cfg(test)]
 use crate::mips::IndexKind;
@@ -23,31 +23,42 @@ use std::time::{Duration, Instant};
 use super::bregman::bregman_project;
 use super::scalar::SelectionMode;
 
+/// Configuration for the §4.2 dense-MWU constraint-private solver.
 #[derive(Clone, Debug)]
 pub struct DenseLpConfig {
+    /// Number of MWU rounds T.
     pub t: usize,
+    /// Total privacy budget ε.
     pub eps: f64,
+    /// Total privacy budget δ.
     pub delta: f64,
     /// Density parameter s: outputs may violate up to s−1 constraints.
     pub s: usize,
+    /// Dual-oracle selection mechanism.
     pub mode: SelectionMode,
+    /// Mechanism seed.
     pub seed: u64,
 }
 
 impl DenseLpConfig {
+    /// Per-round ε₀ from the advanced-composition budget split.
     pub fn eps0(&self) -> f64 {
         per_step_epsilon(self.eps, self.delta, self.t as u64, 2.0)
     }
 }
 
+/// Output of [`run_dense`].
 #[derive(Debug)]
 pub struct DenseLpResult {
     /// Averaged primal solution x̄.
     pub x: Vec<f32>,
-    /// Fraction of constraints violated by more than alpha at x̄.
+    /// Solve wall-clock (excluding index build).
     pub total_time: Duration,
+    /// Wall-clock spent building the dual-oracle index / shards.
     pub index_build_time: Duration,
+    /// Mean selection work (score evaluations) per round.
     pub avg_select_work: f64,
+    /// Per-round ε₀ actually used.
     pub eps0: f64,
 }
 
@@ -88,10 +99,23 @@ pub fn run_dense(cfg: &DenseLpConfig, lp: &PackingLp) -> DenseLpResult {
 
     let build_started = Instant::now();
     let nvecs = oracle_vectors(lp);
-    let index: Option<Box<dyn MipsIndex>> = match cfg.mode {
-        SelectionMode::Exhaustive => None,
-        SelectionMode::Lazy(kind) => Some(build_index(kind, nvecs.clone(), cfg.seed ^ 0xDEA1)),
-    };
+    let mut index: Option<Box<dyn MipsIndex>> = None;
+    let mut sharded: Option<ShardedLazyEm> = None;
+    match cfg.mode {
+        SelectionMode::Exhaustive => {}
+        SelectionMode::Lazy(kind) => {
+            index = Some(build_index(kind, nvecs.clone(), cfg.seed ^ 0xDEA1));
+        }
+        SelectionMode::LazySharded(kind, shards) => {
+            sharded = Some(ShardedLazyEm::build(
+                kind,
+                &nvecs,
+                shards,
+                ScoreTransform::Signed,
+                cfg.seed ^ 0xDEA1,
+            ));
+        }
+    }
     let index_build_time = build_started.elapsed();
 
     let mut w = vec![1.0f32; m];
@@ -104,16 +128,16 @@ pub fn run_dense(cfg: &DenseLpConfig, lp: &PackingLp) -> DenseLpResult {
         let y = bregman_project(&w, s);
 
         // dual oracle: pick vertex j maximizing ⟨y, N_j⟩ privately
-        let (j_t, work) = match &index {
-            None => {
-                let scores: Vec<f32> = (0..d).map(|j| dot(nvecs.row(j), &y)).collect();
-                (exponential_mechanism(&mut rng, &scores, eps0, sens), d)
-            }
-            Some(idx) => {
-                let em = LazyEm::new(idx.as_ref(), &nvecs, ScoreTransform::Signed);
-                let smp = em.select(&mut rng, &y, eps0, sens);
-                (smp.index, smp.work)
-            }
+        let (j_t, work) = if let Some(em) = &sharded {
+            let smp = em.select(&mut rng, &y, eps0, sens);
+            (smp.index, smp.work)
+        } else if let Some(idx) = &index {
+            let em = LazyEm::new(idx.as_ref(), &nvecs, ScoreTransform::Signed);
+            let smp = em.select(&mut rng, &y, eps0, sens);
+            (smp.index, smp.work)
+        } else {
+            let scores: Vec<f32> = (0..d).map(|j| dot(nvecs.row(j), &y)).collect();
+            (exponential_mechanism(&mut rng, &scores, eps0, sens), d)
         };
         work_total += work;
 

@@ -8,18 +8,24 @@
 
 use crate::dp::accountant::per_step_epsilon;
 use crate::dp::mechanisms::exponential_mechanism;
-use crate::lazy::{LazyEm, ScoreTransform};
+use crate::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
 use crate::util::math::{dot, normalize_l1};
 use crate::util::rng::Rng;
 use crate::workloads::LpInstance;
 use std::time::{Duration, Instant};
 
-/// Exhaustive EM (classic baseline) vs LazyEM over a k-MIPS index.
+/// How the worst constraint is selected each round: the exhaustive EM
+/// baseline, LazyEM over one k-MIPS index, or LazyEM over S per-shard
+/// indices (exact by max-stability, parallel index build — DESIGN.md §5).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum SelectionMode {
+    /// Score all m constraints and run the classic exponential mechanism.
     Exhaustive,
+    /// Θ(√m)-expected-time LazyEM over one index of the given kind.
     Lazy(IndexKind),
+    /// LazyEM over the given number of shards, each with its own index.
+    LazySharded(IndexKind, usize),
 }
 
 impl std::fmt::Display for SelectionMode {
@@ -27,19 +33,25 @@ impl std::fmt::Display for SelectionMode {
         match self {
             SelectionMode::Exhaustive => write!(f, "exhaustive"),
             SelectionMode::Lazy(k) => write!(f, "lazy-{k}"),
+            SelectionMode::LazySharded(k, s) => write!(f, "lazy-{k}-x{s}"),
         }
     }
 }
 
+/// Configuration for the Algorithm 3 scalar-private solver.
 #[derive(Clone, Debug)]
 pub struct ScalarLpConfig {
     /// Number of MWU rounds T (paper: 9ρ²·log d / α²).
     pub t: usize,
+    /// Total privacy budget ε.
     pub eps: f64,
+    /// Total privacy budget δ.
     pub delta: f64,
     /// b-vector sensitivity Δ∞ between neighboring databases.
     pub delta_inf: f64,
+    /// Constraint-selection mechanism.
     pub mode: SelectionMode,
+    /// Mechanism seed.
     pub seed: u64,
     /// Record violation stats every `log_every` rounds (0 = never).
     pub log_every: usize,
@@ -66,23 +78,35 @@ impl ScalarLpConfig {
     }
 }
 
+/// Per-logged-round statistics of the scalar-private solver.
 #[derive(Clone, Debug)]
 pub struct LpIterStat {
+    /// Round number (1-based).
     pub iter: usize,
+    /// Fraction of constraints violated by the running average.
     pub violation_fraction: f64,
+    /// max_i (A_i x̄ − b_i) of the running average.
     pub max_violation: f64,
+    /// Score evaluations charged to this round's selection.
     pub selection_work: usize,
 }
 
+/// Output of [`run_scalar`].
 #[derive(Debug)]
 pub struct ScalarLpResult {
     /// Averaged iterate x̄ = (1/T) Σ x̃⁽ᵗ⁾ (Algorithm 3's output).
     pub x: Vec<f32>,
+    /// Per-logged-round statistics (empty when `log_every` = 0).
     pub stats: Vec<LpIterStat>,
+    /// Solve wall-clock (excluding index build).
     pub total_time: Duration,
+    /// Wall-clock spent building the k-MIPS index / shards.
     pub index_build_time: Duration,
+    /// Mean selection time per round.
     pub avg_select_time: Duration,
+    /// Mean selection work (score evaluations) per round.
     pub avg_select_work: f64,
+    /// Per-round ε₀ actually used.
     pub eps0: f64,
 }
 
@@ -108,10 +132,23 @@ pub fn run_scalar(cfg: &ScalarLpConfig, lp: &LpInstance) -> ScalarLpResult {
     // Static MIPS dataset {A_i ∘ b_i}; query x̃ ∘ −1 gives A_i x̃ − b_i.
     let build_started = Instant::now();
     let cat = concat_constraints(lp);
-    let index: Option<Box<dyn MipsIndex>> = match cfg.mode {
-        SelectionMode::Exhaustive => None,
-        SelectionMode::Lazy(kind) => Some(build_index(kind, cat.clone(), cfg.seed ^ 0xA11CE)),
-    };
+    let mut index: Option<Box<dyn MipsIndex>> = None;
+    let mut sharded: Option<ShardedLazyEm> = None;
+    match cfg.mode {
+        SelectionMode::Exhaustive => {}
+        SelectionMode::Lazy(kind) => {
+            index = Some(build_index(kind, cat.clone(), cfg.seed ^ 0xA11CE));
+        }
+        SelectionMode::LazySharded(kind, shards) => {
+            sharded = Some(ShardedLazyEm::build(
+                kind,
+                &cat,
+                shards,
+                ScoreTransform::Signed,
+                cfg.seed ^ 0xA11CE,
+            ));
+        }
+    }
     let index_build_time = build_started.elapsed();
 
     let mut x = vec![1.0 / d as f32; d];
@@ -130,17 +167,16 @@ pub fn run_scalar(cfg: &ScalarLpConfig, lp: &LpInstance) -> ScalarLpResult {
         xq[d] = -1.0;
 
         let sel_started = Instant::now();
-        let (p_t, work) = match (&index, cfg.mode) {
-            (None, _) => {
-                let scores: Vec<f32> =
-                    (0..m).map(|i| dot(cat.row(i), &xq)).collect();
-                (exponential_mechanism(&mut rng, &scores, eps0, cfg.delta_inf), m)
-            }
-            (Some(idx), _) => {
-                let em = LazyEm::new(idx.as_ref(), &cat, ScoreTransform::Signed);
-                let s = em.select(&mut rng, &xq, eps0, cfg.delta_inf);
-                (s.index, s.work)
-            }
+        let (p_t, work) = if let Some(em) = &sharded {
+            let s = em.select(&mut rng, &xq, eps0, cfg.delta_inf);
+            (s.index, s.work)
+        } else if let Some(idx) = &index {
+            let em = LazyEm::new(idx.as_ref(), &cat, ScoreTransform::Signed);
+            let s = em.select(&mut rng, &xq, eps0, cfg.delta_inf);
+            (s.index, s.work)
+        } else {
+            let scores: Vec<f32> = (0..m).map(|i| dot(cat.row(i), &xq)).collect();
+            (exponential_mechanism(&mut rng, &scores, eps0, cfg.delta_inf), m)
         };
         select_total += sel_started.elapsed();
         work_total += work;
@@ -238,6 +274,19 @@ mod tests {
             (v_ex - v_lz).abs() < 0.5,
             "exhaustive {v_ex} lazy {v_lz} (should be comparable)"
         );
+    }
+
+    #[test]
+    fn sharded_matches_exhaustive_quality() {
+        let (lp, ex) = solve(SelectionMode::Exhaustive, 5);
+        let (_, sh) = solve(SelectionMode::LazySharded(IndexKind::Flat, 4), 5);
+        let v_ex = lp.max_violation(&ex.x);
+        let v_sh = lp.max_violation(&sh.x);
+        assert!(
+            (v_ex - v_sh).abs() < 0.5,
+            "exhaustive {v_ex} sharded {v_sh} (should be comparable)"
+        );
+        assert!(sh.avg_select_work < 400.0, "work {}", sh.avg_select_work);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! key=value / [section] subset, see config/mod.rs).
 
 use anyhow::{bail, Context, Result};
-use fast_mwem::config::Config;
+use fast_mwem::config::{Config, ShardingConfig};
 use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
 use fast_mwem::eval::{self, EvalOpts};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
@@ -81,12 +81,17 @@ const HELP: &str = "\
 repro — Fast-MWEM reproduction CLI
 
 USAGE:
-  repro eval <fig1..fig9|all> [--quick] [--out=DIR] [--seed=N]
+  repro eval <fig1..fig9|shards|all> [--quick] [--out=DIR] [--seed=N] [--shards=S]
   repro release [--m=1000] [--u=1024] [--n=500] [--t=2000]
-                [--index=hnsw|ivf|flat|none] [--eps=1.0] [--delta=1e-3] [--xla]
+                [--index=hnsw|ivf|flat|none] [--eps=1.0] [--delta=1e-3]
+                [--shards=S] [--xla]
   repro lp [--m=20000] [--d=20] [--t=2000] [--mode=hnsw|ivf|flat|exhaustive]
-  repro serve [--jobs=8] [--workers=4] [--eps-cap=N]
+           [--shards=S]
+  repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
   repro check-artifacts [--dir=artifacts]
+
+Sharding (DESIGN.md §5): --shards=S (or a [sharding] config section) splits
+the lazy EM across S per-shard indices, built in parallel on the pool.
 ";
 
 fn cmd_eval(pos: &[String], cfg: &Config) -> Result<()> {
@@ -95,6 +100,7 @@ fn cmd_eval(pos: &[String], cfg: &Config) -> Result<()> {
         quick: cfg.get_str("quick").is_some(),
         out_dir: cfg.str_or("out", "results").into(),
         seed: cfg.or("seed", 20260204u64)?,
+        shards: ShardingConfig::from_config(cfg)?.shards,
     };
     eval::run(which, &opts)
 }
@@ -109,6 +115,7 @@ fn cmd_release(cfg: &Config) -> Result<()> {
     let seed: u64 = cfg.or("seed", 1u64)?;
     let index = cfg.str_or("index", "hnsw");
     let use_xla = cfg.get_str("xla").is_some();
+    let sharding = ShardingConfig::from_config(cfg)?;
 
     let mut rng = Rng::new(seed);
     let h = workloads::gaussian_histogram(&mut rng, u, n);
@@ -116,7 +123,13 @@ fn cmd_release(cfg: &Config) -> Result<()> {
     let mut mwem_cfg = MwemConfig::paper(t, u, eps, delta, seed ^ 7);
     mwem_cfg.log_every = (t / 10).max(1);
 
-    println!("release: U={u} m={m} n={n} T={t} eps={eps} index={index} xla={use_xla}");
+    if index == "none" && sharding.shards > 1 {
+        println!("note: --shards only applies to Fast-MWEM; ignored with --index=none");
+    }
+    println!(
+        "release: U={u} m={m} n={n} T={t} eps={eps} index={index} shards={} xla={use_xla}",
+        if index == "none" { 1 } else { sharding.shards }
+    );
     let p0 = vec![1.0 / u as f32; u];
     println!("initial max error: {:.4}", q.max_error(h.probs(), &p0));
 
@@ -134,7 +147,12 @@ fn cmd_release(cfg: &Config) -> Result<()> {
         (run_classic(&mwem_cfg, &q, &h, backend), None)
     } else {
         let kind: IndexKind = index.parse().map_err(|e: String| anyhow::anyhow!(e))?;
-        let out = run_fast(&FastMwemConfig::new(mwem_cfg, kind), &q, &h, backend);
+        let out = run_fast(
+            &FastMwemConfig::new(mwem_cfg, kind).with_sharding(sharding),
+            &q,
+            &h,
+            backend,
+        );
         (out.result, Some(out.lazy))
     };
 
@@ -167,11 +185,22 @@ fn cmd_lp(cfg: &Config) -> Result<()> {
     let d: usize = cfg.or("d", 20)?;
     let t: usize = cfg.or("t", 2_000)?;
     let seed: u64 = cfg.or("seed", 1u64)?;
+    let sharding = ShardingConfig::from_config(cfg)?;
     let mode = match cfg.str_or("mode", "hnsw").as_str() {
-        "exhaustive" => SelectionMode::Exhaustive,
-        other => SelectionMode::Lazy(
-            other.parse::<IndexKind>().map_err(|e| anyhow::anyhow!(e))?,
-        ),
+        "exhaustive" => {
+            if sharding.shards > 1 {
+                println!("note: --shards only applies to lazy modes; ignored with --mode=exhaustive");
+            }
+            SelectionMode::Exhaustive
+        }
+        other => {
+            let kind = other.parse::<IndexKind>().map_err(|e| anyhow::anyhow!(e))?;
+            if sharding.shards > 1 {
+                SelectionMode::LazySharded(kind, sharding.shards)
+            } else {
+                SelectionMode::Lazy(kind)
+            }
+        }
     };
     let mut rng = Rng::new(seed);
     let lp = workloads::random_feasibility_lp(&mut rng, m, d, 0.6);
@@ -205,8 +234,17 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let jobs: usize = cfg.or("jobs", 8)?;
     let workers: usize = cfg.or("workers", 4)?;
     let eps_cap: Option<f64> = cfg.get("eps-cap")?;
-    println!("serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?})");
+    let sharding = ShardingConfig::from_config(cfg)?;
+    println!(
+        "serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?}, shards {})",
+        sharding.shards
+    );
 
+    let lp_mode = if sharding.shards > 1 {
+        SelectionMode::LazySharded(IndexKind::Hnsw, sharding.shards)
+    } else {
+        SelectionMode::Lazy(IndexKind::Hnsw)
+    };
     let mut coord = Coordinator::start(CoordinatorConfig { workers, eps_cap });
     let mut accepted = 0usize;
     for i in 0..jobs {
@@ -219,6 +257,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
                 eps: 1.0,
                 delta: 1e-3,
                 index: Some(IndexKind::Hnsw),
+                shards: sharding.shards,
                 seed: i as u64,
             })
         } else {
@@ -229,7 +268,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
                 eps: 1.0,
                 delta: 1e-3,
                 delta_inf: 0.1,
-                mode: SelectionMode::Lazy(IndexKind::Hnsw),
+                mode: lp_mode,
                 seed: i as u64,
             })
         };

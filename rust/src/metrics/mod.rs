@@ -5,6 +5,7 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+/// In-process metrics registry.
 #[derive(Default, Debug)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
@@ -13,18 +14,22 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `by` to a counter (created at 0).
     pub fn inc(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_insert(0) += by;
     }
 
+    /// Set a gauge to an absolute value.
     pub fn set_gauge(&mut self, name: &str, value: f64) {
         self.gauges.insert(name.to_string(), value);
     }
 
+    /// Record one duration sample in a timing series.
     pub fn observe(&mut self, name: &str, d: Duration) {
         self.timings.entry(name.to_string()).or_default().push(d.as_secs_f64());
     }
@@ -37,10 +42,12 @@ impl Metrics {
         out
     }
 
+    /// Current counter value (0 if never incremented).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Current gauge value, if ever set.
     pub fn gauge(&self, name: &str) -> Option<f64> {
         self.gauges.get(name).copied()
     }
@@ -63,6 +70,8 @@ impl Metrics {
         })
     }
 
+    /// Fold another registry into this one (counters add, gauges overwrite,
+    /// timings concatenate).
     pub fn merge(&mut self, other: &Metrics) {
         for (k, v) in &other.counters {
             *self.counters.entry(k.clone()).or_insert(0) += v;
@@ -75,6 +84,7 @@ impl Metrics {
         }
     }
 
+    /// Dump counters, gauges and timing summaries as JSON.
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
         let counters: BTreeMap<String, Json> = self
@@ -106,12 +116,18 @@ impl Metrics {
     }
 }
 
+/// Summary of one timing series, in seconds.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TimingSummary {
+    /// Number of samples.
     pub count: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Largest sample.
     pub max: f64,
 }
 

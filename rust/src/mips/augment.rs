@@ -22,6 +22,7 @@ pub fn dist_evals() -> u64 {
     DIST_EVALS.load(Ordering::Relaxed)
 }
 
+/// Reset the global distance-evaluation counter to zero.
 pub fn reset_dist_evals() {
     DIST_EVALS.store(0, Ordering::Relaxed);
 }
@@ -31,6 +32,8 @@ fn count_eval() {
     DIST_EVALS.fetch_add(1, Ordering::Relaxed);
 }
 
+/// The §E augmented metric space: original rows plus the implicit aux
+/// coordinate, with all distance forms evaluated algebraically.
 pub struct AugmentedSpace {
     vs: VectorSet,
     aux: Vec<f32>,
@@ -39,6 +42,7 @@ pub struct AugmentedSpace {
 }
 
 impl AugmentedSpace {
+    /// Augment `vs`: compute M = max ‖k_i‖² and every row's aux coordinate.
     pub fn new(vs: VectorSet) -> Self {
         let mut big_m = 0f32;
         for i in 0..vs.len() {
@@ -50,10 +54,12 @@ impl AugmentedSpace {
         AugmentedSpace { vs, aux, big_m }
     }
 
+    /// Number of augmented keys.
     pub fn len(&self) -> usize {
         self.vs.len()
     }
 
+    /// True when the space holds no keys.
     pub fn is_empty(&self) -> bool {
         self.vs.is_empty()
     }
@@ -68,10 +74,12 @@ impl AugmentedSpace {
         self.vs.dim() + 1
     }
 
+    /// The shared squared norm M.
     pub fn big_m(&self) -> f32 {
         self.big_m
     }
 
+    /// The original (un-augmented) vectors.
     pub fn vectors(&self) -> &VectorSet {
         &self.vs
     }

@@ -9,15 +9,18 @@ use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::math::dot;
 
+/// Exact k-MIPS index: a brute-force scan of the stored vectors.
 pub struct FlatIndex {
     vs: VectorSet,
 }
 
 impl FlatIndex {
+    /// Index `vs` (no preprocessing — the flat index IS the data).
     pub fn new(vs: VectorSet) -> Self {
         FlatIndex { vs }
     }
 
+    /// The indexed vectors.
     pub fn vectors(&self) -> &VectorSet {
         &self.vs
     }

@@ -16,11 +16,14 @@ use crate::util::rng::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+/// HNSW hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct HnswParams {
     /// Max links per node on levels ≥ 1 (level 0 gets 2M).
     pub m: usize,
+    /// Candidate-beam width while inserting (efConstruction).
     pub ef_construction: usize,
+    /// Candidate-beam width while querying (efSearch).
     pub ef_search: usize,
 }
 
@@ -36,6 +39,7 @@ struct Node {
     links: Vec<Vec<u32>>,
 }
 
+/// Approximate k-MIPS over a hierarchical navigable small world graph.
 pub struct HnswIndex {
     space: AugmentedSpace,
     nodes: Vec<Node>,
@@ -45,6 +49,7 @@ pub struct HnswIndex {
 }
 
 impl HnswIndex {
+    /// Build the graph by sequential insertion (panics on an empty set).
     pub fn build(vs: VectorSet, params: HnswParams, seed: u64) -> Self {
         let n = vs.len();
         assert!(n > 0, "cannot build HNSW over an empty set");
@@ -67,6 +72,7 @@ impl HnswIndex {
         index
     }
 
+    /// The build/search hyper-parameters in use.
     pub fn params(&self) -> &HnswParams {
         &self.params
     }
@@ -130,10 +136,14 @@ impl HnswIndex {
     }
 }
 
+/// Graph shape summary returned by [`HnswIndex::stats`].
 #[derive(Debug)]
 pub struct HnswStats {
+    /// Number of nodes (= indexed vectors).
     pub nodes: usize,
+    /// Highest layer in the hierarchy.
     pub max_level: usize,
+    /// Total directed links across all layers.
     pub total_links: usize,
 }
 

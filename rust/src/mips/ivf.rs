@@ -10,11 +10,16 @@ use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::math::dot;
 
+/// IVF hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct IvfParams {
+    /// Number of Voronoi cells (None → the §H formula `max(2√m, 20)`).
     pub nlist: Option<usize>,
+    /// Cells scanned per query (None → the §H formula `min(nlist/4, 10)`).
     pub nprobe: Option<usize>,
+    /// k-means refinement iterations at build time.
     pub kmeans_iters: usize,
+    /// k-means training subsample, per centroid.
     pub points_per_centroid: usize,
 }
 
@@ -24,17 +29,20 @@ impl IvfParams {
         IvfParams { nlist: None, nprobe: None, kmeans_iters: 8, points_per_centroid: 64 }
     }
 
+    /// Resolve `nlist` for a set of m keys.
     pub fn nlist_for(&self, m: usize) -> usize {
         self.nlist
             .unwrap_or_else(|| ((2.0 * (m as f64).sqrt()) as usize).max(20))
             .min(m.max(1))
     }
 
+    /// Resolve `nprobe` given the resolved `nlist`.
     pub fn nprobe_for(&self, nlist: usize) -> usize {
         self.nprobe.unwrap_or_else(|| (nlist / 4).clamp(1, 10))
     }
 }
 
+/// Approximate k-MIPS over an inverted file of k-means Voronoi cells.
 pub struct IvfIndex {
     space: AugmentedSpace,
     centroids: Vec<f32>, // nlist × (dim+1), augmented space
@@ -45,6 +53,7 @@ pub struct IvfIndex {
 }
 
 impl IvfIndex {
+    /// Cluster the keys and fill the inverted lists (panics on empty set).
     pub fn build(vs: VectorSet, params: IvfParams, seed: u64) -> Self {
         let m = vs.len();
         assert!(m > 0, "cannot build IVF over an empty set");
@@ -70,10 +79,12 @@ impl IvfIndex {
         IvfIndex { aug_dim: space.aug_dim(), space, centroids: km.centroids, lists, nlist, nprobe }
     }
 
+    /// Resolved number of cells.
     pub fn nlist(&self) -> usize {
         self.nlist
     }
 
+    /// Resolved number of probed cells per query.
     pub fn nprobe(&self) -> usize {
         self.nprobe
     }

@@ -8,16 +8,21 @@
 use super::augment::AugmentedSpace;
 use crate::util::rng::Rng;
 
+/// Output of [`kmeans`]: trained centroids plus the full-set assignment.
 pub struct KmeansResult {
     /// Row-major centroids in augmented space: `k × (dim+1)`.
     pub centroids: Vec<f32>,
+    /// Number of centroids.
     pub k: usize,
+    /// Centroid dimension (the augmented dim + 1).
     pub dim: usize,
     /// Assignment of every input point to its nearest centroid.
     pub assignment: Vec<u32>,
 }
 
+/// Training knobs for [`kmeans`].
 pub struct KmeansParams {
+    /// Lloyd refinement iterations.
     pub iters: usize,
     /// Training subsample size = `points_per_centroid * k` (capped at n).
     pub points_per_centroid: usize,

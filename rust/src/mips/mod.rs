@@ -37,37 +37,56 @@ pub struct VectorSet {
 }
 
 impl VectorSet {
+    /// Wrap a row-major buffer of `n` vectors with `d` entries each.
+    /// Panics unless `data.len() == n * d`.
+    ///
+    /// ```
+    /// use fast_mwem::mips::VectorSet;
+    ///
+    /// // two 3-dimensional rows
+    /// let vs = VectorSet::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+    /// assert_eq!(vs.len(), 2);
+    /// assert_eq!(vs.dim(), 3);
+    /// assert_eq!(vs.row(1), &[4.0, 5.0, 6.0]);
+    /// ```
     pub fn new(data: Vec<f32>, n: usize, d: usize) -> Self {
         assert_eq!(data.len(), n * d, "data length must be n*d");
         VectorSet { data, n, d }
     }
 
+    /// An all-zero set of `n` vectors of dimension `d`.
     pub fn zeros(n: usize, d: usize) -> Self {
         VectorSet { data: vec![0.0; n * d], n, d }
     }
 
+    /// Borrow row `i` (panics if out of range).
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.d..(i + 1) * self.d]
     }
 
+    /// Mutably borrow row `i` (panics if out of range).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.d..(i + 1) * self.d]
     }
 
+    /// Number of vectors n.
     pub fn len(&self) -> usize {
         self.n
     }
 
+    /// True when the set holds no vectors.
     pub fn is_empty(&self) -> bool {
         self.n == 0
     }
 
+    /// Vector dimension d.
     pub fn dim(&self) -> usize {
         self.d
     }
 
+    /// The raw row-major buffer (`n * d` entries).
     pub fn as_slice(&self) -> &[f32] {
         &self.data
     }
@@ -76,15 +95,20 @@ impl VectorSet {
 /// One search hit: candidate id + *exact* inner product with the query.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Neighbor {
+    /// Candidate row id within the indexed [`VectorSet`].
     pub id: u32,
+    /// Exact inner product ⟨v_id, q⟩.
     pub score: f32,
 }
 
 /// Which index implementation to use — mirrors the paper's §5 ablation axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum IndexKind {
+    /// Exact linear scan ([`FlatIndex`]).
     Flat,
+    /// Inverted file over a k-means++ quantizer ([`IvfIndex`]).
     Ivf,
+    /// Hierarchical navigable small world graph ([`HnswIndex`]).
     Hnsw,
 }
 
@@ -115,9 +139,13 @@ impl std::str::FromStr for IndexKind {
 /// top-k members (the c-approximation of Definition 3.4), which the lazy
 /// EM layer compensates for (Theorems F.2/F.10).
 pub trait MipsIndex: Send + Sync {
+    /// Number of indexed vectors m.
     fn len(&self) -> usize;
+    /// Dimension of the indexed vectors.
     fn dim(&self) -> usize;
+    /// Up to k hits sorted by descending inner product with `query`.
     fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor>;
+    /// Which implementation this is (the §5 ablation label).
     fn kind(&self) -> IndexKind;
 }
 

@@ -30,10 +30,12 @@ pub struct TopK {
 }
 
 impl TopK {
+    /// An empty collector that will retain at most `k` pairs.
     pub fn new(k: usize) -> Self {
         TopK { k, heap: BinaryHeap::with_capacity(k + 1) }
     }
 
+    /// Offer one candidate; kept only if it beats the current k-th best.
     #[inline]
     pub fn push(&mut self, id: u32, score: f32) {
         if self.k == 0 {
@@ -59,10 +61,12 @@ impl TopK {
         }
     }
 
+    /// Number of pairs currently held (≤ k).
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// True when nothing has been retained yet.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -20,14 +20,18 @@ pub enum UpdateRule {
     Hardt,
 }
 
+/// Configuration shared by classic MWEM and Fast-MWEM.
 #[derive(Clone, Debug)]
 pub struct MwemConfig {
     /// Number of MWU rounds T.
     pub t: usize,
-    /// Total privacy budget (ε, δ).
+    /// Total privacy budget ε.
     pub eps: f64,
+    /// Total privacy budget δ.
     pub delta: f64,
+    /// Multiplicative-update rule (paper-simplified or Hardt et al.).
     pub update: UpdateRule,
+    /// Mechanism seed.
     pub seed: u64,
     /// Evaluate ‖Q(h−p̂)‖∞ every `log_every` rounds (0 = never; evaluation
     /// is non-private and O(mU), so runtime benches disable it).
@@ -50,6 +54,7 @@ impl MwemConfig {
 /// Per-logged-round statistics.
 #[derive(Clone, Debug)]
 pub struct IterStat {
+    /// Round number (1-based).
     pub iter: usize,
     /// ‖Q(h − p̄)‖∞ of the running average p̄ (NaN if not evaluated).
     pub max_error_avg: f64,
@@ -59,16 +64,20 @@ pub struct IterStat {
     pub selected: usize,
     /// Score evaluations charged to selection (m for classic, k+C for lazy).
     pub selection_work: usize,
+    /// Wall-clock of this round's selection.
     pub selection_time: Duration,
 }
 
+/// Output of [`run_classic`] / the `result` half of Fast-MWEM's output.
 #[derive(Debug)]
 pub struct MwemResult {
     /// Averaged synthetic distribution p̂ (the paper's output).
     pub p_avg: Vec<f32>,
     /// Final iterate p⁽ᵀ⁾.
     pub p_final: Vec<f32>,
+    /// Per-logged-round statistics (empty when `log_every` = 0).
     pub stats: Vec<IterStat>,
+    /// End-to-end solve wall-clock.
     pub total_time: Duration,
     /// Mean selection time per round.
     pub avg_select_time: Duration,

@@ -8,24 +8,64 @@
 use super::classic::{measured_update, IterStat, MwemConfig, MwemResult};
 use super::{Histogram, MwemBackend, MwuState, QuerySet};
 use crate::dp::Accountant;
-use crate::lazy::{LazyEm, ScoreTransform};
+use crate::lazy::{LazyEm, LazySample, ScoreTransform, ShardedLazyEm};
 use crate::mips::{build_index, IndexKind, MipsIndex};
 use crate::mwem::classic::UpdateRule;
+use crate::util::rng::Rng;
 use std::time::{Duration, Instant};
 
+/// Configuration for Fast-MWEM (Algorithm 2).
 #[derive(Clone, Debug)]
 pub struct FastMwemConfig {
+    /// The shared MWEM parameters (rounds, budget, update rule, seed).
     pub base: MwemConfig,
+    /// Which k-MIPS index backs the lazy mechanism.
     pub index: IndexKind,
-    /// Top-k size (defaults to ⌈√m⌉ per the paper).
+    /// Top-k size. Defaults to ⌈√m⌉ per the paper, or ⌈√(m/S)⌉ per shard
+    /// when sharded. NOTE: an explicit value is applied *per shard* when
+    /// `shards > 1` (total retrieval S·k) — leave `None` for sweeps that
+    /// compare shard counts.
     pub k: Option<usize>,
     /// Algorithm 6's margin reduction `c` (0 = Algorithms 4/5 behaviour).
     pub margin_slack: f64,
+    /// Number of lazy-EM shards (≤ 1 → one monolithic index; > 1 →
+    /// [`ShardedLazyEm`] with parallel per-shard index builds, DESIGN.md §5).
+    pub shards: usize,
+    /// Pool width for per-draw shard searches (0 → one worker per shard).
+    /// Only meaningful with `parallel_shard_select`.
+    pub shard_workers: usize,
+    /// Fan each draw's S shard searches onto pool threads instead of
+    /// running them inline (bit-identical results either way).
+    pub parallel_shard_select: bool,
 }
 
 impl FastMwemConfig {
+    /// Fast-MWEM with a single monolithic index of the given kind.
     pub fn new(base: MwemConfig, index: IndexKind) -> Self {
-        FastMwemConfig { base, index, k: None, margin_slack: 0.0 }
+        FastMwemConfig {
+            base,
+            index,
+            k: None,
+            margin_slack: 0.0,
+            shards: 1,
+            shard_workers: 0,
+            parallel_shard_select: false,
+        }
+    }
+
+    /// Split the lazy EM across `shards` per-shard indices (clamped ≥ 1).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
+        self
+    }
+
+    /// Apply a full `[sharding]` config section (shard count plus the
+    /// select-time parallelism knobs).
+    pub fn with_sharding(mut self, sharding: crate::config::ShardingConfig) -> Self {
+        self.shards = sharding.shards.max(1);
+        self.shard_workers = sharding.workers;
+        self.parallel_shard_select = sharding.parallel_select;
+        self
     }
 }
 
@@ -40,13 +80,18 @@ pub struct LazyDiagnostics {
     pub build_time: Duration,
 }
 
+/// Everything [`run_fast`] returns: the MWEM result plus lazy diagnostics.
 pub struct FastMwemOutput {
+    /// The standard MWEM outputs (shared shape with the classic runner).
     pub result: MwemResult,
+    /// Diagnostics specific to the lazy mechanism.
     pub lazy: LazyDiagnostics,
 }
 
-/// Run Algorithm 2. The index is built once (the paper's preprocessing) and
-/// queried every round with the evolving difference vector d = h − p.
+/// Run Algorithm 2. The index (or, with `cfg.shards > 1`, one index per
+/// shard, built in parallel on the coordinator pool) is built once — the
+/// paper's preprocessing — and queried every round with the evolving
+/// difference vector d = h − p.
 pub fn run_fast(
     cfg: &FastMwemConfig,
     q: &QuerySet,
@@ -54,13 +99,35 @@ pub fn run_fast(
     backend: &mut dyn MwemBackend,
 ) -> FastMwemOutput {
     let build_started = Instant::now();
+    if cfg.shards > 1 {
+        let mut em = ShardedLazyEm::build(
+            cfg.index,
+            q.vectors(),
+            cfg.shards,
+            ScoreTransform::Abs,
+            cfg.base.seed ^ 0x5EED,
+        )
+        .with_margin_slack(cfg.margin_slack)
+        .with_parallel_select(cfg.parallel_shard_select);
+        if cfg.shard_workers > 0 {
+            em = em.with_workers(cfg.shard_workers);
+        }
+        if let Some(k) = cfg.k {
+            em = em.with_k(k);
+        }
+        let build_time = build_started.elapsed();
+        return run_fast_loop(cfg, q, h, backend, build_time, |rng, d, eps, sens| {
+            em.select(rng, d, eps, sens)
+        });
+    }
     let index = build_index(cfg.index, q.vectors().clone(), cfg.base.seed ^ 0x5EED);
     let build_time = build_started.elapsed();
     run_fast_with_index(cfg, q, h, backend, index.as_ref(), build_time)
 }
 
-/// Same as [`run_fast`] but with a caller-supplied (pre-built) index, so
-/// benchmark sweeps can amortize index construction across runs.
+/// Same as [`run_fast`] but with a caller-supplied (pre-built) monolithic
+/// index, so benchmark sweeps can amortize index construction across runs.
+/// Ignores `cfg.shards`.
 pub fn run_fast_with_index(
     cfg: &FastMwemConfig,
     q: &QuerySet,
@@ -69,7 +136,27 @@ pub fn run_fast_with_index(
     index: &dyn MipsIndex,
     build_time: Duration,
 ) -> FastMwemOutput {
-    let mut rng = crate::util::rng::Rng::new(cfg.base.seed);
+    let mut em = LazyEm::new(index, q.vectors(), ScoreTransform::Abs)
+        .with_margin_slack(cfg.margin_slack);
+    if let Some(k) = cfg.k {
+        em = em.with_k(k);
+    }
+    run_fast_loop(cfg, q, h, backend, build_time, |rng, d, eps, sens| {
+        em.select(rng, d, eps, sens)
+    })
+}
+
+/// The shared Algorithm 2 MWU loop, generic over the selection oracle —
+/// the only piece that differs between the monolithic and sharded paths.
+fn run_fast_loop(
+    cfg: &FastMwemConfig,
+    q: &QuerySet,
+    h: &Histogram,
+    backend: &mut dyn MwemBackend,
+    build_time: Duration,
+    mut select: impl FnMut(&mut Rng, &[f32], f64, f64) -> LazySample,
+) -> FastMwemOutput {
+    let mut rng = Rng::new(cfg.base.seed);
     let mut state = MwuState::new(q.u());
     let mut accountant = Accountant::new(cfg.base.delta);
     let eps0 = cfg.base.eps0();
@@ -78,12 +165,6 @@ pub fn run_fast_with_index(
         UpdateRule::Paper { .. } => eps0,
         UpdateRule::Hardt => eps0 / 2.0,
     };
-
-    let mut em = LazyEm::new(index, q.vectors(), ScoreTransform::Abs)
-        .with_margin_slack(cfg.margin_slack);
-    if let Some(k) = cfg.k {
-        em = em.with_k(k);
-    }
 
     let mut stats = Vec::new();
     let mut lazy = LazyDiagnostics { build_time, ..Default::default() };
@@ -96,7 +177,7 @@ pub fn run_fast_with_index(
             h.probs().iter().zip(state.p.iter()).map(|(&a, &b)| a - b).collect();
 
         let sel_started = Instant::now();
-        let sample = em.select(&mut rng, &d, eps_em, sens);
+        let sample = select(&mut rng, &d, eps_em, sens);
         let sel_time = sel_started.elapsed();
         select_total += sel_time;
         work_total += sample.work;
@@ -207,6 +288,34 @@ mod tests {
         let initial = q.max_error(h.probs(), &p0);
         let e = fast.result.stats.last().unwrap().max_error_avg;
         assert!(e < initial, "initial {initial} fast-hnsw {e}");
+    }
+
+    /// The sharded mechanism is exact (max-stability), so Fast-MWEM with
+    /// S=4 shards must land at the same error as the monolithic run.
+    #[test]
+    fn sharded_matches_monolithic_error_closely() {
+        let (h, q) = workload(128, 80, 1);
+        let mut cfg = MwemConfig::paper(400, 128, 1.0, 1e-3, 11);
+        cfg.log_every = 400;
+        let mono = run_fast(
+            &FastMwemConfig::new(cfg.clone(), IndexKind::Flat),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let sharded = run_fast(
+            &FastMwemConfig::new(cfg, IndexKind::Flat).with_shards(4),
+            &q,
+            &h,
+            &mut NativeBackend,
+        );
+        let e_mono = mono.result.stats.last().unwrap().max_error_avg;
+        let e_sharded = sharded.result.stats.last().unwrap().max_error_avg;
+        assert!(
+            (e_mono - e_sharded).abs() < 0.1,
+            "monolithic {e_mono} sharded {e_sharded}"
+        );
+        assert_eq!(sharded.lazy.tail_counts.len(), 400);
     }
 
     #[test]

@@ -19,6 +19,7 @@ impl Histogram {
         Self::from_counts(&counts)
     }
 
+    /// Build from per-element counts (panics on an all-zero histogram).
     pub fn from_counts(counts: &[u64]) -> Self {
         let n: u64 = counts.iter().sum();
         assert!(n > 0, "empty histogram");
@@ -31,10 +32,12 @@ impl Histogram {
         Histogram { probs: vec![1.0 / u as f32; u], n }
     }
 
+    /// The normalized distribution h (length U, sums to 1).
     pub fn probs(&self) -> &[f32] {
         &self.probs
     }
 
+    /// Domain size U.
     pub fn domain_size(&self) -> usize {
         self.probs.len()
     }

@@ -57,10 +57,12 @@ pub struct MwuState {
     pub p: Vec<f32>,
     /// Running sum of p across iterations (for the averaged output p̂).
     pub p_sum: Vec<f64>,
+    /// Number of updates applied so far.
     pub iters: usize,
 }
 
 impl MwuState {
+    /// Uniform initial state over a domain of size `u`.
     pub fn new(u: usize) -> Self {
         MwuState {
             w: vec![1.0; u],

@@ -3,12 +3,14 @@
 use crate::mips::VectorSet;
 use crate::util::math::dot;
 
+/// A set of m linear queries, one row of Q per query.
 #[derive(Clone, Debug)]
 pub struct QuerySet {
     vs: VectorSet,
 }
 
 impl QuerySet {
+    /// Wrap an m × U query matrix.
     pub fn new(vs: VectorSet) -> Self {
         QuerySet { vs }
     }
@@ -23,10 +25,12 @@ impl QuerySet {
         self.vs.dim()
     }
 
+    /// Row of query i.
     pub fn query(&self, i: usize) -> &[f32] {
         self.vs.row(i)
     }
 
+    /// The full query matrix (the k-MIPS dataset of Fast-MWEM).
     pub fn vectors(&self) -> &VectorSet {
         &self.vs
     }

@@ -10,6 +10,7 @@ use crate::mwem::{MwemBackend, QuerySet};
 use anyhow::{anyhow, Result};
 use xla::PjRtBuffer;
 
+/// [`MwemBackend`] running the dense steps through the AOT artifacts.
 pub struct XlaBackend {
     engine: XlaEngine,
     /// Device-resident padded Q + its artifact binding.
@@ -27,14 +28,17 @@ struct QCache {
 }
 
 impl XlaBackend {
+    /// Wrap an already-loaded engine.
     pub fn new(engine: XlaEngine) -> Self {
         XlaBackend { engine, q_cache: None, calls: 0 }
     }
 
+    /// Load the artifacts directory and wrap the resulting engine.
     pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         Ok(Self::new(XlaEngine::load(artifacts_dir)?))
     }
 
+    /// The underlying engine.
     pub fn engine(&self) -> &XlaEngine {
         &self.engine
     }

@@ -6,6 +6,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
+/// PJRT execution engine: a CPU client plus a compile-once executable cache.
 pub struct XlaEngine {
     client: PjRtClient,
     manifest: Manifest,
@@ -20,14 +21,17 @@ impl XlaEngine {
         Ok(XlaEngine { client, manifest, cache: HashMap::new() })
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Look up an artifact by name.
     pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
         self.manifest
             .entries
@@ -64,12 +68,14 @@ impl XlaEngine {
     // buffer_from_host_literal(Literal::scalar(..)) aborts inside
     // xla_extension 0.5.1 ("Unhandled primitive type") when the process has
     // created more than one PJRT client.
+    /// Upload one f32 scalar.
     pub fn buffer_scalar_f32(&self, x: f32) -> Result<PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(&[x], &[], None)
             .map_err(|e| anyhow!("scalar f32: {e:?}"))
     }
 
+    /// Upload one i32 scalar.
     pub fn buffer_scalar_i32(&self, x: i32) -> Result<PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(&[x], &[], None)

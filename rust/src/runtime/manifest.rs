@@ -6,30 +6,43 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+/// Shape + dtype of one artifact input/output tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor dimensions (empty = scalar).
     pub shape: Vec<usize>,
+    /// Element dtype name ("float32", "int32", ...).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (product of the dims; 1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
 }
 
+/// One AOT artifact: its HLO-text file plus its I/O signature.
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
+    /// Artifact name (e.g. `scores_m1024_u1024`).
     pub name: String,
+    /// Absolute path of the `.hlo.txt` file.
     pub file: PathBuf,
+    /// Input tensor signature, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor signature.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// The parsed `artifacts/manifest.json`.
 #[derive(Debug)]
 pub struct Manifest {
+    /// Manifest schema version (currently 1).
     pub version: usize,
+    /// Shape-grid label the artifacts were lowered for.
     pub grid: String,
+    /// Artifacts by name.
     pub entries: BTreeMap<String, ArtifactEntry>,
 }
 
@@ -50,6 +63,7 @@ fn tensor_spec(j: &Json) -> Result<TensorSpec> {
 }
 
 impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -6,17 +6,25 @@
 
 use std::time::{Duration, Instant};
 
+/// Timing summary of one benched case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case label.
     pub name: String,
+    /// Timed iterations (after warmup).
     pub iters: usize,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// Median per-iteration time.
     pub p50: Duration,
+    /// 90th-percentile per-iteration time.
     pub p90: Duration,
+    /// Fastest iteration.
     pub min: Duration,
 }
 
 impl BenchResult {
+    /// Print the aligned row `header` set up.
     pub fn print(&self) {
         println!(
             "  {:<44} {:>12} {:>12} {:>12}  x{}",
@@ -29,11 +37,13 @@ impl BenchResult {
     }
 }
 
+/// Print a section header plus the column legend for [`BenchResult::print`].
 pub fn header(title: &str) {
     println!("\n== {title} ==");
     println!("  {:<44} {:>12} {:>12} {:>12}", "case", "p50", "mean", "p90");
 }
 
+/// Human-scale duration formatting (ns/us/ms/s).
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos() as f64;
     if ns < 1e3 {

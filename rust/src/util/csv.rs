@@ -7,6 +7,7 @@ use std::fs::{self, File};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
+/// Buffered CSV emitter with a fixed column count.
 pub struct CsvWriter {
     out: BufWriter<File>,
     cols: usize,
@@ -24,16 +25,19 @@ impl CsvWriter {
         Ok(CsvWriter { out, cols: header.len() })
     }
 
+    /// Write one pre-stringified row.
     pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
         debug_assert_eq!(values.len(), self.cols, "column count mismatch");
         writeln!(self.out, "{}", values.join(","))
     }
 
+    /// Write one all-numeric row.
     pub fn row_f64(&mut self, values: &[f64]) -> std::io::Result<()> {
         let strs: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
         self.row(&strs)
     }
 
+    /// Flush the underlying buffer.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.out.flush()
     }

@@ -6,17 +6,25 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -28,6 +36,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The string value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -35,6 +44,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -42,10 +52,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -53,6 +65,7 @@ impl Json {
         }
     }
 
+    /// Member lookup, if this is an `Obj`.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -61,9 +74,12 @@ impl Json {
     }
 }
 
+/// Parse failure with a byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte position of the failure.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -22,6 +22,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed the generator (any seed is fine; zero is remapped).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         let mut s = [0u64; 4];
@@ -40,6 +41,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

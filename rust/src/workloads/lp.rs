@@ -10,16 +10,19 @@ use crate::util::rng::Rng;
 pub struct LpInstance {
     /// Constraint matrix, m × d.
     pub a: VectorSet,
+    /// Right-hand side, length m.
     pub b: Vec<f32>,
     /// The planted feasible solution (diagnostics only).
     pub planted: Vec<f32>,
 }
 
 impl LpInstance {
+    /// Number of constraints m.
     pub fn m(&self) -> usize {
         self.a.len()
     }
 
+    /// Number of variables d.
     pub fn d(&self) -> usize {
         self.a.dim()
     }
@@ -73,18 +76,23 @@ pub fn random_feasibility_lp(rng: &mut Rng, m: usize, d: usize, slack: f64) -> L
 /// §4.2 setting where the dual oracle's vertices are (OPT/c_j)·e_j.
 #[derive(Clone, Debug)]
 pub struct PackingLp {
+    /// Constraint matrix, m × d (entries ≥ 0).
     pub a: VectorSet,
+    /// Right-hand side, length m.
     pub b: Vec<f32>,
+    /// Objective coefficients, length d (entries > 0).
     pub c: Vec<f32>,
     /// Target objective value for the feasibility reduction.
     pub opt: f64,
 }
 
 impl PackingLp {
+    /// Number of constraints m.
     pub fn m(&self) -> usize {
         self.a.len()
     }
 
+    /// Number of variables d.
     pub fn d(&self) -> usize {
         self.a.dim()
     }

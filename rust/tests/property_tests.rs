@@ -222,6 +222,7 @@ fn prop_coordinator_invariants() {
                     eps,
                     delta: 1e-3,
                     index: Some(IndexKind::Flat),
+                    shards: 1 + rng.usize_below(3),
                     seed: round as u64 * 100 + j as u64,
                 })
             } else {

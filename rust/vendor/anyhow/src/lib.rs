@@ -1,0 +1,185 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate (DESIGN.md §3).
+//!
+//! The offline build cannot fetch crates.io, so the subset of `anyhow` this
+//! repository actually uses is vendored here: [`Error`], [`Result`], the
+//! [`Context`] extension trait, and the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros. Unlike the real crate, context messages are folded eagerly into a
+//! single string, so `{}` and `{:#}` both render the full chain — which is
+//! exactly what this repository's error paths rely on.
+
+use std::fmt;
+
+/// A string-backed error value, convertible from any [`std::error::Error`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Create an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string() }
+    }
+
+    /// Wrap the error in an outer context message (`"context: cause"`).
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with the error type defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T> {
+    /// Attach a context message to the error, if any.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-evaluated context message to the error, if any.
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display + Send + Sync + 'static, F: FnOnce() -> C>(
+        self,
+        f: F,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "missing"))
+    }
+
+    #[test]
+    fn context_folds_messages() {
+        let e = io_err().context("reading config").unwrap_err();
+        let s = format!("{e:#}");
+        assert!(s.contains("reading config"), "{s}");
+        assert!(s.contains("missing"), "{s}");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let ok: Result<u32, std::io::Error> = Ok(7);
+        let v = ok.with_context(|| unreachable_msg()).unwrap();
+        assert_eq!(v, 7);
+        fn unreachable_msg() -> String {
+            panic!("context closure must not run on Ok")
+        }
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u32> = None;
+        let e = none.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("bad {name}");
+        assert_eq!(e.to_string(), "bad x");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("unreachable? {}", flag)
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "unreachable? true");
+    }
+}

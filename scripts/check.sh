@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Repository gate: build, test, and documentation health in one command.
+#
+#   ./scripts/check.sh
+#
+# Steps:
+#   1. cargo build --release            — the serving binary and library
+#   2. cargo build --release --benches  — the harness-less bench binaries
+#   3. cargo test -q                    — unit + integration tests (tier-1)
+#   4. cargo doc --no-deps              — with rustdoc warnings denied, so
+#      doc regressions (broken intra-doc links, bare URLs, malformed HTML)
+#      fail fast. The crate carries #![warn(missing_docs)]; new public API
+#      without docs shows up as warnings in steps 1-3.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo build --release --benches =="
+cargo build --release --benches
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo doc --no-deps (rustdoc warnings denied) =="
+RUSTDOCFLAGS="-D rustdoc::broken-intra-doc-links -D rustdoc::invalid-html-tags -D rustdoc::bare-urls" \
+    cargo doc --no-deps -q
+
+echo "All checks passed."
