@@ -1,9 +1,17 @@
 //! Micro-benchmarks of the request-path hot spots — the §Perf targets in
 //! EXPERIMENTS.md. Covers all three layers:
 //!   L3 native: dot, flat scan, HNSW query, lazy EM draw, binomial tail,
-//!              Bregman projection, MWU update;
+//!              Bregman projection, MWU update, warm-index cache;
 //!   runtime  : XLA scores / mwu round trips (if artifacts are built).
+//!
+//! Flags (after `--`, e.g. `cargo bench --bench hot_paths -- --quick`):
+//!   --quick        smaller sizes + budgets, for the CI bench-smoke job
+//!   --json=PATH    additionally dump every timing as a JSON artifact
+//!                  (the CI job uploads `BENCH_hot_paths.json`)
 
+use fast_mwem::coordinator::{
+    execute_with_cache, CachedIndex, IndexCache, JobSpec, ReleaseJobSpec, WorkloadKey,
+};
 use fast_mwem::dp::exponential_mechanism;
 use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use fast_mwem::lp::bregman_project;
@@ -11,64 +19,77 @@ use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
 use fast_mwem::mwem::{MwemBackend, NativeBackend, QuerySet};
 use fast_mwem::runtime::XlaBackend;
 use fast_mwem::sampling::binomial;
-use fast_mwem::util::bench::{bench, fmt_dur, header};
+use fast_mwem::util::bench::{bench, fmt_dur, header, BenchResult};
+use fast_mwem::util::json::Json;
 use fast_mwem::util::math::dot;
 use fast_mwem::util::rng::Rng;
 use fast_mwem::workloads::binary_queries;
+use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
-    let budget = Duration::from_millis(300);
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args.iter().find_map(|a| a.strip_prefix("--json=").map(str::to_string));
+
+    let budget = Duration::from_millis(if quick { 40 } else { 300 });
+    let mut recorded: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::new(1);
+    if quick {
+        println!("(quick mode: reduced sizes and budgets)");
+    }
 
     // ---------------- L3 primitives ----------------
     header("L3 primitives");
     let a: Vec<f32> = (0..3000).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
     let b: Vec<f32> = (0..3000).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
-    bench("dot product, d=3000", budget, || dot(&a, &b));
+    recorded.push(bench("dot product, d=3000", budget, || dot(&a, &b)));
 
-    bench("binomial(1e5, 3e-3) geometric skipping", budget, || {
+    recorded.push(bench("binomial(1e5, 3e-3) geometric skipping", budget, || {
         binomial(&mut rng, 100_000, 0.003)
-    });
+    }));
 
     let weights: Vec<f32> = (0..10_000).map(|_| rng.uniform(0.01, 2.0) as f32).collect();
-    bench("bregman projection, m=10000, s=100", budget, || {
+    recorded.push(bench("bregman projection, m=10000, s=100", budget, || {
         bregman_project(&weights, 100)
-    });
+    }));
 
     // ---------------- selection paths ----------------
-    let u = 512;
-    let m = 20_000;
+    let u = if quick { 256 } else { 512 };
+    let m = if quick { 4_000 } else { 20_000 };
+    let k = (m as f64).sqrt().ceil() as usize;
     let q = binary_queries(&mut rng, m, u);
     let d: Vec<f32> = (0..u).map(|_| rng.uniform(-0.005, 0.005) as f32).collect();
     let sens = 1.0 / 500.0;
 
     header(&format!("selection paths (m={m}, U={u})"));
     let mut rng2 = Rng::new(2);
-    bench("exhaustive: abs_scores + EM scan", budget, || {
+    recorded.push(bench("exhaustive: abs_scores + EM scan", budget, || {
         let scores = q.abs_scores(&d);
         exponential_mechanism(&mut rng2, &scores, 1.0, sens)
-    });
+    }));
 
     let flat = FlatIndex::new(q.vectors().clone());
-    bench("flat top-k (k=√m)", budget, || flat.top_k(&d, 142));
+    recorded.push(bench("flat top-k (k=√m)", budget, || flat.top_k(&d, k)));
 
     let hnsw = build_index(IndexKind::Hnsw, q.vectors().clone(), 3);
     fast_mwem::mips::augment::reset_dist_evals();
-    let r = bench("hnsw top-k (k=√m)", budget, || hnsw.top_k(&d, 142));
+    let r = bench("hnsw top-k (k=√m)", budget, || hnsw.top_k(&d, k));
     println!(
         "  -> {:.0} dist evals per hnsw query",
         fast_mwem::mips::augment::dist_evals() as f64 / (r.iters + 1) as f64
     );
+    recorded.push(r);
 
     let ivf = build_index(IndexKind::Ivf, q.vectors().clone(), 4);
-    bench("ivf top-k (k=√m)", budget, || ivf.top_k(&d, 142));
+    recorded.push(bench("ivf top-k (k=√m)", budget, || ivf.top_k(&d, k)));
 
     let em = LazyEm::new(hnsw.as_ref(), q.vectors(), ScoreTransform::Abs);
     let mut rng3 = Rng::new(5);
-    bench("lazy EM draw (hnsw)", budget, || {
+    recorded.push(bench("lazy EM draw (hnsw)", budget, || {
         em.select(&mut rng3, &d, 1.0, sens).index
-    });
+    }));
 
     // ---------------- shard-count axis (DESIGN.md §5) ----------------
     // Build time is the headline: S per-shard HNSW builds run in parallel
@@ -93,19 +114,80 @@ fn main() {
             fmt_dur(build)
         );
         let mut rng4 = Rng::new(6);
-        bench(&format!("sharded EM draw S={s}"), budget, || {
+        recorded.push(bench(&format!("sharded EM draw S={s}"), budget, || {
             sharded.select(&mut rng4, &d, 1.0, sens).index
-        });
+        }));
     }
+
+    // ---------------- warm-index serving (DESIGN.md §6) ----------------
+    // The serving-path amortization: the first job on a workload pays the
+    // index build (cold); repeats share the cached Arc index and skip
+    // construction entirely (warm). Cold vs warm per-job wall-clock is the
+    // acceptance axis of the warm-index PR.
+    header("warm-index serving: repeated release jobs (hnsw, shared workload)");
+    let cache = IndexCache::new(4);
+    let release = |seed: u64| {
+        JobSpec::Release(ReleaseJobSpec {
+            u: if quick { 128 } else { 256 },
+            m: if quick { 600 } else { 2_000 },
+            n: 500,
+            t: if quick { 20 } else { 50 },
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards: 1,
+            workload: 42,
+            seed,
+        })
+    };
+    let t0 = Instant::now();
+    let (_, first) = execute_with_cache(&release(1), Some(&cache)).expect("cold job");
+    let cold_job = t0.elapsed();
+    assert_eq!((first.hits, first.misses), (0, 1), "first job on a workload must miss");
+
+    let warm_jobs: u64 = if quick { 3 } else { 5 };
+    let t1 = Instant::now();
+    for s in 0..warm_jobs {
+        let (_, rep) = execute_with_cache(&release(2 + s), Some(&cache)).expect("warm job");
+        assert_eq!(rep.hits, 1, "repeat jobs must hit the cache");
+    }
+    let warm_job = t1.elapsed() / warm_jobs as u32;
+    let cache_stats = cache.stats();
+    println!("  cold job (build + solve):          {}", fmt_dur(cold_job));
+    println!(
+        "  warm job (cached index, mean of {warm_jobs}): {}  ({:.1}x)",
+        fmt_dur(warm_job),
+        cold_job.as_secs_f64() / warm_job.as_secs_f64().max(1e-12),
+    );
+    println!(
+        "  cache: {} hits / {} misses, build time saved {}",
+        cache_stats.hits,
+        cache_stats.misses,
+        fmt_dur(cache_stats.saved)
+    );
+
+    // micro view: a warm lookup is a map probe + Arc clone — the build
+    // closure is dead code on a hit
+    let icache = IndexCache::new(2);
+    let key = WorkloadKey::for_vectors(q.vectors(), IndexKind::Hnsw, 1);
+    icache.insert(key, CachedIndex::Mono(Arc::clone(&hnsw)), Duration::ZERO);
+    recorded.push(bench("index cache warm lookup (hit)", budget, || {
+        let (idx, ev) = icache.get_or_build(key, || unreachable!("hit must not build"));
+        assert!(ev.hit);
+        match idx {
+            CachedIndex::Mono(i) => i.len(),
+            CachedIndex::Sharded(s) => s.len(),
+        }
+    }));
 
     // ---------------- MWU update ----------------
     header("MWU update (U=3000)");
     let mut w: Vec<f32> = vec![1.0; 3000];
     let c: Vec<f32> = (0..3000).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
     let mut native = NativeBackend;
-    bench("native mwu_update + normalize", budget, || {
+    recorded.push(bench("native mwu_update + normalize", budget, || {
         native.mwu_update(&mut w, &c, -0.01)
-    });
+    }));
 
     // ---------------- XLA round trips ----------------
     if std::path::Path::new("artifacts/manifest.json").exists() {
@@ -114,17 +196,47 @@ fn main() {
         let mq = 1000;
         let qx: QuerySet = binary_queries(&mut rng, mq, 1024);
         let dx: Vec<f32> = (0..1024).map(|_| rng.uniform(-0.005, 0.005) as f32).collect();
-        bench("xla abs_scores (m=1000, U=1024, padded)", budget, || {
+        recorded.push(bench("xla abs_scores (m=1000, U=1024, padded)", budget, || {
             xla.abs_scores(&qx, &dx)
-        });
+        }));
         let mut wx = vec![1.0f32; 1024];
         let cx: Vec<f32> = (0..1024).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
-        bench("xla mwu_update (U=1024)", budget, || {
+        recorded.push(bench("xla mwu_update (U=1024)", budget, || {
             xla.mwu_update(&mut wx, &cx, -0.01)
-        });
+        }));
     } else {
         println!("\n(artifacts/ missing — skipping XLA round-trip benches)");
     }
-}
 
-// (dist-eval accounting is printed by the hnsw block above when enabled)
+    // ---------------- JSON artifact ----------------
+    if let Some(path) = json_path {
+        let mut cases = BTreeMap::new();
+        for r in &recorded {
+            let mut row = BTreeMap::new();
+            row.insert("p50_ns".to_string(), Json::Num(r.p50.as_nanos() as f64));
+            row.insert("mean_ns".to_string(), Json::Num(r.mean.as_nanos() as f64));
+            row.insert("p90_ns".to_string(), Json::Num(r.p90.as_nanos() as f64));
+            row.insert("iters".to_string(), Json::Num(r.iters as f64));
+            cases.insert(r.name.clone(), Json::Obj(row));
+        }
+        let mut cache_obj = BTreeMap::new();
+        cache_obj.insert("cold_job_ns".to_string(), Json::Num(cold_job.as_nanos() as f64));
+        cache_obj.insert("warm_job_ns".to_string(), Json::Num(warm_job.as_nanos() as f64));
+        cache_obj.insert("hits".to_string(), Json::Num(cache_stats.hits as f64));
+        cache_obj.insert("misses".to_string(), Json::Num(cache_stats.misses as f64));
+        cache_obj.insert(
+            "build_saved_ns".to_string(),
+            Json::Num(cache_stats.saved.as_nanos() as f64),
+        );
+
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str("hot_paths".to_string()));
+        obj.insert("quick".to_string(), Json::Bool(quick));
+        obj.insert("m".to_string(), Json::Num(m as f64));
+        obj.insert("u".to_string(), Json::Num(u as f64));
+        obj.insert("cases".to_string(), Json::Obj(cases));
+        obj.insert("index_cache".to_string(), Json::Obj(cache_obj));
+        std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
+        println!("\nwrote {path}");
+    }
+}

@@ -1,5 +1,7 @@
 //! Coordinator demo: a batch of private-analysis jobs through the
-//! leader/worker pool with a global privacy cap.
+//! leader/worker pool with a global privacy cap and warm-index serving —
+//! release jobs repeat a couple of workloads, so after the first build per
+//! workload the cache hands every later job a shared pre-built index.
 //!
 //! Run:  cargo run --release --example serve
 
@@ -13,6 +15,7 @@ fn main() {
     let mut coord = Coordinator::start(CoordinatorConfig {
         workers: 4,
         eps_cap: Some(10.0), // global privacy budget across accepted jobs
+        cache_capacity: 8,   // warm-index cache (DESIGN.md §6)
     });
 
     let mut submitted = 0;
@@ -30,6 +33,11 @@ fn main() {
                 seed: i,
             })
         } else {
+            // Two workloads repeated across the batch — serving-shaped
+            // traffic. The index kind and shard count ride on the workload
+            // id so repeats share one cache entry; only the mechanism seed
+            // is fresh per job.
+            let wl = i % 3;
             JobSpec::Release(ReleaseJobSpec {
                 u: 512,
                 m: 800,
@@ -37,9 +45,9 @@ fn main() {
                 t: 300,
                 eps: 1.0,
                 delta: 1e-3,
-                index: Some(if i % 3 == 0 { IndexKind::Hnsw } else { IndexKind::Ivf }),
-                // every other release job exercises the sharded lazy EM
-                shards: if i % 2 == 0 { 4 } else { 1 },
+                index: Some(if wl == 0 { IndexKind::Hnsw } else { IndexKind::Ivf }),
+                shards: if wl == 1 { 4 } else { 1 },
+                workload: wl,
                 seed: i,
             })
         };
@@ -76,5 +84,11 @@ fn main() {
         }
     }
     println!("\ntotal ε spent: {total_eps:.2} (cap 10.0)");
+    println!(
+        "index cache: {} hits / {} misses, ~{}ms of index builds skipped",
+        metrics.counter("index_cache_hit"),
+        metrics.counter("index_cache_miss"),
+        metrics.counter("index_build_saved_ms"),
+    );
     println!("metrics: {}", metrics.to_json());
 }

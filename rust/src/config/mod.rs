@@ -163,6 +163,39 @@ impl ShardingConfig {
     }
 }
 
+/// Typed view of the `[cache]` section (DESIGN.md §6): the coordinator's
+/// warm-index cache of pre-built k-MIPS indices, shared across jobs that
+/// answer the same workload.
+///
+/// ```text
+/// [cache]
+/// capacity = 8   # pre-built indices kept resident; 0 disables the cache
+/// ```
+///
+/// The CLI also accepts `--cache-capacity=N` as shorthand for
+/// `--cache.capacity=N` (the shorthand wins over the section value).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Maximum pre-built indices kept resident (LRU-evicted beyond this;
+    /// 0 disables caching).
+    pub capacity: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { capacity: 8 }
+    }
+}
+
+impl CacheConfig {
+    /// Read the `[cache]` section, honoring the `--cache-capacity=N`
+    /// shorthand (the shorthand wins over `cache.capacity`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let section = cfg.or("cache.capacity", CacheConfig::default().capacity)?;
+        Ok(CacheConfig { capacity: cfg.or("cache-capacity", section)? })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +248,22 @@ mod tests {
     fn bad_type_is_error() {
         let c = Config::parse("x = notanumber").unwrap();
         assert!(c.or("x", 1u32).is_err());
+    }
+
+    #[test]
+    fn cache_section_parses_with_defaults_and_shorthand() {
+        // defaults when nothing is set
+        let c = Config::new();
+        assert_eq!(CacheConfig::from_config(&c).unwrap(), CacheConfig::default());
+
+        // section value
+        let c = Config::parse("[cache]\ncapacity = 3\n").unwrap();
+        assert_eq!(CacheConfig::from_config(&c).unwrap().capacity, 3);
+
+        // --cache-capacity=0 shorthand beats the section value
+        let mut c = Config::parse("[cache]\ncapacity = 3\n").unwrap();
+        c.apply_overrides(["--cache-capacity=0"]).unwrap();
+        assert_eq!(CacheConfig::from_config(&c).unwrap().capacity, 0);
     }
 
     #[test]

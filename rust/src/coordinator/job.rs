@@ -1,14 +1,18 @@
 //! Job specifications and results for the coordinator, plus the shard
 //! search job ([`ShardSearchJob`]) that [`crate::lazy::ShardedLazyEm`]
-//! fans out over [`super::pool::parallel_map`].
+//! fans out over [`super::pool::parallel_map`], plus the job executors —
+//! [`execute`] (cold) and [`execute_with_cache`] (warm-index serving via
+//! [`IndexCache`], DESIGN.md §6).
 
-use crate::lazy::{LazySample, ShardedLazyEm};
-use crate::mips::IndexKind;
-use crate::mwem::{FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet};
+use super::cache::{CacheEvent, CacheReport, CachedIndex, IndexCache, WorkloadKey};
+use crate::lazy::{LazySample, ShardSet, ShardedLazyEm};
 use crate::lp::{run_scalar, ScalarLpConfig, SelectionMode};
+use crate::mips::{build_index, IndexKind};
+use crate::mwem::{FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet};
 use crate::util::rng::Rng;
 use crate::workloads::{self, LpInstance};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// One shard's slice of a sharded lazy-EM draw: which shard to search and
 /// the pre-split RNG stream it must consume. Streams are split on the
@@ -54,7 +58,13 @@ pub struct ReleaseJobSpec {
     pub index: Option<IndexKind>,
     /// Number of lazy-EM shards (≤ 1 → one monolithic index).
     pub shards: usize,
-    /// Workload / mechanism seed.
+    /// Workload identity — the synthesis seed for the (histogram, query
+    /// set) pair. Jobs sharing `workload` (and shape) answer the same
+    /// query set, so their k-MIPS index is shared through the
+    /// coordinator's [`IndexCache`] instead of being rebuilt per job.
+    pub workload: u64,
+    /// Mechanism randomness seed — fresh per job even when the workload
+    /// repeats, so repeated jobs are independent DP releases.
     pub seed: u64,
 }
 
@@ -124,12 +134,27 @@ pub struct JobResult {
     pub outcome: anyhow::Result<JobOutcome>,
 }
 
-/// Execute a job (called on a worker thread). Workloads are synthesized
-/// from the spec's seed — a stand-in for loading a caller-provided dataset.
+/// Execute a job cold (no index reuse). Equivalent to
+/// [`execute_with_cache`] with no cache; kept as the simple entry point
+/// for one-shot callers.
 pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
+    execute_with_cache(spec, None).map(|(outcome, _)| outcome)
+}
+
+/// Execute a job (called on a worker thread), consulting the coordinator's
+/// warm-index cache when one is supplied: a release job whose workload key
+/// is resident reuses the shared `Arc` index and skips construction; a
+/// miss builds once and populates the cache for subsequent jobs. Workloads
+/// are synthesized from the spec's `workload` seed — a stand-in for
+/// loading a caller-provided dataset.
+pub fn execute_with_cache(
+    spec: &JobSpec,
+    cache: Option<&IndexCache>,
+) -> anyhow::Result<(JobOutcome, CacheReport)> {
+    let mut report = CacheReport::default();
     match spec {
         JobSpec::Release(r) => {
-            let mut rng = Rng::new(r.seed);
+            let mut rng = Rng::new(r.workload);
             let h: Histogram = workloads::gaussian_histogram(&mut rng, r.u, r.n);
             let q: QuerySet = workloads::binary_queries(&mut rng, r.m, r.u);
             let cfg = MwemConfig::paper(r.t, r.u, r.eps, r.delta, r.seed ^ 0xC0FFEE);
@@ -140,24 +165,86 @@ pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
                     (res, w)
                 }
                 Some(kind) => {
-                    let out = crate::mwem::run_fast(
-                        &FastMwemConfig::new(cfg, kind).with_shards(r.shards),
-                        &q,
-                        &h,
-                        &mut NativeBackend,
-                    );
+                    let fcfg = FastMwemConfig::new(cfg, kind).with_shards(r.shards);
+                    // One build closure serves both the cached and the
+                    // uncached path. Builds are seeded from the *workload*
+                    // (not the per-job mechanism seed) and `shards` is
+                    // clamped exactly like the key and ShardSet::build
+                    // clamp it, so every job on a workload uses the
+                    // identical index and enabling the cache never changes
+                    // a job's output.
+                    let shards = r.shards.clamp(1, q.vectors().len().max(1));
+                    let build_seed = r.workload ^ 0x5EED;
+                    let build = || {
+                        let t0 = Instant::now();
+                        let built = if shards > 1 {
+                            CachedIndex::Sharded(Arc::new(ShardSet::build(
+                                kind,
+                                q.vectors(),
+                                shards,
+                                build_seed,
+                            )))
+                        } else {
+                            CachedIndex::Mono(build_index(
+                                kind,
+                                q.vectors().clone(),
+                                build_seed,
+                            ))
+                        };
+                        (built, t0.elapsed())
+                    };
+                    let (cached, ev) = match cache {
+                        Some(c) => {
+                            // memoized per workload id: the content scan
+                            // runs once per workload, not once per job
+                            let key = WorkloadKey {
+                                fingerprint: c.fingerprint_for(r.workload, q.vectors()),
+                                kind,
+                                shards,
+                            };
+                            let (cached, ev) = c.get_or_build(key, build);
+                            report.absorb(ev);
+                            (cached, ev)
+                        }
+                        None => {
+                            let (built, build_time) = build();
+                            let ev = CacheEvent { hit: false, build_time, ..Default::default() };
+                            (built, ev)
+                        }
+                    };
+                    let out = match cached {
+                        CachedIndex::Mono(index) => crate::mwem::run_fast_with_index(
+                            &fcfg,
+                            &q,
+                            &h,
+                            &mut NativeBackend,
+                            index.as_ref(),
+                            ev.build_time,
+                        ),
+                        CachedIndex::Sharded(set) => crate::mwem::run_fast_with_shard_set(
+                            &fcfg,
+                            &q,
+                            &h,
+                            &mut NativeBackend,
+                            &set,
+                            ev.build_time,
+                        ),
+                    };
                     let w = out.result.avg_select_work;
                     (out.result, w)
                 }
             };
             let quality = q.max_error(h.probs(), &result.p_avg);
-            Ok(JobOutcome {
-                quality,
-                eps_spent: result.privacy_spent.0,
-                delta_spent: result.privacy_spent.1,
-                avg_select_work: work,
-                total_time: result.total_time,
-            })
+            Ok((
+                JobOutcome {
+                    quality,
+                    eps_spent: result.privacy_spent.0,
+                    delta_spent: result.privacy_spent.1,
+                    avg_select_work: work,
+                    total_time: result.total_time,
+                },
+                report,
+            ))
         }
         JobSpec::Lp(l) => {
             let mut rng = Rng::new(l.seed);
@@ -172,13 +259,16 @@ pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
                 log_every: 0,
             };
             let res = run_scalar(&cfg, &lp);
-            Ok(JobOutcome {
-                quality: lp.max_violation(&res.x),
-                eps_spent: l.eps,
-                delta_spent: l.delta,
-                avg_select_work: res.avg_select_work,
-                total_time: res.total_time,
-            })
+            Ok((
+                JobOutcome {
+                    quality: lp.max_violation(&res.x),
+                    eps_spent: l.eps,
+                    delta_spent: l.delta,
+                    avg_select_work: res.avg_select_work,
+                    total_time: res.total_time,
+                },
+                report,
+            ))
         }
     }
 }
@@ -198,6 +288,7 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 1,
+            workload: 1,
             seed: 1,
         });
         let out = execute(&spec).unwrap();
@@ -216,12 +307,40 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 4,
+            workload: 1,
             seed: 1,
         });
         let out = execute(&spec).unwrap();
         assert!(out.quality.is_finite() && out.quality >= 0.0);
         // per-shard k + tails, summed over 4 shards, stays well below m
         assert!(out.avg_select_work < 200.0, "work {}", out.avg_select_work);
+    }
+
+    /// Two jobs on one workload: the first misses and populates the cache,
+    /// the second hits and reuses the very same index build.
+    #[test]
+    fn repeated_workload_jobs_share_one_cached_index() {
+        let cache = IndexCache::new(2);
+        let spec = |seed: u64| {
+            JobSpec::Release(ReleaseJobSpec {
+                u: 32,
+                m: 40,
+                n: 200,
+                t: 15,
+                eps: 1.0,
+                delta: 1e-3,
+                index: Some(IndexKind::Flat),
+                shards: 1,
+                workload: 9,
+                seed,
+            })
+        };
+        let (out1, rep1) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
+        let (out2, rep2) = execute_with_cache(&spec(2), Some(&cache)).unwrap();
+        assert_eq!((rep1.hits, rep1.misses), (0, 1));
+        assert_eq!((rep2.hits, rep2.misses), (1, 0));
+        assert_eq!(cache.len(), 1, "one workload -> one resident entry");
+        assert!(out1.quality.is_finite() && out2.quality.is_finite());
     }
 
     #[test]

@@ -4,14 +4,23 @@
 //! This is the "serving" face of the library: callers submit [`JobSpec`]s,
 //! a leader thread dispatches them to workers over channels, each worker
 //! runs the requested solver, and results stream back with privacy spend
-//! recorded by the [`crate::dp::Accountant`]. (The offline build vendors
-//! no tokio; the pool is std::thread + mpsc — see DESIGN.md §3.)
+//! recorded by the [`crate::dp::Accountant`]. Repeated workloads are the
+//! common case under serving traffic, so the pool shares a warm-index
+//! cache ([`IndexCache`], DESIGN.md §6): release jobs that answer the same
+//! query set reuse one pre-built k-MIPS index instead of rebuilding it per
+//! job. (The offline build vendors no tokio; the pool is std::thread +
+//! mpsc — see DESIGN.md §3.)
 
+pub mod cache;
 pub mod job;
 pub mod pool;
 
+pub use cache::{
+    fingerprint_vectors, CacheEvent, CacheReport, CacheStats, CachedIndex, IndexCache,
+    WorkloadKey,
+};
 pub use job::{
-    execute_shard_search, JobOutcome, JobResult, JobSpec, LpJobSpec, ReleaseJobSpec,
-    ShardSearchJob,
+    execute, execute_shard_search, execute_with_cache, JobOutcome, JobResult, JobSpec,
+    LpJobSpec, ReleaseJobSpec, ShardSearchJob,
 };
 pub use pool::{parallel_map, Coordinator, CoordinatorConfig};

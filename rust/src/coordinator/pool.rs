@@ -1,6 +1,8 @@
-//! Leader/worker thread pool with bounded queueing and metrics.
+//! Leader/worker thread pool with bounded queueing, a shared warm-index
+//! cache, and metrics.
 
-use super::job::{execute, JobResult, JobSpec};
+use super::cache::IndexCache;
+use super::job::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -63,11 +65,15 @@ pub struct CoordinatorConfig {
     /// Global privacy cap across all accepted jobs (ε). Jobs whose budget
     /// would exceed the cap are rejected at submission.
     pub eps_cap: Option<f64>,
+    /// Warm-index cache capacity: how many pre-built k-MIPS indices
+    /// (keyed by workload fingerprint × index kind × shard count) stay
+    /// resident across jobs. 0 disables the cache (DESIGN.md §6).
+    pub cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, eps_cap: None }
+        CoordinatorConfig { workers: 4, eps_cap: None, cache_capacity: 8 }
     }
 }
 
@@ -85,6 +91,7 @@ pub struct Coordinator {
     submitted_eps: f64,
     cfg: CoordinatorConfig,
     metrics: Arc<Mutex<Metrics>>,
+    cache: Option<Arc<IndexCache>>,
 }
 
 impl Coordinator {
@@ -94,28 +101,46 @@ impl Coordinator {
         let rx = Arc::new(Mutex::new(rx));
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let cache: Option<Arc<IndexCache>> = if cfg.cache_capacity > 0 {
+            Some(Arc::new(IndexCache::new(cfg.cache_capacity)))
+        } else {
+            None
+        };
 
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let results_tx = results_tx.clone();
                 let metrics = Arc::clone(&metrics);
+                let cache = cache.clone();
                 std::thread::spawn(move || loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(Message::Run(job_id, spec)) => {
                             let started = Instant::now();
                             let kind = spec.kind();
-                            let outcome = execute(&spec);
+                            let outcome = execute_with_cache(&spec, cache.as_deref());
                             {
                                 let mut m = metrics.lock().unwrap();
                                 m.inc("jobs_completed", 1);
                                 m.inc(&format!("jobs_{kind}"), 1);
                                 m.observe("job_duration", started.elapsed());
-                                if outcome.is_err() {
-                                    m.inc("jobs_failed", 1);
+                                match &outcome {
+                                    Ok((_, rep)) => {
+                                        m.inc("index_cache_hit", rep.hits);
+                                        m.inc("index_cache_miss", rep.misses);
+                                        // accumulate at µs precision; the ms
+                                        // counter is derived once in finish()
+                                        // so sub-ms builds aren't zeroed away
+                                        m.inc(
+                                            "index_build_saved_us",
+                                            rep.saved.as_micros() as u64,
+                                        );
+                                    }
+                                    Err(_) => m.inc("jobs_failed", 1),
                                 }
                             }
+                            let outcome = outcome.map(|(o, _)| o);
                             let _ = results_tx.send(JobResult { job_id, kind, outcome });
                         }
                         Ok(Message::Shutdown) | Err(_) => return,
@@ -132,7 +157,13 @@ impl Coordinator {
             submitted_eps: 0.0,
             cfg,
             metrics,
+            cache,
         }
+    }
+
+    /// The warm-index cache, when enabled (`cache_capacity > 0`).
+    pub fn cache(&self) -> Option<&IndexCache> {
+        self.cache.as_deref()
     }
 
     /// Submit a job; returns its id, or an error if the global ε cap would
@@ -180,6 +211,18 @@ impl Coordinator {
             let _ = w.join();
         }
         results.sort_by_key(|r| r.job_id);
+        {
+            let mut m = self.metrics.lock().unwrap();
+            // derive the headline ms counter from the µs accumulator so
+            // only the final total (not each job) is truncated
+            let saved_us = m.counter("index_build_saved_us");
+            m.inc("index_build_saved_ms", saved_us / 1000);
+            if let Some(cache) = &self.cache {
+                let s = cache.stats();
+                m.set_gauge("index_cache_entries", s.entries as f64);
+                m.set_gauge("index_cache_evictions", s.evictions as f64);
+            }
+        }
         let metrics = Arc::try_unwrap(self.metrics)
             .map(|m| m.into_inner().unwrap())
             .unwrap_or_default();
@@ -190,10 +233,16 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::ReleaseJobSpec;
+    use crate::coordinator::job::{LpJobSpec, ReleaseJobSpec};
+    use crate::lp::SelectionMode;
     use crate::mips::IndexKind;
 
     fn small_release(seed: u64, eps: f64) -> JobSpec {
+        release_on_workload(seed, seed, eps)
+    }
+
+    /// A release job pinned to an explicit workload (cache-sharing tests).
+    fn release_on_workload(workload: u64, seed: u64, eps: f64) -> JobSpec {
         JobSpec::Release(ReleaseJobSpec {
             u: 32,
             m: 30,
@@ -203,6 +252,20 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 1,
+            workload,
+            seed,
+        })
+    }
+
+    fn small_lp(seed: u64, eps: f64) -> JobSpec {
+        JobSpec::Lp(LpJobSpec {
+            m: 60,
+            d: 6,
+            t: 15,
+            eps,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Exhaustive,
             seed,
         })
     }
@@ -220,7 +283,11 @@ mod tests {
 
     #[test]
     fn runs_jobs_in_parallel_and_collects_all() {
-        let mut c = Coordinator::start(CoordinatorConfig { workers: 3, eps_cap: None });
+        let mut c = Coordinator::start(CoordinatorConfig {
+            workers: 3,
+            eps_cap: None,
+            cache_capacity: 8,
+        });
         for i in 0..6 {
             c.submit(small_release(i, 1.0)).unwrap();
         }
@@ -236,12 +303,120 @@ mod tests {
 
     #[test]
     fn privacy_cap_rejects_over_budget() {
-        let mut c =
-            Coordinator::start(CoordinatorConfig { workers: 1, eps_cap: Some(2.5) });
+        let mut c = Coordinator::start(CoordinatorConfig {
+            workers: 1,
+            eps_cap: Some(2.5),
+            cache_capacity: 0,
+        });
         assert!(c.submit(small_release(1, 1.0)).is_ok());
         assert!(c.submit(small_release(2, 1.0)).is_ok());
         assert!(c.submit(small_release(3, 1.0)).is_err(), "third job busts the cap");
         let (results, _) = c.finish();
         assert_eq!(results.len(), 2);
+    }
+
+    /// The ε cap accounts Release and Lp budgets against one global total,
+    /// in submission order, regardless of job kind.
+    #[test]
+    fn privacy_cap_accounts_mixed_lp_and_release_batches() {
+        let mut c = Coordinator::start(CoordinatorConfig {
+            workers: 2,
+            eps_cap: Some(2.0),
+            cache_capacity: 4,
+        });
+        assert!(c.submit(small_release(1, 0.9)).is_ok()); // 0.9
+        assert!(c.submit(small_lp(2, 0.9)).is_ok()); // 1.8
+        assert!(c.submit(small_lp(3, 0.3)).is_err(), "1.8 + 0.3 busts the cap");
+        assert!(c.submit(small_release(4, 0.2)).is_ok(), "1.8 + 0.2 lands on the cap");
+        assert!(c.submit(small_lp(5, 0.1)).is_err(), "cap is exhausted");
+
+        let (results, metrics) = c.finish();
+        assert_eq!(results.len(), 3);
+        // the LP jobs charge exactly their nominal ε; release jobs report
+        // the accountant's composed total, which must be positive
+        for r in &results {
+            let o = r.outcome.as_ref().expect("job ok");
+            assert!(o.eps_spent > 0.0);
+            if r.kind == "lp" {
+                assert!((o.eps_spent - 0.9).abs() < 1e-12);
+            }
+        }
+        assert_eq!(metrics.counter("jobs_release"), 2);
+        assert_eq!(metrics.counter("jobs_lp"), 1);
+        assert_eq!(metrics.counter("jobs_failed"), 0);
+    }
+
+    /// Repeated workloads on a single worker: first job misses and
+    /// populates, later jobs hit; distinct workloads get their own entry.
+    #[test]
+    fn repeated_workloads_hit_the_index_cache() {
+        let mut c = Coordinator::start(CoordinatorConfig {
+            workers: 1, // serialize so later jobs observe the first insert
+            eps_cap: None,
+            cache_capacity: 4,
+        });
+        for seed in 0..3 {
+            c.submit(release_on_workload(7, 100 + seed, 1.0)).unwrap();
+        }
+        c.submit(release_on_workload(8, 200, 1.0)).unwrap();
+        let cache = c.cache().expect("cache enabled");
+        assert_eq!(cache.capacity(), 4);
+
+        let (results, metrics) = c.finish();
+        assert_eq!(results.len(), 4);
+        assert!(results.iter().all(|r| r.outcome.is_ok()));
+        assert_eq!(metrics.counter("index_cache_hit"), 2);
+        assert_eq!(metrics.counter("index_cache_miss"), 2);
+        assert_eq!(metrics.gauge("index_cache_entries"), Some(2.0));
+        assert_eq!(metrics.gauge("index_cache_evictions"), Some(0.0));
+    }
+
+    /// `cache_capacity: 0` turns the cache off without changing serving
+    /// behavior: jobs still run, no cache metrics accrue, and — because
+    /// index builds are seeded from the workload either way — every job's
+    /// release is bit-identical to the cached coordinator's.
+    #[test]
+    fn cache_disabled_still_serves() {
+        // HNSW: the one index whose construction is seed-dependent, so the
+        // bit-equality assertion below would catch any cache-on/off
+        // build-seed divergence
+        let hnsw_release = |seed: u64| {
+            JobSpec::Release(ReleaseJobSpec {
+                u: 32,
+                m: 60,
+                n: 200,
+                t: 20,
+                eps: 1.0,
+                delta: 1e-3,
+                index: Some(IndexKind::Hnsw),
+                shards: 1,
+                workload: 7,
+                seed,
+            })
+        };
+        let run = |capacity: usize| {
+            let mut c = Coordinator::start(CoordinatorConfig {
+                workers: 1,
+                eps_cap: None,
+                cache_capacity: capacity,
+            });
+            assert_eq!(c.cache().is_some(), capacity > 0);
+            c.submit(hnsw_release(1)).unwrap();
+            c.submit(hnsw_release(2)).unwrap();
+            c.finish()
+        };
+        let (results, metrics) = run(0);
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.outcome.is_ok()));
+        assert_eq!(metrics.counter("index_cache_hit"), 0);
+        assert_eq!(metrics.counter("index_cache_miss"), 0);
+        assert_eq!(metrics.gauge("index_cache_entries"), None);
+
+        let (cached_results, cached_metrics) = run(4);
+        assert_eq!(cached_metrics.counter("index_cache_hit"), 1);
+        for (a, b) in results.iter().zip(cached_results.iter()) {
+            let (oa, ob) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+            assert_eq!(oa.quality, ob.quality, "cache must not change any release");
+        }
     }
 }

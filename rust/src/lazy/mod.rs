@@ -14,4 +14,4 @@ pub mod sharded;
 
 pub use gumbel::{lazy_gumbel_max, LazySample};
 pub use lazy_em::{LazyEm, ScoreTransform};
-pub use sharded::ShardedLazyEm;
+pub use sharded::{ShardSet, ShardedLazyEm};

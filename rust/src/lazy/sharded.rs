@@ -29,6 +29,10 @@
 //! run on the pool, so expected wall-clock drops from Θ(√m) to Θ(√(m/S))
 //! at S-way parallelism, and index build — the dominant preprocessing cost
 //! for IVF/HNSW — parallelizes S ways with no cross-shard coupling.
+//!
+//! The indices themselves live in a [`ShardSet`] — the owned, `Arc`-shared
+//! half of the mechanism — so one build can back many `ShardedLazyEm`
+//! instances across jobs (the coordinator's warm-index cache, DESIGN.md §6).
 
 use super::gumbel::{lazy_gumbel_max, LazySample};
 use super::lazy_em::{retrieve_top_k_from, transform_ip};
@@ -38,15 +42,117 @@ use crate::coordinator::pool::parallel_map;
 use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
 use crate::util::math::dot;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 /// One contiguous slice of the candidate set with its own k-MIPS index.
-struct Shard {
+struct ShardHandle {
     /// Global id of the shard's first candidate.
     offset: usize,
     /// Number of candidates in the shard.
     len: usize,
     /// Index over the shard's rows only (local ids `0..len`).
-    index: Box<dyn MipsIndex>,
+    index: Arc<dyn MipsIndex>,
+}
+
+/// The owned, shareable half of a [`ShardedLazyEm`]: S per-shard k-MIPS
+/// indices plus their partition geometry, with no borrow of the candidate
+/// vectors. Build once — the per-shard builds run in parallel on the pool —
+/// then share the set behind an [`Arc`] across any number of mechanisms or
+/// jobs. This is the unit the coordinator's warm-index cache
+/// ([`crate::coordinator::IndexCache`]) keeps resident for sharded
+/// workloads, the sharded sibling of a cached monolithic
+/// `Arc<dyn MipsIndex>`.
+///
+/// ```
+/// use fast_mwem::lazy::{ScoreTransform, ShardSet, ShardedLazyEm};
+/// use fast_mwem::mips::{IndexKind, VectorSet};
+/// use fast_mwem::util::rng::Rng;
+/// use std::sync::Arc;
+///
+/// let mut rng = Rng::new(1);
+/// let data: Vec<f32> = (0..64 * 4).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+/// let vs = VectorSet::new(data, 64, 4);
+/// let set = Arc::new(ShardSet::build(IndexKind::Flat, &vs, 4, 7));
+/// // two mechanisms sharing one build
+/// let a = ShardedLazyEm::with_shard_set(Arc::clone(&set), &vs, ScoreTransform::Abs);
+/// let b = ShardedLazyEm::with_shard_set(Arc::clone(&set), &vs, ScoreTransform::Abs);
+/// assert_eq!(a.num_shards(), b.num_shards());
+/// ```
+pub struct ShardSet {
+    shards: Vec<ShardHandle>,
+    /// Total candidates covered (Σ shard lengths).
+    m: usize,
+    /// Dimension of the indexed vectors.
+    d: usize,
+    kind: IndexKind,
+}
+
+impl ShardSet {
+    /// Partition `vectors` into `shards` contiguous shards and build one
+    /// index of `kind` per shard, in parallel (one scoped build job per
+    /// shard via [`parallel_map`]).
+    ///
+    /// `shards` is clamped to `[1, m]`; shard sizes differ by at most one.
+    /// Panics if `vectors` is empty.
+    pub fn build(kind: IndexKind, vectors: &VectorSet, shards: usize, seed: u64) -> Self {
+        let m = vectors.len();
+        assert!(m > 0, "ShardSet needs a non-empty vector set");
+        let s = shards.clamp(1, m);
+        let d = vectors.dim();
+
+        let (base, rem) = (m / s, m % s);
+        // independent, well-mixed build seed per shard via the tested
+        // Rng::split primitive (derived up front, on the calling thread)
+        let mut seed_rng = Rng::new(seed);
+        let mut specs: Vec<(usize, usize, u64, VectorSet)> = Vec::with_capacity(s);
+        let mut offset = 0usize;
+        for i in 0..s {
+            let len = base + usize::from(i < rem);
+            let rows = vectors.as_slice()[offset * d..(offset + len) * d].to_vec();
+            let shard_seed = seed_rng.split(i as u64).next_u64();
+            specs.push((offset, len, shard_seed, VectorSet::new(rows, len, d)));
+            offset += len;
+        }
+
+        let shards_built: Vec<ShardHandle> =
+            parallel_map(s, specs, |(offset, len, shard_seed, vs)| ShardHandle {
+                offset,
+                len,
+                index: build_index(kind, vs, shard_seed),
+            });
+
+        ShardSet { shards: shards_built, m, d, kind }
+    }
+
+    /// Number of shards S.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total number of indexed candidates m.
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    /// True when the set covers no candidates (never, by construction).
+    pub fn is_empty(&self) -> bool {
+        self.m == 0
+    }
+
+    /// Dimension of the indexed vectors.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Which index implementation every shard uses.
+    pub fn kind(&self) -> IndexKind {
+        self.kind
+    }
+
+    /// `(offset, len)` of every shard, in candidate-id order.
+    pub fn bounds(&self) -> Vec<(usize, usize)> {
+        self.shards.iter().map(|s| (s.offset, s.len)).collect()
+    }
 }
 
 /// The exponential mechanism over S independently-indexed shards — exact
@@ -72,7 +178,9 @@ struct Shard {
 /// assert!(sample.index < 64);
 /// ```
 pub struct ShardedLazyEm<'a> {
-    shards: Vec<Shard>,
+    /// The per-shard indices (owned or shared — see
+    /// [`ShardedLazyEm::with_shard_set`]).
+    set: Arc<ShardSet>,
     /// The full candidate set (borrowed, like [`super::LazyEm`]'s), for
     /// exact tail scoring by global row id — only the per-shard index
     /// copies are owned.
@@ -91,7 +199,8 @@ impl<'a> ShardedLazyEm<'a> {
     /// shard via [`parallel_map`]).
     ///
     /// `shards` is clamped to `[1, m]`; shard sizes differ by at most one.
-    /// Panics if `vectors` is empty.
+    /// Panics if `vectors` is empty. Equivalent to [`ShardSet::build`]
+    /// followed by [`ShardedLazyEm::with_shard_set`].
     pub fn build(
         kind: IndexKind,
         vectors: &'a VectorSet,
@@ -99,32 +208,31 @@ impl<'a> ShardedLazyEm<'a> {
         transform: ScoreTransform,
         seed: u64,
     ) -> Self {
-        let m = vectors.len();
-        assert!(m > 0, "ShardedLazyEm needs a non-empty vector set");
-        let s = shards.clamp(1, m);
-        let d = vectors.dim();
+        Self::with_shard_set(
+            Arc::new(ShardSet::build(kind, vectors, shards, seed)),
+            vectors,
+            transform,
+        )
+    }
 
-        let (base, rem) = (m / s, m % s);
-        // independent, well-mixed build seed per shard via the tested
-        // Rng::split primitive (derived up front, on the calling thread)
-        let mut seed_rng = Rng::new(seed);
-        let mut specs: Vec<(usize, usize, u64, VectorSet)> = Vec::with_capacity(s);
-        let mut offset = 0usize;
-        for i in 0..s {
-            let len = base + usize::from(i < rem);
-            let rows = vectors.as_slice()[offset * d..(offset + len) * d].to_vec();
-            let shard_seed = seed_rng.split(i as u64).next_u64();
-            specs.push((offset, len, shard_seed, VectorSet::new(rows, len, d)));
-            offset += len;
-        }
-
-        let shards_built: Vec<Shard> = parallel_map(s, specs, |(offset, len, shard_seed, vs)| {
-            Shard { offset, len, index: build_index(kind, vs, shard_seed) }
-        });
-
+    /// Wrap a pre-built (possibly cached and shared) [`ShardSet`] — the
+    /// warm-serving entry point: repeated jobs on the same workload pass
+    /// clones of one `Arc<ShardSet>` and skip index construction entirely.
+    ///
+    /// Panics unless the set's geometry matches `vectors` (same candidate
+    /// count and dimension) — the set must have been built over the same
+    /// vector content for draws to be meaningful.
+    pub fn with_shard_set(
+        set: Arc<ShardSet>,
+        vectors: &'a VectorSet,
+        transform: ScoreTransform,
+    ) -> Self {
+        assert_eq!(set.len(), vectors.len(), "shard set must cover the candidate set");
+        assert_eq!(set.dim(), vectors.dim(), "shard set dimension mismatch");
+        let (m, s) = (set.len(), set.num_shards());
         let k = ((m as f64 / s as f64).sqrt().ceil() as usize).max(1);
         ShardedLazyEm {
-            shards: shards_built,
+            set,
             vectors,
             transform,
             k,
@@ -176,7 +284,7 @@ impl<'a> ShardedLazyEm<'a> {
 
     /// Number of shards S.
     pub fn num_shards(&self) -> usize {
-        self.shards.len()
+        self.set.num_shards()
     }
 
     /// Per-shard top-k size.
@@ -184,9 +292,14 @@ impl<'a> ShardedLazyEm<'a> {
         self.k
     }
 
+    /// The underlying (shareable) shard set.
+    pub fn shard_set(&self) -> &Arc<ShardSet> {
+        &self.set
+    }
+
     /// `(offset, len)` of every shard, in candidate-id order.
     pub fn shard_bounds(&self) -> Vec<(usize, usize)> {
-        self.shards.iter().map(|s| (s.offset, s.len)).collect()
+        self.set.bounds()
     }
 
     /// One shard's lazy Gumbel draw: retrieve the shard-local top-k, take
@@ -200,7 +313,7 @@ impl<'a> ShardedLazyEm<'a> {
         query: &[f32],
         scale: f64,
     ) -> LazySample {
-        let shard = &self.shards[shard_id];
+        let shard = &self.set.shards[shard_id];
         let k = self.k.clamp(1, shard.len);
         let mut top = retrieve_top_k_from(shard.index.as_ref(), self.transform, k, query);
         for t in top.iter_mut() {
@@ -242,11 +355,11 @@ impl<'a> ShardedLazyEm<'a> {
         let scale = eps0 / (2.0 * sensitivity);
         // Pre-split one RNG stream per shard on the caller's thread: the
         // draw is deterministic in `rng` no matter how jobs are scheduled.
-        let jobs: Vec<ShardSearchJob> = (0..self.shards.len())
+        let jobs: Vec<ShardSearchJob> = (0..self.num_shards())
             .map(|i| ShardSearchJob { shard_id: i, rng: rng.split(i as u64) })
             .collect();
 
-        let draws: Vec<LazySample> = if self.parallel_select && self.shards.len() > 1 {
+        let draws: Vec<LazySample> = if self.parallel_select && self.num_shards() > 1 {
             parallel_map(self.workers, jobs, |job| {
                 execute_shard_search(self, query, scale, job)
             })
@@ -282,6 +395,36 @@ mod tests {
         let mut rng = Rng::new(seed);
         let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
         VectorSet::new(data, n, d)
+    }
+
+    /// A pre-built, `Arc`-shared [`ShardSet`] is bit-identical to a fresh
+    /// inline build with the same seed: warm (cached) serving changes
+    /// nothing about the draw.
+    #[test]
+    fn shared_shard_set_draws_match_fresh_build() {
+        let vs = random_set(60, 5, 21);
+        let mut qrng = Rng::new(30);
+        let q: Vec<f32> = (0..5).map(|_| qrng.uniform(-0.5, 0.5) as f32).collect();
+
+        let set = Arc::new(ShardSet::build(IndexKind::Flat, &vs, 3, 22));
+        assert_eq!(set.kind(), IndexKind::Flat);
+        assert_eq!((set.len(), set.dim(), set.num_shards()), (60, 5, 3));
+        let warm_a = ShardedLazyEm::with_shard_set(Arc::clone(&set), &vs, ScoreTransform::Abs);
+        let warm_b = ShardedLazyEm::with_shard_set(Arc::clone(&set), &vs, ScoreTransform::Abs);
+        let cold = ShardedLazyEm::build(IndexKind::Flat, &vs, 3, ScoreTransform::Abs, 22);
+
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let mut r3 = Rng::new(5);
+        for _ in 0..50 {
+            let a = warm_a.select(&mut r1, &q, 1.0, 0.1);
+            let b = warm_b.select(&mut r2, &q, 1.0, 0.1);
+            let c = cold.select(&mut r3, &q, 1.0, 0.1);
+            assert_eq!(a.index, c.index);
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.work, c.work);
+            assert!(a.value == c.value);
+        }
     }
 
     #[test]

@@ -20,9 +20,10 @@
 //! from Rust.
 //!
 //! See `DESIGN.md` for the module inventory, the offline-build
-//! substitutions (§3), the per-figure experiment index (§4) and the
-//! sharded-LazyEM design (§5); `EXPERIMENTS.md` records paper-vs-measured
-//! results; `README.md` has the build/run quickstart.
+//! substitutions (§3), the per-figure experiment index (§4), the
+//! sharded-LazyEM design (§5) and the warm-index serving cache (§6);
+//! `EXPERIMENTS.md` records paper-vs-measured results; `README.md` has the
+//! build/run quickstart.
 
 #![warn(missing_docs)]
 

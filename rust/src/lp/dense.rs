@@ -18,6 +18,7 @@ use crate::mips::IndexKind;
 use crate::util::math::dot;
 use crate::util::rng::Rng;
 use crate::workloads::PackingLp;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::bregman::bregman_project;
@@ -99,7 +100,7 @@ pub fn run_dense(cfg: &DenseLpConfig, lp: &PackingLp) -> DenseLpResult {
 
     let build_started = Instant::now();
     let nvecs = oracle_vectors(lp);
-    let mut index: Option<Box<dyn MipsIndex>> = None;
+    let mut index: Option<Arc<dyn MipsIndex>> = None;
     let mut sharded: Option<ShardedLazyEm> = None;
     match cfg.mode {
         SelectionMode::Exhaustive => {}

@@ -13,6 +13,7 @@ use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
 use crate::util::math::{dot, normalize_l1};
 use crate::util::rng::Rng;
 use crate::workloads::LpInstance;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// How the worst constraint is selected each round: the exhaustive EM
@@ -132,7 +133,7 @@ pub fn run_scalar(cfg: &ScalarLpConfig, lp: &LpInstance) -> ScalarLpResult {
     // Static MIPS dataset {A_i ∘ b_i}; query x̃ ∘ −1 gives A_i x̃ − b_i.
     let build_started = Instant::now();
     let cat = concat_constraints(lp);
-    let mut index: Option<Box<dyn MipsIndex>> = None;
+    let mut index: Option<Arc<dyn MipsIndex>> = None;
     let mut sharded: Option<ShardedLazyEm> = None;
     match cfg.mode {
         SelectionMode::Exhaustive => {}

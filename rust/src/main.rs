@@ -16,7 +16,7 @@
 //! key=value / [section] subset, see config/mod.rs).
 
 use anyhow::{bail, Context, Result};
-use fast_mwem::config::{Config, ShardingConfig};
+use fast_mwem::config::{CacheConfig, Config, ShardingConfig};
 use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
 use fast_mwem::eval::{self, EvalOpts};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
@@ -88,10 +88,16 @@ USAGE:
   repro lp [--m=20000] [--d=20] [--t=2000] [--mode=hnsw|ivf|flat|exhaustive]
            [--shards=S]
   repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
+              [--workloads=W] [--cache-capacity=C]
   repro check-artifacts [--dir=artifacts]
 
 Sharding (DESIGN.md §5): --shards=S (or a [sharding] config section) splits
 the lazy EM across S per-shard indices, built in parallel on the pool.
+
+Warm-index serving (DESIGN.md §6): the coordinator keeps up to C pre-built
+k-MIPS indices resident (--cache-capacity=C, or a [cache] section;
+0 disables). `serve` spreads its release jobs across W distinct workloads
+(--workloads=W, default 2) so repeats hit the cache and skip index builds.
 ";
 
 fn cmd_eval(pos: &[String], cfg: &Config) -> Result<()> {
@@ -235,9 +241,12 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let workers: usize = cfg.or("workers", 4)?;
     let eps_cap: Option<f64> = cfg.get("eps-cap")?;
     let sharding = ShardingConfig::from_config(cfg)?;
+    let cache = CacheConfig::from_config(cfg)?;
+    let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
     println!(
-        "serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?}, shards {})",
-        sharding.shards
+        "serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?}, shards {}, \
+         {workload_count} workloads, cache capacity {})",
+        sharding.shards, cache.capacity
     );
 
     let lp_mode = if sharding.shards > 1 {
@@ -245,7 +254,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     } else {
         SelectionMode::Lazy(IndexKind::Hnsw)
     };
-    let mut coord = Coordinator::start(CoordinatorConfig { workers, eps_cap });
+    let mut coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        eps_cap,
+        cache_capacity: cache.capacity,
+    });
     let mut accepted = 0usize;
     for i in 0..jobs {
         let spec = if i % 2 == 0 {
@@ -258,6 +271,9 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
                 delta: 1e-3,
                 index: Some(IndexKind::Hnsw),
                 shards: sharding.shards,
+                // spread release jobs across a few repeated workloads so
+                // the warm-index cache sees serving-shaped traffic
+                workload: (i / 2 % workload_count) as u64,
                 seed: i as u64,
             })
         } else {
@@ -291,6 +307,13 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
             Err(e) => println!("  job {:>3} [{}] FAILED: {e}", r.job_id, r.kind),
         }
     }
+    println!(
+        "index cache: {} hits / {} misses, {} entries resident, ~{}ms build time saved",
+        metrics.counter("index_cache_hit"),
+        metrics.counter("index_cache_miss"),
+        metrics.gauge("index_cache_entries").unwrap_or(0.0),
+        metrics.counter("index_build_saved_ms"),
+    );
     println!("accepted {accepted}/{jobs}; metrics: {}", metrics.to_json());
     Ok(())
 }

@@ -1,5 +1,13 @@
 //! Lightweight metrics registry: counters, gauges and timing histograms for
 //! the coordinator and the eval harness. JSON-dumpable via `util::json`.
+//!
+//! Well-known coordinator counters: `jobs_completed` / `jobs_failed` /
+//! `jobs_{release,lp}`, plus the warm-index serving trio `index_cache_hit`,
+//! `index_cache_miss` and `index_build_saved_ms` (total index build time
+//! skipped by cache hits; accumulated per job at µs precision in
+//! `index_build_saved_us`, with the ms counter derived once at
+//! `Coordinator::finish` so sub-ms builds are not zeroed away — see
+//! DESIGN.md §6).
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -22,6 +30,14 @@ impl Metrics {
     /// Add `by` to a counter (created at 0).
     pub fn inc(&mut self, name: &str, by: u64) {
         *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Add a duration to a counter in whole milliseconds (truncating —
+    /// sub-millisecond contributions round to 0). For durations that
+    /// accumulate as monotone totals (e.g. `index_build_saved_ms`) rather
+    /// than per-event samples; use [`Metrics::observe`] for distributions.
+    pub fn inc_ms(&mut self, name: &str, d: Duration) {
+        self.inc(name, d.as_millis() as u64);
     }
 
     /// Set a gauge to an absolute value.
@@ -144,6 +160,15 @@ mod tests {
         assert_eq!(m.counter("jobs"), 3);
         assert_eq!(m.counter("missing"), 0);
         assert_eq!(m.gauge("eps"), Some(0.5));
+    }
+
+    #[test]
+    fn inc_ms_truncates_to_whole_milliseconds() {
+        let mut m = Metrics::new();
+        m.inc_ms("saved", Duration::from_micros(2_500));
+        m.inc_ms("saved", Duration::from_millis(3));
+        m.inc_ms("saved", Duration::from_micros(900)); // < 1ms -> 0
+        assert_eq!(m.counter("saved"), 5);
     }
 
     #[test]

@@ -15,6 +15,8 @@
 //! each key `k_i` gains a coordinate `√(M − ‖k_i‖²)` and queries gain a 0,
 //! making L2 order equal inner-product order.
 
+use std::sync::Arc;
+
 pub mod augment;
 pub mod flat;
 pub mod hnsw;
@@ -150,11 +152,18 @@ pub trait MipsIndex: Send + Sync {
 }
 
 /// Build an index of the requested kind over `vs` (consumed).
-pub fn build_index(kind: IndexKind, vs: VectorSet, seed: u64) -> Box<dyn MipsIndex> {
+///
+/// The index comes back behind an [`Arc`] so one build can be shared — by
+/// the per-shard handles of [`crate::lazy::ShardSet`] and, across whole
+/// jobs, by the coordinator's warm-index cache
+/// ([`crate::coordinator::IndexCache`]). Indices are immutable after
+/// construction and [`MipsIndex`] requires `Send + Sync`, so sharing needs
+/// no further synchronization.
+pub fn build_index(kind: IndexKind, vs: VectorSet, seed: u64) -> Arc<dyn MipsIndex> {
     match kind {
-        IndexKind::Flat => Box::new(FlatIndex::new(vs)),
-        IndexKind::Ivf => Box::new(IvfIndex::build(vs, IvfParams::paper(), seed)),
-        IndexKind::Hnsw => Box::new(HnswIndex::build(vs, HnswParams::paper(), seed)),
+        IndexKind::Flat => Arc::new(FlatIndex::new(vs)),
+        IndexKind::Ivf => Arc::new(IvfIndex::build(vs, IvfParams::paper(), seed)),
+        IndexKind::Hnsw => Arc::new(HnswIndex::build(vs, HnswParams::paper(), seed)),
     }
 }
 

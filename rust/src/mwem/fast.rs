@@ -8,10 +8,11 @@
 use super::classic::{measured_update, IterStat, MwemConfig, MwemResult};
 use super::{Histogram, MwemBackend, MwuState, QuerySet};
 use crate::dp::Accountant;
-use crate::lazy::{LazyEm, LazySample, ScoreTransform, ShardedLazyEm};
+use crate::lazy::{LazyEm, LazySample, ScoreTransform, ShardSet, ShardedLazyEm};
 use crate::mips::{build_index, IndexKind, MipsIndex};
 use crate::mwem::classic::UpdateRule;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Configuration for Fast-MWEM (Algorithm 2).
@@ -126,8 +127,10 @@ pub fn run_fast(
 }
 
 /// Same as [`run_fast`] but with a caller-supplied (pre-built) monolithic
-/// index, so benchmark sweeps can amortize index construction across runs.
-/// Ignores `cfg.shards`.
+/// index, so benchmark sweeps — and, via the coordinator's
+/// [`crate::coordinator::IndexCache`], repeated serving jobs on one
+/// workload — can amortize index construction across runs. Ignores
+/// `cfg.shards`.
 pub fn run_fast_with_index(
     cfg: &FastMwemConfig,
     q: &QuerySet,
@@ -138,6 +141,34 @@ pub fn run_fast_with_index(
 ) -> FastMwemOutput {
     let mut em = LazyEm::new(index, q.vectors(), ScoreTransform::Abs)
         .with_margin_slack(cfg.margin_slack);
+    if let Some(k) = cfg.k {
+        em = em.with_k(k);
+    }
+    run_fast_loop(cfg, q, h, backend, build_time, |rng, d, eps, sens| {
+        em.select(rng, d, eps, sens)
+    })
+}
+
+/// Sharded sibling of [`run_fast_with_index`]: run Algorithm 2 over a
+/// caller-supplied, `Arc`-shared [`ShardSet`], so warm-index serving skips
+/// the per-job shard builds. With the same build seed the result is
+/// bit-identical to [`run_fast`]'s inline sharded path. Ignores
+/// `cfg.index` and `cfg.shards` in favor of the set's own geometry; the
+/// set must have been built over `q.vectors()` (asserted).
+pub fn run_fast_with_shard_set(
+    cfg: &FastMwemConfig,
+    q: &QuerySet,
+    h: &Histogram,
+    backend: &mut dyn MwemBackend,
+    set: &Arc<ShardSet>,
+    build_time: Duration,
+) -> FastMwemOutput {
+    let mut em = ShardedLazyEm::with_shard_set(Arc::clone(set), q.vectors(), ScoreTransform::Abs)
+        .with_margin_slack(cfg.margin_slack)
+        .with_parallel_select(cfg.parallel_shard_select);
+    if cfg.shard_workers > 0 {
+        em = em.with_workers(cfg.shard_workers);
+    }
     if let Some(k) = cfg.k {
         em = em.with_k(k);
     }
@@ -316,6 +347,28 @@ mod tests {
             "monolithic {e_mono} sharded {e_sharded}"
         );
         assert_eq!(sharded.lazy.tail_counts.len(), 400);
+    }
+
+    /// Warm serving is bit-exact: a pre-built `Arc<ShardSet>` with the same
+    /// build seed reproduces the inline sharded run exactly.
+    #[test]
+    fn prebuilt_shard_set_matches_inline_build() {
+        let (h, q) = workload(64, 120, 6);
+        let cfg = MwemConfig::paper(60, 64, 1.0, 1e-3, 23);
+        let fcfg = FastMwemConfig::new(cfg, IndexKind::Flat).with_shards(3);
+        let inline = run_fast(&fcfg, &q, &h, &mut NativeBackend);
+
+        let set = Arc::new(ShardSet::build(
+            IndexKind::Flat,
+            q.vectors(),
+            3,
+            fcfg.base.seed ^ 0x5EED,
+        ));
+        let warm =
+            run_fast_with_shard_set(&fcfg, &q, &h, &mut NativeBackend, &set, Duration::ZERO);
+        assert_eq!(inline.result.p_avg, warm.result.p_avg);
+        assert_eq!(inline.result.avg_select_work, warm.result.avg_select_work);
+        assert_eq!(warm.lazy.build_time, Duration::ZERO);
     }
 
     #[test]

@@ -15,7 +15,10 @@ pub mod histogram;
 pub mod queries;
 
 pub use classic::{run_classic, IterStat, MwemConfig, MwemResult, UpdateRule};
-pub use fast::{run_fast, FastMwemConfig};
+pub use fast::{
+    run_fast, run_fast_with_index, run_fast_with_shard_set, FastMwemConfig, FastMwemOutput,
+    LazyDiagnostics,
+};
 pub use histogram::Histogram;
 pub use queries::QuerySet;
 

@@ -1,6 +1,10 @@
 //! Cross-module integration tests: full algorithm runs over synthesized
-//! workloads, exercising workloads → mips → lazy → dp → mwem/lp together.
+//! workloads, exercising workloads → mips → lazy → dp → mwem/lp together,
+//! plus the warm-index serving path (coordinator → cache → mwem).
 
+use fast_mwem::coordinator::{
+    execute_with_cache, Coordinator, CoordinatorConfig, IndexCache, JobSpec, ReleaseJobSpec,
+};
 use fast_mwem::lazy::{ScoreTransform, ShardedLazyEm};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
@@ -109,6 +113,94 @@ fn sharded_combine_identity_holds_through_public_api() {
         let raw = (dot(vs.row(combined.index), &q) as f64).abs();
         assert!(raw.is_finite());
     }
+}
+
+/// The warm-index PR's acceptance bar: a repeated-workload batch through
+/// the coordinator records `index_cache_hit > 0`, hit jobs skip index
+/// construction (one resident entry per workload, no rebuilds), and every
+/// job still produces a sound release.
+#[test]
+fn repeated_workload_batch_hits_warm_index_cache() {
+    let mut coord = Coordinator::start(CoordinatorConfig {
+        workers: 1, // serialize so every repeat observes the first insert
+        eps_cap: None,
+        cache_capacity: 4,
+    });
+    let spec = |workload: u64, seed: u64, shards: usize| {
+        JobSpec::Release(ReleaseJobSpec {
+            u: 64,
+            m: 300,
+            n: 400,
+            t: 40,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards,
+            workload,
+            seed,
+        })
+    };
+    // three jobs on workload 7 (monolithic index), two on workload 9
+    // (2-shard index set) — 2 cold builds, 3 warm hits
+    for s in 0..3 {
+        coord.submit(spec(7, 100 + s, 1)).unwrap();
+    }
+    for s in 0..2 {
+        coord.submit(spec(9, 200 + s, 2)).unwrap();
+    }
+    let (results, metrics) = coord.finish();
+
+    assert_eq!(results.len(), 5);
+    for r in &results {
+        let o = r.outcome.as_ref().expect("job ok");
+        assert!(o.quality.is_finite() && o.quality >= 0.0);
+        assert!(o.eps_spent > 0.0);
+    }
+    assert_eq!(metrics.counter("index_cache_hit"), 3, "repeats must hit");
+    assert_eq!(metrics.counter("index_cache_miss"), 2, "one cold build per workload");
+    assert_eq!(metrics.gauge("index_cache_entries"), Some(2.0));
+}
+
+/// Hit jobs skip construction *and* reproduce the miss job's mechanism
+/// exactly when re-run with the same mechanism seed: the cached index is
+/// the same object, so the whole release is deterministic in (workload,
+/// seed) regardless of cache temperature.
+#[test]
+fn cache_hit_skips_build_and_is_deterministic() {
+    let spec = |seed: u64| {
+        JobSpec::Release(ReleaseJobSpec {
+            u: 64,
+            m: 200,
+            n: 400,
+            t: 30,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards: 1,
+            workload: 5,
+            seed,
+        })
+    };
+
+    let cache = IndexCache::new(2);
+    let (cold, rep_cold) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
+    assert_eq!((rep_cold.hits, rep_cold.misses), (0, 1));
+
+    // same spec again: a hit, with a rebuilt-free (shared) index
+    let (warm, rep_warm) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
+    assert_eq!((rep_warm.hits, rep_warm.misses), (1, 0));
+    assert!(rep_warm.saved >= rep_cold.saved, "hits record skipped build time");
+    assert_eq!(cache.len(), 1, "hit must not add entries");
+    assert_eq!(
+        cold.quality, warm.quality,
+        "same workload + same mechanism seed => identical release"
+    );
+
+    // fresh mechanism seed on the warm workload: still a hit, still sound
+    let (other, rep_other) = execute_with_cache(&spec(2), Some(&cache)).unwrap();
+    assert_eq!((rep_other.hits, rep_other.misses), (1, 0));
+    assert!(other.quality.is_finite() && other.quality >= 0.0);
+    assert_eq!(cache.stats().hits, 2);
 }
 
 /// Error decreases as the privacy budget grows (sanity of the DP plumbing).

@@ -207,22 +207,36 @@ fn prop_coordinator_invariants() {
         let cap = 3.0 + rng.usize_below(5) as f64;
         let workers = 1 + rng.usize_below(4);
         let njobs = 3 + rng.usize_below(8);
-        let mut coord =
-            Coordinator::start(CoordinatorConfig { workers, eps_cap: Some(cap) });
+        let cached_round = round % 2 == 0;
+        let mut coord = Coordinator::start(CoordinatorConfig {
+            workers,
+            eps_cap: Some(cap),
+            // alternate cache-enabled and cache-disabled coordinators
+            cache_capacity: if cached_round { 3 } else { 0 },
+        });
         let mut accepted_eps = 0.0;
         let mut accepted = 0usize;
         for j in 0..njobs {
             let eps = 0.5 + rng.usize_below(3) as f64 * 0.5;
             let spec = if rng.f64() < 0.5 {
+                // Cached rounds draw from a small workload pool with a
+                // fixed shape, so repeats can actually hit (and evictions
+                // at capacity 3 occur); uncached rounds randomize freely.
+                let (m, workload) = if cached_round {
+                    (32, (j % 3) as u64)
+                } else {
+                    (20 + rng.usize_below(30), round as u64 * 100 + j as u64)
+                };
                 JobSpec::Release(ReleaseJobSpec {
                     u: 32,
-                    m: 20 + rng.usize_below(30),
+                    m,
                     n: 200,
                     t: 10,
                     eps,
                     delta: 1e-3,
                     index: Some(IndexKind::Flat),
                     shards: 1 + rng.usize_below(3),
+                    workload,
                     seed: round as u64 * 100 + j as u64,
                 })
             } else {

@@ -1,16 +1,24 @@
 #!/usr/bin/env bash
-# Repository gate: build, test, and documentation health in one command.
+# Repository gate: build, lint, test, and documentation health in one
+# command — the same sequence `.github/workflows/ci.yml` runs on every
+# push/PR.
 #
 #   ./scripts/check.sh
 #
 # Steps:
 #   1. cargo build --release            — the serving binary and library
 #   2. cargo build --release --benches  — the harness-less bench binaries
-#   3. cargo test -q                    — unit + integration tests (tier-1)
-#   4. cargo doc --no-deps              — with rustdoc warnings denied, so
+#   3. cargo fmt --check                — formatting is canonical rustfmt
+#   4. cargo clippy --all-targets       — lints denied (-D warnings)
+#   5. cargo test -q                    — unit + integration tests (tier-1)
+#   6. cargo doc --no-deps              — with rustdoc warnings denied, so
 #      doc regressions (broken intra-doc links, bare URLs, malformed HTML)
 #      fail fast. The crate carries #![warn(missing_docs)]; new public API
-#      without docs shows up as warnings in steps 1-3.
+#      without docs shows up as warnings in steps 1-2.
+#
+# Steps 3-4 need the rustfmt/clippy components; minimal toolchains without
+# them get a loud skip (CI always installs both, so the gate is enforced
+# where it matters).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,6 +27,20 @@ cargo build --release
 
 echo "== cargo build --release --benches =="
 cargo build --release --benches
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check =="
+    cargo fmt --all -- --check
+else
+    echo "== SKIP cargo fmt --check (rustfmt component not installed) =="
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy --all-targets (-D warnings) =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "== SKIP cargo clippy (clippy component not installed) =="
+fi
 
 echo "== cargo test -q =="
 cargo test -q
