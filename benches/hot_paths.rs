@@ -12,6 +12,7 @@
 use fast_mwem::coordinator::{
     execute_with_cache, CachedIndex, IndexCache, JobSpec, ReleaseJobSpec, WorkloadKey,
 };
+use fast_mwem::store::TieredIndexCache;
 use fast_mwem::dp::exponential_mechanism;
 use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use fast_mwem::lp::bregman_project;
@@ -73,7 +74,9 @@ fn main() {
     let flat = FlatIndex::new(q.vectors().clone());
     recorded.push(bench("flat top-k (k=√m)", budget, || flat.top_k(&d, k)));
 
+    let t_hnsw = Instant::now();
     let hnsw = build_index(IndexKind::Hnsw, q.vectors().clone(), 3);
+    let hnsw_build = t_hnsw.elapsed();
     fast_mwem::mips::augment::reset_dist_evals();
     let r = bench("hnsw top-k (k=√m)", budget, || hnsw.top_k(&d, k));
     println!(
@@ -125,7 +128,7 @@ fn main() {
     // construction entirely (warm). Cold vs warm per-job wall-clock is the
     // acceptance axis of the warm-index PR.
     header("warm-index serving: repeated release jobs (hnsw, shared workload)");
-    let cache = IndexCache::new(4);
+    let cache = TieredIndexCache::memory_only(4);
     let release = |seed: u64| {
         JobSpec::Release(ReleaseJobSpec {
             u: if quick { 128 } else { 256 },
@@ -152,7 +155,7 @@ fn main() {
         assert_eq!(rep.hits, 1, "repeat jobs must hit the cache");
     }
     let warm_job = t1.elapsed() / warm_jobs as u32;
-    let cache_stats = cache.stats();
+    let cache_stats = cache.l1().stats();
     println!("  cold job (build + solve):          {}", fmt_dur(cold_job));
     println!(
         "  warm job (cached index, mean of {warm_jobs}): {}  ({:.1}x)",
@@ -179,6 +182,39 @@ fn main() {
             CachedIndex::Sharded(s) => s.len(),
         }
     }));
+
+    // ---------------- persistent artifact store (DESIGN.md §7) ----------------
+    // The cold-restart axis: a restarted process either rebuilds its index
+    // (cold) or decodes the persisted artifact and promotes it (L2-warm).
+    // The acceptance bar of the artifact-store PR: for m >= 10^4 the
+    // restore is strictly faster than the build.
+    header(&format!("artifact store: cold HNSW rebuild vs L2 restore (m={m})"));
+    let store_dir = std::env::temp_dir()
+        .join(format!("fastmwem-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+
+    let writer = TieredIndexCache::with_store(2, &store_dir).expect("open bench store");
+    writer.get_or_build(key, || (CachedIndex::Mono(Arc::clone(&hnsw)), hnsw_build));
+    let artifact_bytes = writer.store().expect("store attached").stats().bytes_written;
+
+    // "restart": a fresh tiered cache (cold L1) over the same directory
+    let restarted = TieredIndexCache::with_store(2, &store_dir).expect("reopen bench store");
+    let (_, ev) = restarted.get_or_build(key, || unreachable!("restart must restore"));
+    assert!(ev.l2_hit, "restarted cache must promote from disk");
+    let l2_restore = ev.promote_time;
+    println!("  cold HNSW build (m={m}):      {}", fmt_dur(hnsw_build));
+    println!(
+        "  L2 restore (read + decode):   {}  ({:.1}x faster; {artifact_bytes} bytes)",
+        fmt_dur(l2_restore),
+        hnsw_build.as_secs_f64() / l2_restore.as_secs_f64().max(1e-12),
+    );
+    if !quick {
+        assert!(
+            l2_restore < hnsw_build,
+            "L2-warm restart must beat a cold build at m={m}"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&store_dir);
 
     // ---------------- MWU update ----------------
     header("MWU update (U=3000)");
@@ -229,6 +265,17 @@ fn main() {
             Json::Num(cache_stats.saved.as_nanos() as f64),
         );
 
+        let mut store_obj = BTreeMap::new();
+        store_obj.insert(
+            "cold_build_ns".to_string(),
+            Json::Num(hnsw_build.as_nanos() as f64),
+        );
+        store_obj.insert(
+            "l2_restore_ns".to_string(),
+            Json::Num(l2_restore.as_nanos() as f64),
+        );
+        store_obj.insert("artifact_bytes".to_string(), Json::Num(artifact_bytes as f64));
+
         let mut obj = BTreeMap::new();
         obj.insert("bench".to_string(), Json::Str("hot_paths".to_string()));
         obj.insert("quick".to_string(), Json::Bool(quick));
@@ -236,6 +283,7 @@ fn main() {
         obj.insert("u".to_string(), Json::Num(u as f64));
         obj.insert("cases".to_string(), Json::Obj(cases));
         obj.insert("index_cache".to_string(), Json::Obj(cache_obj));
+        obj.insert("store".to_string(), Json::Obj(store_obj));
         std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
         println!("\nwrote {path}");
     }

@@ -4,6 +4,13 @@
 //! workload the cache hands every later job a shared pre-built index.
 //!
 //! Run:  cargo run --release --example serve
+//!
+//! Pass a directory to persist built indices (DESIGN.md §7) and run the
+//! example twice — the second run restores every index from disk instead
+//! of rebuilding (watch the `store_hit` counter):
+//!
+//!   cargo run --release --example serve -- /tmp/fastmwem-store
+//!   cargo run --release --example serve -- /tmp/fastmwem-store
 
 use fast_mwem::coordinator::{
     Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
@@ -12,10 +19,15 @@ use fast_mwem::lp::SelectionMode;
 use fast_mwem::mips::IndexKind;
 
 fn main() {
+    let store_dir = std::env::args().nth(1).map(std::path::PathBuf::from);
+    if let Some(dir) = &store_dir {
+        println!("persisting built indices to {dir:?}\n");
+    }
     let mut coord = Coordinator::start(CoordinatorConfig {
         workers: 4,
         eps_cap: Some(10.0), // global privacy budget across accepted jobs
         cache_capacity: 8,   // warm-index cache (DESIGN.md §6)
+        store_dir,           // artifact store (DESIGN.md §7)
     });
 
     let mut submitted = 0;
@@ -90,5 +102,13 @@ fn main() {
         metrics.counter("index_cache_miss"),
         metrics.counter("index_build_saved_ms"),
     );
+    if metrics.gauge("store_artifacts").is_some() {
+        println!(
+            "artifact store: {} restored from disk, {} built cold, {} artifacts persisted",
+            metrics.counter("store_hit"),
+            metrics.counter("store_miss"),
+            metrics.gauge("store_artifacts").unwrap_or(0.0),
+        );
+    }
     println!("metrics: {}", metrics.to_json());
 }

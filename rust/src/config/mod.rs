@@ -196,6 +196,36 @@ impl CacheConfig {
     }
 }
 
+/// Typed view of the `[store]` section (DESIGN.md §7): the persistent
+/// artifact store that snapshots built k-MIPS indices to disk so warm
+/// serving survives coordinator restarts.
+///
+/// ```text
+/// [store]
+/// dir = "artifacts/index-store"   # unset disables persistence
+/// ```
+///
+/// The CLI also accepts `--store-dir=PATH` as shorthand for
+/// `--store.dir=PATH` (the shorthand wins over the section value).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StoreConfig {
+    /// Store directory (`None` = no persistence; warm serving stays
+    /// in-memory only).
+    pub dir: Option<String>,
+}
+
+impl StoreConfig {
+    /// Read the `[store]` section, honoring the `--store-dir=PATH`
+    /// shorthand (the shorthand wins over `store.dir`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let dir = cfg
+            .get_str("store-dir")
+            .or_else(|| cfg.get_str("store.dir"))
+            .map(str::to_string);
+        Ok(StoreConfig { dir })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -264,6 +294,28 @@ mod tests {
         let mut c = Config::parse("[cache]\ncapacity = 3\n").unwrap();
         c.apply_overrides(["--cache-capacity=0"]).unwrap();
         assert_eq!(CacheConfig::from_config(&c).unwrap().capacity, 0);
+    }
+
+    #[test]
+    fn store_section_parses_with_defaults_and_shorthand() {
+        // default: no persistence
+        let c = Config::new();
+        assert_eq!(StoreConfig::from_config(&c).unwrap(), StoreConfig::default());
+
+        // section value
+        let c = Config::parse("[store]\ndir = \"idx-store\"\n").unwrap();
+        assert_eq!(
+            StoreConfig::from_config(&c).unwrap().dir.as_deref(),
+            Some("idx-store")
+        );
+
+        // --store-dir shorthand beats the section value
+        let mut c = Config::parse("[store]\ndir = \"idx-store\"\n").unwrap();
+        c.apply_overrides(["--store-dir=/tmp/other"]).unwrap();
+        assert_eq!(
+            StoreConfig::from_config(&c).unwrap().dir.as_deref(),
+            Some("/tmp/other")
+        );
     }
 
     #[test]

@@ -105,21 +105,29 @@ pub struct CacheEvent {
     pub saved: Duration,
 }
 
-/// Per-job accumulation of [`CacheEvent`]s, carried alongside the job
+/// Per-job accumulation of cache consultations, carried alongside the job
 /// outcome so the pool can fold it into [`crate::metrics::Metrics`]
-/// (`index_cache_hit` / `index_cache_miss` / `index_build_saved_ms`).
+/// (`index_cache_hit` / `index_cache_miss` / `index_build_saved_ms`, plus
+/// the store tier's `store_hit` / `store_miss` / `store_promote_ms` when a
+/// persistent artifact store is attached — DESIGN.md §7).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheReport {
-    /// Number of cache hits this job observed.
+    /// Consultations served from the in-memory (L1) cache.
     pub hits: u64,
-    /// Number of cache misses this job observed.
+    /// Consultations that missed every tier and paid a build.
     pub misses: u64,
-    /// Total build time skipped thanks to hits.
+    /// Consultations that missed L1 but were restored (promoted) from the
+    /// persistent store tier instead of rebuilt.
+    pub l2_hits: u64,
+    /// Total build time skipped thanks to hits in either tier.
     pub saved: Duration,
+    /// Total wall-clock spent decoding store artifacts on promotions —
+    /// the price paid in place of the skipped builds.
+    pub promoted: Duration,
 }
 
 impl CacheReport {
-    /// Fold one consultation into the running report.
+    /// Fold one L1-only consultation into the running report.
     pub fn absorb(&mut self, ev: CacheEvent) {
         if ev.hit {
             self.hits += 1;

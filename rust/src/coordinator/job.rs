@@ -2,10 +2,12 @@
 //! search job ([`ShardSearchJob`]) that [`crate::lazy::ShardedLazyEm`]
 //! fans out over [`super::pool::parallel_map`], plus the job executors —
 //! [`execute`] (cold) and [`execute_with_cache`] (warm-index serving via
-//! [`IndexCache`], DESIGN.md §6).
+//! the tiered cache: in-memory LRU over the persistent artifact store,
+//! DESIGN.md §6–§7).
 
-use super::cache::{CacheEvent, CacheReport, CachedIndex, IndexCache, WorkloadKey};
+use super::cache::{CacheReport, CachedIndex, WorkloadKey};
 use crate::lazy::{LazySample, ShardSet, ShardedLazyEm};
+use crate::store::{TieredEvent, TieredIndexCache};
 use crate::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use crate::mips::{build_index, IndexKind};
 use crate::mwem::{FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet};
@@ -142,14 +144,16 @@ pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
 }
 
 /// Execute a job (called on a worker thread), consulting the coordinator's
-/// warm-index cache when one is supplied: a release job whose workload key
-/// is resident reuses the shared `Arc` index and skips construction; a
-/// miss builds once and populates the cache for subsequent jobs. Workloads
-/// are synthesized from the spec's `workload` seed — a stand-in for
-/// loading a caller-provided dataset.
+/// tiered warm-index cache when one is supplied: a release job whose
+/// workload key is resident in memory reuses the shared `Arc` index; an L1
+/// miss with a persisted artifact decodes and promotes it (cross-restart
+/// warm serving, DESIGN.md §7); a double miss builds once and populates
+/// both tiers for subsequent jobs. Workloads are synthesized from the
+/// spec's `workload` seed — a stand-in for loading a caller-provided
+/// dataset.
 pub fn execute_with_cache(
     spec: &JobSpec,
-    cache: Option<&IndexCache>,
+    cache: Option<&TieredIndexCache>,
 ) -> anyhow::Result<(JobOutcome, CacheReport)> {
     let mut report = CacheReport::default();
     match spec {
@@ -203,12 +207,12 @@ pub fn execute_with_cache(
                                 shards,
                             };
                             let (cached, ev) = c.get_or_build(key, build);
-                            report.absorb(ev);
+                            ev.fold_into(&mut report);
                             (cached, ev)
                         }
                         None => {
                             let (built, build_time) = build();
-                            let ev = CacheEvent { hit: false, build_time, ..Default::default() };
+                            let ev = TieredEvent { build_time, ..Default::default() };
                             (built, ev)
                         }
                     };
@@ -320,7 +324,7 @@ mod tests {
     /// the second hits and reuses the very same index build.
     #[test]
     fn repeated_workload_jobs_share_one_cached_index() {
-        let cache = IndexCache::new(2);
+        let cache = TieredIndexCache::memory_only(2);
         let spec = |seed: u64| {
             JobSpec::Release(ReleaseJobSpec {
                 u: 32,
@@ -339,7 +343,7 @@ mod tests {
         let (out2, rep2) = execute_with_cache(&spec(2), Some(&cache)).unwrap();
         assert_eq!((rep1.hits, rep1.misses), (0, 1));
         assert_eq!((rep2.hits, rep2.misses), (1, 0));
-        assert_eq!(cache.len(), 1, "one workload -> one resident entry");
+        assert_eq!(cache.l1().len(), 1, "one workload -> one resident entry");
         assert!(out1.quality.is_finite() && out2.quality.is_finite());
     }
 

@@ -5,11 +5,14 @@
 //! a leader thread dispatches them to workers over channels, each worker
 //! runs the requested solver, and results stream back with privacy spend
 //! recorded by the [`crate::dp::Accountant`]. Repeated workloads are the
-//! common case under serving traffic, so the pool shares a warm-index
-//! cache ([`IndexCache`], DESIGN.md §6): release jobs that answer the same
-//! query set reuse one pre-built k-MIPS index instead of rebuilding it per
-//! job. (The offline build vendors no tokio; the pool is std::thread +
-//! mpsc — see DESIGN.md §3.)
+//! common case under serving traffic, so the pool shares a tiered
+//! warm-index cache — the in-memory [`IndexCache`] (DESIGN.md §6) over an
+//! optional persistent artifact store
+//! ([`crate::store::TieredIndexCache`], DESIGN.md §7): release jobs that
+//! answer the same query set reuse one pre-built k-MIPS index instead of
+//! rebuilding it per job, even across coordinator restarts. (The offline
+//! build vendors no tokio; the pool is std::thread + mpsc — see
+//! DESIGN.md §3.)
 
 pub mod cache;
 pub mod job;

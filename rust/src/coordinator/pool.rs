@@ -1,9 +1,12 @@
-//! Leader/worker thread pool with bounded queueing, a shared warm-index
-//! cache, and metrics.
+//! Leader/worker thread pool with bounded queueing, a shared tiered
+//! warm-index cache (in-memory LRU + optional persistent artifact store),
+//! and metrics.
 
 use super::cache::IndexCache;
 use super::job::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
+use crate::store::{DiskStore, TieredIndexCache};
+use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -67,13 +70,17 @@ pub struct CoordinatorConfig {
     pub eps_cap: Option<f64>,
     /// Warm-index cache capacity: how many pre-built k-MIPS indices
     /// (keyed by workload fingerprint × index kind × shard count) stay
-    /// resident across jobs. 0 disables the cache (DESIGN.md §6).
+    /// resident across jobs. 0 disables the in-memory tier (DESIGN.md §6).
     pub cache_capacity: usize,
+    /// Persistent artifact store directory (DESIGN.md §7). `Some(dir)`
+    /// snapshots built indices to disk and restores them across
+    /// coordinator restarts; `None` keeps warm serving in-memory only.
+    pub store_dir: Option<PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, eps_cap: None, cache_capacity: 8 }
+        CoordinatorConfig { workers: 4, eps_cap: None, cache_capacity: 8, store_dir: None }
     }
 }
 
@@ -91,21 +98,38 @@ pub struct Coordinator {
     submitted_eps: f64,
     cfg: CoordinatorConfig,
     metrics: Arc<Mutex<Metrics>>,
-    cache: Option<Arc<IndexCache>>,
+    cache: Option<Arc<TieredIndexCache>>,
 }
 
 impl Coordinator {
     /// Spawn the worker threads and start accepting jobs.
+    ///
+    /// When `cfg.store_dir` is set but the store cannot be opened (for
+    /// example an unwritable path), the coordinator logs a warning and
+    /// degrades to in-memory-only warm serving — the store is an
+    /// accelerator, never a startup dependency.
     pub fn start(cfg: CoordinatorConfig) -> Self {
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
         let (results_tx, results_rx) = mpsc::channel::<JobResult>();
         let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let cache: Option<Arc<IndexCache>> = if cfg.cache_capacity > 0 {
-            Some(Arc::new(IndexCache::new(cfg.cache_capacity)))
-        } else {
-            None
-        };
+        let cache: Option<Arc<TieredIndexCache>> =
+            if cfg.cache_capacity > 0 || cfg.store_dir.is_some() {
+                let tiered = match &cfg.store_dir {
+                    Some(dir) => TieredIndexCache::with_store(cfg.cache_capacity, dir)
+                        .unwrap_or_else(|e| {
+                            eprintln!(
+                                "warning: cannot open artifact store {dir:?} ({e:#}); \
+                                 serving in-memory only"
+                            );
+                            TieredIndexCache::memory_only(cfg.cache_capacity)
+                        }),
+                    None => TieredIndexCache::memory_only(cfg.cache_capacity),
+                };
+                Some(Arc::new(tiered))
+            } else {
+                None
+            };
 
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
@@ -120,6 +144,8 @@ impl Coordinator {
                             let started = Instant::now();
                             let kind = spec.kind();
                             let outcome = execute_with_cache(&spec, cache.as_deref());
+                            let store_on =
+                                cache.as_deref().is_some_and(|c| c.store().is_some());
                             {
                                 let mut m = metrics.lock().unwrap();
                                 m.inc("jobs_completed", 1);
@@ -128,7 +154,12 @@ impl Coordinator {
                                 match &outcome {
                                     Ok((_, rep)) => {
                                         m.inc("index_cache_hit", rep.hits);
-                                        m.inc("index_cache_miss", rep.misses);
+                                        // an L1 miss either promoted from the
+                                        // store tier or paid a build
+                                        m.inc(
+                                            "index_cache_miss",
+                                            rep.misses + rep.l2_hits,
+                                        );
                                         // accumulate at µs precision; the ms
                                         // counter is derived once in finish()
                                         // so sub-ms builds aren't zeroed away
@@ -136,6 +167,14 @@ impl Coordinator {
                                             "index_build_saved_us",
                                             rep.saved.as_micros() as u64,
                                         );
+                                        if store_on {
+                                            m.inc("store_hit", rep.l2_hits);
+                                            m.inc("store_miss", rep.misses);
+                                            m.inc(
+                                                "store_promote_us",
+                                                rep.promoted.as_micros() as u64,
+                                            );
+                                        }
                                     }
                                     Err(_) => m.inc("jobs_failed", 1),
                                 }
@@ -161,9 +200,21 @@ impl Coordinator {
         }
     }
 
-    /// The warm-index cache, when enabled (`cache_capacity > 0`).
+    /// The in-memory warm-index tier, when warm serving is enabled
+    /// (`cache_capacity > 0` or a `store_dir`).
     pub fn cache(&self) -> Option<&IndexCache> {
+        self.cache.as_deref().map(TieredIndexCache::l1)
+    }
+
+    /// The full tiered cache (L1 + optional artifact store), when warm
+    /// serving is enabled.
+    pub fn tiered_cache(&self) -> Option<&TieredIndexCache> {
         self.cache.as_deref()
+    }
+
+    /// The persistent artifact store, when one is attached.
+    pub fn store(&self) -> Option<&DiskStore> {
+        self.cache.as_deref().and_then(TieredIndexCache::store)
     }
 
     /// Submit a job; returns its id, or an error if the global ε cap would
@@ -213,14 +264,22 @@ impl Coordinator {
         results.sort_by_key(|r| r.job_id);
         {
             let mut m = self.metrics.lock().unwrap();
-            // derive the headline ms counter from the µs accumulator so
-            // only the final total (not each job) is truncated
+            // derive the headline ms counters from the µs accumulators so
+            // only the final totals (not each job) are truncated
             let saved_us = m.counter("index_build_saved_us");
             m.inc("index_build_saved_ms", saved_us / 1000);
             if let Some(cache) = &self.cache {
-                let s = cache.stats();
+                let s = cache.l1().stats();
                 m.set_gauge("index_cache_entries", s.entries as f64);
                 m.set_gauge("index_cache_evictions", s.evictions as f64);
+                if let Some(store) = cache.store() {
+                    let st = store.stats();
+                    let promote_us = m.counter("store_promote_us");
+                    m.inc("store_promote_ms", promote_us / 1000);
+                    m.inc("store_bytes_written", st.bytes_written);
+                    m.set_gauge("store_artifacts", st.artifacts as f64);
+                    m.set_gauge("store_load_failures", st.load_failures as f64);
+                }
             }
         }
         let metrics = Arc::try_unwrap(self.metrics)
@@ -287,6 +346,7 @@ mod tests {
             workers: 3,
             eps_cap: None,
             cache_capacity: 8,
+            store_dir: None,
         });
         for i in 0..6 {
             c.submit(small_release(i, 1.0)).unwrap();
@@ -307,6 +367,7 @@ mod tests {
             workers: 1,
             eps_cap: Some(2.5),
             cache_capacity: 0,
+            store_dir: None,
         });
         assert!(c.submit(small_release(1, 1.0)).is_ok());
         assert!(c.submit(small_release(2, 1.0)).is_ok());
@@ -323,6 +384,7 @@ mod tests {
             workers: 2,
             eps_cap: Some(2.0),
             cache_capacity: 4,
+            store_dir: None,
         });
         assert!(c.submit(small_release(1, 0.9)).is_ok()); // 0.9
         assert!(c.submit(small_lp(2, 0.9)).is_ok()); // 1.8
@@ -354,6 +416,7 @@ mod tests {
             workers: 1, // serialize so later jobs observe the first insert
             eps_cap: None,
             cache_capacity: 4,
+            store_dir: None,
         });
         for seed in 0..3 {
             c.submit(release_on_workload(7, 100 + seed, 1.0)).unwrap();
@@ -399,6 +462,7 @@ mod tests {
                 workers: 1,
                 eps_cap: None,
                 cache_capacity: capacity,
+                store_dir: None,
             });
             assert_eq!(c.cache().is_some(), capacity > 0);
             c.submit(hnsw_release(1)).unwrap();
@@ -418,5 +482,46 @@ mod tests {
             let (oa, ob) = (a.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
             assert_eq!(oa.quality, ob.quality, "cache must not change any release");
         }
+    }
+
+    /// The persistent-store PR's acceptance bar at the coordinator level:
+    /// a second coordinator on the same `store_dir` restores the first
+    /// one's index from disk (store hit, zero builds) and produces the
+    /// bit-identical release for the same (workload, seed).
+    #[test]
+    fn restarted_coordinator_restores_indices_from_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("fastmwem-pool-restart-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let run = |seed: u64| {
+            let mut c = Coordinator::start(CoordinatorConfig {
+                workers: 1,
+                eps_cap: None,
+                cache_capacity: 4,
+                store_dir: Some(dir.clone()),
+            });
+            assert!(c.store().is_some(), "store must attach");
+            c.submit(release_on_workload(7, seed, 1.0)).unwrap();
+            let (results, metrics) = c.finish();
+            let quality = results[0].outcome.as_ref().unwrap().quality;
+            (quality, metrics)
+        };
+
+        let (cold_quality, cold_metrics) = run(500);
+        assert_eq!(cold_metrics.counter("store_hit"), 0);
+        assert_eq!(cold_metrics.counter("store_miss"), 1, "cold run builds once");
+        assert!(cold_metrics.counter("store_bytes_written") > 0);
+
+        // "restart": a brand-new coordinator, same directory
+        let (warm_quality, warm_metrics) = run(500);
+        assert_eq!(warm_metrics.counter("store_hit"), 1, "restart must restore");
+        assert_eq!(warm_metrics.counter("store_miss"), 0, "restart must not rebuild");
+        assert_eq!(warm_metrics.counter("index_cache_miss"), 1, "L1 starts cold");
+        assert_eq!(
+            cold_quality, warm_quality,
+            "restored index must reproduce the release bit-for-bit"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

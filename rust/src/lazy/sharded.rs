@@ -39,7 +39,8 @@ use super::lazy_em::{retrieve_top_k_from, transform_ip};
 use super::ScoreTransform;
 use crate::coordinator::job::{execute_shard_search, ShardSearchJob};
 use crate::coordinator::pool::parallel_map;
-use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
+use crate::mips::snapshot::{self, malformed, SnapshotError, SnapshotReader};
+use crate::mips::{build_index, IndexKind, MipsIndex, SnapshotCodec, VectorSet};
 use crate::util::math::dot;
 use crate::util::rng::Rng;
 use std::sync::Arc;
@@ -152,6 +153,68 @@ impl ShardSet {
     /// `(offset, len)` of every shard, in candidate-id order.
     pub fn bounds(&self) -> Vec<(usize, usize)> {
         self.shards.iter().map(|s| (s.offset, s.len)).collect()
+    }
+}
+
+/// Snapshot payload: the shared index kind, the partition geometry and one
+/// nested index snapshot per shard (each dispatched through
+/// [`snapshot::encode_index`] / [`snapshot::decode_index`]). Decode
+/// validates that the shards are contiguous, cover all m candidates, and
+/// that every nested index matches its shard's geometry and the set's
+/// kind — a corrupted artifact errors out instead of serving draws from a
+/// mis-shapen partition.
+impl SnapshotCodec for ShardSet {
+    fn encode(&self, out: &mut Vec<u8>) {
+        snapshot::put_u8(out, self.kind.tag());
+        snapshot::put_len(out, self.m);
+        snapshot::put_len(out, self.d);
+        snapshot::put_len(out, self.shards.len());
+        for shard in &self.shards {
+            snapshot::put_len(out, shard.offset);
+            snapshot::put_len(out, shard.len);
+            snapshot::encode_index(shard.index.as_ref(), out);
+        }
+    }
+
+    fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
+        let tag = r.u8()?;
+        let kind = IndexKind::from_tag(tag)
+            .ok_or_else(|| malformed(format!("unknown shard-set kind tag {tag}")))?;
+        let m = r.u64_as_usize()?;
+        let d = r.u64_as_usize()?;
+        // each shard occupies >= 16 bytes (its offset + len prefix), so
+        // the shard count is a guarded collection length
+        let s = r.read_len(16)?;
+        if m == 0 || s == 0 || s > m {
+            return Err(malformed(format!("shard set geometry m={m} S={s} impossible")));
+        }
+        let mut shards = Vec::with_capacity(s);
+        let mut next = 0usize;
+        for i in 0..s {
+            let offset = r.u64_as_usize()?;
+            let len = r.u64_as_usize()?;
+            if offset != next || len == 0 {
+                return Err(malformed(format!(
+                    "shard {i}: offset {offset} len {len} breaks contiguous cover at {next}"
+                )));
+            }
+            let index = snapshot::decode_index(r)?;
+            if index.kind() != kind || index.len() != len || index.dim() != d {
+                return Err(malformed(format!(
+                    "shard {i}: nested index {}({}, d={}) does not match shard \
+                     {kind}({len}, d={d})",
+                    index.kind(),
+                    index.len(),
+                    index.dim()
+                )));
+            }
+            next = offset + len;
+            shards.push(ShardHandle { offset, len, index });
+        }
+        if next != m {
+            return Err(malformed(format!("shards cover {next} of {m} candidates")));
+        }
+        Ok(ShardSet { shards, m, d, kind })
     }
 }
 

@@ -21,7 +21,8 @@
 //!
 //! See `DESIGN.md` for the module inventory, the offline-build
 //! substitutions (§3), the per-figure experiment index (§4), the
-//! sharded-LazyEM design (§5) and the warm-index serving cache (§6);
+//! sharded-LazyEM design (§5), the warm-index serving cache (§6) and the
+//! persistent artifact store (§7);
 //! `EXPERIMENTS.md` records paper-vs-measured results; `README.md` has the
 //! build/run quickstart.
 
@@ -38,6 +39,7 @@ pub mod mips;
 pub mod mwem;
 pub mod runtime;
 pub mod sampling;
+pub mod store;
 pub mod util;
 pub mod workloads;
 

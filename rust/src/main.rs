@@ -7,7 +7,7 @@
 //!           [--eps=..] [--delta=..] [--xla] run one private release job
 //!   lp [--m=..] [--d=..] [--t=..] [--mode=exhaustive|flat|ivf|hnsw]
 //!       run one scalar-private LP job
-//!   serve [--jobs=N] [--workers=N] [--eps-cap=..]
+//!   serve [--jobs=N] [--workers=N] [--eps-cap=..] [--store-dir=PATH]
 //!       drive the thread-pool coordinator with a batch of jobs
 //!   check-artifacts [--dir=artifacts]
 //!       load + compile + smoke-run every AOT artifact
@@ -16,7 +16,7 @@
 //! key=value / [section] subset, see config/mod.rs).
 
 use anyhow::{bail, Context, Result};
-use fast_mwem::config::{CacheConfig, Config, ShardingConfig};
+use fast_mwem::config::{CacheConfig, Config, ShardingConfig, StoreConfig};
 use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
 use fast_mwem::eval::{self, EvalOpts};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
@@ -88,7 +88,7 @@ USAGE:
   repro lp [--m=20000] [--d=20] [--t=2000] [--mode=hnsw|ivf|flat|exhaustive]
            [--shards=S]
   repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
-              [--workloads=W] [--cache-capacity=C]
+              [--workloads=W] [--cache-capacity=C] [--store-dir=PATH]
   repro check-artifacts [--dir=artifacts]
 
 Sharding (DESIGN.md §5): --shards=S (or a [sharding] config section) splits
@@ -98,6 +98,11 @@ Warm-index serving (DESIGN.md §6): the coordinator keeps up to C pre-built
 k-MIPS indices resident (--cache-capacity=C, or a [cache] section;
 0 disables). `serve` spreads its release jobs across W distinct workloads
 (--workloads=W, default 2) so repeats hit the cache and skip index builds.
+
+Persistent artifact store (DESIGN.md §7): --store-dir=PATH (or a [store]
+config section) snapshots built indices to disk, so a restarted `serve`
+against the same directory restores them (store_hit metric) instead of
+rebuilding — warm serving that survives restarts.
 ";
 
 fn cmd_eval(pos: &[String], cfg: &Config) -> Result<()> {
@@ -242,11 +247,14 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let eps_cap: Option<f64> = cfg.get("eps-cap")?;
     let sharding = ShardingConfig::from_config(cfg)?;
     let cache = CacheConfig::from_config(cfg)?;
+    let store = StoreConfig::from_config(cfg)?;
     let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
     println!(
         "serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?}, shards {}, \
-         {workload_count} workloads, cache capacity {})",
-        sharding.shards, cache.capacity
+         {workload_count} workloads, cache capacity {}, store {})",
+        sharding.shards,
+        cache.capacity,
+        store.dir.as_deref().unwrap_or("off"),
     );
 
     let lp_mode = if sharding.shards > 1 {
@@ -258,6 +266,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         workers,
         eps_cap,
         cache_capacity: cache.capacity,
+        store_dir: store.dir.map(std::path::PathBuf::from),
     });
     let mut accepted = 0usize;
     for i in 0..jobs {
@@ -314,6 +323,17 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         metrics.gauge("index_cache_entries").unwrap_or(0.0),
         metrics.counter("index_build_saved_ms"),
     );
+    if metrics.gauge("store_artifacts").is_some() {
+        println!(
+            "artifact store: {} restores / {} cold builds, {} artifacts on disk, \
+             {} bytes written, ~{}ms decoding",
+            metrics.counter("store_hit"),
+            metrics.counter("store_miss"),
+            metrics.gauge("store_artifacts").unwrap_or(0.0),
+            metrics.counter("store_bytes_written"),
+            metrics.counter("store_promote_ms"),
+        );
+    }
     println!("accepted {accepted}/{jobs}; metrics: {}", metrics.to_json());
     Ok(())
 }

@@ -7,7 +7,11 @@
 //! skipped by cache hits; accumulated per job at µs precision in
 //! `index_build_saved_us`, with the ms counter derived once at
 //! `Coordinator::finish` so sub-ms builds are not zeroed away — see
-//! DESIGN.md §6).
+//! DESIGN.md §6). When a persistent artifact store is attached
+//! (DESIGN.md §7) the store tier adds `store_hit` / `store_miss` /
+//! `store_promote_ms` (µs-accumulated like the saved counter) /
+//! `store_bytes_written`, plus `store_artifacts` and
+//! `store_load_failures` gauges.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;

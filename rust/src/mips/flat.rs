@@ -5,6 +5,7 @@
 //! Theorem 3.3 used to validate that lazy sampling leaves the output
 //! distribution unchanged.
 
+use super::snapshot::{self, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::math::dot;
@@ -23,6 +24,18 @@ impl FlatIndex {
     /// The indexed vectors.
     pub fn vectors(&self) -> &VectorSet {
         &self.vs
+    }
+}
+
+/// Snapshot payload: the vectors, nothing else — the flat index IS the
+/// data, so restore is a plain reload.
+impl SnapshotCodec for FlatIndex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        snapshot::put_vectors(out, &self.vs);
+    }
+
+    fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
+        Ok(FlatIndex::new(snapshot::read_vectors(r)?))
     }
 }
 
@@ -46,6 +59,10 @@ impl MipsIndex for FlatIndex {
 
     fn kind(&self) -> IndexKind {
         IndexKind::Flat
+    }
+
+    fn write_snapshot(&self, out: &mut Vec<u8>) {
+        self.encode(out);
     }
 }
 

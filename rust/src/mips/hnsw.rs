@@ -10,6 +10,7 @@
 //! the source of the paper's Figure 4/8 sublinear curves.
 
 use super::augment::AugmentedSpace;
+use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::OrdF32;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::rng::Rng;
@@ -306,6 +307,73 @@ fn prune(
     nodes[node as usize].links[level] = keep;
 }
 
+/// Snapshot payload: vectors, hyper-parameters, entry point, max level and
+/// every node's per-level adjacency lists — the expensive sequential-
+/// insertion build is exactly what the snapshot exists to skip. Link order
+/// within a level is preserved verbatim (greedy descent and beam search
+/// iterate links in order, so order affects tie-breaking); the augmented
+/// space is recomputed from the stored vectors on decode.
+impl SnapshotCodec for HnswIndex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        snapshot::put_vectors(out, self.space.vectors());
+        snapshot::put_len(out, self.params.m);
+        snapshot::put_len(out, self.params.ef_construction);
+        snapshot::put_len(out, self.params.ef_search);
+        snapshot::put_u32(out, self.entry);
+        snapshot::put_len(out, self.max_level);
+        for node in &self.nodes {
+            snapshot::put_len(out, node.links.len());
+            for level in &node.links {
+                snapshot::put_u32s(out, level);
+            }
+        }
+    }
+
+    fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
+        let vs = snapshot::read_vectors(r)?;
+        let n = vs.len();
+        let space = AugmentedSpace::new(vs);
+        let params = HnswParams {
+            m: r.u64_as_usize()?,
+            ef_construction: r.u64_as_usize()?,
+            ef_search: r.u64_as_usize()?,
+        };
+        if params.m == 0 || params.ef_search == 0 {
+            return Err(malformed("hnsw params must be non-zero"));
+        }
+        let entry = r.u32()?;
+        if entry as usize >= n {
+            return Err(malformed(format!("hnsw entry {entry} out of range (n={n})")));
+        }
+        let max_level = r.u64_as_usize()?;
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            // each level occupies >= 8 bytes (its link-list length prefix)
+            let levels = r.read_len(8)?;
+            if levels == 0 || levels > max_level.saturating_add(1) {
+                return Err(malformed(format!(
+                    "hnsw node {i}: {levels} levels vs max_level {max_level}"
+                )));
+            }
+            let mut links = Vec::with_capacity(levels);
+            for _ in 0..levels {
+                let level = r.u32s()?;
+                if let Some(&bad) = level.iter().find(|&&id| id as usize >= n) {
+                    return Err(malformed(format!(
+                        "hnsw node {i}: link {bad} out of range (n={n})"
+                    )));
+                }
+                links.push(level);
+            }
+            nodes.push(Node { links });
+        }
+        if nodes[entry as usize].links.len() != max_level.saturating_add(1) {
+            return Err(malformed("hnsw entry node does not reach max_level"));
+        }
+        Ok(HnswIndex { space, nodes, entry, max_level, params })
+    }
+}
+
 impl MipsIndex for HnswIndex {
     fn len(&self) -> usize {
         self.space.len()
@@ -331,6 +399,10 @@ impl MipsIndex for HnswIndex {
 
     fn kind(&self) -> IndexKind {
         IndexKind::Hnsw
+    }
+
+    fn write_snapshot(&self, out: &mut Vec<u8>) {
+        self.encode(out);
     }
 }
 

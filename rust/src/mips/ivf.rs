@@ -6,6 +6,7 @@
 
 use super::augment::AugmentedSpace;
 use super::kmeans::{kmeans, KmeansParams};
+use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::math::dot;
@@ -107,6 +108,63 @@ impl IvfIndex {
     }
 }
 
+/// Snapshot payload: original vectors, resolved `nlist`/`nprobe`, the
+/// trained centroids and the inverted lists. The augmented space (aux
+/// column + shared norm M) is *recomputed* on decode — the recomputation
+/// is deterministic over identical f32 bits, so the restored index scans
+/// the same cells in the same order as the encoded one.
+impl SnapshotCodec for IvfIndex {
+    fn encode(&self, out: &mut Vec<u8>) {
+        snapshot::put_vectors(out, self.space.vectors());
+        snapshot::put_len(out, self.nlist);
+        snapshot::put_len(out, self.nprobe);
+        snapshot::put_f32s(out, &self.centroids);
+        for list in &self.lists {
+            snapshot::put_u32s(out, list);
+        }
+    }
+
+    fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
+        let vs = snapshot::read_vectors(r)?;
+        let m = vs.len();
+        let space = AugmentedSpace::new(vs);
+        // each inverted list occupies >= 8 bytes (its length prefix), so
+        // nlist is a guarded collection length; nprobe is a plain scalar
+        let nlist = r.read_len(8)?;
+        let nprobe = r.u64_as_usize()?;
+        if nlist == 0 || nprobe == 0 || nprobe > nlist || nlist > m.max(1) {
+            return Err(malformed(format!(
+                "ivf geometry nlist={nlist} nprobe={nprobe} impossible for m={m}"
+            )));
+        }
+        let centroids = r.f32s()?;
+        let aug_dim = space.aug_dim();
+        if centroids.len() != nlist * aug_dim {
+            return Err(malformed(format!(
+                "ivf centroids: {} values, expected nlist×(d+1) = {}",
+                centroids.len(),
+                nlist * aug_dim
+            )));
+        }
+        let mut lists = Vec::with_capacity(nlist);
+        let mut assigned = 0usize;
+        for _ in 0..nlist {
+            let list = r.u32s()?;
+            if let Some(&bad) = list.iter().find(|&&id| id as usize >= m) {
+                return Err(malformed(format!("ivf list id {bad} out of range (m={m})")));
+            }
+            assigned += list.len();
+            lists.push(list);
+        }
+        if assigned != m {
+            return Err(malformed(format!(
+                "ivf lists assign {assigned} of {m} keys"
+            )));
+        }
+        Ok(IvfIndex { aug_dim, space, centroids, lists, nlist, nprobe })
+    }
+}
+
 impl MipsIndex for IvfIndex {
     fn len(&self) -> usize {
         self.space.len()
@@ -136,6 +194,10 @@ impl MipsIndex for IvfIndex {
 
     fn kind(&self) -> IndexKind {
         IndexKind::Ivf
+    }
+
+    fn write_snapshot(&self, out: &mut Vec<u8>) {
+        self.encode(out);
     }
 }
 

@@ -22,12 +22,14 @@ pub mod flat;
 pub mod hnsw;
 pub mod ivf;
 pub mod kmeans;
+pub mod snapshot;
 pub mod topk;
 
 pub use augment::AugmentedSpace;
 pub use flat::FlatIndex;
 pub use hnsw::{HnswIndex, HnswParams};
 pub use ivf::{IvfIndex, IvfParams};
+pub use snapshot::{SnapshotCodec, SnapshotError, SnapshotReader};
 
 /// A dense, row-major set of vectors. The canonical storage for query
 /// matrices `Q[m, U]` and LP constraint matrices `[A | b]`.
@@ -114,6 +116,30 @@ pub enum IndexKind {
     Hnsw,
 }
 
+impl IndexKind {
+    /// Every index kind, in tag order — the single source of truth for
+    /// CLI/config error messages and exhaustive sweeps.
+    pub const ALL: [IndexKind; 3] = [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw];
+
+    /// Stable one-byte tag used by the snapshot format
+    /// ([`snapshot::encode_index`]). Tags are append-only: existing values
+    /// never change meaning, or archived artifacts would decode as the
+    /// wrong structure.
+    pub fn tag(self) -> u8 {
+        match self {
+            IndexKind::Flat => 0,
+            IndexKind::Ivf => 1,
+            IndexKind::Hnsw => 2,
+        }
+    }
+
+    /// Inverse of [`IndexKind::tag`] (`None` for unknown tags — a
+    /// corrupted or future-format snapshot).
+    pub fn from_tag(tag: u8) -> Option<IndexKind> {
+        IndexKind::ALL.iter().copied().find(|k| k.tag() == tag)
+    }
+}
+
 impl std::fmt::Display for IndexKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -131,7 +157,14 @@ impl std::str::FromStr for IndexKind {
             "flat" => Ok(IndexKind::Flat),
             "ivf" => Ok(IndexKind::Ivf),
             "hnsw" => Ok(IndexKind::Hnsw),
-            other => Err(format!("unknown index kind: {other}")),
+            _ => {
+                let valid: Vec<String> =
+                    IndexKind::ALL.iter().map(ToString::to_string).collect();
+                Err(format!(
+                    "unknown index kind {s:?} (expected one of: {})",
+                    valid.join(", ")
+                ))
+            }
         }
     }
 }
@@ -149,6 +182,12 @@ pub trait MipsIndex: Send + Sync {
     fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor>;
     /// Which implementation this is (the §5 ablation label).
     fn kind(&self) -> IndexKind;
+    /// Append this index's snapshot payload (no kind tag — callers go
+    /// through [`snapshot::encode_index`], which writes the tag and lets
+    /// [`snapshot::decode_index`] dispatch back to the concrete
+    /// [`SnapshotCodec`]). This is the object-safe half of the codec seam
+    /// the persistent artifact store serializes through (DESIGN.md §7).
+    fn write_snapshot(&self, out: &mut Vec<u8>);
 }
 
 /// Build an index of the requested kind over `vs` (consumed).
@@ -188,10 +227,19 @@ mod tests {
 
     #[test]
     fn index_kind_round_trips() {
-        for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+        for kind in IndexKind::ALL {
             let s = kind.to_string();
             assert_eq!(s.parse::<IndexKind>().unwrap(), kind);
+            assert_eq!(s.to_uppercase().parse::<IndexKind>().unwrap(), kind);
+            assert_eq!(IndexKind::from_tag(kind.tag()), Some(kind));
         }
-        assert!("bogus".parse::<IndexKind>().is_err());
+        let err = "bogus".parse::<IndexKind>().unwrap_err();
+        for kind in IndexKind::ALL {
+            assert!(
+                err.contains(&kind.to_string()),
+                "error must list valid kinds, got: {err}"
+            );
+        }
+        assert_eq!(IndexKind::from_tag(200), None);
     }
 }

@@ -1,0 +1,380 @@
+//! Snapshot codec seam: byte-level encode/decode of built k-MIPS indices
+//! (DESIGN.md §7).
+//!
+//! The persistent artifact store (`crate::store`) snapshots *built* indices
+//! to disk so a coordinator restart does not throw away the Θ(m·d)+
+//! preprocessing the warm-index cache amortizes. This module is the codec
+//! half of that story: a [`SnapshotCodec`] trait each concrete index
+//! implements next to its own fields (flat / IVF / HNSW in `mips`, the
+//! sharded [`crate::lazy::ShardSet`] in `lazy`), plus the little-endian
+//! byte reader/writer primitives they share. The envelope around a payload
+//! — magic, format version, workload fingerprint, length, checksum — is
+//! owned by `crate::store::format`; this layer encodes only the index
+//! structure itself.
+//!
+//! The codec is hand-rolled (the offline build vendors no serde/bincode —
+//! DESIGN.md §3) and **defensive on the read side**: every length is
+//! validated against the remaining buffer before allocation, every id
+//! against its range, so a truncated or corrupted artifact surfaces as a
+//! [`SnapshotError`] — never a panic — and the store falls back to a
+//! rebuild.
+//!
+//! Derived structure (the augmented-space norms of
+//! [`super::AugmentedSpace`], for example) is *recomputed* from the stored
+//! vectors rather than serialized: the recomputation is deterministic over
+//! identical f32 bit patterns, so a restored index is bit-identical to a
+//! fresh build over the same content, and the snapshot stays minimal.
+
+use super::{IndexKind, MipsIndex, VectorSet};
+use std::fmt;
+use std::sync::Arc;
+
+/// Why a snapshot payload could not be decoded.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// The buffer ended before the structure did.
+    Truncated {
+        /// Bytes the decoder needed.
+        need: usize,
+        /// Bytes the buffer still had.
+        have: usize,
+    },
+    /// The bytes decoded but describe an impossible structure.
+    Malformed(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Truncated { need, have } => {
+                write!(f, "snapshot truncated: need {need} bytes, have {have}")
+            }
+            SnapshotError::Malformed(msg) => write!(f, "malformed snapshot: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// Shorthand for a malformed-structure error.
+pub(crate) fn malformed(msg: impl Into<String>) -> SnapshotError {
+    SnapshotError::Malformed(msg.into())
+}
+
+// ---------------------------------------------------------------------------
+// little-endian write primitives (append-only, infallible)
+// ---------------------------------------------------------------------------
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a `u32`, little-endian.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64`, little-endian.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u128`, little-endian.
+pub fn put_u128(out: &mut Vec<u8>, v: u128) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `usize` as a `u64` (the on-disk format is width-independent).
+pub fn put_len(out: &mut Vec<u8>, v: usize) {
+    put_u64(out, v as u64);
+}
+
+/// Append an `f32` slice as raw little-endian bit patterns, length-prefixed.
+pub fn put_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    put_len(out, vs.len());
+    for &v in vs {
+        out.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// Append a `u32` slice little-endian, length-prefixed.
+pub fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
+    put_len(out, vs.len());
+    for &v in vs {
+        put_u32(out, v);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checked read cursor
+// ---------------------------------------------------------------------------
+
+/// A bounds-checked read cursor over a snapshot buffer. Every accessor
+/// returns [`SnapshotError::Truncated`] instead of panicking when the
+/// buffer runs short.
+pub struct SnapshotReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapshotReader<'a> {
+    /// Wrap a buffer for reading from its start.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        SnapshotReader { bytes, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    /// True when every byte has been consumed.
+    pub fn is_exhausted(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SnapshotError> {
+        if self.remaining() < n {
+            return Err(SnapshotError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32, SnapshotError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a little-endian `u128`.
+    pub fn u128(&mut self) -> Result<u128, SnapshotError> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    /// Read a `u64` scalar as `usize` (plain values — offsets, parameters,
+    /// counts that are only *validated*, never allocated from). Before
+    /// sizing an allocation, use [`SnapshotReader::read_len`] instead.
+    pub fn u64_as_usize(&mut self) -> Result<usize, SnapshotError> {
+        let v = self.u64()?;
+        if v > usize::MAX as u64 {
+            return Err(malformed(format!("scalar {v} exceeds usize")));
+        }
+        Ok(v as usize)
+    }
+
+    /// Read a collection-length prefix (u64 on disk), validating that at
+    /// least `min_bytes_per_item × len` bytes remain — so a corrupted
+    /// length cannot trigger a huge allocation. `min_bytes_per_item` is
+    /// the smallest on-disk footprint one item can have in the bytes that
+    /// follow (clamped to ≥ 1).
+    pub fn read_len(&mut self, min_bytes_per_item: usize) -> Result<usize, SnapshotError> {
+        let n = self.u64()?;
+        let need = (n as usize).saturating_mul(min_bytes_per_item.max(1));
+        if n > usize::MAX as u64 || need > self.remaining() {
+            return Err(SnapshotError::Truncated { need, have: self.remaining() });
+        }
+        Ok(n as usize)
+    }
+
+    /// Read a length-prefixed `f32` vector (raw bit patterns).
+    pub fn f32s(&mut self) -> Result<Vec<f32>, SnapshotError> {
+        let n = self.read_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+
+    /// Read a length-prefixed `u32` vector.
+    pub fn u32s(&mut self) -> Result<Vec<u32>, SnapshotError> {
+        let n = self.read_len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the codec seam
+// ---------------------------------------------------------------------------
+
+/// Byte-level snapshot codec for a built search structure. Implemented by
+/// each concrete index next to its private fields ([`super::FlatIndex`],
+/// [`super::IvfIndex`], [`super::HnswIndex`]) and by
+/// [`crate::lazy::ShardSet`]; the store serializes through this seam so no
+/// index internals leak into the on-disk format module.
+///
+/// Contract: `decode(&mut r)` over bytes produced by `encode` must
+/// reconstruct a structure whose search results are **bit-identical** to
+/// the encoded one's. Decoders must validate every length and id — a
+/// corrupted buffer returns an error, never panics and never fabricates a
+/// plausible-but-wrong structure.
+pub trait SnapshotCodec: Sized {
+    /// Append this structure's snapshot payload to `out`.
+    fn encode(&self, out: &mut Vec<u8>);
+
+    /// Reconstruct a structure from `r`, validating as it reads.
+    fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError>;
+}
+
+/// Encode a [`VectorSet`] (shape + raw f32 bit patterns).
+pub fn put_vectors(out: &mut Vec<u8>, vs: &VectorSet) {
+    put_len(out, vs.len());
+    put_len(out, vs.dim());
+    put_f32s(out, vs.as_slice());
+}
+
+/// Decode a [`VectorSet`], validating `data.len() == n × d`.
+pub fn read_vectors(r: &mut SnapshotReader<'_>) -> Result<VectorSet, SnapshotError> {
+    let n = r.u64_as_usize()?;
+    let d = r.u64_as_usize()?;
+    let data = r.f32s()?;
+    if n.checked_mul(d) != Some(data.len()) {
+        return Err(malformed(format!(
+            "vector set shape {n}×{d} does not match {} stored values",
+            data.len()
+        )));
+    }
+    Ok(VectorSet::new(data, n, d))
+}
+
+/// Encode any built index behind the [`MipsIndex`] trait: a one-byte
+/// [`IndexKind`] tag followed by the concrete codec's payload
+/// ([`MipsIndex::write_snapshot`] dispatches to it).
+pub fn encode_index(index: &dyn MipsIndex, out: &mut Vec<u8>) {
+    put_u8(out, index.kind().tag());
+    index.write_snapshot(out);
+}
+
+/// Decode an index encoded by [`encode_index`]: read the kind tag, then
+/// the matching concrete payload.
+pub fn decode_index(r: &mut SnapshotReader<'_>) -> Result<Arc<dyn MipsIndex>, SnapshotError> {
+    let tag = r.u8()?;
+    let kind = IndexKind::from_tag(tag)
+        .ok_or_else(|| malformed(format!("unknown index kind tag {tag}")))?;
+    Ok(match kind {
+        IndexKind::Flat => Arc::new(super::FlatIndex::decode(r)?),
+        IndexKind::Ivf => Arc::new(super::IvfIndex::decode(r)?),
+        IndexKind::Hnsw => Arc::new(super::HnswIndex::decode(r)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::build_index;
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 7);
+        put_u32(&mut buf, 0xDEAD_BEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_u128(&mut buf, 1u128 << 100);
+        put_f32s(&mut buf, &[1.5, -0.0, f32::MIN_POSITIVE]);
+        put_u32s(&mut buf, &[0, 42, u32::MAX]);
+
+        let mut r = SnapshotReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.u128().unwrap(), 1u128 << 100);
+        let fs = r.f32s().unwrap();
+        assert_eq!(fs.len(), 3);
+        assert_eq!(fs[0].to_bits(), 1.5f32.to_bits());
+        assert_eq!(fs[1].to_bits(), (-0.0f32).to_bits(), "signed zero preserved");
+        assert_eq!(r.u32s().unwrap(), vec![0, 42, u32::MAX]);
+        assert!(r.is_exhausted());
+    }
+
+    #[test]
+    fn reader_rejects_truncation_without_panicking() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 5);
+        let mut r = SnapshotReader::new(&buf[..3]);
+        assert!(matches!(r.u64(), Err(SnapshotError::Truncated { .. })));
+
+        // absurd length prefix must not allocate
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX / 2);
+        let mut r = SnapshotReader::new(&buf);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn vectors_round_trip_and_validate_shape() {
+        let vs = random_set(7, 3, 1);
+        let mut buf = Vec::new();
+        put_vectors(&mut buf, &vs);
+        let back = read_vectors(&mut SnapshotReader::new(&buf)).unwrap();
+        assert_eq!((back.len(), back.dim()), (7, 3));
+        for (a, b) in vs.as_slice().iter().zip(back.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // inconsistent shape vs data length is malformed, not a panic
+        let mut bad = Vec::new();
+        put_len(&mut bad, 4);
+        put_len(&mut bad, 3);
+        put_f32s(&mut bad, &[0.0; 5]);
+        assert!(read_vectors(&mut SnapshotReader::new(&bad)).is_err());
+    }
+
+    #[test]
+    fn dyn_index_round_trips_through_kind_tag() {
+        let vs = random_set(300, 8, 2);
+        for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+            let built = build_index(kind, vs.clone(), 9);
+            let mut buf = Vec::new();
+            encode_index(built.as_ref(), &mut buf);
+            let mut r = SnapshotReader::new(&buf);
+            let restored = decode_index(&mut r).unwrap();
+            assert!(r.is_exhausted(), "{kind}: trailing bytes");
+            assert_eq!(restored.kind(), kind);
+            assert_eq!((restored.len(), restored.dim()), (300, 8));
+
+            let mut qrng = Rng::new(3);
+            for _ in 0..10 {
+                let q: Vec<f32> =
+                    (0..8).map(|_| qrng.uniform(-1.0, 1.0) as f32).collect();
+                let a = built.top_k(&q, 12);
+                let b = restored.top_k(&q, 12);
+                assert_eq!(a.len(), b.len(), "{kind}");
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id, "{kind}: ids must match exactly");
+                    assert_eq!(
+                        x.score.to_bits(),
+                        y.score.to_bits(),
+                        "{kind}: scores must be bit-identical"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_kind_tag_is_rejected() {
+        let mut buf = Vec::new();
+        put_u8(&mut buf, 250);
+        assert!(decode_index(&mut SnapshotReader::new(&buf)).is_err());
+    }
+}

@@ -1,0 +1,302 @@
+//! On-disk artifact format: a versioned, checksummed envelope around one
+//! index snapshot (DESIGN.md §7).
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  "FMWEMIDX"
+//! 8       4     format version (u32 LE, currently 1)
+//! 12      16    WorkloadKey.fingerprint (u128 LE)
+//! 28      1     WorkloadKey.kind tag (IndexKind::tag)
+//! 29      8     WorkloadKey.shards (u64 LE)
+//! 37      8     payload length (u64 LE)
+//! 45      16    FNV-128 payload checksum (u128 LE)
+//! 61      ..    payload — a mips/lazy snapshot (see `encode_payload`)
+//! ```
+//!
+//! The header carries the full [`WorkloadKey`] so an artifact is
+//! self-describing: [`decode_artifact`] refuses to hand back an index for
+//! a key other than the one the caller asked for, even if a file was
+//! renamed or the content-addressed name collided. Every failure mode —
+//! bad magic, unknown version, truncation, checksum mismatch, malformed
+//! payload — is a typed [`StoreError`], never a panic, so the tiered
+//! cache can always fall back to a rebuild.
+//!
+//! The codec is hand-rolled on the vendored-offline discipline (DESIGN.md
+//! §3 — no serde/bincode) and endianness-pinned (everything
+//! little-endian), so artifacts are portable across hosts.
+
+use crate::coordinator::cache::{CachedIndex, WorkloadKey};
+use crate::lazy::ShardSet;
+use crate::mips::snapshot::{self, SnapshotReader};
+use crate::mips::{IndexKind, SnapshotCodec, SnapshotError};
+use std::fmt;
+use std::sync::Arc;
+
+/// First bytes of every artifact file.
+pub const MAGIC: [u8; 8] = *b"FMWEMIDX";
+
+/// Current artifact format version. Bump on any layout change; old
+/// versions are rejected (and rebuilt), never reinterpreted.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Fixed header size in bytes (everything before the payload).
+pub const HEADER_LEN: usize = 8 + 4 + 16 + 1 + 8 + 8 + 16;
+
+/// Why an artifact failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// The file does not start with [`MAGIC`].
+    BadMagic,
+    /// The file's format version is not [`FORMAT_VERSION`].
+    BadVersion(u32),
+    /// The file ended before the declared structure did.
+    Truncated,
+    /// The payload checksum does not match — bit rot or a torn write.
+    ChecksumMismatch,
+    /// The artifact is valid but describes a different [`WorkloadKey`]
+    /// than the one requested.
+    KeyMismatch,
+    /// The envelope was intact but the snapshot payload inside was not.
+    Snapshot(SnapshotError),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::BadMagic => write!(f, "not an index artifact (bad magic)"),
+            StoreError::BadVersion(v) => {
+                write!(f, "unsupported artifact format version {v} (expected {FORMAT_VERSION})")
+            }
+            StoreError::Truncated => write!(f, "artifact truncated"),
+            StoreError::ChecksumMismatch => write!(f, "artifact payload checksum mismatch"),
+            StoreError::KeyMismatch => write!(f, "artifact describes a different workload key"),
+            StoreError::Snapshot(e) => write!(f, "artifact payload: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<SnapshotError> for StoreError {
+    fn from(e: SnapshotError) -> Self {
+        StoreError::Snapshot(e)
+    }
+}
+
+/// FNV-128 over a byte slice: two independent FNV-1a passes (different
+/// offset bases; the second consumes bit-rotated bytes), concatenated —
+/// the same construction `fingerprint_vectors` uses for workload content.
+/// Detects corruption; it is not cryptographic and the store is not an
+/// integrity boundary against adversarial files (same trust model as the
+/// in-memory cache).
+pub fn fnv128(bytes: &[u8]) -> u128 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h1 = 0xcbf2_9ce4_8422_2325u64;
+    let mut h2 = 0x6c62_272e_07bb_0142u64;
+    for &b in bytes {
+        h1 = (h1 ^ u64::from(b)).wrapping_mul(PRIME);
+        h2 = (h2 ^ u64::from(b.rotate_left(3))).wrapping_mul(PRIME);
+    }
+    ((h1 as u128) << 64) | h2 as u128
+}
+
+/// Encode one cache entry as a snapshot payload (no envelope): a one-byte
+/// mono/sharded tag, then the nested index snapshot.
+pub fn encode_payload(value: &CachedIndex) -> Vec<u8> {
+    let mut out = Vec::new();
+    match value {
+        CachedIndex::Mono(index) => {
+            snapshot::put_u8(&mut out, 0);
+            snapshot::encode_index(index.as_ref(), &mut out);
+        }
+        CachedIndex::Sharded(set) => {
+            snapshot::put_u8(&mut out, 1);
+            set.encode(&mut out);
+        }
+    }
+    out
+}
+
+/// Decode a payload produced by [`encode_payload`], consuming the whole
+/// buffer (trailing bytes are treated as corruption).
+pub fn decode_payload(payload: &[u8]) -> Result<CachedIndex, StoreError> {
+    let mut r = SnapshotReader::new(payload);
+    let value = match r.u8()? {
+        0 => CachedIndex::Mono(snapshot::decode_index(&mut r)?),
+        1 => CachedIndex::Sharded(Arc::new(ShardSet::decode(&mut r)?)),
+        tag => {
+            return Err(StoreError::Snapshot(SnapshotError::Malformed(format!(
+                "unknown cache entry tag {tag}"
+            ))))
+        }
+    };
+    if !r.is_exhausted() {
+        return Err(StoreError::Snapshot(SnapshotError::Malformed(format!(
+            "{} trailing bytes after payload",
+            r.remaining()
+        ))));
+    }
+    Ok(value)
+}
+
+/// Seal `value` into a complete artifact file image for `key`:
+/// header (magic, version, key, length, checksum) + payload.
+pub fn encode_artifact(key: &WorkloadKey, value: &CachedIndex) -> Vec<u8> {
+    let payload = encode_payload(value);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    snapshot::put_u32(&mut out, FORMAT_VERSION);
+    snapshot::put_u128(&mut out, key.fingerprint);
+    snapshot::put_u8(&mut out, key.kind.tag());
+    snapshot::put_u64(&mut out, key.shards as u64);
+    snapshot::put_u64(&mut out, payload.len() as u64);
+    snapshot::put_u128(&mut out, fnv128(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Open an artifact image: verify magic, version, length and checksum,
+/// and return the embedded [`WorkloadKey`] plus the payload slice.
+pub fn open_artifact(bytes: &[u8]) -> Result<(WorkloadKey, &[u8]), StoreError> {
+    if bytes.len() < HEADER_LEN {
+        return if bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] != MAGIC {
+            Err(StoreError::BadMagic)
+        } else {
+            Err(StoreError::Truncated)
+        };
+    }
+    if bytes[..MAGIC.len()] != MAGIC {
+        return Err(StoreError::BadMagic);
+    }
+    let mut r = SnapshotReader::new(&bytes[MAGIC.len()..HEADER_LEN]);
+    let version = r.u32()?;
+    if version != FORMAT_VERSION {
+        return Err(StoreError::BadVersion(version));
+    }
+    let fingerprint = r.u128()?;
+    let kind_tag = r.u8()?;
+    let shards = r.u64()?;
+    let payload_len = r.u64()?;
+    let checksum = r.u128()?;
+
+    let kind = IndexKind::from_tag(kind_tag).ok_or(StoreError::KeyMismatch)?;
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() as u64 != payload_len {
+        return Err(StoreError::Truncated);
+    }
+    if fnv128(payload) != checksum {
+        return Err(StoreError::ChecksumMismatch);
+    }
+    let key = WorkloadKey { fingerprint, kind, shards: shards as usize };
+    Ok((key, payload))
+}
+
+/// Decode a complete artifact for `expect`: open the envelope, refuse a
+/// key mismatch, then decode the payload.
+pub fn decode_artifact(bytes: &[u8], expect: &WorkloadKey) -> Result<CachedIndex, StoreError> {
+    let (key, payload) = open_artifact(bytes)?;
+    if key != *expect {
+        return Err(StoreError::KeyMismatch);
+    }
+    decode_payload(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::{build_index, VectorSet};
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    fn mono_key() -> WorkloadKey {
+        WorkloadKey { fingerprint: 0xABCD_EF01, kind: IndexKind::Flat, shards: 1 }
+    }
+
+    fn mono_value() -> CachedIndex {
+        CachedIndex::Mono(build_index(IndexKind::Flat, random_set(40, 4, 1), 1))
+    }
+
+    #[test]
+    fn fnv128_separates_nearby_buffers() {
+        assert_ne!(fnv128(b"abc"), fnv128(b"abd"));
+        assert_ne!(fnv128(b""), fnv128(b"\0"));
+        assert_eq!(fnv128(b"same"), fnv128(b"same"));
+    }
+
+    #[test]
+    fn artifact_round_trips_mono_and_sharded() {
+        let vs = random_set(60, 5, 2);
+        let cases = vec![
+            (mono_key(), mono_value()),
+            (
+                WorkloadKey { fingerprint: 7, kind: IndexKind::Ivf, shards: 3 },
+                CachedIndex::Sharded(Arc::new(ShardSet::build(IndexKind::Ivf, &vs, 3, 5))),
+            ),
+        ];
+        for (key, value) in cases {
+            let bytes = encode_artifact(&key, &value);
+            let (got_key, _) = open_artifact(&bytes).unwrap();
+            assert_eq!(got_key, key);
+            let restored = decode_artifact(&bytes, &key).unwrap();
+            match (&value, &restored) {
+                (CachedIndex::Mono(a), CachedIndex::Mono(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    assert_eq!(a.kind(), b.kind());
+                }
+                (CachedIndex::Sharded(a), CachedIndex::Sharded(b)) => {
+                    assert_eq!(a.len(), b.len());
+                    assert_eq!(a.bounds(), b.bounds());
+                    assert_eq!(a.kind(), b.kind());
+                }
+                _ => panic!("mono/sharded shape changed through the codec"),
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_key_is_refused() {
+        let bytes = encode_artifact(&mono_key(), &mono_value());
+        let other = WorkloadKey { fingerprint: 999, ..mono_key() };
+        assert_eq!(decode_artifact(&bytes, &other), Err(StoreError::KeyMismatch));
+    }
+
+    #[test]
+    fn corruption_modes_are_typed_errors_not_panics() {
+        let key = mono_key();
+        let good = encode_artifact(&key, &mono_value());
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::BadMagic));
+
+        // wrong version
+        let mut bad = good.clone();
+        bad[8] = 99;
+        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::BadVersion(99)));
+
+        // truncation at every prefix length must error, never panic
+        for cut in [0, 4, HEADER_LEN - 1, HEADER_LEN + 3, good.len() - 1] {
+            assert!(
+                decode_artifact(&good[..cut], &key).is_err(),
+                "prefix of {cut} bytes must be rejected"
+            );
+        }
+
+        // flipped payload byte -> checksum mismatch
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::ChecksumMismatch));
+
+        // trailing garbage changes the length -> truncated
+        let mut bad = good.clone();
+        bad.push(0);
+        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::Truncated));
+    }
+}

@@ -1,0 +1,322 @@
+//! Store manifest: a small JSON catalog of the artifacts in a store
+//! directory, written atomically (DESIGN.md §7).
+//!
+//! The manifest is pure acceleration — the artifact files are
+//! self-describing (`format.rs` headers), so a lost or corrupted manifest
+//! only costs cold rebuilds, never correctness. That is why the load path
+//! is tolerant ([`Manifest::load_or_empty`]) while the *write* path is
+//! strict: every save rewrites the whole document to a temp file in the
+//! same directory and renames it over the old one, so a crash mid-write
+//! leaves either the previous complete manifest or a stray `.tmp` that is
+//! simply ignored — never a half-written catalog that parses into lies.
+//!
+//! Serialization reuses the vendored-offline [`crate::util::json`]
+//! reader/writer (no serde_json — DESIGN.md §3).
+
+use crate::coordinator::cache::WorkloadKey;
+use crate::mips::IndexKind;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// File name of the manifest inside a store directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Manifest schema version (bumped on incompatible layout changes).
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// One cataloged artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    /// Artifact file name, relative to the store directory.
+    pub file: String,
+    /// Index implementation inside the artifact.
+    pub kind: IndexKind,
+    /// Shard count (1 = monolithic index).
+    pub shards: usize,
+    /// Artifact file size in bytes.
+    pub bytes: u64,
+    /// Build cost of the snapshotted index, in microseconds — restored
+    /// into the L1 cache entry so promoted indices meter the same
+    /// "build time saved" a same-process hit would (µs so sub-ms builds
+    /// are not zeroed away, matching the metrics pipeline's precision).
+    pub build_us: u64,
+}
+
+/// The artifact catalog: artifact id → [`ManifestEntry`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Manifest {
+    entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// An empty manifest.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Content-addressed artifact id for a key:
+    /// `<fingerprint:032x>-<kind>-s<shards>` — stable across processes,
+    /// filesystem-safe, and unique per [`WorkloadKey`].
+    pub fn artifact_id(key: &WorkloadKey) -> String {
+        format!("{:032x}-{}-s{}", key.fingerprint, key.kind, key.shards)
+    }
+
+    /// Entry for `key`, if cataloged.
+    pub fn get(&self, key: &WorkloadKey) -> Option<&ManifestEntry> {
+        self.entries.get(&Self::artifact_id(key))
+    }
+
+    /// Insert (or replace) the entry for `key`.
+    pub fn insert(&mut self, key: &WorkloadKey, entry: ManifestEntry) {
+        self.entries.insert(Self::artifact_id(key), entry);
+    }
+
+    /// Drop the entry for `key` (a stale/corrupt artifact), if present.
+    pub fn remove(&mut self, key: &WorkloadKey) -> Option<ManifestEntry> {
+        self.entries.remove(&Self::artifact_id(key))
+    }
+
+    /// Number of cataloged artifacts.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is cataloged.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate `(artifact id, entry)` in sorted id order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &ManifestEntry)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Serialize to the manifest JSON document.
+    pub fn to_json(&self) -> Json {
+        let artifacts: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(id, e)| {
+                let mut obj = BTreeMap::new();
+                obj.insert("file".to_string(), Json::Str(e.file.clone()));
+                obj.insert("kind".to_string(), Json::Str(e.kind.to_string()));
+                obj.insert("shards".to_string(), Json::Num(e.shards as f64));
+                obj.insert("bytes".to_string(), Json::Num(e.bytes as f64));
+                obj.insert("build_us".to_string(), Json::Num(e.build_us as f64));
+                (id.clone(), Json::Obj(obj))
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("version".to_string(), Json::Num(MANIFEST_VERSION as f64));
+        doc.insert("artifacts".to_string(), Json::Obj(artifacts));
+        Json::Obj(doc)
+    }
+
+    /// Parse a manifest document (strict: any missing or mistyped field
+    /// is an error — the tolerant entry point is [`Manifest::load_or_empty`]).
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let version = doc
+            .get("version")
+            .and_then(Json::as_u64)
+            .context("manifest: missing version")?;
+        anyhow::ensure!(
+            version == MANIFEST_VERSION,
+            "manifest: unsupported version {version} (expected {MANIFEST_VERSION})"
+        );
+        let artifacts = match doc.get("artifacts") {
+            Some(Json::Obj(m)) => m,
+            _ => anyhow::bail!("manifest: missing artifacts object"),
+        };
+        let mut entries = BTreeMap::new();
+        for (id, e) in artifacts {
+            let field = |name: &str| -> Result<u64> {
+                e.get(name)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("manifest entry {id}: missing {name}"))
+            };
+            let kind: IndexKind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest entry {id}: missing kind"))?
+                .parse()
+                .map_err(|err: String| anyhow::anyhow!("manifest entry {id}: {err}"))?;
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest entry {id}: missing file"))?
+                .to_string();
+            // Only bare file names inside the store directory are legal:
+            // the artifact loader joins this onto the store root and, on a
+            // failed decode, *deletes* the resolved path — a manifest must
+            // never be able to point that at an arbitrary file.
+            anyhow::ensure!(
+                !file.is_empty()
+                    && !file.contains('/')
+                    && !file.contains('\\')
+                    && file != ".."
+                    && file != ".",
+                "manifest entry {id}: file {file:?} is not a bare file name"
+            );
+            entries.insert(
+                id.clone(),
+                ManifestEntry {
+                    file,
+                    kind,
+                    shards: field("shards")? as usize,
+                    bytes: field("bytes")?,
+                    build_us: field("build_us")?,
+                },
+            );
+        }
+        Ok(Manifest { entries })
+    }
+
+    /// Load a manifest from disk, strictly: a missing file is an empty
+    /// manifest, but unreadable or unparsable content is an error.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return Ok(Manifest::new());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {path:?}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing manifest {path:?}: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Load a manifest, degrading to empty on any failure (with a warning
+    /// on stderr). The artifacts themselves are self-describing, so the
+    /// worst case of a lost manifest is cold rebuilds that repopulate it.
+    pub fn load_or_empty(path: impl AsRef<Path>) -> Self {
+        match Self::load(path.as_ref()) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring unreadable store manifest {:?}: {e:#}",
+                    path.as_ref()
+                );
+                Manifest::new()
+            }
+        }
+    }
+
+    /// Write the manifest atomically (via [`super::write_atomic`]:
+    /// temp-then-rename, so readers see the old complete document or the
+    /// new one, never a torn write).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        super::write_atomic(path.as_ref(), self.to_json().to_string().as_bytes())
+            .context("writing store manifest")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(fp: u128, kind: IndexKind, shards: usize) -> WorkloadKey {
+        WorkloadKey { fingerprint: fp, kind, shards }
+    }
+
+    fn entry(file: &str, kind: IndexKind, shards: usize) -> ManifestEntry {
+        ManifestEntry { file: file.to_string(), kind, shards, bytes: 123, build_us: 7 }
+    }
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fastmwem-manifest-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn artifact_ids_are_unique_per_key_component() {
+        let base = key(42, IndexKind::Flat, 1);
+        let ids: Vec<String> = [
+            base,
+            key(43, IndexKind::Flat, 1),
+            key(42, IndexKind::Ivf, 1),
+            key(42, IndexKind::Flat, 2),
+        ]
+        .iter()
+        .map(Manifest::artifact_id)
+        .collect();
+        for i in 0..ids.len() {
+            for j in i + 1..ids.len() {
+                assert_ne!(ids[i], ids[j]);
+            }
+        }
+        assert!(ids[0].contains("flat"));
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut m = Manifest::new();
+        m.insert(&key(1, IndexKind::Hnsw, 1), entry("a.idx", IndexKind::Hnsw, 1));
+        m.insert(&key(2, IndexKind::Ivf, 4), entry("b.idx", IndexKind::Ivf, 4));
+        let doc = m.to_json();
+        let back = Manifest::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(&key(1, IndexKind::Hnsw, 1)).unwrap().file, "a.idx");
+    }
+
+    #[test]
+    fn save_is_atomic_and_partial_tmp_is_ignored() {
+        let path = tmp_path("atomic");
+        let _ = std::fs::remove_file(&path);
+
+        let mut m = Manifest::new();
+        m.insert(&key(9, IndexKind::Flat, 1), entry("c.idx", IndexKind::Flat, 1));
+        m.save(&path).unwrap();
+
+        // simulate a crash mid-write of the *next* save: a partial temp
+        // file next to a complete manifest
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        std::fs::write(std::path::PathBuf::from(tmp.clone()), "{\"version\":1,\"arti").unwrap();
+
+        let loaded = Manifest::load(&path).unwrap();
+        assert_eq!(loaded, m, "partial .tmp must not affect the real manifest");
+
+        // a later successful save replaces the manifest and the stale tmp
+        m.insert(&key(10, IndexKind::Ivf, 2), entry("d.idx", IndexKind::Ivf, 2));
+        m.save(&path).unwrap();
+        assert_eq!(Manifest::load(&path).unwrap().len(), 2);
+
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(std::path::PathBuf::from(tmp));
+    }
+
+    #[test]
+    fn corrupt_manifest_degrades_to_empty_not_panic() {
+        let path = tmp_path("corrupt");
+        std::fs::write(&path, "{\"version\":1,\"artifacts\":{\"x\":{\"file\"").unwrap();
+        assert!(Manifest::load(&path).is_err(), "strict load must report corruption");
+        assert!(Manifest::load_or_empty(&path).is_empty(), "tolerant load degrades");
+
+        // wrong version is also rejected strictly
+        std::fs::write(&path, "{\"version\":99,\"artifacts\":{}}").unwrap();
+        assert!(Manifest::load(&path).is_err());
+
+        // a file field that escapes the store directory is rejected — the
+        // loader deletes the resolved path on decode failure, so a
+        // traversal here would be an arbitrary-file delete
+        for bad in ["/etc/hosts", "../escape.idx", "a/b.idx", "..", ""] {
+            std::fs::write(
+                &path,
+                format!(
+                    "{{\"version\":1,\"artifacts\":{{\"x\":{{\"file\":{},\
+                     \"kind\":\"flat\",\"shards\":1,\"bytes\":1,\"build_us\":1}}}}}}",
+                    Json::Str(bad.to_string())
+                ),
+            )
+            .unwrap();
+            assert!(Manifest::load(&path).is_err(), "file {bad:?} must be rejected");
+        }
+
+        let _ = std::fs::remove_file(&path);
+
+        // missing file is an empty manifest, not an error
+        assert!(Manifest::load(tmp_path("never-written")).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,289 @@
+//! Persistent artifact store: content-addressed k-MIPS index snapshots on
+//! disk, so warm serving survives a coordinator restart (DESIGN.md §7).
+//!
+//! PR 2's [`crate::coordinator::IndexCache`] amortizes the Θ(m·d)+ index
+//! build *within* one process; this subsystem makes the amortization
+//! durable. Built indices (and sharded [`crate::lazy::ShardSet`]s) are
+//! sealed into versioned, checksummed artifact files ([`mod@format`]),
+//! cataloged by an atomically-rewritten JSON manifest ([`manifest`]), and
+//! served
+//! through a two-tier cache ([`tiered::TieredIndexCache`]): L1 = the
+//! in-memory LRU, L2 = this store. A restarted coordinator pointed at the
+//! same `--store-dir` decodes yesterday's index instead of rebuilding it.
+//!
+//! Trust and privacy: artifacts hold only *public* workload structure —
+//! the query matrix and its derived search structure — exactly what the
+//! in-memory cache already shares across jobs (see the privacy note in
+//! `coordinator/cache.rs`). No histogram, iterate, accountant state or
+//! mechanism randomness is ever written. The checksum defends against
+//! corruption, not adversaries: the store directory has the same trust
+//! level as the process itself.
+//!
+//! Failure philosophy: the store is an accelerator, never a correctness
+//! dependency. Every read-side failure (missing file, truncation, bad
+//! checksum, wrong version, stale manifest) is counted, logged, and
+//! answered by falling back to a rebuild.
+
+pub mod format;
+pub mod manifest;
+pub mod tiered;
+
+pub use format::StoreError;
+pub use manifest::{Manifest, ManifestEntry, MANIFEST_FILE};
+pub use tiered::{TieredEvent, TieredIndexCache};
+
+use crate::coordinator::cache::{CachedIndex, WorkloadKey};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Lifetime statistics of a [`DiskStore`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Artifacts currently cataloged.
+    pub artifacts: usize,
+    /// Loads that decoded an artifact successfully.
+    pub hits: u64,
+    /// Loads that found no artifact for the key.
+    pub misses: u64,
+    /// Loads that found an artifact but failed to decode it (counted in
+    /// addition to a miss; the stale catalog entry is dropped).
+    pub load_failures: u64,
+    /// Artifacts written.
+    pub writes: u64,
+    /// Total artifact bytes written (excluding manifest rewrites).
+    pub bytes_written: u64,
+    /// Total wall-clock spent decoding artifacts on successful loads.
+    pub promote_time: Duration,
+}
+
+/// Write `bytes` to `path` atomically: write and fsync `<path>.tmp` in
+/// the same directory, then rename it over `path` — a reader (or a crash,
+/// even mid-rename) sees the old complete file or the new one, never a
+/// torn write. The fsync before the rename matters: without it a
+/// journaled rename can land before the data blocks, leaving an empty
+/// file at the final name after power loss. Shared by the artifact and
+/// manifest write paths.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating temp file {tmp:?}"))?;
+    f.write_all(bytes).with_context(|| format!("writing temp file {tmp:?}"))?;
+    f.sync_all().with_context(|| format!("syncing temp file {tmp:?}"))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} over {path:?}"))?;
+    Ok(())
+}
+
+struct DiskInner {
+    manifest: Manifest,
+    stats: StoreStats,
+}
+
+/// A content-addressed artifact store rooted at one directory: artifact
+/// files named by [`Manifest::artifact_id`] plus a `manifest.json`
+/// catalog. Thread-safe; artifact reads, decodes and artifact-file
+/// writes run outside the interior lock, while catalog/stat updates —
+/// including the (small) manifest rewrite that keeps the catalog
+/// consistent — are serialized under it.
+pub struct DiskStore {
+    dir: PathBuf,
+    inner: Mutex<DiskInner>,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) the store directory and load its
+    /// manifest. A corrupt manifest degrades to empty — the artifacts are
+    /// self-describing, so the catalog repopulates as jobs re-save.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating store directory {dir:?}"))?;
+        let manifest = Manifest::load_or_empty(dir.join(MANIFEST_FILE));
+        Ok(DiskStore {
+            dir,
+            inner: Mutex::new(DiskInner { manifest, stats: StoreStats::default() }),
+        })
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> StoreStats {
+        let g = self.inner.lock().unwrap();
+        StoreStats { artifacts: g.manifest.len(), ..g.stats }
+    }
+
+    /// True when an artifact for `key` is cataloged (no I/O).
+    pub fn contains(&self, key: &WorkloadKey) -> bool {
+        self.inner.lock().unwrap().manifest.get(key).is_some()
+    }
+
+    /// Load and decode the artifact for `key`. Returns the restored entry,
+    /// the build cost recorded at save time (what a promotion saves), and
+    /// the decode wall-clock (what it cost instead). Any failure — no
+    /// catalog entry, unreadable file, bad envelope, malformed payload —
+    /// returns `None` after dropping the stale catalog entry; the caller
+    /// rebuilds.
+    pub fn load(&self, key: &WorkloadKey) -> Option<(CachedIndex, Duration, Duration)> {
+        let entry = {
+            let mut g = self.inner.lock().unwrap();
+            match g.manifest.get(key).cloned() {
+                Some(e) => e,
+                None => {
+                    g.stats.misses += 1;
+                    return None;
+                }
+            }
+        };
+        let path = self.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let decoded = std::fs::read(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|bytes| {
+                format::decode_artifact(&bytes, key).map_err(|e| e.to_string())
+            });
+        match decoded {
+            Ok(value) => {
+                let took = t0.elapsed();
+                let mut g = self.inner.lock().unwrap();
+                g.stats.hits += 1;
+                g.stats.promote_time += took;
+                Some((value, Duration::from_micros(entry.build_us), took))
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: dropping unusable index artifact {path:?}: {e} \
+                     (falling back to rebuild)"
+                );
+                // reclaim the dead file too — content addressing would
+                // otherwise never overwrite it for a non-recurring key
+                let _ = std::fs::remove_file(&path);
+                let manifest_path = self.dir.join(MANIFEST_FILE);
+                let mut g = self.inner.lock().unwrap();
+                g.stats.misses += 1;
+                g.stats.load_failures += 1;
+                if g.manifest.remove(key).is_some() {
+                    let _ = g.manifest.save(&manifest_path);
+                }
+                None
+            }
+        }
+    }
+
+    /// Seal `value` into an artifact for `key`: write the file via
+    /// temp-then-rename, then atomically rewrite the manifest. Returns the
+    /// artifact size in bytes.
+    pub fn save(
+        &self,
+        key: &WorkloadKey,
+        value: &CachedIndex,
+        build_time: Duration,
+    ) -> Result<u64> {
+        let id = Manifest::artifact_id(key);
+        let file = format!("{id}.idx");
+        let path = self.dir.join(&file);
+        let bytes = format::encode_artifact(key, value);
+        write_atomic(&path, &bytes)
+            .with_context(|| format!("persisting artifact {file}"))?;
+
+        let manifest_path = self.dir.join(MANIFEST_FILE);
+        let entry = ManifestEntry {
+            file,
+            kind: key.kind,
+            shards: key.shards,
+            bytes: bytes.len() as u64,
+            build_us: build_time.as_micros() as u64,
+        };
+        let mut g = self.inner.lock().unwrap();
+        g.manifest.insert(key, entry);
+        g.manifest.save(&manifest_path)?;
+        g.stats.writes += 1;
+        g.stats.bytes_written += bytes.len() as u64;
+        Ok(bytes.len() as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mips::{build_index, IndexKind, VectorSet};
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    fn scratch_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fastmwem-store-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_round_trip_updates_stats() {
+        let dir = scratch_dir("roundtrip");
+        let store = DiskStore::open(&dir).unwrap();
+        let vs = random_set(50, 4, 1);
+        let key = WorkloadKey { fingerprint: 5, kind: IndexKind::Flat, shards: 1 };
+        let value = CachedIndex::Mono(build_index(IndexKind::Flat, vs, 1));
+
+        assert!(store.load(&key).is_none(), "empty store must miss");
+        let bytes = store.save(&key, &value, Duration::from_millis(20)).unwrap();
+        assert!(bytes > 0);
+        assert!(store.contains(&key));
+
+        let (restored, recorded_build, decode_time) = store.load(&key).unwrap();
+        assert_eq!(recorded_build, Duration::from_millis(20));
+        assert!(decode_time > Duration::ZERO);
+        match restored {
+            CachedIndex::Mono(i) => assert_eq!((i.len(), i.dim()), (50, 4)),
+            _ => panic!("mono in, mono out"),
+        }
+
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.writes, s.artifacts), (1, 1, 1, 1));
+        assert_eq!(s.bytes_written, bytes);
+        assert_eq!(s.load_failures, 0);
+
+        // a second process (fresh DiskStore) sees the same artifact
+        let store2 = DiskStore::open(&dir).unwrap();
+        assert!(store2.load(&key).is_some(), "artifacts must survive reopen");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_artifact_is_dropped_and_misses() {
+        let dir = scratch_dir("corrupt");
+        let store = DiskStore::open(&dir).unwrap();
+        let key = WorkloadKey { fingerprint: 6, kind: IndexKind::Flat, shards: 1 };
+        let value = CachedIndex::Mono(build_index(IndexKind::Flat, random_set(30, 3, 2), 1));
+        store.save(&key, &value, Duration::ZERO).unwrap();
+
+        // truncate the artifact behind the store's back
+        let file = dir.join(format!("{}.idx", Manifest::artifact_id(&key)));
+        let bytes = std::fs::read(&file).unwrap();
+        std::fs::write(&file, &bytes[..bytes.len() / 2]).unwrap();
+
+        assert!(store.load(&key).is_none(), "corrupt artifact must miss, not panic");
+        let s = store.stats();
+        assert_eq!(s.load_failures, 1);
+        assert!(!store.contains(&key), "stale catalog entry must be dropped");
+
+        // the drop is persistent: a reopened store does not re-try the file
+        let store2 = DiskStore::open(&dir).unwrap();
+        assert!(!store2.contains(&key));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

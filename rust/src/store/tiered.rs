@@ -1,0 +1,357 @@
+//! Two-tier index cache: the in-memory LRU in front of the persistent
+//! artifact store (DESIGN.md §7).
+//!
+//! Lookup path per [`crate::coordinator::WorkloadKey`]:
+//!
+//! ```text
+//! L1 hit            -> Arc clone                      (same-process warm)
+//! L1 miss, L2 hit   -> read + decode + promote to L1  (cross-restart warm)
+//! L1 miss, L2 miss  -> build, populate L1 and L2      (cold)
+//! ```
+//!
+//! A promotion re-enters L1 with the *recorded* build cost from the
+//! artifact's manifest entry, so subsequent same-process hits meter their
+//! savings exactly as if the index had been built locally. Builds are
+//! written through to the store best-effort: a failed write warns and
+//! keeps serving (the store is an accelerator, never a correctness
+//! dependency — see the failure philosophy in [`crate::store`]).
+
+use super::DiskStore;
+use crate::coordinator::cache::{CacheReport, CachedIndex, IndexCache, WorkloadKey};
+use crate::mips::VectorSet;
+use anyhow::Result;
+use std::path::Path;
+use std::time::Duration;
+
+/// What one tiered consultation did — the two-tier analogue of
+/// [`crate::coordinator::CacheEvent`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TieredEvent {
+    /// Served from the in-memory tier (no I/O, no build).
+    pub l1_hit: bool,
+    /// Restored from the persistent tier and promoted into L1.
+    pub l2_hit: bool,
+    /// Build cost actually paid by this call (zero unless both tiers
+    /// missed).
+    pub build_time: Duration,
+    /// Build cost avoided — the resident/recorded build time of the entry
+    /// served (zero on a cold build).
+    pub saved: Duration,
+    /// Wall-clock spent decoding the artifact (promotions only).
+    pub promote_time: Duration,
+}
+
+impl TieredEvent {
+    /// Fold this consultation into a per-job [`CacheReport`].
+    pub fn fold_into(&self, report: &mut CacheReport) {
+        if self.l1_hit {
+            report.hits += 1;
+            report.saved += self.saved;
+        } else if self.l2_hit {
+            report.l2_hits += 1;
+            report.saved += self.saved;
+            report.promoted += self.promote_time;
+        } else {
+            report.misses += 1;
+        }
+    }
+}
+
+/// The coordinator's two-tier warm-index cache: [`IndexCache`] (L1) over
+/// an optional [`DiskStore`] (L2). With no store attached it behaves
+/// exactly like the bare L1 cache, so cold-only deployments pay nothing.
+pub struct TieredIndexCache {
+    l1: IndexCache,
+    l2: Option<DiskStore>,
+}
+
+impl TieredIndexCache {
+    /// An in-memory-only cache (no persistence) of at most `capacity`
+    /// indices — PR 2 behavior, byte for byte.
+    pub fn memory_only(capacity: usize) -> Self {
+        TieredIndexCache { l1: IndexCache::new(capacity), l2: None }
+    }
+
+    /// A tiered cache persisting to `dir` (created if needed), with an L1
+    /// of at most `capacity` indices. `capacity` 0 keeps L1 disabled:
+    /// every warm consultation decodes from disk — slower than resident
+    /// serving but still far cheaper than a rebuild.
+    pub fn with_store(capacity: usize, dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(TieredIndexCache { l1: IndexCache::new(capacity), l2: Some(DiskStore::open(dir)?) })
+    }
+
+    /// The in-memory tier.
+    pub fn l1(&self) -> &IndexCache {
+        &self.l1
+    }
+
+    /// The persistent tier, when attached.
+    pub fn store(&self) -> Option<&DiskStore> {
+        self.l2.as_ref()
+    }
+
+    /// Memoized workload fingerprint — delegates to
+    /// [`IndexCache::fingerprint_for`].
+    pub fn fingerprint_for(&self, workload_id: u64, vs: &VectorSet) -> u128 {
+        self.l1.fingerprint_for(workload_id, vs)
+    }
+
+    /// The tiered serving-path primitive: L1, then L2 (promote), then
+    /// `build` (populate both tiers). The build and all file I/O run
+    /// outside every lock; racing workers on one cold key both build —
+    /// wasted work, never a wrong result, exactly like the L1-only cache.
+    pub fn get_or_build(
+        &self,
+        key: WorkloadKey,
+        build: impl FnOnce() -> (CachedIndex, Duration),
+    ) -> (CachedIndex, TieredEvent) {
+        if let Some((value, saved)) = self.l1.lookup(&key) {
+            return (value, TieredEvent { l1_hit: true, saved, ..Default::default() });
+        }
+        if let Some(store) = &self.l2 {
+            if let Some((value, recorded_build, promote_time)) = store.load(&key) {
+                self.l1.insert(key, value.clone(), recorded_build);
+                return (
+                    value,
+                    TieredEvent {
+                        l2_hit: true,
+                        saved: recorded_build,
+                        promote_time,
+                        ..Default::default()
+                    },
+                );
+            }
+        }
+        let (value, build_time) = build();
+        self.l1.insert(key, value.clone(), build_time);
+        if let Some(store) = &self.l2 {
+            if let Err(e) = store.save(&key, &value, build_time) {
+                eprintln!("warning: artifact store write failed ({e:#}); serving from memory");
+            }
+        }
+        (value, TieredEvent { build_time, ..Default::default() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lazy::{LazyEm, ScoreTransform, ShardSet, ShardedLazyEm};
+    use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
+    use crate::util::rng::Rng;
+    use std::cell::Cell;
+    use std::path::PathBuf;
+    use std::sync::Arc;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    fn scratch_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fastmwem-tiered-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn key(vs: &VectorSet, kind: IndexKind, shards: usize) -> WorkloadKey {
+        WorkloadKey::for_vectors(vs, kind, shards)
+    }
+
+    /// Draw a fixed sequence of lazy-EM selections through an index.
+    fn draw_sequence(index: &dyn MipsIndex, vs: &VectorSet, rng_seed: u64) -> Vec<usize> {
+        let em = LazyEm::new(index, vs, ScoreTransform::Abs);
+        let mut rng = Rng::new(rng_seed);
+        let q: Vec<f32> = (0..vs.dim()).map(|i| ((i + 1) as f32 * 0.37).sin()).collect();
+        (0..40).map(|_| em.select(&mut rng, &q, 1.0, 0.1).index).collect()
+    }
+
+    /// The acceptance bar (ISSUE 3): for flat and IVF, `select()` through
+    /// an L2-restored index is bit-identical to `select()` through the
+    /// freshly built index it snapshotted.
+    #[test]
+    fn restored_mono_indices_draw_bit_identically() {
+        let dir = scratch_dir("mono-equiv");
+        let vs = random_set(120, 6, 3);
+        for kind in [IndexKind::Flat, IndexKind::Ivf] {
+            let fresh = build_index(kind, vs.clone(), 77);
+            let k = key(&vs, kind, 1);
+
+            // cold process: build + persist
+            let tiered = TieredIndexCache::with_store(4, &dir).unwrap();
+            let (_, ev) = tiered.get_or_build(k, || {
+                (CachedIndex::Mono(Arc::clone(&fresh)), Duration::ZERO)
+            });
+            assert!(!ev.l1_hit && !ev.l2_hit, "{kind}: first consultation builds");
+
+            // restart: fresh L1, same directory -> promote from disk
+            let restarted = TieredIndexCache::with_store(4, &dir).unwrap();
+            let (restored, _) = tiered_expect_l2(&restarted, k);
+            let restored = match restored {
+                CachedIndex::Mono(i) => i,
+                _ => panic!("{kind}: mono in, mono out"),
+            };
+            assert_eq!(
+                draw_sequence(fresh.as_ref(), &vs, 9),
+                draw_sequence(restored.as_ref(), &vs, 9),
+                "{kind}: restored index must reproduce draws exactly"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn tiered_expect_l2(
+        cache: &TieredIndexCache,
+        k: WorkloadKey,
+    ) -> (CachedIndex, TieredEvent) {
+        let (value, ev) = cache.get_or_build(k, || unreachable!("must restore, not rebuild"));
+        assert!(ev.l2_hit && !ev.l1_hit, "expected an L2 promotion");
+        (value, ev)
+    }
+
+    /// Same bar for a sharded workload: the restored `ShardSet` reproduces
+    /// `ShardedLazyEm::select` draws bit-identically.
+    #[test]
+    fn restored_shard_set_draws_bit_identically() {
+        let dir = scratch_dir("sharded-equiv");
+        let vs = random_set(90, 5, 4);
+        let set = Arc::new(ShardSet::build(IndexKind::Flat, &vs, 3, 55));
+        let k = key(&vs, IndexKind::Flat, 3);
+
+        let tiered = TieredIndexCache::with_store(4, &dir).unwrap();
+        tiered.get_or_build(k, || {
+            (CachedIndex::Sharded(Arc::clone(&set)), Duration::ZERO)
+        });
+
+        let restarted = TieredIndexCache::with_store(4, &dir).unwrap();
+        let (restored, _) = tiered_expect_l2(&restarted, k);
+        let restored = match restored {
+            CachedIndex::Sharded(s) => s,
+            _ => panic!("sharded in, sharded out"),
+        };
+        assert_eq!(restored.bounds(), set.bounds());
+
+        let fresh_em =
+            ShardedLazyEm::with_shard_set(Arc::clone(&set), &vs, ScoreTransform::Abs);
+        let restored_em = ShardedLazyEm::with_shard_set(restored, &vs, ScoreTransform::Abs);
+        let q: Vec<f32> = (0..5).map(|i| (i as f32 * 0.21).cos()).collect();
+        let mut r1 = Rng::new(8);
+        let mut r2 = Rng::new(8);
+        for _ in 0..50 {
+            let a = fresh_em.select(&mut r1, &q, 1.0, 0.1);
+            let b = restored_em.select(&mut r2, &q, 1.0, 0.1);
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.work, b.work);
+            assert!(a.value == b.value, "perturbed values must be bit-identical");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Tier accounting: L1 hit beats L2; L2 promotion refills L1; a
+    /// memory-only cache never reports L2 activity.
+    #[test]
+    fn tier_order_and_promotion() {
+        let dir = scratch_dir("tiers");
+        let vs = random_set(40, 4, 5);
+        let k = key(&vs, IndexKind::Flat, 1);
+        let builds = Cell::new(0usize);
+        let make = || {
+            builds.set(builds.get() + 1);
+            (
+                CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)),
+                Duration::from_millis(4),
+            )
+        };
+
+        let tiered = TieredIndexCache::with_store(2, &dir).unwrap();
+        let (_, ev1) = tiered.get_or_build(k, make);
+        assert!(!ev1.l1_hit && !ev1.l2_hit && builds.get() == 1);
+        let (_, ev2) = tiered.get_or_build(k, make);
+        assert!(ev2.l1_hit, "second consultation in-process is an L1 hit");
+        assert_eq!(builds.get(), 1);
+        assert_eq!(ev2.saved, Duration::from_millis(4));
+
+        // restart: L1 cold, promotion restores the recorded build time
+        let restarted = TieredIndexCache::with_store(2, &dir).unwrap();
+        let (_, ev3) = restarted.get_or_build(k, make);
+        assert!(ev3.l2_hit && builds.get() == 1);
+        assert_eq!(ev3.saved, Duration::from_millis(4), "recorded build time restored");
+        let (_, ev4) = restarted.get_or_build(k, make);
+        assert!(ev4.l1_hit, "promotion must refill L1");
+
+        // fold_into: 1 build + 1 l1 hit + 1 l2 hit + 1 l1 hit
+        let mut rep = CacheReport::default();
+        for ev in [ev1, ev2, ev3, ev4] {
+            ev.fold_into(&mut rep);
+        }
+        assert_eq!((rep.hits, rep.l2_hits, rep.misses), (2, 1, 1));
+        assert_eq!(rep.saved, Duration::from_millis(12));
+
+        // memory-only: same key, no store tier
+        let memory = TieredIndexCache::memory_only(2);
+        let (_, ev) = memory.get_or_build(k, make);
+        assert!(!ev.l2_hit && builds.get() == 2);
+        assert!(memory.store().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A corrupted artifact must fall back to a rebuild — never panic,
+    /// never serve garbage.
+    #[test]
+    fn corrupt_artifact_falls_back_to_rebuild() {
+        let dir = scratch_dir("fallback");
+        let vs = random_set(30, 3, 6);
+        let k = key(&vs, IndexKind::Flat, 1);
+        let make = || {
+            (CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)), Duration::ZERO)
+        };
+
+        let tiered = TieredIndexCache::with_store(2, &dir).unwrap();
+        tiered.get_or_build(k, make);
+
+        // flip one payload byte in the artifact on disk
+        let file = dir.join(format!("{}.idx", crate::store::Manifest::artifact_id(&k)));
+        let mut bytes = std::fs::read(&file).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&file, &bytes).unwrap();
+
+        let restarted = TieredIndexCache::with_store(2, &dir).unwrap();
+        let rebuilt = Cell::new(false);
+        let (_, ev) = restarted.get_or_build(k, || {
+            rebuilt.set(true);
+            make()
+        });
+        assert!(rebuilt.get(), "corrupt artifact must trigger a rebuild");
+        assert!(!ev.l2_hit);
+        assert_eq!(restarted.store().unwrap().stats().load_failures, 1);
+
+        // the rebuild re-persisted a good artifact
+        let again = TieredIndexCache::with_store(2, &dir).unwrap();
+        tiered_expect_l2(&again, k);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Capacity-0 L1 with a store: every consultation decodes from disk —
+    /// degraded but correct.
+    #[test]
+    fn zero_capacity_l1_still_serves_from_disk() {
+        let dir = scratch_dir("l1-off");
+        let vs = random_set(25, 3, 7);
+        let k = key(&vs, IndexKind::Flat, 1);
+        let make = || {
+            (CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)), Duration::ZERO)
+        };
+
+        let tiered = TieredIndexCache::with_store(0, &dir).unwrap();
+        let (_, ev) = tiered.get_or_build(k, make);
+        assert!(!ev.l1_hit && !ev.l2_hit);
+        for _ in 0..2 {
+            let (_, ev) = tiered.get_or_build(k, || unreachable!("disk tier must serve"));
+            assert!(ev.l2_hit, "with L1 disabled every warm consultation is an L2 hit");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,7 +1,11 @@
 //! Minimal JSON parser + writer (the offline build vendors no serde_json).
 //!
-//! Supports the full JSON grammar except `\uXXXX` surrogate pairs beyond
-//! the BMP. Used for `artifacts/manifest.json` and experiment result dumps.
+//! Supports the full JSON grammar, including `\uXXXX` escapes with
+//! surrogate pairs beyond the BMP (unpaired surrogates decode to U+FFFD,
+//! matching lenient parsers). The writer escapes every control character,
+//! so any Rust string round-trips. Used for `artifacts/manifest.json`, the
+//! artifact-store manifest (`store/manifest.rs`) and experiment result
+//! dumps.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -55,6 +59,19 @@ impl Json {
     /// The numeric value truncated to usize, if this is a `Num`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
+    }
+
+    /// The numeric value truncated to u64, if this is a non-negative `Num`.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().filter(|f| *f >= 0.0).map(|f| f as u64)
+    }
+
+    /// The boolean value, if this is a `Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
     }
 
     /// The elements, if this is an `Arr`.
@@ -143,6 +160,30 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// If the next bytes are a `\uXXXX` escape in the low-surrogate range
+    /// (DC00–DFFF), return its value *without* consuming anything.
+    fn peek_low_surrogate(&self) -> Option<u32> {
+        let b = self.bytes.get(self.pos..self.pos + 6)?;
+        if b[0] != b'\\' || b[1] != b'u' {
+            return None;
+        }
+        let hex = std::str::from_utf8(&b[2..6]).ok()?;
+        let cp = u32::from_str_radix(hex, 16).ok()?;
+        (0xDC00..0xE000).contains(&cp).then_some(cp)
+    }
+
+    /// Four hex digits of a `\uXXXX` escape (cursor past the `u`).
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.bytes.len() {
+            return Err(self.err("bad \\u"));
+        }
+        let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+            .map_err(|_| self.err("bad \\u"))?;
+        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u"))?;
+        self.pos += 4;
+        Ok(cp)
+    }
+
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
@@ -180,16 +221,28 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
-                            if self.pos + 4 > self.bytes.len() {
-                                return Err(self.err("bad \\u"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
-                                    .map_err(|_| self.err("bad \\u"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u"))?;
-                            self.pos += 4;
-                            out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                            let cp = self.hex4()?;
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                // high surrogate: pair it with an
+                                // immediately following low-surrogate
+                                // escape (RFC 8259 §7). Anything else
+                                // decodes to U+FFFD without consuming the
+                                // next escape, so the surrounding data
+                                // survives an unpaired surrogate.
+                                match self.peek_low_surrogate() {
+                                    Some(lo) => {
+                                        self.pos += 6; // the "\uXXXX"
+                                        let c = 0x10000
+                                            + ((cp - 0xD800) << 10)
+                                            + (lo - 0xDC00);
+                                        char::from_u32(c).unwrap_or('\u{fffd}')
+                                    }
+                                    None => '\u{fffd}',
+                                }
+                            } else {
+                                char::from_u32(cp).unwrap_or('\u{fffd}')
+                            };
+                            out.push(ch);
                         }
                         _ => return Err(self.err("unknown escape")),
                     }
@@ -362,5 +415,59 @@ mod tests {
     fn numbers_parse() {
         assert_eq!(Json::parse("-1.25e2").unwrap().as_f64(), Some(-125.0));
         assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+        assert_eq!(Json::parse("7").unwrap().as_u64(), Some(7));
+        assert_eq!(Json::parse("-7").unwrap().as_u64(), None, "negatives are not u64");
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
+    }
+
+    /// Control characters survive a write→parse round trip: the writer
+    /// must escape everything below 0x20 (the store manifest may carry
+    /// arbitrary strings).
+    #[test]
+    fn control_characters_round_trip() {
+        let nasty: String =
+            (0u32..0x20).map(|c| char::from_u32(c).unwrap()).chain(['"', '\\']).collect();
+        let written = Json::Str(nasty.clone()).to_string();
+        for b in written.bytes() {
+            assert!(b >= 0x20, "writer must not emit raw control byte {b:#04x}");
+        }
+        assert_eq!(Json::parse(&written).unwrap().as_str(), Some(nasty.as_str()));
+
+        // explicit escape forms parse too
+        assert_eq!(
+            Json::parse(r#""\u0000\u0001\u001f\b\f""#).unwrap().as_str(),
+            Some("\u{0}\u{1}\u{1f}\u{8}\u{c}")
+        );
+    }
+
+    /// `\uXXXX` surrogate pairs decode to the astral character; unpaired
+    /// surrogates degrade to U+FFFD instead of corrupting the string.
+    #[test]
+    fn surrogate_pairs_decode() {
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap().as_str(),
+            Some("\u{1F600}")
+        );
+        assert_eq!(
+            Json::parse(r#""a\ud83d\ude00b""#).unwrap().as_str(),
+            Some("a\u{1F600}b")
+        );
+        // unpaired high / lone low surrogates
+        assert_eq!(Json::parse(r#""\ud83dx""#).unwrap().as_str(), Some("\u{fffd}x"));
+        assert_eq!(Json::parse(r#""\ude00""#).unwrap().as_str(), Some("\u{fffd}"));
+        // an unpaired high surrogate must not swallow the next escape...
+        assert_eq!(
+            Json::parse(r#""\ud83d\u0041""#).unwrap().as_str(),
+            Some("\u{fffd}A")
+        );
+        // ...nor a valid pair that follows it
+        assert_eq!(
+            Json::parse(r#""\ud83d\ud83d\ude00""#).unwrap().as_str(),
+            Some("\u{fffd}\u{1F600}")
+        );
+        // a raw astral char round-trips through the writer
+        let j = Json::Str("\u{1F980}".to_string());
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
     }
 }

@@ -3,8 +3,9 @@
 //! plus the warm-index serving path (coordinator → cache → mwem).
 
 use fast_mwem::coordinator::{
-    execute_with_cache, Coordinator, CoordinatorConfig, IndexCache, JobSpec, ReleaseJobSpec,
+    execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, ReleaseJobSpec,
 };
+use fast_mwem::store::TieredIndexCache;
 use fast_mwem::lazy::{ScoreTransform, ShardedLazyEm};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
@@ -14,6 +15,7 @@ use fast_mwem::mwem::{
 use fast_mwem::util::math::dot;
 use fast_mwem::util::rng::Rng;
 use fast_mwem::workloads::{binary_queries, gaussian_histogram, random_feasibility_lp};
+use std::time::Duration;
 
 /// The paper's headline claim on a small instance: Fast-MWEM (HNSW) reaches
 /// the same error ballpark as classic MWEM while doing far less selection
@@ -125,6 +127,7 @@ fn repeated_workload_batch_hits_warm_index_cache() {
         workers: 1, // serialize so every repeat observes the first insert
         eps_cap: None,
         cache_capacity: 4,
+        store_dir: None,
     });
     let spec = |workload: u64, seed: u64, shards: usize| {
         JobSpec::Release(ReleaseJobSpec {
@@ -182,7 +185,7 @@ fn cache_hit_skips_build_and_is_deterministic() {
         })
     };
 
-    let cache = IndexCache::new(2);
+    let cache = TieredIndexCache::memory_only(2);
     let (cold, rep_cold) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
     assert_eq!((rep_cold.hits, rep_cold.misses), (0, 1));
 
@@ -190,7 +193,7 @@ fn cache_hit_skips_build_and_is_deterministic() {
     let (warm, rep_warm) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
     assert_eq!((rep_warm.hits, rep_warm.misses), (1, 0));
     assert!(rep_warm.saved >= rep_cold.saved, "hits record skipped build time");
-    assert_eq!(cache.len(), 1, "hit must not add entries");
+    assert_eq!(cache.l1().len(), 1, "hit must not add entries");
     assert_eq!(
         cold.quality, warm.quality,
         "same workload + same mechanism seed => identical release"
@@ -200,7 +203,45 @@ fn cache_hit_skips_build_and_is_deterministic() {
     let (other, rep_other) = execute_with_cache(&spec(2), Some(&cache)).unwrap();
     assert_eq!((rep_other.hits, rep_other.misses), (1, 0));
     assert!(other.quality.is_finite() && other.quality >= 0.0);
-    assert_eq!(cache.stats().hits, 2);
+    assert_eq!(cache.l1().stats().hits, 2);
+}
+
+/// ISSUE 3's restart-equivalence bar end to end: the same `ReleaseJobSpec`
+/// (workload + mechanism seed) produces a bit-identical release whether its
+/// HNSW index is freshly built or restored from a persistent artifact
+/// store by a "restarted" process (a second tiered cache on the same
+/// directory with a cold L1).
+#[test]
+fn release_through_restored_index_is_bit_identical() {
+    let dir = std::env::temp_dir()
+        .join(format!("fastmwem-e2e-restart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let spec = JobSpec::Release(ReleaseJobSpec {
+        u: 64,
+        m: 250,
+        n: 400,
+        t: 30,
+        eps: 1.0,
+        delta: 1e-3,
+        index: Some(IndexKind::Hnsw), // seed-dependent build: the hard case
+        shards: 1,
+        workload: 11,
+        seed: 3,
+    });
+
+    let cold_cache = TieredIndexCache::with_store(2, &dir).unwrap();
+    let (cold, rep) = execute_with_cache(&spec, Some(&cold_cache)).unwrap();
+    assert_eq!((rep.l2_hits, rep.misses), (0, 1), "first run builds and persists");
+
+    let restarted = TieredIndexCache::with_store(2, &dir).unwrap();
+    let (restored, rep) = execute_with_cache(&spec, Some(&restarted)).unwrap();
+    assert_eq!((rep.l2_hits, rep.misses), (1, 0), "restart restores, not rebuilds");
+    assert!(rep.promoted > Duration::ZERO, "promotion must meter its decode time");
+    assert_eq!(
+        cold.quality, restored.quality,
+        "restored index must reproduce the release bit-for-bit"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Error decreases as the privacy budget grows (sanity of the DP plumbing).

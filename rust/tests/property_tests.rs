@@ -213,6 +213,7 @@ fn prop_coordinator_invariants() {
             eps_cap: Some(cap),
             // alternate cache-enabled and cache-disabled coordinators
             cache_capacity: if cached_round { 3 } else { 0 },
+            store_dir: None,
         });
         let mut accepted_eps = 0.0;
         let mut accepted = 0usize;
