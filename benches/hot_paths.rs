@@ -140,6 +140,7 @@ fn main() {
             index: Some(IndexKind::Hnsw),
             shards: 1,
             workload: 42,
+            tenant: 0,
             seed,
         })
     };
@@ -258,6 +259,13 @@ fn main() {
         let mut cache_obj = BTreeMap::new();
         cache_obj.insert("cold_job_ns".to_string(), Json::Num(cold_job.as_nanos() as f64));
         cache_obj.insert("warm_job_ns".to_string(), Json::Num(warm_job.as_nanos() as f64));
+        // machine-independent warm-path ratio: < 1 means the cache pays
+        // off; -> 1 means hits stopped skipping the build. The CI
+        // perf-regression gate (scripts/bench_compare.sh) tracks this.
+        cache_obj.insert(
+            "warm_over_cold".to_string(),
+            Json::Num(warm_job.as_secs_f64() / cold_job.as_secs_f64().max(1e-12)),
+        );
         cache_obj.insert("hits".to_string(), Json::Num(cache_stats.hits as f64));
         cache_obj.insert("misses".to_string(), Json::Num(cache_stats.misses as f64));
         cache_obj.insert(
@@ -273,6 +281,11 @@ fn main() {
         store_obj.insert(
             "l2_restore_ns".to_string(),
             Json::Num(l2_restore.as_nanos() as f64),
+        );
+        // the warm-restart ratio the perf gate tracks: decode / rebuild
+        store_obj.insert(
+            "restore_over_build".to_string(),
+            Json::Num(l2_restore.as_secs_f64() / hnsw_build.as_secs_f64().max(1e-12)),
         );
         store_obj.insert("artifact_bytes".to_string(), Json::Num(artifact_bytes as f64));
 

@@ -1,0 +1,169 @@
+//! Serving-runtime throughput/latency bench (DESIGN.md §8): the
+//! repeated-workload job mix through the long-lived [`Server`] at 1 vs 4
+//! workers. Headline: jobs/sec at 4 workers must be ≥ 2× jobs/sec at 1
+//! worker (asserted in full mode; always recorded as `speedup_4v1` in the
+//! JSON artifact, where the CI perf-regression gate reads it).
+//!
+//! Flags (after `--`, e.g. `cargo bench --bench serving -- --quick`):
+//!   --quick        smaller sizes + fewer jobs, for the CI bench-smoke job
+//!   --json=PATH    dump throughput + latency percentiles as a JSON
+//!                  artifact (the CI job uploads `BENCH_serving.json`)
+//!
+//! The mix is serving-shaped: 3 of every 4 jobs are Release jobs spread
+//! over two repeated workloads (so after the warmup builds, the warm-index
+//! cache hands every job a pre-built index and the bench measures the
+//! steady state, not index construction), and 1 of 4 is an Lp solve.
+
+use fast_mwem::coordinator::{JobSpec, LpJobSpec, ReleaseJobSpec};
+use fast_mwem::lp::SelectionMode;
+use fast_mwem::metrics::Metrics;
+use fast_mwem::mips::IndexKind;
+use fast_mwem::server::{QueuePolicy, Server, ServerConfig};
+use fast_mwem::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// The i-th job of the steady-state mix.
+fn mixed_spec(i: usize, quick: bool) -> JobSpec {
+    if i % 4 == 3 {
+        JobSpec::Lp(LpJobSpec {
+            m: if quick { 800 } else { 2_000 },
+            d: 12,
+            t: if quick { 60 } else { 120 },
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Lazy(IndexKind::Hnsw),
+            tenant: (i % 2) as u64,
+            seed: 1_000 + i as u64,
+        })
+    } else {
+        JobSpec::Release(ReleaseJobSpec {
+            u: if quick { 128 } else { 256 },
+            m: if quick { 600 } else { 2_000 },
+            n: 400,
+            t: if quick { 40 } else { 80 },
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards: 1,
+            workload: (i % 2) as u64, // two repeated workloads
+            tenant: (i % 2) as u64,
+            seed: i as u64,
+        })
+    }
+}
+
+/// Run `jobs` mixed jobs through a fresh server at the given worker count;
+/// returns (jobs/sec, timed wall-clock, drained metrics).
+fn run_mix(workers: usize, jobs: usize, quick: bool) -> (f64, Duration, Metrics) {
+    let server = Server::start(ServerConfig {
+        workers,
+        queue_depth: jobs.max(8),
+        policy: QueuePolicy::Block,
+        eps_per_tenant: None, // throughput bench: admission always passes
+        cache_capacity: 8,
+        store_dir: None,
+    });
+    // Warmup: build + cache both release workloads (i=0 -> workload 0,
+    // i=1 -> workload 1) and touch the LP path (i=3), so the timed region
+    // measures the steady state every worker shares.
+    for i in [0usize, 1, 3] {
+        server
+            .submit(mixed_spec(i, quick))
+            .expect("warmup submit")
+            .wait()
+            .outcome
+            .expect("warmup job");
+    }
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| server.submit(mixed_spec(i, quick)).expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait().outcome.expect("job ok");
+    }
+    let wall = t0.elapsed();
+    let metrics = server.drain();
+    (jobs as f64 / wall.as_secs_f64().max(1e-9), wall, metrics)
+}
+
+/// p50/p95/p99 of a timing series as a JSON object in milliseconds.
+fn latency_json(metrics: &Metrics, series: &str) -> Option<Json> {
+    metrics.timing_summary(series).map(|t| {
+        let mut o = BTreeMap::new();
+        o.insert("count".to_string(), Json::Num(t.count as f64));
+        o.insert("p50_ms".to_string(), Json::Num(t.p50 * 1e3));
+        o.insert("p95_ms".to_string(), Json::Num(t.p95 * 1e3));
+        o.insert("p99_ms".to_string(), Json::Num(t.p99 * 1e3));
+        o.insert("max_ms".to_string(), Json::Num(t.max * 1e3));
+        Json::Obj(o)
+    })
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path =
+        args.iter().find_map(|a| a.strip_prefix("--json=").map(str::to_string));
+    let jobs = if quick { 24 } else { 48 };
+    if quick {
+        println!("(quick mode: reduced sizes and job count)");
+    }
+    println!(
+        "serving mix: {jobs} jobs (3/4 release over 2 repeated workloads, 1/4 lp)\n"
+    );
+
+    let mut per_workers = BTreeMap::new();
+    let mut jps_by_workers = BTreeMap::new();
+    for workers in [1usize, 4] {
+        let (jps, wall, metrics) = run_mix(workers, jobs, quick);
+        println!(
+            "workers={workers}: {jps:>7.2} jobs/sec  (wall {:.1}ms, cache {} hits / {} misses)",
+            wall.as_secs_f64() * 1e3,
+            metrics.counter("index_cache_hit"),
+            metrics.counter("index_cache_miss"),
+        );
+        for series in ["latency_release", "latency_lp", "queue_wait"] {
+            if let Some(t) = metrics.timing_summary(series) {
+                println!(
+                    "  {series:<16} p50 {:>8.2}ms  p95 {:>8.2}ms  p99 {:>8.2}ms",
+                    t.p50 * 1e3,
+                    t.p95 * 1e3,
+                    t.p99 * 1e3
+                );
+            }
+        }
+        let mut row = BTreeMap::new();
+        row.insert("jobs_per_sec".to_string(), Json::Num(jps));
+        row.insert("wall_ms".to_string(), Json::Num(wall.as_secs_f64() * 1e3));
+        for series in ["latency_release", "latency_lp", "queue_wait"] {
+            if let Some(j) = latency_json(&metrics, series) {
+                row.insert(series.to_string(), j);
+            }
+        }
+        per_workers.insert(workers.to_string(), Json::Obj(row));
+        jps_by_workers.insert(workers, jps);
+    }
+
+    let speedup = jps_by_workers[&4] / jps_by_workers[&1].max(1e-9);
+    println!("\nspeedup 4 workers vs 1: {speedup:.2}x");
+    if !quick {
+        assert!(
+            speedup >= 2.0,
+            "serving acceptance bar: 4 workers must give >= 2x jobs/sec \
+             over 1 worker on the repeated-workload mix (got {speedup:.2}x)"
+        );
+    }
+
+    if let Some(path) = json_path {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str("serving".to_string()));
+        obj.insert("quick".to_string(), Json::Bool(quick));
+        obj.insert("jobs".to_string(), Json::Num(jobs as f64));
+        obj.insert("workers".to_string(), Json::Obj(per_workers));
+        obj.insert("speedup_4v1".to_string(), Json::Num(speedup));
+        std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
+        println!("wrote {path}");
+    }
+}

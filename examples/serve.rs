@@ -1,7 +1,10 @@
-//! Coordinator demo: a batch of private-analysis jobs through the
-//! leader/worker pool with a global privacy cap and warm-index serving —
-//! release jobs repeat a couple of workloads, so after the first build per
-//! workload the cache hands every later job a shared pre-built index.
+//! Serving-runtime demo (DESIGN.md §8): a long-lived server with a bounded
+//! MPMC queue, persistent workers over the warm-index cache, and
+//! per-tenant privacy-budget admission — every job reserves its ε against
+//! its tenant's cap *before* running, denied jobs spend nothing, failures
+//! refund. Two tenant threads submit mixed Release+Lp traffic
+//! concurrently; the graceful drain reports per-kind latency p50/p95/p99
+//! and each tenant's spend.
 //!
 //! Run:  cargo run --release --example serve
 //!
@@ -12,90 +15,112 @@
 //!   cargo run --release --example serve -- /tmp/fastmwem-store
 //!   cargo run --release --example serve -- /tmp/fastmwem-store
 
-use fast_mwem::coordinator::{
-    Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
-};
+use fast_mwem::coordinator::{JobSpec, LpJobSpec, ReleaseJobSpec};
 use fast_mwem::lp::SelectionMode;
 use fast_mwem::mips::IndexKind;
+use fast_mwem::server::{QueuePolicy, Server, ServerConfig, SubmitError};
+
+/// One tenant's mixed request stream: repeated-workload releases (warm
+/// after the first build) interleaved with LP solves.
+fn spec_for(tenant: u64, i: u64) -> JobSpec {
+    if i % 3 == 2 {
+        JobSpec::Lp(LpJobSpec {
+            m: 4_000,
+            d: 16,
+            t: 300,
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Lazy(IndexKind::Hnsw),
+            tenant,
+            seed: tenant * 100 + i,
+        })
+    } else {
+        JobSpec::Release(ReleaseJobSpec {
+            u: 512,
+            m: 800,
+            n: 500,
+            t: 300,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards: 1,
+            workload: i % 2, // two repeated workloads -> cache hits
+            tenant,
+            seed: tenant * 100 + i,
+        })
+    }
+}
 
 fn main() {
     let store_dir = std::env::args().nth(1).map(std::path::PathBuf::from);
     if let Some(dir) = &store_dir {
         println!("persisting built indices to {dir:?}\n");
     }
-    let mut coord = Coordinator::start(CoordinatorConfig {
+    let server = Server::start(ServerConfig {
         workers: 4,
-        eps_cap: Some(10.0), // global privacy budget across accepted jobs
-        cache_capacity: 8,   // warm-index cache (DESIGN.md §6)
-        store_dir,           // artifact store (DESIGN.md §7)
+        queue_depth: 16,
+        policy: QueuePolicy::Block, // lossless backpressure
+        eps_per_tenant: Some(5.0),  // each tenant's privacy budget
+        cache_capacity: 8,          // warm-index cache (DESIGN.md §6)
+        store_dir,                  // artifact store (DESIGN.md §7)
     });
 
-    let mut submitted = 0;
-    let mut rejected = 0;
-    for i in 0..12 {
-        let spec = if i % 3 == 2 {
-            JobSpec::Lp(LpJobSpec {
-                m: 4_000,
-                d: 16,
-                t: 300,
-                eps: 1.0,
-                delta: 1e-3,
-                delta_inf: 0.1,
-                mode: SelectionMode::Lazy(IndexKind::Hnsw),
-                seed: i,
-            })
-        } else {
-            // Two workloads repeated across the batch — serving-shaped
-            // traffic. The index kind and shard count ride on the workload
-            // id so repeats share one cache entry; only the mechanism seed
-            // is fresh per job.
-            let wl = i % 3;
-            JobSpec::Release(ReleaseJobSpec {
-                u: 512,
-                m: 800,
-                n: 500,
-                t: 300,
-                eps: 1.0,
-                delta: 1e-3,
-                index: Some(if wl == 0 { IndexKind::Hnsw } else { IndexKind::Ivf }),
-                shards: if wl == 1 { 4 } else { 1 },
-                workload: wl,
-                seed: i,
-            })
-        };
-        match coord.submit(spec) {
-            Ok(id) => {
-                submitted += 1;
-                println!("submitted job {id}");
-            }
-            Err(e) => {
-                rejected += 1;
-                println!("rejected: {e}");
-            }
+    // Two tenants submit concurrently — the MPMC request path. Tenant 1
+    // asks for more than its cap allows; the overflow is denied at
+    // admission and spends zero ε.
+    std::thread::scope(|s| {
+        for tenant in 0..2u64 {
+            let server = &server;
+            s.spawn(move || {
+                let asks = if tenant == 1 { 8 } else { 5 };
+                let mut tickets = Vec::new();
+                for i in 0..asks {
+                    match server.submit(spec_for(tenant, i)) {
+                        Ok(t) => tickets.push(t),
+                        Err(SubmitError::Budget(e)) => println!("denied: {e}"),
+                        Err(e) => println!("refused: {e}"),
+                    }
+                }
+                for t in tickets {
+                    let r = t.wait();
+                    match r.outcome {
+                        Ok(o) => println!(
+                            "tenant {tenant} job {:>2} [{:<7}] quality {:.4}  \
+                             eps {:.3}  {:>7.1}ms",
+                            r.job_id,
+                            r.kind,
+                            o.quality,
+                            o.eps_spent,
+                            o.total_time.as_secs_f64() * 1e3,
+                        ),
+                        Err(e) => println!("tenant {tenant} job {} FAILED: {e}", r.job_id),
+                    }
+                }
+            });
         }
-    }
+    });
 
-    let (results, metrics) = coord.finish();
-    println!("\n{submitted} accepted, {rejected} rejected by the budget manager\n");
-    let mut total_eps = 0.0;
-    for r in &results {
-        match &r.outcome {
-            Ok(o) => {
-                total_eps += o.eps_spent;
-                println!(
-                    "job {:>2} [{:<7}] quality {:.4}  ε {:.3}  work/iter {:>7.0}  {:>7.1}ms",
-                    r.job_id,
-                    r.kind,
-                    o.quality,
-                    o.eps_spent,
-                    o.avg_select_work,
-                    o.total_time.as_secs_f64() * 1e3,
-                );
-            }
-            Err(e) => println!("job {:>2} FAILED: {e}", r.job_id),
+    let spends = server.tenant_spend();
+    let metrics = server.drain();
+    println!();
+    for t in &spends {
+        println!(
+            "tenant {}: spent eps {:.2} of cap 5.0 ({} admitted, {} denied)",
+            t.tenant, t.spent, t.admitted_jobs, t.denied_jobs
+        );
+    }
+    for series in ["latency_release", "latency_lp", "queue_wait"] {
+        if let Some(t) = metrics.timing_summary(series) {
+            println!(
+                "{series:<16} n={:<3} p50 {:>7.1}ms  p95 {:>7.1}ms  p99 {:>7.1}ms",
+                t.count,
+                t.p50 * 1e3,
+                t.p95 * 1e3,
+                t.p99 * 1e3
+            );
         }
     }
-    println!("\ntotal ε spent: {total_eps:.2} (cap 10.0)");
     println!(
         "index cache: {} hits / {} misses, ~{}ms of index builds skipped",
         metrics.counter("index_cache_hit"),

@@ -10,6 +10,12 @@
 //! index = "hnsw"
 //! ```
 //! Keys are addressed as `section.key` (top-level keys have no prefix).
+//!
+//! Typed section views live next to their consumers: `[sharding]`,
+//! `[cache]` and `[store]` below ([`ShardingConfig`], [`CacheConfig`],
+//! [`StoreConfig`]); the `[server]` section of the long-lived serving
+//! runtime is read by [`crate::server::ServerConfig::from_config`]
+//! (DESIGN.md §8).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;

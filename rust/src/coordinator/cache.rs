@@ -136,6 +136,24 @@ impl CacheReport {
             self.misses += 1;
         }
     }
+
+    /// Fold this job's cache activity into a metrics registry — the one
+    /// recording convention shared by the batch pool and the serving
+    /// runtime. An L1 miss counts as `index_cache_miss` whether it
+    /// promoted from the store tier or paid a build; store counters accrue
+    /// only when a persistent tier is attached. Durations accumulate at µs
+    /// precision (`*_us`); the headline ms counters are derived once at
+    /// shutdown so sub-ms builds are not zeroed away (DESIGN.md §6).
+    pub fn record_into(&self, m: &mut crate::metrics::Metrics, store_attached: bool) {
+        m.inc("index_cache_hit", self.hits);
+        m.inc("index_cache_miss", self.misses + self.l2_hits);
+        m.inc("index_build_saved_us", self.saved.as_micros() as u64);
+        if store_attached {
+            m.inc("store_hit", self.l2_hits);
+            m.inc("store_miss", self.misses);
+            m.inc("store_promote_us", self.promoted.as_micros() as u64);
+        }
+    }
 }
 
 /// Lifetime statistics of an [`IndexCache`].

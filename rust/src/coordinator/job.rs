@@ -65,6 +65,10 @@ pub struct ReleaseJobSpec {
     /// query set, so their k-MIPS index is shared through the
     /// coordinator's [`IndexCache`] instead of being rebuilt per job.
     pub workload: u64,
+    /// Submitting tenant — the admission key for the serving runtime's
+    /// per-tenant privacy accountant ([`crate::server::TenantBudget`],
+    /// DESIGN.md §8). The batch coordinator's global ε cap ignores it.
+    pub tenant: u64,
     /// Mechanism randomness seed — fresh per job even when the workload
     /// repeats, so repeated jobs are independent DP releases.
     pub seed: u64,
@@ -87,6 +91,10 @@ pub struct LpJobSpec {
     pub delta_inf: f64,
     /// Constraint-selection mechanism (exhaustive / lazy / sharded lazy).
     pub mode: SelectionMode,
+    /// Submitting tenant — the admission key for the serving runtime's
+    /// per-tenant privacy accountant ([`crate::server::TenantBudget`],
+    /// DESIGN.md §8). The batch coordinator's global ε cap ignores it.
+    pub tenant: u64,
     /// Workload / mechanism seed.
     pub seed: u64,
 }
@@ -106,6 +114,22 @@ impl JobSpec {
         match self {
             JobSpec::Release(_) => "release",
             JobSpec::Lp(_) => "lp",
+        }
+    }
+
+    /// Nominal privacy budget ε this job charges at admission.
+    pub fn eps(&self) -> f64 {
+        match self {
+            JobSpec::Release(r) => r.eps,
+            JobSpec::Lp(l) => l.eps,
+        }
+    }
+
+    /// Submitting tenant id — the serving runtime's admission key.
+    pub fn tenant(&self) -> u64 {
+        match self {
+            JobSpec::Release(r) => r.tenant,
+            JobSpec::Lp(l) => l.tenant,
         }
     }
 }
@@ -143,6 +167,51 @@ pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
     execute_with_cache(spec, None).map(|(outcome, _)| outcome)
 }
 
+/// Reject structurally invalid specs with a clean `Err` instead of letting
+/// them panic (or degenerate) deep inside a solver. The serving runtime
+/// relies on this fail-fast path: a failed job becomes a failed
+/// [`JobResult`] whose tenant reservation is refunded, and a persistent
+/// worker survives it.
+fn validate(spec: &JobSpec) -> anyhow::Result<()> {
+    match spec {
+        JobSpec::Release(r) => anyhow::ensure!(
+            r.u > 0
+                && r.m > 0
+                && r.n > 0
+                && r.t > 0
+                && r.eps > 0.0
+                && r.delta > 0.0
+                && r.delta < 1.0,
+            "invalid release spec: u={} m={} n={} t={} eps={} delta={} \
+             (sizes, rounds and ε must be positive; 0 < δ < 1)",
+            r.u,
+            r.m,
+            r.n,
+            r.t,
+            r.eps,
+            r.delta
+        ),
+        JobSpec::Lp(l) => anyhow::ensure!(
+            l.m > 0
+                && l.d > 0
+                && l.t > 0
+                && l.eps > 0.0
+                && l.delta > 0.0
+                && l.delta < 1.0
+                && l.delta_inf > 0.0,
+            "invalid lp spec: m={} d={} t={} eps={} delta={} delta_inf={} \
+             (sizes, rounds, ε and Δ∞ must be positive; 0 < δ < 1)",
+            l.m,
+            l.d,
+            l.t,
+            l.eps,
+            l.delta,
+            l.delta_inf
+        ),
+    }
+    Ok(())
+}
+
 /// Execute a job (called on a worker thread), consulting the coordinator's
 /// tiered warm-index cache when one is supplied: a release job whose
 /// workload key is resident in memory reuses the shared `Arc` index; an L1
@@ -155,6 +224,7 @@ pub fn execute_with_cache(
     spec: &JobSpec,
     cache: Option<&TieredIndexCache>,
 ) -> anyhow::Result<(JobOutcome, CacheReport)> {
+    validate(spec)?;
     let mut report = CacheReport::default();
     match spec {
         JobSpec::Release(r) => {
@@ -293,6 +363,7 @@ mod tests {
             index: Some(IndexKind::Flat),
             shards: 1,
             workload: 1,
+            tenant: 0,
             seed: 1,
         });
         let out = execute(&spec).unwrap();
@@ -312,6 +383,7 @@ mod tests {
             index: Some(IndexKind::Flat),
             shards: 4,
             workload: 1,
+            tenant: 0,
             seed: 1,
         });
         let out = execute(&spec).unwrap();
@@ -336,6 +408,7 @@ mod tests {
                 index: Some(IndexKind::Flat),
                 shards: 1,
                 workload: 9,
+                tenant: 0,
                 seed,
             })
         };
@@ -357,9 +430,51 @@ mod tests {
             delta: 1e-3,
             delta_inf: 0.1,
             mode: SelectionMode::Exhaustive,
+            tenant: 0,
             seed: 2,
         });
         let out = execute(&spec).unwrap();
         assert!(out.quality.is_finite());
+    }
+
+    /// Structurally invalid specs fail fast with a clean error — the
+    /// refund path the serving runtime's admission control depends on.
+    #[test]
+    fn invalid_specs_error_instead_of_panicking() {
+        let mut release = ReleaseJobSpec {
+            u: 32,
+            m: 30,
+            n: 200,
+            t: 0, // zero rounds: invalid
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Flat),
+            shards: 1,
+            workload: 1,
+            tenant: 0,
+            seed: 1,
+        };
+        let err = execute(&JobSpec::Release(release.clone())).unwrap_err();
+        assert!(err.to_string().contains("invalid release spec"), "{err}");
+        release.t = 10;
+        release.eps = 0.0; // zero budget: invalid
+        assert!(execute(&JobSpec::Release(release)).is_err());
+
+        let mut lp = LpJobSpec {
+            m: 50,
+            d: 0, // zero variables: invalid
+            t: 10,
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Exhaustive,
+            tenant: 0,
+            seed: 1,
+        };
+        let err = execute(&JobSpec::Lp(lp.clone())).unwrap_err();
+        assert!(err.to_string().contains("invalid lp spec"), "{err}");
+        lp.d = 8;
+        lp.delta_inf = 0.0; // degenerate sensitivity: selection scale -> inf
+        assert!(execute(&JobSpec::Lp(lp)).is_err());
     }
 }

@@ -13,6 +13,11 @@
 //! rebuilding it per job, even across coordinator restarts. (The offline
 //! build vendors no tokio; the pool is std::thread + mpsc — see
 //! DESIGN.md §3.)
+//!
+//! The coordinator is a *batch* harness: submit a known set of jobs, then
+//! `finish()`. For the long-lived steady-state request path — a bounded
+//! MPMC queue, persistent workers, per-tenant budget admission and
+//! graceful drain — see [`crate::server`] (DESIGN.md §8).
 
 pub mod cache;
 pub mod job;

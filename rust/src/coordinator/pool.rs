@@ -84,6 +84,28 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Shutdown-time metric derivation shared by the batch pool and the
+/// serving runtime ([`crate::server::Server::drain`]): derive the headline
+/// ms counters from the µs accumulators (so only the final totals, not
+/// each job, are truncated) and publish the cache/store gauges.
+pub(crate) fn finalize_serving_metrics(m: &mut Metrics, cache: Option<&TieredIndexCache>) {
+    let saved_us = m.counter("index_build_saved_us");
+    m.inc("index_build_saved_ms", saved_us / 1000);
+    if let Some(cache) = cache {
+        let s = cache.l1().stats();
+        m.set_gauge("index_cache_entries", s.entries as f64);
+        m.set_gauge("index_cache_evictions", s.evictions as f64);
+        if let Some(store) = cache.store() {
+            let st = store.stats();
+            let promote_us = m.counter("store_promote_us");
+            m.inc("store_promote_ms", promote_us / 1000);
+            m.inc("store_bytes_written", st.bytes_written);
+            m.set_gauge("store_artifacts", st.artifacts as f64);
+            m.set_gauge("store_load_failures", st.load_failures as f64);
+        }
+    }
+}
+
 enum Message {
     Run(usize, JobSpec),
     Shutdown,
@@ -152,30 +174,7 @@ impl Coordinator {
                                 m.inc(&format!("jobs_{kind}"), 1);
                                 m.observe("job_duration", started.elapsed());
                                 match &outcome {
-                                    Ok((_, rep)) => {
-                                        m.inc("index_cache_hit", rep.hits);
-                                        // an L1 miss either promoted from the
-                                        // store tier or paid a build
-                                        m.inc(
-                                            "index_cache_miss",
-                                            rep.misses + rep.l2_hits,
-                                        );
-                                        // accumulate at µs precision; the ms
-                                        // counter is derived once in finish()
-                                        // so sub-ms builds aren't zeroed away
-                                        m.inc(
-                                            "index_build_saved_us",
-                                            rep.saved.as_micros() as u64,
-                                        );
-                                        if store_on {
-                                            m.inc("store_hit", rep.l2_hits);
-                                            m.inc("store_miss", rep.misses);
-                                            m.inc(
-                                                "store_promote_us",
-                                                rep.promoted.as_micros() as u64,
-                                            );
-                                        }
-                                    }
+                                    Ok((_, rep)) => rep.record_into(&mut m, store_on),
                                     Err(_) => m.inc("jobs_failed", 1),
                                 }
                             }
@@ -218,12 +217,11 @@ impl Coordinator {
     }
 
     /// Submit a job; returns its id, or an error if the global ε cap would
-    /// be exceeded (the budget-manager role of the coordinator).
+    /// be exceeded (the budget-manager role of the coordinator). For
+    /// per-tenant admission and a long-lived request path, use
+    /// [`crate::server::Server`] instead.
     pub fn submit(&mut self, spec: JobSpec) -> anyhow::Result<usize> {
-        let eps = match &spec {
-            JobSpec::Release(r) => r.eps,
-            JobSpec::Lp(l) => l.eps,
-        };
+        let eps = spec.eps();
         if let Some(cap) = self.cfg.eps_cap {
             anyhow::ensure!(
                 self.submitted_eps + eps <= cap + 1e-12,
@@ -264,23 +262,7 @@ impl Coordinator {
         results.sort_by_key(|r| r.job_id);
         {
             let mut m = self.metrics.lock().unwrap();
-            // derive the headline ms counters from the µs accumulators so
-            // only the final totals (not each job) are truncated
-            let saved_us = m.counter("index_build_saved_us");
-            m.inc("index_build_saved_ms", saved_us / 1000);
-            if let Some(cache) = &self.cache {
-                let s = cache.l1().stats();
-                m.set_gauge("index_cache_entries", s.entries as f64);
-                m.set_gauge("index_cache_evictions", s.evictions as f64);
-                if let Some(store) = cache.store() {
-                    let st = store.stats();
-                    let promote_us = m.counter("store_promote_us");
-                    m.inc("store_promote_ms", promote_us / 1000);
-                    m.inc("store_bytes_written", st.bytes_written);
-                    m.set_gauge("store_artifacts", st.artifacts as f64);
-                    m.set_gauge("store_load_failures", st.load_failures as f64);
-                }
-            }
+            finalize_serving_metrics(&mut m, self.cache.as_deref());
         }
         let metrics = Arc::try_unwrap(self.metrics)
             .map(|m| m.into_inner().unwrap())
@@ -312,6 +294,7 @@ mod tests {
             index: Some(IndexKind::Flat),
             shards: 1,
             workload,
+            tenant: 0,
             seed,
         })
     }
@@ -325,6 +308,7 @@ mod tests {
             delta: 1e-3,
             delta_inf: 0.1,
             mode: SelectionMode::Exhaustive,
+            tenant: 0,
             seed,
         })
     }
@@ -454,6 +438,7 @@ mod tests {
                 index: Some(IndexKind::Hnsw),
                 shards: 1,
                 workload: 7,
+                tenant: 0,
                 seed,
             })
         };

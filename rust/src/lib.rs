@@ -21,8 +21,9 @@
 //!
 //! See `DESIGN.md` for the module inventory, the offline-build
 //! substitutions (§3), the per-figure experiment index (§4), the
-//! sharded-LazyEM design (§5), the warm-index serving cache (§6) and the
-//! persistent artifact store (§7);
+//! sharded-LazyEM design (§5), the warm-index serving cache (§6), the
+//! persistent artifact store (§7) and the long-lived serving runtime with
+//! per-tenant budget admission (§8);
 //! `EXPERIMENTS.md` records paper-vs-measured results; `README.md` has the
 //! build/run quickstart.
 
@@ -39,6 +40,7 @@ pub mod mips;
 pub mod mwem;
 pub mod runtime;
 pub mod sampling;
+pub mod server;
 pub mod store;
 pub mod util;
 pub mod workloads;

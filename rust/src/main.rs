@@ -9,6 +9,12 @@
 //!       run one scalar-private LP job
 //!   serve [--jobs=N] [--workers=N] [--eps-cap=..] [--store-dir=PATH]
 //!       drive the thread-pool coordinator with a batch of jobs
+//!   serve --daemon [--jobs=N] [--tenants=K] [--queue-depth=D]
+//!         [--policy=block|reject] [--eps-per-tenant=E] [--metrics-out=P]
+//!       run the long-lived serving runtime: concurrent submitters,
+//!       bounded queue, per-tenant budget admission, graceful drain
+//!   bench-compare [--baseline=..] [--fresh=a.json,b.json] [--tolerance=..]
+//!       perf-regression gate: compare fresh bench JSON against a baseline
 //!   check-artifacts [--dir=artifacts]
 //!       load + compile + smoke-run every AOT artifact
 //!
@@ -20,9 +26,12 @@ use fast_mwem::config::{CacheConfig, Config, ShardingConfig, StoreConfig};
 use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
 use fast_mwem::eval::{self, EvalOpts};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
+use fast_mwem::metrics::Metrics;
 use fast_mwem::mips::IndexKind;
 use fast_mwem::mwem::{run_classic, run_fast, FastMwemConfig, MwemConfig, NativeBackend};
 use fast_mwem::runtime::{XlaBackend, XlaEngine};
+use fast_mwem::server::{Server, ServerConfig, SubmitError};
+use fast_mwem::util::json::Json;
 use fast_mwem::util::rng::Rng;
 use fast_mwem::workloads;
 
@@ -67,7 +76,14 @@ fn run(args: &[String]) -> Result<()> {
         "eval" => cmd_eval(&pos, &cfg),
         "release" => cmd_release(&cfg),
         "lp" => cmd_lp(&cfg),
-        "serve" => cmd_serve(&cfg),
+        "serve" => {
+            if cfg.get_str("daemon").is_some() {
+                cmd_serve_daemon(&cfg)
+            } else {
+                cmd_serve(&cfg)
+            }
+        }
+        "bench-compare" => cmd_bench_compare(&cfg),
         "check-artifacts" => cmd_check_artifacts(&cfg),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -89,6 +105,13 @@ USAGE:
            [--shards=S]
   repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
               [--workloads=W] [--cache-capacity=C] [--store-dir=PATH]
+  repro serve --daemon [--jobs=24] [--tenants=3] [--workers=4]
+              [--queue-depth=64] [--policy=block|reject]
+              [--eps-per-tenant=E] [--workloads=W] [--cache-capacity=C]
+              [--store-dir=PATH] [--metrics-out=PATH]
+  repro bench-compare [--baseline=BENCH_baseline.json]
+              [--fresh=BENCH_hot_paths.json,BENCH_serving.json]
+              [--tolerance=0.25]
   repro check-artifacts [--dir=artifacts]
 
 Sharding (DESIGN.md §5): --shards=S (or a [sharding] config section) splits
@@ -103,6 +126,18 @@ Persistent artifact store (DESIGN.md §7): --store-dir=PATH (or a [store]
 config section) snapshots built indices to disk, so a restarted `serve`
 against the same directory restores them (store_hit metric) instead of
 rebuilding — warm serving that survives restarts.
+
+Serving runtime (DESIGN.md §8): `serve --daemon` (or a [server] config
+section) runs the long-lived runtime instead of the one-shot batch pool:
+one submitter thread per tenant pushes a mixed Release+Lp stream through a
+bounded MPMC queue (--queue-depth, --policy) into persistent workers; every
+job is admission-checked against its tenant's ε cap (--eps-per-tenant)
+before it runs, failures refund, and the final drain reports per-kind
+latency p50/p95/p99 plus per-tenant spend (--metrics-out dumps the JSON).
+
+Perf gate: `bench-compare` checks fresh bench JSON (machine-independent
+warm-path ratios) against BENCH_baseline.json and exits nonzero on a
+regression beyond the tolerance — the same gate CI runs per commit.
 ";
 
 fn cmd_eval(pos: &[String], cfg: &Config) -> Result<()> {
@@ -283,6 +318,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
                 // spread release jobs across a few repeated workloads so
                 // the warm-index cache sees serving-shaped traffic
                 workload: (i / 2 % workload_count) as u64,
+                tenant: 0, // batch mode: one global cap, no tenants
                 seed: i as u64,
             })
         } else {
@@ -294,6 +330,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
                 delta: 1e-3,
                 delta_inf: 0.1,
                 mode: lp_mode,
+                tenant: 0,
                 seed: i as u64,
             })
         };
@@ -335,6 +372,250 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         );
     }
     println!("accepted {accepted}/{jobs}; metrics: {}", metrics.to_json());
+    Ok(())
+}
+
+/// Build the daemon's mixed per-tenant job stream: even slots are
+/// repeated-workload Release jobs (so the warm-index cache sees
+/// serving-shaped traffic), odd slots are Lp jobs — every tenant submits
+/// both kinds.
+fn daemon_spec(
+    tenant: u64,
+    i: usize,
+    shards: usize,
+    workload_count: usize,
+    lp_mode: SelectionMode,
+) -> JobSpec {
+    if i % 2 == 0 {
+        JobSpec::Release(ReleaseJobSpec {
+            u: 256,
+            m: 400,
+            n: 500,
+            t: 200,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards,
+            workload: (i / 2 % workload_count) as u64,
+            tenant,
+            seed: tenant * 10_000 + i as u64,
+        })
+    } else {
+        JobSpec::Lp(LpJobSpec {
+            m: 2_000,
+            d: 16,
+            t: 200,
+            eps: 1.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: lp_mode,
+            tenant,
+            seed: tenant * 10_000 + i as u64,
+        })
+    }
+}
+
+fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
+    let jobs: usize = cfg.or("jobs", 24)?;
+    let tenants: u64 = cfg.or("tenants", 3u64)?.max(1);
+    let sharding = ShardingConfig::from_config(cfg)?;
+    let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
+    let metrics_out = cfg.get_str("metrics-out").map(str::to_string);
+    let server_cfg = ServerConfig::from_config(cfg)?;
+    println!(
+        "serve --daemon: {jobs} jobs from {tenants} tenants on {} workers \
+         (queue depth {}, policy {}, eps/tenant {:?}, {workload_count} workloads, \
+         cache capacity {}, store {})",
+        server_cfg.workers,
+        server_cfg.queue_depth,
+        server_cfg.policy,
+        server_cfg.eps_per_tenant,
+        server_cfg.cache_capacity,
+        server_cfg.store_dir.as_deref().map(|p| p.display().to_string()).unwrap_or_else(|| "off".into()),
+    );
+
+    let lp_mode = if sharding.shards > 1 {
+        SelectionMode::LazySharded(IndexKind::Hnsw, sharding.shards)
+    } else {
+        SelectionMode::Lazy(IndexKind::Hnsw)
+    };
+    let server = Server::start(server_cfg);
+
+    // One submitter thread per tenant — the MPMC submission path under
+    // real concurrency, not a loop pretending to be one.
+    let per_tenant: Vec<(u64, usize, usize, usize, usize)> = std::thread::scope(|s| {
+        let server = &server;
+        let handles: Vec<_> = (0..tenants)
+            .map(|tenant| {
+                s.spawn(move || {
+                    let quota = jobs / tenants as usize
+                        + usize::from((jobs % tenants as usize) > tenant as usize);
+                    let mut tickets = Vec::new();
+                    let (mut denied, mut shed) = (0usize, 0usize);
+                    for i in 0..quota {
+                        let spec = daemon_spec(
+                            tenant,
+                            i,
+                            sharding.shards,
+                            workload_count,
+                            lp_mode,
+                        );
+                        match server.submit(spec) {
+                            Ok(t) => tickets.push(t),
+                            Err(SubmitError::Budget(_)) => denied += 1,
+                            Err(SubmitError::QueueFull { .. })
+                            | Err(SubmitError::Draining) => shed += 1,
+                        }
+                    }
+                    let (mut ok, mut failed) = (0usize, 0usize);
+                    for t in tickets {
+                        match t.wait().outcome {
+                            Ok(_) => ok += 1,
+                            Err(_) => failed += 1,
+                        }
+                    }
+                    (tenant, ok, failed, denied, shed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("submitter panicked")).collect()
+    });
+
+    let spends = server.tenant_spend();
+    let metrics = server.drain();
+
+    for (tenant, ok, failed, denied, shed) in &per_tenant {
+        println!(
+            "  tenant {tenant}: {ok} ok, {failed} failed, {denied} denied at \
+             admission, {shed} shed by backpressure"
+        );
+    }
+    for t in &spends {
+        println!(
+            "  tenant {} budget: spent eps {:.2}{}",
+            t.tenant,
+            t.spent,
+            match metrics.gauge("tenant_eps_cap") {
+                Some(cap) => format!(" of cap {cap:.2}"),
+                None => " (uncapped)".to_string(),
+            }
+        );
+    }
+    print_latency_table(&metrics);
+    if let Some(path) = metrics_out {
+        std::fs::write(&path, metrics.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    println!("metrics: {}", metrics.to_json());
+    Ok(())
+}
+
+/// Per-kind latency and queue-wait summary (the serving runtime's
+/// histogram headline).
+fn print_latency_table(metrics: &Metrics) {
+    let ms = |s: f64| s * 1e3;
+    for series in ["latency_release", "latency_lp", "queue_wait"] {
+        if let Some(t) = metrics.timing_summary(series) {
+            println!(
+                "  {series:<16} n={:<4} p50 {:>8.2}ms  p95 {:>8.2}ms  p99 {:>8.2}ms  \
+                 max {:>8.2}ms",
+                t.count,
+                ms(t.p50),
+                ms(t.p95),
+                ms(t.p99),
+                ms(t.max)
+            );
+        }
+    }
+}
+
+/// The perf-regression gate: compare fresh bench JSON artifacts against
+/// the committed baseline. Baseline schema:
+///
+/// ```text
+/// { "tolerance": 0.25,
+///   "metrics": {
+///     "<bench name>": {
+///       "<dotted.path>": { "value": 0.6, "dir": "lower" | "higher" } } } }
+/// ```
+///
+/// A `lower` metric fails when fresh > value·(1+tol); a `higher` metric
+/// fails when fresh < value·(1−tol). A metric missing from the fresh run
+/// fails too — silently dropping a tracked metric is itself a regression.
+fn cmd_bench_compare(cfg: &Config) -> Result<()> {
+    let baseline_path = cfg.str_or("baseline", "BENCH_baseline.json");
+    let fresh_paths = cfg.str_or("fresh", "BENCH_hot_paths.json,BENCH_serving.json");
+    let text = std::fs::read_to_string(&baseline_path)
+        .with_context(|| format!("reading baseline {baseline_path}"))?;
+    let baseline = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("parsing {baseline_path}: {e}"))?;
+    let tol = match cfg.get::<f64>("tolerance")? {
+        Some(t) => t,
+        None => baseline.get("tolerance").and_then(Json::as_f64).unwrap_or(0.25),
+    };
+
+    let mut fresh_by_bench = std::collections::BTreeMap::new();
+    for path in fresh_paths.split(',').filter(|p| !p.is_empty()) {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fresh bench {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let name = j
+            .get("bench")
+            .and_then(Json::as_str)
+            .with_context(|| format!("{path} has no \"bench\" name"))?
+            .to_string();
+        fresh_by_bench.insert(name, j);
+    }
+
+    let Some(Json::Obj(benches)) = baseline.get("metrics") else {
+        bail!("{baseline_path} has no \"metrics\" object");
+    };
+    let mut failures = 0usize;
+    for (bench, entries) in benches {
+        let Json::Obj(entries) = entries else {
+            bail!("baseline metrics.{bench} must be an object");
+        };
+        let Some(fresh) = fresh_by_bench.get(bench) else {
+            println!("FAIL {bench}: baseline tracks this bench but no fresh file was given");
+            failures += 1;
+            continue;
+        };
+        for (key, spec) in entries {
+            let value = spec
+                .get("value")
+                .and_then(Json::as_f64)
+                .with_context(|| format!("baseline {bench}.{key} has no numeric value"))?;
+            let dir = spec.get("dir").and_then(Json::as_str).unwrap_or("lower");
+            let mut cur = Some(fresh);
+            for part in key.split('.') {
+                cur = cur.and_then(|c| c.get(part));
+            }
+            let Some(got) = cur.and_then(Json::as_f64) else {
+                println!("FAIL {bench}.{key}: metric missing from the fresh run");
+                failures += 1;
+                continue;
+            };
+            let (ok, bound) = match dir {
+                "lower" => (got <= value * (1.0 + tol), value * (1.0 + tol)),
+                "higher" => (got >= value * (1.0 - tol), value * (1.0 - tol)),
+                other => bail!("baseline {bench}.{key}: unknown dir {other:?}"),
+            };
+            println!(
+                "{} {bench}.{key}: {got:.4} (baseline {value:.4}, {dir} is better, \
+                 bound {bound:.4})",
+                if ok { "PASS" } else { "FAIL" }
+            );
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    anyhow::ensure!(
+        failures == 0,
+        "{failures} perf-regression check(s) failed (tolerance {tol})"
+    );
+    println!("perf gate passed (tolerance {tol})");
     Ok(())
 }
 

@@ -12,13 +12,20 @@
 //! `store_promote_ms` (µs-accumulated like the saved counter) /
 //! `store_bytes_written`, plus `store_artifacts` and
 //! `store_load_failures` gauges.
+//!
+//! The long-lived serving runtime (DESIGN.md §8) adds admission counters
+//! `jobs_admitted` / `jobs_denied_budget` / `jobs_rejected_queue` /
+//! `jobs_refunded`, the latency series `latency_{release,lp}` and
+//! `queue_wait` (summarized as p50/p95/p99 in the JSON dump), and
+//! per-tenant spend gauges `tenant_<id>_eps_spent` /
+//! `tenant_<id>_eps_admitted` alongside the uniform `tenant_eps_cap`.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// In-process metrics registry.
-#[derive(Default, Debug)]
+#[derive(Clone, Default, Debug)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
@@ -72,7 +79,7 @@ impl Metrics {
         self.gauges.get(name).copied()
     }
 
-    /// (count, mean, p50, p95, max) of a timing series, in seconds.
+    /// (count, mean, p50, p95, p99, max) of a timing series, in seconds.
     pub fn timing_summary(&self, name: &str) -> Option<TimingSummary> {
         let xs = self.timings.get(name)?;
         if xs.is_empty() {
@@ -86,6 +93,7 @@ impl Metrics {
             mean: xs.iter().sum::<f64>() / xs.len() as f64,
             p50: pct(0.5),
             p95: pct(0.95),
+            p99: pct(0.99),
             max: *sorted.last().unwrap(),
         })
     }
@@ -126,6 +134,7 @@ impl Metrics {
                     t.insert("mean_s".to_string(), Json::Num(s.mean));
                     t.insert("p50_s".to_string(), Json::Num(s.p50));
                     t.insert("p95_s".to_string(), Json::Num(s.p95));
+                    t.insert("p99_s".to_string(), Json::Num(s.p99));
                     t.insert("max_s".to_string(), Json::Num(s.max));
                     (k.clone(), Json::Obj(t))
                 })
@@ -147,6 +156,8 @@ pub struct TimingSummary {
     pub p50: f64,
     /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile (the serving runtime's tail-latency headline).
+    pub p99: f64,
     /// Largest sample.
     pub max: f64,
 }
@@ -185,6 +196,8 @@ mod tests {
         assert_eq!(s.count, 100);
         assert!((s.p50 - 0.050).abs() < 0.002);
         assert!((s.p95 - 0.095).abs() < 0.002);
+        assert!((s.p99 - 0.099).abs() < 0.002);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert!((s.max - 0.100).abs() < 1e-9);
     }
 

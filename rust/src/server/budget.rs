@@ -1,0 +1,230 @@
+//! Per-tenant privacy accountants with admission control (DESIGN.md §8).
+//!
+//! The serving analogue of the privacy-budget discipline in MWEM-style
+//! release (Hardt–Ligett–McSherry) and privately-solved LPs (Hsu et al.):
+//! every answered job spends ε that must be accounted *before*, not after,
+//! execution. [`TenantBudget`] keeps one ledger per tenant and runs a
+//! reserve → commit / refund protocol:
+//!
+//! * **admit** — at submission, atomically reserve the job's nominal ε
+//!   against the tenant's cap. A job whose reservation would overshoot is
+//!   denied before it ever enters the queue, so denied jobs spend zero ε.
+//! * **commit** — when the job completes successfully, the reservation
+//!   becomes spend.
+//! * **refund** — when the job runs and fails, the reservation is
+//!   atomically returned (and recorded as refunded), so failures never
+//!   leak budget.
+//! * **rescind** — when an admitted job never enters the queue (shed by
+//!   backpressure or a closing server), the reservation is erased as if
+//!   the job had never been admitted.
+//!
+//! Invariant per tenant: `spent ≤ admitted ≤ cap` at every instant.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One tenant's ledger snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TenantSpend {
+    /// Tenant id.
+    pub tenant: u64,
+    /// Currently reserved ε (committed spend plus in-flight reservations).
+    pub admitted: f64,
+    /// ε committed by successfully completed jobs.
+    pub spent: f64,
+    /// ε returned by failed or queue-refused jobs.
+    pub refunded: f64,
+    /// Jobs whose reservation was accepted.
+    pub admitted_jobs: u64,
+    /// Jobs denied at admission (they spent zero ε).
+    pub denied_jobs: u64,
+}
+
+/// Admission denial: the reservation would overshoot the tenant's cap.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionError {
+    /// The denied tenant.
+    pub tenant: u64,
+    /// ε the job asked for.
+    pub requested: f64,
+    /// ε already reserved for this tenant.
+    pub admitted: f64,
+    /// The per-tenant cap.
+    pub cap: f64,
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "tenant {} admission denied: {} reserved + {} requested > cap {}",
+            self.tenant, self.admitted, self.requested, self.cap
+        )
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Registry of per-tenant privacy ledgers behind one lock; every transition
+/// (reserve, commit, refund) is atomic with respect to concurrent
+/// submitters and workers.
+#[derive(Debug)]
+pub struct TenantBudget {
+    /// Per-tenant ε cap (`None` = unlimited: admission always passes, but
+    /// spend is still metered per tenant).
+    cap: Option<f64>,
+    ledgers: Mutex<BTreeMap<u64, TenantSpend>>,
+}
+
+impl TenantBudget {
+    /// A budget registry where every tenant gets the same ε cap.
+    pub fn new(cap: Option<f64>) -> Self {
+        TenantBudget { cap, ledgers: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The uniform per-tenant cap, if any.
+    pub fn cap(&self) -> Option<f64> {
+        self.cap
+    }
+
+    /// Reserve `eps` for `tenant`, denying atomically if the reservation
+    /// would exceed the cap. The small additive slack absorbs float
+    /// accumulation so a tenant can spend exactly up to its cap.
+    pub fn admit(&self, tenant: u64, eps: f64) -> Result<(), AdmissionError> {
+        let mut ledgers = self.ledgers.lock().unwrap();
+        let ledger = ledgers
+            .entry(tenant)
+            .or_insert_with(|| TenantSpend { tenant, ..TenantSpend::default() });
+        if let Some(cap) = self.cap {
+            if ledger.admitted + eps > cap + 1e-12 {
+                ledger.denied_jobs += 1;
+                return Err(AdmissionError {
+                    tenant,
+                    requested: eps,
+                    admitted: ledger.admitted,
+                    cap,
+                });
+            }
+        }
+        ledger.admitted += eps;
+        ledger.admitted_jobs += 1;
+        Ok(())
+    }
+
+    /// Convert a reservation into committed spend (job succeeded).
+    pub fn commit(&self, tenant: u64, eps: f64) {
+        let mut ledgers = self.ledgers.lock().unwrap();
+        if let Some(ledger) = ledgers.get_mut(&tenant) {
+            ledger.spent += eps;
+        }
+    }
+
+    /// Return a reservation whose job ran and failed. The budget reopens
+    /// for subsequent jobs and the ε is recorded in `refunded`.
+    pub fn refund(&self, tenant: u64, eps: f64) {
+        let mut ledgers = self.ledgers.lock().unwrap();
+        if let Some(ledger) = ledgers.get_mut(&tenant) {
+            ledger.admitted = (ledger.admitted - eps).max(0.0);
+            ledger.refunded += eps;
+        }
+    }
+
+    /// Roll back a reservation whose job never entered the queue (shed by
+    /// backpressure, or refused by a closing server): the reservation is
+    /// erased from the ledger entirely — `admitted`/`admitted_jobs` drop
+    /// back and, unlike [`TenantBudget::refund`], nothing is recorded as
+    /// refunded, so the ledger stays consistent with the `jobs_refunded`
+    /// counter (which counts only jobs that ran and failed).
+    pub fn rescind(&self, tenant: u64, eps: f64) {
+        let mut ledgers = self.ledgers.lock().unwrap();
+        if let Some(ledger) = ledgers.get_mut(&tenant) {
+            ledger.admitted = (ledger.admitted - eps).max(0.0);
+            ledger.admitted_jobs = ledger.admitted_jobs.saturating_sub(1);
+        }
+    }
+
+    /// Snapshot of every tenant's ledger, sorted by tenant id.
+    pub fn snapshot(&self) -> Vec<TenantSpend> {
+        self.ledgers.lock().unwrap().values().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_to_the_cap_then_denies() {
+        let b = TenantBudget::new(Some(2.0));
+        assert!(b.admit(1, 0.9).is_ok());
+        assert!(b.admit(1, 0.9).is_ok());
+        let err = b.admit(1, 0.3).unwrap_err();
+        assert_eq!(err.tenant, 1);
+        assert!((err.admitted - 1.8).abs() < 1e-12);
+        // landing exactly on the cap is allowed
+        assert!(b.admit(1, 0.2).is_ok());
+        assert!(b.admit(1, 1e-6).is_err(), "cap exhausted");
+        let s = &b.snapshot()[0];
+        assert_eq!((s.admitted_jobs, s.denied_jobs), (3, 2));
+    }
+
+    #[test]
+    fn tenants_are_independent() {
+        let b = TenantBudget::new(Some(1.0));
+        assert!(b.admit(1, 1.0).is_ok());
+        assert!(b.admit(1, 0.5).is_err());
+        assert!(b.admit(2, 1.0).is_ok(), "tenant 2 has its own cap");
+        let snap = b.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].tenant, 1);
+        assert_eq!(snap[1].tenant, 2);
+    }
+
+    #[test]
+    fn refund_reopens_the_budget_and_denied_jobs_spend_zero() {
+        let b = TenantBudget::new(Some(1.0));
+        assert!(b.admit(7, 0.8).is_ok());
+        assert!(b.admit(7, 0.8).is_err(), "would overshoot");
+        b.refund(7, 0.8); // the first job failed
+        assert!(b.admit(7, 0.9).is_ok(), "refund must reopen the budget");
+        b.commit(7, 0.9);
+        let s = &b.snapshot()[0];
+        assert!((s.spent - 0.9).abs() < 1e-12, "only the committed job spends");
+        assert!((s.refunded - 0.8).abs() < 1e-12);
+        assert!((s.admitted - 0.9).abs() < 1e-12);
+        assert!(s.spent <= s.admitted + 1e-12);
+    }
+
+    #[test]
+    fn uncapped_budget_admits_everything_but_still_meters() {
+        let b = TenantBudget::new(None);
+        for _ in 0..50 {
+            b.admit(3, 10.0).unwrap();
+            b.commit(3, 10.0);
+        }
+        let s = &b.snapshot()[0];
+        assert!((s.spent - 500.0).abs() < 1e-9);
+        assert_eq!(s.admitted_jobs, 50);
+    }
+
+    #[test]
+    fn rescind_erases_the_reservation_without_recording_a_refund() {
+        let b = TenantBudget::new(Some(1.0));
+        assert!(b.admit(4, 0.8).is_ok());
+        b.rescind(4, 0.8); // queue refused the job: as if never admitted
+        let s = &b.snapshot()[0];
+        assert_eq!(s.admitted_jobs, 0);
+        assert!((s.admitted - 0.0).abs() < 1e-12);
+        assert!((s.refunded - 0.0).abs() < 1e-12, "sheds are not refunds");
+        assert!(b.admit(4, 1.0).is_ok(), "full budget available again");
+    }
+
+    #[test]
+    fn commit_refund_and_rescind_on_unknown_tenant_are_noops() {
+        let b = TenantBudget::new(Some(1.0));
+        b.commit(9, 1.0);
+        b.refund(9, 1.0);
+        b.rescind(9, 1.0);
+        assert!(b.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Long-lived concurrent serving runtime (DESIGN.md §8).
+//!
+//! Where [`crate::coordinator::Coordinator`] is a batch harness — submit a
+//! known set of jobs, `finish()`, tear the pool down — this module is the
+//! steady-state request path the ROADMAP's serving north-star asks for: a
+//! bounded MPMC [`BoundedQueue`] with configurable backpressure
+//! ([`QueuePolicy`]) feeding persistent workers that share the tiered
+//! warm-index cache ([`crate::store::TieredIndexCache`], DESIGN.md §6–§7),
+//! fronted by per-tenant privacy accountants ([`TenantBudget`]) that admit
+//! or deny every job against its tenant's ε cap *before* it runs and
+//! atomically refund reservations on failure. Submitters get a
+//! [`JobTicket`] per accepted job; [`Server::drain`] shuts down gracefully
+//! — in-flight jobs complete, new work is refused — and reports per-kind
+//! latency histograms (p50/p95/p99) plus per-tenant spend.
+
+pub mod budget;
+pub mod queue;
+pub mod runtime;
+
+pub use budget::{AdmissionError, TenantBudget, TenantSpend};
+pub use queue::{BoundedQueue, PushError, QueuePolicy};
+pub use runtime::{JobTicket, Server, ServerConfig, SubmitError};

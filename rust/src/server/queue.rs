@@ -1,0 +1,312 @@
+//! Bounded MPMC job queue with configurable backpressure (DESIGN.md §8).
+//!
+//! The serving runtime's spine: any number of submitter threads `push`,
+//! any number of persistent workers `pop`. The queue is bounded at a
+//! configurable `depth`; what happens at the bound is the backpressure
+//! [`QueuePolicy`] — block the submitter until a worker frees a slot, or
+//! fail fast and hand the item straight back. `close()` flips the queue
+//! into drain mode: new pushes are refused, pops keep serving whatever is
+//! already queued, and once empty every blocked consumer wakes with
+//! `None` — the graceful-shutdown contract of
+//! [`crate::server::Server::drain`].
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Backpressure policy: what [`BoundedQueue::push`] does when the queue is
+/// at depth.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueuePolicy {
+    /// Block the submitter until a worker frees a slot (or the queue
+    /// closes). Lossless; submission rate is clamped to service rate.
+    #[default]
+    Block,
+    /// Refuse immediately, returning the item to the submitter as
+    /// [`PushError::Full`]. The submitter sees the overload and can shed,
+    /// retry, or route elsewhere.
+    Reject,
+}
+
+impl std::str::FromStr for QueuePolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "block" => Ok(QueuePolicy::Block),
+            "reject" => Ok(QueuePolicy::Reject),
+            other => Err(format!(
+                "unknown queue policy {other:?} (expected \"block\" or \"reject\")"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for QueuePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            QueuePolicy::Block => "block",
+            QueuePolicy::Reject => "reject",
+        })
+    }
+}
+
+/// Why a push did not enqueue. The rejected item rides back so the caller
+/// can undo side effects (the server refunds the admission reservation).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue at depth under [`QueuePolicy::Reject`].
+    Full(T),
+    /// Queue closed (server draining) — no new work is accepted.
+    Closed(T),
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded multi-producer multi-consumer queue (mutex + two condvars; the
+/// offline build vendors no crossbeam — see DESIGN.md §3).
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    depth: usize,
+    policy: QueuePolicy,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue bounded at `depth` items (clamped to ≥ 1) with the given
+    /// backpressure policy.
+    pub fn new(depth: usize, policy: QueuePolicy) -> Self {
+        BoundedQueue {
+            state: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            depth: depth.max(1),
+            policy,
+        }
+    }
+
+    /// The configured depth bound.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// The configured backpressure policy.
+    pub fn policy(&self) -> QueuePolicy {
+        self.policy
+    }
+
+    /// Items currently queued (racy by nature; for metrics and tests).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    /// True when nothing is queued right now.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue `item`, applying the backpressure policy at the depth
+    /// bound. Fails with [`PushError::Closed`] once [`close`] has been
+    /// called (including while blocked waiting for a slot).
+    ///
+    /// [`close`]: BoundedQueue::close
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(PushError::Closed(item));
+            }
+            if st.items.len() < self.depth {
+                st.items.push_back(item);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            match self.policy {
+                QueuePolicy::Reject => return Err(PushError::Full(item)),
+                QueuePolicy::Block => st = self.not_full.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Dequeue the oldest item, blocking while the queue is empty and
+    /// open. Returns `None` only when the queue is closed *and* drained —
+    /// in-flight work is never dropped.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: refuse all future pushes, wake every blocked
+    /// submitter (they see [`PushError::Closed`]) and every idle worker
+    /// (they drain the backlog, then see `None`). Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_within_bound() {
+        let q = BoundedQueue::new(4, QueuePolicy::Reject);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn reject_policy_fails_fast_at_depth_and_recovers() {
+        let q = BoundedQueue::new(2, QueuePolicy::Reject);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        match q.push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3, "item rides back"),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        // a pop frees a slot; the next push lands
+        assert_eq!(q.pop(), Some(1));
+        q.push(3).unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn block_policy_waits_for_a_slot() {
+        let q = Arc::new(BoundedQueue::new(1, QueuePolicy::Block));
+        q.push(10).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let qc = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || {
+            qc.push(11).unwrap(); // blocks: queue is full
+            tx.send(()).unwrap();
+        });
+        // the pusher must still be blocked after a grace period
+        assert!(
+            rx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "push through a full Block queue must not complete"
+        );
+        assert_eq!(q.pop(), Some(10));
+        rx.recv_timeout(Duration::from_secs(5)).expect("pop must unblock the pusher");
+        pusher.join().unwrap();
+        assert_eq!(q.pop(), Some(11));
+    }
+
+    #[test]
+    fn close_refuses_new_work_but_drains_backlog() {
+        let q = BoundedQueue::new(4, QueuePolicy::Block);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        match q.push(3) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 3),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(q.pop(), Some(1), "backlog survives close");
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None, "drained + closed => None");
+        assert_eq!(q.pop(), None, "None is sticky");
+    }
+
+    #[test]
+    fn close_wakes_blocked_pusher_and_idle_popper() {
+        let q = Arc::new(BoundedQueue::new(1, QueuePolicy::Block));
+        q.push(1).unwrap();
+        let qp = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || qp.push(2));
+        let qe = Arc::new(BoundedQueue::<u32>::new(1, QueuePolicy::Block));
+        let qec = Arc::clone(&qe);
+        let popper = std::thread::spawn(move || qec.pop());
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        qe.close();
+        match pusher.join().unwrap() {
+            Err(PushError::Closed(2)) => {}
+            other => panic!("blocked pusher must see Closed, got {other:?}"),
+        }
+        assert_eq!(popper.join().unwrap(), None, "idle popper must wake with None");
+    }
+
+    #[test]
+    fn many_producers_many_consumers_deliver_everything_once() {
+        let q = Arc::new(BoundedQueue::new(8, QueuePolicy::Block));
+        let n_producers = 4;
+        let per_producer = 50u64;
+        let producers: Vec<_> = (0..n_producers)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..per_producer {
+                        q.push(p * 1_000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<u64> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut want: Vec<u64> = (0..n_producers)
+            .flat_map(|p| (0..per_producer).map(move |i| p * 1_000 + i))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(all, want, "every item delivered exactly once");
+    }
+
+    #[test]
+    fn depth_zero_clamps_to_one() {
+        let q = BoundedQueue::new(0, QueuePolicy::Reject);
+        assert_eq!(q.depth(), 1);
+        q.push(1).unwrap();
+        assert!(matches!(q.push(2), Err(PushError::Full(2))));
+    }
+
+    #[test]
+    fn policy_parses_and_displays() {
+        assert_eq!("block".parse::<QueuePolicy>().unwrap(), QueuePolicy::Block);
+        assert_eq!("reject".parse::<QueuePolicy>().unwrap(), QueuePolicy::Reject);
+        assert!("drop".parse::<QueuePolicy>().is_err());
+        assert_eq!(QueuePolicy::Reject.to_string(), "reject");
+        assert_eq!(QueuePolicy::default(), QueuePolicy::Block);
+    }
+}

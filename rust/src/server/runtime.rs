@@ -1,0 +1,480 @@
+//! The long-lived serving runtime: a bounded MPMC job queue feeding
+//! persistent workers over the tiered warm-index cache, with per-tenant
+//! budget admission and graceful drain (DESIGN.md §8).
+//!
+//! Lifecycle: [`Server::start`] spawns the worker threads once; any number
+//! of submitter threads then call [`Server::submit`] concurrently. Each
+//! submission is admission-controlled against its tenant's ε cap *before*
+//! it enters the queue, and returns a [`JobTicket`] — the per-request
+//! response path — that resolves to the job's [`JobResult`]. A failed job
+//! atomically refunds its reservation. [`Server::drain`] closes the queue
+//! (new work is refused), lets the workers finish everything in flight,
+//! and returns the final [`Metrics`] with per-kind latency histograms and
+//! per-tenant spend gauges.
+
+use super::budget::{AdmissionError, TenantBudget, TenantSpend};
+use super::queue::{BoundedQueue, PushError, QueuePolicy};
+use crate::config::{CacheConfig, Config, StoreConfig};
+use crate::coordinator::pool::finalize_serving_metrics;
+use crate::coordinator::{execute_with_cache, JobResult, JobSpec};
+use crate::metrics::Metrics;
+use crate::store::TieredIndexCache;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Sizing, backpressure and admission control for a [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Persistent worker threads.
+    pub workers: usize,
+    /// Bounded queue depth — jobs admitted but not yet picked up.
+    pub queue_depth: usize,
+    /// What `submit` does when the queue is at depth.
+    pub policy: QueuePolicy,
+    /// Per-tenant privacy cap (ε). Every tenant gets this budget; `None`
+    /// disables admission control (spend is still metered per tenant).
+    pub eps_per_tenant: Option<f64>,
+    /// Warm-index cache capacity (DESIGN.md §6); 0 disables the L1 tier.
+    pub cache_capacity: usize,
+    /// Persistent artifact store directory (DESIGN.md §7); `None` keeps
+    /// warm serving in-memory only.
+    pub store_dir: Option<PathBuf>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 4,
+            queue_depth: 64,
+            policy: QueuePolicy::Block,
+            eps_per_tenant: None,
+            cache_capacity: 8,
+            store_dir: None,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Read the `[server]` section, honoring the CLI shorthands
+    /// `--workers`, `--queue-depth`, `--policy` and `--eps-per-tenant`
+    /// (shorthands win over section values), plus the `[cache]` and
+    /// `[store]` sections for the warm-serving tiers.
+    ///
+    /// ```text
+    /// [server]
+    /// workers = 4
+    /// queue_depth = 64
+    /// policy = "block"        # or "reject"
+    /// eps_per_tenant = 8.0    # unset = unlimited
+    /// ```
+    pub fn from_config(cfg: &Config) -> anyhow::Result<Self> {
+        let d = ServerConfig::default();
+        let policy_str =
+            cfg.str_or("policy", &cfg.str_or("server.policy", &d.policy.to_string()));
+        let policy: QueuePolicy =
+            policy_str.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        let eps_per_tenant: Option<f64> = match cfg.get("eps-per-tenant")? {
+            Some(v) => Some(v),
+            None => cfg.get("server.eps_per_tenant")?,
+        };
+        Ok(ServerConfig {
+            workers: cfg.or("workers", cfg.or("server.workers", d.workers)?)?,
+            queue_depth: cfg
+                .or("queue-depth", cfg.or("server.queue_depth", d.queue_depth)?)?,
+            policy,
+            eps_per_tenant,
+            cache_capacity: CacheConfig::from_config(cfg)?.capacity,
+            store_dir: StoreConfig::from_config(cfg)?.dir.map(PathBuf::from),
+        })
+    }
+}
+
+/// Why [`Server::submit`] refused a job. Refused jobs never spend ε.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The bounded queue is at depth under [`QueuePolicy::Reject`]. The
+    /// admission reservation was refunded; the submitter should shed or
+    /// retry later.
+    QueueFull {
+        /// The configured queue depth that was hit.
+        depth: usize,
+    },
+    /// The server is draining — no new work is accepted.
+    Draining,
+    /// The tenant's ε cap would be exceeded; the job was denied before
+    /// queueing and spent zero ε.
+    Budget(AdmissionError),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth } => {
+                write!(f, "queue full (depth {depth}): job rejected by backpressure")
+            }
+            SubmitError::Draining => write!(f, "server draining: new work refused"),
+            SubmitError::Budget(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// The per-request response path: resolves to the job's [`JobResult`].
+#[derive(Debug)]
+pub struct JobTicket {
+    /// Submission id: unique and increasing in submission order. A
+    /// budget-admitted submission that the queue then refuses burns its
+    /// id, so ids are not dense under [`QueuePolicy::Reject`].
+    pub job_id: usize,
+    rx: mpsc::Receiver<JobResult>,
+}
+
+impl JobTicket {
+    /// Block until the job completes. If the server was torn down before
+    /// the job ran (never happens under a graceful [`Server::drain`]),
+    /// resolves to a failed result rather than hanging.
+    pub fn wait(self) -> JobResult {
+        let job_id = self.job_id;
+        self.rx.recv().unwrap_or_else(|_| JobResult {
+            job_id,
+            kind: "dropped",
+            outcome: Err(anyhow::anyhow!("server dropped the job before completion")),
+        })
+    }
+}
+
+/// One admitted job riding the queue to a worker.
+struct Envelope {
+    job_id: usize,
+    tenant: u64,
+    eps: f64,
+    spec: JobSpec,
+    enqueued: Instant,
+    reply: mpsc::Sender<JobResult>,
+}
+
+/// A running serving runtime. `&self` methods are safe to call from any
+/// number of threads (MPMC submission); drop order is governed by
+/// [`Server::drain`].
+pub struct Server {
+    cfg: ServerConfig,
+    queue: Arc<BoundedQueue<Envelope>>,
+    budget: Arc<TenantBudget>,
+    metrics: Arc<Mutex<Metrics>>,
+    cache: Option<Arc<TieredIndexCache>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicUsize,
+}
+
+impl Server {
+    /// Spawn the persistent workers and start accepting jobs.
+    ///
+    /// Like [`crate::coordinator::Coordinator::start`], an unopenable
+    /// `store_dir` degrades to in-memory-only warm serving with a warning
+    /// — the store is an accelerator, never a startup dependency.
+    pub fn start(cfg: ServerConfig) -> Self {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_depth, cfg.policy));
+        let budget = Arc::new(TenantBudget::new(cfg.eps_per_tenant));
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let cache: Option<Arc<TieredIndexCache>> =
+            if cfg.cache_capacity > 0 || cfg.store_dir.is_some() {
+                let tiered = match &cfg.store_dir {
+                    Some(dir) => TieredIndexCache::with_store(cfg.cache_capacity, dir)
+                        .unwrap_or_else(|e| {
+                            eprintln!(
+                                "warning: cannot open artifact store {dir:?} ({e:#}); \
+                                 serving in-memory only"
+                            );
+                            TieredIndexCache::memory_only(cfg.cache_capacity)
+                        }),
+                    None => TieredIndexCache::memory_only(cfg.cache_capacity),
+                };
+                Some(Arc::new(tiered))
+            } else {
+                None
+            };
+
+        let workers = (0..cfg.workers.max(1))
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                let budget = Arc::clone(&budget);
+                let metrics = Arc::clone(&metrics);
+                let cache = cache.clone();
+                std::thread::spawn(move || {
+                    while let Some(env) = queue.pop() {
+                        run_one(env, cache.as_deref(), &metrics, &budget);
+                    }
+                })
+            })
+            .collect();
+
+        Server {
+            cfg,
+            queue,
+            budget,
+            metrics,
+            cache,
+            workers,
+            next_id: AtomicUsize::new(0),
+        }
+    }
+
+    /// Submit a job from any thread. Admission order: the tenant's ε is
+    /// reserved first (denied jobs never queue and spend zero ε), then the
+    /// job enters the bounded queue under the backpressure policy; a
+    /// queue-refused job rescinds its reservation before returning, as if
+    /// it had never been admitted.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobTicket, SubmitError> {
+        let tenant = spec.tenant();
+        let eps = spec.eps();
+        if let Err(e) = self.budget.admit(tenant, eps) {
+            self.metrics.lock().unwrap().inc("jobs_denied_budget", 1);
+            return Err(SubmitError::Budget(e));
+        }
+        let job_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let env =
+            Envelope { job_id, tenant, eps, spec, enqueued: Instant::now(), reply };
+        match self.queue.push(env) {
+            Ok(()) => {
+                self.metrics.lock().unwrap().inc("jobs_admitted", 1);
+                Ok(JobTicket { job_id, rx })
+            }
+            Err(PushError::Full(_)) => {
+                self.budget.rescind(tenant, eps);
+                self.metrics.lock().unwrap().inc("jobs_rejected_queue", 1);
+                Err(SubmitError::QueueFull { depth: self.queue.depth() })
+            }
+            Err(PushError::Closed(_)) => {
+                self.budget.rescind(tenant, eps);
+                Err(SubmitError::Draining)
+            }
+        }
+    }
+
+    /// Begin a graceful shutdown without blocking: the queue refuses new
+    /// work from this point on; workers keep serving the backlog.
+    /// Idempotent. [`Server::drain`] calls this implicitly.
+    pub fn close(&self) {
+        self.queue.close();
+    }
+
+    /// Graceful drain: refuse new work, let every in-flight and queued job
+    /// complete, join the workers, and return the final metrics (per-kind
+    /// latency histograms, queue-wait distribution, cache/store counters,
+    /// and per-tenant spend gauges).
+    pub fn drain(mut self) -> Metrics {
+        self.queue.close();
+        for w in std::mem::take(&mut self.workers) {
+            let _ = w.join();
+        }
+        {
+            let mut m = self.metrics.lock().unwrap();
+            finalize_serving_metrics(&mut m, self.cache.as_deref());
+            if let Some(cap) = self.budget.cap() {
+                m.set_gauge("tenant_eps_cap", cap);
+            }
+            for t in self.budget.snapshot() {
+                m.set_gauge(&format!("tenant_{}_eps_spent", t.tenant), t.spent);
+                m.set_gauge(&format!("tenant_{}_eps_admitted", t.tenant), t.admitted);
+                if t.refunded > 0.0 {
+                    m.set_gauge(&format!("tenant_{}_eps_refunded", t.tenant), t.refunded);
+                }
+            }
+        }
+        let metrics = Arc::clone(&self.metrics);
+        drop(self); // releases the server's own Arc clones (close is idempotent)
+        Arc::try_unwrap(metrics)
+            .map(|m| m.into_inner().unwrap())
+            .unwrap_or_default()
+    }
+
+    /// Point-in-time copy of the live metrics (for status endpoints and
+    /// tests; the authoritative final registry comes from [`Server::drain`]).
+    pub fn metrics_snapshot(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Snapshot of every tenant's privacy ledger.
+    pub fn tenant_spend(&self) -> Vec<TenantSpend> {
+        self.budget.snapshot()
+    }
+
+    /// Submissions that passed budget admission so far — including any
+    /// later shed by a full or closing queue, so this is an upper bound
+    /// on (not a count of) enqueued jobs; use the `jobs_admitted` counter
+    /// for jobs that actually entered the queue.
+    pub fn submitted(&self) -> usize {
+        self.next_id.load(Ordering::Relaxed)
+    }
+
+    /// Jobs admitted but not yet picked up by a worker (racy; for
+    /// monitoring).
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The tiered warm-index cache, when warm serving is enabled.
+    pub fn tiered_cache(&self) -> Option<&TieredIndexCache> {
+        self.cache.as_deref()
+    }
+
+    /// The resolved configuration this server runs under.
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+}
+
+/// Dropping a server without [`Server::drain`] must not leak the
+/// persistent workers: closing the queue wakes every idle worker (they
+/// finish the backlog and exit on their own, detached — unlike `drain`,
+/// which joins them and reports metrics).
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+    }
+}
+
+/// One worker's handling of one admitted job: execute over the shared
+/// cache (panics are caught and converted into failed results so a bad job
+/// can never kill a persistent worker), meter latency + cache counters,
+/// settle the tenant's reservation (commit on success, refund on failure),
+/// and resolve the submitter's ticket.
+fn run_one(
+    env: Envelope,
+    cache: Option<&TieredIndexCache>,
+    metrics: &Mutex<Metrics>,
+    budget: &TenantBudget,
+) {
+    let Envelope { job_id, tenant, eps, spec, enqueued, reply } = env;
+    let kind = spec.kind();
+    let waited = enqueued.elapsed();
+    let started = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| execute_with_cache(&spec, cache)))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("job panicked on the worker")));
+    let store_on = cache.is_some_and(|c| c.store().is_some());
+    {
+        let mut m = metrics.lock().unwrap();
+        m.inc("jobs_completed", 1);
+        m.inc(&format!("jobs_{kind}"), 1);
+        m.observe("queue_wait", waited);
+        m.observe("job_duration", started.elapsed());
+        m.observe(&format!("latency_{kind}"), started.elapsed());
+        match &outcome {
+            Ok((_, rep)) => rep.record_into(&mut m, store_on),
+            Err(_) => m.inc("jobs_failed", 1),
+        }
+    }
+    match &outcome {
+        Ok(_) => budget.commit(tenant, eps),
+        Err(_) => {
+            budget.refund(tenant, eps);
+            metrics.lock().unwrap().inc("jobs_refunded", 1);
+        }
+    }
+    let outcome = outcome.map(|(o, _)| o);
+    let _ = reply.send(JobResult { job_id, kind, outcome });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::LpJobSpec;
+    use crate::lp::SelectionMode;
+
+    fn tiny_lp(tenant: u64, seed: u64, eps: f64) -> JobSpec {
+        JobSpec::Lp(LpJobSpec {
+            m: 50,
+            d: 6,
+            t: 10,
+            eps,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode: SelectionMode::Exhaustive,
+            tenant,
+            seed,
+        })
+    }
+
+    #[test]
+    fn submit_runs_jobs_and_drain_reports() {
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            queue_depth: 8,
+            cache_capacity: 0,
+            ..ServerConfig::default()
+        });
+        let tickets: Vec<JobTicket> =
+            (0..4).map(|i| server.submit(tiny_lp(i % 2, i, 0.5)).unwrap()).collect();
+        assert_eq!(server.submitted(), 4);
+        for t in tickets {
+            let r = t.wait();
+            assert_eq!(r.kind, "lp");
+            assert!(r.outcome.is_ok());
+        }
+        let m = server.drain();
+        assert_eq!(m.counter("jobs_completed"), 4);
+        assert_eq!(m.counter("jobs_admitted"), 4);
+        assert_eq!(m.counter("jobs_failed"), 0);
+        assert_eq!(m.timing_summary("latency_lp").unwrap().count, 4);
+        assert_eq!(m.timing_summary("queue_wait").unwrap().count, 4);
+        assert_eq!(m.gauge("tenant_0_eps_spent"), Some(1.0));
+        assert_eq!(m.gauge("tenant_1_eps_spent"), Some(1.0));
+    }
+
+    #[test]
+    fn closed_server_refuses_new_work_but_finishes_backlog() {
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 8,
+            cache_capacity: 0,
+            ..ServerConfig::default()
+        });
+        let t1 = server.submit(tiny_lp(0, 1, 0.5)).unwrap();
+        server.close();
+        match server.submit(tiny_lp(0, 2, 0.5)) {
+            Err(SubmitError::Draining) => {}
+            other => panic!("expected Draining, got {other:?}"),
+        }
+        assert!(t1.wait().outcome.is_ok(), "backlog completes after close");
+        let m = server.drain();
+        assert_eq!(m.counter("jobs_completed"), 1);
+        // the refused job's reservation was refunded, so only 0.5 is spent
+        assert_eq!(m.gauge("tenant_0_eps_spent"), Some(0.5));
+    }
+
+    #[test]
+    fn server_config_from_config_honors_shorthands() {
+        let mut cfg = Config::parse(
+            "[server]\nworkers = 2\nqueue_depth = 16\npolicy = \"reject\"\n\
+             eps_per_tenant = 4.0\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_config(&cfg).unwrap();
+        assert_eq!((s.workers, s.queue_depth), (2, 16));
+        assert_eq!(s.policy, QueuePolicy::Reject);
+        assert_eq!(s.eps_per_tenant, Some(4.0));
+
+        cfg.apply_overrides([
+            "--workers=8",
+            "--queue-depth=4",
+            "--policy=block",
+            "--eps-per-tenant=9.5",
+        ])
+        .unwrap();
+        let s = ServerConfig::from_config(&cfg).unwrap();
+        assert_eq!((s.workers, s.queue_depth), (8, 4));
+        assert_eq!(s.policy, QueuePolicy::Block);
+        assert_eq!(s.eps_per_tenant, Some(9.5));
+
+        let d = ServerConfig::from_config(&Config::new()).unwrap();
+        assert_eq!((d.workers, d.queue_depth), (4, 64));
+        assert_eq!(d.policy, QueuePolicy::Block);
+        assert_eq!(d.eps_per_tenant, None);
+    }
+}

@@ -140,6 +140,7 @@ fn repeated_workload_batch_hits_warm_index_cache() {
             index: Some(IndexKind::Hnsw),
             shards,
             workload,
+            tenant: 0,
             seed,
         })
     };
@@ -181,6 +182,7 @@ fn cache_hit_skips_build_and_is_deterministic() {
             index: Some(IndexKind::Hnsw),
             shards: 1,
             workload: 5,
+            tenant: 0,
             seed,
         })
     };
@@ -226,6 +228,7 @@ fn release_through_restored_index_is_bit_identical() {
         index: Some(IndexKind::Hnsw), // seed-dependent build: the hard case
         shards: 1,
         workload: 11,
+        tenant: 0,
         seed: 3,
     });
 

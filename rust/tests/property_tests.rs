@@ -10,6 +10,7 @@ use fast_mwem::lp::bregman_project;
 use fast_mwem::lp::SelectionMode;
 use fast_mwem::mips::{augment::AugmentedSpace, FlatIndex, IndexKind, MipsIndex, VectorSet};
 use fast_mwem::sampling::{binomial, sample_distinct_excluding};
+use fast_mwem::server::{QueuePolicy, Server, ServerConfig, SubmitError};
 use fast_mwem::util::math::dot;
 use fast_mwem::util::rng::Rng;
 
@@ -238,6 +239,7 @@ fn prop_coordinator_invariants() {
                     index: Some(IndexKind::Flat),
                     shards: 1 + rng.usize_below(3),
                     workload,
+                    tenant: (j % 3) as u64,
                     seed: round as u64 * 100 + j as u64,
                 })
             } else {
@@ -249,6 +251,7 @@ fn prop_coordinator_invariants() {
                     delta: 1e-3,
                     delta_inf: 0.1,
                     mode: SelectionMode::Exhaustive,
+                    tenant: (j % 3) as u64,
                     seed: round as u64 * 100 + j as u64,
                 })
             };
@@ -268,6 +271,97 @@ fn prop_coordinator_invariants() {
         assert_eq!(ids, sorted, "results not sorted by id");
         assert_eq!(metrics.counter("jobs_completed") as usize, accepted);
         assert!(results.iter().all(|r| r.outcome.is_ok()));
+    }
+}
+
+/// Serving-runtime invariants under random job mixes (DESIGN.md §8):
+/// every accepted ticket resolves exactly once with a unique id, no
+/// tenant's spend ever exceeds its cap, denied/refused jobs spend zero,
+/// and the drained counters match the submission tally.
+#[test]
+fn prop_server_invariants() {
+    let mut rng = Rng::new(208);
+    for round in 0..4 {
+        let workers = 1 + rng.usize_below(4);
+        let depth = 2 + rng.usize_below(6);
+        let policy =
+            if round % 2 == 0 { QueuePolicy::Block } else { QueuePolicy::Reject };
+        let cap = 1.0 + rng.usize_below(4) as f64 * 0.5;
+        let tenants = 1 + rng.usize_below(3);
+        let njobs = 4 + rng.usize_below(8);
+        let server = Server::start(ServerConfig {
+            workers,
+            queue_depth: depth,
+            policy,
+            eps_per_tenant: Some(cap),
+            cache_capacity: 2,
+            store_dir: None,
+        });
+        let mut tickets = Vec::new();
+        let (mut denied, mut shed) = (0usize, 0usize);
+        for j in 0..njobs {
+            let tenant = rng.usize_below(tenants) as u64;
+            let eps = 0.5 + rng.usize_below(2) as f64 * 0.5;
+            let seed = round as u64 * 1_000 + j as u64;
+            let spec = if rng.f64() < 0.5 {
+                JobSpec::Release(ReleaseJobSpec {
+                    u: 32,
+                    m: 32,
+                    n: 200,
+                    t: 10,
+                    eps,
+                    delta: 1e-3,
+                    index: Some(IndexKind::Flat),
+                    shards: 1,
+                    workload: (j % 2) as u64,
+                    tenant,
+                    seed,
+                })
+            } else {
+                JobSpec::Lp(LpJobSpec {
+                    m: 60,
+                    d: 6,
+                    t: 10,
+                    eps,
+                    delta: 1e-3,
+                    delta_inf: 0.1,
+                    mode: SelectionMode::Exhaustive,
+                    tenant,
+                    seed,
+                })
+            };
+            match server.submit(spec) {
+                Ok(t) => tickets.push(t),
+                Err(SubmitError::Budget(_)) => denied += 1,
+                Err(SubmitError::QueueFull { .. }) => shed += 1,
+                Err(SubmitError::Draining) => panic!("server is not draining"),
+            }
+        }
+        let accepted = tickets.len();
+        assert_eq!(accepted + denied + shed, njobs, "round {round}");
+        let mut ids: Vec<usize> = Vec::new();
+        for t in tickets {
+            let r = t.wait();
+            assert!(r.outcome.is_ok(), "round {round}: accepted job failed");
+            ids.push(r.job_id);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), accepted, "round {round}: duplicate job ids");
+        for t in server.tenant_spend() {
+            assert!(
+                t.spent <= cap + 1e-9,
+                "round {round}: tenant {} spent {} > cap {cap}",
+                t.tenant,
+                t.spent
+            );
+            assert!(t.spent <= t.admitted + 1e-9, "spent within reservations");
+        }
+        let m = server.drain();
+        assert_eq!(m.counter("jobs_completed") as usize, accepted, "round {round}");
+        assert_eq!(m.counter("jobs_failed"), 0, "round {round}");
+        assert_eq!(m.counter("jobs_denied_budget") as usize, denied, "round {round}");
+        assert_eq!(m.counter("jobs_rejected_queue") as usize, shed, "round {round}");
     }
 }
 

@@ -1,0 +1,334 @@
+//! Serving-runtime integration tests (DESIGN.md §8): queue backpressure,
+//! per-tenant admission and the refund path, graceful drain, and
+//! result-determinism of the long-lived server against the batch
+//! coordinator.
+
+use fast_mwem::coordinator::{
+    Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
+};
+use fast_mwem::lp::SelectionMode;
+use fast_mwem::mips::IndexKind;
+use fast_mwem::server::{QueuePolicy, Server, ServerConfig, SubmitError};
+
+/// A fast LP job (finishes in well under a millisecond).
+fn cheap_lp(tenant: u64, seed: u64, eps: f64) -> JobSpec {
+    JobSpec::Lp(LpJobSpec {
+        m: 50,
+        d: 6,
+        t: 10,
+        eps,
+        delta: 1e-3,
+        delta_inf: 0.1,
+        mode: SelectionMode::Exhaustive,
+        tenant,
+        seed,
+    })
+}
+
+/// A release job slow enough (HNSW build over m=2000 plus 300 rounds) to
+/// pin a worker for a long stretch relative to submission time.
+fn slow_release(tenant: u64, seed: u64) -> JobSpec {
+    JobSpec::Release(ReleaseJobSpec {
+        u: 256,
+        m: 2_000,
+        n: 500,
+        t: 300,
+        eps: 1.0,
+        delta: 1e-3,
+        index: Some(IndexKind::Hnsw),
+        shards: 1,
+        workload: 77,
+        tenant,
+        seed,
+    })
+}
+
+/// A structurally invalid job: the executor rejects it with a clean error,
+/// which the server turns into a failed result plus an ε refund.
+fn invalid_release(tenant: u64, eps: f64) -> JobSpec {
+    JobSpec::Release(ReleaseJobSpec {
+        u: 64,
+        m: 50,
+        n: 300,
+        t: 0, // zero rounds -> validate() fails
+        eps,
+        delta: 1e-3,
+        index: Some(IndexKind::Flat),
+        shards: 1,
+        workload: 1,
+        tenant,
+        seed: 1,
+    })
+}
+
+/// Backpressure at `queue_depth` under the Reject policy: with the single
+/// worker pinned by a slow job, cheap submissions fill the depth-1 queue
+/// and the overflow surfaces [`SubmitError::QueueFull`] to the submitter.
+/// Every *accepted* job still completes.
+#[test]
+fn reject_policy_surfaces_queue_full_to_the_submitter() {
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 1,
+        policy: QueuePolicy::Reject,
+        eps_per_tenant: None,
+        cache_capacity: 2,
+        store_dir: None,
+    });
+    let mut tickets = vec![server.submit(slow_release(0, 1)).unwrap()];
+    let mut rejected = 0usize;
+    for seed in 0..10 {
+        match server.submit(cheap_lp(0, seed, 0.1)) {
+            Ok(t) => tickets.push(t),
+            Err(SubmitError::QueueFull { depth }) => {
+                assert_eq!(depth, 1, "error reports the configured depth");
+                rejected += 1;
+            }
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    assert!(rejected > 0, "a depth-1 queue behind a pinned worker must overflow");
+    let accepted = tickets.len();
+    for t in tickets {
+        assert!(t.wait().outcome.is_ok(), "accepted jobs must complete");
+    }
+    let m = server.drain();
+    assert_eq!(m.counter("jobs_completed") as usize, accepted);
+    assert_eq!(m.counter("jobs_rejected_queue") as usize, rejected);
+    // queue-refused jobs refunded their reservations: only completed jobs
+    // appear as spend
+    let expected_eps = 1.0 + 0.1 * (accepted - 1) as f64;
+    assert!((m.gauge("tenant_0_eps_spent").unwrap() - expected_eps).abs() < 1e-9);
+}
+
+/// Admission control runs *before* the job: a request beyond the tenant's
+/// remaining ε is denied at submit time, spends nothing, and leaves the
+/// other tenant's budget untouched.
+#[test]
+fn admission_denied_jobs_spend_zero_eps() {
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        queue_depth: 8,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: Some(1.0),
+        cache_capacity: 0,
+        store_dir: None,
+    });
+    let t1 = server.submit(cheap_lp(1, 1, 0.6)).unwrap();
+    match server.submit(cheap_lp(1, 2, 0.6)) {
+        Err(SubmitError::Budget(e)) => {
+            assert_eq!(e.tenant, 1);
+            assert!((e.requested - 0.6).abs() < 1e-12);
+            assert!((e.cap - 1.0).abs() < 1e-12);
+        }
+        other => panic!("expected a budget denial, got {other:?}"),
+    }
+    let t2 = server.submit(cheap_lp(2, 3, 0.9)).unwrap();
+    assert!(t1.wait().outcome.is_ok());
+    assert!(t2.wait().outcome.is_ok());
+
+    let spends = server.tenant_spend();
+    let m = server.drain();
+    assert_eq!(m.counter("jobs_denied_budget"), 1);
+    assert_eq!(m.counter("jobs_completed"), 2);
+    let t1 = spends.iter().find(|t| t.tenant == 1).unwrap();
+    assert!((t1.spent - 0.6).abs() < 1e-12, "denied job spent nothing");
+    assert_eq!(t1.denied_jobs, 1);
+    let t2 = spends.iter().find(|t| t.tenant == 2).unwrap();
+    assert!((t2.spent - 0.9).abs() < 1e-12, "tenant 2 unaffected");
+    assert_eq!(m.gauge("tenant_eps_cap"), Some(1.0));
+    assert_eq!(m.gauge("tenant_1_eps_spent"), Some(0.6));
+}
+
+/// The refund path: a job that fails on the worker returns its reserved ε
+/// atomically, so a subsequent job that needs the budget is admitted.
+#[test]
+fn failed_jobs_refund_their_reservation() {
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 4,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: Some(1.0),
+        cache_capacity: 0,
+        store_dir: None,
+    });
+    let bad = server.submit(invalid_release(5, 0.8)).unwrap();
+    let r = bad.wait();
+    assert!(r.outcome.is_err(), "invalid spec must fail the job");
+    assert!(
+        r.outcome.unwrap_err().to_string().contains("invalid release spec"),
+        "the executor's validation error reaches the submitter"
+    );
+    // 0.8 was refunded, so a 0.9 job fits under the 1.0 cap
+    let good = server.submit(cheap_lp(5, 2, 0.9)).unwrap();
+    assert!(good.wait().outcome.is_ok());
+
+    let spends = server.tenant_spend();
+    let m = server.drain();
+    assert_eq!(m.counter("jobs_failed"), 1);
+    assert_eq!(m.counter("jobs_refunded"), 1);
+    let t = &spends[0];
+    assert!((t.spent - 0.9).abs() < 1e-12, "only the successful job spends");
+    assert!((t.refunded - 0.8).abs() < 1e-12);
+    assert_eq!(m.gauge("tenant_5_eps_refunded"), Some(0.8));
+}
+
+/// Graceful drain: every job admitted before the drain completes even when
+/// nobody is waiting on its ticket, and the queue ends empty.
+#[test]
+fn drain_completes_all_in_flight_jobs() {
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        queue_depth: 16,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: None,
+        cache_capacity: 0,
+        store_dir: None,
+    });
+    for seed in 0..6 {
+        // drop the tickets: drain must not depend on anyone waiting
+        let _ = server.submit(cheap_lp(0, seed, 0.5)).unwrap();
+    }
+    let m = server.drain();
+    assert_eq!(m.counter("jobs_completed"), 6, "drain finishes the backlog");
+    assert_eq!(m.counter("jobs_failed"), 0);
+    assert_eq!(m.timing_summary("latency_lp").unwrap().count, 6);
+}
+
+/// Single-worker determinism against batch mode: the long-lived server and
+/// the batch coordinator run the identical spec sequence through the same
+/// executor and cache discipline, so every job's outcome is bit-identical.
+#[test]
+fn single_worker_server_matches_batch_coordinator() {
+    let specs: Vec<JobSpec> = vec![
+        JobSpec::Release(ReleaseJobSpec {
+            u: 64,
+            m: 300,
+            n: 400,
+            t: 40,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards: 1,
+            workload: 7,
+            tenant: 0,
+            seed: 100,
+        }),
+        JobSpec::Release(ReleaseJobSpec {
+            u: 64,
+            m: 300,
+            n: 400,
+            t: 40,
+            eps: 1.0,
+            delta: 1e-3,
+            index: Some(IndexKind::Hnsw),
+            shards: 1,
+            workload: 7, // repeat: second job hits the warm cache
+            tenant: 1,
+            seed: 101,
+        }),
+        cheap_lp(0, 55, 1.0),
+    ];
+
+    let server = Server::start(ServerConfig {
+        workers: 1,
+        queue_depth: 8,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: None,
+        cache_capacity: 4,
+        store_dir: None,
+    });
+    let tickets: Vec<_> =
+        specs.iter().map(|s| server.submit(s.clone()).unwrap()).collect();
+    let served: Vec<_> = tickets.into_iter().map(|t| t.wait()).collect();
+    let sm = server.drain();
+
+    let mut coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        eps_cap: None,
+        cache_capacity: 4,
+        store_dir: None,
+    });
+    for s in &specs {
+        coord.submit(s.clone()).unwrap();
+    }
+    let (batch, bm) = coord.finish();
+
+    assert_eq!(served.len(), batch.len());
+    for (s, b) in served.iter().zip(batch.iter()) {
+        assert_eq!(s.job_id, b.job_id);
+        assert_eq!(s.kind, b.kind);
+        let (so, bo) = (s.outcome.as_ref().unwrap(), b.outcome.as_ref().unwrap());
+        assert_eq!(so.quality, bo.quality, "job {}: server must match batch", s.job_id);
+        assert_eq!(so.eps_spent, bo.eps_spent);
+    }
+    // same cache behavior too: one build, one hit on the repeated workload
+    assert_eq!(sm.counter("index_cache_hit"), bm.counter("index_cache_hit"));
+    assert_eq!(sm.counter("index_cache_miss"), bm.counter("index_cache_miss"));
+    assert_eq!(sm.counter("index_cache_hit"), 1);
+}
+
+/// A mixed Release+Lp stream from concurrent tenant threads: caps are
+/// enforced independently per tenant and the drained gauges record every
+/// tenant's spend below its cap — the serve-soak job's invariant.
+#[test]
+fn concurrent_mixed_tenants_stay_within_caps() {
+    let server = Server::start(ServerConfig {
+        workers: 4,
+        queue_depth: 8,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: Some(2.0),
+        cache_capacity: 4,
+        store_dir: None,
+    });
+    std::thread::scope(|s| {
+        for tenant in 0..3u64 {
+            let server = &server;
+            s.spawn(move || {
+                let mut tickets = Vec::new();
+                // 5 × 0.5 = 2.5 asked, cap 2.0 -> exactly one denial
+                for i in 0..5u64 {
+                    let spec = if i % 2 == 0 {
+                        cheap_lp(tenant, tenant * 10 + i, 0.5)
+                    } else {
+                        JobSpec::Release(ReleaseJobSpec {
+                            u: 32,
+                            m: 40,
+                            n: 200,
+                            t: 15,
+                            eps: 0.5,
+                            delta: 1e-3,
+                            index: Some(IndexKind::Flat),
+                            shards: 1,
+                            workload: 3,
+                            tenant,
+                            seed: tenant * 10 + i,
+                        })
+                    };
+                    match server.submit(spec) {
+                        Ok(t) => tickets.push(t),
+                        Err(SubmitError::Budget(_)) => {}
+                        Err(other) => panic!("unexpected error: {other}"),
+                    }
+                }
+                assert_eq!(tickets.len(), 4, "tenant {tenant}: cap admits 4 of 5");
+                for t in tickets {
+                    assert!(t.wait().outcome.is_ok());
+                }
+            });
+        }
+    });
+    let spends = server.tenant_spend();
+    let m = server.drain();
+    assert_eq!(spends.len(), 3);
+    for t in &spends {
+        assert!((t.spent - 2.0).abs() < 1e-9, "tenant {} spent {}", t.tenant, t.spent);
+        assert_eq!(t.denied_jobs, 1);
+        assert_eq!(
+            m.gauge(&format!("tenant_{}_eps_spent", t.tenant)),
+            Some(t.spent)
+        );
+    }
+    assert_eq!(m.counter("jobs_completed"), 12);
+    assert_eq!(m.counter("jobs_denied_budget"), 3);
+}

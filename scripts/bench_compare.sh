@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Perf-regression gate, runnable locally and in CI:
+#
+#   ./scripts/bench_compare.sh                 # compare existing JSON artifacts
+#   ./scripts/bench_compare.sh --run           # regenerate them first (quick mode)
+#
+# Compares the fresh bench artifacts (BENCH_hot_paths.json +
+# BENCH_serving.json) against the committed BENCH_baseline.json and exits
+# nonzero if any tracked warm-path metric regressed beyond the tolerance.
+# The comparison itself is `repro bench-compare` (rust/src/main.rs), so the
+# gate has no dependency beyond cargo.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "${1:-}" = "--run" ]; then
+    echo "== regenerating bench artifacts (quick mode) =="
+    cargo bench --bench hot_paths -- --quick --json=BENCH_hot_paths.json
+    cargo bench --bench serving -- --quick --json=BENCH_serving.json
+fi
+
+for f in BENCH_hot_paths.json BENCH_serving.json; do
+    if [ ! -f "$f" ]; then
+        echo "missing $f — run './scripts/bench_compare.sh --run' to generate it" >&2
+        exit 1
+    fi
+done
+
+echo "== perf-regression gate: fresh benches vs BENCH_baseline.json =="
+cargo run --release --quiet -- bench-compare \
+    --baseline=BENCH_baseline.json \
+    --fresh=BENCH_hot_paths.json,BENCH_serving.json

@@ -16,11 +16,22 @@
 #      fail fast. The crate carries #![warn(missing_docs)]; new public API
 #      without docs shows up as warnings in steps 1-2.
 #
-# Steps 3-4 need the rustfmt/clippy components; minimal toolchains without
-# them get a loud skip (CI always installs both, so the gate is enforced
-# where it matters).
+# Steps 3-4 need the rustfmt/clippy components; minimal local toolchains
+# without them get a loud skip. In CI (CI=true) a missing component is a
+# hard failure instead — otherwise the gate could go green without ever
+# linting, and the skip would hide it.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# A lint step whose tool is missing is a skip locally, a failure in CI.
+missing_component() {
+    local name="$1"
+    if [ "${CI:-}" = "true" ]; then
+        echo "== FAIL: $name component not installed, but CI=true requires it =="
+        exit 1
+    fi
+    echo "== SKIP $name (component not installed) =="
+}
 
 echo "== cargo build --release =="
 cargo build --release
@@ -32,14 +43,14 @@ if cargo fmt --version >/dev/null 2>&1; then
     echo "== cargo fmt --check =="
     cargo fmt --all -- --check
 else
-    echo "== SKIP cargo fmt --check (rustfmt component not installed) =="
+    missing_component "cargo fmt (rustfmt)"
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then
     echo "== cargo clippy --all-targets (-D warnings) =="
     cargo clippy --all-targets -- -D warnings
 else
-    echo "== SKIP cargo clippy (clippy component not installed) =="
+    missing_component "cargo clippy"
 fi
 
 echo "== cargo test -q =="

@@ -1,0 +1,54 @@
+#!/usr/bin/env bash
+# Serve-soak: run the long-lived serving runtime (DESIGN.md §8) with ≥ 4
+# workers and mixed Release+Lp tenants for a fixed job count, then assert
+# from the emitted metrics JSON that
+#   1. the drain was clean (process exited 0, all admitted jobs completed,
+#      none failed), and
+#   2. no tenant's spent ε exceeds the per-tenant cap.
+# The same check runs in CI (.github/workflows/ci.yml, serve-soak job).
+#
+#   ./scripts/serve_soak.sh [JOBS] [WORKERS] [TENANTS] [EPS_PER_TENANT]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+JOBS="${1:-30}"
+WORKERS="${2:-4}"
+TENANTS="${3:-3}"
+EPS_CAP="${4:-6.0}"
+OUT="${SOAK_METRICS_OUT:-soak_metrics.json}"
+
+# `timeout` bounds the run so a drain deadlock fails the gate instead of
+# hanging it.
+timeout 900 cargo run --release -- serve --daemon \
+    "--jobs=$JOBS" "--workers=$WORKERS" "--tenants=$TENANTS" \
+    "--eps-per-tenant=$EPS_CAP" --queue-depth=8 --policy=block \
+    "--metrics-out=$OUT"
+
+python3 - "$OUT" "$EPS_CAP" <<'EOF'
+import json, sys
+
+metrics = json.load(open(sys.argv[1]))
+cap = float(sys.argv[2])
+counters = metrics["counters"]
+gauges = metrics["gauges"]
+
+assert counters.get("jobs_failed", 0) == 0, f"failed jobs: {counters}"
+assert counters["jobs_completed"] == counters["jobs_admitted"], (
+    "clean drain must complete every admitted job: " f"{counters}"
+)
+assert gauges["tenant_eps_cap"] == cap
+
+spent = {k: v for k, v in gauges.items()
+         if k.startswith("tenant_") and k.endswith("_eps_spent")}
+assert len(spent) >= 2, f"expected multiple tenants, got {spent}"
+over = {k: v for k, v in spent.items() if v > cap + 1e-9}
+assert not over, f"tenants over their cap: {over}"
+
+timings = metrics["timings"]
+assert "latency_release" in timings and "latency_lp" in timings, (
+    "soak must exercise both job kinds: " f"{sorted(timings)}"
+)
+print(f"soak OK: {counters['jobs_completed']} jobs completed, "
+      f"{counters.get('jobs_denied_budget', 0)} denied at admission, "
+      f"{len(spent)} tenants all within cap {cap}")
+EOF
