@@ -145,14 +145,15 @@ fn main() {
         })
     };
     let t0 = Instant::now();
-    let (_, first) = execute_with_cache(&release(1), Some(&cache)).expect("cold job");
+    let (_, first) = execute_with_cache(&release(1), Some(&cache), None).expect("cold job");
     let cold_job = t0.elapsed();
     assert_eq!((first.hits, first.misses), (0, 1), "first job on a workload must miss");
 
     let warm_jobs: u64 = if quick { 3 } else { 5 };
     let t1 = Instant::now();
     for s in 0..warm_jobs {
-        let (_, rep) = execute_with_cache(&release(2 + s), Some(&cache)).expect("warm job");
+        let (_, rep) =
+            execute_with_cache(&release(2 + s), Some(&cache), None).expect("warm job");
         assert_eq!(rep.hits, 1, "repeat jobs must hit the cache");
     }
     let warm_job = t1.elapsed() / warm_jobs as u32;
@@ -216,6 +217,52 @@ fn main() {
         );
     }
     let _ = std::fs::remove_dir_all(&store_dir);
+
+    // ---------------- dynamic workloads (DESIGN.md §9) ----------------
+    // The incremental-maintenance axis: evolving 1% of an indexed workload
+    // must be far cheaper than rebuilding the index from scratch — that is
+    // the entire point of the patch seam. The perf gate tracks the
+    // machine-independent ratio `dynamic.patch_over_rebuild` (lower is
+    // better; the acceptance bar is ≤ 0.2, i.e. ≥ 5× faster).
+    header(&format!("dynamic workloads: patch 1% of rows vs full rebuild (m={m}, hnsw)"));
+    let touched = (m / 100).max(2); // 1% of rows
+    let ins_rows = touched / 2;
+    let mut drng = Rng::new(77);
+    let inserted = binary_queries(&mut drng, ins_rows, u).vectors().clone();
+    let mut tomb = fast_mwem::sampling::sample_distinct(&mut drng, m, touched - ins_rows);
+    tomb.sort_unstable();
+    let delta = fast_mwem::mips::WorkloadDelta::new(
+        inserted,
+        tomb.into_iter().map(|i| i as u32).collect(),
+    );
+    let t0 = Instant::now();
+    let patched = hnsw.patch(&delta, 99).expect("1% delta applies");
+    let patch_time = t0.elapsed();
+    assert!(!patched.rebuilt, "a 1% delta must patch incrementally, not rebuild");
+
+    let effective = fast_mwem::mips::apply_delta_to_vectors(q.vectors(), &delta)
+        .expect("delta materializes");
+    let t1 = Instant::now();
+    let rebuilt = build_index(IndexKind::Hnsw, effective, 99);
+    let rebuild_time = t1.elapsed();
+    assert_eq!(patched.index.len(), rebuilt.len());
+
+    let patch_over_rebuild =
+        patch_time.as_secs_f64() / rebuild_time.as_secs_f64().max(1e-12);
+    println!("  incremental patch ({touched} rows): {}", fmt_dur(patch_time));
+    println!(
+        "  full rebuild (m={}):            {}  (patch is {:.1}x faster)",
+        patched.index.len(),
+        fmt_dur(rebuild_time),
+        1.0 / patch_over_rebuild.max(1e-12),
+    );
+    if !quick {
+        assert!(
+            patch_over_rebuild < 0.2,
+            "patching 1% of rows must beat a full rebuild by >= 5x \
+             (ratio {patch_over_rebuild:.3})"
+        );
+    }
 
     // ---------------- MWU update ----------------
     header("MWU update (U=3000)");
@@ -289,6 +336,17 @@ fn main() {
         );
         store_obj.insert("artifact_bytes".to_string(), Json::Num(artifact_bytes as f64));
 
+        // the dynamic-workload ratio the perf gate tracks: patch / rebuild
+        // (< 1 means incremental maintenance pays off; -> 1 means patches
+        // stopped beating rebuilds)
+        let mut dynamic_obj = BTreeMap::new();
+        dynamic_obj.insert("patch_ns".to_string(), Json::Num(patch_time.as_nanos() as f64));
+        dynamic_obj
+            .insert("rebuild_ns".to_string(), Json::Num(rebuild_time.as_nanos() as f64));
+        dynamic_obj
+            .insert("patch_over_rebuild".to_string(), Json::Num(patch_over_rebuild));
+        dynamic_obj.insert("rows_patched".to_string(), Json::Num(touched as f64));
+
         let mut obj = BTreeMap::new();
         obj.insert("bench".to_string(), Json::Str("hot_paths".to_string()));
         obj.insert("quick".to_string(), Json::Bool(quick));
@@ -297,6 +355,7 @@ fn main() {
         obj.insert("cases".to_string(), Json::Obj(cases));
         obj.insert("index_cache".to_string(), Json::Obj(cache_obj));
         obj.insert("store".to_string(), Json::Obj(store_obj));
+        obj.insert("dynamic".to_string(), Json::Obj(dynamic_obj));
         std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
         println!("\nwrote {path}");
     }

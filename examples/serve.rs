@@ -1,28 +1,44 @@
-//! Serving-runtime demo (DESIGN.md §8): a long-lived server with a bounded
-//! MPMC queue, persistent workers over the warm-index cache, and
+//! Serving-runtime demo (DESIGN.md §8 + §9): a long-lived server with a
+//! bounded MPMC queue, persistent workers over the warm-index cache, and
 //! per-tenant privacy-budget admission — every job reserves its ε against
 //! its tenant's cap *before* running, denied jobs spend nothing, failures
 //! refund. Two tenant threads submit mixed Release+Lp traffic
-//! concurrently; the graceful drain reports per-kind latency p50/p95/p99
-//! and each tenant's spend.
+//! concurrently; tenant 0 additionally evolves workload 0 mid-stream with
+//! a zero-ε `WorkloadUpdate`, so later releases answer the patched
+//! generation (watch the `index_cache_patched` counter). The graceful
+//! drain reports per-kind latency p50/p95/p99 and each tenant's spend.
 //!
 //! Run:  cargo run --release --example serve
 //!
 //! Pass a directory to persist built indices (DESIGN.md §7) and run the
 //! example twice — the second run restores every index from disk instead
-//! of rebuilding (watch the `store_hit` counter):
+//! of rebuilding (watch the `store_hit` counter); the persisted delta
+//! artifacts restore the workload generations too:
 //!
 //!   cargo run --release --example serve -- /tmp/fastmwem-store
 //!   cargo run --release --example serve -- /tmp/fastmwem-store
 
-use fast_mwem::coordinator::{JobSpec, LpJobSpec, ReleaseJobSpec};
+use fast_mwem::coordinator::{JobSpec, LpJobSpec, ReleaseJobSpec, WorkloadUpdateSpec};
 use fast_mwem::lp::SelectionMode;
 use fast_mwem::mips::IndexKind;
 use fast_mwem::server::{QueuePolicy, Server, ServerConfig, SubmitError};
 
 /// One tenant's mixed request stream: repeated-workload releases (warm
-/// after the first build) interleaved with LP solves.
+/// after the first build) interleaved with LP solves; tenant 0's fourth
+/// slot evolves workload 0 in place — a dynamic-workload update riding the
+/// same queue as the release traffic.
 fn spec_for(tenant: u64, i: u64) -> JobSpec {
+    if tenant == 0 && i == 3 {
+        return JobSpec::Update(WorkloadUpdateSpec {
+            workload: 0,
+            u: 512,
+            m: 800,
+            n: 500,
+            insert: 8,    // analysts added a handful of queries...
+            tombstone: 4, // ...and retired a few others
+            tenant,
+        });
+    }
     if i % 3 == 2 {
         JobSpec::Lp(LpJobSpec {
             m: 4_000,
@@ -122,17 +138,21 @@ fn main() {
         }
     }
     println!(
-        "index cache: {} hits / {} misses, ~{}ms of index builds skipped",
+        "index cache: {} hits / {} misses, {} patched forward across generations, \
+         ~{}ms of index builds skipped",
         metrics.counter("index_cache_hit"),
         metrics.counter("index_cache_miss"),
+        metrics.counter("index_cache_patched"),
         metrics.counter("index_build_saved_ms"),
     );
     if metrics.gauge("store_artifacts").is_some() {
         println!(
-            "artifact store: {} restored from disk, {} built cold, {} artifacts persisted",
+            "artifact store: {} restored from disk, {} built cold, {} artifacts + {} \
+             workload deltas persisted",
             metrics.counter("store_hit"),
             metrics.counter("store_miss"),
             metrics.gauge("store_artifacts").unwrap_or(0.0),
+            metrics.gauge("store_deltas").unwrap_or(0.0),
         );
     }
     println!("metrics: {}", metrics.to_json());

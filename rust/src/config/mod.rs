@@ -232,6 +232,52 @@ impl StoreConfig {
     }
 }
 
+/// Typed view of the `[dynamic]` section (DESIGN.md §9): how evolving
+/// workloads are exercised — the size of each synthesized update and, in
+/// daemon mode, how often tenants submit one.
+///
+/// ```text
+/// [dynamic]
+/// update_every = 0   # daemon: one WorkloadUpdate every N jobs per tenant (0 = off)
+/// insert = 4         # rows appended per update
+/// tombstone = 2      # rows retired per update
+/// ```
+///
+/// The CLI also accepts `--update-every=N`, `--update-insert=N` and
+/// `--update-tombstone=N` as shorthands (shorthands win over section
+/// values). The deltas/snapshot compaction cadence is fixed at
+/// [`crate::store::tiered::COMPACT_EVERY`] generations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DynamicConfig {
+    /// In `serve --daemon`, submit one `WorkloadUpdate` every N jobs per
+    /// tenant (0 disables updates — every workload stays static).
+    pub update_every: usize,
+    /// Rows appended by each synthesized update.
+    pub insert: usize,
+    /// Live rows retired by each synthesized update.
+    pub tombstone: usize,
+}
+
+impl Default for DynamicConfig {
+    fn default() -> Self {
+        DynamicConfig { update_every: 0, insert: 4, tombstone: 2 }
+    }
+}
+
+impl DynamicConfig {
+    /// Read the `[dynamic]` section, honoring the `--update-*` shorthands.
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = DynamicConfig::default();
+        Ok(DynamicConfig {
+            update_every: cfg
+                .or("update-every", cfg.or("dynamic.update_every", d.update_every)?)?,
+            insert: cfg.or("update-insert", cfg.or("dynamic.insert", d.insert)?)?,
+            tombstone: cfg
+                .or("update-tombstone", cfg.or("dynamic.tombstone", d.tombstone)?)?,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -322,6 +368,25 @@ mod tests {
             StoreConfig::from_config(&c).unwrap().dir.as_deref(),
             Some("/tmp/other")
         );
+    }
+
+    #[test]
+    fn dynamic_section_parses_with_defaults_and_shorthand() {
+        // defaults when nothing is set
+        let c = Config::new();
+        assert_eq!(DynamicConfig::from_config(&c).unwrap(), DynamicConfig::default());
+
+        // full section
+        let c = Config::parse("[dynamic]\nupdate_every = 6\ninsert = 8\ntombstone = 3\n")
+            .unwrap();
+        let d = DynamicConfig::from_config(&c).unwrap();
+        assert_eq!(d, DynamicConfig { update_every: 6, insert: 8, tombstone: 3 });
+
+        // shorthands beat the section values
+        let mut c = Config::parse("[dynamic]\nupdate_every = 6\n").unwrap();
+        c.apply_overrides(["--update-every=2", "--update-insert=1"]).unwrap();
+        let d = DynamicConfig::from_config(&c).unwrap();
+        assert_eq!((d.update_every, d.insert, d.tombstone), (2, 1, 2));
     }
 
     #[test]

@@ -55,21 +55,29 @@ pub fn fingerprint_vectors(vs: &VectorSet) -> u128 {
 }
 
 /// Cache key: which pre-built index can serve a job. Two jobs share an
-/// entry iff they answer the same query set (by content fingerprint) with
-/// the same index implementation at the same shard count.
+/// entry iff they answer the same query set (by content fingerprint *and*
+/// generation) with the same index implementation at the same shard count.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct WorkloadKey {
-    /// [`fingerprint_vectors`] of the indexed query matrix.
+    /// [`fingerprint_vectors`] of the *base* (generation-0) query matrix.
+    /// Generations of one evolving workload share this fingerprint — it is
+    /// the family identity the stale-but-patchable lookup matches on.
     pub fingerprint: u128,
     /// Which index implementation backs the entry.
     pub kind: IndexKind,
     /// Shard count (1 = monolithic index; ≥ 2 = a [`ShardSet`]).
     pub shards: usize,
+    /// Monotonically increasing workload generation (DESIGN.md §9): 0 for
+    /// a static workload, bumped by every `WorkloadUpdate`. An entry at an
+    /// older generation of the same family is *stale-but-patchable* —
+    /// the cache applies the missing deltas and promotes rather than
+    /// serving it — never a hit.
+    pub generation: u64,
 }
 
 impl WorkloadKey {
-    /// Key for an index of `kind` over `vs` split into `shards` shards.
-    /// `shards` is clamped to `[1, m]` exactly like
+    /// Key for a generation-0 index of `kind` over `vs` split into
+    /// `shards` shards. `shards` is clamped to `[1, m]` exactly like
     /// [`ShardSet::build`] clamps it, so over-asked shard counts that
     /// would build identical sets also share one cache entry.
     pub fn for_vectors(vs: &VectorSet, kind: IndexKind, shards: usize) -> Self {
@@ -77,7 +85,22 @@ impl WorkloadKey {
             fingerprint: fingerprint_vectors(vs),
             kind,
             shards: shards.clamp(1, vs.len().max(1)),
+            generation: 0,
         }
+    }
+
+    /// The same key at workload generation `g`.
+    pub fn at_generation(mut self, g: u64) -> Self {
+        self.generation = g;
+        self
+    }
+
+    /// True when `other` indexes a different generation of the same
+    /// workload family (same fingerprint, kind and shard count).
+    pub fn same_family(&self, other: &WorkloadKey) -> bool {
+        self.fingerprint == other.fingerprint
+            && self.kind == other.kind
+            && self.shards == other.shards
     }
 }
 
@@ -89,6 +112,34 @@ pub enum CachedIndex {
     Mono(Arc<dyn MipsIndex>),
     /// A sharded index set (`shards ≥ 2` keys).
     Sharded(Arc<ShardSet>),
+}
+
+impl CachedIndex {
+    /// Live (selectable) candidates of the underlying index.
+    pub fn live_len(&self) -> usize {
+        match self {
+            CachedIndex::Mono(i) => i.len(),
+            CachedIndex::Sharded(s) => s.len(),
+        }
+    }
+
+    /// Apply one workload delta, dispatching to the mono or sharded patch
+    /// seam (DESIGN.md §9). Returns the patched entry and whether an
+    /// amortized full rebuild ran instead of an incremental patch.
+    pub fn patch(
+        &self,
+        delta: &crate::mips::WorkloadDelta,
+        seed: u64,
+    ) -> Result<(CachedIndex, bool), crate::mips::PatchError> {
+        match self {
+            CachedIndex::Mono(i) => {
+                i.patch(delta, seed).map(|p| (CachedIndex::Mono(p.index), p.rebuilt))
+            }
+            CachedIndex::Sharded(s) => s
+                .patch(delta, seed)
+                .map(|(set, rebuilt)| (CachedIndex::Sharded(Arc::new(set)), rebuilt)),
+        }
+    }
 }
 
 /// What one cache consultation did — returned by
@@ -119,11 +170,21 @@ pub struct CacheReport {
     /// Consultations that missed L1 but were restored (promoted) from the
     /// persistent store tier instead of rebuilt.
     pub l2_hits: u64,
+    /// Consultations served by patching a stale-but-patchable entry (an
+    /// older generation of the workload, from either tier) forward instead
+    /// of rebuilding — the dynamic-workload fast path (DESIGN.md §9).
+    /// Every patched consultation is also counted in `hits` (patched in
+    /// memory) or `l2_hits` (patched during a store promotion).
+    pub patched: u64,
     /// Total build time skipped thanks to hits in either tier.
     pub saved: Duration,
     /// Total wall-clock spent decoding store artifacts on promotions —
     /// the price paid in place of the skipped builds.
     pub promoted: Duration,
+    /// Total wall-clock spent applying workload deltas on patched serves
+    /// (DESIGN.md §9) — kept separate from `promoted` so the store's
+    /// decode metric is never inflated by in-memory patch work.
+    pub patch_time: Duration,
 }
 
 impl CacheReport {
@@ -147,6 +208,8 @@ impl CacheReport {
     pub fn record_into(&self, m: &mut crate::metrics::Metrics, store_attached: bool) {
         m.inc("index_cache_hit", self.hits);
         m.inc("index_cache_miss", self.misses + self.l2_hits);
+        m.inc("index_cache_patched", self.patched);
+        m.inc("index_patch_us", self.patch_time.as_micros() as u64);
         m.inc("index_build_saved_us", self.saved.as_micros() as u64);
         if store_attached {
             m.inc("store_hit", self.l2_hits);
@@ -296,6 +359,28 @@ impl IndexCache {
         }
     }
 
+    /// Stale-but-patchable lookup (DESIGN.md §9): the resident entry of
+    /// `key`'s workload family at the *highest generation strictly below*
+    /// `key.generation`, if any. The caller patches it forward with the
+    /// missing deltas and promotes the result under `key` — a stale entry
+    /// is never handed out as a hit, and this scan leaves the hit/miss
+    /// counters and LRU order untouched (the exact-key [`IndexCache::lookup`]
+    /// that preceded it already metered the miss).
+    pub fn lookup_patchable(&self, key: &WorkloadKey) -> Option<(WorkloadKey, CachedIndex, Duration)> {
+        let g = self.inner.lock().unwrap();
+        g.entries
+            .iter()
+            .filter(|(k, _)| k.same_family(key) && k.generation < key.generation)
+            .max_by_key(|(k, _)| k.generation)
+            .map(|(k, e)| (*k, e.value.clone(), e.build_time))
+    }
+
+    /// Drop an entry (a stale generation superseded by a patched promote).
+    /// Returns true when something was removed.
+    pub fn remove(&self, key: &WorkloadKey) -> bool {
+        self.inner.lock().unwrap().entries.remove(key).is_some()
+    }
+
     /// Insert an entry built at cost `build_time`, evicting least-recently
     /// used entries while over capacity. A no-op when capacity is 0.
     pub fn insert(&self, key: WorkloadKey, value: CachedIndex, build_time: Duration) {
@@ -359,7 +444,7 @@ mod tests {
     }
 
     fn key(fp: u128) -> WorkloadKey {
-        WorkloadKey { fingerprint: fp, kind: IndexKind::Flat, shards: 1 }
+        WorkloadKey { fingerprint: fp, kind: IndexKind::Flat, shards: 1, generation: 0 }
     }
 
     #[test]
@@ -385,6 +470,11 @@ mod tests {
         let base = WorkloadKey::for_vectors(&v, IndexKind::Flat, 1);
         assert_ne!(base, WorkloadKey::for_vectors(&v, IndexKind::Hnsw, 1));
         assert_ne!(base, WorkloadKey::for_vectors(&v, IndexKind::Flat, 4));
+        // a later generation is a different key of the same family
+        let gen1 = base.at_generation(1);
+        assert_ne!(base, gen1);
+        assert!(base.same_family(&gen1));
+        assert!(!gen1.same_family(&WorkloadKey::for_vectors(&v, IndexKind::Hnsw, 1)));
         // shards clamp to [1, m] — the same clamp ShardSet::build applies,
         // so interchangeable builds share one key
         assert_eq!(base, WorkloadKey::for_vectors(&v, IndexKind::Flat, 0));
@@ -465,6 +555,36 @@ mod tests {
         assert_eq!(builds.get(), 3, "a disabled cache builds every time");
         assert!(cache.is_empty());
         assert_eq!(cache.stats().misses, 3);
+    }
+
+    /// Generation-aware lookup: an exact key never matches an older
+    /// generation; `lookup_patchable` finds the newest older entry of the
+    /// family; `remove` drops a superseded stale entry.
+    #[test]
+    fn stale_generations_are_patchable_never_hits() {
+        let cache = IndexCache::new(4);
+        let v = vs(6, 3, 5.0);
+        let k0 = key(21);
+        let k2 = k0.at_generation(2);
+        let k5 = k0.at_generation(5);
+        cache.insert(k0, mono(&v), Duration::from_millis(3));
+        cache.insert(k2, mono(&v), Duration::from_millis(4));
+
+        // exact lookup at generation 5 misses — stale entries never hit
+        assert!(cache.lookup(&k5).is_none());
+        // ...but the newest older family member is patchable
+        let (stale_key, _, build) = cache.lookup_patchable(&k5).unwrap();
+        assert_eq!(stale_key, k2, "highest generation below the request wins");
+        assert_eq!(build, Duration::from_millis(4));
+        // a different family is never offered
+        assert!(cache.lookup_patchable(&key(99).at_generation(5)).is_none());
+        // generation 0 has nothing below it
+        assert!(cache.lookup_patchable(&k0).is_none());
+
+        assert!(cache.remove(&k2));
+        assert!(!cache.remove(&k2), "second remove is a no-op");
+        let (stale_key, _, _) = cache.lookup_patchable(&k5).unwrap();
+        assert_eq!(stale_key, k0, "next-oldest family member steps up");
     }
 
     #[test]

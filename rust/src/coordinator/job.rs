@@ -5,14 +5,14 @@
 //! the tiered cache: in-memory LRU over the persistent artifact store,
 //! DESIGN.md §6–§7).
 
-use super::cache::{CacheReport, CachedIndex, WorkloadKey};
+use super::cache::{fingerprint_vectors, CacheReport, CachedIndex, WorkloadKey};
 use crate::lazy::{LazySample, ShardSet, ShardedLazyEm};
 use crate::store::{TieredEvent, TieredIndexCache};
 use crate::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use crate::mips::{build_index, IndexKind};
 use crate::mwem::{FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet};
 use crate::util::rng::Rng;
-use crate::workloads::{self, LpInstance};
+use crate::workloads::{self, LpInstance, WorkloadRegistry};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -99,6 +99,35 @@ pub struct LpJobSpec {
     pub seed: u64,
 }
 
+/// Dynamic-workload update job (DESIGN.md §9): append/retire query rows of
+/// an evolving workload. Updates touch only *public* workload structure
+/// (the query matrix — never the histogram, iterates or mechanism
+/// randomness), so they are data-independent and spend **zero ε**; they
+/// still ride the serving queue like any other job so ordering, admission
+/// accounting and drain semantics hold.
+#[derive(Clone, Debug)]
+pub struct WorkloadUpdateSpec {
+    /// Workload id whose query set evolves — the same synthesis seed
+    /// release jobs carry, so the update and the releases agree on the
+    /// base (generation-0) content.
+    pub workload: u64,
+    /// Domain size U of the base workload (row dimension).
+    pub u: usize,
+    /// Base query count m (generation-0 shape).
+    pub m: usize,
+    /// Dataset size n of the base workload (the base synthesis consumes
+    /// histogram randomness before query randomness, so the update must
+    /// reproduce both to fingerprint the family).
+    pub n: usize,
+    /// Rows to append (synthesized deterministically per generation).
+    pub insert: usize,
+    /// Live rows to retire (clamped so at least one row survives).
+    pub tombstone: usize,
+    /// Submitting tenant — updates are admission-checked like any job but
+    /// reserve ε = 0.
+    pub tenant: u64,
+}
+
 /// A unit of work accepted by the [`super::Coordinator`].
 #[derive(Clone, Debug)]
 pub enum JobSpec {
@@ -106,6 +135,9 @@ pub enum JobSpec {
     Release(ReleaseJobSpec),
     /// Scalar-private LP feasibility solve.
     Lp(LpJobSpec),
+    /// Dynamic-workload update: evolve a workload's query set in place
+    /// (zero-ε, data-independent — DESIGN.md §9).
+    Update(WorkloadUpdateSpec),
 }
 
 impl JobSpec {
@@ -114,14 +146,17 @@ impl JobSpec {
         match self {
             JobSpec::Release(_) => "release",
             JobSpec::Lp(_) => "lp",
+            JobSpec::Update(_) => "update",
         }
     }
 
-    /// Nominal privacy budget ε this job charges at admission.
+    /// Nominal privacy budget ε this job charges at admission. Workload
+    /// updates are data-independent and charge zero.
     pub fn eps(&self) -> f64 {
         match self {
             JobSpec::Release(r) => r.eps,
             JobSpec::Lp(l) => l.eps,
+            JobSpec::Update(_) => 0.0,
         }
     }
 
@@ -130,6 +165,7 @@ impl JobSpec {
         match self {
             JobSpec::Release(r) => r.tenant,
             JobSpec::Lp(l) => l.tenant,
+            JobSpec::Update(u) => u.tenant,
         }
     }
 }
@@ -160,11 +196,11 @@ pub struct JobResult {
     pub outcome: anyhow::Result<JobOutcome>,
 }
 
-/// Execute a job cold (no index reuse). Equivalent to
-/// [`execute_with_cache`] with no cache; kept as the simple entry point
-/// for one-shot callers.
+/// Execute a job cold (no index reuse, no dynamic-workload state).
+/// Equivalent to [`execute_with_cache`] with no cache and no registry;
+/// kept as the simple entry point for one-shot callers.
 pub fn execute(spec: &JobSpec) -> anyhow::Result<JobOutcome> {
-    execute_with_cache(spec, None).map(|(outcome, _)| outcome)
+    execute_with_cache(spec, None, None).map(|(outcome, _)| outcome)
 }
 
 /// Reject structurally invalid specs with a clean `Err` instead of letting
@@ -208,6 +244,16 @@ fn validate(spec: &JobSpec) -> anyhow::Result<()> {
             l.delta,
             l.delta_inf
         ),
+        JobSpec::Update(u) => anyhow::ensure!(
+            u.u > 0 && u.m > 0 && u.n > 0 && (u.insert > 0 || u.tombstone > 0),
+            "invalid update spec: u={} m={} n={} insert={} tombstone={} \
+             (base shape must be positive and the update must change something)",
+            u.u,
+            u.m,
+            u.n,
+            u.insert,
+            u.tombstone
+        ),
     }
     Ok(())
 }
@@ -220,9 +266,17 @@ fn validate(spec: &JobSpec) -> anyhow::Result<()> {
 /// both tiers for subsequent jobs. Workloads are synthesized from the
 /// spec's `workload` seed — a stand-in for loading a caller-provided
 /// dataset.
+///
+/// With a [`WorkloadRegistry`] attached the workload may be *dynamic*
+/// (DESIGN.md §9): release jobs answer the family's current generation —
+/// the effective query set is the base plus the replayed delta chain, the
+/// cache key carries the generation, and stale cached generations are
+/// patched forward rather than rebuilt (and never served). `Update` jobs
+/// require the registry and error cleanly without one.
 pub fn execute_with_cache(
     spec: &JobSpec,
     cache: Option<&TieredIndexCache>,
+    registry: Option<&WorkloadRegistry>,
 ) -> anyhow::Result<(JobOutcome, CacheReport)> {
     validate(spec)?;
     let mut report = CacheReport::default();
@@ -230,7 +284,26 @@ pub fn execute_with_cache(
         JobSpec::Release(r) => {
             let mut rng = Rng::new(r.workload);
             let h: Histogram = workloads::gaussian_histogram(&mut rng, r.u, r.n);
-            let q: QuerySet = workloads::binary_queries(&mut rng, r.m, r.u);
+            let base_q: QuerySet = workloads::binary_queries(&mut rng, r.m, r.u);
+            // Resolve the family's current generation and materialize the
+            // effective query set. Static serving (no registry) stays on
+            // the generation-0 fast path with zero extra work.
+            let (generation, family_fp, q) = match registry {
+                Some(reg) => {
+                    let fp = match cache {
+                        Some(c) => c.fingerprint_for(r.workload, base_q.vectors()),
+                        None => fingerprint_vectors(base_q.vectors()),
+                    };
+                    reg.ensure_base(fp, r.m);
+                    if reg.generation(fp) == 0 {
+                        (0, Some(fp), base_q)
+                    } else {
+                        let (g, vs) = reg.effective_vectors(fp, base_q.vectors())?;
+                        (g, Some(fp), QuerySet::new(vs))
+                    }
+                }
+                None => (0, None, base_q),
+            };
             let cfg = MwemConfig::paper(r.t, r.u, r.eps, r.delta, r.seed ^ 0xC0FFEE);
             let (result, work) = match r.index {
                 None => {
@@ -243,11 +316,14 @@ pub fn execute_with_cache(
                     // One build closure serves both the cached and the
                     // uncached path. Builds are seeded from the *workload*
                     // (not the per-job mechanism seed) and `shards` is
-                    // clamped exactly like the key and ShardSet::build
-                    // clamp it, so every job on a workload uses the
-                    // identical index and enabling the cache never changes
-                    // a job's output.
-                    let shards = r.shards.clamp(1, q.vectors().len().max(1));
+                    // clamped against the BASE row count — the clamp must
+                    // be generation-independent because `key.shards` is
+                    // part of the family identity: if it drifted with the
+                    // effective row count, stale-but-patchable lookups
+                    // would never match across generations. A fresh
+                    // `ShardSet::build` re-clamps internally if the
+                    // effective set shrank below the shard count.
+                    let shards = r.shards.clamp(1, r.m.max(1));
                     let build_seed = r.workload ^ 0x5EED;
                     let build = || {
                         let t0 = Instant::now();
@@ -270,13 +346,27 @@ pub fn execute_with_cache(
                     let (cached, ev) = match cache {
                         Some(c) => {
                             // memoized per workload id: the content scan
-                            // runs once per workload, not once per job
+                            // runs once per workload, not once per job.
+                            // The fingerprint is always the *base*
+                            // content's — the family identity — while the
+                            // generation distinguishes the evolved states.
                             let key = WorkloadKey {
-                                fingerprint: c.fingerprint_for(r.workload, q.vectors()),
+                                fingerprint: match family_fp {
+                                    Some(fp) => fp,
+                                    None => c.fingerprint_for(r.workload, q.vectors()),
+                                },
                                 kind,
                                 shards,
+                                generation,
                             };
-                            let (cached, ev) = c.get_or_build(key, build);
+                            let (cached, ev) = c.get_or_build_dynamic(
+                                key,
+                                |from| {
+                                    registry
+                                        .and_then(|reg| reg.deltas(key.fingerprint, from, generation))
+                                },
+                                build,
+                            );
                             ev.fold_into(&mut report);
                             (cached, ev)
                         }
@@ -340,6 +430,52 @@ pub fn execute_with_cache(
                     delta_spent: l.delta,
                     avg_select_work: res.avg_select_work,
                     total_time: res.total_time,
+                },
+                report,
+            ))
+        }
+        JobSpec::Update(u) => {
+            let reg = registry.ok_or_else(|| {
+                anyhow::anyhow!(
+                    "WorkloadUpdate requires a dynamic-workload registry — \
+                     submit updates through a coordinator or serving runtime"
+                )
+            })?;
+            let t0 = Instant::now();
+            // Reproduce the base synthesis (histogram randomness is drawn
+            // before query randomness, so both must be consumed) to derive
+            // the family fingerprint the release jobs will use.
+            let mut rng = Rng::new(u.workload);
+            let _h: Histogram = workloads::gaussian_histogram(&mut rng, u.u, u.n);
+            let base_q: QuerySet = workloads::binary_queries(&mut rng, u.m, u.u);
+            let fp = match cache {
+                Some(c) => c.fingerprint_for(u.workload, base_q.vectors()),
+                None => fingerprint_vectors(base_q.vectors()),
+            };
+            reg.ensure_base(fp, u.m);
+            let (generation, delta) =
+                reg.append_synthesized(fp, u.u, u.insert, u.tombstone)?;
+            // Persist the compact delta artifact so the new generation
+            // survives restarts; stale cached indices are patched forward
+            // lazily on their next lookup (never served stale — the
+            // generation in the cache key guarantees it).
+            if let Some(store) = cache.and_then(|c| c.store()) {
+                if let Err(e) = store.save_delta(fp, generation, &delta) {
+                    eprintln!(
+                        "warning: could not persist workload delta g{generation} \
+                         ({e:#}); the update is in-memory only"
+                    );
+                }
+            }
+            Ok((
+                JobOutcome {
+                    // updates are data-independent bookkeeping: no release
+                    // quality to report, zero privacy spend
+                    quality: 0.0,
+                    eps_spent: 0.0,
+                    delta_spent: 0.0,
+                    avg_select_work: delta.rows_touched() as f64,
+                    total_time: t0.elapsed(),
                 },
                 report,
             ))
@@ -412,12 +548,70 @@ mod tests {
                 seed,
             })
         };
-        let (out1, rep1) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
-        let (out2, rep2) = execute_with_cache(&spec(2), Some(&cache)).unwrap();
+        let (out1, rep1) = execute_with_cache(&spec(1), Some(&cache), None).unwrap();
+        let (out2, rep2) = execute_with_cache(&spec(2), Some(&cache), None).unwrap();
         assert_eq!((rep1.hits, rep1.misses), (0, 1));
         assert_eq!((rep2.hits, rep2.misses), (1, 0));
         assert_eq!(cache.l1().len(), 1, "one workload -> one resident entry");
         assert!(out1.quality.is_finite() && out2.quality.is_finite());
+    }
+
+    /// The dynamic-workload flow end to end at the job layer: an update
+    /// bumps the generation, the next release job answers the evolved
+    /// query set by *patching* the cached index (no rebuild), and a job on
+    /// the old generation is never served.
+    #[test]
+    fn update_job_evolves_the_workload_and_patches_the_cache() {
+        let cache = TieredIndexCache::memory_only(4);
+        let registry = WorkloadRegistry::new();
+        let release = |seed: u64| {
+            JobSpec::Release(ReleaseJobSpec {
+                u: 32,
+                m: 40,
+                n: 200,
+                t: 15,
+                eps: 1.0,
+                delta: 1e-3,
+                index: Some(IndexKind::Flat),
+                shards: 1,
+                workload: 9,
+                tenant: 0,
+                seed,
+            })
+        };
+        let update = JobSpec::Update(WorkloadUpdateSpec {
+            workload: 9,
+            u: 32,
+            m: 40,
+            n: 200,
+            insert: 2,
+            tombstone: 1,
+            tenant: 0,
+        });
+
+        // generation 0: cold build
+        let (_, rep) =
+            execute_with_cache(&release(1), Some(&cache), Some(&registry)).unwrap();
+        assert_eq!((rep.misses, rep.patched), (1, 0));
+
+        // the update spends zero ε and bumps the family to generation 1
+        let (out, _) = execute_with_cache(&update, Some(&cache), Some(&registry)).unwrap();
+        assert_eq!(out.eps_spent, 0.0);
+        assert_eq!(out.avg_select_work, 3.0, "2 inserts + 1 tombstone touched");
+
+        // the next release patches the resident generation-0 index forward
+        let (out1, rep) =
+            execute_with_cache(&release(2), Some(&cache), Some(&registry)).unwrap();
+        assert_eq!((rep.hits, rep.patched, rep.misses), (1, 1, 0));
+        assert!(out1.quality.is_finite());
+
+        // and a repeat at the same generation is a plain hit
+        let (_, rep) =
+            execute_with_cache(&release(3), Some(&cache), Some(&registry)).unwrap();
+        assert_eq!((rep.hits, rep.patched), (1, 0));
+
+        // updates without a registry fail cleanly (zero ε at stake)
+        assert!(execute_with_cache(&update, Some(&cache), None).is_err());
     }
 
     #[test]

@@ -29,6 +29,6 @@ pub use cache::{
 };
 pub use job::{
     execute, execute_shard_search, execute_with_cache, JobOutcome, JobResult, JobSpec,
-    LpJobSpec, ReleaseJobSpec, ShardSearchJob,
+    LpJobSpec, ReleaseJobSpec, ShardSearchJob, WorkloadUpdateSpec,
 };
 pub use pool::{parallel_map, Coordinator, CoordinatorConfig};

@@ -6,6 +6,7 @@ use super::cache::IndexCache;
 use super::job::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
 use crate::store::{DiskStore, TieredIndexCache};
+use crate::workloads::WorkloadRegistry;
 use std::path::PathBuf;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -95,12 +96,21 @@ pub(crate) fn finalize_serving_metrics(m: &mut Metrics, cache: Option<&TieredInd
         let s = cache.l1().stats();
         m.set_gauge("index_cache_entries", s.entries as f64);
         m.set_gauge("index_cache_evictions", s.evictions as f64);
+        // Structurally zero by construction (DESIGN.md §9: stale cache
+        // generations are patched forward or rebuilt, never handed out);
+        // materialized here so the CI dynamic smoke can assert on it and
+        // any future regression shows up as a nonzero counter.
+        m.inc("stale_generation_serves", 0);
+        m.inc("index_cache_patched", 0);
+        let patch_us = m.counter("index_patch_us");
+        m.inc("index_patch_ms", patch_us / 1000);
         if let Some(store) = cache.store() {
             let st = store.stats();
             let promote_us = m.counter("store_promote_us");
             m.inc("store_promote_ms", promote_us / 1000);
             m.inc("store_bytes_written", st.bytes_written);
             m.set_gauge("store_artifacts", st.artifacts as f64);
+            m.set_gauge("store_deltas", st.deltas as f64);
             m.set_gauge("store_load_failures", st.load_failures as f64);
         }
     }
@@ -121,6 +131,7 @@ pub struct Coordinator {
     cfg: CoordinatorConfig,
     metrics: Arc<Mutex<Metrics>>,
     cache: Option<Arc<TieredIndexCache>>,
+    registry: Arc<WorkloadRegistry>,
 }
 
 impl Coordinator {
@@ -153,19 +164,31 @@ impl Coordinator {
                 None
             };
 
+        // Dynamic-workload state: restore persisted delta chains so a
+        // restarted coordinator resumes at the generations it left off.
+        let registry = Arc::new(WorkloadRegistry::new());
+        if let Some(store) = cache.as_deref().and_then(TieredIndexCache::store) {
+            registry.restore(store.delta_chains());
+        }
+
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let rx = Arc::clone(&rx);
                 let results_tx = results_tx.clone();
                 let metrics = Arc::clone(&metrics);
                 let cache = cache.clone();
+                let registry = Arc::clone(&registry);
                 std::thread::spawn(move || loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(Message::Run(job_id, spec)) => {
                             let started = Instant::now();
                             let kind = spec.kind();
-                            let outcome = execute_with_cache(&spec, cache.as_deref());
+                            let outcome = execute_with_cache(
+                                &spec,
+                                cache.as_deref(),
+                                Some(registry.as_ref()),
+                            );
                             let store_on =
                                 cache.as_deref().is_some_and(|c| c.store().is_some());
                             {
@@ -196,7 +219,14 @@ impl Coordinator {
             cfg,
             metrics,
             cache,
+            registry,
         }
+    }
+
+    /// The dynamic-workload registry shared by this pool's workers
+    /// (DESIGN.md §9).
+    pub fn registry(&self) -> &WorkloadRegistry {
+        &self.registry
     }
 
     /// The in-memory warm-index tier, when warm serving is enabled

@@ -57,7 +57,40 @@ pub fn lazy_gumbel_max(
     mut tail_score: impl FnMut(usize) -> f64,
 ) -> LazySample {
     assert!(!top.is_empty(), "lazy_gumbel_max needs a non-empty top-k");
+
+    // Sort the candidate ids once, up front: the sorted set doubles as the
+    // tail-sampling exclusion list below, and the adjacent scan detects
+    // duplicate ids *before* k is fixed — an approximate top-k that
+    // returns the same id twice would otherwise inflate k, so the binomial
+    // trial count n − k would disagree with the true tail-set size
+    // n − |distinct(S)| and silently skew the sampling distribution
+    // (Theorem 3.3's exactness argument needs the two to be equal).
+    let mut excluded: Vec<usize> = top.iter().map(|&(i, _)| i).collect();
+    excluded.sort_unstable();
+    let had_dups = excluded.windows(2).any(|w| w[0] == w[1]);
+    if had_dups {
+        excluded.dedup();
+    }
+
+    // Rare slow path (exact retrieval never duplicates): collapse repeats
+    // so each candidate keeps its first slot and best score and is
+    // perturbed exactly once. O(k²) scan, pathological inputs only.
+    let dedup_storage: Vec<(usize, f64)>;
+    let top: &[(usize, f64)] = if had_dups {
+        let mut d: Vec<(usize, f64)> = Vec::with_capacity(excluded.len());
+        for &(idx, s) in top {
+            match d.iter_mut().find(|e| e.0 == idx) {
+                Some(e) => e.1 = e.1.max(s),
+                None => d.push((idx, s)),
+            }
+        }
+        dedup_storage = d;
+        &dedup_storage
+    } else {
+        top
+    };
     let k = top.len();
+    debug_assert_eq!(k, excluded.len());
 
     // Gumbel-perturb the known scores; track max (M) and min raw score (L).
     let mut best_idx = top[0].0;
@@ -91,10 +124,9 @@ pub fn lazy_gumbel_max(
 
     let mut tail_count = 0usize;
     if c > 0 {
-        let mut excluded: Vec<usize> = top.iter().map(|&(i, _)| i).collect();
-        excluded.sort_unstable();
-        excluded.dedup();
-        let tail = sample_distinct_excluding(rng, n, &excluded, c.min(n - excluded.len()));
+        // `excluded` is the sorted, duplicate-free id set from above, so
+        // the binomial trial count matches the tail-set size exactly.
+        let tail = sample_distinct_excluding(rng, n, &excluded, c.min(n - k));
         tail_count = tail.len();
         for t in tail {
             let v = tail_score(t) + truncated_gumbel(rng, b);
@@ -127,6 +159,40 @@ mod tests {
         let z: f64 = weights.iter().sum();
 
         let mut rng = Rng::new(42);
+        let trials = 300_000;
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            let s = lazy_gumbel_max(&mut rng, &top, n, 0.0, |i| scores[i]);
+            counts[s.index] += 1;
+        }
+        for i in 0..n {
+            let want = weights[i] / z;
+            let got = counts[i] as f64 / trials as f64;
+            assert!(
+                (got - want).abs() < 0.01,
+                "candidate {i}: got {got:.4} want {want:.4}"
+            );
+        }
+    }
+
+    /// Regression: a duplicated candidate id in the (approximate) top-k
+    /// must not skew the distribution. Before the dedup-before-k fix, a
+    /// duplicate inflated k, shrank the Bin(n − k, ·) trial count below
+    /// the true tail-set size, and double-perturbed one candidate — here
+    /// the softmax frequencies must still match exactly.
+    #[test]
+    fn duplicated_topk_ids_do_not_skew_the_distribution() {
+        let scores: Vec<f64> = vec![1.2, 0.3, -0.5, 2.0, 0.0, 1.0, -1.0, 0.8];
+        let n = scores.len();
+        // candidate 3 appears twice (once with a stale lower score), as a
+        // sloppy approximate retriever might return it
+        let top: Vec<(usize, f64)> =
+            vec![(3, scores[3]), (0, scores[0]), (3, scores[3] - 0.2), (5, scores[5])];
+
+        let weights: Vec<f64> = scores.iter().map(|&s| s.exp()).collect();
+        let z: f64 = weights.iter().sum();
+
+        let mut rng = Rng::new(77);
         let trials = 300_000;
         let mut counts = vec![0usize; n];
         for _ in 0..trials {

@@ -22,8 +22,13 @@
 //! key=value / [section] subset, see config/mod.rs).
 
 use anyhow::{bail, Context, Result};
-use fast_mwem::config::{CacheConfig, Config, ShardingConfig, StoreConfig};
-use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
+use fast_mwem::config::{CacheConfig, Config, DynamicConfig, ShardingConfig, StoreConfig};
+use fast_mwem::coordinator::{
+    execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
+    WorkloadUpdateSpec,
+};
+use fast_mwem::store::TieredIndexCache;
+use fast_mwem::workloads::WorkloadRegistry;
 use fast_mwem::eval::{self, EvalOpts};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use fast_mwem::metrics::Metrics;
@@ -83,6 +88,7 @@ fn run(args: &[String]) -> Result<()> {
                 cmd_serve(&cfg)
             }
         }
+        "update-workload" => cmd_update_workload(&cfg),
         "bench-compare" => cmd_bench_compare(&cfg),
         "check-artifacts" => cmd_check_artifacts(&cfg),
         "help" | "--help" | "-h" => {
@@ -109,6 +115,9 @@ USAGE:
               [--queue-depth=64] [--policy=block|reject]
               [--eps-per-tenant=E] [--workloads=W] [--cache-capacity=C]
               [--store-dir=PATH] [--metrics-out=PATH]
+              [--update-every=N] [--update-insert=I] [--update-tombstone=T]
+  repro update-workload [--workload=0] [--m=400] [--u=256] [--n=500]
+              [--insert=4] [--tombstone=2] [--store-dir=PATH]
   repro bench-compare [--baseline=BENCH_baseline.json]
               [--fresh=BENCH_hot_paths.json,BENCH_serving.json]
               [--tolerance=0.25]
@@ -134,6 +143,14 @@ bounded MPMC queue (--queue-depth, --policy) into persistent workers; every
 job is admission-checked against its tenant's ε cap (--eps-per-tenant)
 before it runs, failures refund, and the final drain reports per-kind
 latency p50/p95/p99 plus per-tenant spend (--metrics-out dumps the JSON).
+
+Dynamic workloads (DESIGN.md §9): `update-workload` appends/retires query
+rows of an evolving workload — zero-ε, data-independent — bumping its
+generation; cached/persisted indices are *patched* forward on their next
+lookup instead of rebuilt, and a stale generation is never served. In
+`serve --daemon`, `--update-every=N` (or a [dynamic] config section) makes
+every tenant submit one update per N jobs, mixing updates into the release
+stream.
 
 Perf gate: `bench-compare` checks fresh bench JSON (machine-independent
 warm-path ratios) against BENCH_baseline.json and exits nonzero on a
@@ -354,9 +371,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         }
     }
     println!(
-        "index cache: {} hits / {} misses, {} entries resident, ~{}ms build time saved",
+        "index cache: {} hits / {} misses ({} patched forward), {} entries resident, \
+         ~{}ms build time saved",
         metrics.counter("index_cache_hit"),
         metrics.counter("index_cache_miss"),
+        metrics.counter("index_cache_patched"),
         metrics.gauge("index_cache_entries").unwrap_or(0.0),
         metrics.counter("index_build_saved_ms"),
     );
@@ -378,14 +397,28 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
 /// Build the daemon's mixed per-tenant job stream: even slots are
 /// repeated-workload Release jobs (so the warm-index cache sees
 /// serving-shaped traffic), odd slots are Lp jobs — every tenant submits
-/// both kinds.
+/// both kinds. With `--update-every=N`, every N-th slot becomes a
+/// `WorkloadUpdate` instead, so the release stream interleaves with
+/// workload evolution and later releases answer the patched generations.
 fn daemon_spec(
     tenant: u64,
     i: usize,
     shards: usize,
     workload_count: usize,
     lp_mode: SelectionMode,
+    dynamic: DynamicConfig,
 ) -> JobSpec {
+    if dynamic.update_every > 0 && i % dynamic.update_every == dynamic.update_every - 1 {
+        return JobSpec::Update(WorkloadUpdateSpec {
+            workload: (i / 2 % workload_count) as u64,
+            u: 256,
+            m: 400,
+            n: 500,
+            insert: dynamic.insert,
+            tombstone: dynamic.tombstone,
+            tenant,
+        });
+    }
     if i % 2 == 0 {
         JobSpec::Release(ReleaseJobSpec {
             u: 256,
@@ -419,6 +452,7 @@ fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
     let jobs: usize = cfg.or("jobs", 24)?;
     let tenants: u64 = cfg.or("tenants", 3u64)?.max(1);
     let sharding = ShardingConfig::from_config(cfg)?;
+    let dynamic = DynamicConfig::from_config(cfg)?;
     let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
     let metrics_out = cfg.get_str("metrics-out").map(str::to_string);
     let server_cfg = ServerConfig::from_config(cfg)?;
@@ -459,6 +493,7 @@ fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
                             sharding.shards,
                             workload_count,
                             lp_mode,
+                            dynamic,
                         );
                         match server.submit(spec) {
                             Ok(t) => tickets.push(t),
@@ -515,7 +550,7 @@ fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
 /// histogram headline).
 fn print_latency_table(metrics: &Metrics) {
     let ms = |s: f64| s * 1e3;
-    for series in ["latency_release", "latency_lp", "queue_wait"] {
+    for series in ["latency_release", "latency_lp", "latency_update", "queue_wait"] {
         if let Some(t) = metrics.timing_summary(series) {
             println!(
                 "  {series:<16} n={:<4} p50 {:>8.2}ms  p95 {:>8.2}ms  p99 {:>8.2}ms  \
@@ -528,6 +563,73 @@ fn print_latency_table(metrics: &Metrics) {
             );
         }
     }
+}
+
+/// Evolve a workload out of band (DESIGN.md §9): append/retire query rows,
+/// bump the family generation, and persist the compact delta artifact so
+/// serving processes pointed at the same `--store-dir` patch their indices
+/// forward on the next lookup. The spec shape (`--m/--u/--n`) must match
+/// the release jobs that answer this workload — they share the synthesized
+/// base content, and the family fingerprint is derived from it.
+fn cmd_update_workload(cfg: &Config) -> Result<()> {
+    let workload: u64 = cfg.or("workload", 0u64)?;
+    let u: usize = cfg.or("u", 256)?;
+    let m: usize = cfg.or("m", 400)?;
+    let n: usize = cfg.or("n", 500)?;
+    let dynamic = DynamicConfig::from_config(cfg)?;
+    let insert: usize = cfg.or("insert", dynamic.insert)?;
+    let tombstone: usize = cfg.or("tombstone", dynamic.tombstone)?;
+    let cache_cfg = CacheConfig::from_config(cfg)?;
+    let store = StoreConfig::from_config(cfg)?;
+
+    let cache = match &store.dir {
+        Some(dir) => TieredIndexCache::with_store(cache_cfg.capacity, dir)
+            .with_context(|| format!("opening artifact store {dir:?}"))?,
+        None => {
+            println!(
+                "note: no --store-dir given — the update affects only this process; \
+                 serving daemons pointed at a store directory will never see it"
+            );
+            TieredIndexCache::memory_only(cache_cfg.capacity)
+        }
+    };
+    let registry = WorkloadRegistry::new();
+    if let Some(s) = cache.store() {
+        registry.restore(s.delta_chains());
+    }
+
+    let spec = JobSpec::Update(WorkloadUpdateSpec {
+        workload,
+        u,
+        m,
+        n,
+        insert,
+        tombstone,
+        tenant: 0,
+    });
+    let (outcome, _) = execute_with_cache(&spec, Some(&cache), Some(&registry))?;
+
+    // re-derive the family fingerprint to report the new generation
+    let mut rng = Rng::new(workload);
+    let _h = workloads::gaussian_histogram(&mut rng, u, n);
+    let base = workloads::binary_queries(&mut rng, m, u);
+    let fp = cache.fingerprint_for(workload, base.vectors());
+    println!(
+        "workload {workload} (family {fp:032x}) now at generation {}: \
+         +{insert} rows, -{tombstone} rows in {:.1}ms",
+        registry.generation(fp),
+        outcome.total_time.as_secs_f64() * 1e3,
+    );
+    if let Some(s) = cache.store() {
+        let st = s.stats();
+        println!(
+            "store {}: {} snapshots, {} delta artifacts",
+            s.dir().display(),
+            st.artifacts,
+            st.deltas
+        );
+    }
+    Ok(())
 }
 
 /// The perf-regression gate: compare fresh bench JSON artifacts against

@@ -34,6 +34,7 @@ fn count_eval() {
 
 /// The §E augmented metric space: original rows plus the implicit aux
 /// coordinate, with all distance forms evaluated algebraically.
+#[derive(Clone)]
 pub struct AugmentedSpace {
     vs: VectorSet,
     aux: Vec<f32>,
@@ -119,6 +120,27 @@ impl AugmentedSpace {
         let c_norm = dot(centroid, centroid);
         c_norm + self.big_m
             - 2.0 * (dot(&centroid[..d], self.vs.row(i)) + centroid[d] * self.aux[i])
+    }
+
+    /// Append rows under the *fixed* build-time norm bound M (the
+    /// incremental-maintenance path, DESIGN.md §9). A row whose squared
+    /// norm exceeds M gets its aux coordinate clamped to 0 — its
+    /// retrieval *order* is slightly distorted (scores stay exact inner
+    /// products) until the next amortized rebuild re-derives M. Returns
+    /// how many appended rows were clamped.
+    pub fn append_rows_fixed_m(&mut self, rows: &VectorSet) -> usize {
+        assert_eq!(rows.dim(), self.vs.dim(), "appended rows must match the dimension");
+        let mut clamped = 0usize;
+        for i in 0..rows.len() {
+            let r = rows.row(i);
+            let norm_sq = dot(r, r);
+            if norm_sq > self.big_m {
+                clamped += 1;
+            }
+            self.aux.push((self.big_m - norm_sq).max(0.0).sqrt());
+        }
+        self.vs.append(rows);
+        clamped
     }
 
     /// Materialize the augmented row i (used by k-means centroid updates).

@@ -1,0 +1,435 @@
+//! Incremental index maintenance: the dynamic-workload seam (DESIGN.md §9).
+//!
+//! Production workloads *evolve*: analysts add a handful of queries and
+//! retire a few others between releases. Rebuilding the k-MIPS index from
+//! scratch on every such change is exactly the Θ(m·U) preprocessing cost
+//! Fast-MWEM exists to avoid, so every index implements
+//! [`super::MipsIndex::patch`]: apply a [`WorkloadDelta`] — a batch of
+//! appended rows plus tombstoned ids — and return a patched index whose
+//! *live* candidate set equals a fresh build over the updated workload.
+//!
+//! Id spaces. Externally (the ids [`super::Neighbor`] reports and the lazy
+//! EM samples over) a patched index exposes the **compacted live** id
+//! space: survivors keep their relative order, insertions append at the
+//! end — exactly the order [`apply_delta_to_vectors`] materializes.
+//! Internally, IVF and HNSW keep tombstoned rows in place (marked in a
+//! `Tombstones` bitmap and skipped at query time) because ripping rows
+//! out of inverted lists or a navigable-small-world graph would cost more
+//! than it saves; the internal→external translation is a precomputed rank
+//! table. [`super::FlatIndex`] has no structure to preserve, so its patch
+//! is a plain row-level rewrite.
+//!
+//! Amortized rebuild. Tombstones accumulate dead weight (skipped slots,
+//! drifting IVF centroids, HNSW routing through dead nodes). When the dead
+//! fraction after a patch would exceed [`REBUILD_DEAD_FRACTION`], `patch`
+//! falls back to a full rebuild over the live rows — the classic
+//! amortized-maintenance policy: every rebuild is paid for by the ≥ Θ(m)
+//! cheap patches that preceded it.
+//!
+//! Rows inserted into an augmented-space index (IVF/HNSW) whose norm
+//! exceeds the build-time shared bound M have their aux coordinate clamped
+//! to 0: retrieval order for those rows is slightly distorted (a recall
+//! effect only — returned scores stay exact inner products) until the next
+//! amortized rebuild re-derives M.
+
+use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
+use super::{MipsIndex, VectorSet};
+use std::fmt;
+use std::sync::Arc;
+
+/// Dead fraction (tombstoned / internal slots) beyond which a patch
+/// triggers a full rebuild over the live rows instead of accumulating more
+/// skipped weight.
+pub const REBUILD_DEAD_FRACTION: f64 = 0.3;
+
+/// One batch of row-level changes to an indexed workload: rows appended to
+/// the end of the candidate set plus (live, external) ids retired.
+#[derive(Clone, Debug)]
+pub struct WorkloadDelta {
+    /// Rows appended to the end of the candidate set; their external ids
+    /// are `live_m .. live_m + inserted.len()` after the patch. May hold
+    /// zero rows (tombstone-only delta).
+    pub inserted: VectorSet,
+    /// External (live) ids retired by this delta — sorted, duplicate-free.
+    pub tombstoned: Vec<u32>,
+}
+
+impl WorkloadDelta {
+    /// A delta from raw parts; `tombstoned` is sorted and deduplicated.
+    pub fn new(inserted: VectorSet, mut tombstoned: Vec<u32>) -> Self {
+        tombstoned.sort_unstable();
+        tombstoned.dedup();
+        WorkloadDelta { inserted, tombstoned }
+    }
+
+    /// The no-op delta for dimension `dim`.
+    pub fn empty(dim: usize) -> Self {
+        WorkloadDelta { inserted: VectorSet::zeros(0, dim), tombstoned: Vec::new() }
+    }
+
+    /// True when the delta changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.inserted.is_empty() && self.tombstoned.is_empty()
+    }
+
+    /// Rows touched (inserted + tombstoned) — the patch-size headline the
+    /// dynamic bench axis reports.
+    pub fn rows_touched(&self) -> usize {
+        self.inserted.len() + self.tombstoned.len()
+    }
+
+    /// Net live-row count after applying this delta to `live_m` rows
+    /// (saturating: a chain replayed against a mismatched base cannot
+    /// wrap — [`WorkloadDelta::validate`] is the strict check).
+    pub fn live_after(&self, live_m: usize) -> usize {
+        live_m.saturating_sub(self.tombstoned.len()) + self.inserted.len()
+    }
+
+    /// Check the delta against a workload of `live_m` live rows of
+    /// dimension `dim`: tombstoned ids must be sorted, distinct and in
+    /// range, inserted rows must match the dimension, and at least one
+    /// live row must survive.
+    pub fn validate(&self, live_m: usize, dim: usize) -> Result<(), PatchError> {
+        if self.inserted.dim() != dim && !self.inserted.is_empty() {
+            return Err(PatchError::DimMismatch {
+                expected: dim,
+                got: self.inserted.dim(),
+            });
+        }
+        let mut prev: Option<u32> = None;
+        for &id in &self.tombstoned {
+            if id as usize >= live_m {
+                return Err(PatchError::IdOutOfRange { id, live: live_m });
+            }
+            if let Some(p) = prev {
+                if id <= p {
+                    return Err(PatchError::Unsorted { id });
+                }
+            }
+            prev = Some(id);
+        }
+        if self.live_after(live_m) == 0 {
+            return Err(PatchError::EmptyWorkload);
+        }
+        Ok(())
+    }
+}
+
+/// Snapshot payload for a delta artifact: the tombstoned ids then the
+/// inserted rows (both through the shared little-endian primitives).
+impl SnapshotCodec for WorkloadDelta {
+    fn encode(&self, out: &mut Vec<u8>) {
+        snapshot::put_u32s(out, &self.tombstoned);
+        snapshot::put_vectors(out, &self.inserted);
+    }
+
+    fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
+        let tombstoned = r.u32s()?;
+        if tombstoned.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(malformed("delta tombstones not sorted/distinct"));
+        }
+        let inserted = snapshot::read_vectors(r)?;
+        Ok(WorkloadDelta { inserted, tombstoned })
+    }
+}
+
+/// Why a delta could not be applied.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PatchError {
+    /// Inserted rows have a different dimension than the index.
+    DimMismatch {
+        /// The index's dimension.
+        expected: usize,
+        /// The inserted rows' dimension.
+        got: usize,
+    },
+    /// A tombstoned id does not name a live row.
+    IdOutOfRange {
+        /// The offending id.
+        id: u32,
+        /// Number of live rows in the target.
+        live: usize,
+    },
+    /// Tombstoned ids are not sorted and distinct.
+    Unsorted {
+        /// The id that broke the order.
+        id: u32,
+    },
+    /// The delta would leave the workload with zero live rows.
+    EmptyWorkload,
+}
+
+impl fmt::Display for PatchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PatchError::DimMismatch { expected, got } => {
+                write!(f, "delta rows have dimension {got}, index has {expected}")
+            }
+            PatchError::IdOutOfRange { id, live } => {
+                write!(f, "tombstoned id {id} out of range (live rows: {live})")
+            }
+            PatchError::Unsorted { id } => {
+                write!(f, "tombstoned ids not sorted/distinct at {id}")
+            }
+            PatchError::EmptyWorkload => {
+                write!(f, "delta would leave the workload empty")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PatchError {}
+
+/// What [`super::MipsIndex::patch`] returns: the patched index and whether
+/// the amortized-rebuild threshold forced a full rebuild instead of an
+/// incremental patch.
+pub struct PatchedIndex {
+    /// The index serving the updated workload.
+    pub index: Arc<dyn MipsIndex>,
+    /// True when the dead-fraction threshold triggered a full rebuild.
+    pub rebuilt: bool,
+}
+
+/// Materialize the effective row set after a delta: survivors keep their
+/// relative order, insertions append at the end — the canonical external
+/// id order every patched index exposes.
+pub fn apply_delta_to_vectors(
+    vs: &VectorSet,
+    delta: &WorkloadDelta,
+) -> Result<VectorSet, PatchError> {
+    delta.validate(vs.len(), vs.dim())?;
+    let d = vs.dim();
+    let new_len = delta.live_after(vs.len());
+    let mut data = Vec::with_capacity(new_len * d);
+    let mut t = 0usize;
+    for i in 0..vs.len() {
+        if t < delta.tombstoned.len() && delta.tombstoned[t] as usize == i {
+            t += 1;
+            continue;
+        }
+        data.extend_from_slice(vs.row(i));
+    }
+    data.extend_from_slice(delta.inserted.as_slice());
+    Ok(VectorSet::new(data, new_len, d))
+}
+
+/// Tombstone bitmap plus the internal↔external id translation tables for
+/// an index that keeps dead rows in place (IVF, HNSW). External ids are
+/// the compacted live ranks; both tables are derived from the bitmap.
+#[derive(Clone, Debug)]
+pub(crate) struct Tombstones {
+    /// Liveness per internal slot.
+    alive: Vec<bool>,
+    /// internal → external rank (valid only for live slots).
+    ext_of: Vec<u32>,
+    /// external → internal slot, in external order (== the live slots).
+    int_of: Vec<u32>,
+}
+
+impl Tombstones {
+    /// Build the translation tables from a liveness bitmap. Returns `None`
+    /// when every slot is alive (the index stays on its tombstone-free
+    /// fast path).
+    pub(crate) fn from_alive(alive: Vec<bool>) -> Option<Tombstones> {
+        if alive.iter().all(|&a| a) {
+            return None;
+        }
+        let mut ext_of = vec![0u32; alive.len()];
+        let mut int_of = Vec::with_capacity(alive.len());
+        for (i, &a) in alive.iter().enumerate() {
+            if a {
+                ext_of[i] = int_of.len() as u32;
+                int_of.push(i as u32);
+            }
+        }
+        Some(Tombstones { alive, ext_of, int_of })
+    }
+
+    /// Rebuild from an internal slot count and the list of dead slots.
+    pub(crate) fn from_dead(n: usize, dead: &[u32]) -> Option<Tombstones> {
+        let mut alive = vec![true; n];
+        for &i in dead {
+            alive[i as usize] = false;
+        }
+        Tombstones::from_alive(alive)
+    }
+
+    /// Number of live slots.
+    pub(crate) fn live(&self) -> usize {
+        self.int_of.len()
+    }
+
+    /// Is internal slot `i` live?
+    #[inline]
+    pub(crate) fn is_alive(&self, i: usize) -> bool {
+        self.alive[i]
+    }
+
+    /// External rank of live internal slot `i`.
+    #[inline]
+    pub(crate) fn ext(&self, i: usize) -> u32 {
+        self.ext_of[i]
+    }
+
+    /// Internal slot of external id `e`.
+    #[inline]
+    pub(crate) fn internal(&self, e: usize) -> u32 {
+        self.int_of[e]
+    }
+
+    /// The live internal slots in external order.
+    pub(crate) fn live_internal_ids(&self) -> &[u32] {
+        &self.int_of
+    }
+
+    /// Clone of the liveness bitmap (the starting point of the next patch).
+    pub(crate) fn alive_clone(&self) -> Vec<bool> {
+        self.alive.clone()
+    }
+
+    /// The dead internal slots, sorted — the compact snapshot encoding.
+    pub(crate) fn dead_ids(&self) -> Vec<u32> {
+        self.alive
+            .iter()
+            .enumerate()
+            .filter(|&(_, &a)| !a)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+/// Shared patch prologue for the tombstoning indices: validate the delta,
+/// decide between incremental patch and amortized rebuild, and compute the
+/// updated liveness bitmap (tombstones applied, insertions not yet
+/// appended). Returns `None` when the caller should fully rebuild.
+pub(crate) fn plan_patch(
+    delta: &WorkloadDelta,
+    live: usize,
+    dim: usize,
+    internal: usize,
+    current: Option<&Tombstones>,
+) -> Result<Option<Vec<bool>>, PatchError> {
+    delta.validate(live, dim)?;
+    let cur_dead = internal - live;
+    let new_dead = cur_dead + delta.tombstoned.len();
+    let new_internal = internal + delta.inserted.len();
+    if new_dead as f64 > REBUILD_DEAD_FRACTION * new_internal as f64 {
+        return Ok(None);
+    }
+    let mut alive = match current {
+        Some(t) => t.alive_clone(),
+        None => vec![true; internal],
+    };
+    for &e in &delta.tombstoned {
+        let i = match current {
+            Some(t) => t.internal(e as usize) as usize,
+            None => e as usize,
+        };
+        alive[i] = false;
+    }
+    Ok(Some(alive))
+}
+
+/// Materialize the live rows of a tombstoned space in external order.
+pub(crate) fn live_rows(vs: &VectorSet, deleted: Option<&Tombstones>) -> VectorSet {
+    match deleted {
+        None => vs.clone(),
+        Some(t) => {
+            let d = vs.dim();
+            let mut data = Vec::with_capacity(t.live() * d);
+            for &i in t.live_internal_ids() {
+                data.extend_from_slice(vs.row(i as usize));
+            }
+            VectorSet::new(data, t.live(), d)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vs(rows: &[&[f32]]) -> VectorSet {
+        let d = rows[0].len();
+        let data: Vec<f32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        VectorSet::new(data, rows.len(), d)
+    }
+
+    #[test]
+    fn apply_delta_compacts_and_appends() {
+        let base = vs(&[&[0.0, 0.0], &[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let delta = WorkloadDelta::new(vs(&[&[9.0, 9.0]]), vec![1, 3]);
+        let out = apply_delta_to_vectors(&base, &delta).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.row(0), &[0.0, 0.0]);
+        assert_eq!(out.row(1), &[2.0, 2.0], "survivors keep relative order");
+        assert_eq!(out.row(2), &[9.0, 9.0], "insertions append at the end");
+    }
+
+    #[test]
+    fn validate_catches_every_malformation() {
+        let base = vs(&[&[0.0, 0.0], &[1.0, 1.0]]);
+        // wrong dimension
+        let bad = WorkloadDelta::new(VectorSet::zeros(1, 3), vec![]);
+        assert!(matches!(
+            apply_delta_to_vectors(&base, &bad),
+            Err(PatchError::DimMismatch { .. })
+        ));
+        // id out of range
+        let bad = WorkloadDelta { inserted: VectorSet::zeros(0, 2), tombstoned: vec![5] };
+        assert!(matches!(
+            bad.validate(2, 2),
+            Err(PatchError::IdOutOfRange { id: 5, live: 2 })
+        ));
+        // unsorted ids
+        let bad = WorkloadDelta { inserted: VectorSet::zeros(0, 2), tombstoned: vec![1, 0] };
+        assert!(matches!(bad.validate(2, 2), Err(PatchError::Unsorted { .. })));
+        // the constructor sorts and dedups, so the same ids pass through it
+        assert!(WorkloadDelta::new(VectorSet::zeros(0, 2), vec![1, 0, 1]).validate(3, 2).is_ok());
+        // emptying the workload
+        let bad = WorkloadDelta::new(VectorSet::zeros(0, 2), vec![0, 1]);
+        assert!(matches!(bad.validate(2, 2), Err(PatchError::EmptyWorkload)));
+    }
+
+    #[test]
+    fn delta_codec_round_trips() {
+        let delta = WorkloadDelta::new(vs(&[&[1.5, -2.5], &[0.0, 4.0]]), vec![0, 7, 3]);
+        let mut buf = Vec::new();
+        delta.encode(&mut buf);
+        let back = WorkloadDelta::decode(&mut SnapshotReader::new(&buf)).unwrap();
+        assert_eq!(back.tombstoned, vec![0, 3, 7]);
+        assert_eq!(back.inserted.len(), 2);
+        assert_eq!(back.inserted.row(1), &[0.0, 4.0]);
+
+        // unsorted tombstones on disk are corruption, not a panic
+        let mut bad = Vec::new();
+        snapshot::put_u32s(&mut bad, &[3, 1]);
+        snapshot::put_vectors(&mut bad, &VectorSet::zeros(0, 2));
+        assert!(WorkloadDelta::decode(&mut SnapshotReader::new(&bad)).is_err());
+    }
+
+    #[test]
+    fn tombstone_tables_are_consistent() {
+        let t = Tombstones::from_dead(6, &[1, 4]).unwrap();
+        assert_eq!(t.live(), 4);
+        assert_eq!(t.live_internal_ids(), &[0, 2, 3, 5]);
+        assert!(t.is_alive(0) && !t.is_alive(1) && !t.is_alive(4));
+        for (e, &i) in t.live_internal_ids().iter().enumerate() {
+            assert_eq!(t.ext(i as usize) as usize, e);
+            assert_eq!(t.internal(e), i);
+        }
+        assert_eq!(t.dead_ids(), vec![1, 4]);
+        assert!(Tombstones::from_dead(6, &[]).is_none(), "all-alive is None");
+    }
+
+    #[test]
+    fn plan_patch_triggers_rebuild_past_the_dead_fraction() {
+        // 10 internal slots, no current tombstones: killing 4 of 10 crosses
+        // the 0.3 threshold, killing 2 does not
+        let big = WorkloadDelta::new(VectorSet::zeros(0, 2), vec![0, 1, 2, 3]);
+        assert!(plan_patch(&big, 10, 2, 10, None).unwrap().is_none());
+        let small = WorkloadDelta::new(VectorSet::zeros(0, 2), vec![0, 1]);
+        let alive = plan_patch(&small, 10, 2, 10, None).unwrap().unwrap();
+        assert_eq!(alive.iter().filter(|&&a| !a).count(), 2);
+    }
+}

@@ -5,10 +5,12 @@
 //! Theorem 3.3 used to validate that lazy sampling leaves the output
 //! distribution unchanged.
 
+use super::dynamic::{apply_delta_to_vectors, PatchError, PatchedIndex, WorkloadDelta};
 use super::snapshot::{self, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::math::dot;
+use std::sync::Arc;
 
 /// Exact k-MIPS index: a brute-force scan of the stored vectors.
 pub struct FlatIndex {
@@ -64,6 +66,19 @@ impl MipsIndex for FlatIndex {
     fn write_snapshot(&self, out: &mut Vec<u8>) {
         self.encode(out);
     }
+
+    /// The flat index IS the data, so its patch is the trivial one: a
+    /// row-level rewrite of the stored vectors. No tombstones accumulate
+    /// and no rebuild threshold applies — a patched flat index is
+    /// bit-identical to a fresh build over the updated rows.
+    fn patch(&self, delta: &WorkloadDelta, _seed: u64) -> Result<PatchedIndex, PatchError> {
+        let vs = apply_delta_to_vectors(&self.vs, delta)?;
+        Ok(PatchedIndex { index: Arc::new(FlatIndex::new(vs)), rebuilt: false })
+    }
+
+    fn live_vectors(&self) -> VectorSet {
+        self.vs.clone()
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +126,32 @@ mod tests {
         let got = idx.top_k(&[2.0, 2.0], 2);
         assert_eq!(got[0].score, 2.0); // both rows give 2.0
         assert_eq!(got[1].score, 2.0);
+    }
+
+    /// A patched flat index is bit-identical to a fresh build over the
+    /// effective (post-delta) rows — the exactness anchor of the dynamic
+    /// property tests.
+    #[test]
+    fn patch_is_bit_identical_to_fresh_build() {
+        let vs = random_set(40, 6, 9);
+        let idx = FlatIndex::new(vs.clone());
+        let mut rng = Rng::new(10);
+        let ins: Vec<f32> = (0..3 * 6).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let delta = WorkloadDelta::new(VectorSet::new(ins, 3, 6), vec![0, 17, 39]);
+
+        let patched = idx.patch(&delta, 1).unwrap();
+        assert!(!patched.rebuilt);
+        let effective = apply_delta_to_vectors(&vs, &delta).unwrap();
+        let fresh = FlatIndex::new(effective.clone());
+        assert_eq!(patched.index.len(), 40);
+        assert_eq!(patched.index.live_vectors().as_slice(), effective.as_slice());
+
+        let q: Vec<f32> = (0..6).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let (a, b) = (patched.index.top_k(&q, 10), fresh.top_k(&q, 10));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
     }
 }

@@ -10,12 +10,16 @@
 //! the source of the paper's Figure 4/8 sublinear curves.
 
 use super::augment::AugmentedSpace;
+use super::dynamic::{
+    self, apply_delta_to_vectors, PatchError, PatchedIndex, Tombstones, WorkloadDelta,
+};
 use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
-use super::topk::OrdF32;
-use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
+use super::topk::{OrdF32, TopK};
+use super::{build_index, IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::rng::Rng;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 /// HNSW hyper-parameters.
 #[derive(Clone, Debug)]
@@ -35,6 +39,7 @@ impl HnswParams {
     }
 }
 
+#[derive(Clone)]
 struct Node {
     /// links[level] = neighbor ids at that level; len = node_level + 1.
     links: Vec<Vec<u32>>,
@@ -47,6 +52,11 @@ pub struct HnswIndex {
     entry: u32,
     max_level: usize,
     params: HnswParams,
+    /// Tombstone bitmap + id translation after incremental patches
+    /// (DESIGN.md §9). Dead nodes stay in the graph as *routable* hops —
+    /// removing them would tear the small-world topology — but are skipped
+    /// when results are collected; `None` = every node is live.
+    deleted: Option<Tombstones>,
 }
 
 impl HnswIndex {
@@ -64,6 +74,7 @@ impl HnswIndex {
             entry: 0,
             max_level: 0,
             params,
+            deleted: None,
         };
 
         for i in 0..n {
@@ -90,7 +101,7 @@ impl HnswIndex {
 
         // Destructure so the distance closure borrows only `space` while
         // `nodes` stays mutably accessible.
-        let HnswIndex { space, nodes, params, entry, max_level } = self;
+        let HnswIndex { space, nodes, params, entry, max_level, .. } = self;
         let base = id as usize;
         let dist = |j: usize| space.dist_pp(base, j);
         let mut ep = *entry;
@@ -327,6 +338,8 @@ impl SnapshotCodec for HnswIndex {
                 snapshot::put_u32s(out, level);
             }
         }
+        let dead = self.deleted.as_ref().map(Tombstones::dead_ids).unwrap_or_default();
+        snapshot::put_u32s(out, &dead);
     }
 
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
@@ -370,13 +383,27 @@ impl SnapshotCodec for HnswIndex {
         if nodes[entry as usize].links.len() != max_level.saturating_add(1) {
             return Err(malformed("hnsw entry node does not reach max_level"));
         }
-        Ok(HnswIndex { space, nodes, entry, max_level, params })
+        let dead = r.u32s()?;
+        if dead.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(malformed("hnsw dead ids not sorted/distinct"));
+        }
+        if let Some(&bad) = dead.iter().find(|&&id| id as usize >= n) {
+            return Err(malformed(format!("hnsw dead id {bad} out of range (n={n})")));
+        }
+        if dead.len() >= n {
+            return Err(malformed("hnsw snapshot has no live nodes"));
+        }
+        let deleted = Tombstones::from_dead(n, &dead);
+        Ok(HnswIndex { space, nodes, entry, max_level, params, deleted })
     }
 }
 
 impl MipsIndex for HnswIndex {
     fn len(&self) -> usize {
-        self.space.len()
+        match &self.deleted {
+            Some(t) => t.live(),
+            None => self.space.len(),
+        }
     }
 
     fn dim(&self) -> usize {
@@ -390,11 +417,48 @@ impl MipsIndex for HnswIndex {
             ep = greedy_closest(&self.nodes, &dist, ep, lc);
         }
         let ef = self.params.ef_search.max(k);
-        let w = search_layer(&self.nodes, &dist, &[ep], ef, 0);
-        w.into_iter()
-            .take(k)
-            .map(|(_, id)| Neighbor { id, score: self.space.ip(id as usize, query) })
-            .collect()
+        match &self.deleted {
+            None => {
+                let w = search_layer(&self.nodes, &dist, &[ep], ef, 0);
+                w.into_iter()
+                    .take(k)
+                    .map(|(_, id)| Neighbor { id, score: self.space.ip(id as usize, query) })
+                    .collect()
+            }
+            Some(t) => {
+                // Deleted-node skip: dead nodes stay routable during the
+                // beam search but are filtered out of the results. Widen
+                // the beam by the *full* dead count so a beam that hits
+                // every tombstone still carries ≥ k live candidates — the
+                // extra work is bounded by the ≤30% dead fraction the
+                // amortized rebuild enforces.
+                let dead = self.nodes.len() - t.live();
+                let ef = (ef + dead).min(self.nodes.len());
+                let w = search_layer(&self.nodes, &dist, &[ep], ef, 0);
+                let live: Vec<Neighbor> = w
+                    .into_iter()
+                    .filter(|&(_, id)| t.is_alive(id as usize))
+                    .take(k)
+                    .map(|(_, id)| Neighbor {
+                        id: t.ext(id as usize),
+                        score: self.space.ip(id as usize, query),
+                    })
+                    .collect();
+                if !live.is_empty() {
+                    return live;
+                }
+                // Pathological fallback (a disconnected or fully-dead
+                // beam): exact scan over the live rows. An approximate
+                // index may be slow here but must never return an empty
+                // result for a non-empty live set — the lazy-EM layer
+                // asserts a non-empty top-k.
+                let mut scan = TopK::new(k.min(t.live()));
+                for &i in t.live_internal_ids() {
+                    scan.push(t.ext(i as usize), self.space.ip(i as usize, query));
+                }
+                scan.into_sorted()
+            }
+        }
     }
 
     fn kind(&self) -> IndexKind {
@@ -403,6 +467,58 @@ impl MipsIndex for HnswIndex {
 
     fn write_snapshot(&self, out: &mut Vec<u8>) {
         self.encode(out);
+    }
+
+    /// Insert-only graph growth with deleted-node skip (DESIGN.md §9):
+    /// tombstoned nodes are marked dead but stay in the graph as routable
+    /// hops; inserted rows enter through the standard sequential-insertion
+    /// path (their own sampled level, beam search, diversity-pruned
+    /// links). Past the dead-fraction threshold the graph is rebuilt over
+    /// the live rows so routing overhead stays bounded.
+    fn patch(&self, delta: &WorkloadDelta, seed: u64) -> Result<PatchedIndex, PatchError> {
+        let alive = match dynamic::plan_patch(
+            delta,
+            self.len(),
+            self.dim(),
+            self.space.len(),
+            self.deleted.as_ref(),
+        )? {
+            Some(alive) => alive,
+            None => {
+                let vs = apply_delta_to_vectors(&self.live_vectors(), delta)?;
+                return Ok(PatchedIndex {
+                    index: build_index(IndexKind::Hnsw, vs, seed),
+                    rebuilt: true,
+                });
+            }
+        };
+        let internal = self.space.len();
+        let mut space = self.space.clone();
+        space.append_rows_fixed_m(&delta.inserted);
+        let new_internal = space.len();
+        let mut alive = alive;
+        alive.resize(new_internal, true);
+
+        let mut grown = HnswIndex {
+            space,
+            nodes: self.nodes.clone(),
+            entry: self.entry,
+            max_level: self.max_level,
+            params: self.params.clone(),
+            deleted: None,
+        };
+        let ml = 1.0 / (grown.params.m as f64).ln();
+        let mut rng = Rng::new(seed ^ 0xD15C_0B31);
+        for i in internal..new_internal {
+            let level = (-rng.f64_open().ln() * ml).floor() as usize;
+            grown.insert(i as u32, level);
+        }
+        grown.deleted = Tombstones::from_alive(alive);
+        Ok(PatchedIndex { index: Arc::new(grown), rebuilt: false })
+    }
+
+    fn live_vectors(&self) -> VectorSet {
+        dynamic::live_rows(self.space.vectors(), self.deleted.as_ref())
     }
 }
 
@@ -485,6 +601,91 @@ mod tests {
         let vs = random_set(3, 4, 12);
         let hnsw = HnswIndex::build(vs, HnswParams::paper(), 13);
         assert_eq!(hnsw.top_k(&[1.0; 4], 3).len(), 3);
+    }
+
+    /// Incremental patch: tombstoned nodes never surface, inserted rows
+    /// are retrievable through the grown graph, ids are external, scores
+    /// exact.
+    #[test]
+    fn patch_grows_the_graph_and_skips_dead_nodes() {
+        use crate::mips::{apply_delta_to_vectors, WorkloadDelta};
+        let n = 800;
+        let d = 8;
+        let vs = random_set(n, d, 30);
+        let hnsw = HnswIndex::build(vs.clone(), HnswParams::paper(), 31);
+
+        let mut rng = Rng::new(32);
+        let ins: Vec<f32> = (0..5 * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        let delta = WorkloadDelta::new(VectorSet::new(ins, 5, d), vec![0, 250, 799]);
+        let effective = apply_delta_to_vectors(&vs, &delta).unwrap();
+
+        let patched = hnsw.patch(&delta, 33).unwrap();
+        assert!(!patched.rebuilt);
+        assert_eq!(patched.index.len(), n - 3 + 5);
+        assert_eq!(patched.index.live_vectors().as_slice(), effective.as_slice());
+
+        let flat = crate::mips::FlatIndex::new(effective.clone());
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            let want: std::collections::HashSet<u32> =
+                flat.top_k(&q, 10).into_iter().map(|nb| nb.id).collect();
+            for nb in patched.index.top_k(&q, 10) {
+                assert!((nb.id as usize) < effective.len(), "id must be external");
+                let exact = crate::util::math::dot(effective.row(nb.id as usize), &q);
+                assert!((nb.score - exact).abs() < 1e-5, "scores stay exact");
+                hits += usize::from(want.contains(&nb.id));
+                total += 1;
+            }
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.7, "patched-graph recall@10 = {recall}");
+    }
+
+    /// Past the dead-fraction threshold the patch rebuilds the graph.
+    #[test]
+    fn patch_rebuilds_past_dead_fraction() {
+        use crate::mips::WorkloadDelta;
+        let vs = random_set(100, 6, 34);
+        let hnsw = HnswIndex::build(vs, HnswParams::paper(), 35);
+        let kill: Vec<u32> = (0..40).collect();
+        let delta = WorkloadDelta::new(VectorSet::zeros(0, 6), kill);
+        let patched = hnsw.patch(&delta, 36).unwrap();
+        assert!(patched.rebuilt);
+        assert_eq!(patched.index.len(), 60);
+    }
+
+    /// A patched HNSW round-trips through the snapshot codec with its
+    /// grown graph and tombstone state intact.
+    #[test]
+    fn patched_snapshot_round_trips() {
+        use crate::mips::WorkloadDelta;
+        let d = 6;
+        let vs = random_set(300, d, 37);
+        let hnsw = HnswIndex::build(vs, HnswParams::paper(), 38);
+        let mut rng = Rng::new(39);
+        // low-norm insertions: the decode-side AugmentedSpace recomputation
+        // re-derives M from all rows, so rows below the build-time bound
+        // keep aux (and therefore search order) bit-identical
+        let ins: Vec<f32> = (0..2 * d).map(|_| rng.uniform(0.0, 0.5) as f32).collect();
+        let delta = WorkloadDelta::new(VectorSet::new(ins, 2, d), vec![5, 100]);
+        let patched = hnsw.patch(&delta, 40).unwrap();
+
+        let mut buf = Vec::new();
+        patched.index.write_snapshot(&mut buf);
+        let mut r = SnapshotReader::new(&buf);
+        let back = HnswIndex::decode(&mut r).unwrap();
+        assert!(r.is_exhausted());
+        assert_eq!(back.len(), 300);
+
+        let q = vec![0.4f32; d];
+        let (a, b) = (patched.index.top_k(&q, 10), back.top_k(&q, 10));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //! about `m·nprobe/nlist` candidates instead of m.
 
 use super::augment::AugmentedSpace;
+use super::dynamic::{
+    self, apply_delta_to_vectors, PatchError, PatchedIndex, Tombstones, WorkloadDelta,
+};
 use super::kmeans::{kmeans, KmeansParams};
 use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::TopK;
-use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
+use super::{build_index, IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::math::dot;
+use std::sync::Arc;
 
 /// IVF hyper-parameters.
 #[derive(Clone, Debug)]
@@ -47,10 +51,14 @@ impl IvfParams {
 pub struct IvfIndex {
     space: AugmentedSpace,
     centroids: Vec<f32>, // nlist × (dim+1), augmented space
-    lists: Vec<Vec<u32>>,
+    lists: Vec<Vec<u32>>, // internal ids (live + tombstoned)
     nlist: usize,
     nprobe: usize,
     aug_dim: usize,
+    /// Tombstone bitmap + id translation after incremental patches
+    /// (DESIGN.md §9); `None` = every internal slot is live (the
+    /// fresh-build fast path, no per-candidate branch in `top_k`).
+    deleted: Option<Tombstones>,
 }
 
 impl IvfIndex {
@@ -77,7 +85,38 @@ impl IvfIndex {
             lists[c as usize].push(i as u32);
         }
 
-        IvfIndex { aug_dim: space.aug_dim(), space, centroids: km.centroids, lists, nlist, nprobe }
+        IvfIndex {
+            aug_dim: space.aug_dim(),
+            space,
+            centroids: km.centroids,
+            lists,
+            nlist,
+            nprobe,
+            deleted: None,
+        }
+    }
+
+    /// Internal slots (live + tombstoned) — the row count of the stored
+    /// vector buffer, as opposed to the live [`MipsIndex::len`].
+    pub fn internal_len(&self) -> usize {
+        self.space.len()
+    }
+
+    /// The coarse cell an (internal) row belongs to: nearest centroid in
+    /// the augmented space, the same rule the k-means assignment used at
+    /// build time. Inserted rows route through this at patch time.
+    fn nearest_cell(&self, space: &AugmentedSpace, i: usize) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..self.nlist {
+            let cent = &self.centroids[c * self.aug_dim..(c + 1) * self.aug_dim];
+            let d = space.dist_cp(cent, i);
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        best
     }
 
     /// Resolved number of cells.
@@ -108,11 +147,19 @@ impl IvfIndex {
     }
 }
 
-/// Snapshot payload: original vectors, resolved `nlist`/`nprobe`, the
-/// trained centroids and the inverted lists. The augmented space (aux
-/// column + shared norm M) is *recomputed* on decode — the recomputation
-/// is deterministic over identical f32 bits, so the restored index scans
-/// the same cells in the same order as the encoded one.
+/// Snapshot payload: original vectors (all internal slots), resolved
+/// `nlist`/`nprobe`, the trained centroids, the inverted lists, and the
+/// tombstoned internal ids (empty for a fresh build). The augmented space
+/// (aux column + shared norm M) is *recomputed* on decode — the
+/// recomputation is deterministic over identical f32 bits, so the restored
+/// index scans the same cells in the same order as the encoded one.
+///
+/// Caveat for patched indices: rows appended after the initial build had
+/// their aux coordinate computed under the build-time norm bound M, which
+/// the recomputation re-derives from *all* stored rows. An inserted row
+/// whose norm exceeded M is clamped at patch time but would raise M on
+/// decode; the store only snapshots patched indices through the compaction
+/// path, where the equivalence tests pin the observable behavior.
 impl SnapshotCodec for IvfIndex {
     fn encode(&self, out: &mut Vec<u8>) {
         snapshot::put_vectors(out, self.space.vectors());
@@ -122,6 +169,8 @@ impl SnapshotCodec for IvfIndex {
         for list in &self.lists {
             snapshot::put_u32s(out, list);
         }
+        let dead = self.deleted.as_ref().map(Tombstones::dead_ids).unwrap_or_default();
+        snapshot::put_u32s(out, &dead);
     }
 
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
@@ -161,13 +210,27 @@ impl SnapshotCodec for IvfIndex {
                 "ivf lists assign {assigned} of {m} keys"
             )));
         }
-        Ok(IvfIndex { aug_dim, space, centroids, lists, nlist, nprobe })
+        let dead = r.u32s()?;
+        if dead.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(malformed("ivf dead ids not sorted/distinct"));
+        }
+        if let Some(&bad) = dead.iter().find(|&&id| id as usize >= m) {
+            return Err(malformed(format!("ivf dead id {bad} out of range (m={m})")));
+        }
+        if dead.len() >= m {
+            return Err(malformed("ivf snapshot has no live rows"));
+        }
+        let deleted = Tombstones::from_dead(m, &dead);
+        Ok(IvfIndex { aug_dim, space, centroids, lists, nlist, nprobe, deleted })
     }
 }
 
 impl MipsIndex for IvfIndex {
     fn len(&self) -> usize {
-        self.space.len()
+        match &self.deleted {
+            Some(t) => t.live(),
+            None => self.space.len(),
+        }
     }
 
     fn dim(&self) -> usize {
@@ -184,9 +247,24 @@ impl MipsIndex for IvfIndex {
 
         // 2. exact inner products over the selected lists
         let mut top = TopK::new(k);
-        for &(_, c) in &cells[..probes] {
-            for &id in &self.lists[c as usize] {
-                top.push(id, self.space.ip(id as usize, query));
+        match &self.deleted {
+            None => {
+                for &(_, c) in &cells[..probes] {
+                    for &id in &self.lists[c as usize] {
+                        top.push(id, self.space.ip(id as usize, query));
+                    }
+                }
+            }
+            Some(t) => {
+                // tombstone skip + internal→external id translation
+                for &(_, c) in &cells[..probes] {
+                    for &id in &self.lists[c as usize] {
+                        let i = id as usize;
+                        if t.is_alive(i) {
+                            top.push(t.ext(i), self.space.ip(i, query));
+                        }
+                    }
+                }
             }
         }
         top.into_sorted()
@@ -198,6 +276,58 @@ impl MipsIndex for IvfIndex {
 
     fn write_snapshot(&self, out: &mut Vec<u8>) {
         self.encode(out);
+    }
+
+    /// Per-list append + tombstone bitmap (DESIGN.md §9): tombstoned rows
+    /// are marked dead (their list entries stay, skipped at query time)
+    /// and inserted rows route to their nearest coarse cell under the
+    /// frozen centroids — no k-means rerun. Past the dead-fraction
+    /// threshold the whole structure is rebuilt over the live rows so
+    /// centroid drift and skip overhead stay bounded.
+    fn patch(&self, delta: &WorkloadDelta, seed: u64) -> Result<PatchedIndex, PatchError> {
+        let alive = match dynamic::plan_patch(
+            delta,
+            self.len(),
+            self.dim(),
+            self.space.len(),
+            self.deleted.as_ref(),
+        )? {
+            Some(alive) => alive,
+            None => {
+                let vs = apply_delta_to_vectors(&self.live_vectors(), delta)?;
+                return Ok(PatchedIndex {
+                    index: build_index(IndexKind::Ivf, vs, seed),
+                    rebuilt: true,
+                });
+            }
+        };
+        let internal = self.space.len();
+        let mut space = self.space.clone();
+        space.append_rows_fixed_m(&delta.inserted);
+        let mut alive = alive;
+        alive.resize(space.len(), true);
+
+        let mut lists = self.lists.clone();
+        for i in internal..space.len() {
+            let cell = self.nearest_cell(&space, i);
+            lists[cell].push(i as u32);
+        }
+        Ok(PatchedIndex {
+            index: Arc::new(IvfIndex {
+                aug_dim: self.aug_dim,
+                space,
+                centroids: self.centroids.clone(),
+                lists,
+                nlist: self.nlist,
+                nprobe: self.nprobe,
+                deleted: Tombstones::from_alive(alive),
+            }),
+            rebuilt: false,
+        })
+    }
+
+    fn live_vectors(&self) -> VectorSet {
+        dynamic::live_rows(self.space.vectors(), self.deleted.as_ref())
     }
 }
 
@@ -272,5 +402,96 @@ mod tests {
         let ivf = IvfIndex::build(vs, IvfParams::paper(), 9);
         let got = ivf.top_k(&[1.0, 1.0, 1.0, 1.0], 3);
         assert!(!got.is_empty());
+    }
+
+    /// Incremental patch: tombstoned rows never come back, inserted rows
+    /// are retrievable, ids live in the compacted external space, and
+    /// scores stay exact inner products of the effective rows.
+    #[test]
+    fn patch_tombstones_and_inserts_consistently() {
+        use crate::mips::{apply_delta_to_vectors, WorkloadDelta};
+        let n = 600;
+        let d = 8;
+        let vs = random_set(n, d, 20);
+        let ivf = IvfIndex::build(vs.clone(), IvfParams::paper(), 21);
+
+        let mut rng = Rng::new(22);
+        let ins: Vec<f32> = (0..4 * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+        let delta = WorkloadDelta::new(VectorSet::new(ins, 4, d), vec![3, 77, 410]);
+        let effective = apply_delta_to_vectors(&vs, &delta).unwrap();
+
+        let patched = ivf.patch(&delta, 23).unwrap();
+        assert!(!patched.rebuilt, "small delta must patch, not rebuild");
+        assert_eq!(patched.index.len(), n - 3 + 4);
+        assert_eq!(
+            patched.index.live_vectors().as_slice(),
+            effective.as_slice(),
+            "live rows must equal the materialized effective set"
+        );
+
+        // every hit names a live external id and carries its exact score
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+            for nb in patched.index.top_k(&q, 10) {
+                assert!((nb.id as usize) < effective.len());
+                let want = crate::util::math::dot(effective.row(nb.id as usize), &q);
+                assert!((nb.score - want).abs() < 1e-5);
+            }
+        }
+
+        // chained patch: the inserted rows (external ids at the end) can be
+        // tombstoned right back out
+        let back = WorkloadDelta::new(
+            VectorSet::zeros(0, d),
+            vec![(n - 3) as u32, (n - 3 + 1) as u32],
+        );
+        let again = patched.index.patch(&back, 24).unwrap();
+        assert_eq!(again.index.len(), n - 3 + 2);
+    }
+
+    /// Past the dead-fraction threshold the patch must fall back to a full
+    /// rebuild (fresh k-means, no tombstones left behind).
+    #[test]
+    fn patch_rebuilds_past_dead_fraction() {
+        use crate::mips::WorkloadDelta;
+        let n = 100;
+        let vs = random_set(n, 6, 25);
+        let ivf = IvfIndex::build(vs, IvfParams::paper(), 26);
+        let kill: Vec<u32> = (0..40).collect(); // 40% dead > 30% threshold
+        let delta = WorkloadDelta::new(VectorSet::zeros(0, 6), kill);
+        let patched = ivf.patch(&delta, 27).unwrap();
+        assert!(patched.rebuilt, "40% tombstones must trigger the rebuild");
+        assert_eq!(patched.index.len(), 60);
+        // a rebuilt index has no internal dead weight
+        let got = patched.index.top_k(&[0.5; 6], 5);
+        assert!(!got.is_empty());
+    }
+
+    /// A patched IVF round-trips through the snapshot codec with its
+    /// tombstone state intact.
+    #[test]
+    fn patched_snapshot_round_trips() {
+        use crate::mips::snapshot::SnapshotReader;
+        use crate::mips::WorkloadDelta;
+        let vs = random_set(200, 5, 28);
+        let ivf = IvfIndex::build(vs, IvfParams::paper(), 29);
+        let delta = WorkloadDelta::new(VectorSet::zeros(0, 5), vec![10, 20, 30]);
+        let patched = ivf.patch(&delta, 30).unwrap();
+
+        let mut buf = Vec::new();
+        patched.index.write_snapshot(&mut buf);
+        let mut r = SnapshotReader::new(&buf);
+        let back = IvfIndex::decode(&mut r).unwrap();
+        assert!(r.is_exhausted());
+        assert_eq!(back.len(), 197);
+        assert_eq!(back.internal_len(), 200);
+
+        let q = vec![0.3f32; 5];
+        let (a, b) = (patched.index.top_k(&q, 8), back.top_k(&q, 8));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.score.to_bits(), y.score.to_bits());
+        }
     }
 }

@@ -18,6 +18,7 @@
 use std::sync::Arc;
 
 pub mod augment;
+pub mod dynamic;
 pub mod flat;
 pub mod hnsw;
 pub mod ivf;
@@ -26,6 +27,9 @@ pub mod snapshot;
 pub mod topk;
 
 pub use augment::AugmentedSpace;
+pub use dynamic::{
+    apply_delta_to_vectors, PatchError, PatchedIndex, WorkloadDelta, REBUILD_DEAD_FRACTION,
+};
 pub use flat::FlatIndex;
 pub use hnsw::{HnswIndex, HnswParams};
 pub use ivf::{IvfIndex, IvfParams};
@@ -93,6 +97,14 @@ impl VectorSet {
     /// The raw row-major buffer (`n * d` entries).
     pub fn as_slice(&self) -> &[f32] {
         &self.data
+    }
+
+    /// Append every row of `other` (panics on a dimension mismatch). The
+    /// incremental-maintenance primitive behind [`MipsIndex::patch`].
+    pub fn append(&mut self, other: &VectorSet) {
+        assert_eq!(self.d, other.dim(), "appended rows must match the dimension");
+        self.data.extend_from_slice(other.as_slice());
+        self.n += other.len();
     }
 }
 
@@ -174,7 +186,8 @@ impl std::str::FromStr for IndexKind {
 /// top-k members (the c-approximation of Definition 3.4), which the lazy
 /// EM layer compensates for (Theorems F.2/F.10).
 pub trait MipsIndex: Send + Sync {
-    /// Number of indexed vectors m.
+    /// Number of *live* (selectable) vectors m — tombstoned rows of a
+    /// patched index are excluded (DESIGN.md §9).
     fn len(&self) -> usize;
     /// Dimension of the indexed vectors.
     fn dim(&self) -> usize;
@@ -188,6 +201,33 @@ pub trait MipsIndex: Send + Sync {
     /// [`SnapshotCodec`]). This is the object-safe half of the codec seam
     /// the persistent artifact store serializes through (DESIGN.md §7).
     fn write_snapshot(&self, out: &mut Vec<u8>);
+
+    /// Incremental maintenance (DESIGN.md §9): apply `delta` and return
+    /// the patched index. Implementations reuse as much of the built
+    /// structure as possible — a plain row rewrite for
+    /// [`FlatIndex`], per-list append plus a tombstone bitmap for
+    /// [`IvfIndex`], insert-only graph growth with deleted-node skip for
+    /// [`HnswIndex`] — and fall back to a full rebuild (seeded by `seed`)
+    /// once the accumulated dead fraction crosses
+    /// [`REBUILD_DEAD_FRACTION`]. The patched index's live candidate set
+    /// equals [`apply_delta_to_vectors`] of the current live rows.
+    fn patch(&self, delta: &WorkloadDelta, seed: u64) -> Result<PatchedIndex, PatchError>;
+
+    /// Convenience over [`MipsIndex::patch`]: append `rows` to the live
+    /// candidate set (a pure-insertion delta).
+    fn insert_rows(&self, rows: &VectorSet, seed: u64) -> Result<PatchedIndex, PatchError> {
+        self.patch(&WorkloadDelta::new(rows.clone(), Vec::new()), seed)
+    }
+
+    /// Convenience over [`MipsIndex::patch`]: retire the live external
+    /// `ids` (a pure-tombstone delta; ids are sorted and deduplicated).
+    fn tombstone_rows(&self, ids: &[u32], seed: u64) -> Result<PatchedIndex, PatchError> {
+        self.patch(&WorkloadDelta::new(VectorSet::zeros(0, self.dim()), ids.to_vec()), seed)
+    }
+
+    /// Materialize the live (selectable) rows in external-id order — the
+    /// vector set a fresh build at this index's state would be given.
+    fn live_vectors(&self) -> VectorSet;
 }
 
 /// Build an index of the requested kind over `vs` (consumed).
@@ -223,6 +263,22 @@ mod tests {
     #[should_panic]
     fn vectorset_rejects_bad_length() {
         VectorSet::new(vec![1.0; 5], 2, 3);
+    }
+
+    /// The `insert_rows`/`tombstone_rows` conveniences are exactly the
+    /// corresponding one-sided deltas.
+    #[test]
+    fn insert_and_tombstone_conveniences_match_patch() {
+        let vs = VectorSet::new((0..20).map(|i| i as f32).collect(), 10, 2);
+        let idx = build_index(IndexKind::Flat, vs, 1);
+
+        let grown = idx.insert_rows(&VectorSet::new(vec![9.0, 9.0], 1, 2), 2).unwrap();
+        assert_eq!(grown.index.len(), 11);
+        assert_eq!(grown.index.live_vectors().row(10), &[9.0, 9.0]);
+
+        let shrunk = grown.index.tombstone_rows(&[10, 0, 10], 3).unwrap();
+        assert_eq!(shrunk.index.len(), 9, "dedup + both rows retired");
+        assert_eq!(shrunk.index.live_vectors().row(0), &[2.0, 3.0]);
     }
 
     #[test]

@@ -8,14 +8,30 @@
 use crate::util::rng::Rng;
 
 /// Sample `G ~ Gumbel(0,1)` conditioned on `G > b`.
+///
+/// Sampled in *complementary* space: with `t = 1 − U` drawn uniformly from
+/// `(0, p)` where `p = 1 − exp(−exp(−b))` is the tail mass, the draw is
+/// `−ln(−ln(1 − t)) = −ln(−ln_1p(−t))`. The naive parameterization
+/// `U ~ Uniform(exp(−exp(−b)), 1)` breaks down for `b ≳ 36.7`: the lower
+/// bound rounds to exactly 1.0 in f64 and no `u` strictly inside the
+/// interval exists, so the old rejection loop spun forever. `exp_m1` keeps
+/// `p` exact down to ~1e−300 and `ln_1p` keeps the double log exact for
+/// tiny `t`, so large-`b` draws stay finite and strictly above `b`.
 pub fn truncated_gumbel(rng: &mut Rng, b: f64) -> f64 {
-    let lo = (-(-b).exp()).exp(); // exp(-exp(-B))
-    // U ∈ (lo, 1); guard against u == lo or u == 1 for the double log.
-    let mut u = rng.uniform(lo, 1.0);
-    while u <= lo || u >= 1.0 {
-        u = rng.uniform(lo, 1.0);
+    // tail mass p = 1 - exp(-exp(-b)), computed without cancellation
+    let p = gumbel_tail_prob(b);
+    // t ∈ (0, p): f64_open is strictly inside (0, 1), so the product is
+    // strictly below p; it can only hit 0 if p underflowed or the
+    // multiply did (p is never negative or NaN for finite b).
+    let t = p * rng.f64_open();
+    if t <= 0.0 {
+        // exp(-b) underflowed (b ≳ 745) or the product rounded to zero:
+        // at that depth the conditional overshoot G − b is Exp(1) to
+        // within less than one ulp, so sample the asymptotic tail.
+        return b + rng.exponential(1.0);
     }
-    -(-u.ln()).ln()
+    // G = -ln(-ln(1 - t)), with 1 - t evaluated via ln_1p
+    -(-(-t).ln_1p()).ln()
 }
 
 /// Probability that a Gumbel(0,1) exceeds `b`: `1 - exp(-exp(-b))`.
@@ -78,5 +94,43 @@ mod tests {
         // Large B: tail prob tiny but sampler must still return > B.
         let g = truncated_gumbel(&mut r, 20.0);
         assert!(g > 20.0 && g.is_finite());
+    }
+
+    /// Regression: at b = 40 the old parameterization had
+    /// `exp(-exp(-40)) == 1.0` exactly in f64, so `uniform(lo, 1.0)` could
+    /// never produce a value strictly inside the interval and the sampler
+    /// looped forever. The complementary-space sampler must return finite
+    /// draws strictly above b, at every depth of the tail.
+    #[test]
+    fn deep_tail_draws_are_finite_and_exceed_threshold() {
+        let mut r = Rng::new(4);
+        for &b in &[36.7, 40.0, 100.0, 700.0] {
+            for _ in 0..2_000 {
+                let g = truncated_gumbel(&mut r, b);
+                assert!(g.is_finite(), "b={b}: non-finite draw {g}");
+                assert!(g > b, "b={b}: draw {g} not above threshold");
+            }
+        }
+        // past the exp(-b) underflow point the asymptotic Exp(1) tail kicks
+        // in; draws must still be finite and above b
+        for _ in 0..2_000 {
+            let g = truncated_gumbel(&mut r, 800.0);
+            assert!(g.is_finite() && g > 800.0, "underflow fallback: {g}");
+        }
+    }
+
+    /// The b = 40 draws follow the conditional law: G − b is Exp(1) to
+    /// within ~e^{-40}, so the mean overshoot must be ≈ 1.
+    #[test]
+    fn deep_tail_overshoot_is_exponential() {
+        let mut r = Rng::new(5);
+        let b = 40.0;
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += truncated_gumbel(&mut r, b) - b;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean overshoot {mean}");
     }
 }

@@ -19,9 +19,34 @@
 //!   the job had never been admitted.
 //!
 //! Invariant per tenant: `spent ≤ admitted ≤ cap` at every instant.
+//!
+//! Arithmetic is exact: ε is tracked internally as integer **nano-ε**
+//! (1e−9 ε units), not accumulated f64 sums. A long-lived daemon churns
+//! through millions of reserve/refund cycles; f64 accumulation drifts by
+//! an ulp per interleaved pair, so a tenant at exactly its cap could be
+//! spuriously denied (or `admitted` could go microscopically negative
+//! after refunds). With integers, 10k churn cycles leave the reservation
+//! at exactly zero and an exact-cap job still admits. Budgets below one
+//! nano-ε quantize to zero (documented; real jobs spend ≫ 1e−9 ε).
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
+
+/// Nano-ε per ε: the integer resolution of the ledgers.
+const NANO_PER_EPS: f64 = 1e9;
+
+/// Quantize an ε amount to integer nano-ε (round to nearest; negative
+/// amounts clamp to zero — the ledger never goes backwards via inputs).
+#[inline]
+fn to_nano(eps: f64) -> u64 {
+    (eps * NANO_PER_EPS).round().max(0.0) as u64
+}
+
+/// Convert integer nano-ε back to ε for reporting.
+#[inline]
+fn from_nano(nano: u64) -> f64 {
+    nano as f64 / NANO_PER_EPS
+}
 
 /// One tenant's ledger snapshot.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -65,6 +90,16 @@ impl std::fmt::Display for AdmissionError {
 
 impl std::error::Error for AdmissionError {}
 
+/// One tenant's internal ledger, in integer nano-ε (exact arithmetic).
+#[derive(Clone, Copy, Debug, Default)]
+struct Ledger {
+    admitted: u64,
+    spent: u64,
+    refunded: u64,
+    admitted_jobs: u64,
+    denied_jobs: u64,
+}
+
 /// Registry of per-tenant privacy ledgers behind one lock; every transition
 /// (reserve, commit, refund) is atomic with respect to concurrent
 /// submitters and workers.
@@ -73,13 +108,15 @@ pub struct TenantBudget {
     /// Per-tenant ε cap (`None` = unlimited: admission always passes, but
     /// spend is still metered per tenant).
     cap: Option<f64>,
-    ledgers: Mutex<BTreeMap<u64, TenantSpend>>,
+    /// The cap quantized to nano-ε, the units the ledgers compare in.
+    cap_nano: Option<u64>,
+    ledgers: Mutex<BTreeMap<u64, Ledger>>,
 }
 
 impl TenantBudget {
     /// A budget registry where every tenant gets the same ε cap.
     pub fn new(cap: Option<f64>) -> Self {
-        TenantBudget { cap, ledgers: Mutex::new(BTreeMap::new()) }
+        TenantBudget { cap, cap_nano: cap.map(to_nano), ledgers: Mutex::new(BTreeMap::new()) }
     }
 
     /// The uniform per-tenant cap, if any.
@@ -88,25 +125,25 @@ impl TenantBudget {
     }
 
     /// Reserve `eps` for `tenant`, denying atomically if the reservation
-    /// would exceed the cap. The small additive slack absorbs float
-    /// accumulation so a tenant can spend exactly up to its cap.
+    /// would exceed the cap. The comparison is exact integer arithmetic in
+    /// nano-ε, so a tenant can spend exactly up to its cap no matter how
+    /// many reserve/refund cycles preceded the attempt.
     pub fn admit(&self, tenant: u64, eps: f64) -> Result<(), AdmissionError> {
+        let eps_n = to_nano(eps);
         let mut ledgers = self.ledgers.lock().unwrap();
-        let ledger = ledgers
-            .entry(tenant)
-            .or_insert_with(|| TenantSpend { tenant, ..TenantSpend::default() });
-        if let Some(cap) = self.cap {
-            if ledger.admitted + eps > cap + 1e-12 {
+        let ledger = ledgers.entry(tenant).or_default();
+        if let Some(cap_n) = self.cap_nano {
+            if ledger.admitted.saturating_add(eps_n) > cap_n {
                 ledger.denied_jobs += 1;
                 return Err(AdmissionError {
                     tenant,
                     requested: eps,
-                    admitted: ledger.admitted,
-                    cap,
+                    admitted: from_nano(ledger.admitted),
+                    cap: self.cap.unwrap_or(f64::INFINITY),
                 });
             }
         }
-        ledger.admitted += eps;
+        ledger.admitted += eps_n;
         ledger.admitted_jobs += 1;
         Ok(())
     }
@@ -115,17 +152,18 @@ impl TenantBudget {
     pub fn commit(&self, tenant: u64, eps: f64) {
         let mut ledgers = self.ledgers.lock().unwrap();
         if let Some(ledger) = ledgers.get_mut(&tenant) {
-            ledger.spent += eps;
+            ledger.spent += to_nano(eps);
         }
     }
 
     /// Return a reservation whose job ran and failed. The budget reopens
     /// for subsequent jobs and the ε is recorded in `refunded`.
     pub fn refund(&self, tenant: u64, eps: f64) {
+        let eps_n = to_nano(eps);
         let mut ledgers = self.ledgers.lock().unwrap();
         if let Some(ledger) = ledgers.get_mut(&tenant) {
-            ledger.admitted = (ledger.admitted - eps).max(0.0);
-            ledger.refunded += eps;
+            ledger.admitted = ledger.admitted.saturating_sub(eps_n);
+            ledger.refunded += eps_n;
         }
     }
 
@@ -138,14 +176,26 @@ impl TenantBudget {
     pub fn rescind(&self, tenant: u64, eps: f64) {
         let mut ledgers = self.ledgers.lock().unwrap();
         if let Some(ledger) = ledgers.get_mut(&tenant) {
-            ledger.admitted = (ledger.admitted - eps).max(0.0);
+            ledger.admitted = ledger.admitted.saturating_sub(to_nano(eps));
             ledger.admitted_jobs = ledger.admitted_jobs.saturating_sub(1);
         }
     }
 
     /// Snapshot of every tenant's ledger, sorted by tenant id.
     pub fn snapshot(&self) -> Vec<TenantSpend> {
-        self.ledgers.lock().unwrap().values().copied().collect()
+        self.ledgers
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&tenant, l)| TenantSpend {
+                tenant,
+                admitted: from_nano(l.admitted),
+                spent: from_nano(l.spent),
+                refunded: from_nano(l.refunded),
+                admitted_jobs: l.admitted_jobs,
+                denied_jobs: l.denied_jobs,
+            })
+            .collect()
     }
 }
 
@@ -217,6 +267,44 @@ mod tests {
         assert!((s.admitted - 0.0).abs() < 1e-12);
         assert!((s.refunded - 0.0).abs() < 1e-12, "sheds are not refunds");
         assert!(b.admit(4, 1.0).is_ok(), "full budget available again");
+    }
+
+    /// Regression: long-lived daemons churn reservations for days. With
+    /// f64 accumulation the interleaved adds/subtracts drift by an ulp per
+    /// cycle, so `admitted` ends microscopically nonzero and an exact-cap
+    /// job is spuriously denied. With integer nano-ε the churn must leave
+    /// the reservation at exactly zero and the full cap must still admit.
+    #[test]
+    fn reserve_refund_churn_leaves_zero_and_exact_cap_still_admits() {
+        let cap = 2.0;
+        let b = TenantBudget::new(Some(cap));
+        // interleaved, unequal amounts — the worst case for f64 drift
+        for i in 0..10_000u64 {
+            let (e1, e2) = (0.1 + (i % 7) as f64 * 0.01, 0.2 + (i % 3) as f64 * 0.05);
+            b.admit(1, e1).unwrap();
+            b.admit(1, e2).unwrap();
+            b.refund(1, e1);
+            b.rescind(1, e2);
+        }
+        let s = &b.snapshot()[0];
+        assert_eq!(s.admitted, 0.0, "churn must leave exactly zero reserved");
+        // the full cap still fits in one job, exactly
+        assert!(b.admit(1, cap).is_ok(), "exact-cap job must admit after churn");
+        assert!(b.admit(1, 1e-6).is_err(), "cap is exactly exhausted");
+        b.commit(1, cap);
+        let s = &b.snapshot()[0];
+        assert_eq!(s.spent, cap, "integer ledgers report exact spend");
+    }
+
+    /// Sub-nano-ε amounts quantize to zero (documented resolution floor).
+    #[test]
+    fn sub_nano_eps_quantizes_to_zero() {
+        let b = TenantBudget::new(Some(1.0));
+        for _ in 0..1_000 {
+            b.admit(2, 1e-12).unwrap();
+        }
+        assert_eq!(b.snapshot()[0].admitted, 0.0);
+        assert!(b.admit(2, 1.0).is_ok(), "full budget still available");
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::coordinator::pool::finalize_serving_metrics;
 use crate::coordinator::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
 use crate::store::TieredIndexCache;
+use crate::workloads::WorkloadRegistry;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -167,6 +168,7 @@ pub struct Server {
     budget: Arc<TenantBudget>,
     metrics: Arc<Mutex<Metrics>>,
     cache: Option<Arc<TieredIndexCache>>,
+    registry: Arc<WorkloadRegistry>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicUsize,
 }
@@ -199,15 +201,24 @@ impl Server {
                 None
             };
 
+        // Dynamic-workload state (DESIGN.md §9): one registry shared by
+        // every worker, seeded from the store's persisted delta chains so
+        // a restarted daemon resumes at the generations it left off.
+        let registry = Arc::new(WorkloadRegistry::new());
+        if let Some(store) = cache.as_deref().and_then(TieredIndexCache::store) {
+            registry.restore(store.delta_chains());
+        }
+
         let workers = (0..cfg.workers.max(1))
             .map(|_| {
                 let queue = Arc::clone(&queue);
                 let budget = Arc::clone(&budget);
                 let metrics = Arc::clone(&metrics);
                 let cache = cache.clone();
+                let registry = Arc::clone(&registry);
                 std::thread::spawn(move || {
                     while let Some(env) = queue.pop() {
-                        run_one(env, cache.as_deref(), &metrics, &budget);
+                        run_one(env, cache.as_deref(), &registry, &metrics, &budget);
                     }
                 })
             })
@@ -219,6 +230,7 @@ impl Server {
             budget,
             metrics,
             cache,
+            registry,
             workers,
             next_id: AtomicUsize::new(0),
         }
@@ -324,6 +336,12 @@ impl Server {
         self.cache.as_deref()
     }
 
+    /// The dynamic-workload registry shared by this server's workers
+    /// (DESIGN.md §9).
+    pub fn registry(&self) -> &WorkloadRegistry {
+        &self.registry
+    }
+
     /// The resolved configuration this server runs under.
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
@@ -348,6 +366,7 @@ impl Drop for Server {
 fn run_one(
     env: Envelope,
     cache: Option<&TieredIndexCache>,
+    registry: &WorkloadRegistry,
     metrics: &Mutex<Metrics>,
     budget: &TenantBudget,
 ) {
@@ -355,8 +374,9 @@ fn run_one(
     let kind = spec.kind();
     let waited = enqueued.elapsed();
     let started = Instant::now();
-    let outcome = catch_unwind(AssertUnwindSafe(|| execute_with_cache(&spec, cache)))
-        .unwrap_or_else(|_| Err(anyhow::anyhow!("job panicked on the worker")));
+    let outcome =
+        catch_unwind(AssertUnwindSafe(|| execute_with_cache(&spec, cache, Some(registry))))
+            .unwrap_or_else(|_| Err(anyhow::anyhow!("job panicked on the worker")));
     let store_on = cache.is_some_and(|c| c.store().is_some());
     {
         let mut m = metrics.lock().unwrap();
@@ -384,7 +404,7 @@ fn run_one(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::LpJobSpec;
+    use crate::coordinator::{LpJobSpec, WorkloadUpdateSpec};
     use crate::lp::SelectionMode;
 
     fn tiny_lp(tenant: u64, seed: u64, eps: f64) -> JobSpec {
@@ -446,6 +466,42 @@ mod tests {
         assert_eq!(m.counter("jobs_completed"), 1);
         // the refused job's reservation was refunded, so only 0.5 is spent
         assert_eq!(m.gauge("tenant_0_eps_spent"), Some(0.5));
+    }
+
+    /// Update jobs are tenant-budgeted like any other job but reserve
+    /// zero ε, so a tenant at its cap can still evolve its workloads; the
+    /// queue/drain semantics treat them like normal work.
+    #[test]
+    fn update_jobs_ride_the_queue_and_spend_zero_eps() {
+        let server = Server::start(ServerConfig {
+            workers: 1,
+            queue_depth: 8,
+            eps_per_tenant: Some(1.0),
+            cache_capacity: 2,
+            ..ServerConfig::default()
+        });
+        let t1 = server.submit(tiny_lp(0, 1, 1.0)).unwrap();
+        assert!(server.submit(tiny_lp(0, 2, 0.5)).is_err(), "cap exhausted");
+        let upd = server
+            .submit(JobSpec::Update(WorkloadUpdateSpec {
+                workload: 5,
+                u: 32,
+                m: 30,
+                n: 100,
+                insert: 1,
+                tombstone: 0,
+                tenant: 0,
+            }))
+            .unwrap();
+        assert!(t1.wait().outcome.is_ok());
+        let r = upd.wait();
+        assert_eq!(r.kind, "update");
+        let out = r.outcome.expect("update must run at a capped tenant");
+        assert_eq!(out.eps_spent, 0.0);
+        let m = server.drain();
+        assert_eq!(m.counter("jobs_update"), 1);
+        assert_eq!(m.gauge("tenant_0_eps_spent"), Some(1.0), "update spent nothing");
+        assert_eq!(m.timing_summary("latency_update").unwrap().count, 1);
     }
 
     #[test]

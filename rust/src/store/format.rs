@@ -4,14 +4,22 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic  "FMWEMIDX"
-//! 8       4     format version (u32 LE, currently 1)
+//! 8       4     format version (u32 LE, currently 2)
 //! 12      16    WorkloadKey.fingerprint (u128 LE)
 //! 28      1     WorkloadKey.kind tag (IndexKind::tag)
 //! 29      8     WorkloadKey.shards (u64 LE)
-//! 37      8     payload length (u64 LE)
-//! 45      16    FNV-128 payload checksum (u128 LE)
-//! 61      ..    payload — a mips/lazy snapshot (see `encode_payload`)
+//! 37      8     WorkloadKey.generation (u64 LE)
+//! 45      8     payload length (u64 LE)
+//! 53      16    FNV-128 payload checksum (u128 LE)
+//! 69      ..    payload — a mips/lazy snapshot (see `encode_payload`)
 //! ```
+//!
+//! Dynamic workloads (DESIGN.md §9) add a second artifact species: compact
+//! **delta artifacts** ([`encode_delta_artifact`]) carrying one
+//! [`crate::mips::WorkloadDelta`] under their own magic `"FMWEMDLT"`, keyed by the
+//! workload family fingerprint plus the generation the delta produces. A
+//! restore at generation g decodes the newest snapshot at g′ ≤ g and
+//! replays the deltas g′+1..=g.
 //!
 //! The header carries the full [`WorkloadKey`] so an artifact is
 //! self-describing: [`decode_artifact`] refuses to hand back an index for
@@ -32,15 +40,20 @@ use crate::mips::{IndexKind, SnapshotCodec, SnapshotError};
 use std::fmt;
 use std::sync::Arc;
 
-/// First bytes of every artifact file.
+/// First bytes of every index-snapshot artifact file.
 pub const MAGIC: [u8; 8] = *b"FMWEMIDX";
 
+/// First bytes of every workload-delta artifact file (DESIGN.md §9).
+pub const DELTA_MAGIC: [u8; 8] = *b"FMWEMDLT";
+
 /// Current artifact format version. Bump on any layout change; old
-/// versions are rejected (and rebuilt), never reinterpreted.
-pub const FORMAT_VERSION: u32 = 1;
+/// versions are rejected (and rebuilt), never reinterpreted. Version 2
+/// added the workload generation to the envelope key and the tombstone
+/// state to the index payloads.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Fixed header size in bytes (everything before the payload).
-pub const HEADER_LEN: usize = 8 + 4 + 16 + 1 + 8 + 8 + 16;
+pub const HEADER_LEN: usize = 8 + 4 + 16 + 1 + 8 + 8 + 8 + 16;
 
 /// Why an artifact failed to decode.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -149,6 +162,7 @@ pub fn encode_artifact(key: &WorkloadKey, value: &CachedIndex) -> Vec<u8> {
     snapshot::put_u128(&mut out, key.fingerprint);
     snapshot::put_u8(&mut out, key.kind.tag());
     snapshot::put_u64(&mut out, key.shards as u64);
+    snapshot::put_u64(&mut out, key.generation);
     snapshot::put_u64(&mut out, payload.len() as u64);
     snapshot::put_u128(&mut out, fnv128(&payload));
     out.extend_from_slice(&payload);
@@ -176,6 +190,7 @@ pub fn open_artifact(bytes: &[u8]) -> Result<(WorkloadKey, &[u8]), StoreError> {
     let fingerprint = r.u128()?;
     let kind_tag = r.u8()?;
     let shards = r.u64()?;
+    let generation = r.u64()?;
     let payload_len = r.u64()?;
     let checksum = r.u128()?;
 
@@ -187,7 +202,7 @@ pub fn open_artifact(bytes: &[u8]) -> Result<(WorkloadKey, &[u8]), StoreError> {
     if fnv128(payload) != checksum {
         return Err(StoreError::ChecksumMismatch);
     }
-    let key = WorkloadKey { fingerprint, kind, shards: shards as usize };
+    let key = WorkloadKey { fingerprint, kind, shards: shards as usize, generation };
     Ok((key, payload))
 }
 
@@ -199,6 +214,75 @@ pub fn decode_artifact(bytes: &[u8], expect: &WorkloadKey) -> Result<CachedIndex
         return Err(StoreError::KeyMismatch);
     }
     decode_payload(payload)
+}
+
+/// Fixed delta-artifact header size: magic, version, fingerprint,
+/// generation, payload length, checksum.
+pub const DELTA_HEADER_LEN: usize = 8 + 4 + 16 + 8 + 8 + 16;
+
+/// Seal one workload delta into a complete delta-artifact file image:
+/// header (magic, version, family fingerprint, produced generation,
+/// length, checksum) + the delta snapshot payload.
+pub fn encode_delta_artifact(
+    fingerprint: u128,
+    generation: u64,
+    delta: &crate::mips::WorkloadDelta,
+) -> Vec<u8> {
+    let mut payload = Vec::new();
+    delta.encode(&mut payload);
+    let mut out = Vec::with_capacity(DELTA_HEADER_LEN + payload.len());
+    out.extend_from_slice(&DELTA_MAGIC);
+    snapshot::put_u32(&mut out, FORMAT_VERSION);
+    snapshot::put_u128(&mut out, fingerprint);
+    snapshot::put_u64(&mut out, generation);
+    snapshot::put_u64(&mut out, payload.len() as u64);
+    snapshot::put_u128(&mut out, fnv128(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Open and decode a delta artifact, verifying magic, version, length and
+/// checksum. Returns the family fingerprint, the generation the delta
+/// produces, and the delta itself.
+pub fn decode_delta_artifact(
+    bytes: &[u8],
+) -> Result<(u128, u64, crate::mips::WorkloadDelta), StoreError> {
+    if bytes.len() < DELTA_HEADER_LEN {
+        return if bytes.len() >= DELTA_MAGIC.len() && bytes[..DELTA_MAGIC.len()] != DELTA_MAGIC {
+            Err(StoreError::BadMagic)
+        } else {
+            Err(StoreError::Truncated)
+        };
+    }
+    if bytes[..DELTA_MAGIC.len()] != DELTA_MAGIC {
+        return Err(StoreError::BadMagic);
+    }
+    let mut r = SnapshotReader::new(&bytes[DELTA_MAGIC.len()..DELTA_HEADER_LEN]);
+    let version = r.u32()?;
+    if version != FORMAT_VERSION {
+        return Err(StoreError::BadVersion(version));
+    }
+    let fingerprint = r.u128()?;
+    let generation = r.u64()?;
+    let payload_len = r.u64()?;
+    let checksum = r.u128()?;
+
+    let payload = &bytes[DELTA_HEADER_LEN..];
+    if payload.len() as u64 != payload_len {
+        return Err(StoreError::Truncated);
+    }
+    if fnv128(payload) != checksum {
+        return Err(StoreError::ChecksumMismatch);
+    }
+    let mut pr = SnapshotReader::new(payload);
+    let delta = crate::mips::WorkloadDelta::decode(&mut pr)?;
+    if !pr.is_exhausted() {
+        return Err(StoreError::Snapshot(SnapshotError::Malformed(format!(
+            "{} trailing bytes after delta payload",
+            pr.remaining()
+        ))));
+    }
+    Ok((fingerprint, generation, delta))
 }
 
 #[cfg(test)]
@@ -214,7 +298,7 @@ mod tests {
     }
 
     fn mono_key() -> WorkloadKey {
-        WorkloadKey { fingerprint: 0xABCD_EF01, kind: IndexKind::Flat, shards: 1 }
+        WorkloadKey { fingerprint: 0xABCD_EF01, kind: IndexKind::Flat, shards: 1, generation: 0 }
     }
 
     fn mono_value() -> CachedIndex {
@@ -234,7 +318,7 @@ mod tests {
         let cases = vec![
             (mono_key(), mono_value()),
             (
-                WorkloadKey { fingerprint: 7, kind: IndexKind::Ivf, shards: 3 },
+                WorkloadKey { fingerprint: 7, kind: IndexKind::Ivf, shards: 3, generation: 4 },
                 CachedIndex::Sharded(Arc::new(ShardSet::build(IndexKind::Ivf, &vs, 3, 5))),
             ),
         ];
@@ -263,6 +347,40 @@ mod tests {
         let bytes = encode_artifact(&mono_key(), &mono_value());
         let other = WorkloadKey { fingerprint: 999, ..mono_key() };
         assert_eq!(decode_artifact(&bytes, &other), Err(StoreError::KeyMismatch));
+        // a different generation of the same family is also a mismatch —
+        // serving an older generation as the requested one would be a
+        // stale serve
+        let stale = mono_key().at_generation(3);
+        assert_eq!(decode_artifact(&bytes, &stale), Err(StoreError::KeyMismatch));
+    }
+
+    #[test]
+    fn delta_artifact_round_trips_and_rejects_corruption() {
+        use crate::mips::{VectorSet as Vs, WorkloadDelta};
+        let delta = WorkloadDelta::new(
+            Vs::new(vec![0.5, -1.0, 2.0, 0.0], 2, 2),
+            vec![4, 1],
+        );
+        let bytes = encode_delta_artifact(0xFEED, 3, &delta);
+        let (fp, generation, back) = decode_delta_artifact(&bytes).unwrap();
+        assert_eq!((fp, generation), (0xFEED, 3));
+        assert_eq!(back.tombstoned, vec![1, 4]);
+        assert_eq!(back.inserted.len(), 2);
+        assert_eq!(back.inserted.row(0), &[0.5, -1.0]);
+
+        // bad magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert_eq!(decode_delta_artifact(&bad).unwrap_err(), StoreError::BadMagic);
+        // flipped payload byte -> checksum mismatch
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert_eq!(decode_delta_artifact(&bad).unwrap_err(), StoreError::ChecksumMismatch);
+        // truncation at every prefix must error, never panic
+        for cut in [0, 6, DELTA_HEADER_LEN - 1, bytes.len() - 1] {
+            assert!(decode_delta_artifact(&bytes[..cut]).is_err());
+        }
     }
 
     #[test]

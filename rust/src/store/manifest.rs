@@ -24,9 +24,12 @@ use std::path::Path;
 pub const MANIFEST_FILE: &str = "manifest.json";
 
 /// Manifest schema version (bumped on incompatible layout changes).
-pub const MANIFEST_VERSION: u64 = 1;
+/// Version 2 added the workload generation to snapshot entries plus the
+/// delta catalog (DESIGN.md §9); version-1 manifests degrade to empty and
+/// their orphaned artifacts are rebuilt under the new ids.
+pub const MANIFEST_VERSION: u64 = 2;
 
-/// One cataloged artifact.
+/// One cataloged snapshot artifact.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ManifestEntry {
     /// Artifact file name, relative to the store directory.
@@ -35,6 +38,11 @@ pub struct ManifestEntry {
     pub kind: IndexKind,
     /// Shard count (1 = monolithic index).
     pub shards: usize,
+    /// Workload family fingerprint — duplicated from the artifact id so
+    /// the generation-aware lookup can scan a family without parsing ids.
+    pub fingerprint: u128,
+    /// Workload generation this snapshot serves.
+    pub generation: u64,
     /// Artifact file size in bytes.
     pub bytes: u64,
     /// Build cost of the snapshotted index, in microseconds — restored
@@ -44,10 +52,25 @@ pub struct ManifestEntry {
     pub build_us: u64,
 }
 
-/// The artifact catalog: artifact id → [`ManifestEntry`].
+/// One cataloged workload-delta artifact (DESIGN.md §9).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DeltaEntry {
+    /// Delta file name, relative to the store directory.
+    pub file: String,
+    /// Workload family fingerprint.
+    pub fingerprint: u128,
+    /// The generation this delta produces (applied to generation − 1).
+    pub generation: u64,
+    /// Delta file size in bytes.
+    pub bytes: u64,
+}
+
+/// The artifact catalog: artifact id → [`ManifestEntry`], plus the delta
+/// chain per workload family.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct Manifest {
     entries: BTreeMap<String, ManifestEntry>,
+    deltas: BTreeMap<String, DeltaEntry>,
 }
 
 impl Manifest {
@@ -57,10 +80,21 @@ impl Manifest {
     }
 
     /// Content-addressed artifact id for a key:
-    /// `<fingerprint:032x>-<kind>-s<shards>` — stable across processes,
-    /// filesystem-safe, and unique per [`WorkloadKey`].
+    /// `<fingerprint:032x>-<kind>-s<shards>-g<generation>` — stable across
+    /// processes, filesystem-safe, and unique per [`WorkloadKey`].
     pub fn artifact_id(key: &WorkloadKey) -> String {
-        format!("{:032x}-{}-s{}", key.fingerprint, key.kind, key.shards)
+        format!(
+            "{:032x}-{}-s{}-g{}",
+            key.fingerprint, key.kind, key.shards, key.generation
+        )
+    }
+
+    /// Content-addressed delta-artifact id: `<fingerprint:032x>-g<gen>`.
+    /// Deltas are per workload *family* (one delta serves every index
+    /// kind/shard variant of the workload), so the id carries no
+    /// kind/shards component.
+    pub fn delta_id(fingerprint: u128, generation: u64) -> String {
+        format!("{fingerprint:032x}-g{generation}")
     }
 
     /// Entry for `key`, if cataloged.
@@ -93,7 +127,71 @@ impl Manifest {
         self.entries.iter().map(|(k, v)| (k.as_str(), v))
     }
 
-    /// Serialize to the manifest JSON document.
+    /// The newest cataloged snapshot of `key`'s workload family (same
+    /// fingerprint, kind, shards) at a generation ≤ `key.generation`, for
+    /// the generation-aware restore path: an exact-generation snapshot is
+    /// served directly, an older one is patched forward with the delta
+    /// chain. Returns the snapshot's generation and entry.
+    pub fn latest_snapshot(&self, key: &WorkloadKey) -> Option<(u64, &ManifestEntry)> {
+        self.entries
+            .values()
+            .filter(|e| {
+                e.fingerprint == key.fingerprint
+                    && e.kind == key.kind
+                    && e.shards == key.shards
+                    && e.generation <= key.generation
+            })
+            .max_by_key(|e| e.generation)
+            .map(|e| (e.generation, e))
+    }
+
+    /// Snapshot entries of `key`'s family strictly below `key.generation`
+    /// — the entries a compaction supersedes. Returns the removed entries
+    /// so the caller can delete their files.
+    pub fn remove_superseded_snapshots(&mut self, key: &WorkloadKey) -> Vec<ManifestEntry> {
+        let ids: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| {
+                e.fingerprint == key.fingerprint
+                    && e.kind == key.kind
+                    && e.shards == key.shards
+                    && e.generation < key.generation
+            })
+            .map(|(id, _)| id.clone())
+            .collect();
+        ids.iter().filter_map(|id| self.entries.remove(id)).collect()
+    }
+
+    /// Insert (or replace) the delta entry producing `generation` of the
+    /// `fingerprint` family.
+    pub fn insert_delta(&mut self, entry: DeltaEntry) {
+        self.deltas
+            .insert(Self::delta_id(entry.fingerprint, entry.generation), entry);
+    }
+
+    /// The cataloged delta producing `generation` of `fingerprint`, if any.
+    pub fn get_delta(&self, fingerprint: u128, generation: u64) -> Option<&DeltaEntry> {
+        self.deltas.get(&Self::delta_id(fingerprint, generation))
+    }
+
+    /// Drop a cataloged delta (an unreadable file), if present.
+    pub fn remove_delta(&mut self, fingerprint: u128, generation: u64) -> Option<DeltaEntry> {
+        self.deltas.remove(&Self::delta_id(fingerprint, generation))
+    }
+
+    /// Every cataloged delta, in sorted id order.
+    pub fn iter_deltas(&self) -> impl Iterator<Item = &DeltaEntry> {
+        self.deltas.values()
+    }
+
+    /// Number of cataloged deltas.
+    pub fn delta_count(&self) -> usize {
+        self.deltas.len()
+    }
+
+    /// Serialize to the manifest JSON document. Fingerprints are hex
+    /// strings (128 bits do not fit a JSON number losslessly).
     pub fn to_json(&self) -> Json {
         let artifacts: BTreeMap<String, Json> = self
             .entries
@@ -103,14 +201,35 @@ impl Manifest {
                 obj.insert("file".to_string(), Json::Str(e.file.clone()));
                 obj.insert("kind".to_string(), Json::Str(e.kind.to_string()));
                 obj.insert("shards".to_string(), Json::Num(e.shards as f64));
+                obj.insert(
+                    "fingerprint".to_string(),
+                    Json::Str(format!("{:032x}", e.fingerprint)),
+                );
+                obj.insert("generation".to_string(), Json::Num(e.generation as f64));
                 obj.insert("bytes".to_string(), Json::Num(e.bytes as f64));
                 obj.insert("build_us".to_string(), Json::Num(e.build_us as f64));
+                (id.clone(), Json::Obj(obj))
+            })
+            .collect();
+        let deltas: BTreeMap<String, Json> = self
+            .deltas
+            .iter()
+            .map(|(id, e)| {
+                let mut obj = BTreeMap::new();
+                obj.insert("file".to_string(), Json::Str(e.file.clone()));
+                obj.insert(
+                    "fingerprint".to_string(),
+                    Json::Str(format!("{:032x}", e.fingerprint)),
+                );
+                obj.insert("generation".to_string(), Json::Num(e.generation as f64));
+                obj.insert("bytes".to_string(), Json::Num(e.bytes as f64));
                 (id.clone(), Json::Obj(obj))
             })
             .collect();
         let mut doc = BTreeMap::new();
         doc.insert("version".to_string(), Json::Num(MANIFEST_VERSION as f64));
         doc.insert("artifacts".to_string(), Json::Obj(artifacts));
+        doc.insert("deltas".to_string(), Json::Obj(deltas));
         Json::Obj(doc)
     }
 
@@ -129,6 +248,34 @@ impl Manifest {
             Some(Json::Obj(m)) => m,
             _ => anyhow::bail!("manifest: missing artifacts object"),
         };
+        // Only bare file names inside the store directory are legal: the
+        // artifact loader joins this onto the store root and, on a failed
+        // decode, *deletes* the resolved path — a manifest must never be
+        // able to point that at an arbitrary file.
+        let bare_file = |id: &str, e: &Json| -> Result<String> {
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest entry {id}: missing file"))?
+                .to_string();
+            anyhow::ensure!(
+                !file.is_empty()
+                    && !file.contains('/')
+                    && !file.contains('\\')
+                    && file != ".."
+                    && file != ".",
+                "manifest entry {id}: file {file:?} is not a bare file name"
+            );
+            Ok(file)
+        };
+        let hex_fp = |id: &str, e: &Json| -> Result<u128> {
+            let s = e
+                .get("fingerprint")
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest entry {id}: missing fingerprint"))?;
+            u128::from_str_radix(s, 16)
+                .with_context(|| format!("manifest entry {id}: bad fingerprint {s:?}"))
+        };
         let mut entries = BTreeMap::new();
         for (id, e) in artifacts {
             let field = |name: &str| -> Result<u64> {
@@ -142,35 +289,39 @@ impl Manifest {
                 .with_context(|| format!("manifest entry {id}: missing kind"))?
                 .parse()
                 .map_err(|err: String| anyhow::anyhow!("manifest entry {id}: {err}"))?;
-            let file = e
-                .get("file")
-                .and_then(Json::as_str)
-                .with_context(|| format!("manifest entry {id}: missing file"))?
-                .to_string();
-            // Only bare file names inside the store directory are legal:
-            // the artifact loader joins this onto the store root and, on a
-            // failed decode, *deletes* the resolved path — a manifest must
-            // never be able to point that at an arbitrary file.
-            anyhow::ensure!(
-                !file.is_empty()
-                    && !file.contains('/')
-                    && !file.contains('\\')
-                    && file != ".."
-                    && file != ".",
-                "manifest entry {id}: file {file:?} is not a bare file name"
-            );
             entries.insert(
                 id.clone(),
                 ManifestEntry {
-                    file,
+                    file: bare_file(id, e)?,
                     kind,
                     shards: field("shards")? as usize,
+                    fingerprint: hex_fp(id, e)?,
+                    generation: field("generation")?,
                     bytes: field("bytes")?,
                     build_us: field("build_us")?,
                 },
             );
         }
-        Ok(Manifest { entries })
+        let mut deltas = BTreeMap::new();
+        if let Some(Json::Obj(m)) = doc.get("deltas") {
+            for (id, e) in m {
+                let field = |name: &str| -> Result<u64> {
+                    e.get(name)
+                        .and_then(Json::as_u64)
+                        .with_context(|| format!("manifest delta {id}: missing {name}"))
+                };
+                deltas.insert(
+                    id.clone(),
+                    DeltaEntry {
+                        file: bare_file(id, e)?,
+                        fingerprint: hex_fp(id, e)?,
+                        generation: field("generation")?,
+                        bytes: field("bytes")?,
+                    },
+                );
+            }
+        }
+        Ok(Manifest { entries, deltas })
     }
 
     /// Load a manifest from disk, strictly: a missing file is an empty
@@ -217,11 +368,29 @@ mod tests {
     use super::*;
 
     fn key(fp: u128, kind: IndexKind, shards: usize) -> WorkloadKey {
-        WorkloadKey { fingerprint: fp, kind, shards }
+        WorkloadKey { fingerprint: fp, kind, shards, generation: 0 }
     }
 
     fn entry(file: &str, kind: IndexKind, shards: usize) -> ManifestEntry {
-        ManifestEntry { file: file.to_string(), kind, shards, bytes: 123, build_us: 7 }
+        entry_at(file, kind, shards, 0, 0)
+    }
+
+    fn entry_at(
+        file: &str,
+        kind: IndexKind,
+        shards: usize,
+        fp: u128,
+        generation: u64,
+    ) -> ManifestEntry {
+        ManifestEntry {
+            file: file.to_string(),
+            kind,
+            shards,
+            fingerprint: fp,
+            generation,
+            bytes: 123,
+            build_us: 7,
+        }
     }
 
     fn tmp_path(name: &str) -> std::path::PathBuf {
@@ -246,6 +415,60 @@ mod tests {
             }
         }
         assert!(ids[0].contains("flat"));
+        assert_ne!(
+            Manifest::artifact_id(&base),
+            Manifest::artifact_id(&base.at_generation(3)),
+            "generations get distinct artifact ids"
+        );
+    }
+
+    /// The generation-aware restore scan: newest family snapshot at or
+    /// below the requested generation; compaction removes the superseded
+    /// ones; the delta catalog round-trips.
+    #[test]
+    fn latest_snapshot_and_delta_catalog() {
+        let mut m = Manifest::new();
+        let fam = key(0x2a, IndexKind::Flat, 1);
+        m.insert(&fam, entry_at("g0.idx", IndexKind::Flat, 1, 0x2a, 0));
+        m.insert(&fam.at_generation(2), entry_at("g2.idx", IndexKind::Flat, 1, 0x2a, 2));
+        // different kind: not the same family
+        m.insert(
+            &key(0x2a, IndexKind::Ivf, 1).at_generation(3),
+            entry_at("ivf.idx", IndexKind::Ivf, 1, 0x2a, 3),
+        );
+
+        let (g, e) = m.latest_snapshot(&fam.at_generation(5)).unwrap();
+        assert_eq!((g, e.file.as_str()), (2, "g2.idx"));
+        let (g, e) = m.latest_snapshot(&fam.at_generation(1)).unwrap();
+        assert_eq!((g, e.file.as_str()), (0, "g0.idx"));
+        assert!(m.latest_snapshot(&key(0x2b, IndexKind::Flat, 1)).is_none());
+
+        for gen in [1u64, 2] {
+            m.insert_delta(DeltaEntry {
+                file: format!("d{gen}.delta"),
+                fingerprint: 0x2a,
+                generation: gen,
+                bytes: 9,
+            });
+        }
+        assert_eq!(m.delta_count(), 2);
+        assert_eq!(m.get_delta(0x2a, 1).unwrap().file, "d1.delta");
+        assert!(m.get_delta(0x2a, 3).is_none());
+
+        // compaction at generation 5 removes the older family snapshots
+        // (both of them), leaving the other-kind snapshot alone
+        m.insert(&fam.at_generation(5), entry_at("g5.idx", IndexKind::Flat, 1, 0x2a, 5));
+        let removed = m.remove_superseded_snapshots(&fam.at_generation(5));
+        let mut files: Vec<&str> = removed.iter().map(|e| e.file.as_str()).collect();
+        files.sort_unstable();
+        assert_eq!(files, vec!["g0.idx", "g2.idx"]);
+        assert_eq!(m.len(), 2, "g5 + the ivf snapshot survive");
+
+        // the full catalog (snapshots + deltas) round-trips through JSON
+        let mut back =
+            Manifest::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.remove_delta(0x2a, 1).unwrap().bytes, 9);
     }
 
     #[test]
@@ -294,9 +517,11 @@ mod tests {
         assert!(Manifest::load(&path).is_err(), "strict load must report corruption");
         assert!(Manifest::load_or_empty(&path).is_empty(), "tolerant load degrades");
 
-        // wrong version is also rejected strictly
+        // wrong versions (including the retired v1) are rejected strictly
         std::fs::write(&path, "{\"version\":99,\"artifacts\":{}}").unwrap();
         assert!(Manifest::load(&path).is_err());
+        std::fs::write(&path, "{\"version\":1,\"artifacts\":{}}").unwrap();
+        assert!(Manifest::load(&path).is_err(), "v1 manifests are not reinterpreted");
 
         // a file field that escapes the store directory is rejected — the
         // loader deletes the resolved path on decode failure, so a
@@ -305,14 +530,23 @@ mod tests {
             std::fs::write(
                 &path,
                 format!(
-                    "{{\"version\":1,\"artifacts\":{{\"x\":{{\"file\":{},\
-                     \"kind\":\"flat\",\"shards\":1,\"bytes\":1,\"build_us\":1}}}}}}",
+                    "{{\"version\":2,\"artifacts\":{{\"x\":{{\"file\":{},\
+                     \"kind\":\"flat\",\"shards\":1,\"fingerprint\":\"2a\",\
+                     \"generation\":0,\"bytes\":1,\"build_us\":1}}}},\"deltas\":{{}}}}",
                     Json::Str(bad.to_string())
                 ),
             )
             .unwrap();
             assert!(Manifest::load(&path).is_err(), "file {bad:?} must be rejected");
         }
+        // the same traversal guard covers the delta catalog
+        std::fs::write(
+            &path,
+            "{\"version\":2,\"artifacts\":{},\"deltas\":{\"x\":{\"file\":\"../d\",\
+             \"fingerprint\":\"2a\",\"generation\":1,\"bytes\":1}}}",
+        )
+        .unwrap();
+        assert!(Manifest::load(&path).is_err(), "delta traversal must be rejected");
 
         let _ = std::fs::remove_file(&path);
 

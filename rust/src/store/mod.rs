@@ -29,13 +29,14 @@ pub mod manifest;
 pub mod tiered;
 
 pub use format::StoreError;
-pub use manifest::{Manifest, ManifestEntry, MANIFEST_FILE};
+pub use manifest::{DeltaEntry, Manifest, ManifestEntry, MANIFEST_FILE};
 pub use tiered::{TieredEvent, TieredIndexCache};
 
 use crate::coordinator::cache::{CachedIndex, WorkloadKey};
+use crate::mips::WorkloadDelta;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Lifetime statistics of a [`DiskStore`].
@@ -43,6 +44,8 @@ use std::time::{Duration, Instant};
 pub struct StoreStats {
     /// Artifacts currently cataloged.
     pub artifacts: usize,
+    /// Workload-delta artifacts currently cataloged (DESIGN.md §9).
+    pub deltas: usize,
     /// Loads that decoded an artifact successfully.
     pub hits: u64,
     /// Loads that found no artifact for the key.
@@ -119,7 +122,7 @@ impl DiskStore {
     /// Statistics snapshot.
     pub fn stats(&self) -> StoreStats {
         let g = self.inner.lock().unwrap();
-        StoreStats { artifacts: g.manifest.len(), ..g.stats }
+        StoreStats { artifacts: g.manifest.len(), deltas: g.manifest.delta_count(), ..g.stats }
     }
 
     /// True when an artifact for `key` is cataloged (no I/O).
@@ -182,6 +185,14 @@ impl DiskStore {
     /// Seal `value` into an artifact for `key`: write the file via
     /// temp-then-rename, then atomically rewrite the manifest. Returns the
     /// artifact size in bytes.
+    ///
+    /// Writing a snapshot is also the *compaction* step of the dynamic
+    /// workload policy (DESIGN.md §9): snapshots of the same family (same
+    /// fingerprint, kind, shards) at older generations are superseded —
+    /// their catalog entries and files are removed. Delta artifacts are
+    /// retained: they are tiny, and the full chain is what reconstructs
+    /// the effective workload (and the registry's generation state) after
+    /// a restart.
     pub fn save(
         &self,
         key: &WorkloadKey,
@@ -200,15 +211,181 @@ impl DiskStore {
             file,
             kind: key.kind,
             shards: key.shards,
+            fingerprint: key.fingerprint,
+            generation: key.generation,
             bytes: bytes.len() as u64,
             build_us: build_time.as_micros() as u64,
         };
+        let superseded = {
+            let mut g = self.inner.lock().unwrap();
+            g.manifest.insert(key, entry);
+            let superseded = g.manifest.remove_superseded_snapshots(key);
+            g.manifest.save(&manifest_path)?;
+            g.stats.writes += 1;
+            g.stats.bytes_written += bytes.len() as u64;
+            superseded
+        };
+        for old in superseded {
+            let _ = std::fs::remove_file(self.dir.join(&old.file));
+        }
+        Ok(bytes.len() as u64)
+    }
+
+    /// Persist one workload delta as a compact artifact (DESIGN.md §9).
+    /// Idempotent: a delta already cataloged for `(fingerprint,
+    /// generation)` is left untouched (deltas are deterministic per
+    /// generation, so re-deriving the same bytes would be wasted I/O).
+    /// Returns the artifact size in bytes.
+    pub fn save_delta(
+        &self,
+        fingerprint: u128,
+        generation: u64,
+        delta: &WorkloadDelta,
+    ) -> Result<u64> {
+        {
+            let g = self.inner.lock().unwrap();
+            if let Some(existing) = g.manifest.get_delta(fingerprint, generation) {
+                return Ok(existing.bytes);
+            }
+        }
+        let id = Manifest::delta_id(fingerprint, generation);
+        let file = format!("{id}.delta");
+        let path = self.dir.join(&file);
+        let bytes = format::encode_delta_artifact(fingerprint, generation, delta);
+        write_atomic(&path, &bytes)
+            .with_context(|| format!("persisting delta artifact {file}"))?;
+
+        let manifest_path = self.dir.join(MANIFEST_FILE);
+        let entry = DeltaEntry {
+            file,
+            fingerprint,
+            generation,
+            bytes: bytes.len() as u64,
+        };
         let mut g = self.inner.lock().unwrap();
-        g.manifest.insert(key, entry);
+        g.manifest.insert_delta(entry);
         g.manifest.save(&manifest_path)?;
         g.stats.writes += 1;
         g.stats.bytes_written += bytes.len() as u64;
         Ok(bytes.len() as u64)
+    }
+
+    /// Load the delta chain taking `fingerprint` from generation
+    /// `from` (exclusive) to `to` (inclusive). Returns `None` if any link
+    /// is missing or unreadable — the caller falls back to a fresh build;
+    /// unreadable links are dropped from the catalog like bad snapshots.
+    pub fn load_deltas(
+        &self,
+        fingerprint: u128,
+        from: u64,
+        to: u64,
+    ) -> Option<Vec<Arc<WorkloadDelta>>> {
+        let mut chain = Vec::with_capacity(to.saturating_sub(from) as usize);
+        for generation in from + 1..=to {
+            let entry = {
+                let g = self.inner.lock().unwrap();
+                g.manifest.get_delta(fingerprint, generation).cloned()?
+            };
+            let path = self.dir.join(&entry.file);
+            let decoded = std::fs::read(&path)
+                .map_err(|e| e.to_string())
+                .and_then(|bytes| {
+                    format::decode_delta_artifact(&bytes).map_err(|e| e.to_string())
+                });
+            match decoded {
+                Ok((fp, produced, delta)) if fp == fingerprint && produced == generation => {
+                    chain.push(Arc::new(delta));
+                }
+                other => {
+                    let why = match other {
+                        Ok(_) => "delta describes a different workload/generation".to_string(),
+                        Err(e) => e,
+                    };
+                    eprintln!(
+                        "warning: dropping unusable delta artifact {path:?}: {why} \
+                         (falling back to rebuild)"
+                    );
+                    let _ = std::fs::remove_file(&path);
+                    let manifest_path = self.dir.join(MANIFEST_FILE);
+                    let mut g = self.inner.lock().unwrap();
+                    g.stats.load_failures += 1;
+                    if g.manifest.remove_delta(fingerprint, generation).is_some() {
+                        let _ = g.manifest.save(&manifest_path);
+                    }
+                    return None;
+                }
+            }
+        }
+        Some(chain)
+    }
+
+    /// The newest cataloged snapshot of `key`'s family at a generation
+    /// ≤ `key.generation`, decoded: `(found generation, entry, recorded
+    /// build, decode wall-clock)`. An exact-generation snapshot serves
+    /// directly; an older one is the base the caller patches forward.
+    /// Failures behave like [`DiskStore::load`]: drop the catalog entry,
+    /// return `None`, rebuild.
+    pub fn load_latest(
+        &self,
+        key: &WorkloadKey,
+    ) -> Option<(u64, CachedIndex, Duration, Duration)> {
+        let found = {
+            let mut g = self.inner.lock().unwrap();
+            match g.manifest.latest_snapshot(key).map(|(generation, _)| generation) {
+                Some(generation) => generation,
+                None => {
+                    g.stats.misses += 1;
+                    return None;
+                }
+            }
+        };
+        self.load(&key.at_generation(found))
+            .map(|(value, build, took)| (found, value, build, took))
+    }
+
+    /// Generation of the newest cataloged snapshot of `key`'s family at or
+    /// below `key.generation` (no I/O) — the compaction-due check.
+    pub fn latest_snapshot_generation(&self, key: &WorkloadKey) -> Option<u64> {
+        let g = self.inner.lock().unwrap();
+        g.manifest.latest_snapshot(key).map(|(generation, _)| generation)
+    }
+
+    /// Every cataloged delta chain, grouped by family fingerprint and
+    /// decoded, each chain contiguous from generation 1 (a gap truncates
+    /// the chain at the last contiguous link, with a warning). Used to
+    /// restore a [`crate::workloads::WorkloadRegistry`] after a restart.
+    pub fn delta_chains(&self) -> Vec<(u128, Vec<Arc<WorkloadDelta>>)> {
+        let families: Vec<(u128, u64)> = {
+            let g = self.inner.lock().unwrap();
+            let mut max_gen: std::collections::BTreeMap<u128, u64> =
+                std::collections::BTreeMap::new();
+            for d in g.manifest.iter_deltas() {
+                let e = max_gen.entry(d.fingerprint).or_insert(0);
+                *e = (*e).max(d.generation);
+            }
+            max_gen.into_iter().collect()
+        };
+        let mut chains = Vec::with_capacity(families.len());
+        for (fingerprint, top) in families {
+            // walk 1..=top but stop at the first missing/unreadable link
+            let mut chain = Vec::new();
+            for generation in 1..=top {
+                match self.load_deltas(fingerprint, generation - 1, generation) {
+                    Some(mut link) => chain.append(&mut link),
+                    None => {
+                        eprintln!(
+                            "warning: delta chain for {fingerprint:032x} breaks at \
+                             generation {generation}; restoring the prefix"
+                        );
+                        break;
+                    }
+                }
+            }
+            if !chain.is_empty() {
+                chains.push((fingerprint, chain));
+            }
+        }
+        chains
     }
 }
 
@@ -236,7 +413,7 @@ mod tests {
         let dir = scratch_dir("roundtrip");
         let store = DiskStore::open(&dir).unwrap();
         let vs = random_set(50, 4, 1);
-        let key = WorkloadKey { fingerprint: 5, kind: IndexKind::Flat, shards: 1 };
+        let key = WorkloadKey { fingerprint: 5, kind: IndexKind::Flat, shards: 1, generation: 0 };
         let value = CachedIndex::Mono(build_index(IndexKind::Flat, vs, 1));
 
         assert!(store.load(&key).is_none(), "empty store must miss");
@@ -263,11 +440,62 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    /// Delta persistence + generation-aware restore: a snapshot at g0 plus
+    /// the delta chain reconstructs the family state; compaction (a newer
+    /// snapshot) supersedes the old file but keeps the deltas.
+    #[test]
+    fn delta_chain_persists_and_snapshot_compaction_prunes() {
+        let dir = scratch_dir("deltas");
+        let store = DiskStore::open(&dir).unwrap();
+        let fp = 0xABCu128;
+        let key = WorkloadKey { fingerprint: fp, kind: IndexKind::Flat, shards: 1, generation: 0 };
+        let vs = random_set(30, 3, 7);
+        let g0 = CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1));
+        store.save(&key, &g0, Duration::from_millis(2)).unwrap();
+
+        // two deltas: g1 tombstones a row, g2 inserts one
+        let d1 = WorkloadDelta::new(crate::mips::VectorSet::zeros(0, 3), vec![4]);
+        let d2 = WorkloadDelta::new(random_set(1, 3, 8), vec![]);
+        store.save_delta(fp, 1, &d1).unwrap();
+        let delta_bytes = store.save_delta(fp, 2, &d2).unwrap();
+        assert_eq!(store.save_delta(fp, 2, &d2).unwrap(), delta_bytes, "idempotent");
+        assert_eq!(store.stats().deltas, 2);
+
+        // the chain loads contiguously; a gap returns None
+        let chain = store.load_deltas(fp, 0, 2).unwrap();
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].tombstoned, vec![4]);
+        assert!(store.load_deltas(fp, 0, 3).is_none(), "gap at g3");
+
+        // generation-aware restore: request g2, find the g0 snapshot
+        let (found, _, build, _) = store.load_latest(&key.at_generation(2)).unwrap();
+        assert_eq!(found, 0);
+        assert_eq!(build, Duration::from_millis(2));
+
+        // compaction: a g2 snapshot supersedes g0 (file + entry) but the
+        // deltas survive — they reconstruct the workload after restarts
+        let patched = CachedIndex::Mono(build_index(IndexKind::Flat, vs, 2));
+        store.save(&key.at_generation(2), &patched, Duration::from_millis(3)).unwrap();
+        let s = store.stats();
+        assert_eq!((s.artifacts, s.deltas), (1, 2));
+        assert!(!dir.join(format!("{}.idx", Manifest::artifact_id(&key))).exists());
+        let (found, _, _, _) = store.load_latest(&key.at_generation(2)).unwrap();
+        assert_eq!(found, 2, "exact-generation snapshot now serves");
+
+        // restart: the registry-restore scan sees the full chain
+        let store2 = DiskStore::open(&dir).unwrap();
+        let chains = store2.delta_chains();
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].0, fp);
+        assert_eq!(chains[0].1.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     #[test]
     fn corrupt_artifact_is_dropped_and_misses() {
         let dir = scratch_dir("corrupt");
         let store = DiskStore::open(&dir).unwrap();
-        let key = WorkloadKey { fingerprint: 6, kind: IndexKind::Flat, shards: 1 };
+        let key = WorkloadKey { fingerprint: 6, kind: IndexKind::Flat, shards: 1, generation: 0 };
         let value = CachedIndex::Mono(build_index(IndexKind::Flat, random_set(30, 3, 2), 1));
         store.save(&key, &value, Duration::ZERO).unwrap();
 

@@ -18,10 +18,17 @@
 
 use super::DiskStore;
 use crate::coordinator::cache::{CacheReport, CachedIndex, IndexCache, WorkloadKey};
-use crate::mips::VectorSet;
+use crate::mips::{VectorSet, WorkloadDelta};
 use anyhow::Result;
 use std::path::Path;
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How many generations of cheap delta artifacts accumulate before the
+/// tiered cache seals a full snapshot at the current generation
+/// (superseding the older family snapshots) — the deltas/snapshot
+/// compaction policy of DESIGN.md §9.
+pub const COMPACT_EVERY: u64 = 4;
 
 /// What one tiered consultation did — the two-tier analogue of
 /// [`crate::coordinator::CacheEvent`].
@@ -31,6 +38,10 @@ pub struct TieredEvent {
     pub l1_hit: bool,
     /// Restored from the persistent tier and promoted into L1.
     pub l2_hit: bool,
+    /// Served by patching a stale-but-patchable older generation forward
+    /// (combined with `l1_hit`/`l2_hit` to say which tier held the base)
+    /// — never by handing out the stale entry itself (DESIGN.md §9).
+    pub patched: bool,
     /// Build cost actually paid by this call (zero unless both tiers
     /// missed).
     pub build_time: Duration,
@@ -39,11 +50,19 @@ pub struct TieredEvent {
     pub saved: Duration,
     /// Wall-clock spent decoding the artifact (promotions only).
     pub promote_time: Duration,
+    /// Wall-clock spent applying workload deltas (patched serves only).
+    pub patch_time: Duration,
 }
 
 impl TieredEvent {
-    /// Fold this consultation into a per-job [`CacheReport`].
+    /// Fold this consultation into a per-job [`CacheReport`]. Patch time
+    /// accrues in its own accumulator — `promoted` stays what it is
+    /// documented to be, time spent decoding store artifacts.
     pub fn fold_into(&self, report: &mut CacheReport) {
+        if self.patched {
+            report.patched += 1;
+            report.patch_time += self.patch_time;
+        }
         if self.l1_hit {
             report.hits += 1;
             report.saved += self.saved;
@@ -100,26 +119,123 @@ impl TieredIndexCache {
     /// `build` (populate both tiers). The build and all file I/O run
     /// outside every lock; racing workers on one cold key both build —
     /// wasted work, never a wrong result, exactly like the L1-only cache.
+    ///
+    /// Static-workload entry point: equivalent to
+    /// [`TieredIndexCache::get_or_build_dynamic`] with no delta source, so
+    /// stale-but-patchable promotion never applies.
     pub fn get_or_build(
         &self,
         key: WorkloadKey,
         build: impl FnOnce() -> (CachedIndex, Duration),
     ) -> (CachedIndex, TieredEvent) {
+        self.get_or_build_dynamic(key, |_| None, build)
+    }
+
+    /// The generation-aware serving-path primitive (DESIGN.md §9). Lookup
+    /// order per [`WorkloadKey`]:
+    ///
+    /// ```text
+    /// L1 exact hit                  -> Arc clone
+    /// L1 older generation + deltas  -> patch forward, promote, drop stale
+    /// L2 exact snapshot             -> decode + promote
+    /// L2 older snapshot + deltas    -> decode + patch forward + promote
+    /// otherwise                     -> build at key.generation, populate
+    /// ```
+    ///
+    /// `deltas_from(g)` must return the delta chain taking the workload
+    /// from generation `g` to `key.generation` (the in-memory
+    /// [`crate::workloads::WorkloadRegistry`] in a serving process; `None`
+    /// falls back to the store's persisted chain, then to a rebuild). A
+    /// stale entry is **never** returned: either the chain patches it all
+    /// the way to `key.generation`, or the lookup degrades to a build —
+    /// the `stale_generation_serves` metric stays structurally zero.
+    pub fn get_or_build_dynamic(
+        &self,
+        key: WorkloadKey,
+        deltas_from: impl Fn(u64) -> Option<Vec<Arc<WorkloadDelta>>>,
+        build: impl FnOnce() -> (CachedIndex, Duration),
+    ) -> (CachedIndex, TieredEvent) {
         if let Some((value, saved)) = self.l1.lookup(&key) {
             return (value, TieredEvent { l1_hit: true, saved, ..Default::default() });
         }
+        // stale-but-patchable in memory: patch forward, promote, evict the
+        // superseded generation so it can never be offered again
+        if key.generation > 0 {
+            if let Some((stale_key, value, recorded_build)) = self.l1.lookup_patchable(&key) {
+                if let Some(deltas) = self.chain_for(&key, stale_key.generation, &deltas_from)
+                {
+                    let t0 = Instant::now();
+                    match patch_chain(&value, stale_key.generation, &deltas, &key) {
+                        Ok(patched) => {
+                            let patch_time = t0.elapsed();
+                            self.l1.remove(&stale_key);
+                            self.l1.insert(key, patched.clone(), recorded_build);
+                            self.maybe_compact(&key, &patched, recorded_build);
+                            return (
+                                patched,
+                                TieredEvent {
+                                    l1_hit: true,
+                                    patched: true,
+                                    saved: recorded_build,
+                                    patch_time,
+                                    ..Default::default()
+                                },
+                            );
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "warning: in-memory patch of workload \
+                                 {:032x} to generation {} failed ({e}); rebuilding",
+                                key.fingerprint, key.generation
+                            );
+                        }
+                    }
+                }
+            }
+        }
         if let Some(store) = &self.l2 {
-            if let Some((value, recorded_build, promote_time)) = store.load(&key) {
-                self.l1.insert(key, value.clone(), recorded_build);
-                return (
-                    value,
-                    TieredEvent {
-                        l2_hit: true,
-                        saved: recorded_build,
-                        promote_time,
-                        ..Default::default()
-                    },
-                );
+            if let Some((found, value, recorded_build, promote_time)) = store.load_latest(&key)
+            {
+                if found == key.generation {
+                    self.l1.insert(key, value.clone(), recorded_build);
+                    return (
+                        value,
+                        TieredEvent {
+                            l2_hit: true,
+                            saved: recorded_build,
+                            promote_time,
+                            ..Default::default()
+                        },
+                    );
+                }
+                if let Some(deltas) = self.chain_for(&key, found, &deltas_from) {
+                    let t0 = Instant::now();
+                    match patch_chain(&value, found, &deltas, &key) {
+                        Ok(patched) => {
+                            let patch_time = t0.elapsed();
+                            self.l1.insert(key, patched.clone(), recorded_build);
+                            self.maybe_compact(&key, &patched, recorded_build);
+                            return (
+                                patched,
+                                TieredEvent {
+                                    l2_hit: true,
+                                    patched: true,
+                                    saved: recorded_build,
+                                    promote_time,
+                                    patch_time,
+                                    ..Default::default()
+                                },
+                            );
+                        }
+                        Err(e) => {
+                            eprintln!(
+                                "warning: store-side patch of workload \
+                                 {:032x} to generation {} failed ({e}); rebuilding",
+                                key.fingerprint, key.generation
+                            );
+                        }
+                    }
+                }
             }
         }
         let (value, build_time) = build();
@@ -131,6 +247,75 @@ impl TieredIndexCache {
         }
         (value, TieredEvent { build_time, ..Default::default() })
     }
+
+    /// The delta chain from `from` to `key.generation`: the caller's
+    /// in-memory source first, the store's persisted chain as fallback.
+    fn chain_for(
+        &self,
+        key: &WorkloadKey,
+        from: u64,
+        deltas_from: &impl Fn(u64) -> Option<Vec<Arc<WorkloadDelta>>>,
+    ) -> Option<Vec<Arc<WorkloadDelta>>> {
+        let chain = deltas_from(from).or_else(|| {
+            self.l2
+                .as_ref()
+                .and_then(|s| s.load_deltas(key.fingerprint, from, key.generation))
+        })?;
+        // refuse an incomplete chain: patching short of key.generation
+        // would be a stale serve
+        if chain.len() as u64 == key.generation - from {
+            Some(chain)
+        } else {
+            None
+        }
+    }
+
+    /// Deltas/snapshot compaction (DESIGN.md §9): once the current
+    /// generation is [`COMPACT_EVERY`] past the newest persisted family
+    /// snapshot (or none exists), seal a full snapshot at `key` — the
+    /// store prunes the superseded family snapshots; delta artifacts stay.
+    fn maybe_compact(&self, key: &WorkloadKey, value: &CachedIndex, build_time: Duration) {
+        if let Some(store) = &self.l2 {
+            let due = match store.latest_snapshot_generation(key) {
+                Some(g) => key.generation.saturating_sub(g) >= COMPACT_EVERY,
+                None => true,
+            };
+            if due {
+                if let Err(e) = store.save(key, value, build_time) {
+                    eprintln!(
+                        "warning: artifact store compaction failed ({e:#}); serving from memory"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Derive the deterministic patch seed for generation `g` of a workload
+/// family — stable across processes so every serving node patching the
+/// same chain builds the same structures.
+fn patch_seed(fingerprint: u128, generation: u64) -> u64 {
+    ((fingerprint >> 64) as u64)
+        ^ (fingerprint as u64)
+        ^ generation.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ 0xD13A
+}
+
+/// Apply a delta chain to a cached entry, one generation at a time.
+fn patch_chain(
+    base: &CachedIndex,
+    from: u64,
+    deltas: &[Arc<WorkloadDelta>],
+    key: &WorkloadKey,
+) -> Result<CachedIndex, crate::mips::PatchError> {
+    let mut cur = base.clone();
+    let mut generation = from;
+    for d in deltas {
+        generation += 1;
+        let (next, _rebuilt) = cur.patch(d, patch_seed(key.fingerprint, generation))?;
+        cur = next;
+    }
+    Ok(cur)
 }
 
 #[cfg(test)]
@@ -331,6 +516,88 @@ mod tests {
         // the rebuild re-persisted a good artifact
         let again = TieredIndexCache::with_store(2, &dir).unwrap();
         tiered_expect_l2(&again, k);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The dynamic-workload serving path (DESIGN.md §9): a generation-1
+    /// request against a generation-0 entry patches forward and promotes —
+    /// in memory, across a restart from the persisted snapshot + delta,
+    /// and never serves the stale generation.
+    #[test]
+    fn stale_generations_patch_forward_never_serve() {
+        let dir = scratch_dir("dynamic");
+        let vs = random_set(50, 4, 9);
+        let base_key = key(&vs, IndexKind::Flat, 1);
+        let delta = Arc::new(crate::mips::WorkloadDelta::new(
+            random_set(2, 4, 10),
+            vec![7, 30],
+        ));
+        let effective = crate::mips::apply_delta_to_vectors(&vs, &delta).unwrap();
+        let chain = {
+            let delta = Arc::clone(&delta);
+            move |from: u64| {
+                assert_eq!(from, 0, "chain requested from the stale generation");
+                Some(vec![Arc::clone(&delta)])
+            }
+        };
+
+        let tiered = TieredIndexCache::with_store(4, &dir).unwrap();
+        let (_, ev) = tiered.get_or_build(base_key, || {
+            (CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)), Duration::ZERO)
+        });
+        assert!(!ev.l1_hit && !ev.l2_hit);
+        tiered.store().unwrap().save_delta(base_key.fingerprint, 1, &delta).unwrap();
+
+        // generation-1 request: the resident g0 entry is patched forward
+        let g1 = base_key.at_generation(1);
+        let (value, ev) = tiered.get_or_build_dynamic(g1, &chain, || {
+            unreachable!("patchable entry resident: must patch, not rebuild")
+        });
+        assert!(ev.l1_hit && ev.patched && !ev.l2_hit);
+        assert_eq!(value.live_len(), effective.len());
+        assert!(!tiered.l1().contains(&base_key), "stale generation evicted");
+        assert!(tiered.l1().contains(&g1), "patched entry promoted");
+
+        // second consultation is a plain exact hit
+        let (_, ev) = tiered.get_or_build_dynamic(g1, &chain, || unreachable!("exact hit"));
+        assert!(ev.l1_hit && !ev.patched);
+
+        // restart: cold L1, snapshot at g0 + persisted delta on disk; the
+        // in-memory chain is absent (a fresh process), so the store chain
+        // serves
+        let restarted = TieredIndexCache::with_store(4, &dir).unwrap();
+        let (value, ev) = restarted.get_or_build_dynamic(g1, |_| None, || {
+            unreachable!("snapshot + delta on disk: must patch-restore")
+        });
+        assert!(ev.l2_hit && ev.patched);
+        assert_eq!(value.live_len(), effective.len());
+
+        // the patched flat index is bit-identical to a fresh build over
+        // the effective rows
+        match value {
+            CachedIndex::Mono(idx) => {
+                let fresh = build_index(IndexKind::Flat, effective.clone(), 1);
+                let q = vec![0.3f32; 4];
+                for (a, b) in idx.top_k(&q, 10).iter().zip(fresh.top_k(&q, 10).iter()) {
+                    assert_eq!(a.id, b.id);
+                    assert_eq!(a.score.to_bits(), b.score.to_bits());
+                }
+            }
+            _ => panic!("mono in, mono out"),
+        }
+
+        // an incomplete chain must degrade to a rebuild, never serve stale
+        let g3 = base_key.at_generation(3);
+        let rebuilt = std::cell::Cell::new(false);
+        let (_, ev) = restarted.get_or_build_dynamic(g3, |_| None, || {
+            rebuilt.set(true);
+            (
+                CachedIndex::Mono(build_index(IndexKind::Flat, effective.clone(), 1)),
+                Duration::ZERO,
+            )
+        });
+        assert!(rebuilt.get(), "missing deltas g2..g3: must rebuild");
+        assert!(!ev.patched && !ev.l1_hit && !ev.l2_hit);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

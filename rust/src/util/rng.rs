@@ -110,8 +110,17 @@ impl Rng {
     }
 
     /// Laplace(0, scale) via inverse CDF.
+    ///
+    /// Uses [`Rng::f64_open`] so `u` is strictly inside `(-0.5, 0.5)`:
+    /// the closed-interval `f64()` can return exactly 0.0, giving
+    /// `u = -0.5` and `ln(0) = -∞` — an infinite noise sample that would
+    /// poison every subsequent MWU round it touches. Note the center of
+    /// the interval is still reachable: `u == 0` maps through
+    /// `signum(+0.0) == 1.0` to a benign `-scale · ln(1) = 0` draw (there
+    /// is no `signum(0) = 0` dead zone in IEEE `f64::signum`, but callers
+    /// should not rely on the sign of a zero-magnitude draw).
     pub fn laplace(&mut self, scale: f64) -> f64 {
-        let u = self.f64() - 0.5;
+        let u = self.f64_open() - 0.5;
         -scale * u.signum() * (1.0 - 2.0 * u.abs()).ln()
     }
 
@@ -223,6 +232,21 @@ mod tests {
         let var = sq / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 2.0 * scale * scale).abs() < 0.2, "var {var}");
+    }
+
+    /// Regression: a seed-swept million draws must all be finite. The old
+    /// sampler used the closed-interval `f64()`, so a raw 0.0 produced
+    /// `u = -0.5 → ln(0) = -∞` — one poisoned measurement per unlucky
+    /// stream, caught here by sweeping many independent seeds.
+    #[test]
+    fn laplace_sweep_is_always_finite() {
+        for seed in 0..10u64 {
+            let mut r = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ 0xF1F1);
+            for _ in 0..100_000 {
+                let x = r.laplace(1.7);
+                assert!(x.is_finite(), "seed {seed}: non-finite Laplace draw {x}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,289 @@
+//! Dynamic-workload state: the per-family generation counter and delta
+//! log behind the serving stack's incremental update path (DESIGN.md §9).
+//!
+//! A workload *family* is identified by the content fingerprint of its
+//! base (generation-0) query matrix — the same fingerprint the warm-index
+//! cache keys on — so the registry needs no out-of-band naming and two
+//! processes that synthesize the same base workload agree on the family.
+//! Each `WorkloadUpdate` appends one [`WorkloadDelta`] and bumps the
+//! family's generation; release jobs read the current generation at
+//! execution time, materialize the effective query set by replaying the
+//! chain over the base, and key their index lookups at that generation —
+//! snapshot isolation per job, monotone generations per family.
+//!
+//! Deltas themselves are synthesized deterministically from
+//! `(fingerprint, generation)` ([`synthesize_delta`]), so concurrent
+//! updaters and restarted processes derive identical chains — the same
+//! determinism discipline the seed-synthesized workloads already follow.
+//!
+//! The registry is process-local state; [`WorkloadRegistry::restore`]
+//! replays the delta chains persisted by the artifact store so generation
+//! state survives restarts (single-writer per store directory, like the
+//! store itself).
+
+use crate::mips::{PatchError, VectorSet, WorkloadDelta};
+use crate::sampling::sample_distinct;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::sync::Mutex;
+
+/// One family's dynamic state.
+#[derive(Default)]
+struct FamilyState {
+    /// Current generation (0 = base workload, no updates yet).
+    generation: u64,
+    /// Live row count at `generation` (`None` until the base shape is
+    /// registered by the first job or update that touches the family).
+    live_m: Option<usize>,
+    /// `deltas[i]` produced generation `i + 1`.
+    deltas: Vec<Arc<WorkloadDelta>>,
+}
+
+/// Registry of evolving workloads, keyed by base-content fingerprint.
+/// Thread-safe; updates serialize per registry so generations are
+/// strictly monotone.
+#[derive(Default)]
+pub struct WorkloadRegistry {
+    families: Mutex<HashMap<u128, FamilyState>>,
+}
+
+impl WorkloadRegistry {
+    /// An empty registry (every workload at generation 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current generation of `fingerprint`'s family (0 if never updated).
+    pub fn generation(&self, fingerprint: u128) -> u64 {
+        self.families
+            .lock()
+            .unwrap()
+            .get(&fingerprint)
+            .map(|f| f.generation)
+            .unwrap_or(0)
+    }
+
+    /// Register the base live-row count of a family (idempotent). The
+    /// first toucher wins; callers must agree on one base shape per
+    /// fingerprint — guaranteed here because the fingerprint *is* a
+    /// content hash of the base rows.
+    pub fn ensure_base(&self, fingerprint: u128, base_m: usize) {
+        let mut families = self.families.lock().unwrap();
+        let fam = families.entry(fingerprint).or_default();
+        if fam.live_m.is_none() {
+            // replay any restored chain over the base count
+            let mut live = base_m;
+            for d in &fam.deltas {
+                live = d.live_after(live);
+            }
+            fam.live_m = Some(live);
+        }
+    }
+
+    /// The delta chain taking the family from generation `from` to `to`
+    /// (`from < to ≤ current`). `None` when the chain is not available —
+    /// the caller rebuilds instead of serving anything stale.
+    pub fn deltas(&self, fingerprint: u128, from: u64, to: u64) -> Option<Vec<Arc<WorkloadDelta>>> {
+        let families = self.families.lock().unwrap();
+        let fam = families.get(&fingerprint)?;
+        if to > fam.generation || from > to {
+            return None;
+        }
+        Some(fam.deltas[from as usize..to as usize].to_vec())
+    }
+
+    /// Append a delta synthesized deterministically from the family state
+    /// (see [`synthesize_delta`]): insert `insert` rows of dimension
+    /// `dim`, tombstone `tombstone` live rows (clamped so at least one row
+    /// survives). Atomic: the generation bump, the live-count update and
+    /// the delta append happen under one lock, so concurrent updaters
+    /// serialize into a strict chain. Returns the new generation and the
+    /// recorded delta.
+    ///
+    /// Errors when the family's base shape was never registered (call
+    /// [`WorkloadRegistry::ensure_base`] first) or the delta degenerates.
+    pub fn append_synthesized(
+        &self,
+        fingerprint: u128,
+        dim: usize,
+        insert: usize,
+        tombstone: usize,
+    ) -> anyhow::Result<(u64, Arc<WorkloadDelta>)> {
+        let mut families = self.families.lock().unwrap();
+        let fam = families
+            .entry(fingerprint)
+            .or_default();
+        let live = fam.live_m.ok_or_else(|| {
+            anyhow::anyhow!(
+                "workload {fingerprint:032x}: base shape unknown — a release job or \
+                 ensure_base must register it before updates"
+            )
+        })?;
+        let generation = fam.generation + 1;
+        let delta = synthesize_delta(fingerprint, generation, live, dim, insert, tombstone);
+        anyhow::ensure!(
+            !delta.is_empty(),
+            "workload update changes nothing (insert=0, tombstone clamps to 0)"
+        );
+        delta
+            .validate(live, dim)
+            .map_err(|e: PatchError| anyhow::anyhow!("synthesized delta invalid: {e}"))?;
+        let delta = Arc::new(delta);
+        fam.live_m = Some(delta.live_after(live));
+        fam.generation = generation;
+        fam.deltas.push(Arc::clone(&delta));
+        Ok((generation, delta))
+    }
+
+    /// Install restored delta chains (from
+    /// [`crate::store::DiskStore::delta_chains`]) into an empty registry —
+    /// generation state surviving a restart. Families already present are
+    /// left untouched.
+    pub fn restore(&self, chains: Vec<(u128, Vec<Arc<WorkloadDelta>>)>) {
+        let mut families = self.families.lock().unwrap();
+        for (fingerprint, deltas) in chains {
+            families.entry(fingerprint).or_insert_with(|| FamilyState {
+                generation: deltas.len() as u64,
+                live_m: None, // derived when the base shape registers
+                deltas,
+            });
+        }
+    }
+
+    /// Materialize the effective row set of a family at its current
+    /// generation by replaying the chain over the base rows. Returns the
+    /// effective rows and the generation they correspond to.
+    pub fn effective_vectors(
+        &self,
+        fingerprint: u128,
+        base: &VectorSet,
+    ) -> anyhow::Result<(u64, VectorSet)> {
+        self.ensure_base(fingerprint, base.len());
+        let (generation, chain) = {
+            let families = self.families.lock().unwrap();
+            match families.get(&fingerprint) {
+                Some(f) => (f.generation, f.deltas.clone()),
+                None => (0, Vec::new()),
+            }
+        };
+        if generation == 0 {
+            return Ok((0, base.clone()));
+        }
+        let mut vs = base.clone();
+        for d in &chain {
+            vs = crate::mips::apply_delta_to_vectors(&vs, d)
+                .map_err(|e| anyhow::anyhow!("replaying workload delta: {e}"))?;
+        }
+        Ok((generation, vs))
+    }
+}
+
+/// Deterministically synthesize the delta producing `generation` of the
+/// `fingerprint` family over `live` current rows: `insert` fresh binary
+/// query rows (the same query distribution the base workloads use) and
+/// `tombstone` retired ids sampled without replacement (clamped so at
+/// least one live row survives). Pure in its arguments, so every process
+/// derives the identical delta.
+pub fn synthesize_delta(
+    fingerprint: u128,
+    generation: u64,
+    live: usize,
+    dim: usize,
+    insert: usize,
+    tombstone: usize,
+) -> WorkloadDelta {
+    let seed = ((fingerprint >> 64) as u64)
+        ^ (fingerprint as u64)
+        ^ generation.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ 0x5EED_D17A;
+    let mut rng = Rng::new(seed);
+    let inserted = if insert > 0 {
+        super::binary_queries(&mut rng, insert, dim).vectors().clone()
+    } else {
+        VectorSet::zeros(0, dim)
+    };
+    // keep at least one surviving row
+    let max_tomb = (live + insert).saturating_sub(1).min(live);
+    let tombstone = tombstone.min(max_tomb);
+    let tombstoned: Vec<u32> = sample_distinct(&mut rng, live, tombstone)
+        .into_iter()
+        .map(|i| i as u32)
+        .collect();
+    WorkloadDelta::new(inserted, tombstoned)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthesized_deltas_are_deterministic_and_valid() {
+        let a = synthesize_delta(0xFACE, 3, 100, 16, 4, 2);
+        let b = synthesize_delta(0xFACE, 3, 100, 16, 4, 2);
+        assert_eq!(a.tombstoned, b.tombstoned);
+        assert_eq!(a.inserted.as_slice(), b.inserted.as_slice());
+        assert!(a.validate(100, 16).is_ok());
+        assert_eq!(a.inserted.len(), 4);
+        assert_eq!(a.tombstoned.len(), 2);
+        // a different generation gives a different delta
+        let c = synthesize_delta(0xFACE, 4, 100, 16, 4, 2);
+        assert!(c.tombstoned != a.tombstoned || c.inserted.as_slice() != a.inserted.as_slice());
+        // tombstones clamp so at least one row survives
+        let d = synthesize_delta(0xFACE, 1, 3, 4, 0, 99);
+        assert_eq!(d.tombstoned.len(), 2);
+    }
+
+    #[test]
+    fn registry_appends_monotone_generations_and_replays() {
+        let reg = WorkloadRegistry::new();
+        let fp = 0xBEEF;
+        assert_eq!(reg.generation(fp), 0);
+        // updates need the base shape first
+        assert!(reg.append_synthesized(fp, 8, 2, 1).is_err());
+
+        let mut rng = Rng::new(1);
+        let base = super::super::binary_queries(&mut rng, 20, 8).vectors().clone();
+        reg.ensure_base(fp, base.len());
+        let (g1, d1) = reg.append_synthesized(fp, 8, 2, 1).unwrap();
+        let (g2, _d2) = reg.append_synthesized(fp, 8, 1, 2).unwrap();
+        assert_eq!((g1, g2), (1, 2));
+        assert_eq!(reg.generation(fp), 2);
+
+        let chain = reg.deltas(fp, 0, 2).unwrap();
+        assert_eq!(chain.len(), 2);
+        assert_eq!(chain[0].tombstoned, d1.tombstoned);
+        assert_eq!(reg.deltas(fp, 1, 2).unwrap().len(), 1);
+        assert!(reg.deltas(fp, 0, 3).is_none(), "beyond current generation");
+
+        // effective materialization matches a manual replay
+        let (g, effective) = reg.effective_vectors(fp, &base).unwrap();
+        assert_eq!(g, 2);
+        let mut manual = base.clone();
+        for d in &chain {
+            manual = crate::mips::apply_delta_to_vectors(&manual, d).unwrap();
+        }
+        assert_eq!(effective.as_slice(), manual.as_slice());
+        assert_eq!(effective.len(), 20 - 1 + 2 - 2 + 1);
+    }
+
+    #[test]
+    fn restore_installs_chains_and_base_replay_tracks_live_count() {
+        let reg = WorkloadRegistry::new();
+        let fp = 0xD00D;
+        let d1 = Arc::new(synthesize_delta(fp, 1, 30, 4, 2, 1));
+        let d2 = Arc::new(synthesize_delta(fp, 2, 31, 4, 0, 3));
+        reg.restore(vec![(fp, vec![Arc::clone(&d1), Arc::clone(&d2)])]);
+        assert_eq!(reg.generation(fp), 2);
+        assert_eq!(reg.deltas(fp, 0, 2).unwrap().len(), 2);
+
+        // live count derives lazily once the base registers
+        reg.ensure_base(fp, 30);
+        let (g3, _) = reg.append_synthesized(fp, 4, 1, 0).unwrap();
+        assert_eq!(g3, 3);
+
+        // restore never clobbers an existing family
+        reg.restore(vec![(fp, vec![Arc::clone(&d1)])]);
+        assert_eq!(reg.generation(fp), 3);
+    }
+}

@@ -1,7 +1,11 @@
-//! Synthetic workload generators matching the paper's §5 experimental setup.
+//! Synthetic workload generators matching the paper's §5 experimental
+//! setup, plus the dynamic-workload registry (generation counters and
+//! delta logs for evolving query sets — DESIGN.md §9).
 
+pub mod dynamic;
 pub mod linear_queries;
 pub mod lp;
 
+pub use dynamic::{synthesize_delta, WorkloadRegistry};
 pub use linear_queries::{binary_queries, gaussian_histogram};
 pub use lp::{random_feasibility_lp, random_packing_lp, LpInstance, PackingLp};

@@ -188,11 +188,11 @@ fn cache_hit_skips_build_and_is_deterministic() {
     };
 
     let cache = TieredIndexCache::memory_only(2);
-    let (cold, rep_cold) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
+    let (cold, rep_cold) = execute_with_cache(&spec(1), Some(&cache), None).unwrap();
     assert_eq!((rep_cold.hits, rep_cold.misses), (0, 1));
 
     // same spec again: a hit, with a rebuilt-free (shared) index
-    let (warm, rep_warm) = execute_with_cache(&spec(1), Some(&cache)).unwrap();
+    let (warm, rep_warm) = execute_with_cache(&spec(1), Some(&cache), None).unwrap();
     assert_eq!((rep_warm.hits, rep_warm.misses), (1, 0));
     assert!(rep_warm.saved >= rep_cold.saved, "hits record skipped build time");
     assert_eq!(cache.l1().len(), 1, "hit must not add entries");
@@ -202,7 +202,7 @@ fn cache_hit_skips_build_and_is_deterministic() {
     );
 
     // fresh mechanism seed on the warm workload: still a hit, still sound
-    let (other, rep_other) = execute_with_cache(&spec(2), Some(&cache)).unwrap();
+    let (other, rep_other) = execute_with_cache(&spec(2), Some(&cache), None).unwrap();
     assert_eq!((rep_other.hits, rep_other.misses), (1, 0));
     assert!(other.quality.is_finite() && other.quality >= 0.0);
     assert_eq!(cache.l1().stats().hits, 2);
@@ -233,11 +233,11 @@ fn release_through_restored_index_is_bit_identical() {
     });
 
     let cold_cache = TieredIndexCache::with_store(2, &dir).unwrap();
-    let (cold, rep) = execute_with_cache(&spec, Some(&cold_cache)).unwrap();
+    let (cold, rep) = execute_with_cache(&spec, Some(&cold_cache), None).unwrap();
     assert_eq!((rep.l2_hits, rep.misses), (0, 1), "first run builds and persists");
 
     let restarted = TieredIndexCache::with_store(2, &dir).unwrap();
-    let (restored, rep) = execute_with_cache(&spec, Some(&restarted)).unwrap();
+    let (restored, rep) = execute_with_cache(&spec, Some(&restarted), None).unwrap();
     assert_eq!((rep.l2_hits, rep.misses), (1, 0), "restart restores, not rebuilds");
     assert!(rep.promoted > Duration::ZERO, "promotion must meter its decode time");
     assert_eq!(

@@ -4,15 +4,24 @@
 //! Each test states an invariant from the paper or the system design and
 //! checks it across hundreds of randomized instances.
 
-use fast_mwem::coordinator::{Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec};
+use fast_mwem::coordinator::{
+    CachedIndex, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
+    WorkloadKey,
+};
 use fast_mwem::lazy::{lazy_gumbel_max, LazyEm, ScoreTransform};
 use fast_mwem::lp::bregman_project;
 use fast_mwem::lp::SelectionMode;
-use fast_mwem::mips::{augment::AugmentedSpace, FlatIndex, IndexKind, MipsIndex, VectorSet};
+use fast_mwem::mips::{
+    apply_delta_to_vectors, augment::AugmentedSpace, build_index, FlatIndex, IndexKind,
+    MipsIndex, VectorSet, WorkloadDelta,
+};
 use fast_mwem::sampling::{binomial, sample_distinct_excluding};
 use fast_mwem::server::{QueuePolicy, Server, ServerConfig, SubmitError};
+use fast_mwem::store::TieredIndexCache;
 use fast_mwem::util::math::dot;
 use fast_mwem::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
 
 fn random_vs(rng: &mut Rng, n: usize, d: usize, lo: f64, hi: f64) -> VectorSet {
     let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(lo, hi) as f32).collect();
@@ -362,6 +371,166 @@ fn prop_server_invariants() {
         assert_eq!(m.counter("jobs_failed"), 0, "round {round}");
         assert_eq!(m.counter("jobs_denied_budget") as usize, denied, "round {round}");
         assert_eq!(m.counter("jobs_rejected_queue") as usize, shed, "round {round}");
+    }
+}
+
+/// DESIGN.md §9 invariant (the dynamic-workload acceptance bar): for
+/// random insert/tombstone sequences, a patched index serves exactly the
+/// same live candidate set as a fresh build at the same generation —
+/// `select()` draws are bit-identical for the exact (flat) index (the
+/// restore-equivalence discipline of the PR 3 harness), and the
+/// approximate indices return only live external ids with exact scores
+/// over the effective rows.
+#[test]
+fn prop_incremental_patch_matches_fresh_build() {
+    let mut meta = Rng::new(301);
+    for inst in 0..5u64 {
+        let d = 4 + meta.usize_below(5);
+        let m0 = 60 + meta.usize_below(80);
+        let mut effective = random_vs(&mut meta, m0, d, -1.0, 1.0);
+        let mut flat = build_index(IndexKind::Flat, effective.clone(), 1);
+        let mut ivf = build_index(IndexKind::Ivf, effective.clone(), 2);
+        let mut hnsw = build_index(IndexKind::Hnsw, effective.clone(), 3);
+
+        for step in 0..4u64 {
+            let live = effective.len();
+            let ins = meta.usize_below(6);
+            let tomb = meta.usize_below((live / 6).max(1));
+            if ins == 0 && tomb == 0 {
+                continue;
+            }
+            let mut ids = fast_mwem::sampling::sample_distinct(&mut meta, live, tomb);
+            ids.sort_unstable();
+            let delta = WorkloadDelta::new(
+                random_vs(&mut meta, ins, d, -1.0, 1.0),
+                ids.into_iter().map(|i| i as u32).collect(),
+            );
+            effective = apply_delta_to_vectors(&effective, &delta).unwrap();
+            flat = flat.patch(&delta, 10 + step).unwrap().index;
+            ivf = ivf.patch(&delta, 20 + step).unwrap().index;
+            hnsw = hnsw.patch(&delta, 30 + step).unwrap().index;
+        }
+
+        // exact index: draw-for-draw equality with a fresh build
+        let fresh = build_index(IndexKind::Flat, effective.clone(), 1);
+        let em_patched = LazyEm::new(flat.as_ref(), &effective, ScoreTransform::Abs);
+        let em_fresh = LazyEm::new(fresh.as_ref(), &effective, ScoreTransform::Abs);
+        let q: Vec<f32> = (0..d).map(|_| meta.uniform(-1.0, 1.0) as f32).collect();
+        let mut r1 = Rng::new(500 + inst);
+        let mut r2 = Rng::new(500 + inst);
+        for _ in 0..40 {
+            let a = em_patched.select(&mut r1, &q, 1.0, 0.1);
+            let b = em_fresh.select(&mut r2, &q, 1.0, 0.1);
+            assert_eq!(a.index, b.index, "inst {inst}: patched flat must draw identically");
+            assert_eq!(a.work, b.work);
+            assert!(a.value == b.value, "perturbed values must be bit-identical");
+        }
+
+        // approximate indices: same live set, live external ids, exact scores
+        for (name, idx) in [("ivf", &ivf), ("hnsw", &hnsw)] {
+            assert_eq!(idx.len(), effective.len(), "inst {inst} {name}: live count");
+            assert_eq!(
+                idx.live_vectors().as_slice(),
+                effective.as_slice(),
+                "inst {inst} {name}: live rows must equal the effective set"
+            );
+            for nb in idx.top_k(&q, 10) {
+                assert!(
+                    (nb.id as usize) < effective.len(),
+                    "inst {inst} {name}: id {} not a live external id",
+                    nb.id
+                );
+                let want = dot(effective.row(nb.id as usize), &q);
+                assert!(
+                    (nb.score - want).abs() < 1e-4,
+                    "inst {inst} {name}: score {} vs exact {want}",
+                    nb.score
+                );
+            }
+        }
+    }
+}
+
+/// DESIGN.md §9 invariant: a generation-aware cache never serves a stale
+/// index after a workload update. Random update sequences with lookups at
+/// skipped generations (multi-delta patch chains): every consultation
+/// resolves to the requested generation's live set — by exact hit,
+/// patched promote, or rebuild — and the superseded entry is gone.
+#[test]
+fn prop_generation_cache_never_serves_stale() {
+    let mut meta = Rng::new(302);
+    for round in 0..3u64 {
+        let d = 6;
+        let m0 = 50 + meta.usize_below(40);
+        let base = random_vs(&mut meta, m0, d, 0.0, 1.0);
+        let base_key = WorkloadKey::for_vectors(&base, IndexKind::Flat, 1);
+        let cache = TieredIndexCache::memory_only(3);
+        let mut deltas: Vec<Arc<WorkloadDelta>> = Vec::new();
+        let mut effective = base.clone();
+
+        let (v, _) = cache.get_or_build(base_key, || {
+            (CachedIndex::Mono(build_index(IndexKind::Flat, base.clone(), 1)), Duration::ZERO)
+        });
+        assert_eq!(v.live_len(), base.len());
+
+        for g in 1..=5u64 {
+            let live = effective.len();
+            let ins = 1 + meta.usize_below(3);
+            let tomb = meta.usize_below(3).min(live - 1);
+            let mut ids = fast_mwem::sampling::sample_distinct(&mut meta, live, tomb);
+            ids.sort_unstable();
+            let delta = Arc::new(WorkloadDelta::new(
+                random_vs(&mut meta, ins, d, 0.0, 1.0),
+                ids.into_iter().map(|i| i as u32).collect(),
+            ));
+            effective = apply_delta_to_vectors(&effective, &delta).unwrap();
+            deltas.push(delta);
+            // look up only every other generation, so served chains span
+            // one *or two* deltas depending on the round parity
+            if g % 2 == round % 2 {
+                continue;
+            }
+            let key = base_key.at_generation(g);
+            let eff_len = effective.len();
+            let chain = deltas.clone();
+            let effective_now = effective.clone();
+            let (v, ev) = cache.get_or_build_dynamic(
+                key,
+                |from| Some(chain[from as usize..g as usize].to_vec()),
+                || {
+                    (
+                        CachedIndex::Mono(build_index(
+                            IndexKind::Flat,
+                            effective_now.clone(),
+                            1,
+                        )),
+                        Duration::ZERO,
+                    )
+                },
+            );
+            assert_eq!(
+                v.live_len(),
+                eff_len,
+                "round {round} gen {g}: served index must match the requested generation"
+            );
+            assert!(
+                ev.patched || ev.l1_hit || (!ev.l1_hit && !ev.l2_hit),
+                "round {round} gen {g}: serve must be a hit, a patch, or a build"
+            );
+            // the promoted entry is the exact generation now; a repeat is a
+            // plain hit and still the right size
+            let (v2, ev2) =
+                cache.get_or_build_dynamic(key, |_| None, || unreachable!("exact hit"));
+            assert!(ev2.l1_hit && !ev2.patched, "round {round} gen {g}");
+            assert_eq!(v2.live_len(), eff_len);
+            // no older generation of the family remains patchable-forward
+            // *and* resident once promoted past it: a lookup one
+            // generation ahead must not find anything newer than g
+            assert!(
+                !cache.l1().contains(&base_key),
+                "round {round}: the generation-0 entry must be superseded"
+            );
+        }
     }
 }
 

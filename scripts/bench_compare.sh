@@ -7,8 +7,12 @@
 # Compares the fresh bench artifacts (BENCH_hot_paths.json +
 # BENCH_serving.json) against the committed BENCH_baseline.json and exits
 # nonzero if any tracked warm-path metric regressed beyond the tolerance.
-# The comparison itself is `repro bench-compare` (rust/src/main.rs), so the
-# gate has no dependency beyond cargo.
+# Tracked metrics include the dynamic-workload axis
+# `dynamic.patch_over_rebuild` (incrementally patching 1% of a workload's
+# rows vs a full index rebuild; the baseline bound enforces the >= 5x
+# acceptance bar — DESIGN.md §9). The comparison itself is
+# `repro bench-compare` (rust/src/main.rs), so the gate has no dependency
+# beyond cargo.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Dynamic-workload smoke (DESIGN.md §9), runnable locally and in CI:
+#
+#   ./scripts/dynamic_smoke.sh [STORE_DIR]
+#
+# Exercises the full update path across processes:
+#   1. serve a batch against an artifact store (cold builds, snapshots
+#      persisted at generation 0);
+#   2. evolve one workload with `repro update-workload` (a compact delta
+#      artifact lands next to the snapshots);
+#   3. serve the same batch again: the untouched workloads restore from
+#      their snapshots and the updated workload is patched forward from
+#      snapshot + delta — store_hit > 0, zero cold rebuilds, at least one
+#      patched promotion, and zero stale-generation serves.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+STORE="${1:-/tmp/fastmwem-dynamic-smoke}"
+rm -rf "$STORE"
+
+cargo build --release
+
+echo "== 1. cold serve: build + persist generation 0 =="
+cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 --store-dir="$STORE"
+
+echo "== 2. evolve workload 0 (zero-eps update, delta artifact) =="
+out_update=$(cargo run --release -- update-workload --workload=0 \
+    --m=400 --u=256 --n=500 --insert=4 --tombstone=2 --store-dir="$STORE")
+echo "$out_update"
+echo "$out_update" | grep -q "generation 1" \
+    || { echo "FAIL: update must report generation 1"; exit 1; }
+
+echo "== 3. warm serve: restore + patch forward, never serve stale =="
+out=$(cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 --store-dir="$STORE")
+echo "$out"
+
+echo "$out" | grep -Eq '"store_hit":[1-9]' \
+    || { echo "FAIL: restarted serve must restore indices (store_hit > 0)"; exit 1; }
+echo "$out" | grep -Eq '"store_miss":0[,}]' \
+    || { echo "FAIL: restarted serve must build zero indices (store_miss == 0)"; exit 1; }
+echo "$out" | grep -Eq '"index_cache_patched":[1-9]' \
+    || { echo "FAIL: the updated workload must be patched forward (index_cache_patched > 0)"; exit 1; }
+echo "$out" | grep -Eq '"stale_generation_serves":0[,}]' \
+    || { echo "FAIL: a stale generation must never be served"; exit 1; }
+
+echo "dynamic-workload smoke passed"
