@@ -2,7 +2,8 @@
 //! EXPERIMENTS.md. Covers all three layers:
 //!   L3 native: dot, flat scan, HNSW query, lazy EM draw, binomial tail,
 //!              Bregman projection, MWU update, warm-index cache;
-//!   runtime  : XLA scores / mwu round trips (if artifacts are built).
+//!   kernels  : dispatched SIMD arm vs the scalar reference table
+//!              (the `kernels.simd_over_scalar` perf-gate axis).
 //!
 //! Flags (after `--`, e.g. `cargo bench --bench hot_paths -- --quick`):
 //!   --quick        smaller sizes + budgets, for the CI bench-smoke job
@@ -17,8 +18,8 @@ use fast_mwem::dp::exponential_mechanism;
 use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use fast_mwem::lp::bregman_project;
 use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex};
-use fast_mwem::mwem::{MwemBackend, NativeBackend, QuerySet};
-use fast_mwem::runtime::XlaBackend;
+use fast_mwem::mwem::{MwemBackend, NativeBackend};
+use fast_mwem::runtime::kernels;
 use fast_mwem::sampling::binomial;
 use fast_mwem::util::bench::{bench, fmt_dur, header, BenchResult};
 use fast_mwem::util::json::Json;
@@ -273,24 +274,28 @@ fn main() {
         native.mwu_update(&mut w, &c, -0.01)
     }));
 
-    // ---------------- XLA round trips ----------------
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        header("XLA artifact round trips (PJRT CPU)");
-        let mut xla = XlaBackend::load("artifacts").unwrap();
-        let mq = 1000;
-        let qx: QuerySet = binary_queries(&mut rng, mq, 1024);
-        let dx: Vec<f32> = (0..1024).map(|_| rng.uniform(-0.005, 0.005) as f32).collect();
-        recorded.push(bench("xla abs_scores (m=1000, U=1024, padded)", budget, || {
-            xla.abs_scores(&qx, &dx)
-        }));
-        let mut wx = vec![1.0f32; 1024];
-        let cx: Vec<f32> = (0..1024).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
-        recorded.push(bench("xla mwu_update (U=1024)", budget, || {
-            xla.mwu_update(&mut wx, &cx, -0.01)
-        }));
-    } else {
-        println!("\n(artifacts/ missing — skipping XLA round-trip benches)");
-    }
+    // ---------------- kernel dispatch (DESIGN.md §10) ----------------
+    // The SIMD-vs-scalar axis: the same dot kernel through the dispatched
+    // arm and through the always-available scalar reference table, on one
+    // machine in one process — so their p50 ratio is machine-independent.
+    // `kernels.simd_over_scalar` < 1 means the SIMD arm pays off; when the
+    // active arm IS scalar (forced or no SIMD hardware) it sits at ~1.0,
+    // which is why the committed baseline is 1.0 with dir=lower.
+    let active_arm = kernels::active().arm;
+    header(&format!("kernel dispatch: {active_arm} vs scalar reference (d=3000)"));
+    let dispatched = bench(&format!("dot d=3000, dispatched ({active_arm})"), budget, || {
+        kernels::dot(&a, &b)
+    });
+    let scalar_table = kernels::table(kernels::KernelArm::Scalar).unwrap();
+    let scalar = bench("dot d=3000, scalar reference", budget, || (scalar_table.dot)(&a, &b));
+    let simd_over_scalar =
+        dispatched.p50.as_secs_f64() / scalar.p50.as_secs_f64().max(1e-12);
+    println!(
+        "  -> simd_over_scalar = {simd_over_scalar:.3} ({:.1}x)",
+        1.0 / simd_over_scalar.max(1e-12)
+    );
+    recorded.push(dispatched);
+    recorded.push(scalar);
 
     // ---------------- JSON artifact ----------------
     if let Some(path) = json_path {
@@ -347,6 +352,15 @@ fn main() {
             .insert("patch_over_rebuild".to_string(), Json::Num(patch_over_rebuild));
         dynamic_obj.insert("rows_patched".to_string(), Json::Num(touched as f64));
 
+        // the kernel-dispatch ratio the perf gate tracks: dispatched /
+        // scalar p50 (≤ ~1 always; < 1 when a SIMD arm is active)
+        let mut kernels_obj = BTreeMap::new();
+        kernels_obj.insert(
+            "arm".to_string(),
+            Json::Str(active_arm.to_string()),
+        );
+        kernels_obj.insert("simd_over_scalar".to_string(), Json::Num(simd_over_scalar));
+
         let mut obj = BTreeMap::new();
         obj.insert("bench".to_string(), Json::Str("hot_paths".to_string()));
         obj.insert("quick".to_string(), Json::Bool(quick));
@@ -356,6 +370,7 @@ fn main() {
         obj.insert("index_cache".to_string(), Json::Obj(cache_obj));
         obj.insert("store".to_string(), Json::Obj(store_obj));
         obj.insert("dynamic".to_string(), Json::Obj(dynamic_obj));
+        obj.insert("kernels".to_string(), Json::Obj(kernels_obj));
         std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
         println!("\nwrote {path}");
     }

@@ -1,26 +1,25 @@
-//! End-to-end quickstart — the full three-layer stack on a real workload.
+//! End-to-end quickstart — the full stack on a real workload.
 //!
 //! Reproduces the paper's headline result in miniature:
 //!   1. generate the §5.1 workload (Gaussian histogram, binary queries);
-//!   2. run classic MWEM with the dense steps executing through the AOT
-//!      XLA artifacts (L1 Pallas kernels → L2 JAX graphs → L3 Rust runtime);
+//!   2. run classic MWEM with the dense steps executing through the
+//!      runtime-dispatched SIMD kernel layer ([`CpuBackend`]);
 //!   3. run Fast-MWEM with the from-scratch HNSW index;
 //!   4. print the error trajectory ("loss curve") and the per-iteration
 //!      selection cost of both, demonstrating equal utility at Θ(√m) work.
 //!
-//! Run:  make artifacts && cargo run --release --example quickstart
+//! Run:  cargo run --release --example quickstart
+//! Force a specific kernel arm with FAST_MWEM_KERNELS=scalar|avx2|neon.
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
 use fast_mwem::mips::IndexKind;
-use fast_mwem::mwem::{
-    run_classic, run_fast, FastMwemConfig, MwemBackend, MwemConfig, NativeBackend,
-};
-use fast_mwem::runtime::XlaBackend;
+use fast_mwem::mwem::{run_classic, run_fast, FastMwemConfig, MwemBackend, MwemConfig};
+use fast_mwem::runtime::{kernels, CpuBackend};
 use fast_mwem::util::rng::Rng;
 use fast_mwem::workloads::{binary_queries, gaussian_histogram};
 
 fn main() -> anyhow::Result<()> {
-    // ---- workload (paper §5.1, scaled to the small artifact grid) --------
+    // ---- workload (paper §5.1, scaled down for a quick run) --------------
     let (u, m, n, t) = (1024usize, 1000usize, 500usize, 400usize);
     let eps = 1.0;
     let delta = 1e-3;
@@ -29,29 +28,22 @@ fn main() -> anyhow::Result<()> {
     let q = binary_queries(&mut rng, m, u);
     let p0 = vec![1.0 / u as f32; u];
     println!("workload: U={u} m={m} n={n} T={t} (ε={eps}, δ={delta})");
+    println!("kernels : {} dispatch", kernels::active().arm);
     println!("initial max query error: {:.4}\n", q.max_error(h.probs(), &p0));
 
     let mut cfg = MwemConfig::paper(t, u, eps, delta, 1234);
     cfg.log_every = t / 8;
 
-    // ---- classic MWEM through the XLA artifacts ---------------------------
-    println!("[1/3] classic MWEM, dense ops on XLA (artifacts/)...");
-    let use_xla = std::path::Path::new("artifacts/manifest.json").exists();
-    let classic = if use_xla {
-        let mut backend = XlaBackend::load("artifacts")?;
-        let res = run_classic(&cfg, &q, &h, &mut backend);
-        println!("      ({} XLA executions)", backend.calls);
-        res
-    } else {
-        println!("      (artifacts/ missing — falling back to the native backend;");
-        println!("       run `make artifacts` for the full three-layer path)");
-        run_classic(&cfg, &q, &h, &mut NativeBackend)
-    };
+    // ---- classic MWEM through the dispatched kernel layer -----------------
+    println!("[1/3] classic MWEM, dense ops on the dispatched kernels...");
+    let mut cpu = CpuBackend::new();
+    let classic = run_classic(&cfg, &q, &h, &mut cpu);
+    println!("      ({} kernel-backend calls)", cpu.calls);
 
     // ---- Fast-MWEM with HNSW ----------------------------------------------
     println!("[2/3] Fast-MWEM (lazy EM over from-scratch HNSW)...");
-    let mut native = NativeBackend;
-    let backend: &mut dyn MwemBackend = &mut native;
+    let mut fast_cpu = CpuBackend::new();
+    let backend: &mut dyn MwemBackend = &mut fast_cpu;
     let fast = run_fast(&FastMwemConfig::new(cfg, IndexKind::Hnsw), &q, &h, backend);
 
     // ---- report -------------------------------------------------------------

@@ -12,10 +12,11 @@
 //! Keys are addressed as `section.key` (top-level keys have no prefix).
 //!
 //! Typed section views live next to their consumers: `[sharding]`,
-//! `[cache]` and `[store]` below ([`ShardingConfig`], [`CacheConfig`],
-//! [`StoreConfig`]); the `[server]` section of the long-lived serving
-//! runtime is read by [`crate::server::ServerConfig::from_config`]
-//! (DESIGN.md §8).
+//! `[cache]`, `[store]`, `[dynamic]` and `[kernels]` below
+//! ([`ShardingConfig`], [`CacheConfig`], [`StoreConfig`],
+//! [`DynamicConfig`], [`KernelConfig`]); the `[server]` section of the
+//! long-lived serving runtime is read by
+//! [`crate::server::ServerConfig::from_config`] (DESIGN.md §8).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -278,6 +279,49 @@ impl DynamicConfig {
     }
 }
 
+/// Typed view of the `[kernels]` section (DESIGN.md §10): which scoring
+/// kernel arm the process runs on.
+///
+/// ```text
+/// [kernels]
+/// dispatch = "native"   # scalar | native | avx2 | neon
+/// ```
+///
+/// The CLI also accepts `--kernels=NAME` as shorthand for
+/// `--kernels.dispatch=NAME` (the shorthand wins over the section value).
+/// An empty/unset value defers to the `FAST_MWEM_KERNELS` environment
+/// variable and then auto-detection
+/// ([`crate::runtime::kernels::active`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Requested dispatch arm (`None` = env var / auto-detect).
+    pub dispatch: Option<String>,
+}
+
+impl KernelConfig {
+    /// Read the `[kernels]` section, honoring the `--kernels=NAME`
+    /// shorthand (the shorthand wins over `kernels.dispatch`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let dispatch = cfg
+            .get_str("kernels")
+            .or_else(|| cfg.get_str("kernels.dispatch"))
+            .map(str::to_string);
+        Ok(KernelConfig { dispatch })
+    }
+
+    /// Pin the process-wide kernel dispatch if the config requested one.
+    /// Returns the arm now active, or `None` when nothing was requested
+    /// (leaving env-var/auto resolution to first kernel use).
+    pub fn apply(&self) -> Result<Option<crate::runtime::kernels::KernelArm>> {
+        match &self.dispatch {
+            None => Ok(None),
+            Some(name) => crate::runtime::kernels::init(name)
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("[kernels] dispatch: {e}")),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,6 +431,28 @@ mod tests {
         c.apply_overrides(["--update-every=2", "--update-insert=1"]).unwrap();
         let d = DynamicConfig::from_config(&c).unwrap();
         assert_eq!((d.update_every, d.insert, d.tombstone), (2, 1, 2));
+    }
+
+    #[test]
+    fn kernels_section_parses_with_defaults_and_shorthand() {
+        // default: no explicit dispatch (env/auto resolution)
+        let c = Config::new();
+        assert_eq!(KernelConfig::from_config(&c).unwrap(), KernelConfig::default());
+
+        // section value
+        let c = Config::parse("[kernels]\ndispatch = \"scalar\"\n").unwrap();
+        assert_eq!(
+            KernelConfig::from_config(&c).unwrap().dispatch.as_deref(),
+            Some("scalar")
+        );
+
+        // --kernels shorthand beats the section value
+        let mut c = Config::parse("[kernels]\ndispatch = \"scalar\"\n").unwrap();
+        c.apply_overrides(["--kernels=native"]).unwrap();
+        assert_eq!(
+            KernelConfig::from_config(&c).unwrap().dispatch.as_deref(),
+            Some("native")
+        );
     }
 
     #[test]

@@ -46,10 +46,12 @@ pub fn fingerprint_vectors(vs: &VectorSet) -> u128 {
     h1 = fnv_mix(h1, vs.dim() as u64);
     h2 = fnv_mix(h2, vs.dim() as u64);
     h2 = fnv_mix(h2, vs.len() as u64);
-    for &v in vs.as_slice() {
-        let bits = u64::from(v.to_bits());
-        h1 = fnv_mix(h1, bits);
-        h2 = fnv_mix(h2, bits.rotate_left(17));
+    for row in vs.rows() {
+        for &v in row {
+            let bits = u64::from(v.to_bits());
+            h1 = fnv_mix(h1, bits);
+            h2 = fnv_mix(h2, bits.rotate_left(17));
+        }
     }
     ((h1 as u128) << 64) | h2 as u128
 }
@@ -454,11 +456,11 @@ mod tests {
         assert_eq!(fingerprint_vectors(&a), fingerprint_vectors(&b));
 
         // same data, different shape
-        let c = VectorSet::new(a.as_slice().to_vec(), 3, 4);
+        let c = VectorSet::new(a.to_vec(), 3, 4);
         assert_ne!(fingerprint_vectors(&a), fingerprint_vectors(&c));
 
         // one value changed
-        let mut data = a.as_slice().to_vec();
+        let mut data = a.to_vec();
         data[5] += 1.0;
         let d = VectorSet::new(data, 4, 3);
         assert_ne!(fingerprint_vectors(&a), fingerprint_vectors(&d));

@@ -90,6 +90,8 @@ impl Default for CoordinatorConfig {
 /// ms counters from the µs accumulators (so only the final totals, not
 /// each job, are truncated) and publish the cache/store gauges.
 pub(crate) fn finalize_serving_metrics(m: &mut Metrics, cache: Option<&TieredIndexCache>) {
+    // Which kernel arm served this process (0 scalar, 1 avx2, 2 neon).
+    m.set_gauge("kernel", crate::runtime::kernels::active().arm.gauge_value());
     let saved_us = m.counter("index_build_saved_us");
     m.inc("index_build_saved_ms", saved_us / 1000);
     if let Some(cache) = cache {

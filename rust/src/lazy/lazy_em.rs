@@ -13,7 +13,7 @@
 
 use super::gumbel::{lazy_gumbel_max, LazySample};
 use crate::mips::{MipsIndex, VectorSet};
-use crate::util::math::dot;
+use crate::runtime::kernels::dot;
 use crate::util::rng::Rng;
 
 /// How raw inner products map to EM scores.

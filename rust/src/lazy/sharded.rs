@@ -44,7 +44,7 @@ use crate::mips::{
     apply_delta_to_vectors, build_index, IndexKind, MipsIndex, PatchError, SnapshotCodec,
     VectorSet, WorkloadDelta,
 };
-use crate::util::math::dot;
+use crate::runtime::kernels::dot;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -112,9 +112,8 @@ impl ShardSet {
         let mut offset = 0usize;
         for i in 0..s {
             let len = base + usize::from(i < rem);
-            let rows = vectors.as_slice()[offset * d..(offset + len) * d].to_vec();
             let shard_seed = seed_rng.split(i as u64).next_u64();
-            specs.push((offset, len, shard_seed, VectorSet::new(rows, len, d)));
+            specs.push((offset, len, shard_seed, vectors.slice_rows(offset, len)));
             offset += len;
         }
 
@@ -162,11 +161,12 @@ impl ShardSet {
     /// candidate order — the vector set a fresh [`ShardSet::build`] at the
     /// current state would be given.
     pub fn live_vectors(&self) -> VectorSet {
-        let mut data = Vec::with_capacity(self.m * self.d);
+        let mut out = VectorSet::zeros(0, self.d);
         for sh in &self.shards {
-            data.extend_from_slice(sh.index.live_vectors().as_slice());
+            out.append(&sh.index.live_vectors());
         }
-        VectorSet::new(data, self.m, self.d)
+        debug_assert_eq!(out.len(), self.m);
+        out
     }
 
     /// Incremental maintenance with per-shard routing (DESIGN.md §9):
@@ -753,7 +753,7 @@ mod tests {
         assert!(!rebuilt);
         assert_eq!(patched.len(), m - 3 + 4);
         assert_eq!(patched.num_shards(), 3);
-        assert_eq!(patched.live_vectors().as_slice(), effective.as_slice());
+        assert_eq!(patched.live_vectors().to_vec(), effective.to_vec());
         // partition invariants: contiguous cover of the effective rows
         let mut next = 0usize;
         for (offset, len) in patched.bounds() {

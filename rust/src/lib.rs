@@ -1,29 +1,31 @@
 //! # fast-mwem
 //!
 //! A production-grade reproduction of **"Fast-MWEM: Private Data Release in
-//! Sublinear Time"** (Haris, Choi, Laksanawisit, 2026) as a three-layer
-//! Rust + JAX + Pallas stack:
+//! Sublinear Time"** (Haris, Choi, Laksanawisit, 2026) as an all-Rust
+//! stack:
 //!
-//! * **Layer 3 (this crate)** — the coordinator: the MWEM / Fast-MWEM
+//! * **Coordinator layer** — the MWEM / Fast-MWEM
 //!   iteration loops, all privacy-critical randomness, the from-scratch
 //!   k-MIPS indices (flat / IVF / HNSW), the lazy Gumbel exponential
 //!   mechanism, private LP solvers, job coordination, config, CLI, metrics
 //!   and the paper's full evaluation harness.
-//! * **Layer 2 (python/compile/model.py, build time)** — JAX compute graphs
-//!   for the dense hot-spots (score matvecs, multiplicative-weight updates),
-//!   AOT-lowered to HLO text in `artifacts/`.
-//! * **Layer 1 (python/compile/kernels/, build time)** — Pallas kernels the
-//!   L2 graphs are built from, validated against pure-jnp oracles.
+//! * **Layers 1–2 (runtime/kernels, in-crate)** — the dense hot-spot
+//!   kernels (score matvecs, multiplicative-weight updates, k-means
+//!   distances, the LP Bregman clip): runtime-dispatched `std::arch` SIMD
+//!   (AVX2 on x86_64, NEON on aarch64) over a cache-aligned blocked
+//!   vector layout, with the portable scalar reference in `util/math.rs`
+//!   as the always-available arm every SIMD path is differentially
+//!   tested against.
 //!
-//! Python never runs on the request path: [`runtime::XlaEngine`] loads the
-//! AOT artifacts through the PJRT C API (`xla` crate) once and executes them
-//! from Rust.
+//! Nothing but Rust runs anywhere: the kernel arm is selected once at
+//! startup ([`runtime::kernels`]) and every scoring loop dispatches
+//! through it.
 //!
 //! See `DESIGN.md` for the module inventory, the offline-build
 //! substitutions (§3), the per-figure experiment index (§4), the
 //! sharded-LazyEM design (§5), the warm-index serving cache (§6), the
-//! persistent artifact store (§7) and the long-lived serving runtime with
-//! per-tenant budget admission (§8);
+//! persistent artifact store (§7), the long-lived serving runtime with
+//! per-tenant budget admission (§8) and the kernel layer (§10);
 //! `EXPERIMENTS.md` records paper-vs-measured results; `README.md` has the
 //! build/run quickstart.
 

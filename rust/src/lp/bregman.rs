@@ -55,9 +55,15 @@ pub fn bregman_project(weights: &[f32], s: usize) -> Vec<f32> {
 
     let mut out = vec![0f32; n];
     let inv_s = 1.0 / sf;
+    let capped = (inv_s) as f32;
+    // Clip-and-rescale the uncapped tail in one vectorized pass over the
+    // already-sorted f64 copy (sorted[rank] == weights[order[rank]] as f64
+    // exactly), then scatter back through the permutation.
+    let mut tail = sorted;
+    let tail = &mut tail[j_cap..];
+    crate::runtime::kernels::clip_scale(tail, c, inv_s);
     for (rank, &i) in order.iter().enumerate() {
-        let v = if rank < j_cap { 1.0 } else { (c * weights[i] as f64).min(1.0) };
-        out[i] = (v * inv_s) as f32;
+        out[i] = if rank < j_cap { capped } else { tail[rank - j_cap] as f32 };
     }
     out
 }

@@ -15,7 +15,7 @@ use crate::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use crate::mips::{build_index, MipsIndex, VectorSet};
 #[cfg(test)]
 use crate::mips::IndexKind;
-use crate::util::math::dot;
+use crate::runtime::kernels::dot;
 use crate::util::rng::Rng;
 use crate::workloads::PackingLp;
 use std::sync::Arc;

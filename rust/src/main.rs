@@ -4,7 +4,7 @@
 //!   eval <fig1..fig9|all> [--quick] [--out=DIR] [--seed=N]
 //!       regenerate a paper figure (CSV + stdout table)
 //!   release [--m=..] [--u=..] [--n=..] [--t=..] [--index=flat|ivf|hnsw|none]
-//!           [--eps=..] [--delta=..] [--xla] run one private release job
+//!           [--eps=..] [--delta=..] run one private release job
 //!   lp [--m=..] [--d=..] [--t=..] [--mode=exhaustive|flat|ivf|hnsw]
 //!       run one scalar-private LP job
 //!   serve [--jobs=N] [--workers=N] [--eps-cap=..] [--store-dir=PATH]
@@ -15,14 +15,18 @@
 //!       bounded queue, per-tenant budget admission, graceful drain
 //!   bench-compare [--baseline=..] [--fresh=a.json,b.json] [--tolerance=..]
 //!       perf-regression gate: compare fresh bench JSON against a baseline
-//!   check-artifacts [--dir=artifacts]
-//!       load + compile + smoke-run every AOT artifact
+//!
+//! Every command honors `--kernels=scalar|native|avx2|neon` (or a
+//! `[kernels]` config section): which SIMD dispatch arm the scoring
+//! kernels run on (DESIGN.md §10).
 //!
 //! Flags may also come from a config file: `--config=path.toml` (the
 //! key=value / [section] subset, see config/mod.rs).
 
 use anyhow::{bail, Context, Result};
-use fast_mwem::config::{CacheConfig, Config, DynamicConfig, ShardingConfig, StoreConfig};
+use fast_mwem::config::{
+    CacheConfig, Config, DynamicConfig, KernelConfig, ShardingConfig, StoreConfig,
+};
 use fast_mwem::coordinator::{
     execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
     WorkloadUpdateSpec,
@@ -33,8 +37,8 @@ use fast_mwem::eval::{self, EvalOpts};
 use fast_mwem::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use fast_mwem::metrics::Metrics;
 use fast_mwem::mips::IndexKind;
-use fast_mwem::mwem::{run_classic, run_fast, FastMwemConfig, MwemConfig, NativeBackend};
-use fast_mwem::runtime::{XlaBackend, XlaEngine};
+use fast_mwem::mwem::{run_classic, run_fast, FastMwemConfig, MwemConfig};
+use fast_mwem::runtime::{kernels, CpuBackend};
 use fast_mwem::server::{Server, ServerConfig, SubmitError};
 use fast_mwem::util::json::Json;
 use fast_mwem::util::rng::Rng;
@@ -76,6 +80,9 @@ fn parse_flags(args: &[String]) -> Result<(Vec<String>, Config)> {
 
 fn run(args: &[String]) -> Result<()> {
     let (pos, cfg) = parse_flags(args)?;
+    // Pin the kernel dispatch before any scoring work touches it — the
+    // choice is process-wide and sticky (first resolution wins).
+    KernelConfig::from_config(&cfg)?.apply()?;
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "eval" => cmd_eval(&pos, &cfg),
@@ -90,7 +97,6 @@ fn run(args: &[String]) -> Result<()> {
         }
         "update-workload" => cmd_update_workload(&cfg),
         "bench-compare" => cmd_bench_compare(&cfg),
-        "check-artifacts" => cmd_check_artifacts(&cfg),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -106,7 +112,7 @@ USAGE:
   repro eval <fig1..fig9|shards|all> [--quick] [--out=DIR] [--seed=N] [--shards=S]
   repro release [--m=1000] [--u=1024] [--n=500] [--t=2000]
                 [--index=hnsw|ivf|flat|none] [--eps=1.0] [--delta=1e-3]
-                [--shards=S] [--xla]
+                [--shards=S]
   repro lp [--m=20000] [--d=20] [--t=2000] [--mode=hnsw|ivf|flat|exhaustive]
            [--shards=S]
   repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
@@ -121,7 +127,11 @@ USAGE:
   repro bench-compare [--baseline=BENCH_baseline.json]
               [--fresh=BENCH_hot_paths.json,BENCH_serving.json]
               [--tolerance=0.25]
-  repro check-artifacts [--dir=artifacts]
+
+Every command accepts --kernels=scalar|native|avx2|neon (or a [kernels]
+config section): which SIMD dispatch arm the scoring kernels run on
+(DESIGN.md §10). Default: the FAST_MWEM_KERNELS env var, then
+auto-detection. The `kernel` metrics gauge reports the active arm.
 
 Sharding (DESIGN.md §5): --shards=S (or a [sharding] config section) splits
 the lazy EM across S per-shard indices, built in parallel on the pool.
@@ -177,7 +187,6 @@ fn cmd_release(cfg: &Config) -> Result<()> {
     let delta: f64 = cfg.or("delta", 1e-3)?;
     let seed: u64 = cfg.or("seed", 1u64)?;
     let index = cfg.str_or("index", "hnsw");
-    let use_xla = cfg.get_str("xla").is_some();
     let sharding = ShardingConfig::from_config(cfg)?;
 
     let mut rng = Rng::new(seed);
@@ -190,21 +199,15 @@ fn cmd_release(cfg: &Config) -> Result<()> {
         println!("note: --shards only applies to Fast-MWEM; ignored with --index=none");
     }
     println!(
-        "release: U={u} m={m} n={n} T={t} eps={eps} index={index} shards={} xla={use_xla}",
-        if index == "none" { 1 } else { sharding.shards }
+        "release: U={u} m={m} n={n} T={t} eps={eps} index={index} shards={} kernels={}",
+        if index == "none" { 1 } else { sharding.shards },
+        kernels::active().arm,
     );
     let p0 = vec![1.0 / u as f32; u];
     println!("initial max error: {:.4}", q.max_error(h.probs(), &p0));
 
-    let mut native = NativeBackend;
-    let mut xla_backend;
-    let backend: &mut dyn fast_mwem::mwem::MwemBackend = if use_xla {
-        let dir = cfg.str_or("artifacts", "artifacts");
-        xla_backend = XlaBackend::load(dir).context("loading XLA artifacts")?;
-        &mut xla_backend
-    } else {
-        &mut native
-    };
+    let mut cpu = CpuBackend::new();
+    let backend: &mut dyn fast_mwem::mwem::MwemBackend = &mut cpu;
 
     let (result, extra) = if index == "none" {
         (run_classic(&mwem_cfg, &q, &h, backend), None)
@@ -721,37 +724,3 @@ fn cmd_bench_compare(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-fn cmd_check_artifacts(cfg: &Config) -> Result<()> {
-    let dir = cfg.str_or("dir", "artifacts");
-    let mut engine = XlaEngine::load(&dir)?;
-    println!(
-        "platform {}, manifest grid {:?}, {} artifacts",
-        engine.platform(),
-        engine.manifest().grid,
-        engine.manifest().entries.len()
-    );
-    let names: Vec<String> = engine.manifest().entries.keys().cloned().collect();
-    for name in names {
-        let entry = engine.entry(&name)?.clone();
-        // build inputs of the right shapes (i32 scalar for step's i_t)
-        let mut bufs = Vec::new();
-        for (i, spec) in entry.inputs.iter().enumerate() {
-            if spec.dtype == "int32" {
-                bufs.push(engine.buffer_scalar_i32(0)?);
-            } else if spec.shape.is_empty() {
-                bufs.push(engine.buffer_scalar_f32(0.0)?);
-            } else {
-                let data = vec![if i == 0 { 1.0f32 } else { 0.0 }; spec.elements()];
-                bufs.push(engine.buffer_f32(&data, &spec.shape)?);
-            }
-        }
-        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
-        let outs = engine.execute(&name, &refs)?;
-        println!(
-            "  {name}: OK ({} outputs, first len {})",
-            outs.len(),
-            outs.first().map(Vec::len).unwrap_or(0)
-        );
-    }
-    Ok(())
-}

@@ -10,7 +10,7 @@
 //! algebraically — halving memory traffic on the HNSW/IVF hot paths.
 
 use super::VectorSet;
-use crate::util::math::dot;
+use crate::runtime::kernels::dot;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Global distance-evaluation counter (diagnostics for benches/tests; the

@@ -209,7 +209,9 @@ pub fn apply_delta_to_vectors(
         }
         data.extend_from_slice(vs.row(i));
     }
-    data.extend_from_slice(delta.inserted.as_slice());
+    for row in delta.inserted.rows() {
+        data.extend_from_slice(row);
+    }
     Ok(VectorSet::new(data, new_len, d))
 }
 

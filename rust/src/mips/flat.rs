@@ -9,7 +9,7 @@ use super::dynamic::{apply_delta_to_vectors, PatchError, PatchedIndex, WorkloadD
 use super::snapshot::{self, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
-use crate::util::math::dot;
+use crate::runtime::kernels;
 use std::sync::Arc;
 
 /// Exact k-MIPS index: a brute-force scan of the stored vectors.
@@ -53,8 +53,8 @@ impl MipsIndex for FlatIndex {
     fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
         let k = k.min(self.vs.len());
         let mut top = TopK::new(k);
-        for i in 0..self.vs.len() {
-            top.push(i as u32, dot(self.vs.row(i), query));
+        for (i, row) in self.vs.rows().enumerate() {
+            top.push(i as u32, kernels::dot(row, query));
         }
         top.into_sorted()
     }
@@ -84,6 +84,7 @@ impl MipsIndex for FlatIndex {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::math::dot;
     use crate::util::rng::Rng;
 
     fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
@@ -144,7 +145,7 @@ mod tests {
         let effective = apply_delta_to_vectors(&vs, &delta).unwrap();
         let fresh = FlatIndex::new(effective.clone());
         assert_eq!(patched.index.len(), 40);
-        assert_eq!(patched.index.live_vectors().as_slice(), effective.as_slice());
+        assert_eq!(patched.index.live_vectors().to_vec(), effective.to_vec());
 
         let q: Vec<f32> = (0..6).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
         let (a, b) = (patched.index.top_k(&q, 10), fresh.top_k(&q, 10));

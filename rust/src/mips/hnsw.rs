@@ -622,7 +622,7 @@ mod tests {
         let patched = hnsw.patch(&delta, 33).unwrap();
         assert!(!patched.rebuilt);
         assert_eq!(patched.index.len(), n - 3 + 5);
-        assert_eq!(patched.index.live_vectors().as_slice(), effective.as_slice());
+        assert_eq!(patched.index.live_vectors().to_vec(), effective.to_vec());
 
         let flat = crate::mips::FlatIndex::new(effective.clone());
         let mut hits = 0usize;

@@ -12,7 +12,7 @@ use super::kmeans::{kmeans, KmeansParams};
 use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
 use super::topk::TopK;
 use super::{build_index, IndexKind, MipsIndex, Neighbor, VectorSet};
-use crate::util::math::dot;
+use crate::runtime::kernels::dot;
 use std::sync::Arc;
 
 /// IVF hyper-parameters.
@@ -424,8 +424,8 @@ mod tests {
         assert!(!patched.rebuilt, "small delta must patch, not rebuild");
         assert_eq!(patched.index.len(), n - 3 + 4);
         assert_eq!(
-            patched.index.live_vectors().as_slice(),
-            effective.as_slice(),
+            patched.index.live_vectors().to_vec(),
+            effective.to_vec(),
             "live rows must equal the materialized effective set"
         );
 

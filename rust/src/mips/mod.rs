@@ -35,13 +35,35 @@ pub use hnsw::{HnswIndex, HnswParams};
 pub use ivf::{IvfIndex, IvfParams};
 pub use snapshot::{SnapshotCodec, SnapshotError, SnapshotReader};
 
+/// Row padding granularity: every row's storage is padded to a multiple of
+/// this many f32 lanes (zero-filled), matching the 16-wide block the
+/// scoring kernels consume ([`crate::runtime::kernels`]).
+pub const ROW_LANES: usize = 16;
+
 /// A dense, row-major set of vectors. The canonical storage for query
 /// matrices `Q[m, U]` and LP constraint matrices `[A | b]`.
+///
+/// Storage is *blocked* row-major (DESIGN.md §10): the payload lives in a
+/// 64-byte-aligned buffer ([`crate::util::align::AlignedVec`]) and each row
+/// occupies [`VectorSet::stride`] ≥ `d` floats — `d` rounded up to a
+/// multiple of [`ROW_LANES`], with the padding zero-filled — so every row
+/// starts on a cache-line boundary and whole rows can be consumed by
+/// full-width SIMD blocks. [`VectorSet::row`] still hands out exactly `d`
+/// entries; the padding is invisible outside the layout. Logical content
+/// (the n·d values, see [`VectorSet::to_vec`]) is what snapshots encode and
+/// fingerprints hash — the padded layout never leaks into artifacts.
 #[derive(Clone, Debug)]
 pub struct VectorSet {
-    data: Vec<f32>,
+    data: crate::util::align::AlignedVec,
     n: usize,
     d: usize,
+    stride: usize,
+}
+
+/// Smallest multiple of [`ROW_LANES`] that fits a `d`-entry row.
+#[inline]
+fn row_stride(d: usize) -> usize {
+    d.div_ceil(ROW_LANES) * ROW_LANES
 }
 
 impl VectorSet {
@@ -59,24 +81,31 @@ impl VectorSet {
     /// ```
     pub fn new(data: Vec<f32>, n: usize, d: usize) -> Self {
         assert_eq!(data.len(), n * d, "data length must be n*d");
-        VectorSet { data, n, d }
+        let mut vs = VectorSet::zeros(n, d);
+        for i in 0..n {
+            vs.row_mut(i).copy_from_slice(&data[i * d..(i + 1) * d]);
+        }
+        vs
     }
 
     /// An all-zero set of `n` vectors of dimension `d`.
     pub fn zeros(n: usize, d: usize) -> Self {
-        VectorSet { data: vec![0.0; n * d], n, d }
+        let stride = row_stride(d);
+        VectorSet { data: crate::util::align::AlignedVec::zeroed(n * stride), n, d, stride }
     }
 
-    /// Borrow row `i` (panics if out of range).
+    /// Borrow row `i` (panics if out of range). The returned slice is
+    /// exactly `d` entries; its backing storage extends (zero-padded) to
+    /// [`VectorSet::stride`] floats.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.d..(i + 1) * self.d]
+        &self.data[i * self.stride..i * self.stride + self.d]
     }
 
     /// Mutably borrow row `i` (panics if out of range).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.d..(i + 1) * self.d]
+        &mut self.data[i * self.stride..i * self.stride + self.d]
     }
 
     /// Number of vectors n.
@@ -94,17 +123,49 @@ impl VectorSet {
         self.d
     }
 
-    /// The raw row-major buffer (`n * d` entries).
-    pub fn as_slice(&self) -> &[f32] {
-        &self.data
+    /// Floats of storage per row: `d` rounded up to a multiple of
+    /// [`ROW_LANES`] (the zero-filled tail keeps rows cache-aligned).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Copy the logical content out as a contiguous row-major `Vec` of
+    /// `n * d` entries (padding dropped) — the layout-independent view
+    /// tests and codecs compare.
+    pub fn to_vec(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n * self.d);
+        for i in 0..self.n {
+            out.extend_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Iterate the rows in order (each exactly `d` entries).
+    pub fn rows(&self) -> impl Iterator<Item = &[f32]> {
+        (0..self.n).map(|i| self.row(i))
+    }
+
+    /// Copy rows `offset..offset + len` into a new set (panics if the
+    /// range is out of bounds) — the shard-partition primitive.
+    pub fn slice_rows(&self, offset: usize, len: usize) -> VectorSet {
+        assert!(offset + len <= self.n, "row range out of bounds");
+        let mut out = VectorSet::zeros(len, self.d);
+        for i in 0..len {
+            out.row_mut(i).copy_from_slice(self.row(offset + i));
+        }
+        out
     }
 
     /// Append every row of `other` (panics on a dimension mismatch). The
     /// incremental-maintenance primitive behind [`MipsIndex::patch`].
     pub fn append(&mut self, other: &VectorSet) {
         assert_eq!(self.d, other.dim(), "appended rows must match the dimension");
-        self.data.extend_from_slice(other.as_slice());
+        let old_n = self.n;
         self.n += other.len();
+        self.data.resize_zeroed(self.n * self.stride);
+        for i in 0..other.len() {
+            self.row_mut(old_n + i).copy_from_slice(other.row(i));
+        }
     }
 }
 
@@ -263,6 +324,32 @@ mod tests {
     #[should_panic]
     fn vectorset_rejects_bad_length() {
         VectorSet::new(vec![1.0; 5], 2, 3);
+    }
+
+    /// The blocked layout is an internal property: rows are 64-byte
+    /// aligned and stride-padded, while the logical view (`row`, `to_vec`,
+    /// `slice_rows`, `append`) is exactly the unpadded row-major content.
+    #[test]
+    fn vectorset_blocked_layout_invariants() {
+        for (n, d) in [(1usize, 1usize), (3, 15), (2, 16), (5, 17), (4, 100)] {
+            let data: Vec<f32> = (0..n * d).map(|i| i as f32 + 0.5).collect();
+            let vs = VectorSet::new(data.clone(), n, d);
+            assert_eq!(vs.stride() % ROW_LANES, 0);
+            assert!(vs.stride() >= d && vs.stride() < d + ROW_LANES);
+            for i in 0..n {
+                assert_eq!(vs.row(i).as_ptr() as usize % crate::util::align::ALIGN, 0);
+                assert_eq!(vs.row(i), &data[i * d..(i + 1) * d]);
+            }
+            assert_eq!(vs.to_vec(), data);
+
+            let tail = vs.slice_rows(1, n - 1);
+            assert_eq!((tail.len(), tail.dim()), (n - 1, d));
+            assert_eq!(tail.to_vec(), data[d..]);
+
+            let mut grown = vs.slice_rows(0, 1);
+            grown.append(&tail);
+            assert_eq!(grown.to_vec(), data);
+        }
     }
 
     /// The `insert_rows`/`tombstone_rows` conveniences are exactly the

@@ -229,11 +229,18 @@ pub trait SnapshotCodec: Sized {
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError>;
 }
 
-/// Encode a [`VectorSet`] (shape + raw f32 bit patterns).
+/// Encode a [`VectorSet`] (shape + raw f32 bit patterns). Only the logical
+/// n·d values are written, row by row — the blocked layout's padding never
+/// reaches disk, so these bytes are identical across layout changes.
 pub fn put_vectors(out: &mut Vec<u8>, vs: &VectorSet) {
     put_len(out, vs.len());
     put_len(out, vs.dim());
-    put_f32s(out, vs.as_slice());
+    put_len(out, vs.len() * vs.dim());
+    for row in vs.rows() {
+        for &v in row {
+            out.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
 }
 
 /// Decode a [`VectorSet`], validating `data.len() == n × d`.
@@ -327,9 +334,16 @@ mod tests {
         put_vectors(&mut buf, &vs);
         let back = read_vectors(&mut SnapshotReader::new(&buf)).unwrap();
         assert_eq!((back.len(), back.dim()), (7, 3));
-        for (a, b) in vs.as_slice().iter().zip(back.as_slice()) {
+        for (a, b) in vs.to_vec().iter().zip(back.to_vec().iter()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+        // the encoding equals the pre-blocked-layout flat encoding:
+        // n, d, then one length-prefixed n·d f32 run
+        let mut flat = Vec::new();
+        put_len(&mut flat, vs.len());
+        put_len(&mut flat, vs.dim());
+        put_f32s(&mut flat, &vs.to_vec());
+        assert_eq!(buf, flat, "padding must not leak into snapshot bytes");
 
         // inconsistent shape vs data length is malformed, not a panic
         let mut bad = Vec::new();

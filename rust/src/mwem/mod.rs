@@ -6,8 +6,8 @@
 //! O(m) scan (classic) vs the Θ(√m) [`crate::lazy::LazyEm`] (fast).
 //!
 //! The dense numeric steps (score matvec, multiplicative update) go through
-//! the [`MwemBackend`] trait so they can run either natively or through the
-//! AOT XLA artifacts ([`crate::runtime::XlaBackend`]).
+//! the [`MwemBackend`] trait; both implementations here route the hot loops
+//! to the runtime-dispatched SIMD kernels ([`crate::runtime::kernels`]).
 
 pub mod classic;
 pub mod fast;
@@ -33,8 +33,9 @@ pub trait MwemBackend {
     fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32>;
 }
 
-/// Pure-Rust backend (no XLA round trip) — used by the large benchmark
-/// sweeps where per-call PJRT overhead would distort scaling measurements.
+/// Stateless in-process backend; the dense loops run on the dispatched
+/// kernels ([`crate::runtime::kernels`]). [`crate::runtime::CpuBackend`] is
+/// the same computation plus call accounting.
 pub struct NativeBackend;
 
 impl MwemBackend for NativeBackend {
@@ -43,9 +44,7 @@ impl MwemBackend for NativeBackend {
     }
 
     fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32> {
-        for (wi, &ci) in w.iter_mut().zip(c.iter()) {
-            *wi *= (s * ci).exp();
-        }
+        crate::runtime::kernels::exp_mul(w, c, s);
         let mut p = w.to_vec();
         normalize_l1(&mut p);
         p

@@ -1,6 +1,7 @@
 //! Linear query sets: `Q ∈ [0,1]^{m×U}`, one row per query (§3.1).
 
 use crate::mips::VectorSet;
+use crate::runtime::kernels;
 use crate::util::math::dot;
 
 /// A set of m linear queries, one row of Q per query.
@@ -40,9 +41,11 @@ impl QuerySet {
         dot(self.vs.row(i), dist) as f64
     }
 
-    /// `|Q·d|` for all queries — the exhaustive EM score vector.
+    /// `|Q·d|` for all queries — the exhaustive EM score vector. Runs on
+    /// the dispatched [`kernels::dot`] (bit-identical to the scalar
+    /// reference on every arm).
     pub fn abs_scores(&self, d: &[f32]) -> Vec<f32> {
-        (0..self.m()).map(|i| dot(self.vs.row(i), d).abs()).collect()
+        self.vs.rows().map(|row| kernels::dot(row, d).abs()).collect()
     }
 
     /// Max error of a synthetic distribution: ‖Q(h − p)‖∞ (Equation 1).

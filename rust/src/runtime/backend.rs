@@ -1,113 +1,90 @@
-//! [`XlaBackend`]: the [`crate::mwem::MwemBackend`] implementation that runs
-//! MWEM's dense numeric steps through the AOT artifacts.
+//! [`CpuBackend`]: the [`crate::mwem::MwemBackend`] implementation backed by
+//! the runtime-dispatched kernel layer ([`super::kernels`]).
 //!
-//! The query matrix Q is uploaded to the device once (padded to the
-//! artifact's shape grid) and reused across iterations via `execute_b`, so
-//! the per-round transfer is only the O(U) difference vector.
+//! This replaced the earlier XLA/PJRT artifact path: the dense steps MWEM
+//! actually needs — the `|Q·d|` score matvec and the multiplicative weight
+//! update — are bandwidth-bound loops that the SIMD kernels serve directly
+//! from the blocked [`crate::mips::VectorSet`] layout, with no device
+//! transfer, padding grid, or ahead-of-time compilation step.
 
-use super::engine::XlaEngine;
+use super::kernels;
 use crate::mwem::{MwemBackend, QuerySet};
-use anyhow::{anyhow, Result};
-use xla::PjRtBuffer;
+use crate::util::math::normalize_l1;
 
-/// [`MwemBackend`] running the dense steps through the AOT artifacts.
-pub struct XlaBackend {
-    engine: XlaEngine,
-    /// Device-resident padded Q + its artifact binding.
-    q_cache: Option<QCache>,
-    /// Number of XLA executions performed (for perf accounting).
+/// [`MwemBackend`] running the dense steps through the kernel dispatch
+/// table resolved at startup.
+pub struct CpuBackend {
+    /// Number of backend calls performed (for perf accounting).
     pub calls: usize,
 }
 
-struct QCache {
-    buf: PjRtBuffer,
-    art: String,
-    art_u: usize,
-    m: usize,
-    u: usize,
-}
-
-impl XlaBackend {
-    /// Wrap an already-loaded engine.
-    pub fn new(engine: XlaEngine) -> Self {
-        XlaBackend { engine, q_cache: None, calls: 0 }
+impl CpuBackend {
+    /// A backend using the process-wide kernel dispatch
+    /// ([`kernels::active`]).
+    pub fn new() -> Self {
+        CpuBackend { calls: 0 }
     }
 
-    /// Load the artifacts directory and wrap the resulting engine.
-    pub fn load(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        Ok(Self::new(XlaEngine::load(artifacts_dir)?))
-    }
-
-    /// The underlying engine.
-    pub fn engine(&self) -> &XlaEngine {
-        &self.engine
-    }
-
-    fn ensure_q(&mut self, q: &QuerySet) -> Result<()> {
-        let (m, u) = (q.m(), q.u());
-        if let Some(c) = &self.q_cache {
-            if c.m == m && c.u == u {
-                return Ok(());
-            }
-        }
-        let entry = self
-            .engine
-            .manifest()
-            .best_scores(m, u)
-            .ok_or_else(|| anyhow!("no scores artifact fits m={m}, u={u}"))?;
-        let (art_m, art_u) = (entry.inputs[0].shape[0], entry.inputs[0].shape[1]);
-        let name = entry.name.clone();
-        let padded = XlaEngine::pad_matrix(q.vectors().as_slice(), m, u, art_m, art_u);
-        let buf = self.engine.buffer_f32(&padded, &[art_m, art_u])?;
-        self.q_cache = Some(QCache { buf, art: name, art_u, m, u });
-        Ok(())
-    }
-
-    fn try_abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Result<Vec<f32>> {
-        self.ensure_q(q)?;
-        let cache = self.q_cache.as_ref().unwrap();
-        let d_pad = XlaEngine::pad_vec(d, cache.art_u);
-        let d_buf = self.engine.buffer_f32(&d_pad, &[cache.art_u])?;
-        let art = cache.art.clone();
-        let m = cache.m;
-        let cache = self.q_cache.as_ref().unwrap();
-        let outs = self.engine.execute(&art, &[&cache.buf, &d_buf])?;
-        self.calls += 1;
-        Ok(outs[0][..m].to_vec())
-    }
-
-    fn try_mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Result<Vec<f32>> {
-        let u = w.len();
-        let entry = self
-            .engine
-            .manifest()
-            .best_mwu(u)
-            .ok_or_else(|| anyhow!("no mwu artifact fits u={u}"))?;
-        let art_u = entry.inputs[0].shape[0];
-        let name = entry.name.clone();
-        let w_pad = XlaEngine::pad_vec(w, art_u);
-        let c_pad = XlaEngine::pad_vec(c, art_u);
-        let w_buf = self.engine.buffer_f32(&w_pad, &[art_u])?;
-        let c_buf = self.engine.buffer_f32(&c_pad, &[art_u])?;
-        let s_buf = self.engine.buffer_scalar_f32(s)?;
-        let outs = self.engine.execute(&name, &[&w_buf, &c_buf, &s_buf])?;
-        self.calls += 1;
-        w.copy_from_slice(&outs[0][..u]);
-        Ok(outs[1][..u].to_vec())
+    /// The kernel arm this backend executes on.
+    pub fn arm(&self) -> kernels::KernelArm {
+        kernels::active().arm
     }
 }
 
-impl MwemBackend for XlaBackend {
+impl Default for CpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MwemBackend for CpuBackend {
     fn abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Vec<f32> {
-        self.try_abs_scores(q, d)
-            .expect("XLA abs_scores failed — are artifacts built for this shape?")
+        self.calls += 1;
+        q.vectors().rows().map(|row| kernels::dot(row, d).abs()).collect()
     }
 
     fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32> {
-        self.try_mwu_update(w, c, s)
-            .expect("XLA mwu_update failed — are artifacts built for this shape?")
+        self.calls += 1;
+        kernels::exp_mul(w, c, s);
+        let mut p = w.to_vec();
+        normalize_l1(&mut p);
+        p
     }
 }
 
-// Integration tests (requiring built artifacts) live in
-// rust/tests/runtime_integration.rs.
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mwem::NativeBackend;
+
+    #[test]
+    fn cpu_backend_matches_native_backend_bitwise() {
+        // CpuBackend is NativeBackend routed through the dispatch table;
+        // whatever arm is active, outputs must match the scalar-path
+        // NativeBackend within the kernel contract (exp_mul tolerance is
+        // exercised in tests/kernel_equivalence.rs; here shapes are small
+        // and in-range so results coincide to f32 round-off).
+        let (m, u) = (13, 37);
+        let flat: Vec<f32> = (0..m * u).map(|i| ((i * 31 + 7) % 97) as f32 / 97.0).collect();
+        let q = QuerySet::new(crate::mips::VectorSet::new(flat, m, u));
+        let d: Vec<f32> = (0..u).map(|i| ((i * 7 % 5) as f32 - 2.0) * 0.125).collect();
+        let mut cpu = CpuBackend::new();
+        let mut native = NativeBackend;
+        let a = cpu.abs_scores(&q, &d);
+        let b = native.abs_scores(&q, &d);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 1e-6, "{x} vs {y}");
+        }
+
+        let c: Vec<f32> = (0..u).map(|i| (i as f32 - 18.0) / 37.0).collect();
+        let mut w1: Vec<f32> = vec![1.0; u];
+        let mut w2 = w1.clone();
+        let p1 = cpu.mwu_update(&mut w1, &c, 0.5);
+        let p2 = native.mwu_update(&mut w2, &c, 0.5);
+        for (x, y) in p1.iter().zip(&p2) {
+            assert!((x - y).abs() <= 1e-6, "{x} vs {y}");
+        }
+        assert_eq!(cpu.calls, 2);
+    }
+}

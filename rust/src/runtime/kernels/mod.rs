@@ -1,0 +1,294 @@
+//! Runtime-dispatched SIMD scoring kernels (DESIGN.md §10).
+//!
+//! The paper's Θ(√m) win is in *index operations*; the per-iteration
+//! constant that remains is raw dot-product and weight-update throughput.
+//! This module owns that constant: one function-pointer table per
+//! [`KernelArm`], selected **once** at startup, covering the four hot
+//! loops named in the roadmap —
+//!
+//! * [`dot`] — flat scan, IVF list scan (via
+//!   [`crate::mips::AugmentedSpace`]), query scoring;
+//! * [`l2_sq`] — k-means assignment distances;
+//! * [`exp_mul`] — the MWU weight update `w_i ← w_i · exp(s·c_i)` in
+//!   `mwem/classic.rs` / `mwem/fast.rs`;
+//! * [`clip_scale`] — the LP Bregman projection's clip-and-rescale pass
+//!   `x ← min(c·x, 1) / s`.
+//!
+//! The scalar reference lives in [`crate::util::math`] and never changes —
+//! it is the differential baseline every SIMD arm is proven against
+//! (`rust/tests/kernel_equivalence.rs`).
+//!
+//! # Numeric contract
+//!
+//! `dot`, `l2_sq` and `clip_scale` are **bit-identical** to the scalar
+//! reference on every input, including NaN/±inf/subnormal payloads: the
+//! SIMD bodies replicate the scalar code's 16-lane accumulator scheme
+//! lane for lane (separate multiply and add — no FMA contraction, exactly
+//! like the scalar build), reduce the lanes in the same sequential order,
+//! and use min operations whose NaN semantics match `f64::min`.
+//!
+//! `exp_mul` is the one tolerance-bearing kernel: in-range inputs
+//! (`s·c_i ∈ [−87, 88]`) use a degree-5 polynomial `exp` (Cephes
+//! range-reduction) and may differ from `f32::exp` by up to
+//! [`EXP_MUL_MAX_ULPS`] ULPs; any 8-lane block containing an
+//! out-of-range, NaN or infinite input falls back to scalar `f32::exp`
+//! for that block, so special values behave exactly like the reference.
+//! The bound is asserted by the differential harness.
+//!
+//! # Selection
+//!
+//! Resolution order: explicit [`init`] (the `[kernels]` config section /
+//! `--kernels=` flag) > the `FAST_MWEM_KERNELS` environment variable >
+//! auto-detection (`avx2` where the CPU supports it, `neon` on aarch64,
+//! `scalar` otherwise). Valid names: `scalar`, `native` (auto-detect),
+//! `avx2`, `neon`. The choice is process-wide and sticky — the first
+//! resolution wins; [`init`] after first use reports a conflict instead
+//! of silently switching mid-run.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+/// Maximum ULP divergence of [`exp_mul`]'s polynomial fast path from the
+/// scalar `w_i · exp(s·c_i)` reference, per element, for in-range inputs.
+/// Documented tolerance policy (DESIGN.md §10), asserted by
+/// `rust/tests/kernel_equivalence.rs`.
+pub const EXP_MUL_MAX_ULPS: u32 = 8;
+
+/// Which kernel implementation backs the process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelArm {
+    /// The portable reference in [`crate::util::math`] — always available.
+    Scalar,
+    /// AVX2 `std::arch` kernels (x86_64 with runtime feature detection).
+    Avx2,
+    /// NEON `std::arch` kernels (aarch64; baseline feature there).
+    Neon,
+}
+
+impl KernelArm {
+    /// Stable gauge encoding for metrics (`kernel` gauge): 0 scalar,
+    /// 1 avx2, 2 neon.
+    pub fn gauge_value(self) -> f64 {
+        match self {
+            KernelArm::Scalar => 0.0,
+            KernelArm::Avx2 => 1.0,
+            KernelArm::Neon => 2.0,
+        }
+    }
+}
+
+impl std::fmt::Display for KernelArm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelArm::Scalar => write!(f, "scalar"),
+            KernelArm::Avx2 => write!(f, "avx2"),
+            KernelArm::Neon => write!(f, "neon"),
+        }
+    }
+}
+
+/// One resolved set of kernel entry points. All four functions share the
+/// numeric contract in the module docs.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    /// Which arm this table belongs to.
+    pub arm: KernelArm,
+    /// Dense dot product ⟨a, b⟩ (slices must have equal length).
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// Squared L2 distance ‖a − b‖².
+    pub l2_sq: fn(&[f32], &[f32]) -> f32,
+    /// MWU weight update: `w[i] *= exp(s * c[i])` elementwise.
+    pub exp_mul: fn(&mut [f32], &[f32], f32),
+    /// Bregman clip-and-rescale: `x[i] = min(c * x[i], 1.0) * inv_s`.
+    pub clip_scale: fn(&mut [f64], f64, f64),
+}
+
+fn scalar_exp_mul(w: &mut [f32], c: &[f32], s: f32) {
+    debug_assert_eq!(w.len(), c.len());
+    for (wi, &ci) in w.iter_mut().zip(c) {
+        *wi *= (s * ci).exp();
+    }
+}
+
+fn scalar_clip_scale(xs: &mut [f64], c: f64, inv_s: f64) {
+    for x in xs.iter_mut() {
+        *x = (c * *x).min(1.0) * inv_s;
+    }
+}
+
+static SCALAR: Kernels = Kernels {
+    arm: KernelArm::Scalar,
+    dot: crate::util::math::dot,
+    l2_sq: crate::util::math::l2_sq,
+    exp_mul: scalar_exp_mul,
+    clip_scale: scalar_clip_scale,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    arm: KernelArm::Avx2,
+    dot: x86::dot,
+    l2_sq: x86::l2_sq,
+    exp_mul: x86::exp_mul,
+    clip_scale: x86::clip_scale,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    arm: KernelArm::Neon,
+    dot: neon::dot,
+    l2_sq: neon::l2_sq,
+    exp_mul: neon::exp_mul,
+    clip_scale: neon::clip_scale,
+};
+
+/// The specific arm's table, if this build/CPU supports it. `Scalar`
+/// always resolves. This is the seam the differential harness uses to
+/// compare arms *in-process*, independent of the active dispatch choice.
+pub fn table(arm: KernelArm) -> Option<&'static Kernels> {
+    match arm {
+        KernelArm::Scalar => Some(&SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        KernelArm::Avx2 => x86::available().then_some(&AVX2),
+        #[cfg(target_arch = "aarch64")]
+        KernelArm::Neon => Some(&NEON),
+        _ => None,
+    }
+}
+
+/// Every arm this build/CPU can run, scalar first.
+pub fn available_arms() -> Vec<KernelArm> {
+    [KernelArm::Scalar, KernelArm::Avx2, KernelArm::Neon]
+        .into_iter()
+        .filter(|&a| table(a).is_some())
+        .collect()
+}
+
+/// The best auto-detected arm: SIMD where the hardware has it, scalar
+/// otherwise.
+pub fn native_arm() -> KernelArm {
+    for arm in [KernelArm::Avx2, KernelArm::Neon] {
+        if table(arm).is_some() {
+            return arm;
+        }
+    }
+    KernelArm::Scalar
+}
+
+fn resolve(name: &str) -> Result<&'static Kernels, String> {
+    match name.to_ascii_lowercase().as_str() {
+        "scalar" => Ok(&SCALAR),
+        "native" | "auto" => Ok(table(native_arm()).expect("native arm must resolve")),
+        "avx2" => table(KernelArm::Avx2)
+            .ok_or_else(|| "avx2 kernels not supported on this CPU/arch".to_string()),
+        "neon" => table(KernelArm::Neon)
+            .ok_or_else(|| "neon kernels not supported on this arch".to_string()),
+        other => Err(format!(
+            "unknown kernel dispatch {other:?} (expected scalar, native, avx2 or neon)"
+        )),
+    }
+}
+
+static ACTIVE: OnceLock<&'static Kernels> = OnceLock::new();
+
+/// Pin the process-wide dispatch to `name` (config/CLI path). Returns the
+/// arm now active. Errors if `name` is invalid or unsupported here, or if
+/// dispatch was already resolved to a *different* arm (first choice wins;
+/// kernels never switch mid-run).
+pub fn init(name: &str) -> Result<KernelArm, String> {
+    let want = resolve(name)?;
+    let got = ACTIVE.get_or_init(|| want);
+    if got.arm != want.arm {
+        return Err(format!(
+            "kernel dispatch already resolved to {} (cannot switch to {})",
+            got.arm, want.arm
+        ));
+    }
+    Ok(got.arm)
+}
+
+/// The process-wide kernel table. First use resolves it: the
+/// `FAST_MWEM_KERNELS` environment variable if set (panicking loudly on an
+/// invalid value — a misconfigured forced arm must not silently fall
+/// back), else auto-detection.
+#[inline]
+pub fn active() -> &'static Kernels {
+    ACTIVE.get_or_init(|| match std::env::var("FAST_MWEM_KERNELS") {
+        Ok(name) => resolve(&name)
+            .unwrap_or_else(|e| panic!("FAST_MWEM_KERNELS={name}: {e}")),
+        Err(_) => table(native_arm()).expect("native arm must resolve"),
+    })
+}
+
+/// Dense dot product through the active dispatch.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    (active().dot)(a, b)
+}
+
+/// Squared L2 distance through the active dispatch.
+#[inline]
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    (active().l2_sq)(a, b)
+}
+
+/// MWU weight update `w[i] *= exp(s·c[i])` through the active dispatch.
+#[inline]
+pub fn exp_mul(w: &mut [f32], c: &[f32], s: f32) {
+    (active().exp_mul)(w, c, s)
+}
+
+/// Bregman clip-and-rescale `x[i] = min(c·x[i], 1)·inv_s` through the
+/// active dispatch.
+#[inline]
+pub fn clip_scale(xs: &mut [f64], c: f64, inv_s: f64) {
+    (active().clip_scale)(xs, c, inv_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_table_always_available_and_first() {
+        let arms = available_arms();
+        assert_eq!(arms[0], KernelArm::Scalar);
+        assert!(table(KernelArm::Scalar).is_some());
+        // the scalar table IS the util::math reference
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [0.5f32, -1.0, 2.0];
+        let t = table(KernelArm::Scalar).unwrap();
+        assert_eq!((t.dot)(&a, &b).to_bits(), crate::util::math::dot(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_names() {
+        assert!(resolve("scalar").is_ok());
+        assert!(resolve("native").is_ok());
+        assert!(resolve("sse9").is_err());
+    }
+
+    #[test]
+    fn active_dispatch_is_sticky_and_consistent() {
+        let arm = active().arm;
+        assert_eq!(active().arm, arm, "repeat resolution must not change");
+        // init to the same arm is fine; to a different available arm errs
+        assert_eq!(init(&arm.to_string()), Ok(arm));
+        for other in available_arms() {
+            if other != arm {
+                assert!(init(&other.to_string()).is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn gauge_values_are_stable() {
+        assert_eq!(KernelArm::Scalar.gauge_value(), 0.0);
+        assert_eq!(KernelArm::Avx2.gauge_value(), 1.0);
+        assert_eq!(KernelArm::Neon.gauge_value(), 2.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! NEON kernel bodies (aarch64, where NEON is a baseline feature).
+//!
+//! Same lane-for-lane contract as the AVX2 module: the 16-float block is
+//! four `float32x4_t` accumulators updated with separate multiply and add
+//! (no FMA contraction — the scalar reference rounds twice), lanes reduce
+//! in the same sequential order as `acc.iter().sum()`, and the remainder
+//! loop is the scalar tail — so `dot`, `l2_sq` and `clip_scale` are
+//! bit-identical to [`crate::util::math`]. `exp_mul` delegates to the
+//! scalar body on this arch (the MWU update is memory-bound at the sizes
+//! we run; a polynomial NEON exp is not worth a second tolerance surface).
+
+#![allow(unsafe_code)]
+
+use std::arch::aarch64::*;
+
+/// Runtime support check — NEON is baseline on aarch64.
+pub fn available() -> bool {
+    true
+}
+
+/// NEON dot product, bit-identical to the scalar reference.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let blocks = n / 16;
+    // SAFETY: in-bounds pointer arithmetic over the checked-equal slices.
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        for blk in 0..blocks {
+            let i = blk * 16;
+            // mul then add, not vfmaq: the scalar reference rounds twice
+            acc0 = vaddq_f32(acc0, vmulq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i))));
+            acc1 = vaddq_f32(
+                acc1,
+                vmulq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4))),
+            );
+            acc2 = vaddq_f32(
+                acc2,
+                vmulq_f32(vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8))),
+            );
+            acc3 = vaddq_f32(
+                acc3,
+                vmulq_f32(vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12))),
+            );
+        }
+        let mut lanes = [0f32; 16];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        vst1q_f32(lanes.as_mut_ptr().add(8), acc2);
+        vst1q_f32(lanes.as_mut_ptr().add(12), acc3);
+        // sequential lane reduction — same order as acc.iter().sum()
+        let mut s: f32 = lanes.iter().sum();
+        for i in blocks * 16..n {
+            s += *pa.add(i) * *pb.add(i);
+        }
+        s
+    }
+}
+
+/// NEON squared L2 distance, bit-identical to the scalar reference.
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let blocks = n / 16;
+    // SAFETY: in-bounds pointer arithmetic over the checked-equal slices.
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut acc2 = vdupq_n_f32(0.0);
+        let mut acc3 = vdupq_n_f32(0.0);
+        for blk in 0..blocks {
+            let i = blk * 16;
+            let d0 = vsubq_f32(vld1q_f32(pa.add(i)), vld1q_f32(pb.add(i)));
+            let d1 = vsubq_f32(vld1q_f32(pa.add(i + 4)), vld1q_f32(pb.add(i + 4)));
+            let d2 = vsubq_f32(vld1q_f32(pa.add(i + 8)), vld1q_f32(pb.add(i + 8)));
+            let d3 = vsubq_f32(vld1q_f32(pa.add(i + 12)), vld1q_f32(pb.add(i + 12)));
+            acc0 = vaddq_f32(acc0, vmulq_f32(d0, d0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(d1, d1));
+            acc2 = vaddq_f32(acc2, vmulq_f32(d2, d2));
+            acc3 = vaddq_f32(acc3, vmulq_f32(d3, d3));
+        }
+        let mut lanes = [0f32; 16];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        vst1q_f32(lanes.as_mut_ptr().add(8), acc2);
+        vst1q_f32(lanes.as_mut_ptr().add(12), acc3);
+        let mut s: f32 = lanes.iter().sum();
+        for i in blocks * 16..n {
+            let d = *pa.add(i) - *pb.add(i);
+            s += d * d;
+        }
+        s
+    }
+}
+
+/// MWU weight update — scalar body on aarch64 (see module docs).
+pub fn exp_mul(w: &mut [f32], c: &[f32], s: f32) {
+    debug_assert_eq!(w.len(), c.len());
+    for (wi, &ci) in w.iter_mut().zip(c) {
+        *wi *= (s * ci).exp();
+    }
+}
+
+/// NEON Bregman clip-and-rescale, bit-identical to the scalar reference.
+pub fn clip_scale(xs: &mut [f64], c: f64, inv_s: f64) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let blocks = n / 2;
+    // SAFETY: in-bounds pointer arithmetic over the slice.
+    unsafe {
+        let cv = vdupq_n_f64(c);
+        let iv = vdupq_n_f64(inv_s);
+        let one = vdupq_n_f64(1.0);
+        for blk in 0..blocks {
+            let i = blk * 2;
+            let x = vld1q_f64(p.add(i));
+            // FMINNM (minNum): returns 1.0 when c·x is NaN — same as f64::min
+            let t = vminnmq_f64(vmulq_f64(cv, x), one);
+            vst1q_f64(p.add(i), vmulq_f64(t, iv));
+        }
+        for i in blocks * 2..n {
+            *p.add(i) = (c * *p.add(i)).min(1.0) * inv_s;
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! AVX2 kernel bodies (x86_64, runtime-detected).
+//!
+//! Every function here replicates the scalar reference in
+//! [`crate::util::math`] / [`super`] *lane for lane*: the 16-float block is
+//! two `__m256` accumulators updated with separate multiply and add (the
+//! scalar build performs no FMA contraction, so neither do we), the lanes
+//! reduce in the same sequential order as `acc.iter().sum()`, and the
+//! remainder loop is the same scalar tail. That makes `dot`, `l2_sq` and
+//! `clip_scale` bit-identical to the reference on every input — the
+//! property `rust/tests/kernel_equivalence.rs` asserts exhaustively.
+//!
+//! `exp_mul` uses a degree-5 polynomial exp (Cephes-style range reduction,
+//! the sse_mathfun lineage) on in-range blocks and scalar `f32::exp` on
+//! any block containing out-of-range or non-finite inputs; see
+//! [`super::EXP_MUL_MAX_ULPS`] for the tolerance policy.
+
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::*;
+
+/// Runtime CPU support check for this module's kernels.
+pub fn available() -> bool {
+    is_x86_feature_detected!("avx2")
+}
+
+/// AVX2 dot product, bit-identical to the scalar reference.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: dispatch only installs this table when available() is true.
+    unsafe { dot_avx2(a, b) }
+}
+
+/// AVX2 squared L2 distance, bit-identical to the scalar reference.
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: dispatch only installs this table when available() is true.
+    unsafe { l2_sq_avx2(a, b) }
+}
+
+/// AVX2 MWU weight update `w[i] *= exp(s·c[i])` (tolerance-bearing; see
+/// module docs).
+pub fn exp_mul(w: &mut [f32], c: &[f32], s: f32) {
+    debug_assert_eq!(w.len(), c.len());
+    // SAFETY: dispatch only installs this table when available() is true.
+    unsafe { exp_mul_avx2(w, c, s) }
+}
+
+/// AVX2 Bregman clip-and-rescale `x[i] = min(c·x[i], 1)·inv_s`,
+/// bit-identical to the scalar reference.
+pub fn clip_scale(xs: &mut [f64], c: f64, inv_s: f64) {
+    // SAFETY: dispatch only installs this table when available() is true.
+    unsafe { clip_scale_avx2(xs, c, inv_s) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let i = blk * 16;
+        let x0 = _mm256_loadu_ps(pa.add(i));
+        let y0 = _mm256_loadu_ps(pb.add(i));
+        let x1 = _mm256_loadu_ps(pa.add(i + 8));
+        let y1 = _mm256_loadu_ps(pb.add(i + 8));
+        // mul then add, not FMA: the scalar reference rounds twice
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(x0, y0));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(x1, y1));
+    }
+    let mut lanes = [0f32; 16];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+    // sequential lane reduction — same order as acc.iter().sum()
+    let mut s: f32 = lanes.iter().sum();
+    for i in blocks * 16..n {
+        s += *pa.add(i) * *pb.add(i);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn l2_sq_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let (pa, pb) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let blocks = n / 16;
+    for blk in 0..blocks {
+        let i = blk * 16;
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+        let d1 =
+            _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d0, d0));
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(d1, d1));
+    }
+    let mut lanes = [0f32; 16];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_ps(lanes.as_mut_ptr().add(8), acc1);
+    let mut s: f32 = lanes.iter().sum();
+    for i in blocks * 16..n {
+        let d = *pa.add(i) - *pb.add(i);
+        s += d * d;
+    }
+    s
+}
+
+// Cephes-style exp constants (sse_mathfun lineage). Inputs outside
+// [EXP_LO, EXP_HI] (or non-finite) take the scalar path, so the
+// polynomial never has to represent overflow/underflow/subnormal results.
+const EXP_LO: f32 = -87.0;
+const EXP_HI: f32 = 88.0;
+const LOG2EF: f32 = std::f32::consts::LOG2_E;
+const EXP_C1: f32 = 0.693_359_4;
+const EXP_C2: f32 = -2.121_944_4e-4;
+const EXP_P0: f32 = 1.987_569_1e-4;
+const EXP_P1: f32 = 1.398_199_9e-3;
+const EXP_P2: f32 = 8.333_452e-3;
+const EXP_P3: f32 = 4.166_579_6e-2;
+const EXP_P4: f32 = 1.666_666_5e-1;
+const EXP_P5: f32 = 5.000_000_2e-1;
+
+/// Polynomial exp over one 8-lane block. Caller guarantees every lane of
+/// `x` is in `[EXP_LO, EXP_HI]`.
+#[target_feature(enable = "avx2")]
+unsafe fn exp_ps(x: __m256) -> __m256 {
+    let one = _mm256_set1_ps(1.0);
+    // n = floor(x·log2(e) + 0.5)
+    let fx = _mm256_add_ps(_mm256_mul_ps(x, _mm256_set1_ps(LOG2EF)), _mm256_set1_ps(0.5));
+    let fx = _mm256_floor_ps(fx);
+    // r = x − n·C1 − n·C2  (two-part ln 2 keeps the reduction exact-ish)
+    let r = _mm256_sub_ps(x, _mm256_mul_ps(fx, _mm256_set1_ps(EXP_C1)));
+    let r = _mm256_sub_ps(r, _mm256_mul_ps(fx, _mm256_set1_ps(EXP_C2)));
+    let r2 = _mm256_mul_ps(r, r);
+    // degree-5 Horner in r
+    let mut y = _mm256_set1_ps(EXP_P0);
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P1));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P2));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P3));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P4));
+    y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EXP_P5));
+    y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(y, r2), r), one);
+    // 2^n via the exponent field (|n| ≤ 127 within [EXP_LO, EXP_HI])
+    let n = _mm256_cvttps_epi32(fx);
+    let pow2n =
+        _mm256_castsi256_ps(_mm256_slli_epi32(_mm256_add_epi32(n, _mm256_set1_epi32(127)), 23));
+    _mm256_mul_ps(y, pow2n)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn exp_mul_avx2(w: &mut [f32], c: &[f32], s: f32) {
+    let n = w.len();
+    let sv = _mm256_set1_ps(s);
+    let lo = _mm256_set1_ps(EXP_LO);
+    let hi = _mm256_set1_ps(EXP_HI);
+    let pw = w.as_mut_ptr();
+    let pc = c.as_ptr();
+    let blocks = n / 8;
+    for blk in 0..blocks {
+        let i = blk * 8;
+        let t = _mm256_mul_ps(sv, _mm256_loadu_ps(pc.add(i)));
+        // ordered compares: a NaN lane fails both and routes to scalar
+        let in_range = _mm256_and_ps(
+            _mm256_cmp_ps(t, lo, _CMP_GE_OQ),
+            _mm256_cmp_ps(t, hi, _CMP_LE_OQ),
+        );
+        if _mm256_movemask_ps(in_range) == 0xFF {
+            let wv = _mm256_loadu_ps(pw.add(i));
+            _mm256_storeu_ps(pw.add(i), _mm256_mul_ps(wv, exp_ps(t)));
+        } else {
+            for k in i..i + 8 {
+                *pw.add(k) *= (s * *pc.add(k)).exp();
+            }
+        }
+    }
+    for k in blocks * 8..n {
+        *pw.add(k) *= (s * *pc.add(k)).exp();
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn clip_scale_avx2(xs: &mut [f64], c: f64, inv_s: f64) {
+    let n = xs.len();
+    let p = xs.as_mut_ptr();
+    let cv = _mm256_set1_pd(c);
+    let iv = _mm256_set1_pd(inv_s);
+    let one = _mm256_set1_pd(1.0);
+    let blocks = n / 4;
+    for blk in 0..blocks {
+        let i = blk * 4;
+        let x = _mm256_loadu_pd(p.add(i));
+        // minpd(t, 1.0) returns 1.0 when t is NaN — same as f64::min
+        let t = _mm256_min_pd(_mm256_mul_pd(cv, x), one);
+        _mm256_storeu_pd(p.add(i), _mm256_mul_pd(t, iv));
+    }
+    for i in blocks * 4..n {
+        *p.add(i) = (c * *p.add(i)).min(1.0) * inv_s;
+    }
+}

@@ -1,13 +1,9 @@
-//! Runtime: loads the AOT HLO-text artifacts produced by `make artifacts`
-//! and executes them on the PJRT CPU client via the `xla` crate.
+//! Runtime layer: the kernel dispatch table and the CPU compute backend.
 //!
-//! Python never runs here — artifacts are compiled once per process
-//! ([`XlaEngine`] caches executables) and the request path is pure Rust.
+//! [`kernels`] owns the per-process SIMD/scalar selection (DESIGN.md §10);
+//! [`CpuBackend`] adapts it to the [`crate::mwem::MwemBackend`] seam.
 
 pub mod backend;
-pub mod engine;
-pub mod manifest;
+pub mod kernels;
 
-pub use backend::XlaBackend;
-pub use engine::XlaEngine;
-pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use backend::CpuBackend;

@@ -1,7 +1,8 @@
 //! Exact samplers backing the lazy exponential mechanism (Algorithms 4–6).
 //!
-//! All of these run on the request path in the Rust coordinator; none of
-//! them exist in the AOT artifacts (determinism of the XLA side).
+//! All of these run on the request path in the coordinator; none of them
+//! live in the dispatched kernel layer (DESIGN.md §10), which stays a
+//! deterministic function of its inputs.
 
 pub mod binomial;
 pub mod subset;

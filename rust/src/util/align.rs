@@ -1,0 +1,158 @@
+//! Cache-line-aligned f32 buffers for the SIMD kernel layer (DESIGN.md
+//! §10).
+//!
+//! [`AlignedVec`] is a fixed-capacity-ish `Box<[f32]>` look-alike whose
+//! allocation starts on a 64-byte boundary — one cache line, and wide
+//! enough for any vector register this crate dispatches to (AVX2's 32-byte
+//! `__m256`, NEON's 16-byte `float32x4_t`). [`crate::mips::VectorSet`]
+//! stores its row-major payload in one so that every *row* starts aligned
+//! (rows are padded to a multiple of the 16-lane kernel block — see
+//! `VectorSet::stride`).
+//!
+//! The kernels themselves use unaligned loads (`loadu`) and therefore stay
+//! correct on arbitrary `&[f32]` inputs such as borrowed query slices; the
+//! alignment here is a throughput property (no cache-line-straddling rows),
+//! not a safety requirement.
+
+use std::alloc::{alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Alignment of every [`AlignedVec`] allocation, in bytes.
+pub const ALIGN: usize = 64;
+
+/// A heap `[f32]` buffer aligned to [`ALIGN`] bytes. Always zero-initialized
+/// at allocation; grows only through [`AlignedVec::resize_zeroed`] (the
+/// append path), which reallocates and zero-fills the tail.
+pub struct AlignedVec {
+    ptr: NonNull<f32>,
+    len: usize,
+}
+
+impl AlignedVec {
+    fn layout(len: usize) -> Layout {
+        Layout::from_size_align(len * std::mem::size_of::<f32>(), ALIGN)
+            .expect("AlignedVec layout overflow")
+    }
+
+    /// A zero-filled buffer of `len` f32s on a 64-byte boundary.
+    pub fn zeroed(len: usize) -> Self {
+        if len == 0 {
+            return AlignedVec { ptr: NonNull::dangling(), len: 0 };
+        }
+        let layout = Self::layout(len);
+        // SAFETY: layout has non-zero size (len > 0) and valid alignment.
+        let raw = unsafe { alloc_zeroed(layout) };
+        let Some(ptr) = NonNull::new(raw.cast::<f32>()) else {
+            handle_alloc_error(layout)
+        };
+        AlignedVec { ptr, len }
+    }
+
+    /// Number of f32 elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the buffer holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Grow (or shrink) to `new_len` elements, preserving the common
+    /// prefix; any newly exposed tail is zero-filled. Reallocates — the
+    /// buffer address may change.
+    pub fn resize_zeroed(&mut self, new_len: usize) {
+        if new_len == self.len {
+            return;
+        }
+        let mut next = AlignedVec::zeroed(new_len);
+        let keep = self.len.min(new_len);
+        next[..keep].copy_from_slice(&self[..keep]);
+        *self = next;
+    }
+}
+
+impl Drop for AlignedVec {
+    fn drop(&mut self) {
+        if self.len > 0 {
+            // SAFETY: allocated by `zeroed` with this exact layout.
+            unsafe { dealloc(self.ptr.as_ptr().cast(), Self::layout(self.len)) };
+        }
+    }
+}
+
+impl Clone for AlignedVec {
+    fn clone(&self) -> Self {
+        let mut out = AlignedVec::zeroed(self.len);
+        out.copy_from_slice(self);
+        out
+    }
+}
+
+impl Deref for AlignedVec {
+    type Target = [f32];
+    #[inline]
+    fn deref(&self) -> &[f32] {
+        // SAFETY: ptr is valid for len elements (or dangling with len 0).
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl DerefMut for AlignedVec {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [f32] {
+        // SAFETY: ptr is valid for len elements and uniquely borrowed.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl std::fmt::Debug for AlignedVec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AlignedVec").field("len", &self.len).finish()
+    }
+}
+
+// SAFETY: AlignedVec owns its allocation exclusively, like Vec<f32>.
+unsafe impl Send for AlignedVec {}
+// SAFETY: shared access is read-only through Deref, like Vec<f32>.
+unsafe impl Sync for AlignedVec {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_is_aligned_and_zero() {
+        for len in [1usize, 3, 16, 17, 1000] {
+            let v = AlignedVec::zeroed(len);
+            assert_eq!(v.len(), len);
+            assert_eq!(v.as_ptr() as usize % ALIGN, 0, "len={len}");
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+        assert!(AlignedVec::zeroed(0).is_empty());
+    }
+
+    #[test]
+    fn resize_preserves_prefix_and_zeroes_tail() {
+        let mut v = AlignedVec::zeroed(4);
+        v.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        v.resize_zeroed(7);
+        assert_eq!(&v[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&v[4..], &[0.0, 0.0, 0.0]);
+        assert_eq!(v.as_ptr() as usize % ALIGN, 0);
+        v.resize_zeroed(2);
+        assert_eq!(&v[..], &[1.0, 2.0]);
+        v.resize_zeroed(0);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let mut a = AlignedVec::zeroed(3);
+        a.copy_from_slice(&[1.0, 2.0, 3.0]);
+        let b = a.clone();
+        a[0] = 9.0;
+        assert_eq!(&b[..], &[1.0, 2.0, 3.0]);
+    }
+}

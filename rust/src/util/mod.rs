@@ -1,5 +1,7 @@
-//! Shared utilities: deterministic RNG, numeric helpers, CSV emission.
+//! Shared utilities: deterministic RNG, numeric helpers, aligned buffers,
+//! CSV emission.
 
+pub mod align;
 pub mod bench;
 pub mod csv;
 pub mod json;

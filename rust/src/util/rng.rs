@@ -2,8 +2,8 @@
 //! primitives the paper's mechanisms need.
 //!
 //! Privacy-critical noise (Gumbel, Laplace, binomial tails) is sampled here
-//! in the Rust coordinator — never inside the AOT artifacts — so the XLA
-//! side stays a deterministic function of its inputs.
+//! in the coordinator — never inside the dispatched kernels (DESIGN.md
+//! §10) — so the kernel layer stays a deterministic function of its inputs.
 
 /// splitmix64: seed expander with provable full-period mixing.
 fn splitmix64(state: &mut u64) -> u64 {

@@ -222,13 +222,13 @@ mod tests {
         let a = synthesize_delta(0xFACE, 3, 100, 16, 4, 2);
         let b = synthesize_delta(0xFACE, 3, 100, 16, 4, 2);
         assert_eq!(a.tombstoned, b.tombstoned);
-        assert_eq!(a.inserted.as_slice(), b.inserted.as_slice());
+        assert_eq!(a.inserted.to_vec(), b.inserted.to_vec());
         assert!(a.validate(100, 16).is_ok());
         assert_eq!(a.inserted.len(), 4);
         assert_eq!(a.tombstoned.len(), 2);
         // a different generation gives a different delta
         let c = synthesize_delta(0xFACE, 4, 100, 16, 4, 2);
-        assert!(c.tombstoned != a.tombstoned || c.inserted.as_slice() != a.inserted.as_slice());
+        assert!(c.tombstoned != a.tombstoned || c.inserted.to_vec() != a.inserted.to_vec());
         // tombstones clamp so at least one row survives
         let d = synthesize_delta(0xFACE, 1, 3, 4, 0, 99);
         assert_eq!(d.tombstoned.len(), 2);
@@ -263,7 +263,7 @@ mod tests {
         for d in &chain {
             manual = crate::mips::apply_delta_to_vectors(&manual, d).unwrap();
         }
-        assert_eq!(effective.as_slice(), manual.as_slice());
+        assert_eq!(effective.to_vec(), manual.to_vec());
         assert_eq!(effective.len(), 20 - 1 + 2 - 2 + 1);
     }
 

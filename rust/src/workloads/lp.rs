@@ -29,7 +29,7 @@ impl LpInstance {
 
     /// Width ρ = max_ij |A_ij|.
     pub fn width(&self) -> f64 {
-        self.a.as_slice().iter().fold(0.0f64, |acc, &x| acc.max(x.abs() as f64))
+        self.a.rows().flatten().fold(0.0f64, |acc, &x| acc.max(x.abs() as f64))
     }
 
     /// Fraction of constraints violated by more than `alpha`.

@@ -1,0 +1,403 @@
+//! Differential kernel-equivalence harness (DESIGN.md §10).
+//!
+//! Every SIMD kernel arm this build/CPU supports is compared against the
+//! scalar reference table over seeded random shapes, including:
+//!
+//! * dimensions that are not a multiple of any lane width (1, 3, 17, 33 …),
+//! * unaligned / offset row slices (`&buf[1..]` shifts by 4 bytes, off any
+//!   16/32-byte boundary),
+//! * zero-length edges,
+//! * NaN (quiet, payload-carrying, negative), ±inf, ±0.0, subnormal and
+//!   near-overflow payloads.
+//!
+//! Contract being enforced (module docs of `runtime::kernels`):
+//! `dot`, `l2_sq` and `clip_scale` are **bit-identical** to the scalar
+//! reference on every input; `exp_mul` is exact for any 8-lane block
+//! containing an out-of-range / non-finite input and within
+//! [`EXP_MUL_MAX_ULPS`] ULPs elsewhere.
+//!
+//! The final tests close the loop end to end: the lazy / sharded
+//! exponential-mechanism samplers, whose score paths now run through the
+//! dispatched kernels, must still draw from the exact softmax — a seeded
+//! chi-square frequency check extending the duplicated-top-k test of the
+//! sampling core to the kernel-dispatched path.
+
+use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
+use fast_mwem::mips::{FlatIndex, IndexKind, VectorSet};
+use fast_mwem::runtime::kernels::{self, KernelArm, Kernels, EXP_MUL_MAX_ULPS};
+use fast_mwem::util::rng::Rng;
+
+/// Shapes covering sub-lane, exact-lane, lane+1 and large cases for every
+/// lane width in play (4, 8, 16).
+const SHAPES: &[usize] = &[0, 1, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 48, 100, 257, 1000, 1023];
+
+fn scalar() -> &'static Kernels {
+    kernels::table(KernelArm::Scalar).expect("scalar table is always available")
+}
+
+/// Every arm to test. Includes Scalar itself (a trivial self-comparison)
+/// so the harness never silently becomes a no-op on hardware with no SIMD
+/// arm, and the active dispatched table, which CI forces to each arm.
+fn arms_under_test() -> Vec<&'static Kernels> {
+    let mut arms: Vec<&'static Kernels> =
+        kernels::available_arms().into_iter().filter_map(kernels::table).collect();
+    arms.push(kernels::active());
+    arms
+}
+
+fn random_f32(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(lo, hi) as f32).collect()
+}
+
+/// Adversarial f32 payloads: NaNs with distinct bit patterns, infinities,
+/// signed zeros, subnormals, and values large enough that products
+/// overflow (exercising inf − inf ⇒ NaN inside the accumulators).
+const SPECIALS_F32: &[f32] = &[
+    f32::NAN,
+    f32::INFINITY,
+    f32::NEG_INFINITY,
+    0.0,
+    -0.0,
+    f32::MIN_POSITIVE,
+    1.0e-40, // subnormal
+    -1.0e-41,
+    f32::MAX,
+    f32::MIN,
+    1.0e30,
+    -1.0e30,
+];
+
+fn payload_nan() -> f32 {
+    f32::from_bits(0xffc0_1234)
+}
+
+/// Sprinkle specials over a random buffer at seeded positions.
+fn with_specials(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = random_f32(rng, n, -2.0, 2.0);
+    for x in v.iter_mut() {
+        if rng.f64() < 0.25 {
+            let k = rng.usize_below(SPECIALS_F32.len() + 1);
+            *x = if k == SPECIALS_F32.len() { payload_nan() } else { SPECIALS_F32[k] };
+        }
+    }
+    v
+}
+
+/// Monotone integer mapping of f32 (−0.0 and +0.0 coincide), for ULP
+/// distance between finite values.
+fn monotone(x: f32) -> i64 {
+    let b = x.to_bits() as i64;
+    if b & 0x8000_0000 != 0 {
+        0x8000_0000 - b
+    } else {
+        b
+    }
+}
+
+fn ulps(a: f32, b: f32) -> u64 {
+    (monotone(a) - monotone(b)).unsigned_abs()
+}
+
+// ---------------------------------------------------------------------------
+// dot / l2_sq: bit-identical on every arm, shape, offset and payload
+// ---------------------------------------------------------------------------
+
+fn check_dot_l2_bitwise(a: &[f32], b: &[f32], ctx: &str) {
+    let sc = scalar();
+    for k in arms_under_test() {
+        let (got, want) = ((k.dot)(a, b), (sc.dot)(a, b));
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "dot {} vs scalar, {ctx}: {got:?} != {want:?}",
+            k.arm
+        );
+        let (got, want) = ((k.l2_sq)(a, b), (sc.l2_sq)(a, b));
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "l2_sq {} vs scalar, {ctx}: {got:?} != {want:?}",
+            k.arm
+        );
+    }
+}
+
+#[test]
+fn dot_and_l2_bitwise_equal_on_random_shapes_and_offsets() {
+    let mut rng = Rng::new(0xD07);
+    for &d in SHAPES {
+        for round in 0..4 {
+            // +1 so `&buf[1..]` yields a 4-byte-offset slice of length d,
+            // off every 16/32-byte alignment boundary.
+            let a = random_f32(&mut rng, d + 1, -3.0, 3.0);
+            let b = random_f32(&mut rng, d + 1, -3.0, 3.0);
+            check_dot_l2_bitwise(&a[..d], &b[..d], &format!("d={d} round={round} aligned"));
+            check_dot_l2_bitwise(&a[1..], &b[1..], &format!("d={d} round={round} offset"));
+            // mixed alignment between the two operands
+            check_dot_l2_bitwise(&a[1..], &b[..d], &format!("d={d} round={round} mixed"));
+        }
+    }
+}
+
+#[test]
+fn dot_and_l2_bitwise_equal_on_special_payloads() {
+    let mut rng = Rng::new(0x5BAD);
+    for &d in SHAPES {
+        for round in 0..4 {
+            let a = with_specials(&mut rng, d + 1);
+            let b = with_specials(&mut rng, d + 1);
+            check_dot_l2_bitwise(&a[..d], &b[..d], &format!("specials d={d} round={round}"));
+            check_dot_l2_bitwise(&a[1..], &b[1..], &format!("specials d={d} round={round} off"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// clip_scale: bit-identical (f64), including NaN/inf/subnormals
+// ---------------------------------------------------------------------------
+
+#[test]
+fn clip_scale_bitwise_equal_across_arms() {
+    let specials = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        1.0e-310, // subnormal
+        f64::MAX,
+        f64::MIN_POSITIVE,
+    ];
+    let mut rng = Rng::new(0xC11F);
+    let sc = scalar();
+    for &d in SHAPES {
+        for &(c, inv_s) in &[(0.7, 1.25), (1.0, 1.0), (0.0, 3.0), (-2.5, 0.5), (f64::NAN, 2.0)] {
+            let mut base: Vec<f64> = (0..d + 1).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            for x in base.iter_mut() {
+                if rng.f64() < 0.2 {
+                    *x = specials[rng.usize_below(specials.len())];
+                }
+            }
+            for offset in [0usize, 1] {
+                let len = d;
+                for k in arms_under_test() {
+                    let mut got = base.clone();
+                    let mut want = base.clone();
+                    (k.clip_scale)(&mut got[offset..offset + len], c, inv_s);
+                    (sc.clip_scale)(&mut want[offset..offset + len], c, inv_s);
+                    for i in 0..base.len() {
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want[i].to_bits(),
+                            "clip_scale {} vs scalar, d={d} c={c} offset={offset} i={i}: \
+                             {:?} != {:?}",
+                            k.arm,
+                            got[i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// exp_mul: ≤ EXP_MUL_MAX_ULPS in range, bit-exact on special blocks
+// ---------------------------------------------------------------------------
+
+fn check_exp_mul_ulps(w0: &[f32], c: &[f32], s: f32, ctx: &str) {
+    let sc = scalar();
+    for k in arms_under_test() {
+        let mut got = w0.to_vec();
+        let mut want = w0.to_vec();
+        (k.exp_mul)(&mut got, c, s);
+        (sc.exp_mul)(&mut want, c, s);
+        for i in 0..w0.len() {
+            let (g, w) = (got[i], want[i]);
+            if g.to_bits() == w.to_bits() {
+                continue;
+            }
+            assert!(
+                g.is_finite() && w.is_finite(),
+                "exp_mul {} vs scalar, {ctx} i={i}: non-finite mismatch {g:?} != {w:?}",
+                k.arm
+            );
+            let u = ulps(g, w);
+            assert!(
+                u <= EXP_MUL_MAX_ULPS as u64,
+                "exp_mul {} vs scalar, {ctx} i={i}: {g:?} vs {w:?} is {u} ULPs \
+                 (tolerance {EXP_MUL_MAX_ULPS})",
+                k.arm
+            );
+        }
+    }
+}
+
+#[test]
+fn exp_mul_within_ulp_tolerance_on_in_range_inputs() {
+    let mut rng = Rng::new(0xE4B);
+    for &d in SHAPES {
+        for &s in &[1.0f32, -0.5, 13.7] {
+            // keep s·c inside [−87, 87] and w moderate so no product
+            // overflows: the tolerance applies to finite results.
+            let lim = 87.0 / s.abs() as f64;
+            let c = random_f32(&mut rng, d + 1, -lim, lim);
+            let w = random_f32(&mut rng, d + 1, 0.1, 2.0);
+            check_exp_mul_ulps(&w[..d], &c[..d], s, &format!("d={d} s={s}"));
+            check_exp_mul_ulps(&w[1..], &c[1..], s, &format!("d={d} s={s} offset"));
+        }
+    }
+    // exact boundaries of the documented fast-path range [−87, 88]
+    let c = [-87.0f32, 88.0, -87.0, 88.0, 0.0, 1.0, -1.0, 42.0, -42.0];
+    let w = [1.0f32; 9];
+    check_exp_mul_ulps(&w, &c, 1.0, "range boundaries");
+}
+
+#[test]
+fn exp_mul_bit_exact_when_blocks_contain_special_inputs() {
+    // Every 8-lane block gets at least one out-of-range / non-finite
+    // exponent, so every block (and the scalar tail) must take the exact
+    // scalar fallback: full bit equality, no tolerance.
+    let block_specials =
+        [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0e5, -1.0e5, 89.0, -88.0, payload_nan()];
+    let sc = scalar();
+    let mut rng = Rng::new(0xB10C);
+    for &d in SHAPES {
+        let mut c = random_f32(&mut rng, d, -40.0, 40.0);
+        for (j, x) in c.iter_mut().step_by(8).enumerate() {
+            *x = block_specials[j % block_specials.len()];
+        }
+        let w = with_specials(&mut rng, d); // specials in w too
+        for k in arms_under_test() {
+            let mut got = w.clone();
+            let mut want = w.clone();
+            (k.exp_mul)(&mut got, &c, 1.0);
+            (sc.exp_mul)(&mut want, &c, 1.0);
+            for i in 0..d {
+                assert_eq!(
+                    got[i].to_bits(),
+                    want[i].to_bits(),
+                    "exp_mul {} vs scalar, special block d={d} i={i}: {:?} != {:?}",
+                    k.arm,
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_kernels_accept_zero_length_slices() {
+    for k in arms_under_test() {
+        assert_eq!((k.dot)(&[], &[]), 0.0);
+        assert_eq!((k.l2_sq)(&[], &[]), 0.0);
+        let mut w: [f32; 0] = [];
+        (k.exp_mul)(&mut w, &[], 1.0);
+        let mut x: [f64; 0] = [];
+        (k.clip_scale)(&mut x, 0.5, 2.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End to end: sampling core on the kernel-dispatched score path
+// ---------------------------------------------------------------------------
+
+/// Build the duplicated-top workload: rows 0..3 are identical copies of a
+/// deliberately strong direction, so every top-k retrieval surfaces
+/// duplicate scores — the case PR 5's sampling-core test pinned down, now
+/// replayed with the dispatched kernels scoring every candidate.
+fn duplicated_top_set(m: usize, d: usize, seed: u64) -> VectorSet {
+    let mut rng = Rng::new(seed);
+    let mut data: Vec<f32> = (0..m * d).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
+    let strong: Vec<f32> = (0..d).map(|_| 0.9f32).collect();
+    for i in 0..3 {
+        data[i * d..(i + 1) * d].copy_from_slice(&strong);
+    }
+    VectorSet::new(data, m, d)
+}
+
+/// Exact softmax target, computed with the scalar reference table in f64.
+fn softmax_target(vs: &VectorSet, q: &[f32], scale: f64) -> Vec<f64> {
+    let sc = scalar();
+    let weights: Vec<f64> =
+        vs.rows().map(|row| (scale * ((sc.dot)(row, q) as f64).abs()).exp()).collect();
+    let z: f64 = weights.iter().sum();
+    weights.into_iter().map(|w| w / z).collect()
+}
+
+/// Chi-square frequency check of observed draws against the target; also
+/// bounds the max absolute probability error. Cells with expected count
+/// < 5 are pooled into one bucket (the standard validity condition), so
+/// df ≤ m − 1 = 39 and the statistic concentrates near df; the bound 150
+/// is far out in the tail — red only when the sampler is actually wrong,
+/// never by seed noise.
+fn assert_matches_target(counts: &[usize], target: &[f64], trials: usize, ctx: &str) {
+    let mut chi2 = 0.0f64;
+    let mut max_err = 0.0f64;
+    let (mut pooled_obs, mut pooled_exp) = (0.0f64, 0.0f64);
+    let mut cells = 0usize;
+    for (i, &n) in counts.iter().enumerate() {
+        let expect = target[i] * trials as f64;
+        if expect < 5.0 {
+            pooled_obs += n as f64;
+            pooled_exp += expect;
+        } else {
+            chi2 += (n as f64 - expect).powi(2) / expect;
+            cells += 1;
+        }
+        max_err = max_err.max((n as f64 / trials as f64 - target[i]).abs());
+    }
+    if pooled_exp >= 5.0 {
+        chi2 += (pooled_obs - pooled_exp).powi(2) / pooled_exp;
+        cells += 1;
+    }
+    assert!(cells >= 2, "{ctx}: degenerate target, {cells} usable cells");
+    assert!(chi2 < 150.0, "{ctx}: chi-square {chi2:.1} over {cells} cells");
+    assert!(max_err < 0.013, "{ctx}: max abs prob error {max_err}");
+}
+
+#[test]
+fn lazy_em_matches_exact_softmax_under_dispatched_kernels() {
+    let (m, d) = (40usize, 6usize);
+    let vs = duplicated_top_set(m, d, 1);
+    let flat = FlatIndex::new(vs.clone());
+    let em = LazyEm::new(&flat, &vs, ScoreTransform::Abs).with_k(7);
+
+    let mut rng = Rng::new(2);
+    let q: Vec<f32> = (0..d).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+    let (eps0, sens) = (1.0, 0.05);
+    let target = softmax_target(&vs, &q, eps0 / (2.0 * sens));
+
+    let trials = 120_000;
+    let mut counts = vec![0usize; m];
+    for _ in 0..trials {
+        counts[em.select(&mut rng, &q, eps0, sens).index] += 1;
+    }
+    let arm = kernels::active().arm;
+    assert_matches_target(&counts, &target, trials, &format!("lazy, {arm} kernels"));
+    // the duplicated top rows must each get their (equal) share
+    assert!(counts[0] > 0 && counts[1] > 0 && counts[2] > 0, "duplicates starved: {counts:?}");
+}
+
+#[test]
+fn sharded_em_matches_exact_softmax_under_dispatched_kernels() {
+    let (m, d) = (40usize, 6usize);
+    let vs = duplicated_top_set(m, d, 1);
+    let mut rng = Rng::new(2);
+    let q: Vec<f32> = (0..d).map(|_| rng.uniform(-0.5, 0.5) as f32).collect();
+    let (eps0, sens) = (1.0, 0.05);
+    let target = softmax_target(&vs, &q, eps0 / (2.0 * sens));
+    let arm = kernels::active().arm;
+
+    for s in [1usize, 2, 7] {
+        let em = ShardedLazyEm::build(IndexKind::Flat, &vs, s, ScoreTransform::Abs, 3);
+        let trials = 120_000;
+        let mut counts = vec![0usize; m];
+        for _ in 0..trials {
+            counts[em.select(&mut rng, &q, eps0, sens).index] += 1;
+        }
+        assert_matches_target(&counts, &target, trials, &format!("sharded S={s}, {arm} kernels"));
+    }
+}

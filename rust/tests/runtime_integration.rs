@@ -1,205 +1,123 @@
-//! Integration tests for the XLA runtime: the AOT artifacts must agree with
-//! the native Rust implementations of the same math (the L1 `ref.py` oracle
-//! re-stated on the Rust side of the bridge).
+//! Integration tests for the runtime layer: the kernel dispatch seam and
+//! the [`CpuBackend`] driving real MWEM runs.
 //!
-//! Requires `make artifacts` to have run; tests skip (with a notice) when
-//! the artifacts directory is missing so plain `cargo test` stays green.
+//! Per-kernel differential coverage (every arm vs the scalar reference,
+//! adversarial shapes and payloads) lives in `kernel_equivalence.rs`; here
+//! we check the *wiring* — that the dispatched backend produces the same
+//! algorithm trajectory as the scalar-reference backend, end to end.
 
-use fast_mwem::mwem::{MwemBackend, NativeBackend, QuerySet};
-use fast_mwem::mips::VectorSet;
-use fast_mwem::runtime::{XlaBackend, XlaEngine};
+use fast_mwem::config::{Config, KernelConfig};
+use fast_mwem::mwem::{run_classic, MwemBackend, MwemConfig, NativeBackend, QuerySet};
+use fast_mwem::runtime::{kernels, CpuBackend};
 use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads;
 
-/// The xla crate's C wrapper is not thread-safe across concurrent client
-/// construction (intermittent "Unhandled primitive type" aborts when the
-/// default parallel test runner interleaves PJRT calls) — serialize all
-/// XLA-touching tests.
-static XLA_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
-
-fn xla_guard() -> std::sync::MutexGuard<'static, ()> {
-    XLA_LOCK.lock().unwrap_or_else(|p| p.into_inner())
-}
-
-fn artifacts_dir() -> Option<std::path::PathBuf> {
-    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("SKIP: no artifacts/ — run `make artifacts`");
-        None
-    }
-}
-
-fn random_queries(m: usize, u: usize, seed: u64) -> QuerySet {
-    let mut rng = Rng::new(seed);
-    let data: Vec<f32> = (0..m * u)
-        .map(|_| if rng.f64() < 0.25 { 1.0 } else { 0.0 })
-        .collect();
-    QuerySet::new(VectorSet::new(data, m, u))
+#[test]
+fn active_arm_is_available_and_reported() {
+    let arm = kernels::active().arm;
+    assert!(kernels::available_arms().contains(&arm));
+    // the gauge encoding the serving runtime publishes is stable
+    assert!(arm.gauge_value() >= 0.0 && arm.gauge_value() <= 2.0);
 }
 
 #[test]
-fn xla_scores_match_native() {
-    let _xla = xla_guard();
-    let Some(dir) = artifacts_dir() else { return };
-    let mut xla = XlaBackend::load(&dir).unwrap();
-    let mut native = NativeBackend;
+fn kernel_config_applies_and_conflicts_error() {
+    // Applying the already-active arm succeeds (sticky dispatch)…
+    let arm = kernels::active().arm;
+    let mut cfg = Config::new();
+    cfg.set("kernels", arm.to_string());
+    assert_eq!(KernelConfig::from_config(&cfg).unwrap().apply().unwrap(), Some(arm));
 
-    // non-grid shape to exercise padding
-    let (m, u) = (700, 900);
-    let q = random_queries(m, u, 1);
-    let mut rng = Rng::new(2);
+    // …an unset config is a no-op…
+    assert_eq!(KernelConfig::from_config(&Config::new()).unwrap().apply().unwrap(), None);
+
+    // …and an invalid name is a typed error, not a silent fallback.
+    let mut cfg = Config::new();
+    cfg.set("kernels.dispatch", "sse9");
+    assert!(KernelConfig::from_config(&cfg).unwrap().apply().is_err());
+}
+
+#[test]
+fn cpu_backend_scores_match_scalar_reference() {
+    let mut rng = Rng::new(11);
+    let (m, u) = (300, 257); // u deliberately not a multiple of the lane width
+    let q = workloads::binary_queries(&mut rng, m, u);
     let d: Vec<f32> = (0..u).map(|_| rng.uniform(-0.01, 0.01) as f32).collect();
 
-    let got = xla.abs_scores(&q, &d);
-    let want = native.abs_scores(&q, &d);
+    let mut cpu = CpuBackend::new();
+    let got = cpu.abs_scores(&q, &d);
+    let scalar = kernels::table(kernels::KernelArm::Scalar).unwrap();
+    let want: Vec<f32> =
+        q.vectors().rows().map(|row| (scalar.dot)(row, &d).abs()).collect();
     assert_eq!(got.len(), want.len());
-    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
-        assert!((g - w).abs() < 1e-5, "score {i}: xla {g} native {w}");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        // dot is bit-identical on every arm
+        assert_eq!(g.to_bits(), w.to_bits(), "score {i}: dispatched {g} scalar {w}");
     }
+    assert_eq!(cpu.calls, 1);
 }
 
 #[test]
-fn xla_scores_reuse_cached_device_q() {
-    let _xla = xla_guard();
-    let Some(dir) = artifacts_dir() else { return };
-    let mut xla = XlaBackend::load(&dir).unwrap();
-    let (m, u) = (256, 512);
-    let q = random_queries(m, u, 3);
-    let d1 = vec![0.001f32; u];
-    let d2 = vec![-0.002f32; u];
-    let s1 = xla.abs_scores(&q, &d1);
-    let s2 = xla.abs_scores(&q, &d2);
-    assert_eq!(xla.calls, 2);
-    // |Q·(−2d)| = 2|Q·d| for constant vectors
-    for (a, b) in s1.iter().zip(s2.iter()) {
-        assert!((2.0 * a - b).abs() < 1e-5);
-    }
-}
+fn cpu_backend_mwu_matches_native_exactly() {
+    let mut rng = Rng::new(12);
+    let u = 1000;
+    let c: Vec<f32> = (0..u).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let mut w_cpu: Vec<f32> = (0..u).map(|_| rng.uniform(0.5, 2.0) as f32).collect();
+    let mut w_nat = w_cpu.clone();
 
-#[test]
-fn xla_mwu_update_matches_native() {
-    let _xla = xla_guard();
-    let Some(dir) = artifacts_dir() else { return };
-    let mut xla = XlaBackend::load(&dir).unwrap();
+    let mut cpu = CpuBackend::new();
     let mut native = NativeBackend;
+    let p_cpu = cpu.mwu_update(&mut w_cpu, &c, 0.25);
+    let p_nat = native.mwu_update(&mut w_nat, &c, 0.25);
 
-    let u = 777; // padded to 1024
-    let mut rng = Rng::new(4);
-    let w0: Vec<f32> = (0..u).map(|_| rng.uniform(0.5, 1.5) as f32).collect();
-    let c: Vec<f32> = (0..u).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
-    let s = -0.37f32;
-
-    let mut w_xla = w0.clone();
-    let p_xla = xla.mwu_update(&mut w_xla, &c, s);
-    let mut w_nat = w0.clone();
-    let p_nat = native.mwu_update(&mut w_nat, &c, s);
-
+    // NativeBackend routes through the same dispatch, so the two must
+    // agree exactly; both must stay a normalized distribution.
     for i in 0..u {
-        assert!((w_xla[i] - w_nat[i]).abs() < 1e-5, "w[{i}]");
-        assert!((p_xla[i] - p_nat[i]).abs() < 1e-6, "p[{i}]");
+        assert_eq!(w_cpu[i].to_bits(), w_nat[i].to_bits(), "w[{i}]");
+        assert_eq!(p_cpu[i].to_bits(), p_nat[i].to_bits(), "p[{i}]");
     }
-    let sum: f32 = p_xla.iter().sum();
+    let sum: f32 = p_cpu.iter().sum();
     assert!((sum - 1.0).abs() < 1e-4);
 }
 
+/// Classic MWEM driven by the dispatched [`CpuBackend`] must land on the
+/// same error trajectory as a scalar-table reference run: the MWU inputs
+/// stay well inside the exp_mul fast-path range, where the polynomial
+/// differs from `f32::exp` by ≤ EXP_MUL_MAX_ULPS — invisible at the
+/// algorithm's 1e-3 error scale.
 #[test]
-fn fused_step_artifact_matches_decomposed_ops() {
-    let _xla = xla_guard();
-    let Some(dir) = artifacts_dir() else { return };
-    let mut engine = XlaEngine::load(&dir).unwrap();
-    let Some(entry) = engine.manifest().best_step(256, 512) else {
-        eprintln!("SKIP: no step artifact");
-        return;
-    };
-    let name = entry.name.clone();
-    let (am, au) = (entry.inputs[1].shape[0], entry.inputs[1].shape[1]);
+fn classic_mwem_same_trajectory_on_dispatched_and_scalar_kernels() {
+    let mut rng = Rng::new(3);
+    let (u, m, n, t) = (128, 200, 400, 60);
+    let h = workloads::gaussian_histogram(&mut rng, u, n);
+    let q = workloads::binary_queries(&mut rng, m, u);
+    let cfg = MwemConfig::paper(t, u, 1.0, 1e-3, 99);
 
-    let (m, u) = (200, 300);
-    let mut rng = Rng::new(5);
-    let qdata: Vec<f32> = (0..m * u)
-        .map(|_| if rng.f64() < 0.25 { 1.0 } else { 0.0 })
-        .collect();
-    let mut h: Vec<f32> = (0..u).map(|_| rng.uniform(0.0, 1.0) as f32).collect();
-    let z: f32 = h.iter().sum();
-    h.iter_mut().for_each(|x| *x /= z);
-    let w0 = vec![1.0f32; u];
-    let sel = 17usize;
-    let (noise, s_scale) = (0.01f32, 0.5f32);
+    let mut cpu = CpuBackend::new();
+    let cpu_res = run_classic(&cfg, &q, &h, &mut cpu);
 
-    // XLA fused step (padded)
-    let q_pad = XlaEngine::pad_matrix(&qdata, m, u, am, au);
-    let w_pad = XlaEngine::pad_vec(&w0, au);
-    let h_pad = XlaEngine::pad_vec(&h, au);
-    let qsel_pad = XlaEngine::pad_vec(&qdata[sel * u..(sel + 1) * u], au);
-    let outs = engine
-        .execute_host(
-            &name,
-            &[
-                (&w_pad, &[au][..]),
-                (&q_pad, &[am, au][..]),
-                (&h_pad, &[au][..]),
-                (&qsel_pad, &[au][..]),
-                (&[noise][..1], &[][..]),
-                (&[s_scale][..1], &[][..]),
-            ],
-        )
-        .unwrap();
-
-    // native reference
-    let p0 = vec![1.0 / u as f32; u];
-    let q_sel = &qdata[sel * u..(sel + 1) * u];
-    let m_t: f32 = q_sel.iter().zip(&h).map(|(a, b)| a * b).sum::<f32>() + noise;
-    let qp: f32 = q_sel.iter().zip(&p0).map(|(a, b)| a * b).sum();
-    let s = s_scale * (m_t - qp);
-    let w_new: Vec<f32> = w0
-        .iter()
-        .zip(q_sel)
-        .map(|(&wi, &ci)| wi * (s * ci).exp())
-        .collect();
-    let zn: f32 = w_new.iter().sum();
-    let p_new: Vec<f32> = w_new.iter().map(|&x| x / zn).collect();
-
-    for i in 0..u {
-        assert!((outs[0][i] - w_new[i]).abs() < 1e-4, "w'[{i}]");
-        assert!((outs[1][i] - p_new[i]).abs() < 1e-5, "p'[{i}]");
+    // scalar-table reference backend, bypassing dispatch entirely
+    struct ScalarBackend;
+    impl MwemBackend for ScalarBackend {
+        fn abs_scores(&mut self, q: &QuerySet, d: &[f32]) -> Vec<f32> {
+            let t = kernels::table(kernels::KernelArm::Scalar).unwrap();
+            q.vectors().rows().map(|row| (t.dot)(row, d).abs()).collect()
+        }
+        fn mwu_update(&mut self, w: &mut [f32], c: &[f32], s: f32) -> Vec<f32> {
+            let t = kernels::table(kernels::KernelArm::Scalar).unwrap();
+            (t.exp_mul)(w, c, s);
+            let mut p = w.to_vec();
+            fast_mwem::util::math::normalize_l1(&mut p);
+            p
+        }
     }
-    // scores output: |Q(h − p')| for real rows, 0 for padded rows
-    for row in 0..m {
-        let want: f32 = (0..u)
-            .map(|j| qdata[row * u + j] * (h[j] - p_new[j]))
-            .sum::<f32>()
-            .abs();
-        assert!((outs[2][row] - want).abs() < 1e-4, "score[{row}]");
-    }
-    for row in m..am {
-        assert_eq!(outs[2][row], 0.0, "padded score row {row}");
-    }
-}
+    let scalar_res = run_classic(&cfg, &q, &h, &mut ScalarBackend);
 
-#[test]
-fn classic_mwem_same_trajectory_on_xla_and_native() {
-    let _xla = xla_guard();
-    let Some(dir) = artifacts_dir() else { return };
-    use fast_mwem::mwem::{run_classic, MwemConfig};
-    use fast_mwem::workloads::{binary_queries, gaussian_histogram};
-
-    let (u, m, n, t) = (512, 300, 500, 40);
-    let mut rng = Rng::new(6);
-    let h = gaussian_histogram(&mut rng, u, n);
-    let q = binary_queries(&mut rng, m, u);
-    let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, 99);
-    cfg.log_every = t;
-
-    let native_res = run_classic(&cfg, &q, &h, &mut NativeBackend);
-    let mut xla = XlaBackend::load(&dir).unwrap();
-    let xla_res = run_classic(&cfg, &q, &h, &mut xla);
-
-    // same seed → same selections → same trajectory (up to f32 noise)
-    let e_native = native_res.stats.last().unwrap().max_error_avg;
-    let e_xla = xla_res.stats.last().unwrap().max_error_avg;
+    let e_cpu = cpu_res.stats.last().unwrap().max_error_avg;
+    let e_scalar = scalar_res.stats.last().unwrap().max_error_avg;
     assert!(
-        (e_native - e_xla).abs() < 5e-3,
-        "native {e_native} vs xla {e_xla}"
+        (e_cpu - e_scalar).abs() < 5e-3,
+        "dispatched {e_cpu} vs scalar {e_scalar}"
     );
+    assert!(cpu.calls > 0);
 }
