@@ -13,12 +13,19 @@
 //! over two repeated workloads (so after the warmup builds, the warm-index
 //! cache hands every job a pre-built index and the bench measures the
 //! steady state, not index construction), and 1 of 4 is an Lp solve.
+//!
+//! A third axis runs the same mix through the wire front end (DESIGN.md
+//! §11) — real sockets, HTTP framing, chunked responses — and records
+//! `wire_over_inproc`: in-process jobs/sec over wire jobs/sec at 4
+//! workers. Near 1.0 means the network face costs almost nothing against
+//! millisecond-scale solves; the CI gate fails if the overhead ratio
+//! regresses past its baseline.
 
 use fast_mwem::coordinator::{JobSpec, LpJobSpec, ReleaseJobSpec};
 use fast_mwem::lp::SelectionMode;
 use fast_mwem::metrics::Metrics;
 use fast_mwem::mips::IndexKind;
-use fast_mwem::server::{QueuePolicy, Server, ServerConfig};
+use fast_mwem::server::{QueuePolicy, Server, ServerConfig, WireClient, WireConfig, WireServer};
 use fast_mwem::util::json::Json;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
@@ -52,6 +59,71 @@ fn mixed_spec(i: usize, quick: bool) -> JobSpec {
             seed: i as u64,
         })
     }
+}
+
+/// The i-th job of the mix as a wire body (same parameters as
+/// [`mixed_spec`]) plus the dev token of its tenant.
+fn mixed_body(i: usize, quick: bool) -> (String, String) {
+    let token = format!("tenant-{}", i % 2);
+    let body = if i % 4 == 3 {
+        format!(
+            r#"{{"kind":"lp","m":{},"d":12,"t":{},"eps":1,"delta":1e-3,"delta_inf":0.1,"mode":"hnsw","seed":{}}}"#,
+            if quick { 800 } else { 2_000 },
+            if quick { 60 } else { 120 },
+            1_000 + i,
+        )
+    } else {
+        format!(
+            r#"{{"kind":"release","u":{},"m":{},"n":400,"t":{},"eps":1,"delta":1e-3,"index":"hnsw","workload":{},"seed":{}}}"#,
+            if quick { 128 } else { 256 },
+            if quick { 600 } else { 2_000 },
+            if quick { 40 } else { 80 },
+            i % 2,
+            i,
+        )
+    };
+    (token, body)
+}
+
+/// Run the same mix over the wire front end: `clients` keep-alive
+/// connections split the job stream. Returns (jobs/sec, wall-clock).
+fn run_wire_mix(workers: usize, jobs: usize, quick: bool, clients: usize) -> (f64, Duration) {
+    let server = Server::start(ServerConfig {
+        workers,
+        queue_depth: jobs.max(8),
+        policy: QueuePolicy::Block,
+        eps_per_tenant: None,
+        cache_capacity: 8,
+        store_dir: None,
+    });
+    let wire = WireServer::start(server, &WireConfig::default()).expect("bind loopback");
+    let addr = wire.local_addr().to_string();
+    {
+        let mut c = WireClient::connect(&addr).expect("warmup connect");
+        for i in [0usize, 1, 3] {
+            let (token, body) = mixed_body(i, quick);
+            let r = c.post_job(&token, &body).expect("warmup request");
+            assert_eq!(r.status, 200, "warmup job failed: {}", r.body_str());
+        }
+    }
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for client in 0..clients {
+            let addr = &addr;
+            s.spawn(move || {
+                let mut c = WireClient::connect(addr).expect("connect");
+                for i in (client..jobs).step_by(clients) {
+                    let (token, body) = mixed_body(i, quick);
+                    let r = c.post_job(&token, &body).expect("request");
+                    assert_eq!(r.status, 200, "wire job failed: {}", r.body_str());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    wire.shutdown();
+    wire.drain();
+    (jobs as f64 / wall.as_secs_f64().max(1e-9), wall)
 }
 
 /// Run `jobs` mixed jobs through a fresh server at the given worker count;
@@ -156,13 +228,27 @@ fn main() {
         );
     }
 
+    // Wire axis: the same mix through real sockets at 4 workers.
+    let (wire_jps, wire_wall) = run_wire_mix(4, jobs, quick, 4);
+    let wire_over_inproc = jps_by_workers[&4] / wire_jps.max(1e-9);
+    println!(
+        "wire (4 workers, 4 conns): {wire_jps:>7.2} jobs/sec  (wall {:.1}ms)  \
+         in-process/wire ratio {wire_over_inproc:.2}",
+        wire_wall.as_secs_f64() * 1e3,
+    );
+
     if let Some(path) = json_path {
+        let mut wire_row = BTreeMap::new();
+        wire_row.insert("jobs_per_sec".to_string(), Json::Num(wire_jps));
+        wire_row.insert("wall_ms".to_string(), Json::Num(wire_wall.as_secs_f64() * 1e3));
         let mut obj = BTreeMap::new();
         obj.insert("bench".to_string(), Json::Str("serving".to_string()));
         obj.insert("quick".to_string(), Json::Bool(quick));
         obj.insert("jobs".to_string(), Json::Num(jobs as f64));
         obj.insert("workers".to_string(), Json::Obj(per_workers));
         obj.insert("speedup_4v1".to_string(), Json::Num(speedup));
+        obj.insert("wire".to_string(), Json::Obj(wire_row));
+        obj.insert("wire_over_inproc".to_string(), Json::Num(wire_over_inproc));
         std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
         println!("wrote {path}");
     }

@@ -16,7 +16,10 @@
 //! ([`ShardingConfig`], [`CacheConfig`], [`StoreConfig`],
 //! [`DynamicConfig`], [`KernelConfig`]); the `[server]` section of the
 //! long-lived serving runtime is read by
-//! [`crate::server::ServerConfig::from_config`] (DESIGN.md §8).
+//! [`crate::server::ServerConfig::from_config`] (DESIGN.md §8), and the
+//! `[wire]` section of its network front end (listen address, connection
+//! caps, bearer tokens) by [`crate::server::WireConfig::from_config`]
+//! (DESIGN.md §11).
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;

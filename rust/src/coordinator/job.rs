@@ -183,6 +183,12 @@ pub struct JobOutcome {
     pub avg_select_work: f64,
     /// End-to-end solver wall-clock.
     pub total_time: Duration,
+    /// The released artifact itself — the averaged synthetic histogram
+    /// (release jobs) or the LP iterate x̄ (lp jobs); `None` for
+    /// bookkeeping jobs with nothing to release (updates). The wire front
+    /// end streams this back chunked (DESIGN.md §11) instead of returning
+    /// only summary statistics.
+    pub output: Option<Vec<f32>>,
 }
 
 /// One job's result as delivered by [`super::Coordinator::finish`].
@@ -406,6 +412,7 @@ pub fn execute_with_cache(
                     delta_spent: result.privacy_spent.1,
                     avg_select_work: work,
                     total_time: result.total_time,
+                    output: Some(result.p_avg),
                 },
                 report,
             ))
@@ -430,6 +437,7 @@ pub fn execute_with_cache(
                     delta_spent: l.delta,
                     avg_select_work: res.avg_select_work,
                     total_time: res.total_time,
+                    output: Some(res.x),
                 },
                 report,
             ))
@@ -476,6 +484,7 @@ pub fn execute_with_cache(
                     delta_spent: 0.0,
                     avg_select_work: delta.rows_touched() as f64,
                     total_time: t0.elapsed(),
+                    output: None,
                 },
                 report,
             ))

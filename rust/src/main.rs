@@ -13,6 +13,13 @@
 //!         [--policy=block|reject] [--eps-per-tenant=E] [--metrics-out=P]
 //!       run the long-lived serving runtime: concurrent submitters,
 //!       bounded queue, per-tenant budget admission, graceful drain
+//!   serve --daemon --listen=ADDR [--max-conns=N] [--conn-workers=N]
+//!       expose the runtime over HTTP/1.1 (DESIGN.md §11): jobs arrive as
+//!       wire requests instead of local submitter threads; runs until a
+//!       `POST /v1/shutdown`, then drains gracefully
+//!   job --body=JSON [--tenant=N]
+//!       execute one wire-encoded job spec in-process and print the exact
+//!       response body the wire would stream (the byte-identity oracle)
 //!   bench-compare [--baseline=..] [--fresh=a.json,b.json] [--tolerance=..]
 //!       perf-regression gate: compare fresh bench JSON against a baseline
 //!
@@ -28,8 +35,8 @@ use fast_mwem::config::{
     CacheConfig, Config, DynamicConfig, KernelConfig, ShardingConfig, StoreConfig,
 };
 use fast_mwem::coordinator::{
-    execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec, ReleaseJobSpec,
-    WorkloadUpdateSpec,
+    execute, execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec,
+    ReleaseJobSpec, WorkloadUpdateSpec,
 };
 use fast_mwem::store::TieredIndexCache;
 use fast_mwem::workloads::WorkloadRegistry;
@@ -39,7 +46,10 @@ use fast_mwem::metrics::Metrics;
 use fast_mwem::mips::IndexKind;
 use fast_mwem::mwem::{run_classic, run_fast, FastMwemConfig, MwemConfig};
 use fast_mwem::runtime::{kernels, CpuBackend};
-use fast_mwem::server::{Server, ServerConfig, SubmitError};
+use fast_mwem::server::{
+    outcome_body_string, parse_job_spec, Server, ServerConfig, SubmitError, WireConfig,
+    WireServer,
+};
 use fast_mwem::util::json::Json;
 use fast_mwem::util::rng::Rng;
 use fast_mwem::workloads;
@@ -96,6 +106,7 @@ fn run(args: &[String]) -> Result<()> {
             }
         }
         "update-workload" => cmd_update_workload(&cfg),
+        "job" => cmd_job(&cfg),
         "bench-compare" => cmd_bench_compare(&cfg),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -122,6 +133,9 @@ USAGE:
               [--eps-per-tenant=E] [--workloads=W] [--cache-capacity=C]
               [--store-dir=PATH] [--metrics-out=PATH]
               [--update-every=N] [--update-insert=I] [--update-tombstone=T]
+  repro serve --daemon --listen=127.0.0.1:8700 [--max-conns=32]
+              [--conn-workers=8] [--tenants=4] [--metrics-out=PATH]
+  repro job --body='{\"kind\":\"release\",\"seed\":7}' [--tenant=0]
   repro update-workload [--workload=0] [--m=400] [--u=256] [--n=500]
               [--insert=4] [--tombstone=2] [--store-dir=PATH]
   repro bench-compare [--baseline=BENCH_baseline.json]
@@ -153,6 +167,16 @@ bounded MPMC queue (--queue-depth, --policy) into persistent workers; every
 job is admission-checked against its tenant's ε cap (--eps-per-tenant)
 before it runs, failures refund, and the final drain reports per-kind
 latency p50/p95/p99 plus per-tenant spend (--metrics-out dumps the JSON).
+
+Wire front end (DESIGN.md §11): `serve --daemon --listen=ADDR` (or a
+[wire] config section) exposes the runtime over HTTP/1.1 instead of local
+submitter threads: tenants authenticate with bearer tokens (dev tokens
+tenant-0..K-1, or [wire] auth = \"token:id,...\"), POST /v1/jobs submits a
+flat JSON job spec, and the outcome streams back chunked. Backpressure
+rides the status line: 429 + Retry-After when the queue rejects, 403 when
+the ε cap denies, 503 while draining. `repro job --body=SPEC` runs the
+same spec in-process and prints the byte-identical response body. The
+daemon runs until `POST /v1/shutdown`, then drains gracefully.
 
 Dynamic workloads (DESIGN.md §9): `update-workload` appends/retires query
 rows of an evolving workload — zero-ε, data-independent — bumping its
@@ -452,6 +476,11 @@ fn daemon_spec(
 }
 
 fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
+    // --listen (or a [wire] section) switches the daemon to the network
+    // front end: jobs arrive over HTTP instead of from local submitters.
+    if cfg.get_str("listen").is_some() || cfg.get_str("wire.listen").is_some() {
+        return cmd_serve_wire(cfg);
+    }
     let jobs: usize = cfg.or("jobs", 24)?;
     let tenants: u64 = cfg.or("tenants", 3u64)?.max(1);
     let sharding = ShardingConfig::from_config(cfg)?;
@@ -546,6 +575,79 @@ fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
         println!("wrote {path}");
     }
     println!("metrics: {}", metrics.to_json());
+    Ok(())
+}
+
+/// The wire daemon (DESIGN.md §11): bind the HTTP front end over the
+/// serving runtime and block until a `POST /v1/shutdown` arrives, then
+/// drain gracefully and report wire counters next to the job histograms.
+fn cmd_serve_wire(cfg: &Config) -> Result<()> {
+    let server_cfg = ServerConfig::from_config(cfg)?;
+    let wire_cfg = WireConfig::from_config(cfg)?;
+    let metrics_out = cfg.get_str("metrics-out").map(str::to_string);
+    println!(
+        "serve --daemon: wire front end over {} workers (queue depth {}, \
+         policy {}, eps/tenant {:?}, max conns {}, {} conn workers, \
+         {} tenant tokens)",
+        server_cfg.workers,
+        server_cfg.queue_depth,
+        server_cfg.policy,
+        server_cfg.eps_per_tenant,
+        wire_cfg.max_conns,
+        wire_cfg.conn_workers,
+        wire_cfg.auth_map().len(),
+    );
+    let server = Server::start(server_cfg);
+    let wire = WireServer::start(server, &wire_cfg)?;
+    // the soak driver greps this line for the bound address
+    println!("wire: listening on {}", wire.local_addr());
+    wire.wait_for_shutdown();
+    println!("wire: shutdown requested, draining");
+    let metrics = wire.drain();
+
+    println!(
+        "wire: {} conns, {} requests, {} bytes in / {} bytes out, \
+         {} parse errors, {} shed (429), {} denied (403)",
+        metrics.counter("conns_accepted"),
+        metrics.counter("requests"),
+        metrics.counter("bytes_in"),
+        metrics.counter("bytes_out"),
+        metrics.counter("parse_errors"),
+        metrics.counter("http_429"),
+        metrics.counter("http_403"),
+    );
+    if let Some(t) = metrics.timing_summary("wire_request") {
+        println!(
+            "  wire_request     n={:<4} p50 {:>8.2}ms  p95 {:>8.2}ms  p99 {:>8.2}ms  \
+             max {:>8.2}ms",
+            t.count,
+            t.p50 * 1e3,
+            t.p95 * 1e3,
+            t.p99 * 1e3,
+            t.max * 1e3
+        );
+    }
+    print_latency_table(&metrics);
+    if let Some(path) = metrics_out {
+        std::fs::write(&path, metrics.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    println!("metrics: {}", metrics.to_json());
+    Ok(())
+}
+
+/// Execute one wire-encoded job spec in-process and print the exact body
+/// the wire front end would stream for it — the byte-identity oracle the
+/// integration tests and the soak compare network responses against.
+fn cmd_job(cfg: &Config) -> Result<()> {
+    let Some(body) = cfg.get_str("body") else {
+        bail!("job needs --body='{{\"kind\":\"release\",...}}' (a wire job spec)");
+    };
+    let tenant: u64 = cfg.or("tenant", 0u64)?;
+    let spec = parse_job_spec(body, tenant).map_err(|e| anyhow::anyhow!("bad spec: {e}"))?;
+    let outcome = execute(&spec)?;
+    println!("{}", outcome_body_string(spec.kind(), &outcome));
     Ok(())
 }
 

@@ -1,0 +1,392 @@
+//! Minimal HTTP/1.1 framing for the wire front end (DESIGN.md §11).
+//!
+//! Only what the serving protocol needs, hand-rolled against `std` (the
+//! offline build vendors no hyper): request-line + header parsing with
+//! hard size caps, `Content-Length` request bodies, fixed-length
+//! responses, and a [`ChunkedWriter`] for streaming release histograms
+//! back without buffering the full payload. Every parse failure is a
+//! typed [`HttpError`] carrying the status code the connection handler
+//! should answer with — nothing here panics on wire bytes.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Hard caps on one request's framing. Oversize input fails with a typed
+/// 4xx-bearing [`HttpError`], never unbounded buffering.
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    /// Total bytes of request line + headers (terminators included).
+    pub max_header_bytes: usize,
+    /// Maximum number of header fields.
+    pub max_headers: usize,
+    /// Maximum `Content-Length` body accepted.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits { max_header_bytes: 8 * 1024, max_headers: 64, max_body_bytes: 1 << 20 }
+    }
+}
+
+/// Why a request could not be read. [`HttpError::status`] gives the
+/// response code to answer with (when a response is possible at all).
+#[derive(Debug)]
+pub enum HttpError {
+    /// The peer closed the connection cleanly before (or while) sending a
+    /// request — not an error worth answering.
+    Eof,
+    /// Structurally invalid request framing (answer 400).
+    Malformed(String),
+    /// A size cap was exceeded; carries the status to answer with
+    /// (431 for header caps, 413 for the body cap).
+    TooLarge {
+        /// The HTTP status this violation maps to.
+        status: u16,
+        /// What exceeded which cap.
+        msg: String,
+    },
+    /// Transport error (timeout, reset) — the connection is unusable.
+    Io(io::Error),
+}
+
+impl HttpError {
+    /// The HTTP status a handler should answer with, or `None` when the
+    /// connection is beyond answering (EOF, transport error).
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            HttpError::Eof | HttpError::Io(_) => None,
+            HttpError::Malformed(_) => Some(400),
+            HttpError::TooLarge { status, .. } => Some(*status),
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Eof => write!(f, "connection closed"),
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::TooLarge { status, msg } => write!(f, "request too large ({status}): {msg}"),
+            HttpError::Io(e) => write!(f, "transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+/// One parsed request: line, lowercased header names, and the full body
+/// (request bodies are small job specs; only *responses* stream).
+#[derive(Debug)]
+pub struct Request {
+    /// The method verb, as sent (`GET`, `POST`, ...).
+    pub method: String,
+    /// The request target (`/v1/jobs`).
+    pub target: String,
+    /// Header fields in arrival order; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    /// The request body (`Content-Length`-framed; empty when absent).
+    pub body: Vec<u8>,
+    /// Total wire bytes this request consumed (for the `bytes_in` meter).
+    pub bytes_read: usize,
+}
+
+impl Request {
+    /// First value of a header, by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection should stay open after this exchange
+    /// (HTTP/1.1 defaults to keep-alive unless `Connection: close`).
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// Read one `\n`-terminated line, capped at `cap` bytes. Returns the bytes
+/// consumed; 0 means clean EOF before any byte.
+fn read_line<R: BufRead>(r: &mut R, buf: &mut Vec<u8>, cap: usize) -> Result<usize, HttpError> {
+    let mut limited = r.take(cap as u64 + 1);
+    let n = limited.read_until(b'\n', buf).map_err(HttpError::Io)?;
+    if n > cap {
+        return Err(HttpError::TooLarge {
+            status: 431,
+            msg: format!("header line exceeds {cap} bytes"),
+        });
+    }
+    if n > 0 && !buf.ends_with(b"\n") {
+        return Err(HttpError::Eof); // stream ended mid-line
+    }
+    Ok(n)
+}
+
+fn trim_crlf(line: &[u8]) -> &[u8] {
+    let line = line.strip_suffix(b"\n").unwrap_or(line);
+    line.strip_suffix(b"\r").unwrap_or(line)
+}
+
+/// Read and parse one request from the stream under the given limits.
+/// Blocks until a full request arrives (the caller decides when to start
+/// by peeking the reader, so idle keep-alive time is spent *outside* this
+/// call).
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+    limits: &HttpLimits,
+) -> Result<Request, HttpError> {
+    let mut line = Vec::new();
+    let mut header_bytes = read_line(r, &mut line, limits.max_header_bytes)?;
+    if header_bytes == 0 {
+        return Err(HttpError::Eof);
+    }
+    let start = std::str::from_utf8(trim_crlf(&line))
+        .map_err(|_| HttpError::Malformed("request line is not UTF-8".into()))?;
+    let mut parts = start.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => {
+            (m.to_string(), t.to_string(), v)
+        }
+        _ => {
+            return Err(HttpError::Malformed(format!("bad request line {start:?}")));
+        }
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("unsupported version {version:?}")));
+    }
+
+    let mut headers = Vec::new();
+    loop {
+        line.clear();
+        let n = read_line(r, &mut line, limits.max_header_bytes)?;
+        if n == 0 {
+            return Err(HttpError::Eof); // stream ended inside the header block
+        }
+        header_bytes += n;
+        if header_bytes > limits.max_header_bytes {
+            return Err(HttpError::TooLarge {
+                status: 431,
+                msg: format!("header block exceeds {} bytes", limits.max_header_bytes),
+            });
+        }
+        let t = trim_crlf(&line);
+        if t.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::TooLarge {
+                status: 431,
+                msg: format!("more than {} header fields", limits.max_headers),
+            });
+        }
+        let s = std::str::from_utf8(t)
+            .map_err(|_| HttpError::Malformed("header is not UTF-8".into()))?;
+        let (name, value) = s
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("header without ':': {s:?}")))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let req_header = |name: &str| {
+        let name = name.to_ascii_lowercase();
+        headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    };
+    if req_header("transfer-encoding").is_some() {
+        // request bodies are Content-Length only; chunked is a response
+        // affordance here (DESIGN.md §11)
+        return Err(HttpError::Malformed("chunked request bodies are not supported".into()));
+    }
+    let mut body = Vec::new();
+    if let Some(cl) = req_header("content-length") {
+        let len: usize = cl.parse().map_err(|_| {
+            HttpError::Malformed(format!("bad content-length {cl:?}"))
+        })?;
+        if len > limits.max_body_bytes {
+            return Err(HttpError::TooLarge {
+                status: 413,
+                msg: format!("body of {len} bytes exceeds the {} cap", limits.max_body_bytes),
+            });
+        }
+        body = vec![0u8; len];
+        r.read_exact(&mut body).map_err(HttpError::Io)?;
+    }
+    let bytes_read = header_bytes + body.len();
+    Ok(Request { method, target, headers, body, bytes_read })
+}
+
+/// Reason phrase for the status codes this front end emits.
+pub fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Response",
+    }
+}
+
+fn response_head(status: u16, extra: &[(&str, String)], framing: &str) -> String {
+    let mut head = format!("HTTP/1.1 {status} {}\r\n", status_text(status));
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str(framing);
+    head.push_str("\r\n");
+    head
+}
+
+/// Write a complete fixed-length response. Returns the bytes written (for
+/// the `bytes_out` meter).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> io::Result<usize> {
+    let head = response_head(status, extra, &format!("content-length: {}\r\n", body.len()));
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(head.len() + body.len())
+}
+
+/// A `Transfer-Encoding: chunked` response in progress: the head goes out
+/// at [`ChunkedWriter::begin`], each [`ChunkedWriter::write_chunk`] frames
+/// and flushes one piece, and [`ChunkedWriter::finish`] sends the terminal
+/// frame — the peer sees bytes as they are produced, and the producer
+/// never holds the full payload.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+    bytes: usize,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    /// Send the response head and start the chunked body.
+    pub fn begin(
+        w: &'a mut W,
+        status: u16,
+        extra: &[(&str, String)],
+    ) -> io::Result<Self> {
+        let head = response_head(status, extra, "transfer-encoding: chunked\r\n");
+        w.write_all(head.as_bytes())?;
+        Ok(ChunkedWriter { w, bytes: head.len() })
+    }
+
+    /// Frame and send one chunk (empty input is skipped — a zero-length
+    /// chunk would terminate the body).
+    pub fn write_chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        let frame = format!("{:x}\r\n", data.len());
+        self.w.write_all(frame.as_bytes())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.bytes += frame.len() + data.len() + 2;
+        Ok(())
+    }
+
+    /// Send the terminal zero-chunk and flush. Returns total bytes written.
+    pub fn finish(self) -> io::Result<usize> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()?;
+        Ok(self.bytes + 5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn parse(raw: &str) -> Result<Request, HttpError> {
+        read_request(&mut BufReader::new(raw.as_bytes()), &HttpLimits::default())
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(
+            "POST /v1/jobs HTTP/1.1\r\nHost: x\r\nAuthorization: Bearer tenant-0\r\n\
+             Content-Length: 4\r\n\r\nbody",
+        )
+        .unwrap();
+        assert_eq!((req.method.as_str(), req.target.as_str()), ("POST", "/v1/jobs"));
+        assert_eq!(req.header("authorization"), Some("Bearer tenant-0"));
+        assert_eq!(req.body, b"body");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.bytes_read, 90, "24 request line + 62 headers + 4 body");
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let req = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive());
+    }
+
+    #[test]
+    fn eof_and_malformed_are_distinct() {
+        assert!(matches!(parse(""), Err(HttpError::Eof)));
+        assert!(matches!(parse("GET\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(parse("GET / SPDY/3\r\n\r\n"), Err(HttpError::Malformed(_))));
+        // headers cut off mid-block: the peer went away
+        assert!(matches!(parse("GET / HTTP/1.1\r\nHost: x\r\n"), Err(HttpError::Eof)));
+        assert_eq!(parse("GET /\r\n\r\n").unwrap_err().status(), Some(400));
+    }
+
+    #[test]
+    fn size_caps_map_to_statuses() {
+        let long_header = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "a".repeat(9000));
+        assert_eq!(parse(&long_header).unwrap_err().status(), Some(431));
+        let many_headers = format!(
+            "GET / HTTP/1.1\r\n{}\r\n",
+            (0..80).map(|i| format!("h{i}: v\r\n")).collect::<String>()
+        );
+        assert_eq!(parse(&many_headers).unwrap_err().status(), Some(431));
+        let big_body = "POST / HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n";
+        assert_eq!(parse(big_body).unwrap_err().status(), Some(413));
+        let chunked_req = "POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse(chunked_req).unwrap_err().status(), Some(400));
+    }
+
+    #[test]
+    fn chunked_writer_frames_and_terminates() {
+        let mut out = Vec::new();
+        let mut cw =
+            ChunkedWriter::begin(&mut out, 200, &[("x-job-id", "7".to_string())]).unwrap();
+        cw.write_chunk(b"hello ").unwrap();
+        cw.write_chunk(b"").unwrap(); // skipped, must not terminate
+        cw.write_chunk(b"world").unwrap();
+        let n = cw.finish().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(n, text.len(), "byte meter matches what hit the wire");
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("x-job-id: 7\r\n"));
+        assert!(text.contains("transfer-encoding: chunked\r\n"));
+        assert!(text.ends_with("6\r\nhello \r\n5\r\nworld\r\n0\r\n\r\n"));
+    }
+
+    #[test]
+    fn write_response_sets_content_length() {
+        let mut out = Vec::new();
+        let n = write_response(&mut out, 429, &[("retry-after", "1".into())], b"busy\n").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert_eq!(n, text.len());
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("retry-after: 1\r\n"));
+        assert!(text.contains("content-length: 5\r\n"));
+        assert!(text.ends_with("\r\n\r\nbusy\n"));
+    }
+}

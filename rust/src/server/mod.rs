@@ -12,11 +12,24 @@
 //! [`JobTicket`] per accepted job; [`Server::drain`] shuts down gracefully
 //! — in-flight jobs complete, new work is refused — and reports per-kind
 //! latency histograms (p50/p95/p99) plus per-tenant spend.
+//!
+//! The network face of this runtime (DESIGN.md §11) lives in three
+//! layers: [`http`] (HTTP/1.1 framing with hard caps and chunked
+//! streaming), [`proto`] (one-pass job-spec parsing and the shared
+//! outcome encoder), and [`wire`] (the [`WireServer`] listener that turns
+//! authenticated sockets into [`Server::submit`] calls, plus the
+//! [`WireClient`] the tests, benches and soak driver all speak through).
 
 pub mod budget;
+pub mod http;
+pub mod proto;
 pub mod queue;
 pub mod runtime;
+pub mod wire;
 
 pub use budget::{AdmissionError, TenantBudget, TenantSpend};
+pub use http::{HttpError, HttpLimits};
+pub use proto::{outcome_body_string, parse_job_spec};
 pub use queue::{BoundedQueue, PushError, QueuePolicy};
 pub use runtime::{JobTicket, Server, ServerConfig, SubmitError};
+pub use wire::{WireClient, WireConfig, WireResponse, WireServer};

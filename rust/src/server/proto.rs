@@ -1,0 +1,471 @@
+//! The wire protocol's payloads (DESIGN.md §11): job-spec request bodies
+//! and streamed outcome response bodies.
+//!
+//! Requests are parsed straight off the wire with a [`JsonVisitor`] over
+//! [`parse_events`] — one pass, no intermediate tree, every violation a
+//! typed error. The spec is a **flat** JSON object; nested containers,
+//! unknown fields and duplicate keys are rejected, and `tenant` cannot be
+//! set in the body — it comes from the authenticated token, which is what
+//! makes the ε ledger trustworthy at this boundary.
+//!
+//! Responses are emitted through [`emit_outcome`], a piecewise encoder
+//! that both the chunked wire path and the buffering in-process path
+//! ([`outcome_body_string`]) share — the wire soak asserts the two are
+//! byte-identical for a fixed seed, so there is exactly one encoder and
+//! one number formatter ([`fmt_f64`]).
+
+use crate::coordinator::{
+    JobOutcome, JobSpec, LpJobSpec, ReleaseJobSpec, WorkloadUpdateSpec,
+};
+use crate::lp::SelectionMode;
+use crate::mips::IndexKind;
+use crate::util::json::{
+    fmt_f64, parse_events, DuplicateKeys, JsonError, JsonErrorKind, JsonLimits, JsonVisitor,
+};
+
+/// Values released per chunk when streaming an outcome body.
+const VALUES_PER_CHUNK: usize = 64;
+
+/// Every field a job spec may carry, with the kinds it applies to — the
+/// single source of truth for the unknown-field error message.
+const FIELDS: &[(&str, &[&str])] = &[
+    ("kind", &["release", "lp", "update"]),
+    ("u", &["release", "update"]),
+    ("m", &["release", "lp", "update"]),
+    ("n", &["release", "update"]),
+    ("t", &["release", "lp"]),
+    ("d", &["lp"]),
+    ("eps", &["release", "lp"]),
+    ("delta", &["release", "lp"]),
+    ("delta_inf", &["lp"]),
+    ("index", &["release"]),
+    ("mode", &["lp"]),
+    ("shards", &["release", "lp"]),
+    ("workload", &["release", "update"]),
+    ("seed", &["release", "lp"]),
+    ("insert", &["update"]),
+    ("tombstone", &["update"]),
+];
+
+fn field_err(pos: usize, msg: impl Into<String>) -> JsonError {
+    JsonError::at(JsonErrorKind::Visitor, pos, msg)
+}
+
+/// Folds the event stream of a flat job-spec object into typed fields.
+#[derive(Default)]
+struct SpecVisitor {
+    in_object: bool,
+    /// The member whose value is next (cleared once consumed).
+    field: Option<String>,
+    strings: Vec<(String, String, usize)>, // (field, value, pos)
+    ints: Vec<(String, u64, usize)>,
+    floats: Vec<(String, f64, usize)>,
+}
+
+impl SpecVisitor {
+    fn take_field(&mut self, pos: usize) -> Result<String, JsonError> {
+        match self.field.take() {
+            Some(f) => Ok(f),
+            None => Err(field_err(pos, "the job spec must be a JSON object")),
+        }
+    }
+}
+
+const INT_FIELDS: &[&str] = &[
+    "u", "m", "n", "t", "d", "shards", "workload", "seed", "insert", "tombstone",
+];
+const FLOAT_FIELDS: &[&str] = &["eps", "delta", "delta_inf"];
+const STRING_FIELDS: &[&str] = &["kind", "index", "mode"];
+
+impl JsonVisitor for SpecVisitor {
+    fn begin_object(&mut self, pos: usize) -> Result<(), JsonError> {
+        if self.in_object {
+            return Err(field_err(
+                pos,
+                "the job spec is a flat object: nested objects are not allowed",
+            ));
+        }
+        self.in_object = true;
+        Ok(())
+    }
+
+    fn begin_array(&mut self, pos: usize) -> Result<(), JsonError> {
+        Err(field_err(pos, "the job spec is a flat object: arrays are not allowed"))
+    }
+
+    fn key(&mut self, key: &str, pos: usize) -> Result<(), JsonError> {
+        if key == "tenant" {
+            return Err(field_err(
+                pos,
+                "field \"tenant\" is not settable: the tenant comes from the \
+                 authenticated token",
+            ));
+        }
+        if !FIELDS.iter().any(|(name, _)| *name == key) {
+            let known: Vec<&str> = FIELDS.iter().map(|(name, _)| *name).collect();
+            return Err(field_err(
+                pos,
+                format!("unknown field {key:?} (known fields: {})", known.join(", ")),
+            ));
+        }
+        self.field = Some(key.to_string());
+        Ok(())
+    }
+
+    fn null(&mut self, pos: usize) -> Result<(), JsonError> {
+        let f = self.take_field(pos)?;
+        Err(field_err(pos, format!("field {f:?} must not be null")))
+    }
+
+    fn boolean(&mut self, _b: bool, pos: usize) -> Result<(), JsonError> {
+        let f = self.take_field(pos)?;
+        Err(field_err(pos, format!("field {f:?} must not be a boolean")))
+    }
+
+    fn number(&mut self, n: f64, pos: usize) -> Result<(), JsonError> {
+        let f = self.take_field(pos)?;
+        if FLOAT_FIELDS.contains(&f.as_str()) {
+            self.floats.push((f, n, pos));
+            return Ok(());
+        }
+        if INT_FIELDS.contains(&f.as_str()) {
+            if n.fract() != 0.0 || !(0.0..=u64::MAX as f64).contains(&n) {
+                return Err(field_err(
+                    pos,
+                    format!("field {f:?} must be a non-negative integer, got {n}"),
+                ));
+            }
+            self.ints.push((f, n as u64, pos));
+            return Ok(());
+        }
+        Err(field_err(pos, format!("field {f:?} must be a string, not a number")))
+    }
+
+    fn string(&mut self, s: &str, pos: usize) -> Result<(), JsonError> {
+        let f = self.take_field(pos)?;
+        if STRING_FIELDS.contains(&f.as_str()) {
+            self.strings.push((f, s.to_string(), pos));
+            return Ok(());
+        }
+        Err(field_err(pos, format!("field {f:?} must be a number, not a string")))
+    }
+}
+
+impl SpecVisitor {
+    fn finish(self, tenant: u64) -> Result<JobSpec, JsonError> {
+        if !self.in_object {
+            return Err(field_err(0, "the job spec must be a JSON object"));
+        }
+        let str_of = |name: &str| {
+            self.strings.iter().find(|(f, _, _)| f == name).map(|(_, v, p)| (v.as_str(), *p))
+        };
+        let int_of =
+            |name: &str, dflt: u64| self.ints.iter().find(|(f, _, _)| f == name).map_or(dflt, |(_, v, _)| *v);
+        let float_of = |name: &str, dflt: f64| {
+            self.floats.iter().find(|(f, _, _)| f == name).map_or(dflt, |(_, v, _)| *v)
+        };
+        let Some((kind, _)) = str_of("kind") else {
+            return Err(field_err(0, "missing required field \"kind\" (release|lp|update)"));
+        };
+        let kind = kind.to_string();
+
+        // Every present field must apply to the requested kind — a field
+        // the executor would silently ignore is a caller bug worth a 4xx.
+        let present = self
+            .strings
+            .iter()
+            .map(|(f, _, p)| (f.as_str(), *p))
+            .chain(self.ints.iter().map(|(f, _, p)| (f.as_str(), *p)))
+            .chain(self.floats.iter().map(|(f, _, p)| (f.as_str(), *p)));
+        for (f, pos) in present {
+            let applies = FIELDS
+                .iter()
+                .find(|(name, _)| *name == f)
+                .is_some_and(|(_, kinds)| kinds.contains(&kind.as_str()));
+            if !applies {
+                return Err(field_err(
+                    pos,
+                    format!("field {f:?} does not apply to kind {kind:?}"),
+                ));
+            }
+        }
+
+        let shards = int_of("shards", 1).max(1) as usize;
+        match kind.as_str() {
+            "release" => {
+                let index = match str_of("index") {
+                    None => Some(IndexKind::Hnsw),
+                    Some(("none", _)) => None,
+                    Some((s, pos)) => {
+                        Some(s.parse::<IndexKind>().map_err(|e| field_err(pos, e))?)
+                    }
+                };
+                Ok(JobSpec::Release(ReleaseJobSpec {
+                    u: int_of("u", 256) as usize,
+                    m: int_of("m", 400) as usize,
+                    n: int_of("n", 500) as usize,
+                    t: int_of("t", 200) as usize,
+                    eps: float_of("eps", 1.0),
+                    delta: float_of("delta", 1e-3),
+                    index,
+                    shards,
+                    workload: int_of("workload", 0),
+                    tenant,
+                    seed: int_of("seed", 0),
+                }))
+            }
+            "lp" => {
+                let mode = match str_of("mode") {
+                    Some(("exhaustive", _)) => SelectionMode::Exhaustive,
+                    other => {
+                        let kind = match other {
+                            None => IndexKind::Hnsw,
+                            Some((s, pos)) => {
+                                s.parse::<IndexKind>().map_err(|e| field_err(pos, e))?
+                            }
+                        };
+                        if shards > 1 {
+                            SelectionMode::LazySharded(kind, shards)
+                        } else {
+                            SelectionMode::Lazy(kind)
+                        }
+                    }
+                };
+                Ok(JobSpec::Lp(LpJobSpec {
+                    m: int_of("m", 2_000) as usize,
+                    d: int_of("d", 16) as usize,
+                    t: int_of("t", 200) as usize,
+                    eps: float_of("eps", 1.0),
+                    delta: float_of("delta", 1e-3),
+                    delta_inf: float_of("delta_inf", 0.1),
+                    mode,
+                    tenant,
+                    seed: int_of("seed", 0),
+                }))
+            }
+            "update" => Ok(JobSpec::Update(WorkloadUpdateSpec {
+                workload: int_of("workload", 0),
+                u: int_of("u", 256) as usize,
+                m: int_of("m", 400) as usize,
+                n: int_of("n", 500) as usize,
+                insert: int_of("insert", 4) as usize,
+                tombstone: int_of("tombstone", 2) as usize,
+                tenant,
+            })),
+            other => Err(field_err(
+                0,
+                format!("unknown kind {other:?} (expected release, lp or update)"),
+            )),
+        }
+    }
+}
+
+/// The hardened limits every wire request body is parsed under: tighter
+/// than [`JsonLimits::default`], with duplicate keys rejected — a body
+/// that says `"seed": 1, "seed": 2` is ambiguous and must not be
+/// half-honored.
+pub fn wire_limits() -> JsonLimits {
+    JsonLimits { max_depth: 4, max_number_len: 64, duplicate_keys: DuplicateKeys::Reject }
+}
+
+/// Parse a wire request body into a [`JobSpec`] for the authenticated
+/// `tenant`, in one pass with no intermediate tree. Any violation —
+/// malformed JSON, unknown/inapplicable fields, nesting, duplicate keys,
+/// a body-supplied `tenant` — is a typed [`JsonError`] the front end maps
+/// to a 4xx *before* anything touches the budget ledger.
+pub fn parse_job_spec(body: &str, tenant: u64) -> Result<JobSpec, JsonError> {
+    let mut v = SpecVisitor::default();
+    parse_events(body, &wire_limits(), &mut v)?;
+    v.finish(tenant)
+}
+
+/// Emit an outcome body in pieces, calling `sink` once per piece. The
+/// `output` vector is released in [`VALUES_PER_CHUNK`]-value blocks, so a
+/// chunked sink streams a large histogram without the encoder (or the
+/// response path) ever materializing the whole body.
+///
+/// The body deliberately excludes wall-clock and job-id — those travel as
+/// response headers — so the bytes depend only on the job's deterministic
+/// result and the soak can assert wire == in-process per seed.
+pub fn emit_outcome<E>(
+    kind: &str,
+    outcome: &JobOutcome,
+    mut sink: impl FnMut(&str) -> Result<(), E>,
+) -> Result<(), E> {
+    sink(&format!(
+        "{{\"kind\":\"{kind}\",\"quality\":{},\"eps_spent\":{},\"delta_spent\":{},\
+         \"avg_select_work\":{},\"output\":",
+        fmt_f64(outcome.quality),
+        fmt_f64(outcome.eps_spent),
+        fmt_f64(outcome.delta_spent),
+        fmt_f64(outcome.avg_select_work),
+    ))?;
+    match &outcome.output {
+        None => sink("null}")?,
+        Some(values) => {
+            sink("[")?;
+            let mut piece = String::new();
+            for (i, block) in values.chunks(VALUES_PER_CHUNK).enumerate() {
+                piece.clear();
+                for (j, v) in block.iter().enumerate() {
+                    if i > 0 || j > 0 {
+                        piece.push(',');
+                    }
+                    piece.push_str(&fmt_f64(f64::from(*v)));
+                }
+                sink(&piece)?;
+            }
+            sink("]}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Stream an outcome body through a chunked response, one wire chunk per
+/// emitted piece — the response path never holds the whole payload.
+pub fn write_outcome_chunked<W: std::io::Write>(
+    kind: &str,
+    outcome: &JobOutcome,
+    cw: &mut super::http::ChunkedWriter<'_, W>,
+) -> std::io::Result<()> {
+    emit_outcome(kind, outcome, |piece| cw.write_chunk(piece.as_bytes()))
+}
+
+/// The outcome body as one buffered string — the in-process twin of the
+/// chunked wire encoding (`repro job` prints this; the integration tests
+/// and the soak compare wire bytes against it).
+pub fn outcome_body_string(kind: &str, outcome: &JobOutcome) -> String {
+    let mut s = String::new();
+    let _ = emit_outcome::<std::convert::Infallible>(kind, outcome, |piece| {
+        s.push_str(piece);
+        Ok(())
+    });
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn kind_of_err(body: &str) -> JsonErrorKind {
+        parse_job_spec(body, 0).unwrap_err().kind
+    }
+
+    #[test]
+    fn release_spec_parses_with_defaults_and_overrides() {
+        let spec = parse_job_spec(r#"{"kind":"release"}"#, 3).unwrap();
+        let JobSpec::Release(r) = spec else { panic!("expected release") };
+        assert_eq!((r.u, r.m, r.n, r.t), (256, 400, 500, 200));
+        assert_eq!((r.eps, r.delta), (1.0, 1e-3));
+        assert_eq!(r.index, Some(IndexKind::Hnsw));
+        assert_eq!((r.shards, r.workload, r.seed), (1, 0, 0));
+        assert_eq!(r.tenant, 3, "tenant comes from authentication");
+
+        let spec = parse_job_spec(
+            r#"{"kind":"release","u":128,"m":600,"t":40,"eps":0.5,"index":"flat",
+                "shards":2,"workload":7,"seed":42}"#,
+            1,
+        )
+        .unwrap();
+        let JobSpec::Release(r) = spec else { panic!("expected release") };
+        assert_eq!((r.u, r.m, r.t), (128, 600, 40));
+        assert_eq!(r.eps, 0.5);
+        assert_eq!(r.index, Some(IndexKind::Flat));
+        assert_eq!((r.shards, r.workload, r.seed), (2, 7, 42));
+
+        let spec = parse_job_spec(r#"{"kind":"release","index":"none"}"#, 0).unwrap();
+        let JobSpec::Release(r) = spec else { panic!("expected release") };
+        assert_eq!(r.index, None, "classic MWEM");
+    }
+
+    #[test]
+    fn lp_and_update_specs_parse() {
+        let spec = parse_job_spec(r#"{"kind":"lp","m":800,"d":8,"mode":"exhaustive"}"#, 2)
+            .unwrap();
+        let JobSpec::Lp(l) = spec else { panic!("expected lp") };
+        assert_eq!((l.m, l.d, l.t), (800, 8, 200));
+        assert_eq!(l.mode, SelectionMode::Exhaustive);
+        assert_eq!(l.delta_inf, 0.1);
+        assert_eq!(l.tenant, 2);
+
+        let spec = parse_job_spec(r#"{"kind":"lp","mode":"ivf","shards":3}"#, 0).unwrap();
+        let JobSpec::Lp(l) = spec else { panic!("expected lp") };
+        assert_eq!(l.mode, SelectionMode::LazySharded(IndexKind::Ivf, 3));
+
+        let spec =
+            parse_job_spec(r#"{"kind":"update","workload":5,"insert":3,"tombstone":1}"#, 4)
+                .unwrap();
+        let JobSpec::Update(u) = spec else { panic!("expected update") };
+        assert_eq!((u.workload, u.insert, u.tombstone), (5, 3, 1));
+        assert_eq!(u.tenant, 4);
+    }
+
+    #[test]
+    fn adversarial_bodies_are_typed_errors_never_panics() {
+        // malformed JSON surfaces the json layer's typed kinds
+        assert_eq!(kind_of_err("{"), JsonErrorKind::Truncated);
+        assert_eq!(kind_of_err(r#"{"kind":"release","eps":1e999}"#), JsonErrorKind::OversizedNumber);
+        assert_eq!(
+            kind_of_err(r#"{"kind":"release","seed":1,"seed":2}"#),
+            JsonErrorKind::DuplicateKey
+        );
+        // protocol violations are Visitor-kind errors
+        for body in [
+            "5",                                    // not an object
+            r#"{"kind":"release","nested":{}}"#,    // unknown + nested
+            r#"{"kind":"release","u":[1]}"#,        // array value
+            r#"{"kind":"teleport"}"#,               // unknown kind
+            r#"{"u":256}"#,                         // missing kind
+            r#"{"kind":"release","tenant":9}"#,     // tenant from body
+            r#"{"kind":"release","u":1.5}"#,        // non-integer size
+            r#"{"kind":"release","u":-4}"#,         // negative size
+            r#"{"kind":"release","d":8}"#,          // lp-only field
+            r#"{"kind":"lp","insert":1}"#,          // update-only field
+            r#"{"kind":"update","eps":1.0}"#,       // eps on a zero-eps kind
+            r#"{"kind":true}"#,                     // wrong type
+            r#"{"kind":"release","u":null}"#,       // null value
+        ] {
+            let err = parse_job_spec(body, 0).unwrap_err();
+            assert_eq!(err.kind, JsonErrorKind::Visitor, "body: {body} -> {err}");
+        }
+        // the message names the offender
+        let err = parse_job_spec(r#"{"kind":"release","tenant":9}"#, 0).unwrap_err();
+        assert!(err.msg.contains("authenticated"), "{}", err.msg);
+    }
+
+    #[test]
+    fn outcome_bodies_stream_and_buffer_identically() {
+        let outcome = JobOutcome {
+            quality: 0.125,
+            eps_spent: 1.0,
+            delta_spent: 1e-3,
+            avg_select_work: 40.0,
+            total_time: Duration::from_millis(7),
+            output: Some((0..200).map(|i| i as f32 / 3.0).collect()),
+        };
+        let buffered = outcome_body_string("release", &outcome);
+        // piecewise emission concatenates to the same bytes
+        let mut pieces: Vec<String> = Vec::new();
+        emit_outcome::<std::convert::Infallible>("release", &outcome, |p| {
+            pieces.push(p.to_string());
+            Ok(())
+        })
+        .unwrap();
+        assert!(pieces.len() > 3, "a 200-value output must stream in blocks");
+        assert_eq!(pieces.concat(), buffered);
+        // the body is valid JSON with the released vector intact
+        let parsed = crate::util::json::Json::parse(&buffered).unwrap();
+        assert_eq!(parsed.get("kind").unwrap().as_str(), Some("release"));
+        assert_eq!(parsed.get("quality").unwrap().as_f64(), Some(0.125));
+        assert_eq!(parsed.get("output").unwrap().as_arr().unwrap().len(), 200);
+        // wall-clock never leaks into the body: same result, different
+        // timing, identical bytes (the soak's determinism contract)
+        let slower = JobOutcome { total_time: Duration::from_secs(9), ..outcome.clone() };
+        assert_eq!(outcome_body_string("release", &slower), buffered);
+
+        let none = JobOutcome { output: None, ..outcome };
+        let body = outcome_body_string("update", &none);
+        assert!(body.ends_with("\"output\":null}"), "{body}");
+    }
+}

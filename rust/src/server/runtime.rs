@@ -312,6 +312,13 @@ impl Server {
         self.metrics.lock().unwrap().clone()
     }
 
+    /// Shared handle to the live metrics registry, so a front end (the
+    /// wire listener, DESIGN.md §11) can meter into the same registry the
+    /// workers use and [`Server::drain`] finalizes.
+    pub(crate) fn metrics_handle(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Snapshot of every tenant's privacy ledger.
     pub fn tenant_spend(&self) -> Vec<TenantSpend> {
         self.budget.snapshot()

@@ -1,0 +1,762 @@
+//! The network front end (DESIGN.md §11): an HTTP/1.1 listener over the
+//! serving runtime, turning sockets into [`Server::submit`] calls.
+//!
+//! Architecture: one nonblocking accept thread feeds accepted sockets
+//! into a bounded [`BoundedQueue`] (Reject at `max_conns` — an overloaded
+//! accept answers 503 immediately instead of queueing connections
+//! invisibly), drained by a pool of connection workers. Each worker owns
+//! one connection at a time: keep-alive request loop, per-request
+//! routing, and a chunked streaming response for job outcomes. The
+//! backpressure ladder maps queue/budget states to statuses:
+//!
+//! * spec parse failure → **400** (typed [`crate::util::json::JsonError`],
+//!   zero ε touched)
+//! * missing/unknown token → **401** (tenants authenticate; ε ledgers key
+//!   off the token, never off the body)
+//! * [`SubmitError::Budget`] → **403** (the cap is a privacy guarantee,
+//!   not a transient state — no Retry-After)
+//! * [`SubmitError::QueueFull`] under [`QueuePolicy::Reject`] → **429**
+//!   with `Retry-After`
+//! * [`SubmitError::Draining`] / connection overflow → **503** with
+//!   `Retry-After`
+//!
+//! Metrics flow into the *same* registry the workers use (so one drain
+//! reports both): `conns_accepted`/`conns_open`, `bytes_in`/`bytes_out`,
+//! `parse_errors`, per-status `http_<code>` counters and the
+//! `wire_request` latency series.
+
+use super::http::{read_request, write_response, ChunkedWriter, HttpLimits, Request};
+use super::proto::{parse_job_spec, write_outcome_chunked};
+use super::queue::{BoundedQueue, PushError, QueuePolicy};
+use super::runtime::{Server, SubmitError};
+use crate::config::Config;
+use crate::metrics::Metrics;
+use std::collections::BTreeMap;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How long a connection worker sleeps in a socket read before rechecking
+/// the shutdown flag — the upper bound on shutdown latency per idle
+/// connection.
+const IDLE_TICK: Duration = Duration::from_millis(250);
+
+/// Listener sizing and authentication for a [`WireServer`].
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// Address to bind (`host:port`; port 0 picks a free one — the bound
+    /// address is printed and available via [`WireServer::local_addr`]).
+    pub listen: String,
+    /// Accepted-but-unserviced connection bound: the accept thread
+    /// answers 503 beyond it instead of queueing invisibly.
+    pub max_conns: usize,
+    /// Connection worker threads — the bound on concurrently *serviced*
+    /// connections.
+    pub conn_workers: usize,
+    /// Bearer-token → tenant-id map. Empty falls back to `tenants`
+    /// development tokens.
+    pub auth: Vec<(String, u64)>,
+    /// With no explicit `auth`, issue dev tokens `tenant-0..tenant-N-1`.
+    pub tenants: u64,
+    /// `Retry-After` seconds on 429/503 responses.
+    pub retry_after_secs: u64,
+    /// Per-request body cap (bytes).
+    pub max_body_bytes: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            listen: "127.0.0.1:0".into(),
+            max_conns: 32,
+            conn_workers: 8,
+            auth: Vec::new(),
+            tenants: 4,
+            retry_after_secs: 1,
+            max_body_bytes: HttpLimits::default().max_body_bytes,
+        }
+    }
+}
+
+impl WireConfig {
+    /// Read the `[wire]` section, honoring the CLI shorthands `--listen`,
+    /// `--max-conns`, `--conn-workers` and `--tenants` (shorthands win
+    /// over section values).
+    ///
+    /// ```text
+    /// [wire]
+    /// listen = "127.0.0.1:8700"
+    /// max_conns = 32
+    /// conn_workers = 8
+    /// auth = "s3cret:0,t0ken:1"   # token:tenant pairs; unset = dev tokens
+    /// retry_after_secs = 1
+    /// ```
+    pub fn from_config(cfg: &Config) -> anyhow::Result<Self> {
+        let d = WireConfig::default();
+        let auth_str = cfg.str_or("wire.auth", "");
+        let mut auth = Vec::new();
+        for pair in auth_str.split(',').filter(|p| !p.trim().is_empty()) {
+            let (token, id) = pair.trim().split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("wire.auth entry {pair:?} is not token:tenant")
+            })?;
+            let id: u64 = id
+                .parse()
+                .map_err(|_| anyhow::anyhow!("wire.auth tenant {id:?} is not a number"))?;
+            auth.push((token.to_string(), id));
+        }
+        Ok(WireConfig {
+            listen: cfg.str_or("listen", &cfg.str_or("wire.listen", &d.listen)),
+            max_conns: cfg.or("max-conns", cfg.or("wire.max_conns", d.max_conns)?)?,
+            conn_workers: cfg
+                .or("conn-workers", cfg.or("wire.conn_workers", d.conn_workers)?)?,
+            auth,
+            tenants: cfg.or("tenants", cfg.or("wire.tenants", d.tenants)?)?,
+            retry_after_secs: cfg.or("wire.retry_after_secs", d.retry_after_secs)?,
+            max_body_bytes: cfg.or("wire.max_body_bytes", d.max_body_bytes)?,
+        })
+    }
+
+    /// The effective token → tenant map: explicit `auth` pairs, or the
+    /// `tenant-0..tenant-N-1` development tokens.
+    pub fn auth_map(&self) -> BTreeMap<String, u64> {
+        if self.auth.is_empty() {
+            (0..self.tenants.max(1)).map(|i| (format!("tenant-{i}"), i)).collect()
+        } else {
+            self.auth.iter().cloned().collect()
+        }
+    }
+}
+
+/// State shared by the accept thread and every connection worker.
+struct WireShared {
+    server: Server,
+    /// Clone of the server's registry handle — dropped before the inner
+    /// [`Server::drain`] so its `Arc::try_unwrap` still succeeds.
+    metrics: Arc<Mutex<Metrics>>,
+    auth: BTreeMap<String, u64>,
+    conns: BoundedQueue<TcpStream>,
+    shutdown: AtomicBool,
+    conns_open: AtomicI64,
+    shutdown_signal: (Mutex<bool>, Condvar),
+    retry_after_secs: u64,
+    limits: HttpLimits,
+}
+
+impl WireShared {
+    fn meter<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
+        f(&mut self.metrics.lock().unwrap())
+    }
+
+    fn count_status(&self, status: u16) {
+        self.meter(|m| m.inc(&format!("http_{status}"), 1));
+    }
+
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let (lock, cv) = &self.shutdown_signal;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+}
+
+/// The wire front end: owns the inner [`Server`], the accept thread and
+/// the connection workers. Drive it with [`WireServer::wait_for_shutdown`]
+/// + [`WireServer::drain`].
+pub struct WireServer {
+    shared: Arc<WireShared>,
+    addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    conn_threads: Vec<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind the listener and start serving `server` over it.
+    pub fn start(server: Server, cfg: &WireConfig) -> anyhow::Result<WireServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.listen))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("nonblocking listener: {e}"))?;
+        let addr = listener.local_addr().map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
+
+        let shared = Arc::new(WireShared {
+            metrics: server.metrics_handle(),
+            server,
+            auth: cfg.auth_map(),
+            conns: BoundedQueue::new(cfg.max_conns.max(1), QueuePolicy::Reject),
+            shutdown: AtomicBool::new(false),
+            conns_open: AtomicI64::new(0),
+            shutdown_signal: (Mutex::new(false), Condvar::new()),
+            retry_after_secs: cfg.retry_after_secs,
+            limits: HttpLimits {
+                max_body_bytes: cfg.max_body_bytes,
+                ..HttpLimits::default()
+            },
+        });
+
+        let accept_thread = {
+            let shared = Arc::clone(&shared);
+            Some(std::thread::spawn(move || accept_loop(&listener, &shared)))
+        };
+        let conn_threads = (0..cfg.conn_workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || {
+                    while let Some(stream) = shared.conns.pop() {
+                        handle_connection(&shared, stream);
+                    }
+                })
+            })
+            .collect();
+
+        Ok(WireServer { shared, addr, accept_thread, conn_threads })
+    }
+
+    /// The bound listen address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown from any thread — same effect as a wire
+    /// `POST /v1/shutdown`. Idempotent; does not block.
+    pub fn shutdown(&self) {
+        self.shared.request_shutdown();
+    }
+
+    /// Block until shutdown is requested (wire or [`WireServer::shutdown`]).
+    pub fn wait_for_shutdown(&self) {
+        let (lock, cv) = &self.shared.shutdown_signal;
+        let mut requested = lock.lock().unwrap();
+        while !*requested {
+            requested = cv.wait(requested).unwrap();
+        }
+    }
+
+    /// Graceful teardown: stop accepting, let every serviced connection
+    /// and every admitted job finish, then drain the inner server and
+    /// return the combined metrics (wire counters and job histograms live
+    /// in the same registry).
+    pub fn drain(mut self) -> Metrics {
+        self.shared.request_shutdown();
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        self.shared.conns.close();
+        for t in std::mem::take(&mut self.conn_threads) {
+            let _ = t.join();
+        }
+        match Arc::try_unwrap(self.shared) {
+            Ok(shared) => {
+                let WireShared { server, metrics, conns_open, .. } = shared;
+                debug_assert_eq!(conns_open.load(Ordering::Relaxed), 0);
+                // the front end's registry clone must die before drain's
+                // Arc::try_unwrap inside the inner server
+                drop(metrics);
+                server.drain()
+            }
+            // unreachable once every thread is joined; degrade to a
+            // snapshot rather than panicking in teardown
+            Err(shared) => {
+                shared.server.close();
+                shared.server.metrics_snapshot()
+            }
+        }
+    }
+}
+
+/// Accept loop: nonblocking accepts with a shutdown-checking sleep, and
+/// overload shedding when the connection queue is at `max_conns`.
+fn accept_loop(listener: &TcpListener, shared: &WireShared) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nodelay(true);
+                shared.meter(|m| m.inc("conns_accepted", 1));
+                match shared.conns.push(stream) {
+                    Ok(()) => {}
+                    Err(PushError::Full(mut stream)) => {
+                        // shed at the door: the client learns immediately
+                        shared.count_status(503);
+                        let _ = write_response(
+                            &mut stream,
+                            503,
+                            &[
+                                ("retry-after", shared.retry_after_secs.to_string()),
+                                ("connection", "close".to_string()),
+                            ],
+                            b"connection limit reached\n",
+                        );
+                    }
+                    Err(PushError::Closed(_)) => break,
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+}
+
+/// Serve one connection to completion: keep-alive request loop with an
+/// idle tick that watches the shutdown flag.
+fn handle_connection(shared: &WireShared, stream: TcpStream) {
+    let open = shared.conns_open.fetch_add(1, Ordering::SeqCst) + 1;
+    shared.meter(|m| m.set_gauge("conns_open", open as f64));
+    serve_connection(shared, stream);
+    let open = shared.conns_open.fetch_sub(1, Ordering::SeqCst) - 1;
+    shared.meter(|m| m.set_gauge("conns_open", open as f64));
+}
+
+fn serve_connection(shared: &WireShared, stream: TcpStream) {
+    if stream.set_read_timeout(Some(IDLE_TICK)).is_err() {
+        return;
+    }
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        // Idle phase: wait for the first byte of a request (or EOF), so
+        // keep-alive idle time never counts against request parsing and
+        // the shutdown flag is polled every tick.
+        match reader.fill_buf() {
+            Ok([]) => return, // peer closed
+            Ok(_) => {}
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        match read_request(&mut reader, &shared.limits) {
+            Ok(req) => {
+                shared.meter(|m| m.inc("bytes_in", req.bytes_read as u64));
+                let keep_alive = req.keep_alive();
+                match handle_request(shared, &req, &mut writer) {
+                    Ok(()) => {}
+                    Err(_) => return, // write side failed; connection unusable
+                }
+                if !keep_alive || shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+            }
+            Err(e) => {
+                if let Some(status) = e.status() {
+                    shared.count_status(status);
+                    let _ = write_response(
+                        &mut writer,
+                        status,
+                        &[("connection", "close".to_string())],
+                        format!("{e}\n").as_bytes(),
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Route one parsed request and write its response. `Err` means the
+/// transport failed mid-response and the connection must be dropped.
+fn handle_request(
+    shared: &WireShared,
+    req: &Request,
+    w: &mut TcpStream,
+) -> io::Result<()> {
+    shared.meter(|m| m.inc("requests", 1));
+    let started = Instant::now();
+    let written = match (req.method.as_str(), req.target.as_str()) {
+        ("GET", "/healthz") => respond(shared, w, 200, &[], b"ok\n")?,
+        (_, "/healthz") => method_not_allowed(shared, w, "GET")?,
+        (method, target) => {
+            // everything else requires a tenant token
+            let token = req
+                .header("authorization")
+                .and_then(|v| v.strip_prefix("Bearer "))
+                .map(str::trim);
+            let tenant = token.and_then(|t| shared.auth.get(t).copied());
+            match (method, target, tenant) {
+                (_, _, None) => {
+                    respond(shared, w, 401, &[], b"unknown or missing bearer token\n")?
+                }
+                ("GET", "/v1/metrics", Some(_)) => {
+                    let body = shared.server.metrics_snapshot().to_json().to_string();
+                    respond(
+                        shared,
+                        w,
+                        200,
+                        &[("content-type", "application/json".to_string())],
+                        body.as_bytes(),
+                    )?
+                }
+                ("POST", "/v1/shutdown", Some(_)) => {
+                    shared.request_shutdown();
+                    respond(shared, w, 200, &[], b"draining\n")?
+                }
+                ("POST", "/v1/jobs", Some(tenant)) => {
+                    handle_job(shared, req, w, tenant)?
+                }
+                (_, "/v1/jobs", Some(_)) => method_not_allowed(shared, w, "POST")?,
+                (_, "/v1/metrics", Some(_)) => method_not_allowed(shared, w, "GET")?,
+                (_, "/v1/shutdown", Some(_)) => method_not_allowed(shared, w, "POST")?,
+                _ => respond(shared, w, 404, &[], b"unknown endpoint\n")?,
+            }
+        }
+    };
+    shared.meter(|m| {
+        m.inc("bytes_out", written as u64);
+        m.observe("wire_request", started.elapsed());
+    });
+    Ok(())
+}
+
+/// POST /v1/jobs: parse → submit → wait → stream. Every refusal maps to
+/// the backpressure ladder in the module docs, and no refusal spends ε.
+fn handle_job(
+    shared: &WireShared,
+    req: &Request,
+    w: &mut TcpStream,
+    tenant: u64,
+) -> io::Result<usize> {
+    let Ok(body) = std::str::from_utf8(&req.body) else {
+        shared.meter(|m| m.inc("parse_errors", 1));
+        return respond(shared, w, 400, &[], b"request body is not UTF-8\n");
+    };
+    let spec = match parse_job_spec(body, tenant) {
+        Ok(spec) => spec,
+        Err(e) => {
+            shared.meter(|m| m.inc("parse_errors", 1));
+            return respond(shared, w, 400, &[], format!("{e}\n").as_bytes());
+        }
+    };
+    let ticket = match shared.server.submit(spec) {
+        Ok(t) => t,
+        Err(SubmitError::QueueFull { depth }) => {
+            return respond(
+                shared,
+                w,
+                429,
+                &[("retry-after", shared.retry_after_secs.to_string())],
+                format!("queue full (depth {depth}); retry later\n").as_bytes(),
+            );
+        }
+        Err(SubmitError::Draining) => {
+            return respond(
+                shared,
+                w,
+                503,
+                &[("retry-after", shared.retry_after_secs.to_string())],
+                b"server draining\n",
+            );
+        }
+        Err(SubmitError::Budget(e)) => {
+            return respond(shared, w, 403, &[], format!("{e}\n").as_bytes());
+        }
+    };
+    let job_id = ticket.job_id;
+    let result = ticket.wait();
+    match result.outcome {
+        Err(e) => respond(
+            shared,
+            w,
+            500,
+            &[("x-job-id", job_id.to_string())],
+            format!("job failed: {e:#}\n").as_bytes(),
+        ),
+        Ok(outcome) => {
+            // Stream the outcome chunked: job id and wall-clock ride as
+            // headers so the body stays byte-deterministic per seed.
+            shared.count_status(200);
+            let mut cw = ChunkedWriter::begin(
+                w,
+                200,
+                &[
+                    ("content-type", "application/json".to_string()),
+                    ("x-job-id", job_id.to_string()),
+                    (
+                        "x-duration-us",
+                        (outcome.total_time.as_micros() as u64).to_string(),
+                    ),
+                ],
+            )?;
+            write_outcome_chunked(result.kind, &outcome, &mut cw)?;
+            cw.finish()
+        }
+    }
+}
+
+/// Fixed-length response + status metering. Returns bytes written.
+fn respond(
+    shared: &WireShared,
+    w: &mut TcpStream,
+    status: u16,
+    extra: &[(&str, String)],
+    body: &[u8],
+) -> io::Result<usize> {
+    shared.count_status(status);
+    write_response(w, status, extra, body)
+}
+
+fn method_not_allowed(
+    shared: &WireShared,
+    w: &mut TcpStream,
+    allow: &str,
+) -> io::Result<usize> {
+    respond(
+        shared,
+        w,
+        405,
+        &[("allow", allow.to_string())],
+        format!("method not allowed (use {allow})\n").as_bytes(),
+    )
+}
+
+/// What a [`WireClient`] request came back with.
+#[derive(Debug)]
+pub struct WireResponse {
+    /// HTTP status code.
+    pub status: u16,
+    /// Response headers, names lowercased.
+    pub headers: Vec<(String, String)>,
+    /// The fully read body (chunked bodies are de-framed).
+    pub body: Vec<u8>,
+    /// Number of body chunks received (1 for `Content-Length` framing) —
+    /// lets tests assert a response actually streamed.
+    pub chunks: usize,
+}
+
+impl WireResponse {
+    /// First value of a header, by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The body as UTF-8 (lossy).
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// Minimal blocking HTTP/1.1 client for the wire protocol — one
+/// keep-alive connection per instance. Shared by the integration tests,
+/// the serving bench's wire axis, the example and the soak driver, so
+/// every consumer speaks the protocol the same way.
+pub struct WireClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WireClient {
+    /// Connect to a wire server.
+    pub fn connect(addr: &str) -> io::Result<WireClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        let read_half = stream.try_clone()?;
+        Ok(WireClient { reader: BufReader::new(read_half), writer: stream })
+    }
+
+    /// Send one request and read the full response. `token` becomes a
+    /// `Bearer` header when present; `body` implies `Content-Length`.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        token: Option<&str>,
+        body: Option<&str>,
+    ) -> io::Result<WireResponse> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: wire\r\n");
+        if let Some(t) = token {
+            head.push_str(&format!("authorization: Bearer {t}\r\n"));
+        }
+        if let Some(b) = body {
+            head.push_str(&format!("content-length: {}\r\n", b.len()));
+        }
+        head.push_str("\r\n");
+        self.writer.write_all(head.as_bytes())?;
+        if let Some(b) = body {
+            self.writer.write_all(b.as_bytes())?;
+        }
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    /// `POST /v1/jobs` with a spec body.
+    pub fn post_job(&mut self, token: &str, spec: &str) -> io::Result<WireResponse> {
+        self.request("POST", "/v1/jobs", Some(token), Some(spec))
+    }
+
+    /// Authenticated GET.
+    pub fn get(&mut self, path: &str, token: Option<&str>) -> io::Result<WireResponse> {
+        self.request("GET", path, token, None)
+    }
+
+    fn read_line(&mut self) -> io::Result<String> {
+        let mut line = Vec::new();
+        self.reader.read_until(b'\n', &mut line)?;
+        if line.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "connection closed mid-response",
+            ));
+        }
+        while matches!(line.last(), Some(b'\n' | b'\r')) {
+            line.pop();
+        }
+        String::from_utf8(line)
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "non-UTF-8 line"))
+    }
+
+    fn read_response(&mut self) -> io::Result<WireResponse> {
+        use std::io::Read;
+        let status_line = self.read_line()?;
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("bad status line {status_line:?}"),
+                )
+            })?;
+        let mut headers = Vec::new();
+        loop {
+            let line = self.read_line()?;
+            if line.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+            }
+        }
+        let header = |name: &str| {
+            headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+        };
+        let mut body = Vec::new();
+        let mut chunks = 0usize;
+        if header("transfer-encoding").is_some_and(|v| v.contains("chunked")) {
+            loop {
+                let size_line = self.read_line()?;
+                let size = usize::from_str_radix(size_line.trim(), 16).map_err(|_| {
+                    io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("bad chunk size {size_line:?}"),
+                    )
+                })?;
+                if size == 0 {
+                    self.read_line()?; // the terminal CRLF
+                    break;
+                }
+                let start = body.len();
+                body.resize(start + size, 0);
+                self.reader.read_exact(&mut body[start..])?;
+                let mut crlf = [0u8; 2];
+                self.reader.read_exact(&mut crlf)?;
+                chunks += 1;
+            }
+        } else if let Some(cl) = header("content-length") {
+            let len: usize = cl.parse().map_err(|_| {
+                io::Error::new(io::ErrorKind::InvalidData, "bad content-length")
+            })?;
+            body.resize(len, 0);
+            self.reader.read_exact(&mut body)?;
+            chunks = usize::from(len > 0);
+        }
+        Ok(WireResponse { status, headers, body, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::ServerConfig;
+
+    fn tiny_server(cfg: ServerConfig) -> WireServer {
+        let server = Server::start(cfg);
+        WireServer::start(server, &WireConfig::default()).expect("bind loopback")
+    }
+
+    #[test]
+    fn healthz_and_auth_do_not_require_jobs() {
+        let wire = tiny_server(ServerConfig {
+            workers: 1,
+            cache_capacity: 0,
+            ..ServerConfig::default()
+        });
+        let addr = wire.local_addr().to_string();
+        let mut c = WireClient::connect(&addr).unwrap();
+        let r = c.get("/healthz", None).unwrap();
+        assert_eq!((r.status, r.body_str().as_str()), (200, "ok\n"));
+        // same keep-alive connection: unauthenticated API call
+        let r = c.get("/v1/metrics", None).unwrap();
+        assert_eq!(r.status, 401);
+        let r = c.get("/v1/metrics", Some("tenant-0")).unwrap();
+        assert_eq!(r.status, 200);
+        assert!(r.body_str().contains("counters"));
+        let r = c.get("/nope", Some("tenant-0")).unwrap();
+        assert_eq!(r.status, 404);
+        let r = c.request("PUT", "/v1/jobs", Some("tenant-0"), None).unwrap();
+        assert_eq!(r.status, 405);
+        assert_eq!(r.header("allow"), Some("POST"));
+
+        wire.shutdown();
+        let m = wire.drain();
+        assert_eq!(m.counter("conns_accepted"), 1);
+        assert_eq!(m.counter("http_401"), 1);
+        assert!(m.counter("bytes_in") > 0 && m.counter("bytes_out") > 0);
+        assert_eq!(m.gauge("conns_open"), Some(0.0), "clean drain closes all conns");
+    }
+
+    #[test]
+    fn wire_shutdown_endpoint_unblocks_wait() {
+        let wire = tiny_server(ServerConfig {
+            workers: 1,
+            cache_capacity: 0,
+            ..ServerConfig::default()
+        });
+        let addr = wire.local_addr().to_string();
+        let waiter = {
+            let mut c = WireClient::connect(&addr).unwrap();
+            std::thread::spawn(move || c.request("POST", "/v1/shutdown", Some("tenant-1"), None))
+        };
+        wire.wait_for_shutdown();
+        let r = waiter.join().unwrap().unwrap();
+        assert_eq!((r.status, r.body_str().as_str()), (200, "draining\n"));
+        wire.drain();
+    }
+
+    #[test]
+    fn wire_config_from_config_parses_auth_and_shorthands() {
+        let mut cfg = Config::parse(
+            "[wire]\nlisten = \"127.0.0.1:9999\"\nmax_conns = 7\n\
+             auth = \"s3cret:0, t0ken:12\"\n",
+        )
+        .unwrap();
+        let w = WireConfig::from_config(&cfg).unwrap();
+        assert_eq!(w.listen, "127.0.0.1:9999");
+        assert_eq!(w.max_conns, 7);
+        assert_eq!(w.auth_map(), BTreeMap::from([("s3cret".into(), 0), ("t0ken".into(), 12)]));
+
+        cfg.apply_overrides(["--listen=0.0.0.0:80", "--max-conns=3"]).unwrap();
+        let w = WireConfig::from_config(&cfg).unwrap();
+        assert_eq!((w.listen.as_str(), w.max_conns), ("0.0.0.0:80", 3));
+
+        let d = WireConfig::from_config(&Config::new()).unwrap();
+        assert_eq!(d.listen, "127.0.0.1:0");
+        assert_eq!(d.auth_map().len(), 4, "dev tokens tenant-0..3");
+        assert_eq!(d.auth_map().get("tenant-2"), Some(&2));
+
+        assert!(WireConfig::from_config(
+            &Config::parse("[wire]\nauth = \"no-colon\"\n").unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,11 +1,33 @@
-//! Minimal JSON parser + writer (the offline build vendors no serde_json).
+//! Minimal JSON reader + writer (the offline build vendors no serde_json).
 //!
-//! Supports the full JSON grammar, including `\uXXXX` escapes with
-//! surrogate pairs beyond the BMP (unpaired surrogates decode to U+FFFD,
-//! matching lenient parsers). The writer escapes every control character,
-//! so any Rust string round-trips. Used for `artifacts/manifest.json`, the
-//! artifact-store manifest (`store/manifest.rs`) and experiment result
-//! dumps.
+//! Two frontends share one hardened lexer, following serde_json's
+//! three-representation split (text / events / tree):
+//!
+//! * **Event layer** — [`parse_events`] drives a caller-supplied
+//!   [`JsonVisitor`] with one callback per token, allocating nothing per
+//!   event on the fast path (escape-free strings are handed out as slices
+//!   of the input; escaped strings reuse one scratch buffer). This is the
+//!   wire front end's request parser (DESIGN.md §11): a request body is
+//!   validated and folded into a spec in a single pass, with no
+//!   intermediate tree.
+//! * **Tree layer** — [`Json::parse`] builds the familiar [`Json`] value
+//!   by running a tree-builder visitor over the same event stream. Used
+//!   for the artifact-store manifest (`store/manifest.rs`), bench/metrics
+//!   dumps and the perf-gate baseline.
+//!
+//! Both frontends are safe against adversarial input: the parser is
+//! **iterative** (an explicit container stack, so nesting depth is a typed
+//! [`JsonErrorKind::TooDeep`] error instead of a stack overflow), number
+//! tokens are length- and range-checked ([`JsonErrorKind::OversizedNumber`]
+//! — `1e999` is an error, never a silent `inf` that the writer could not
+//! round-trip), truncated input anywhere (mid-value, mid-escape) is a
+//! typed truncation error, and the duplicate-key policy is explicit
+//! ([`DuplicateKeys`]). Nothing in this module panics on untrusted bytes.
+//!
+//! Strings support the full escape grammar including `\uXXXX` surrogate
+//! pairs beyond the BMP (unpaired surrogates decode to U+FFFD, matching
+//! lenient parsers). The writer escapes every control character, so any
+//! Rust string round-trips.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -28,16 +50,18 @@ pub enum Json {
 }
 
 impl Json {
-    /// Parse a complete JSON document.
+    /// Parse a complete JSON document under [`JsonLimits::default`].
     pub fn parse(text: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
-        p.skip_ws();
-        let v = p.value()?;
-        p.skip_ws();
-        if p.pos != p.bytes.len() {
-            return Err(p.err("trailing characters"));
-        }
-        Ok(v)
+        Json::parse_with_limits(text, &JsonLimits::default())
+    }
+
+    /// Parse a complete JSON document under explicit [`JsonLimits`].
+    pub fn parse_with_limits(text: &str, limits: &JsonLimits) -> Result<Json, JsonError> {
+        let mut builder = TreeBuilder::default();
+        parse_events(text, limits, &mut builder)?;
+        // parse_events only returns Ok once one complete value was emitted,
+        // so the builder always holds the finished tree here.
+        builder.out.ok_or_else(|| JsonError::at(JsonErrorKind::Truncated, 0, "empty input"))
     }
 
     /// The string value, if this is a `Str`.
@@ -91,33 +115,439 @@ impl Json {
     }
 }
 
-/// Parse failure with a byte offset.
+/// Machine-checkable failure class of a [`JsonError`]. The wire front end
+/// maps every kind to a 4xx response; none of them panic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JsonErrorKind {
+    /// Structurally invalid input (unexpected character, bad literal,
+    /// missing separator).
+    Syntax,
+    /// Input ended inside a value, string or container.
+    Truncated,
+    /// Input ended inside a `\` escape sequence.
+    TruncatedEscape,
+    /// An unknown escape or malformed `\uXXXX`.
+    BadEscape,
+    /// A number token that does not parse as a JSON number.
+    BadNumber,
+    /// A number token longer than the limit, or one whose value overflows
+    /// f64 to ±∞ (`1e999`) — accepted by naive parsers, unround-trippable
+    /// by any JSON writer.
+    OversizedNumber,
+    /// Containers nested deeper than [`JsonLimits::max_depth`].
+    TooDeep,
+    /// A repeated object key under [`DuplicateKeys::Reject`].
+    DuplicateKey,
+    /// A complete value followed by non-whitespace.
+    TrailingData,
+    /// The input is not valid UTF-8 (byte-level entry points).
+    InvalidUtf8,
+    /// An error raised by a [`JsonVisitor`] callback (e.g. an unknown
+    /// request field in the wire protocol).
+    Visitor,
+}
+
+impl fmt::Display for JsonErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            JsonErrorKind::Syntax => "syntax",
+            JsonErrorKind::Truncated => "truncated",
+            JsonErrorKind::TruncatedEscape => "truncated-escape",
+            JsonErrorKind::BadEscape => "bad-escape",
+            JsonErrorKind::BadNumber => "bad-number",
+            JsonErrorKind::OversizedNumber => "oversized-number",
+            JsonErrorKind::TooDeep => "too-deep",
+            JsonErrorKind::DuplicateKey => "duplicate-key",
+            JsonErrorKind::TrailingData => "trailing-data",
+            JsonErrorKind::InvalidUtf8 => "invalid-utf8",
+            JsonErrorKind::Visitor => "visitor",
+        })
+    }
+}
+
+/// Parse failure with a typed kind and a byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What class of failure this is.
+    pub kind: JsonErrorKind,
     /// Byte position of the failure.
     pub pos: usize,
-    /// What went wrong.
+    /// Human-readable detail.
     pub msg: String,
+}
+
+impl JsonError {
+    /// Construct an error of `kind` at byte `pos`.
+    pub fn at(kind: JsonErrorKind, pos: usize, msg: impl Into<String>) -> Self {
+        JsonError { kind, pos, msg: msg.into() }
+    }
 }
 
 impl fmt::Display for JsonError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+        write!(f, "json error ({}) at byte {}: {}", self.kind, self.pos, self.msg)
     }
 }
 
 impl std::error::Error for JsonError {}
 
-struct Parser<'a> {
-    bytes: &'a [u8],
-    pos: usize,
+/// What to do when an object repeats a key.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DuplicateKeys {
+    /// The last occurrence wins (every event is still delivered; the tree
+    /// frontend overwrites). Matches the historic lenient behavior.
+    #[default]
+    LastWins,
+    /// Fail with [`JsonErrorKind::DuplicateKey`]. The wire protocol uses
+    /// this: a request that says `"seed": 1, "seed": 2` is ambiguous and
+    /// must not be half-honored.
+    Reject,
 }
 
-impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
-        JsonError { pos: self.pos, msg: msg.to_string() }
-    }
+/// Hardening limits for the parser. [`JsonLimits::default`] is permissive
+/// enough for every trusted artifact in the repo (manifests, bench dumps);
+/// the wire front end tightens it per request.
+#[derive(Clone, Copy, Debug)]
+pub struct JsonLimits {
+    /// Maximum container nesting depth (inclusive). Exceeding it is a
+    /// typed [`JsonErrorKind::TooDeep`] error, never a stack overflow —
+    /// the parser carries an explicit stack.
+    pub max_depth: usize,
+    /// Maximum byte length of one number token.
+    pub max_number_len: usize,
+    /// Duplicate-key policy for objects.
+    pub duplicate_keys: DuplicateKeys,
+}
 
+impl Default for JsonLimits {
+    fn default() -> Self {
+        JsonLimits { max_depth: 128, max_number_len: 512, duplicate_keys: DuplicateKeys::LastWins }
+    }
+}
+
+/// Callback interface of the event layer: [`parse_events`] calls one
+/// method per token, in document order. Every method may abort the parse
+/// by returning an error (conventionally [`JsonErrorKind::Visitor`]).
+/// String/key slices borrow from the input (or a scratch buffer) and are
+/// only valid for the duration of the call — copy what you keep.
+///
+/// All methods default to "accept and ignore", so a visitor implements
+/// only what it cares about.
+pub trait JsonVisitor {
+    /// `{` — an object opens.
+    fn begin_object(&mut self, pos: usize) -> Result<(), JsonError> {
+        let _ = pos;
+        Ok(())
+    }
+    /// An object member key (the value's events follow).
+    fn key(&mut self, key: &str, pos: usize) -> Result<(), JsonError> {
+        let _ = (key, pos);
+        Ok(())
+    }
+    /// `}` — the innermost object closes.
+    fn end_object(&mut self, pos: usize) -> Result<(), JsonError> {
+        let _ = pos;
+        Ok(())
+    }
+    /// `[` — an array opens.
+    fn begin_array(&mut self, pos: usize) -> Result<(), JsonError> {
+        let _ = pos;
+        Ok(())
+    }
+    /// `]` — the innermost array closes.
+    fn end_array(&mut self, pos: usize) -> Result<(), JsonError> {
+        let _ = pos;
+        Ok(())
+    }
+    /// `null`.
+    fn null(&mut self, pos: usize) -> Result<(), JsonError> {
+        let _ = pos;
+        Ok(())
+    }
+    /// `true` / `false`.
+    fn boolean(&mut self, b: bool, pos: usize) -> Result<(), JsonError> {
+        let _ = (b, pos);
+        Ok(())
+    }
+    /// A number (range-checked: always finite).
+    fn number(&mut self, n: f64, pos: usize) -> Result<(), JsonError> {
+        let _ = (n, pos);
+        Ok(())
+    }
+    /// A string value.
+    fn string(&mut self, s: &str, pos: usize) -> Result<(), JsonError> {
+        let _ = (s, pos);
+        Ok(())
+    }
+}
+
+/// One container on the explicit parse stack.
+enum Frame {
+    /// An object; under [`DuplicateKeys::Reject`] it remembers the keys
+    /// seen so far (allocation is confined to that policy).
+    Obj { seen: Vec<String> },
+    /// An array.
+    Arr,
+}
+
+/// What the main loop does next.
+enum Step {
+    /// Parse one value (possibly descending into a container).
+    Value,
+    /// A value just finished; consume `,`/`]`/`}` per the innermost frame.
+    AfterValue,
+}
+
+/// Parse `text` as one complete JSON document, streaming events into
+/// `visitor`. Returns only after a full value plus optional trailing
+/// whitespace was consumed; anything else is a typed [`JsonError`].
+pub fn parse_events(
+    text: &str,
+    limits: &JsonLimits,
+    visitor: &mut dyn JsonVisitor,
+) -> Result<(), JsonError> {
+    let mut lex = Lexer { bytes: text.as_bytes(), pos: 0, scratch: String::new() };
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut step = Step::Value;
+    loop {
+        match step {
+            Step::Value => {
+                lex.skip_ws();
+                let pos = lex.pos;
+                match lex.peek() {
+                    None => {
+                        return Err(JsonError::at(
+                            JsonErrorKind::Truncated,
+                            pos,
+                            "expected a value, found end of input",
+                        ))
+                    }
+                    Some(b'{') => {
+                        if stack.len() >= limits.max_depth {
+                            return Err(JsonError::at(
+                                JsonErrorKind::TooDeep,
+                                pos,
+                                format!("nesting deeper than {}", limits.max_depth),
+                            ));
+                        }
+                        lex.pos += 1;
+                        visitor.begin_object(pos)?;
+                        stack.push(Frame::Obj { seen: Vec::new() });
+                        lex.skip_ws();
+                        if lex.peek() == Some(b'}') {
+                            let end = lex.pos;
+                            lex.pos += 1;
+                            visitor.end_object(end)?;
+                            stack.pop();
+                            step = Step::AfterValue;
+                        } else {
+                            object_key(&mut lex, limits, visitor, &mut stack)?;
+                            // stay in Step::Value for the member's value
+                        }
+                    }
+                    Some(b'[') => {
+                        if stack.len() >= limits.max_depth {
+                            return Err(JsonError::at(
+                                JsonErrorKind::TooDeep,
+                                pos,
+                                format!("nesting deeper than {}", limits.max_depth),
+                            ));
+                        }
+                        lex.pos += 1;
+                        visitor.begin_array(pos)?;
+                        stack.push(Frame::Arr);
+                        lex.skip_ws();
+                        if lex.peek() == Some(b']') {
+                            let end = lex.pos;
+                            lex.pos += 1;
+                            visitor.end_array(end)?;
+                            stack.pop();
+                            step = Step::AfterValue;
+                        }
+                        // else: stay in Step::Value for the first element
+                    }
+                    Some(b'"') => {
+                        let s = lex.string()?;
+                        visitor.string(s, pos)?;
+                        step = Step::AfterValue;
+                    }
+                    Some(b't') => {
+                        lex.lit("true")?;
+                        visitor.boolean(true, pos)?;
+                        step = Step::AfterValue;
+                    }
+                    Some(b'f') => {
+                        lex.lit("false")?;
+                        visitor.boolean(false, pos)?;
+                        step = Step::AfterValue;
+                    }
+                    Some(b'n') => {
+                        lex.lit("null")?;
+                        visitor.null(pos)?;
+                        step = Step::AfterValue;
+                    }
+                    Some(c) if c == b'-' || c.is_ascii_digit() => {
+                        let n = lex.number(limits)?;
+                        visitor.number(n, pos)?;
+                        step = Step::AfterValue;
+                    }
+                    Some(_) => {
+                        return Err(JsonError::at(
+                            JsonErrorKind::Syntax,
+                            pos,
+                            "unexpected character",
+                        ))
+                    }
+                }
+            }
+            Step::AfterValue => {
+                match stack.last() {
+                    None => {
+                        lex.skip_ws();
+                        if lex.pos != lex.bytes.len() {
+                            return Err(JsonError::at(
+                                JsonErrorKind::TrailingData,
+                                lex.pos,
+                                "trailing characters after the document",
+                            ));
+                        }
+                        return Ok(());
+                    }
+                    Some(Frame::Obj { .. }) => {
+                        lex.skip_ws();
+                        let pos = lex.pos;
+                        match lex.peek() {
+                            Some(b',') => {
+                                lex.pos += 1;
+                                object_key(&mut lex, limits, visitor, &mut stack)?;
+                                step = Step::Value;
+                            }
+                            Some(b'}') => {
+                                lex.pos += 1;
+                                visitor.end_object(pos)?;
+                                stack.pop();
+                                // step stays AfterValue for the parent
+                            }
+                            None => {
+                                return Err(JsonError::at(
+                                    JsonErrorKind::Truncated,
+                                    pos,
+                                    "unterminated object",
+                                ))
+                            }
+                            Some(_) => {
+                                return Err(JsonError::at(
+                                    JsonErrorKind::Syntax,
+                                    pos,
+                                    "expected ',' or '}'",
+                                ))
+                            }
+                        }
+                    }
+                    Some(Frame::Arr) => {
+                        lex.skip_ws();
+                        let pos = lex.pos;
+                        match lex.peek() {
+                            Some(b',') => {
+                                lex.pos += 1;
+                                step = Step::Value;
+                            }
+                            Some(b']') => {
+                                lex.pos += 1;
+                                visitor.end_array(pos)?;
+                                stack.pop();
+                                // step stays AfterValue for the parent
+                            }
+                            None => {
+                                return Err(JsonError::at(
+                                    JsonErrorKind::Truncated,
+                                    pos,
+                                    "unterminated array",
+                                ))
+                            }
+                            Some(_) => {
+                                return Err(JsonError::at(
+                                    JsonErrorKind::Syntax,
+                                    pos,
+                                    "expected ',' or ']'",
+                                ))
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Parse one object member key (cursor on whitespace before the `"`),
+/// enforce the duplicate-key policy, emit the key event and consume the
+/// `:` separator. The caller supplies the next value via [`Step::Value`].
+fn object_key(
+    lex: &mut Lexer<'_>,
+    limits: &JsonLimits,
+    visitor: &mut dyn JsonVisitor,
+    stack: &mut [Frame],
+) -> Result<(), JsonError> {
+    lex.skip_ws();
+    let pos = lex.pos;
+    if lex.peek() != Some(b'"') {
+        let kind = if lex.peek().is_none() {
+            JsonErrorKind::Truncated
+        } else {
+            JsonErrorKind::Syntax
+        };
+        return Err(JsonError::at(kind, pos, "expected a string key"));
+    }
+    // StrLoc is Copy, so the decoded key can be re-borrowed cheaply for
+    // the duplicate check, the bookkeeping copy, and the key event.
+    let loc = lex.string_loc()?;
+    if limits.duplicate_keys == DuplicateKeys::Reject {
+        if let Some(Frame::Obj { seen }) = stack.last_mut() {
+            let key = lex.last_string(loc);
+            if seen.iter().any(|k| k == key) {
+                return Err(JsonError::at(
+                    JsonErrorKind::DuplicateKey,
+                    pos,
+                    format!("duplicate key {key:?}"),
+                ));
+            }
+            let owned = key.to_string();
+            seen.push(owned);
+        }
+    }
+    visitor.key(lex.last_string(loc), pos)?;
+    lex.skip_ws();
+    if lex.peek() != Some(b':') {
+        let kind = if lex.peek().is_none() {
+            JsonErrorKind::Truncated
+        } else {
+            JsonErrorKind::Syntax
+        };
+        return Err(JsonError::at(kind, lex.pos, "expected ':' after object key"));
+    }
+    lex.pos += 1;
+    Ok(())
+}
+
+struct Lexer<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Reused decode buffer for strings containing escapes; escape-free
+    /// strings are handed out as input slices and never touch it.
+    scratch: String,
+}
+
+/// Where the last decoded string lives.
+#[derive(Clone, Copy)]
+enum StrLoc {
+    /// Borrowed from the input: byte range `start..end`.
+    Input(usize, usize),
+    /// Decoded into the scratch buffer.
+    Scratch,
+}
+
+impl Lexer<'_> {
     fn peek(&self) -> Option<u8> {
         self.bytes.get(self.pos).copied()
     }
@@ -128,40 +558,51 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
-        if self.peek() == Some(b) {
-            self.pos += 1;
-            Ok(())
-        } else {
-            Err(self.err(&format!("expected '{}'", b as char)))
-        }
-    }
-
-    fn value(&mut self) -> Result<Json, JsonError> {
-        self.skip_ws();
-        match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
-            Some(b'"') => Ok(Json::Str(self.string()?)),
-            Some(b't') => self.lit("true", Json::Bool(true)),
-            Some(b'f') => self.lit("false", Json::Bool(false)),
-            Some(b'n') => self.lit("null", Json::Null),
-            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            _ => Err(self.err("unexpected character")),
-        }
-    }
-
-    fn lit(&mut self, s: &str, v: Json) -> Result<Json, JsonError> {
+    fn lit(&mut self, s: &str) -> Result<(), JsonError> {
         if self.bytes[self.pos..].starts_with(s.as_bytes()) {
             self.pos += s.len();
-            Ok(v)
+            Ok(())
+        } else if self.bytes.len() - self.pos < s.len()
+            && s.as_bytes().starts_with(&self.bytes[self.pos..])
+        {
+            Err(JsonError::at(JsonErrorKind::Truncated, self.pos, "truncated literal"))
         } else {
-            Err(self.err("bad literal"))
+            Err(JsonError::at(JsonErrorKind::Syntax, self.pos, "bad literal"))
         }
     }
 
-    /// If the next bytes are a `\uXXXX` escape in the low-surrogate range
-    /// (DC00–DFFF), return its value *without* consuming anything.
+    fn number(&mut self, limits: &JsonLimits) -> Result<f64, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        if self.pos - start > limits.max_number_len {
+            return Err(JsonError::at(
+                JsonErrorKind::OversizedNumber,
+                start,
+                format!("number token longer than {} bytes", limits.max_number_len),
+            ));
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let n: f64 = text
+            .parse()
+            .map_err(|_| JsonError::at(JsonErrorKind::BadNumber, start, "bad number"))?;
+        if !n.is_finite() {
+            return Err(JsonError::at(
+                JsonErrorKind::OversizedNumber,
+                start,
+                "number overflows f64",
+            ));
+        }
+        Ok(n)
+    }
+
+    /// If the bytes at `pos` are a `\uXXXX` escape in the low-surrogate
+    /// range (DC00–DFFF), return its value *without* consuming anything.
     fn peek_low_surrogate(&self) -> Option<u32> {
         let b = self.bytes.get(self.pos..self.pos + 6)?;
         if b[0] != b'\\' || b[1] != b'u' {
@@ -175,51 +616,93 @@ impl<'a> Parser<'a> {
     /// Four hex digits of a `\uXXXX` escape (cursor past the `u`).
     fn hex4(&mut self) -> Result<u32, JsonError> {
         if self.pos + 4 > self.bytes.len() {
-            return Err(self.err("bad \\u"));
+            return Err(JsonError::at(
+                JsonErrorKind::TruncatedEscape,
+                self.pos,
+                "input ends inside \\u escape",
+            ));
         }
         let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
-            .map_err(|_| self.err("bad \\u"))?;
-        let cp = u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u"))?;
+            .map_err(|_| JsonError::at(JsonErrorKind::BadEscape, self.pos, "bad \\u digits"))?;
+        let cp = u32::from_str_radix(hex, 16)
+            .map_err(|_| JsonError::at(JsonErrorKind::BadEscape, self.pos, "bad \\u digits"))?;
         self.pos += 4;
         Ok(cp)
     }
 
-    fn number(&mut self) -> Result<Json, JsonError> {
-        let start = self.pos;
-        if self.peek() == Some(b'-') {
-            self.pos += 1;
+    /// Decode one string token (cursor on the opening `"`). Returns where
+    /// the decoded text lives; [`Lexer::last_string`] materializes it.
+    fn string_loc(&mut self) -> Result<StrLoc, JsonError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let content_start = self.pos;
+        // Fast path: scan for the closing quote; bail to the slow path at
+        // the first escape.
+        let mut i = self.pos;
+        while let Some(&b) = self.bytes.get(i) {
+            match b {
+                b'"' => {
+                    std::str::from_utf8(&self.bytes[content_start..i]).map_err(|_| {
+                        JsonError::at(
+                            JsonErrorKind::InvalidUtf8,
+                            content_start,
+                            "string is not valid UTF-8",
+                        )
+                    })?;
+                    self.pos = i + 1;
+                    return Ok(StrLoc::Input(content_start, i));
+                }
+                b'\\' => break,
+                _ => i += 1,
+            }
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
-            self.pos += 1;
+        if self.bytes.get(i).is_none() {
+            return Err(JsonError::at(
+                JsonErrorKind::Truncated,
+                content_start - 1,
+                "unterminated string",
+            ));
         }
-        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
-        text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
-    }
-
-    fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
-        let mut out = String::new();
+        // Slow path: copy the escape-free prefix, then decode escapes into
+        // the reusable scratch buffer.
+        self.scratch.clear();
+        let prefix = std::str::from_utf8(&self.bytes[content_start..i]).map_err(|_| {
+            JsonError::at(JsonErrorKind::InvalidUtf8, content_start, "string is not valid UTF-8")
+        })?;
+        self.scratch.push_str(prefix);
+        self.pos = i;
         loop {
             match self.peek() {
-                None => return Err(self.err("unterminated string")),
+                None => {
+                    return Err(JsonError::at(
+                        JsonErrorKind::Truncated,
+                        self.pos,
+                        "unterminated string",
+                    ))
+                }
                 Some(b'"') => {
                     self.pos += 1;
-                    return Ok(out);
+                    return Ok(StrLoc::Scratch);
                 }
                 Some(b'\\') => {
                     self.pos += 1;
-                    let esc = self.peek().ok_or_else(|| self.err("bad escape"))?;
+                    let Some(esc) = self.peek() else {
+                        return Err(JsonError::at(
+                            JsonErrorKind::TruncatedEscape,
+                            self.pos,
+                            "input ends inside escape",
+                        ));
+                    };
                     self.pos += 1;
                     match esc {
-                        b'"' => out.push('"'),
-                        b'\\' => out.push('\\'),
-                        b'/' => out.push('/'),
-                        b'b' => out.push('\u{8}'),
-                        b'f' => out.push('\u{c}'),
-                        b'n' => out.push('\n'),
-                        b'r' => out.push('\r'),
-                        b't' => out.push('\t'),
+                        b'"' => self.scratch.push('"'),
+                        b'\\' => self.scratch.push('\\'),
+                        b'/' => self.scratch.push('/'),
+                        b'b' => self.scratch.push('\u{8}'),
+                        b'f' => self.scratch.push('\u{c}'),
+                        b'n' => self.scratch.push('\n'),
+                        b'r' => self.scratch.push('\r'),
+                        b't' => self.scratch.push('\t'),
                         b'u' => {
                             let cp = self.hex4()?;
                             let ch = if (0xD800..0xDC00).contains(&cp) {
@@ -242,74 +725,126 @@ impl<'a> Parser<'a> {
                             } else {
                                 char::from_u32(cp).unwrap_or('\u{fffd}')
                             };
-                            out.push(ch);
+                            self.scratch.push(ch);
                         }
-                        _ => return Err(self.err("unknown escape")),
+                        _ => {
+                            return Err(JsonError::at(
+                                JsonErrorKind::BadEscape,
+                                self.pos - 1,
+                                "unknown escape",
+                            ))
+                        }
                     }
                 }
                 Some(_) => {
                     // consume one UTF-8 scalar
-                    let s = std::str::from_utf8(&self.bytes[self.pos..])
-                        .map_err(|_| self.err("invalid utf8"))?;
+                    let s = std::str::from_utf8(&self.bytes[self.pos..]).map_err(|_| {
+                        JsonError::at(
+                            JsonErrorKind::InvalidUtf8,
+                            self.pos,
+                            "string is not valid UTF-8",
+                        )
+                    })?;
                     let ch = s.chars().next().unwrap();
-                    out.push(ch);
+                    self.scratch.push(ch);
                     self.pos += ch.len_utf8();
                 }
             }
         }
     }
 
-    fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
-        let mut v = Vec::new();
-        self.skip_ws();
-        if self.peek() == Some(b']') {
-            self.pos += 1;
-            return Ok(Json::Arr(v));
+    /// Decode one string token and hand out the text.
+    fn string(&mut self) -> Result<&str, JsonError> {
+        let loc = self.string_loc()?;
+        Ok(self.last_string(loc))
+    }
+
+    /// Materialize a [`StrLoc`] as text.
+    fn last_string(&self, loc: StrLoc) -> &str {
+        match loc {
+            // validated in string_loc
+            StrLoc::Input(s, e) => std::str::from_utf8(&self.bytes[s..e]).unwrap(),
+            StrLoc::Scratch => &self.scratch,
         }
-        loop {
-            v.push(self.value()?);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.pos += 1;
-                }
-                Some(b']') => {
-                    self.pos += 1;
-                    return Ok(Json::Arr(v));
-                }
-                _ => return Err(self.err("expected ',' or ']'")),
+    }
+}
+
+struct TreeFrameObj {
+    map: BTreeMap<String, Json>,
+    pending_key: Option<String>,
+}
+
+enum TreeFrame {
+    Obj(TreeFrameObj),
+    Arr(Vec<Json>),
+}
+
+/// The tree frontend: folds the event stream into a [`Json`] value with an
+/// explicit stack (depth is bounded by [`JsonLimits::max_depth`] upstream).
+#[derive(Default)]
+struct TreeBuilder {
+    stack: Vec<TreeFrame>,
+    out: Option<Json>,
+}
+
+impl TreeBuilder {
+    fn place(&mut self, v: Json) {
+        match self.stack.last_mut() {
+            None => self.out = Some(v),
+            Some(TreeFrame::Arr(items)) => items.push(v),
+            Some(TreeFrame::Obj(o)) => {
+                // parse_events guarantees a key event precedes every member
+                // value, so pending_key is always set here.
+                let key = o.pending_key.take().unwrap_or_default();
+                o.map.insert(key, v);
             }
         }
     }
+}
 
-    fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
-        let mut m = BTreeMap::new();
-        self.skip_ws();
-        if self.peek() == Some(b'}') {
-            self.pos += 1;
-            return Ok(Json::Obj(m));
+impl JsonVisitor for TreeBuilder {
+    fn begin_object(&mut self, _pos: usize) -> Result<(), JsonError> {
+        self.stack
+            .push(TreeFrame::Obj(TreeFrameObj { map: BTreeMap::new(), pending_key: None }));
+        Ok(())
+    }
+    fn key(&mut self, key: &str, _pos: usize) -> Result<(), JsonError> {
+        if let Some(TreeFrame::Obj(o)) = self.stack.last_mut() {
+            o.pending_key = Some(key.to_string());
         }
-        loop {
-            self.skip_ws();
-            let key = self.string()?;
-            self.skip_ws();
-            self.expect(b':')?;
-            let val = self.value()?;
-            m.insert(key, val);
-            self.skip_ws();
-            match self.peek() {
-                Some(b',') => {
-                    self.pos += 1;
-                }
-                Some(b'}') => {
-                    self.pos += 1;
-                    return Ok(Json::Obj(m));
-                }
-                _ => return Err(self.err("expected ',' or '}'")),
-            }
+        Ok(())
+    }
+    fn end_object(&mut self, _pos: usize) -> Result<(), JsonError> {
+        if let Some(TreeFrame::Obj(o)) = self.stack.pop() {
+            self.place(Json::Obj(o.map));
         }
+        Ok(())
+    }
+    fn begin_array(&mut self, _pos: usize) -> Result<(), JsonError> {
+        self.stack.push(TreeFrame::Arr(Vec::new()));
+        Ok(())
+    }
+    fn end_array(&mut self, _pos: usize) -> Result<(), JsonError> {
+        if let Some(TreeFrame::Arr(items)) = self.stack.pop() {
+            self.place(Json::Arr(items));
+        }
+        Ok(())
+    }
+    fn null(&mut self, _pos: usize) -> Result<(), JsonError> {
+        self.place(Json::Null);
+        Ok(())
+    }
+    fn boolean(&mut self, b: bool, _pos: usize) -> Result<(), JsonError> {
+        self.place(Json::Bool(b));
+        Ok(())
+    }
+    fn number(&mut self, n: f64, _pos: usize) -> Result<(), JsonError> {
+        self.place(Json::Num(n));
+        Ok(())
+    }
+    fn string(&mut self, s: &str, _pos: usize) -> Result<(), JsonError> {
+        self.place(Json::Str(s.to_string()));
+        Ok(())
     }
 }
 
@@ -318,13 +853,7 @@ impl fmt::Display for Json {
         match self {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
-                    write!(f, "{}", *n as i64)
-                } else {
-                    write!(f, "{n}")
-                }
-            }
+            Json::Num(n) => write!(f, "{}", fmt_f64(*n)),
             Json::Str(s) => {
                 write!(f, "\"")?;
                 for c in s.chars() {
@@ -361,6 +890,18 @@ impl fmt::Display for Json {
                 write!(f, "}}")
             }
         }
+    }
+}
+
+/// Canonical JSON number formatting, shared by the tree writer and the
+/// wire protocol's streaming response encoder (`server/proto.rs`) — the
+/// wire soak asserts byte-identical release output across both paths, so
+/// there must be exactly one formatter.
+pub fn fmt_f64(n: f64) -> String {
+    if n.fract() == 0.0 && n.abs() < 1e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
     }
 }
 
@@ -469,5 +1010,177 @@ mod tests {
         // a raw astral char round-trips through the writer
         let j = Json::Str("\u{1F980}".to_string());
         assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+    }
+
+    // ---- hardening regressions (wire-input threat model) ----
+
+    fn kind_of(text: &str) -> JsonErrorKind {
+        Json::parse(text).unwrap_err().kind
+    }
+
+    /// Nesting past the depth limit is a typed error from both frontends,
+    /// never a stack overflow: the parser is iterative.
+    #[test]
+    fn adversarial_depth_is_a_typed_error() {
+        let deep: String = "[".repeat(100_000);
+        assert_eq!(kind_of(&deep), JsonErrorKind::TooDeep);
+        let deep_obj: String = "{\"k\":".repeat(100_000);
+        assert_eq!(kind_of(&deep_obj), JsonErrorKind::TooDeep);
+
+        // a no-op visitor over the event layer hits the same guard
+        struct Ignore;
+        impl JsonVisitor for Ignore {}
+        let err = parse_events(&deep, &JsonLimits::default(), &mut Ignore).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::TooDeep);
+
+        // depth at the limit still parses
+        let limits = JsonLimits { max_depth: 3, ..JsonLimits::default() };
+        assert!(Json::parse_with_limits("[[[1]]]", &limits).is_ok());
+        assert_eq!(
+            Json::parse_with_limits("[[[[1]]]]", &limits).unwrap_err().kind,
+            JsonErrorKind::TooDeep
+        );
+    }
+
+    /// Numbers that overflow f64 (or absurdly long tokens) are rejected —
+    /// a naive parser admits `1e999` as inf, which no JSON writer can
+    /// round-trip.
+    #[test]
+    fn oversized_numbers_are_typed_errors() {
+        assert_eq!(kind_of("1e999"), JsonErrorKind::OversizedNumber);
+        assert_eq!(kind_of("-1e999"), JsonErrorKind::OversizedNumber);
+        let long = "9".repeat(2_000);
+        assert_eq!(kind_of(&long), JsonErrorKind::OversizedNumber);
+        // the largest finite magnitudes still parse
+        assert_eq!(Json::parse("1e308").unwrap().as_f64(), Some(1e308));
+        assert_eq!(Json::parse("-1.5e-300").unwrap().as_f64(), Some(-1.5e-300));
+        // malformed tokens are BadNumber, not a panic
+        assert_eq!(kind_of("-"), JsonErrorKind::BadNumber);
+        assert_eq!(kind_of("1.2.3"), JsonErrorKind::BadNumber);
+    }
+
+    /// Truncation anywhere — mid-value, mid-string, mid-escape — is a
+    /// typed truncation error.
+    #[test]
+    fn truncated_input_is_a_typed_error() {
+        assert_eq!(kind_of(""), JsonErrorKind::Truncated);
+        assert_eq!(kind_of("{\"a\":"), JsonErrorKind::Truncated);
+        assert_eq!(kind_of("[1,2"), JsonErrorKind::Truncated);
+        assert_eq!(kind_of("\"abc"), JsonErrorKind::Truncated);
+        assert_eq!(kind_of("tru"), JsonErrorKind::Truncated);
+        // escapes cut off by end-of-input
+        assert_eq!(kind_of("\"\\"), JsonErrorKind::TruncatedEscape);
+        assert_eq!(kind_of("\"\\u12"), JsonErrorKind::TruncatedEscape);
+        // bad (but complete) escapes are a different class
+        assert_eq!(kind_of("\"\\q\""), JsonErrorKind::BadEscape);
+        assert_eq!(kind_of("\"\\uzzzz\""), JsonErrorKind::BadEscape);
+    }
+
+    /// The duplicate-key policy: lenient frontends keep last-wins (the
+    /// historic behavior); the wire profile rejects with a typed error.
+    #[test]
+    fn duplicate_key_policy() {
+        let text = r#"{"seed":1,"seed":2}"#;
+        // default: last wins
+        assert_eq!(Json::parse(text).unwrap().get("seed").unwrap().as_f64(), Some(2.0));
+        // strict: typed rejection
+        let strict =
+            JsonLimits { duplicate_keys: DuplicateKeys::Reject, ..JsonLimits::default() };
+        let err = Json::parse_with_limits(text, &strict).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::DuplicateKey);
+        assert!(err.msg.contains("seed"), "{}", err.msg);
+        // distinct keys are unaffected, including across nesting levels
+        let ok = r#"{"a":{"a":1},"b":2}"#;
+        assert!(Json::parse_with_limits(ok, &strict).is_ok());
+    }
+
+    #[test]
+    fn trailing_data_is_a_typed_error() {
+        assert_eq!(kind_of("1 2"), JsonErrorKind::TrailingData);
+        assert_eq!(kind_of("{} x"), JsonErrorKind::TrailingData);
+    }
+
+    /// The event layer delivers tokens in document order, hands out
+    /// escape-free strings without copying, and lets a visitor abort.
+    #[test]
+    fn event_layer_streams_in_order() {
+        #[derive(Default)]
+        struct Tape(Vec<String>);
+        impl JsonVisitor for Tape {
+            fn begin_object(&mut self, _p: usize) -> Result<(), JsonError> {
+                self.0.push("{".into());
+                Ok(())
+            }
+            fn key(&mut self, k: &str, _p: usize) -> Result<(), JsonError> {
+                self.0.push(format!("k:{k}"));
+                Ok(())
+            }
+            fn end_object(&mut self, _p: usize) -> Result<(), JsonError> {
+                self.0.push("}".into());
+                Ok(())
+            }
+            fn begin_array(&mut self, _p: usize) -> Result<(), JsonError> {
+                self.0.push("[".into());
+                Ok(())
+            }
+            fn end_array(&mut self, _p: usize) -> Result<(), JsonError> {
+                self.0.push("]".into());
+                Ok(())
+            }
+            fn null(&mut self, _p: usize) -> Result<(), JsonError> {
+                self.0.push("null".into());
+                Ok(())
+            }
+            fn boolean(&mut self, b: bool, _p: usize) -> Result<(), JsonError> {
+                self.0.push(format!("b:{b}"));
+                Ok(())
+            }
+            fn number(&mut self, n: f64, _p: usize) -> Result<(), JsonError> {
+                self.0.push(format!("n:{n}"));
+                Ok(())
+            }
+            fn string(&mut self, s: &str, _p: usize) -> Result<(), JsonError> {
+                self.0.push(format!("s:{s}"));
+                Ok(())
+            }
+        }
+        let mut tape = Tape::default();
+        parse_events(
+            r#"{"kind":"release","dims":[1,2],"ok":true,"x":null,"esc":"a\nb"}"#,
+            &JsonLimits::default(),
+            &mut tape,
+        )
+        .unwrap();
+        assert_eq!(
+            tape.0,
+            vec![
+                "{", "k:kind", "s:release", "k:dims", "[", "n:1", "n:2", "]", "k:ok",
+                "b:true", "k:x", "null", "k:esc", "s:a\nb", "}"
+            ]
+            .into_iter()
+            .map(String::from)
+            .collect::<Vec<_>>()
+        );
+
+        // a visitor error aborts with position and Visitor kind
+        struct Abort;
+        impl JsonVisitor for Abort {
+            fn number(&mut self, _n: f64, pos: usize) -> Result<(), JsonError> {
+                Err(JsonError::at(JsonErrorKind::Visitor, pos, "no numbers allowed"))
+            }
+        }
+        let err = parse_events("[1]", &JsonLimits::default(), &mut Abort).unwrap_err();
+        assert_eq!((err.kind, err.pos), (JsonErrorKind::Visitor, 1));
+    }
+
+    /// The canonical number formatter is shared with the wire encoder;
+    /// pin its behavior.
+    #[test]
+    fn canonical_number_formatting() {
+        assert_eq!(fmt_f64(0.0), "0");
+        assert_eq!(fmt_f64(-3.0), "-3");
+        assert_eq!(fmt_f64(1.5), "1.5");
+        assert_eq!(fmt_f64(1e15), "1000000000000000");
+        assert_eq!(fmt_f64(0.1f32 as f64), "0.10000000149011612");
     }
 }

@@ -1,0 +1,251 @@
+//! Wire front-end integration tests (DESIGN.md §11): the privacy and
+//! backpressure contracts of the HTTP face, end to end over real sockets.
+//!
+//! The load-bearing assertions:
+//!   * a malformed/forbidden body is answered 4xx *before* anything
+//!     touches the ε ledger — a flood of garbage spends zero budget
+//!   * an unknown bearer token never reaches submission (401)
+//!   * queue overflow under [`QueuePolicy::Reject`] surfaces as 429 with
+//!     a numeric `Retry-After` that, honored, eventually yields a 200
+//!   * the chunked wire body is **byte-identical** to the in-process
+//!     encoding (`outcome_body_string` over a cold `execute`) for the
+//!     same spec and seed, including under concurrent mixed-tenant load —
+//!     the contract `repro job` and the CI soak compare against
+
+use fast_mwem::coordinator::execute;
+use fast_mwem::server::{
+    outcome_body_string, parse_job_spec, QueuePolicy, Server, ServerConfig, WireClient,
+    WireConfig, WireServer,
+};
+use std::time::Duration;
+
+fn start_wire(server_cfg: ServerConfig) -> WireServer {
+    let server = Server::start(server_cfg);
+    WireServer::start(server, &WireConfig::default()).expect("bind loopback")
+}
+
+/// Every structurally invalid or forbidden body is refused with a 400 at
+/// the parse layer, and none of them spends ε: afterwards the tenant's
+/// full cap is still available for one exactly-cap-sized job, and the
+/// drained ledger shows only that job's spend.
+#[test]
+fn malformed_bodies_answer_400_and_spend_nothing() {
+    let wire = start_wire(ServerConfig {
+        workers: 1,
+        queue_depth: 8,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: Some(1.0),
+        cache_capacity: 2,
+        store_dir: None,
+    });
+    let addr = wire.local_addr().to_string();
+    let mut c = WireClient::connect(&addr).expect("connect");
+
+    let garbage = [
+        r#"{"kind":"release","eps":0.4"#,                  // truncated
+        r#"{"kind":"release","eps":0.4,,}"#,               // syntax
+        r#"{"kind":"release","eps":0.4,"eps":0.2}"#,       // duplicate key
+        r#"{"kind":"release","nested":{"eps":0.4}}"#,      // nested container
+        r#"{"kind":"release","tenant":3,"eps":0.4}"#,      // tenant in body
+        r#"{"kind":"release","bogus":1,"eps":0.4}"#,       // unknown field
+        r#"{"kind":"lp","u":64,"eps":0.4}"#,               // field of wrong kind
+        r#"{"kind":"release","eps":1e99999}"#,             // oversized number
+        r#"{"kind":"teapot","eps":0.4}"#,                  // unknown kind
+        "[1,2,3]",                                         // not an object
+    ];
+    for body in garbage {
+        let r = c.post_job("tenant-0", body).expect("post garbage");
+        assert_eq!(r.status, 400, "body {body:?} must be refused, got {}", r.body_str());
+    }
+
+    // The full cap is still there: an exactly-cap-sized job admits...
+    let ok = c
+        .post_job("tenant-0", r#"{"kind":"lp","m":50,"d":6,"t":10,"eps":1.0,"mode":"exhaustive"}"#)
+        .expect("valid job");
+    assert_eq!(ok.status, 200, "cap must be untouched by the garbage: {}", ok.body_str());
+    // ...and the very next ε > 0 ask is over cap.
+    let over = c
+        .post_job("tenant-0", r#"{"kind":"lp","m":50,"d":6,"t":10,"eps":0.1,"mode":"exhaustive"}"#)
+        .expect("over-cap job");
+    assert_eq!(over.status, 403, "cap must now be exhausted: {}", over.body_str());
+
+    wire.shutdown();
+    let m = wire.drain();
+    assert_eq!(m.counter("parse_errors"), garbage.len() as u64);
+    assert_eq!(m.counter("http_400"), garbage.len() as u64);
+    assert_eq!(m.counter("http_403"), 1);
+    assert_eq!(
+        m.gauge("tenant_0_eps_spent"),
+        Some(1.0),
+        "only the one valid job may appear in the ledger"
+    );
+}
+
+/// Authentication precedes everything: without a known bearer token the
+/// request never reaches parsing or submission.
+#[test]
+fn unknown_tokens_are_rejected_with_401() {
+    let wire = start_wire(ServerConfig {
+        workers: 1,
+        queue_depth: 4,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: Some(1.0),
+        cache_capacity: 0,
+        store_dir: None,
+    });
+    let addr = wire.local_addr().to_string();
+    let mut c = WireClient::connect(&addr).expect("connect");
+
+    let valid_body = r#"{"kind":"lp","m":50,"d":6,"t":10,"eps":0.5,"mode":"exhaustive"}"#;
+    let r = c.post_job("tenant-99", valid_body).expect("bad token");
+    assert_eq!(r.status, 401);
+    let r = c.request("POST", "/v1/jobs", None, Some(valid_body)).expect("no token");
+    assert_eq!(r.status, 401);
+    // /healthz is the one unauthenticated endpoint
+    let r = c.get("/healthz", None).expect("healthz");
+    assert_eq!(r.status, 200);
+
+    wire.shutdown();
+    let m = wire.drain();
+    assert_eq!(m.counter("http_401"), 2);
+    assert_eq!(m.counter("parse_errors"), 0, "401 precedes parsing");
+    assert_eq!(m.gauge("tenant_99_eps_spent"), None, "no ledger entry for an intruder");
+}
+
+/// Queue overflow under the Reject policy: with the single worker pinned
+/// by a slow job and the depth-1 queue full, further jobs answer 429 with
+/// a numeric `Retry-After`; honoring it eventually yields a 200.
+#[test]
+fn reject_queue_answers_429_and_retry_after_is_honored() {
+    let wire = start_wire(ServerConfig {
+        workers: 1,
+        queue_depth: 1,
+        policy: QueuePolicy::Reject,
+        eps_per_tenant: None,
+        cache_capacity: 2,
+        store_dir: None,
+    });
+    let addr = wire.local_addr().to_string();
+
+    // Pin the worker from a separate connection (the POST blocks until
+    // the job completes, so it needs its own socket).
+    let slow = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = WireClient::connect(&addr).expect("connect slow");
+            let body = r#"{"kind":"release","u":256,"m":2000,"n":500,"t":300,"workload":77}"#;
+            let r = c.post_job("tenant-0", body).expect("slow job");
+            assert_eq!(r.status, 200, "the pinned job must still complete");
+        })
+    };
+
+    let cheap = r#"{"kind":"lp","m":50,"d":6,"t":10,"mode":"exhaustive"}"#;
+    let mut c = WireClient::connect(&addr).expect("connect");
+    // Fill the depth-1 queue and flood until a shed surfaces.
+    let mut retry_after = None;
+    for _ in 0..50 {
+        let r = c.post_job("tenant-1", cheap).expect("flood");
+        if r.status == 429 {
+            let secs: u64 = r
+                .header("retry-after")
+                .expect("429 must carry Retry-After")
+                .parse()
+                .expect("Retry-After must be numeric");
+            retry_after = Some(secs);
+            break;
+        }
+        assert_eq!(r.status, 200, "flood jobs either run or shed: {}", r.body_str());
+    }
+    let secs = retry_after.expect("the depth-1 Reject queue must shed under flood");
+
+    // Honor the hint: retry (sleeping Retry-After each time) until accepted.
+    let mut accepted = false;
+    for _ in 0..60 {
+        std::thread::sleep(Duration::from_secs(secs));
+        let r = c.post_job("tenant-1", cheap).expect("retry");
+        if r.status == 200 {
+            accepted = true;
+            break;
+        }
+        assert_eq!(r.status, 429, "retries only ever see shed-or-accept");
+    }
+    assert!(accepted, "honoring Retry-After must eventually get the job in");
+
+    slow.join().expect("slow submitter");
+    wire.shutdown();
+    let m = wire.drain();
+    assert!(m.counter("http_429") >= 1);
+}
+
+/// The byte-identity contract: for a fixed spec the chunked wire body
+/// equals the in-process encoding exactly, under concurrent mixed-tenant
+/// load and for repeated (cold, then warm-cache) executions — and release
+/// bodies actually stream (more than one chunk on the wire).
+#[test]
+fn wire_bodies_are_byte_identical_to_in_process_execution() {
+    let wire = start_wire(ServerConfig {
+        workers: 4,
+        queue_depth: 32,
+        policy: QueuePolicy::Block,
+        eps_per_tenant: None,
+        cache_capacity: 8,
+        store_dir: None,
+    });
+    let addr = wire.local_addr().to_string();
+
+    std::thread::scope(|s| {
+        for tenant in 0..4u64 {
+            let addr = &addr;
+            s.spawn(move || {
+                let bodies = [
+                    format!(
+                        r#"{{"kind":"release","u":64,"m":200,"n":300,"t":60,"eps":0.7,"index":"flat","workload":{},"seed":{}}}"#,
+                        40 + tenant,
+                        tenant * 31 + 7,
+                    ),
+                    format!(
+                        r#"{{"kind":"lp","m":300,"d":8,"t":60,"eps":0.7,"mode":"hnsw","seed":{}}}"#,
+                        tenant * 31 + 8,
+                    ),
+                ];
+                let token = format!("tenant-{tenant}");
+                let mut c = WireClient::connect(addr).expect("connect");
+                for body in &bodies {
+                    // In-process oracle: same parser, cold executor.
+                    let spec = parse_job_spec(body, tenant).expect("oracle parse");
+                    let expected =
+                        outcome_body_string(spec.kind(), &execute(&spec).expect("oracle run"));
+
+                    // Twice over the wire: cold, then warm-cache — the
+                    // bytes must not depend on which path served it.
+                    for round in 0..2 {
+                        let r = c.post_job(&token, body).expect("wire job");
+                        assert_eq!(r.status, 200, "round {round}: {}", r.body_str());
+                        assert_eq!(
+                            r.body_str(),
+                            expected,
+                            "round {round}: wire bytes must equal in-process bytes"
+                        );
+                        assert!(
+                            r.header("transfer-encoding").is_some_and(|v| v == "chunked"),
+                            "outcomes must stream chunked"
+                        );
+                        assert!(
+                            r.chunks > 1,
+                            "a released histogram must arrive in multiple chunks, got {}",
+                            r.chunks
+                        );
+                        assert!(r.header("x-job-id").is_some());
+                    }
+                }
+            });
+        }
+    });
+
+    wire.shutdown();
+    let m = wire.drain();
+    assert_eq!(m.counter("parse_errors"), 0);
+    assert_eq!(m.counter("http_400"), 0);
+    assert_eq!(m.counter("jobs_completed"), 16, "4 tenants x 2 specs x 2 rounds");
+    assert_eq!(m.counter("jobs_failed"), 0);
+}

@@ -1,0 +1,158 @@
+#!/usr/bin/env bash
+# Wire-soak (DESIGN.md §11): boot the serving daemon behind its HTTP front
+# end, drive it with N concurrent keep-alive connections of mixed-tenant
+# traffic, and assert the wire contract end to end:
+#   1. every response is a 200 whose body is BYTE-IDENTICAL to the
+#      in-process oracle (`repro job --body=...` for the same spec),
+#   2. request p99 stays under a bound,
+#   3. `POST /v1/shutdown` drains cleanly (process exits 0, every admitted
+#      job completed, no failures, no connections left open),
+#   4. zero parse errors, and no tenant spends past its ε cap.
+# The same check runs in CI (.github/workflows/ci.yml, wire-soak job),
+# which uploads the metrics JSON as an artifact.
+#
+#   ./scripts/wire_soak.sh [CONNS] [REQS_PER_CONN] [EPS_PER_TENANT] [P99_MS]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CONNS="${1:-16}"
+REQS="${2:-3}"
+EPS_CAP="${3:-6.0}"
+P99_MS="${4:-15000}"
+OUT="${WIRE_METRICS_OUT:-wire_metrics.json}"
+LOG="${WIRE_LOG:-wire_soak.log}"
+ORACLE_DIR="${WIRE_ORACLE_DIR:-wire_oracle}"
+
+cargo build --release
+
+# The fixed spec set: one release + one lp per tenant, seeds pinned. Every
+# wire response is compared byte-for-byte against the in-process oracle
+# for its spec, so the soak checks determinism, not just availability.
+mkdir -p "$ORACLE_DIR"
+BODIES_FILE="$ORACLE_DIR/bodies.tsv"
+: > "$BODIES_FILE"
+i=0
+for tenant in 0 1 2 3; do
+    rel="{\"kind\":\"release\",\"u\":128,\"m\":400,\"n\":400,\"t\":100,\"eps\":0.25,\"index\":\"hnsw\",\"workload\":$tenant,\"seed\":$((100 + tenant))}"
+    lp="{\"kind\":\"lp\",\"m\":600,\"d\":10,\"t\":100,\"eps\":0.25,\"mode\":\"hnsw\",\"seed\":$((200 + tenant))}"
+    for body in "$rel" "$lp"; do
+        oracle="$ORACLE_DIR/spec_$i.txt"
+        ./target/release/repro job "--body=$body" "--tenant=$tenant" > "$oracle"
+        printf '%s\t%s\t%s\n' "$tenant" "$body" "$oracle" >> "$BODIES_FILE"
+        i=$((i + 1))
+    done
+done
+
+# Boot the daemon on an ephemeral port; `timeout` bounds the whole soak so
+# a drain deadlock fails the gate instead of hanging it.
+timeout 900 ./target/release/repro serve --daemon --listen=127.0.0.1:0 \
+    --workers=4 --queue-depth=16 --policy=block "--eps-per-tenant=$EPS_CAP" \
+    "--conn-workers=$CONNS" --tenants=4 "--metrics-out=$OUT" > "$LOG" 2>&1 &
+DAEMON=$!
+
+ADDR=""
+for _ in $(seq 1 150); do
+    ADDR=$(grep -m1 -oE 'wire: listening on [0-9.]+:[0-9]+' "$LOG" | awk '{print $4}' || true)
+    [ -n "$ADDR" ] && break
+    sleep 0.2
+done
+if [ -z "$ADDR" ]; then
+    echo "FAIL: daemon never reported its listen address"; cat "$LOG"
+    kill "$DAEMON" 2>/dev/null || true
+    exit 1
+fi
+echo "soaking $ADDR with $CONNS conns x $REQS requests"
+
+python3 - "$ADDR" "$CONNS" "$REQS" "$P99_MS" "$BODIES_FILE" <<'EOF'
+import http.client, sys, threading, time
+
+addr, conns, reqs, p99_ms = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), float(sys.argv[4])
+host, port = addr.rsplit(":", 1)
+specs = []  # (tenant, body, expected_bytes)
+for line in open(sys.argv[5]):
+    tenant, body, oracle = line.rstrip("\n").split("\t")
+    specs.append((tenant, body, open(oracle, "rb").read().rstrip(b"\n")))
+
+latencies, failures, lock = [], [], threading.Lock()
+
+def drive(thread_id):
+    try:
+        c = http.client.HTTPConnection(host, int(port), timeout=300)
+        for r in range(reqs):
+            tenant, body, expected = specs[(thread_id + r) % len(specs)]
+            t0 = time.monotonic()
+            c.request("POST", "/v1/jobs", body=body,
+                      headers={"Authorization": f"Bearer tenant-{tenant}"})
+            resp = c.getresponse()
+            got = resp.read()  # http.client de-frames chunked bodies
+            dt = (time.monotonic() - t0) * 1e3
+            with lock:
+                latencies.append(dt)
+                if resp.status != 200:
+                    failures.append(f"conn {thread_id} req {r}: status {resp.status}: {got[:200]!r}")
+                elif got != expected:
+                    failures.append(
+                        f"conn {thread_id} req {r}: wire bytes differ from oracle "
+                        f"(wire {len(got)}B vs oracle {len(expected)}B) for {body[:80]}")
+        c.close()
+    except Exception as e:  # noqa: BLE001 - any transport failure fails the soak
+        with lock:
+            failures.append(f"conn {thread_id}: {type(e).__name__}: {e}")
+
+threads = [threading.Thread(target=drive, args=(t,)) for t in range(conns)]
+for t in threads: t.start()
+for t in threads: t.join()
+
+assert not failures, "soak failures:\n  " + "\n  ".join(failures)
+assert len(latencies) == conns * reqs
+latencies.sort()
+p99 = latencies[int(0.99 * (len(latencies) - 1))]
+assert p99 <= p99_ms, f"p99 {p99:.1f}ms exceeds the {p99_ms:.0f}ms bound"
+
+# Graceful teardown over the wire.
+c = http.client.HTTPConnection(host, int(port), timeout=60)
+c.request("POST", "/v1/shutdown", headers={"Authorization": "Bearer tenant-0"})
+assert c.getresponse().status == 200
+print(f"drove {len(latencies)} requests: p50 {latencies[len(latencies)//2]:.1f}ms, "
+      f"p99 {p99:.1f}ms (bound {p99_ms:.0f}ms), byte-identity held for all")
+EOF
+
+# The shutdown was posted by the driver; a clean drain must exit 0.
+wait "$DAEMON"
+echo "daemon drained cleanly"
+tail -n 12 "$LOG"
+
+python3 - "$OUT" "$EPS_CAP" "$CONNS" "$REQS" <<'EOF'
+import json, sys
+
+metrics = json.load(open(sys.argv[1]))
+cap, conns, reqs = float(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+counters = metrics["counters"]
+gauges = metrics["gauges"]
+
+assert counters.get("parse_errors", 0) == 0, f"parse errors on valid traffic: {counters}"
+assert counters.get("jobs_failed", 0) == 0, f"failed jobs: {counters}"
+assert counters["jobs_completed"] == counters["jobs_admitted"], (
+    "clean drain must complete every admitted job: " f"{counters}"
+)
+assert counters["http_200"] >= conns * reqs, f"missing successes: {counters}"
+assert counters.get("http_400", 0) == 0 and counters.get("http_401", 0) == 0, (
+    "valid authenticated traffic must never 4xx: " f"{counters}"
+)
+assert gauges.get("conns_open", 0) == 0, f"connections left open: {gauges}"
+
+spent = {k: v for k, v in gauges.items()
+         if k.startswith("tenant_") and k.endswith("_eps_spent")}
+assert len(spent) >= 2, f"expected multiple tenants, got {spent}"
+over = {k: v for k, v in spent.items() if v > cap + 1e-9}
+assert not over, f"tenants over their cap: {over}"
+
+timings = metrics["timings"]
+assert "wire_request" in timings, f"wire latency series missing: {sorted(timings)}"
+assert "latency_release" in timings and "latency_lp" in timings, (
+    "soak must exercise both job kinds: " f"{sorted(timings)}"
+)
+print(f"wire soak OK: {counters['jobs_completed']} jobs over "
+      f"{counters['conns_accepted']} conns, {counters['bytes_out']} bytes out, "
+      f"{len(spent)} tenants all within cap {cap}, zero parse errors")
+EOF
