@@ -95,6 +95,7 @@ fn run_wire_mix(workers: usize, jobs: usize, quick: bool, clients: usize) -> (f6
         eps_per_tenant: None,
         cache_capacity: 8,
         store_dir: None,
+        ..Default::default()
     });
     let wire = WireServer::start(server, &WireConfig::default()).expect("bind loopback");
     let addr = wire.local_addr().to_string();
@@ -136,6 +137,7 @@ fn run_mix(workers: usize, jobs: usize, quick: bool) -> (f64, Duration, Metrics)
         eps_per_tenant: None, // throughput bench: admission always passes
         cache_capacity: 8,
         store_dir: None,
+        ..Default::default()
     });
     // Warmup: build + cache both release workloads (i=0 -> workload 0,
     // i=1 -> workload 1) and touch the LP path (i=3), so the timed region

@@ -80,6 +80,7 @@ fn main() {
         eps_per_tenant: Some(5.0),  // each tenant's privacy budget
         cache_capacity: 8,          // warm-index cache (DESIGN.md §6)
         store_dir,                  // artifact store (DESIGN.md §7)
+        ..Default::default()        // mmap pager on, heap budget unlimited
     });
 
     // Two tenants submit concurrently — the MPMC request path. Tenant 1

@@ -25,6 +25,7 @@ fn main() {
         eps_per_tenant: Some(3.0),
         cache_capacity: 4,
         store_dir: None,
+        ..Default::default()
     });
     let wire = WireServer::start(server, &WireConfig { tenants: 3, ..WireConfig::default() })
         .expect("bind loopback");

@@ -12,9 +12,10 @@
 //! Keys are addressed as `section.key` (top-level keys have no prefix).
 //!
 //! Typed section views live next to their consumers: `[sharding]`,
-//! `[cache]`, `[store]`, `[dynamic]` and `[kernels]` below
+//! `[cache]`, `[store]`, `[dynamic]`, `[kernels]` and `[pager]` below
 //! ([`ShardingConfig`], [`CacheConfig`], [`StoreConfig`],
-//! [`DynamicConfig`], [`KernelConfig`]); the `[server]` section of the
+//! [`DynamicConfig`], [`KernelConfig`], [`PagerConfig`]); the `[server]`
+//! section of the
 //! long-lived serving runtime is read by
 //! [`crate::server::ServerConfig::from_config`] (DESIGN.md §8), and the
 //! `[wire]` section of its network front end (listen address, connection
@@ -325,6 +326,92 @@ impl KernelConfig {
     }
 }
 
+/// Typed view of the `[pager]` section (DESIGN.md §12): how the artifact
+/// store restores snapshots — zero-copy mmap paging vs heap decode — how
+/// much heap the warm-index L1 tier may pin, and whether the quantized
+/// shortlist tier is on.
+///
+/// ```text
+/// [pager]
+/// enabled = true        # mmap v3 artifacts; false = always decode into heap
+/// verify = true         # eager section-checksum walk at open time
+/// heap_budget_mb = 0    # L1 heap ceiling in MiB (0 = unlimited)
+/// quant = "off"         # quantized shortlist tier: off | int8 | f16
+/// ```
+///
+/// The CLI also accepts `--heap-budget-mb=N` and `--quant=MODE` as
+/// shorthands (shorthands win over section values). The pager and the
+/// quant tier are both pure accelerators: every `select()` draw is
+/// bit-identical with them on or off, so none of these knobs enters
+/// [`crate::coordinator::WorkloadKey`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PagerConfig {
+    /// Restore artifacts over a shared memory mapping (default). Off =
+    /// always decode into heap.
+    pub enabled: bool,
+    /// Verify every section checksum eagerly at artifact open time.
+    pub verify: bool,
+    /// Heap ceiling for L1-resident index data, in MiB (0 = unlimited).
+    /// Mmap-borrowed rows count as zero against it.
+    pub heap_budget_mb: usize,
+    /// Quantized shortlist tier mode (`None`/"off" = tier off).
+    pub quant: Option<String>,
+}
+
+impl Default for PagerConfig {
+    fn default() -> Self {
+        PagerConfig { enabled: true, verify: true, heap_budget_mb: 0, quant: None }
+    }
+}
+
+impl PagerConfig {
+    /// Read the `[pager]` section, honoring the `--heap-budget-mb=N` and
+    /// `--quant=MODE` shorthands (shorthands win over section values).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = PagerConfig::default();
+        let quant = cfg
+            .get_str("quant")
+            .or_else(|| cfg.get_str("pager.quant"))
+            .map(str::to_string)
+            .filter(|q| q != "off");
+        Ok(PagerConfig {
+            enabled: cfg.or("pager.enabled", d.enabled)?,
+            verify: cfg.or("pager.verify", d.verify)?,
+            heap_budget_mb: cfg
+                .or("heap-budget-mb", cfg.or("pager.heap_budget_mb", d.heap_budget_mb)?)?,
+            quant,
+        })
+    }
+
+    /// The store-facing restore settings.
+    pub fn settings(&self) -> crate::store::PagerSettings {
+        crate::store::PagerSettings { enabled: self.enabled, verify: self.verify }
+    }
+
+    /// The L1 heap ceiling (`heap_budget_mb` 0 = unlimited).
+    pub fn heap_budget(&self) -> crate::store::HeapBudget {
+        match self.heap_budget_mb {
+            0 => crate::store::HeapBudget::unlimited(),
+            mb => crate::store::HeapBudget::from_mb(mb),
+        }
+    }
+
+    /// Pin the process-wide quantized-shortlist mode this config requests
+    /// (including clearing it when unset). Returns the mode now ambient
+    /// (`None` = tier off).
+    pub fn apply_quant(&self) -> Result<Option<crate::mips::QuantMode>> {
+        let mode = match &self.quant {
+            None => None,
+            Some(name) => Some(
+                name.parse::<crate::mips::QuantMode>()
+                    .map_err(|e| anyhow::anyhow!("[pager] quant: {e}"))?,
+            ),
+        };
+        crate::mips::quant::set_ambient_mode(mode);
+        Ok(mode)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -456,6 +543,42 @@ mod tests {
             KernelConfig::from_config(&c).unwrap().dispatch.as_deref(),
             Some("native")
         );
+    }
+
+    #[test]
+    fn pager_section_parses_with_defaults_and_shorthand() {
+        // defaults: pager on, verify on, no budget, quant off
+        let c = Config::new();
+        let p = PagerConfig::from_config(&c).unwrap();
+        assert_eq!(p, PagerConfig::default());
+        assert_eq!(p.heap_budget(), crate::store::HeapBudget::unlimited());
+        assert_eq!(
+            p.settings(),
+            crate::store::PagerSettings { enabled: true, verify: true }
+        );
+
+        // full section; quant = "off" stays None
+        let c = Config::parse(
+            "[pager]\nenabled = false\nverify = false\nheap_budget_mb = 3\nquant = \"off\"\n",
+        )
+        .unwrap();
+        let p = PagerConfig::from_config(&c).unwrap();
+        assert!(!p.enabled && !p.verify);
+        assert_eq!(p.heap_budget_mb, 3);
+        assert_eq!(p.heap_budget().limit(), Some(3 << 20));
+        assert_eq!(p.quant, None);
+
+        // shorthands beat the section values
+        let mut c =
+            Config::parse("[pager]\nheap_budget_mb = 3\nquant = \"int8\"\n").unwrap();
+        c.apply_overrides(["--heap-budget-mb=7", "--quant=f16"]).unwrap();
+        let p = PagerConfig::from_config(&c).unwrap();
+        assert_eq!(p.heap_budget_mb, 7);
+        assert_eq!(p.quant.as_deref(), Some("f16"));
+
+        // an unknown quant mode is a typed config error, caught at apply
+        let c = Config::parse("[pager]\nquant = \"int4\"\n").unwrap();
+        assert!(PagerConfig::from_config(&c).unwrap().apply_quant().is_err());
     }
 
     #[test]

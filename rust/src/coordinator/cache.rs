@@ -125,6 +125,17 @@ impl CachedIndex {
         }
     }
 
+    /// Heap bytes pinned by this entry: the index's own accounting, which
+    /// counts owned vector storage in full and mmap-borrowed storage as
+    /// zero — resident mapped pages are the kernel's to reclaim, not heap
+    /// the cache must budget (DESIGN.md §12).
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            CachedIndex::Mono(i) => i.heap_bytes(),
+            CachedIndex::Sharded(s) => s.heap_bytes(),
+        }
+    }
+
     /// Apply one workload delta, dispatching to the mono or sharded patch
     /// seam (DESIGN.md §9). Returns the patched entry and whether an
     /// amortized full rebuild ran instead of an incremental patch.
@@ -230,8 +241,11 @@ pub struct CacheStats {
     pub hits: u64,
     /// Lifetime lookup misses.
     pub misses: u64,
-    /// Entries evicted to stay within capacity.
+    /// Entries evicted to stay within capacity (count or bytes).
     pub evictions: u64,
+    /// Heap bytes pinned by resident entries ([`CachedIndex::heap_bytes`]
+    /// summed — mmap-borrowed storage counts as zero).
+    pub bytes: usize,
     /// Total build time skipped by hits.
     pub saved: Duration,
 }
@@ -240,10 +254,15 @@ struct Entry {
     value: CachedIndex,
     build_time: Duration,
     last_used: u64,
+    /// [`CachedIndex::heap_bytes`] at insert time (indices are immutable,
+    /// so the figure never drifts).
+    bytes: usize,
 }
 
 struct Inner {
     entries: HashMap<WorkloadKey, Entry>,
+    /// Running sum of every resident entry's `bytes`.
+    bytes: usize,
     /// Memoized content fingerprints by (workload id, rows, dim) — see
     /// [`IndexCache::fingerprint_for`].
     fingerprints: HashMap<(u64, usize, usize), u128>,
@@ -265,17 +284,34 @@ struct Inner {
 /// other workers' lookups.
 pub struct IndexCache {
     capacity: usize,
+    /// Heap-byte ceiling across resident entries; 0 = unlimited. Enforced
+    /// alongside the entry count: eviction runs while either bound is
+    /// exceeded (but always keeps the most recent insert, so one
+    /// over-budget entry still serves rather than thrashing).
+    max_bytes: usize,
     inner: Mutex<Inner>,
 }
 
 impl IndexCache {
-    /// An empty cache holding at most `capacity` indices. Capacity 0
-    /// disables storage: every lookup misses and nothing is retained.
+    /// An empty cache holding at most `capacity` indices with no byte
+    /// ceiling. Capacity 0 disables storage: every lookup misses and
+    /// nothing is retained.
     pub fn new(capacity: usize) -> Self {
+        Self::with_byte_budget(capacity, 0)
+    }
+
+    /// An empty cache bounded by both an entry count and a heap-byte
+    /// budget (`max_bytes` 0 = unlimited). Byte accounting uses
+    /// [`CachedIndex::heap_bytes`], so mmap-paged entries cost only their
+    /// meta structures — the mechanism that lets a larger-than-RAM
+    /// artifact stay resident under a small budget (DESIGN.md §12).
+    pub fn with_byte_budget(capacity: usize, max_bytes: usize) -> Self {
         IndexCache {
             capacity,
+            max_bytes,
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
+                bytes: 0,
                 fingerprints: HashMap::new(),
                 tick: 0,
                 hits: 0,
@@ -313,6 +349,16 @@ impl IndexCache {
         self.capacity
     }
 
+    /// Heap-byte ceiling (0 = unlimited).
+    pub fn max_bytes(&self) -> usize {
+        self.max_bytes
+    }
+
+    /// Heap bytes currently pinned by resident entries.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
     /// Entries currently resident.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().entries.len()
@@ -336,6 +382,7 @@ impl IndexCache {
             hits: g.hits,
             misses: g.misses,
             evictions: g.evictions,
+            bytes: g.bytes,
             saved: g.saved,
         }
     }
@@ -380,29 +427,53 @@ impl IndexCache {
     /// Drop an entry (a stale generation superseded by a patched promote).
     /// Returns true when something was removed.
     pub fn remove(&self, key: &WorkloadKey) -> bool {
-        self.inner.lock().unwrap().entries.remove(key).is_some()
+        let mut g = self.inner.lock().unwrap();
+        match g.entries.remove(key) {
+            Some(e) => {
+                g.bytes -= e.bytes;
+                true
+            }
+            None => false,
+        }
     }
 
     /// Insert an entry built at cost `build_time`, evicting least-recently
-    /// used entries while over capacity. A no-op when capacity is 0.
+    /// used entries while over the entry-count capacity *or* the heap-byte
+    /// budget. The just-inserted entry itself is never evicted — a single
+    /// over-budget index still serves (degraded accounting beats
+    /// thrashing), which the byte budget makes rare in the first place:
+    /// mmap-paged entries pin only their meta structures. A no-op when
+    /// capacity is 0.
     pub fn insert(&self, key: WorkloadKey, value: CachedIndex, build_time: Duration) {
         if self.capacity == 0 {
             return;
         }
+        let bytes = value.heap_bytes(); // the walk runs outside the lock
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         inner.tick += 1;
         let tick = inner.tick;
-        inner.entries.insert(key, Entry { value, build_time, last_used: tick });
-        while inner.entries.len() > self.capacity {
+        if let Some(old) = inner
+            .entries
+            .insert(key, Entry { value, build_time, last_used: tick, bytes })
+        {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        while inner.entries.len() > 1
+            && (inner.entries.len() > self.capacity
+                || (self.max_bytes > 0 && inner.bytes > self.max_bytes))
+        {
             let oldest = inner
                 .entries
                 .iter()
+                .filter(|(k, _)| **k != key)
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| *k);
             match oldest {
                 Some(k) => {
-                    inner.entries.remove(&k);
+                    let e = inner.entries.remove(&k).expect("oldest key is resident");
+                    inner.bytes -= e.bytes;
                     inner.evictions += 1;
                 }
                 None => break,
@@ -540,6 +611,41 @@ mod tests {
         assert!(!cache.contains(&key(2)), "LRU entry must be evicted");
         assert!(cache.contains(&key(3)));
         assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_but_keeps_newest() {
+        let v = vs(64, 8, 1.0);
+        let per = mono(&v).heap_bytes();
+        assert!(per > 0, "owned flat index must account its rows");
+
+        // budget for exactly two entries; the third insert evicts the LRU
+        let cache = IndexCache::with_byte_budget(10, per * 2);
+        cache.insert(key(1), mono(&v), Duration::ZERO);
+        cache.insert(key(2), mono(&v), Duration::ZERO);
+        assert_eq!(cache.resident_bytes(), per * 2);
+        assert!(cache.lookup(&key(1)).is_some(), "touch 1 so 2 is LRU");
+        cache.insert(key(3), mono(&v), Duration::ZERO);
+        assert!(!cache.contains(&key(2)), "byte pressure evicts the LRU entry");
+        assert!(cache.contains(&key(1)) && cache.contains(&key(3)));
+        assert_eq!(cache.stats().bytes, per * 2);
+
+        // a single entry larger than the whole budget still serves...
+        let tight = IndexCache::with_byte_budget(10, 1);
+        tight.insert(key(9), mono(&v), Duration::ZERO);
+        assert!(tight.contains(&key(9)));
+        // ...and is evicted only when a newer insert needs the room
+        tight.insert(key(10), mono(&v), Duration::ZERO);
+        assert!(!tight.contains(&key(9)) && tight.contains(&key(10)));
+        // remove() releases its accounting
+        assert!(tight.remove(&key(10)));
+        assert_eq!(tight.resident_bytes(), 0);
+
+        // re-inserting the same key replaces, not double-counts
+        let cache = IndexCache::with_byte_budget(10, 0);
+        cache.insert(key(4), mono(&v), Duration::ZERO);
+        cache.insert(key(4), mono(&v), Duration::ZERO);
+        assert_eq!(cache.resident_bytes(), per);
     }
 
     #[test]

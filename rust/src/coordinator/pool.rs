@@ -5,7 +5,7 @@
 use super::cache::IndexCache;
 use super::job::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
-use crate::store::{DiskStore, TieredIndexCache};
+use crate::store::{DiskStore, HeapBudget, PagerSettings, TieredIndexCache};
 use crate::workloads::WorkloadRegistry;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -77,11 +77,24 @@ pub struct CoordinatorConfig {
     /// snapshots built indices to disk and restores them across
     /// coordinator restarts; `None` keeps warm serving in-memory only.
     pub store_dir: Option<PathBuf>,
+    /// Heap ceiling for L1-resident index data (DESIGN.md §12);
+    /// mmap-borrowed rows count as zero against it.
+    pub heap_budget: HeapBudget,
+    /// How store artifacts are restored: zero-copy mmap paging vs heap
+    /// decode (DESIGN.md §12).
+    pub pager: PagerSettings,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, eps_cap: None, cache_capacity: 8, store_dir: None }
+        CoordinatorConfig {
+            workers: 4,
+            eps_cap: None,
+            cache_capacity: 8,
+            store_dir: None,
+            heap_budget: HeapBudget::unlimited(),
+            pager: PagerSettings::default(),
+        }
     }
 }
 
@@ -98,6 +111,7 @@ pub(crate) fn finalize_serving_metrics(m: &mut Metrics, cache: Option<&TieredInd
         let s = cache.l1().stats();
         m.set_gauge("index_cache_entries", s.entries as f64);
         m.set_gauge("index_cache_evictions", s.evictions as f64);
+        m.set_gauge("index_cache_bytes", s.bytes as f64);
         // Structurally zero by construction (DESIGN.md §9: stale cache
         // generations are patched forward or rebuilt, never handed out);
         // materialized here so the CI dynamic smoke can assert on it and
@@ -111,6 +125,11 @@ pub(crate) fn finalize_serving_metrics(m: &mut Metrics, cache: Option<&TieredInd
             let promote_us = m.counter("store_promote_us");
             m.inc("store_promote_ms", promote_us / 1000);
             m.inc("store_bytes_written", st.bytes_written);
+            // Which restore path promotions took (DESIGN.md §12): mapped
+            // page-ins vs heap decodes. The CI mmap smoke asserts a
+            // budget-constrained serve never decodes.
+            m.inc("store_mmap_restore", st.mmap_restores);
+            m.inc("store_decode_restore", st.decode_restores);
             m.set_gauge("store_artifacts", st.artifacts as f64);
             m.set_gauge("store_deltas", st.deltas as f64);
             m.set_gauge("store_load_failures", st.load_failures as f64);
@@ -151,15 +170,26 @@ impl Coordinator {
         let cache: Option<Arc<TieredIndexCache>> =
             if cfg.cache_capacity > 0 || cfg.store_dir.is_some() {
                 let tiered = match &cfg.store_dir {
-                    Some(dir) => TieredIndexCache::with_store(cfg.cache_capacity, dir)
-                        .unwrap_or_else(|e| {
-                            eprintln!(
-                                "warning: cannot open artifact store {dir:?} ({e:#}); \
-                                 serving in-memory only"
-                            );
-                            TieredIndexCache::memory_only(cfg.cache_capacity)
-                        }),
-                    None => TieredIndexCache::memory_only(cfg.cache_capacity),
+                    Some(dir) => TieredIndexCache::with_settings(
+                        cfg.cache_capacity,
+                        cfg.heap_budget,
+                        dir,
+                        cfg.pager,
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!(
+                            "warning: cannot open artifact store {dir:?} ({e:#}); \
+                             serving in-memory only"
+                        );
+                        TieredIndexCache::memory_only_with_budget(
+                            cfg.cache_capacity,
+                            cfg.heap_budget,
+                        )
+                    }),
+                    None => TieredIndexCache::memory_only_with_budget(
+                        cfg.cache_capacity,
+                        cfg.heap_budget,
+                    ),
                 };
                 Some(Arc::new(tiered))
             } else {
@@ -362,7 +392,7 @@ mod tests {
             workers: 3,
             eps_cap: None,
             cache_capacity: 8,
-            store_dir: None,
+            ..Default::default()
         });
         for i in 0..6 {
             c.submit(small_release(i, 1.0)).unwrap();
@@ -384,6 +414,7 @@ mod tests {
             eps_cap: Some(2.5),
             cache_capacity: 0,
             store_dir: None,
+            ..Default::default()
         });
         assert!(c.submit(small_release(1, 1.0)).is_ok());
         assert!(c.submit(small_release(2, 1.0)).is_ok());
@@ -401,6 +432,7 @@ mod tests {
             eps_cap: Some(2.0),
             cache_capacity: 4,
             store_dir: None,
+            ..Default::default()
         });
         assert!(c.submit(small_release(1, 0.9)).is_ok()); // 0.9
         assert!(c.submit(small_lp(2, 0.9)).is_ok()); // 1.8
@@ -433,6 +465,7 @@ mod tests {
             eps_cap: None,
             cache_capacity: 4,
             store_dir: None,
+            ..Default::default()
         });
         for seed in 0..3 {
             c.submit(release_on_workload(7, 100 + seed, 1.0)).unwrap();
@@ -480,6 +513,7 @@ mod tests {
                 eps_cap: None,
                 cache_capacity: capacity,
                 store_dir: None,
+                ..Default::default()
             });
             assert_eq!(c.cache().is_some(), capacity > 0);
             c.submit(hnsw_release(1)).unwrap();
@@ -517,6 +551,7 @@ mod tests {
                 eps_cap: None,
                 cache_capacity: 4,
                 store_dir: Some(dir.clone()),
+                ..Default::default()
             });
             assert!(c.store().is_some(), "store must attach");
             c.submit(release_on_workload(7, seed, 1.0)).unwrap();

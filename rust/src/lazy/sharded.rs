@@ -39,7 +39,7 @@ use super::lazy_em::{retrieve_top_k_from, transform_ip};
 use super::ScoreTransform;
 use crate::coordinator::job::{execute_shard_search, ShardSearchJob};
 use crate::coordinator::pool::parallel_map;
-use crate::mips::snapshot::{self, malformed, SnapshotError, SnapshotReader};
+use crate::mips::snapshot::{self, malformed, SnapshotError, SnapshotReader, SnapshotWriter};
 use crate::mips::{
     apply_delta_to_vectors, build_index, IndexKind, MipsIndex, PatchError, SnapshotCodec,
     VectorSet, WorkloadDelta,
@@ -157,6 +157,12 @@ impl ShardSet {
         self.shards.iter().map(|s| (s.offset, s.len)).collect()
     }
 
+    /// Heap bytes held across every shard's index (mmap-borrowed vector
+    /// storage counts as zero — [`crate::mips::MipsIndex::heap_bytes`]).
+    pub fn heap_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.index.heap_bytes()).sum()
+    }
+
     /// Materialize every shard's live rows, concatenated in global
     /// candidate order — the vector set a fresh [`ShardSet::build`] at the
     /// current state would be given.
@@ -243,15 +249,15 @@ impl ShardSet {
 /// kind — a corrupted artifact errors out instead of serving draws from a
 /// mis-shapen partition.
 impl SnapshotCodec for ShardSet {
-    fn encode(&self, out: &mut Vec<u8>) {
-        snapshot::put_u8(out, self.kind.tag());
-        snapshot::put_len(out, self.m);
-        snapshot::put_len(out, self.d);
-        snapshot::put_len(out, self.shards.len());
+    fn encode(&self, w: &mut SnapshotWriter<'_>) {
+        w.u8(self.kind.tag());
+        w.len(self.m);
+        w.len(self.d);
+        w.len(self.shards.len());
         for shard in &self.shards {
-            snapshot::put_len(out, shard.offset);
-            snapshot::put_len(out, shard.len);
-            snapshot::encode_index(shard.index.as_ref(), out);
+            w.len(shard.offset);
+            w.len(shard.len);
+            snapshot::encode_index(shard.index.as_ref(), w);
         }
     }
 

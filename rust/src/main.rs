@@ -32,7 +32,8 @@
 
 use anyhow::{bail, Context, Result};
 use fast_mwem::config::{
-    CacheConfig, Config, DynamicConfig, KernelConfig, ShardingConfig, StoreConfig,
+    CacheConfig, Config, DynamicConfig, KernelConfig, PagerConfig, ShardingConfig,
+    StoreConfig,
 };
 use fast_mwem::coordinator::{
     execute, execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec,
@@ -93,6 +94,9 @@ fn run(args: &[String]) -> Result<()> {
     // Pin the kernel dispatch before any scoring work touches it — the
     // choice is process-wide and sticky (first resolution wins).
     KernelConfig::from_config(&cfg)?.apply()?;
+    // Same for the quantized shortlist tier (DESIGN.md §12): ambient mode
+    // is process-wide, set once before any index builds.
+    PagerConfig::from_config(&cfg)?.apply_quant()?;
     let cmd = pos.first().map(String::as_str).unwrap_or("help");
     match cmd {
         "eval" => cmd_eval(&pos, &cfg),
@@ -128,6 +132,7 @@ USAGE:
            [--shards=S]
   repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
               [--workloads=W] [--cache-capacity=C] [--store-dir=PATH]
+              [--heap-budget-mb=N] [--quant=off|int8|f16]
   repro serve --daemon [--jobs=24] [--tenants=3] [--workers=4]
               [--queue-depth=64] [--policy=block|reject]
               [--eps-per-tenant=E] [--workloads=W] [--cache-capacity=C]
@@ -159,6 +164,16 @@ Persistent artifact store (DESIGN.md §7): --store-dir=PATH (or a [store]
 config section) snapshots built indices to disk, so a restarted `serve`
 against the same directory restores them (store_hit metric) instead of
 rebuilding — warm serving that survives restarts.
+
+Zero-copy paging (DESIGN.md §12): store artifacts restore over a shared
+memory mapping by default — row data pages in on demand and pins no heap,
+so artifacts larger than RAM still serve. --heap-budget-mb=N (or a [pager]
+config section: enabled, verify, heap_budget_mb, quant) caps the heap the
+warm cache may pin; the store_mmap_restore / store_decode_restore counters
+say which restore path promotions took. --quant=int8|f16 adds a quantized
+shortlist tier: compact codes widen the candidate shortlist, exact rows
+rescore it, and every select() draw stays bit-identical with every one of
+these knobs on or off.
 
 Serving runtime (DESIGN.md §8): `serve --daemon` (or a [server] config
 section) runs the long-lived runtime instead of the one-shot batch pool:
@@ -327,13 +342,20 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let sharding = ShardingConfig::from_config(cfg)?;
     let cache = CacheConfig::from_config(cfg)?;
     let store = StoreConfig::from_config(cfg)?;
+    let pager = PagerConfig::from_config(cfg)?;
     let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
     println!(
         "serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?}, shards {}, \
-         {workload_count} workloads, cache capacity {}, store {})",
+         {workload_count} workloads, cache capacity {}, store {}, pager {}, \
+         heap budget {})",
         sharding.shards,
         cache.capacity,
         store.dir.as_deref().unwrap_or("off"),
+        if pager.enabled { "mmap" } else { "decode" },
+        match pager.heap_budget().limit() {
+            Some(b) => format!("{}MiB", b >> 20),
+            None => "unlimited".into(),
+        },
     );
 
     let lp_mode = if sharding.shards > 1 {
@@ -346,6 +368,8 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         eps_cap,
         cache_capacity: cache.capacity,
         store_dir: store.dir.map(std::path::PathBuf::from),
+        heap_budget: pager.heap_budget(),
+        pager: pager.settings(),
     });
     let mut accepted = 0usize;
     for i in 0..jobs {
@@ -408,10 +432,12 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     );
     if metrics.gauge("store_artifacts").is_some() {
         println!(
-            "artifact store: {} restores / {} cold builds, {} artifacts on disk, \
-             {} bytes written, ~{}ms decoding",
+            "artifact store: {} restores / {} cold builds ({} mmap-paged, {} decoded), \
+             {} artifacts on disk, {} bytes written, ~{}ms promoting",
             metrics.counter("store_hit"),
             metrics.counter("store_miss"),
+            metrics.counter("store_mmap_restore"),
+            metrics.counter("store_decode_restore"),
             metrics.gauge("store_artifacts").unwrap_or(0.0),
             metrics.counter("store_bytes_written"),
             metrics.counter("store_promote_ms"),

@@ -85,6 +85,12 @@ impl AugmentedSpace {
         &self.vs
     }
 
+    /// Heap bytes held by the space: the vector storage (zero when
+    /// mmap-borrowed) plus the always-resident aux column.
+    pub fn heap_bytes(&self) -> usize {
+        self.vs.heap_bytes() + self.aux.len() * 4
+    }
+
     /// Exact inner product between original key `i` and an original query.
     #[inline]
     pub fn ip(&self, i: usize, query: &[f32]) -> f32 {

@@ -32,7 +32,7 @@
 //! effect only — returned scores stay exact inner products) until the next
 //! amortized rebuild re-derives M.
 
-use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
+use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader, SnapshotWriter};
 use super::{MipsIndex, VectorSet};
 use std::fmt;
 use std::sync::Arc;
@@ -118,9 +118,9 @@ impl WorkloadDelta {
 /// Snapshot payload for a delta artifact: the tombstoned ids then the
 /// inserted rows (both through the shared little-endian primitives).
 impl SnapshotCodec for WorkloadDelta {
-    fn encode(&self, out: &mut Vec<u8>) {
-        snapshot::put_u32s(out, &self.tombstoned);
-        snapshot::put_vectors(out, &self.inserted);
+    fn encode(&self, w: &mut SnapshotWriter<'_>) {
+        w.u32s(&self.tombstoned);
+        snapshot::put_vectors(w, &self.inserted);
     }
 
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
@@ -289,6 +289,11 @@ impl Tombstones {
         self.alive.clone()
     }
 
+    /// Heap bytes held by the bitmap and both translation tables.
+    pub(crate) fn heap_bytes(&self) -> usize {
+        self.alive.len() + self.ext_of.len() * 4 + self.int_of.len() * 4
+    }
+
     /// The dead internal slots, sorted — the compact snapshot encoding.
     pub(crate) fn dead_ids(&self) -> Vec<u32> {
         self.alive
@@ -397,7 +402,7 @@ mod tests {
     fn delta_codec_round_trips() {
         let delta = WorkloadDelta::new(vs(&[&[1.5, -2.5], &[0.0, 4.0]]), vec![0, 7, 3]);
         let mut buf = Vec::new();
-        delta.encode(&mut buf);
+        delta.encode(&mut SnapshotWriter::inline(&mut buf));
         let back = WorkloadDelta::decode(&mut SnapshotReader::new(&buf)).unwrap();
         assert_eq!(back.tombstoned, vec![0, 3, 7]);
         assert_eq!(back.inserted.len(), 2);
@@ -405,8 +410,11 @@ mod tests {
 
         // unsorted tombstones on disk are corruption, not a panic
         let mut bad = Vec::new();
-        snapshot::put_u32s(&mut bad, &[3, 1]);
-        snapshot::put_vectors(&mut bad, &VectorSet::zeros(0, 2));
+        {
+            let mut w = SnapshotWriter::inline(&mut bad);
+            w.u32s(&[3, 1]);
+            snapshot::put_vectors(&mut w, &VectorSet::zeros(0, 2));
+        }
         assert!(WorkloadDelta::decode(&mut SnapshotReader::new(&bad)).is_err());
     }
 

@@ -4,40 +4,91 @@
 //! Fast-MWEM is benchmarked against, and (b) the "perfect index" H of
 //! Theorem 3.3 used to validate that lazy sampling leaves the output
 //! distribution unchanged.
+//!
+//! Optionally carries a [`QuantizedSet`] shortlist tier (DESIGN.md §12):
+//! quantized codes nominate a candidate superset cheaply, the exact rows
+//! rescore those candidates with the same scoring kernel, and the result
+//! is bit-identical to the full scan — see `quant.rs` for the argument.
+//! With mmap-borrowed vectors this is what makes larger-than-RAM flat
+//! serving fast: the codes stay hot in heap while only candidate rows
+//! page in.
 
 use super::dynamic::{apply_delta_to_vectors, PatchError, PatchedIndex, WorkloadDelta};
-use super::snapshot::{self, SnapshotCodec, SnapshotError, SnapshotReader};
+use super::quant::{QuantMode, QuantizedSet};
+use super::snapshot::{SnapshotCodec, SnapshotError, SnapshotReader, SnapshotWriter};
 use super::topk::TopK;
 use super::{IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::runtime::kernels;
 use std::sync::Arc;
 
-/// Exact k-MIPS index: a brute-force scan of the stored vectors.
+/// Exact k-MIPS index: a brute-force scan of the stored vectors, with an
+/// optional quantized shortlist tier in front of the scan.
 pub struct FlatIndex {
     vs: VectorSet,
+    quant: Option<QuantizedSet>,
 }
 
 impl FlatIndex {
     /// Index `vs` (no preprocessing — the flat index IS the data).
     pub fn new(vs: VectorSet) -> Self {
-        FlatIndex { vs }
+        FlatIndex { vs, quant: None }
+    }
+
+    /// Index `vs` with a quantized shortlist tier in the requested mode.
+    /// Falls back to the plain scan (tier absent) when `mode` is `None`
+    /// or the data declines quantization (non-finite / out-of-range rows).
+    pub fn with_quant(vs: VectorSet, mode: Option<QuantMode>) -> Self {
+        let quant = mode.and_then(|m| QuantizedSet::build(&vs, m));
+        FlatIndex { vs, quant }
     }
 
     /// The indexed vectors.
     pub fn vectors(&self) -> &VectorSet {
         &self.vs
     }
+
+    /// The shortlist tier's mode, when one is attached.
+    pub fn quant_mode(&self) -> Option<QuantMode> {
+        self.quant.as_ref().map(QuantizedSet::mode)
+    }
 }
 
-/// Snapshot payload: the vectors, nothing else — the flat index IS the
-/// data, so restore is a plain reload.
+/// Snapshot payload: the vectors (pageable), then the quant codes
+/// (inline meta — they must stay heap-hot even when the rows are
+/// mmap-borrowed). Restore reconstructs the tier from its own bytes, so
+/// an artifact is self-describing: it serves identically whatever the
+/// reader's configured quant mode.
 impl SnapshotCodec for FlatIndex {
-    fn encode(&self, out: &mut Vec<u8>) {
-        snapshot::put_vectors(out, &self.vs);
+    fn encode(&self, w: &mut SnapshotWriter<'_>) {
+        w.vectors(&self.vs);
+        match &self.quant {
+            None => w.u8(0),
+            Some(qs) => {
+                w.u8(1);
+                qs.encode(w);
+            }
+        }
     }
 
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
-        Ok(FlatIndex::new(snapshot::read_vectors(r)?))
+        let vs = super::snapshot::read_vectors(r)?;
+        let quant = match r.u8()? {
+            0 => None,
+            1 => Some(QuantizedSet::decode(r)?),
+            t => return Err(super::snapshot::malformed(format!("bad quant presence tag {t}"))),
+        };
+        if let Some(qs) = &quant {
+            if qs.len() != vs.len() || qs.dim() != vs.dim() {
+                return Err(super::snapshot::malformed(format!(
+                    "quant tier shape {}×{} does not match vectors {}×{}",
+                    qs.len(),
+                    qs.dim(),
+                    vs.len(),
+                    vs.dim()
+                )));
+            }
+        }
+        Ok(FlatIndex { vs, quant })
     }
 }
 
@@ -53,6 +104,18 @@ impl MipsIndex for FlatIndex {
     fn top_k(&self, query: &[f32], k: usize) -> Vec<Neighbor> {
         let k = k.min(self.vs.len());
         let mut top = TopK::new(k);
+        if let Some(qs) = &self.quant {
+            if let Some(short) = qs.shortlist(query, k) {
+                // Rescore candidates in ascending id with the exact
+                // kernel: bit-identical to the full scan because the
+                // shortlist provably contains every row scoring at or
+                // above the k-th largest exact score (quant.rs docs).
+                for id in short {
+                    top.push(id, kernels::dot(self.vs.row(id as usize), query));
+                }
+                return top.into_sorted();
+            }
+        }
         for (i, row) in self.vs.rows().enumerate() {
             top.push(i as u32, kernels::dot(row, query));
         }
@@ -63,17 +126,23 @@ impl MipsIndex for FlatIndex {
         IndexKind::Flat
     }
 
-    fn write_snapshot(&self, out: &mut Vec<u8>) {
-        self.encode(out);
+    fn write_snapshot(&self, w: &mut SnapshotWriter<'_>) {
+        self.encode(w);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.vs.heap_bytes() + self.quant.as_ref().map_or(0, QuantizedSet::heap_bytes)
     }
 
     /// The flat index IS the data, so its patch is the trivial one: a
-    /// row-level rewrite of the stored vectors. No tombstones accumulate
-    /// and no rebuild threshold applies — a patched flat index is
-    /// bit-identical to a fresh build over the updated rows.
+    /// row-level rewrite of the stored vectors (re-quantized in the same
+    /// mode when a tier is attached). No tombstones accumulate and no
+    /// rebuild threshold applies — a patched flat index is bit-identical
+    /// to a fresh build over the updated rows.
     fn patch(&self, delta: &WorkloadDelta, _seed: u64) -> Result<PatchedIndex, PatchError> {
         let vs = apply_delta_to_vectors(&self.vs, delta)?;
-        Ok(PatchedIndex { index: Arc::new(FlatIndex::new(vs)), rebuilt: false })
+        let index = FlatIndex::with_quant(vs, self.quant_mode());
+        Ok(PatchedIndex { index: Arc::new(index), rebuilt: false })
     }
 
     fn live_vectors(&self) -> VectorSet {
@@ -129,13 +198,55 @@ mod tests {
         assert_eq!(got[1].score, 2.0);
     }
 
+    /// The tentpole exactness property at the index level: the quantized
+    /// shortlist path returns bit-identical neighbors to the plain scan,
+    /// in both code widths, across many queries and depths.
+    #[test]
+    fn quantized_top_k_is_bit_identical_to_full_scan() {
+        let vs = random_set(300, 19, 40);
+        let plain = FlatIndex::new(vs.clone());
+        let mut rng = Rng::new(41);
+        for mode in [QuantMode::Int8, QuantMode::F16] {
+            let quant = FlatIndex::with_quant(vs.clone(), Some(mode));
+            assert_eq!(quant.quant_mode(), Some(mode));
+            for trial in 0..25 {
+                let q: Vec<f32> = (0..19).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+                let k = 1 + trial % 20;
+                let (a, b) = (plain.top_k(&q, k), quant.top_k(&q, k));
+                assert_eq!(a.len(), b.len());
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.id, y.id, "{mode} k={k}");
+                    assert_eq!(x.score.to_bits(), y.score.to_bits(), "{mode} k={k}");
+                }
+            }
+        }
+    }
+
+    /// Snapshots carry the tier; restore serves identically.
+    #[test]
+    fn snapshot_round_trips_the_quant_tier() {
+        let vs = random_set(120, 11, 50);
+        for mode in [None, Some(QuantMode::Int8), Some(QuantMode::F16)] {
+            let idx = FlatIndex::with_quant(vs.clone(), mode);
+            let mut buf = Vec::new();
+            idx.encode(&mut SnapshotWriter::inline(&mut buf));
+            let back = FlatIndex::decode(&mut SnapshotReader::new(&buf)).unwrap();
+            assert_eq!(back.quant_mode(), mode);
+            let q: Vec<f32> = (0..11).map(|i| (i as f32).sin()).collect();
+            let (a, b) = (idx.top_k(&q, 9), back.top_k(&q, 9));
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!((x.id, x.score.to_bits()), (y.id, y.score.to_bits()));
+            }
+        }
+    }
+
     /// A patched flat index is bit-identical to a fresh build over the
     /// effective (post-delta) rows — the exactness anchor of the dynamic
-    /// property tests.
+    /// property tests — and keeps its quant mode.
     #[test]
     fn patch_is_bit_identical_to_fresh_build() {
         let vs = random_set(40, 6, 9);
-        let idx = FlatIndex::new(vs.clone());
+        let idx = FlatIndex::with_quant(vs.clone(), Some(QuantMode::Int8));
         let mut rng = Rng::new(10);
         let ins: Vec<f32> = (0..3 * 6).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
         let delta = WorkloadDelta::new(VectorSet::new(ins, 3, 6), vec![0, 17, 39]);

@@ -13,7 +13,7 @@ use super::augment::AugmentedSpace;
 use super::dynamic::{
     self, apply_delta_to_vectors, PatchError, PatchedIndex, Tombstones, WorkloadDelta,
 };
-use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
+use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader, SnapshotWriter};
 use super::topk::{OrdF32, TopK};
 use super::{build_index, IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::util::rng::Rng;
@@ -325,21 +325,21 @@ fn prune(
 /// iterate links in order, so order affects tie-breaking); the augmented
 /// space is recomputed from the stored vectors on decode.
 impl SnapshotCodec for HnswIndex {
-    fn encode(&self, out: &mut Vec<u8>) {
-        snapshot::put_vectors(out, self.space.vectors());
-        snapshot::put_len(out, self.params.m);
-        snapshot::put_len(out, self.params.ef_construction);
-        snapshot::put_len(out, self.params.ef_search);
-        snapshot::put_u32(out, self.entry);
-        snapshot::put_len(out, self.max_level);
+    fn encode(&self, w: &mut SnapshotWriter<'_>) {
+        snapshot::put_vectors(w, self.space.vectors());
+        w.len(self.params.m);
+        w.len(self.params.ef_construction);
+        w.len(self.params.ef_search);
+        w.u32(self.entry);
+        w.len(self.max_level);
         for node in &self.nodes {
-            snapshot::put_len(out, node.links.len());
+            w.len(node.links.len());
             for level in &node.links {
-                snapshot::put_u32s(out, level);
+                w.u32s(level);
             }
         }
         let dead = self.deleted.as_ref().map(Tombstones::dead_ids).unwrap_or_default();
-        snapshot::put_u32s(out, &dead);
+        w.u32s(&dead);
     }
 
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
@@ -465,8 +465,18 @@ impl MipsIndex for HnswIndex {
         IndexKind::Hnsw
     }
 
-    fn write_snapshot(&self, out: &mut Vec<u8>) {
-        self.encode(out);
+    fn write_snapshot(&self, w: &mut SnapshotWriter<'_>) {
+        self.encode(w);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.space.heap_bytes()
+            + self
+                .nodes
+                .iter()
+                .map(|n| n.links.iter().map(|l| l.len() * 4).sum::<usize>())
+                .sum::<usize>()
+            + self.deleted.as_ref().map_or(0, Tombstones::heap_bytes)
     }
 
     /// Insert-only graph growth with deleted-node skip (DESIGN.md §9):
@@ -673,7 +683,7 @@ mod tests {
         let patched = hnsw.patch(&delta, 40).unwrap();
 
         let mut buf = Vec::new();
-        patched.index.write_snapshot(&mut buf);
+        patched.index.write_snapshot(&mut SnapshotWriter::inline(&mut buf));
         let mut r = SnapshotReader::new(&buf);
         let back = HnswIndex::decode(&mut r).unwrap();
         assert!(r.is_exhausted());

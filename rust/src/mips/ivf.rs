@@ -9,7 +9,7 @@ use super::dynamic::{
     self, apply_delta_to_vectors, PatchError, PatchedIndex, Tombstones, WorkloadDelta,
 };
 use super::kmeans::{kmeans, KmeansParams};
-use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader};
+use super::snapshot::{self, malformed, SnapshotCodec, SnapshotError, SnapshotReader, SnapshotWriter};
 use super::topk::TopK;
 use super::{build_index, IndexKind, MipsIndex, Neighbor, VectorSet};
 use crate::runtime::kernels::dot;
@@ -161,16 +161,16 @@ impl IvfIndex {
 /// decode; the store only snapshots patched indices through the compaction
 /// path, where the equivalence tests pin the observable behavior.
 impl SnapshotCodec for IvfIndex {
-    fn encode(&self, out: &mut Vec<u8>) {
-        snapshot::put_vectors(out, self.space.vectors());
-        snapshot::put_len(out, self.nlist);
-        snapshot::put_len(out, self.nprobe);
-        snapshot::put_f32s(out, &self.centroids);
+    fn encode(&self, w: &mut SnapshotWriter<'_>) {
+        snapshot::put_vectors(w, self.space.vectors());
+        w.len(self.nlist);
+        w.len(self.nprobe);
+        w.f32s(&self.centroids);
         for list in &self.lists {
-            snapshot::put_u32s(out, list);
+            w.u32s(list);
         }
         let dead = self.deleted.as_ref().map(Tombstones::dead_ids).unwrap_or_default();
-        snapshot::put_u32s(out, &dead);
+        w.u32s(&dead);
     }
 
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError> {
@@ -274,8 +274,15 @@ impl MipsIndex for IvfIndex {
         IndexKind::Ivf
     }
 
-    fn write_snapshot(&self, out: &mut Vec<u8>) {
-        self.encode(out);
+    fn write_snapshot(&self, w: &mut SnapshotWriter<'_>) {
+        self.encode(w);
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.space.heap_bytes()
+            + self.centroids.len() * 4
+            + self.lists.iter().map(|l| l.len() * 4).sum::<usize>()
+            + self.deleted.as_ref().map_or(0, Tombstones::heap_bytes)
     }
 
     /// Per-list append + tombstone bitmap (DESIGN.md §9): tombstoned rows
@@ -479,7 +486,7 @@ mod tests {
         let patched = ivf.patch(&delta, 30).unwrap();
 
         let mut buf = Vec::new();
-        patched.index.write_snapshot(&mut buf);
+        patched.index.write_snapshot(&mut SnapshotWriter::inline(&mut buf));
         let mut r = SnapshotReader::new(&buf);
         let back = IvfIndex::decode(&mut r).unwrap();
         assert!(r.is_exhausted());

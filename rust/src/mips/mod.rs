@@ -23,6 +23,7 @@ pub mod flat;
 pub mod hnsw;
 pub mod ivf;
 pub mod kmeans;
+pub mod quant;
 pub mod snapshot;
 pub mod topk;
 
@@ -33,7 +34,8 @@ pub use dynamic::{
 pub use flat::FlatIndex;
 pub use hnsw::{HnswIndex, HnswParams};
 pub use ivf::{IvfIndex, IvfParams};
-pub use snapshot::{SnapshotCodec, SnapshotError, SnapshotReader};
+pub use quant::{QuantMode, QuantizedSet};
+pub use snapshot::{SnapshotCodec, SnapshotError, SnapshotReader, SnapshotWriter};
 
 /// Row padding granularity: every row's storage is padded to a multiple of
 /// this many f32 lanes (zero-filled), matching the 16-wide block the
@@ -54,15 +56,51 @@ pub const ROW_LANES: usize = 16;
 /// fingerprints hash — the padded layout never leaks into artifacts.
 #[derive(Clone, Debug)]
 pub struct VectorSet {
-    data: crate::util::align::AlignedVec,
+    data: Storage,
     n: usize,
     d: usize,
     stride: usize,
 }
 
-/// Smallest multiple of [`ROW_LANES`] that fits a `d`-entry row.
+/// Where a [`VectorSet`]'s blocked row data lives (DESIGN.md §12). The
+/// logical view — `row`, `rows`, `to_vec`, fingerprints, snapshots — is
+/// identical across variants; only residency accounting and mutation
+/// behavior differ.
+#[derive(Clone, Debug)]
+enum Storage {
+    /// Heap-owned, 64-byte-aligned buffer — the classic case. Cloning
+    /// deep-copies.
+    Owned(crate::util::align::AlignedVec),
+    /// A window into a memory-mapped v3 artifact section: the OS pages
+    /// rows in on demand and may reclaim them under pressure, so borrowed
+    /// data costs zero heap budget. Cloning clones the `Arc`. Any
+    /// mutation ([`VectorSet::row_mut`], [`VectorSet::append`]) first
+    /// copies into owned storage — mapped artifacts are immutable.
+    Borrowed {
+        region: std::sync::Arc<crate::util::mmap::MmapRegion>,
+        byte_offset: usize,
+        len_f32s: usize,
+    },
+}
+
+impl Storage {
+    #[inline]
+    fn as_slice(&self) -> &[f32] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Borrowed { region, byte_offset, len_f32s } => {
+                region.f32_slice(*byte_offset, *len_f32s)
+            }
+        }
+    }
+}
+
+/// Smallest multiple of [`ROW_LANES`] that fits a `d`-entry row — the
+/// blocked stride both the in-memory layout and the v3 artifact sections
+/// use ([`crate::store::format`]), so a mapped section *is* a valid
+/// `VectorSet` buffer.
 #[inline]
-fn row_stride(d: usize) -> usize {
+pub fn row_stride(d: usize) -> usize {
     d.div_ceil(ROW_LANES) * ROW_LANES
 }
 
@@ -91,7 +129,76 @@ impl VectorSet {
     /// An all-zero set of `n` vectors of dimension `d`.
     pub fn zeros(n: usize, d: usize) -> Self {
         let stride = row_stride(d);
-        VectorSet { data: crate::util::align::AlignedVec::zeroed(n * stride), n, d, stride }
+        VectorSet {
+            data: Storage::Owned(crate::util::align::AlignedVec::zeroed(n * stride)),
+            n,
+            d,
+            stride,
+        }
+    }
+
+    /// Wrap `n` blocked rows of dimension `d` stored at `byte_offset` in
+    /// a mapped artifact region — the zero-copy restore primitive
+    /// (DESIGN.md §12). The bytes must hold `n × row_stride(d)` f32s in
+    /// little-endian blocked layout (each row `d` values + zero padding).
+    /// Errors (never panics) when the window falls outside the region,
+    /// the resulting base pointer is not 4-byte aligned, or the target is
+    /// big-endian (raw LE bit patterns cannot be reinterpreted there —
+    /// the caller falls back to a decode-copy).
+    pub fn borrowed(
+        region: std::sync::Arc<crate::util::mmap::MmapRegion>,
+        byte_offset: usize,
+        n: usize,
+        d: usize,
+    ) -> Result<VectorSet, String> {
+        if cfg!(target_endian = "big") {
+            return Err("borrowed vector storage requires a little-endian target".into());
+        }
+        let stride = row_stride(d);
+        let len_f32s = n
+            .checked_mul(stride)
+            .ok_or_else(|| format!("section shape {n}×{stride} overflows"))?;
+        let need = len_f32s
+            .checked_mul(4)
+            .and_then(|b| b.checked_add(byte_offset))
+            .ok_or_else(|| format!("section window at {byte_offset} overflows"))?;
+        if need > region.len() {
+            return Err(format!(
+                "section window {byte_offset}..{need} exceeds region of {} bytes",
+                region.len()
+            ));
+        }
+        if (region.bytes().as_ptr() as usize + byte_offset) % 4 != 0 {
+            return Err(format!("section at byte offset {byte_offset} is not 4-byte aligned"));
+        }
+        Ok(VectorSet { data: Storage::Borrowed { region, byte_offset, len_f32s }, n, d, stride })
+    }
+
+    /// True when the row data is borrowed from a mapped artifact region
+    /// rather than owned heap.
+    pub fn is_borrowed(&self) -> bool {
+        matches!(self.data, Storage::Borrowed { .. })
+    }
+
+    /// Heap bytes attributable to this set's row storage. Borrowed
+    /// (mmap-backed) data reports 0: its residency belongs to the page
+    /// cache, which the OS reclaims under pressure — exactly what the
+    /// cache's [`crate::store::pager::HeapBudget`] accounting excludes.
+    pub fn heap_bytes(&self) -> usize {
+        match &self.data {
+            Storage::Owned(v) => v.len() * 4,
+            Storage::Borrowed { .. } => 0,
+        }
+    }
+
+    /// Replace borrowed storage with an owned deep copy (no-op when
+    /// already owned) — the copy-on-write step behind every mutation.
+    fn ensure_owned(&mut self) {
+        if let Storage::Borrowed { .. } = self.data {
+            let mut owned = crate::util::align::AlignedVec::zeroed(self.n * self.stride);
+            owned.copy_from_slice(self.data.as_slice());
+            self.data = Storage::Owned(owned);
+        }
     }
 
     /// Borrow row `i` (panics if out of range). The returned slice is
@@ -99,13 +206,18 @@ impl VectorSet {
     /// [`VectorSet::stride`] floats.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
-        &self.data[i * self.stride..i * self.stride + self.d]
+        &self.data.as_slice()[i * self.stride..i * self.stride + self.d]
     }
 
-    /// Mutably borrow row `i` (panics if out of range).
+    /// Mutably borrow row `i` (panics if out of range). Borrowed storage
+    /// is first copied into heap (mapped artifacts stay immutable).
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
-        &mut self.data[i * self.stride..i * self.stride + self.d]
+        self.ensure_owned();
+        match &mut self.data {
+            Storage::Owned(v) => &mut v[i * self.stride..i * self.stride + self.d],
+            Storage::Borrowed { .. } => unreachable!("ensure_owned leaves storage owned"),
+        }
     }
 
     /// Number of vectors n.
@@ -160,9 +272,13 @@ impl VectorSet {
     /// incremental-maintenance primitive behind [`MipsIndex::patch`].
     pub fn append(&mut self, other: &VectorSet) {
         assert_eq!(self.d, other.dim(), "appended rows must match the dimension");
+        self.ensure_owned();
         let old_n = self.n;
         self.n += other.len();
-        self.data.resize_zeroed(self.n * self.stride);
+        match &mut self.data {
+            Storage::Owned(v) => v.resize_zeroed(self.n * self.stride),
+            Storage::Borrowed { .. } => unreachable!("ensure_owned leaves storage owned"),
+        }
         for i in 0..other.len() {
             self.row_mut(old_n + i).copy_from_slice(other.row(i));
         }
@@ -261,7 +377,16 @@ pub trait MipsIndex: Send + Sync {
     /// [`snapshot::decode_index`] dispatch back to the concrete
     /// [`SnapshotCodec`]). This is the object-safe half of the codec seam
     /// the persistent artifact store serializes through (DESIGN.md §7).
-    fn write_snapshot(&self, out: &mut Vec<u8>);
+    /// The writer decides whether bulk vector data is embedded inline or
+    /// spilled to page-aligned artifact sections (DESIGN.md §12).
+    fn write_snapshot(&self, w: &mut SnapshotWriter<'_>);
+
+    /// Approximate heap bytes held by this index's major allocations —
+    /// vector storage, graph/list structure, quantized tiers. Borrowed
+    /// (mmap-backed) vector data counts 0 (see [`VectorSet::heap_bytes`]);
+    /// small fixed-size fields are ignored. Feeds the byte-based L1
+    /// accounting of [`crate::coordinator::IndexCache`].
+    fn heap_bytes(&self) -> usize;
 
     /// Incremental maintenance (DESIGN.md §9): apply `delta` and return
     /// the patched index. Implementations reuse as much of the built
@@ -301,7 +426,11 @@ pub trait MipsIndex: Send + Sync {
 /// no further synchronization.
 pub fn build_index(kind: IndexKind, vs: VectorSet, seed: u64) -> Arc<dyn MipsIndex> {
     match kind {
-        IndexKind::Flat => Arc::new(FlatIndex::new(vs)),
+        // Flat scans pick up the process-wide quantized shortlist tier
+        // (DESIGN.md §12) — a pure accelerator, so the ambient setting is
+        // deliberately *not* part of the workload key: quantized and
+        // unquantized builds are interchangeable by Theorem 3.3 exactness.
+        IndexKind::Flat => Arc::new(FlatIndex::with_quant(vs, quant::ambient_mode())),
         IndexKind::Ivf => Arc::new(IvfIndex::build(vs, IvfParams::paper(), seed)),
         IndexKind::Hnsw => Arc::new(HnswIndex::build(vs, HnswParams::paper(), seed)),
     }

@@ -1,0 +1,537 @@
+//! Quantized shortlist tier: f16/int8 row codes that *shortlist*
+//! candidates cheaply, while exact f32 rows rescore before any selection
+//! (DESIGN.md §12).
+//!
+//! The exponential-mechanism exactness of Theorem 3.3 survives only if
+//! quantization never influences a score the Gumbel layer sees. The tier
+//! therefore works in two phases inside [`super::FlatIndex::top_k`]:
+//!
+//! 1. **Shortlist.** For every row j compute a cheap approximate score
+//!    `approx_j` from the quantized codes plus a *certified* error radius
+//!    `bound_j` with `|approx_j − exact_j| ≤ bound_j`, where `exact_j` is
+//!    what the f32 scoring kernel would return. With `T′` the kth largest
+//!    `approx_j − bound_j`, every row of the true top-k satisfies
+//!    `approx_j + bound_j ≥ T′`, so the shortlist
+//!    `S = {j : approx_j + bound_j ≥ T′}` is a superset of the exact
+//!    winners.
+//! 2. **Rescore.** Scan `S` in ascending id with the exact kernel and the
+//!    exact rows (paged in on demand when the vectors are mmap-borrowed).
+//!    Because the top-k heap's final *set* is invariant under dropping
+//!    rows that can never enter it, and [`super::topk::TopK::into_sorted`]
+//!    orders deterministically by (score, id), the result is bit-identical
+//!    to a full scan — quantization changes work, never output.
+//!
+//! The error radii are conservative closed forms over the query's L1 mass:
+//! int8 covers the ±½-code rounding plus the kernel's float-summation
+//! slack; f16 covers the ≤ 2⁻¹⁰ relative (2⁻²⁴ absolute, subnormal)
+//! representation error the same way. Rows with non-finite values (or
+//! values beyond f16 range in f16 mode) disable the tier at build time —
+//! correctness never depends on it.
+
+use super::snapshot::{malformed, SnapshotError, SnapshotReader, SnapshotWriter};
+use super::VectorSet;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which code width the tier uses — the `pager.quant` config axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// Symmetric per-row int8: one f32 scale per row, 1 byte per value.
+    Int8,
+    /// IEEE binary16 bit patterns: 2 bytes per value, no per-row state.
+    F16,
+}
+
+impl QuantMode {
+    /// Stable one-byte snapshot tag (append-only, like
+    /// [`super::IndexKind::tag`]).
+    pub fn tag(self) -> u8 {
+        match self {
+            QuantMode::Int8 => 1,
+            QuantMode::F16 => 2,
+        }
+    }
+
+    /// Inverse of [`QuantMode::tag`] (`None` for unknown tags).
+    pub fn from_tag(tag: u8) -> Option<QuantMode> {
+        match tag {
+            1 => Some(QuantMode::Int8),
+            2 => Some(QuantMode::F16),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for QuantMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantMode::Int8 => write!(f, "int8"),
+            QuantMode::F16 => write!(f, "f16"),
+        }
+    }
+}
+
+impl std::str::FromStr for QuantMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "int8" => Ok(QuantMode::Int8),
+            "f16" => Ok(QuantMode::F16),
+            _ => Err(format!("unknown quant mode {s:?} (expected one of: off, int8, f16)")),
+        }
+    }
+}
+
+/// Process-wide default quant mode consulted by [`super::build_index`]
+/// (0 = off). Mirrors the kernel-dispatch pin: set once from config at
+/// startup ([`crate::config::PagerConfig`]). Deliberately *not* part of
+/// [`crate::coordinator::WorkloadKey`] — the tier is a pure accelerator,
+/// so builds with and without it are interchangeable.
+static AMBIENT: AtomicU8 = AtomicU8::new(0);
+
+/// Set the process-wide default quant mode for subsequent flat builds.
+pub fn set_ambient_mode(mode: Option<QuantMode>) {
+    AMBIENT.store(mode.map_or(0, QuantMode::tag), Ordering::Relaxed);
+}
+
+/// The process-wide default quant mode (`None` = tier off).
+pub fn ambient_mode() -> Option<QuantMode> {
+    QuantMode::from_tag(AMBIENT.load(Ordering::Relaxed))
+}
+
+/// Largest finite f16 value — rows beyond it cannot be represented and
+/// disable the tier in f16 mode.
+const F16_MAX: f32 = 65504.0;
+
+/// How the codes are stored.
+#[derive(Clone, Debug)]
+enum Repr {
+    /// `codes[j*d + i] = round(v_ji / scales[j])` clamped to ±127.
+    Int8 { codes: Vec<i8>, scales: Vec<f32> },
+    /// IEEE binary16 bit patterns of every value, row-major.
+    F16 { codes: Vec<u16> },
+}
+
+/// The quantized companion of one [`VectorSet`]: per-row codes plus the
+/// machinery to turn them into certified score intervals. Built next to a
+/// [`super::FlatIndex`] and serialized inside its (checksummed) snapshot
+/// payload, so a bit flip in the codes is caught by the artifact envelope
+/// before it could ever skew a shortlist.
+#[derive(Clone, Debug)]
+pub struct QuantizedSet {
+    n: usize,
+    d: usize,
+    repr: Repr,
+}
+
+impl QuantizedSet {
+    /// Quantize `vs`. Returns `None` — tier disabled, full scans serve —
+    /// when the set is empty, holds non-finite values, or (f16 mode)
+    /// values beyond f16 range.
+    pub fn build(vs: &VectorSet, mode: QuantMode) -> Option<QuantizedSet> {
+        let (n, d) = (vs.len(), vs.dim());
+        if n == 0 || d == 0 {
+            return None;
+        }
+        let repr = match mode {
+            QuantMode::Int8 => {
+                let mut codes = Vec::with_capacity(n * d);
+                let mut scales = Vec::with_capacity(n);
+                for row in vs.rows() {
+                    let mut max = 0.0f32;
+                    for &v in row {
+                        if !v.is_finite() {
+                            return None;
+                        }
+                        max = max.max(v.abs());
+                    }
+                    let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+                    scales.push(scale);
+                    let s = scale as f64;
+                    for &v in row {
+                        let c = (v as f64 / s).round().clamp(-127.0, 127.0);
+                        codes.push(c as i8);
+                    }
+                }
+                Repr::Int8 { codes, scales }
+            }
+            QuantMode::F16 => {
+                let mut codes = Vec::with_capacity(n * d);
+                for row in vs.rows() {
+                    for &v in row {
+                        if !v.is_finite() || v.abs() > F16_MAX {
+                            return None;
+                        }
+                        codes.push(f32_to_f16_bits(v));
+                    }
+                }
+                Repr::F16 { codes }
+            }
+        };
+        Some(QuantizedSet { n, d, repr })
+    }
+
+    /// Which code width this set uses.
+    pub fn mode(&self) -> QuantMode {
+        match self.repr {
+            Repr::Int8 { .. } => QuantMode::Int8,
+            Repr::F16 { .. } => QuantMode::F16,
+        }
+    }
+
+    /// Rows covered.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True when no rows are covered.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Row dimension.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Heap bytes held by the codes (the tier is always heap-resident —
+    /// it exists to keep the *exact* rows cold).
+    pub fn heap_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Int8 { codes, scales } => codes.len() + scales.len() * 4,
+            Repr::F16 { codes } => codes.len() * 2,
+        }
+    }
+
+    /// The candidate shortlist for `query` at depth `k`: ascending row
+    /// ids guaranteed (by the interval argument in the module docs) to
+    /// contain every row an exact scan's top-k would keep. Returns `None`
+    /// — caller falls back to the full scan — when the shortlist cannot
+    /// pay for itself (`4k ≥ n`) or shapes mismatch.
+    pub fn shortlist(&self, query: &[f32], k: usize) -> Option<Vec<u32>> {
+        if query.len() != self.d || k == 0 || k.saturating_mul(4) >= self.n {
+            return None;
+        }
+        let l1q: f64 = query.iter().map(|&q| q.abs() as f64).sum();
+        if !l1q.is_finite() {
+            return None;
+        }
+        let eps32 = f32::EPSILON as f64; // 2⁻²³: kernel summation ulp
+        let kernel_slack = 2.0 * (self.d as f64 + 2.0) * eps32;
+
+        let mut intervals = Vec::with_capacity(self.n);
+        match &self.repr {
+            Repr::Int8 { codes, scales } => {
+                // bound = s·‖q‖₁·(½ + 127·kernel_slack): ½ covers code
+                // rounding, the second term the f32 kernel's summation
+                // error (|v| ≤ 127·s bounds each |v·q| term).
+                for j in 0..self.n {
+                    let s = scales[j] as f64;
+                    let mut acc = 0.0f64;
+                    for (c, &q) in codes[j * self.d..(j + 1) * self.d].iter().zip(query) {
+                        acc += (*c as f64) * (q as f64);
+                    }
+                    let approx = s * acc;
+                    let bound = s * l1q * (0.5 + 127.0 * kernel_slack);
+                    intervals.push((approx, bound));
+                }
+            }
+            Repr::F16 { codes } => {
+                // bound = absdot·(2⁻¹⁰ + 2·kernel_slack) + ‖q‖₁·2⁻²³:
+                // the relative term covers f16 representation error and
+                // the kernel's summation error, the absolute term the
+                // subnormal floor.
+                let rel = (0.5f64).powi(10) + 2.0 * kernel_slack;
+                let abs = l1q * (0.5f64).powi(23);
+                for j in 0..self.n {
+                    let mut acc = 0.0f64;
+                    let mut absdot = 0.0f64;
+                    for (h, &q) in codes[j * self.d..(j + 1) * self.d].iter().zip(query) {
+                        let v = f16_bits_to_f32(*h) as f64;
+                        let q = q as f64;
+                        acc += v * q;
+                        absdot += (v * q).abs();
+                    }
+                    intervals.push((acc, absdot * rel + abs));
+                }
+            }
+        }
+
+        // T′ = kth largest lower bound (approx − bound): every exact
+        // winner's interval must reach it from above.
+        let mut lowers: Vec<f64> = intervals.iter().map(|(a, b)| a - b).collect();
+        let kth = self.n - k; // select_nth ascending: kth largest
+        lowers.select_nth_unstable_by(kth, |x, y| x.partial_cmp(y).unwrap_or(std::cmp::Ordering::Equal));
+        let threshold = lowers[kth];
+
+        let ids: Vec<u32> = intervals
+            .iter()
+            .enumerate()
+            .filter(|(_, (a, b))| a + b >= threshold)
+            .map(|(j, _)| j as u32)
+            .collect();
+        Some(ids)
+    }
+}
+
+impl QuantizedSet {
+    /// Append the codes to a snapshot stream (always inline — codes are
+    /// meta, not pageable row data; the envelope checksum covers them).
+    pub fn encode(&self, w: &mut SnapshotWriter<'_>) {
+        w.u8(self.mode().tag());
+        w.len(self.n);
+        w.len(self.d);
+        match &self.repr {
+            Repr::Int8 { codes, scales } => {
+                let raw: Vec<u8> = codes.iter().map(|&c| c as u8).collect();
+                w.blob(&raw);
+                w.f32s(scales);
+            }
+            Repr::F16 { codes } => {
+                let mut raw = Vec::with_capacity(codes.len() * 2);
+                for &h in codes {
+                    raw.extend_from_slice(&h.to_le_bytes());
+                }
+                w.blob(&raw);
+            }
+        }
+    }
+
+    /// Decode codes written by [`QuantizedSet::encode`], validating every
+    /// shape — a corrupted buffer errors, never panics and never yields a
+    /// set that could silently mis-shortlist.
+    pub fn decode(r: &mut SnapshotReader<'_>) -> Result<QuantizedSet, SnapshotError> {
+        let tag = r.u8()?;
+        let mode = QuantMode::from_tag(tag)
+            .ok_or_else(|| malformed(format!("unknown quant mode tag {tag}")))?;
+        let n = r.u64_as_usize()?;
+        let d = r.u64_as_usize()?;
+        let expect = n
+            .checked_mul(d)
+            .ok_or_else(|| malformed(format!("quant shape {n}×{d} overflows")))?;
+        if n == 0 || d == 0 {
+            return Err(malformed("quantized set must be non-empty"));
+        }
+        let repr = match mode {
+            QuantMode::Int8 => {
+                let raw = r.blob()?;
+                if raw.len() != expect {
+                    return Err(malformed(format!(
+                        "int8 codes hold {} values, shape says {expect}",
+                        raw.len()
+                    )));
+                }
+                let codes: Vec<i8> = raw.iter().map(|&b| b as i8).collect();
+                let scales = r.f32s()?;
+                if scales.len() != n {
+                    return Err(malformed(format!(
+                        "{} scales for {n} rows",
+                        scales.len()
+                    )));
+                }
+                if scales.iter().any(|s| !s.is_finite() || *s <= 0.0) {
+                    return Err(malformed("int8 scales must be positive finite"));
+                }
+                Repr::Int8 { codes, scales }
+            }
+            QuantMode::F16 => {
+                let raw = r.blob()?;
+                if raw.len() != expect * 2 {
+                    return Err(malformed(format!(
+                        "f16 codes hold {} bytes, shape says {}",
+                        raw.len(),
+                        expect * 2
+                    )));
+                }
+                let codes: Vec<u16> = raw
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Repr::F16 { codes }
+            }
+        };
+        Ok(QuantizedSet { n, d, repr })
+    }
+}
+
+/// f32 → IEEE binary16 bit pattern, round-to-nearest-even. Hand-rolled:
+/// the offline toolchain has no stable `f16` type.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32 - 127;
+    let mant = bits & 0x007f_ffff;
+    if exp == 128 {
+        // inf/nan — callers reject non-finite inputs; stay total anyway
+        return sign | 0x7c00 | u16::from(mant != 0) << 9;
+    }
+    if exp > 15 {
+        return sign | 0x7c00; // overflow → inf (callers reject > F16_MAX)
+    }
+    if exp >= -14 {
+        // normal f16: keep 10 mantissa bits, round the 13 dropped ones
+        let mant16 = (mant >> 13) as u16;
+        let rest = mant & 0x1fff;
+        let mut h = sign | (((exp + 15) as u16) << 10) | mant16;
+        if rest > 0x1000 || (rest == 0x1000 && mant16 & 1 == 1) {
+            h += 1; // carry may bump the exponent — still correct
+        }
+        h
+    } else if exp >= -25 {
+        // subnormal f16: shift the full significand into place
+        let full = mant | 0x0080_0000;
+        let shift = (13 - 14 - exp) as u32; // 13 + (-14 - exp)
+        let mant16 = (full >> shift) as u16;
+        let rest = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | mant16;
+        if rest > half || (rest == half && mant16 & 1 == 1) {
+            h += 1;
+        }
+        h
+    } else {
+        sign // underflow to ±0
+    }
+}
+
+/// IEEE binary16 bit pattern → f32 (exact: every f16 value is an f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = if h & 0x8000 != 0 { -1.0f32 } else { 1.0 };
+    let exp = ((h >> 10) & 0x1f) as i32;
+    let mant = (h & 0x3ff) as u32;
+    match exp {
+        0 => sign * mant as f32 * (0.5f32).powi(24),
+        31 => {
+            if mant == 0 {
+                sign * f32::INFINITY
+            } else {
+                f32::NAN
+            }
+        }
+        _ => sign * (0x400 | mant) as f32 * (2.0f32).powi(exp - 25),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::kernels;
+    use crate::util::rng::Rng;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    #[test]
+    fn f16_conversion_round_trips_representable_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.5, 0.333251953125, 65504.0, -65504.0, 6.1e-5, 5.96e-8]
+        {
+            let h = f32_to_f16_bits(v);
+            let back = f16_bits_to_f32(h);
+            let rt = f32_to_f16_bits(back);
+            assert_eq!(h, rt, "f16({v}) must be a fixed point");
+            // representation error within the certified radius
+            let err = (v - back).abs();
+            assert!(
+                err as f64 <= (back.abs() as f64) * (0.5f64).powi(10) + (0.5f64).powi(23),
+                "{v}: err {err} exceeds certified radius"
+            );
+        }
+        // exactly representable values survive untouched
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(0.5)), 0.5);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-2.0)), -2.0);
+    }
+
+    /// The load-bearing invariant (Theorem 3.3 exactness): for both
+    /// modes, every row whose *exact kernel score* reaches the exact
+    /// top-k must appear in the shortlist.
+    #[test]
+    fn shortlist_is_a_superset_of_exact_top_k() {
+        let vs = random_set(400, 23, 11);
+        let mut qrng = Rng::new(5);
+        for mode in [QuantMode::Int8, QuantMode::F16] {
+            let qs = QuantizedSet::build(&vs, mode).unwrap();
+            for trial in 0..20 {
+                let q: Vec<f32> =
+                    (0..23).map(|_| qrng.uniform(-1.0, 1.0) as f32).collect();
+                let k = 1 + trial % 16;
+                let short = qs.shortlist(&q, k).unwrap();
+                // exact top-k by kernel score
+                let mut scored: Vec<(f32, u32)> = vs
+                    .rows()
+                    .enumerate()
+                    .map(|(j, row)| (kernels::dot(row, &q), j as u32))
+                    .collect();
+                scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+                for &(_, id) in &scored[..k] {
+                    assert!(
+                        short.binary_search(&id).is_ok(),
+                        "{mode}: exact winner {id} missing from shortlist (k={k})"
+                    );
+                }
+                // ids come back ascending
+                assert!(short.windows(2).all(|w| w[0] < w[1]));
+            }
+        }
+    }
+
+    #[test]
+    fn shortlist_declines_when_it_cannot_pay() {
+        let vs = random_set(40, 8, 3);
+        let qs = QuantizedSet::build(&vs, QuantMode::Int8).unwrap();
+        let q = vec![0.5f32; 8];
+        assert!(qs.shortlist(&q, 10).is_none(), "4k ≥ n: full scan instead");
+        assert!(qs.shortlist(&q, 0).is_none());
+        assert!(qs.shortlist(&[0.5; 7], 4).is_none(), "dim mismatch declines");
+    }
+
+    #[test]
+    fn non_finite_and_overflowing_rows_disable_the_tier() {
+        let mut bad = random_set(10, 4, 7);
+        bad.row_mut(3)[2] = f32::NAN;
+        assert!(QuantizedSet::build(&bad, QuantMode::Int8).is_none());
+        assert!(QuantizedSet::build(&bad, QuantMode::F16).is_none());
+
+        let mut big = random_set(10, 4, 8);
+        big.row_mut(0)[0] = 1.0e6; // beyond f16 range, fine for int8
+        assert!(QuantizedSet::build(&big, QuantMode::F16).is_none());
+        assert!(QuantizedSet::build(&big, QuantMode::Int8).is_some());
+
+        assert!(QuantizedSet::build(&VectorSet::zeros(0, 4), QuantMode::Int8).is_none());
+    }
+
+    #[test]
+    fn codes_round_trip_and_reject_corruption() {
+        let vs = random_set(30, 9, 21);
+        for mode in [QuantMode::Int8, QuantMode::F16] {
+            let qs = QuantizedSet::build(&vs, mode).unwrap();
+            let mut buf = Vec::new();
+            qs.encode(&mut SnapshotWriter::inline(&mut buf));
+            let back = QuantizedSet::decode(&mut SnapshotReader::new(&buf)).unwrap();
+            assert_eq!(back.mode(), mode);
+            assert_eq!((back.len(), back.dim()), (30, 9));
+            // identical shortlists (codes are bit-identical through disk)
+            let q = vec![0.25f32; 9];
+            assert_eq!(qs.shortlist(&q, 4), back.shortlist(&q, 4));
+
+            // truncation at every prefix is a typed error, never a panic
+            for cut in 0..buf.len() {
+                assert!(QuantizedSet::decode(&mut SnapshotReader::new(&buf[..cut])).is_err());
+            }
+        }
+        // unknown mode tag
+        let mut buf = Vec::new();
+        buf.push(9);
+        assert!(QuantizedSet::decode(&mut SnapshotReader::new(&buf)).is_err());
+    }
+
+    #[test]
+    fn ambient_mode_round_trips() {
+        assert_eq!(ambient_mode(), None);
+        set_ambient_mode(Some(QuantMode::F16));
+        assert_eq!(ambient_mode(), Some(QuantMode::F16));
+        set_ambient_mode(None);
+        assert_eq!(ambient_mode(), None);
+    }
+}

@@ -107,21 +107,182 @@ pub fn put_u32s(out: &mut Vec<u8>, vs: &[u32]) {
 }
 
 // ---------------------------------------------------------------------------
+// section-aware write cursor
+// ---------------------------------------------------------------------------
+
+/// One spilled bulk-data section produced by a paged [`SnapshotWriter`]:
+/// the blocked (stride-padded) little-endian f32 row data of one
+/// [`VectorSet`], destined for a page-aligned slot in a v3 artifact
+/// ([`crate::store::format`]). The padded layout *is* the on-disk layout,
+/// so a mapped section can be borrowed as vector storage with zero copies.
+pub struct SectionBuf {
+    /// Rows in the section.
+    pub rows: usize,
+    /// Logical dimension d (stride is derived: [`super::row_stride`]).
+    pub dim: usize,
+    /// `rows × row_stride(dim)` f32s, little-endian, padding zero-filled.
+    pub bytes: Vec<u8>,
+}
+
+impl SectionBuf {
+    fn from_vectors(vs: &VectorSet) -> SectionBuf {
+        let stride = super::row_stride(vs.dim());
+        let mut bytes = Vec::with_capacity(vs.len() * stride * 4);
+        for row in vs.rows() {
+            for &v in row {
+                bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+            bytes.resize(bytes.len() + (stride - vs.dim()) * 4, 0);
+        }
+        SectionBuf { rows: vs.len(), dim: vs.dim(), bytes }
+    }
+}
+
+/// A write cursor that owns the inline-vs-paged decision for bulk vector
+/// data (DESIGN.md §12). Codecs call [`SnapshotWriter::vectors`] without
+/// knowing the destination:
+///
+/// * [`SnapshotWriter::inline`] embeds the data in the meta stream —
+///   the delta-artifact and in-memory encoding.
+/// * [`SnapshotWriter::paged`] spills each vector set to a [`SectionBuf`]
+///   and writes only a section reference, so the store can lay the raw
+///   rows out page-aligned and restore them by mmap.
+///
+/// Scalar writes always go to the meta stream.
+pub struct SnapshotWriter<'a> {
+    out: &'a mut Vec<u8>,
+    sections: Option<&'a mut Vec<SectionBuf>>,
+}
+
+impl<'a> SnapshotWriter<'a> {
+    /// A writer that embeds everything in `out` (no sections).
+    pub fn inline(out: &'a mut Vec<u8>) -> Self {
+        SnapshotWriter { out, sections: None }
+    }
+
+    /// A writer that spills bulk vector data to `sections`, leaving
+    /// references in `out`.
+    pub fn paged(out: &'a mut Vec<u8>, sections: &'a mut Vec<SectionBuf>) -> Self {
+        SnapshotWriter { out, sections: Some(sections) }
+    }
+
+    /// Append a `u8` to the meta stream.
+    pub fn u8(&mut self, v: u8) {
+        put_u8(self.out, v);
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        put_u32(self.out, v);
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        put_u64(self.out, v);
+    }
+
+    /// Append a `u128`, little-endian.
+    pub fn u128(&mut self, v: u128) {
+        put_u128(self.out, v);
+    }
+
+    /// Append a `usize` as a `u64`.
+    pub fn len(&mut self, v: usize) {
+        put_len(self.out, v);
+    }
+
+    /// Append an `f32` slice (raw bit patterns), length-prefixed.
+    pub fn f32s(&mut self, vs: &[f32]) {
+        put_f32s(self.out, vs);
+    }
+
+    /// Append a `u32` slice, length-prefixed.
+    pub fn u32s(&mut self, vs: &[u32]) {
+        put_u32s(self.out, vs);
+    }
+
+    /// Append raw bytes, length-prefixed.
+    pub fn blob(&mut self, bytes: &[u8]) {
+        put_len(self.out, bytes.len());
+        self.out.extend_from_slice(bytes);
+    }
+
+    /// Append a [`VectorSet`]: tag 0 + inline shape/data (inline mode),
+    /// or tag 1 + the index of a freshly spilled section (paged mode).
+    /// Either way only the logical n·d values ever influence the bytes —
+    /// padding is deterministically zero, so identical content encodes
+    /// identically.
+    pub fn vectors(&mut self, vs: &VectorSet) {
+        match &mut self.sections {
+            None => {
+                put_u8(self.out, 0);
+                put_len(self.out, vs.len());
+                put_len(self.out, vs.dim());
+                put_len(self.out, vs.len() * vs.dim());
+                for row in vs.rows() {
+                    for &v in row {
+                        self.out.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                }
+            }
+            Some(sections) => {
+                put_u8(self.out, 1);
+                put_u64(self.out, sections.len() as u64);
+                sections.push(SectionBuf::from_vectors(vs));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // checked read cursor
 // ---------------------------------------------------------------------------
 
 /// A bounds-checked read cursor over a snapshot buffer. Every accessor
 /// returns [`SnapshotError::Truncated`] instead of panicking when the
-/// buffer runs short.
+/// buffer runs short. A reader constructed with
+/// [`SnapshotReader::with_sections`] additionally resolves the section
+/// references a paged [`SnapshotWriter`] wrote — each pre-restored
+/// [`VectorSet`] (borrowed from a mapped artifact, or decoded into heap)
+/// is handed out exactly once.
 pub struct SnapshotReader<'a> {
     bytes: &'a [u8],
     pos: usize,
+    sections: Vec<Option<VectorSet>>,
 }
 
 impl<'a> SnapshotReader<'a> {
-    /// Wrap a buffer for reading from its start.
+    /// Wrap a buffer for reading from its start (no sections — any
+    /// section reference in the stream is malformed).
     pub fn new(bytes: &'a [u8]) -> Self {
-        SnapshotReader { bytes, pos: 0 }
+        SnapshotReader { bytes, pos: 0, sections: Vec::new() }
+    }
+
+    /// Wrap a meta buffer plus the artifact's pre-restored sections, in
+    /// table order.
+    pub fn with_sections(bytes: &'a [u8], sections: Vec<VectorSet>) -> Self {
+        SnapshotReader { bytes, pos: 0, sections: sections.into_iter().map(Some).collect() }
+    }
+
+    /// Hand out section `idx` (once). Out-of-range and double references
+    /// are malformed — a corrupted meta stream, never a panic.
+    fn take_section(&mut self, idx: usize) -> Result<VectorSet, SnapshotError> {
+        match self.sections.get_mut(idx) {
+            Some(slot) => slot
+                .take()
+                .ok_or_else(|| malformed(format!("section {idx} referenced twice"))),
+            None => Err(malformed(format!(
+                "section reference {idx} out of range ({} sections)",
+                self.sections.len()
+            ))),
+        }
+    }
+
+    /// True when every section has been consumed by a reference — a
+    /// payload that leaves sections orphaned described a different
+    /// artifact layout than the file holds.
+    pub fn all_sections_consumed(&self) -> bool {
+        self.sections.iter().all(Option::is_none)
     }
 
     /// Bytes not yet consumed.
@@ -204,6 +365,13 @@ impl<'a> SnapshotReader<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
     }
+
+    /// Read a length-prefixed raw byte run (the counterpart of
+    /// [`SnapshotWriter::blob`]).
+    pub fn blob(&mut self) -> Result<&'a [u8], SnapshotError> {
+        let n = self.read_len(1)?;
+        self.take(n)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -222,47 +390,50 @@ impl<'a> SnapshotReader<'a> {
 /// corrupted buffer returns an error, never panics and never fabricates a
 /// plausible-but-wrong structure.
 pub trait SnapshotCodec: Sized {
-    /// Append this structure's snapshot payload to `out`.
-    fn encode(&self, out: &mut Vec<u8>);
+    /// Append this structure's snapshot payload to `w` — scalars to the
+    /// meta stream, bulk vector data wherever the writer's mode puts it.
+    fn encode(&self, w: &mut SnapshotWriter<'_>);
 
     /// Reconstruct a structure from `r`, validating as it reads.
     fn decode(r: &mut SnapshotReader<'_>) -> Result<Self, SnapshotError>;
 }
 
-/// Encode a [`VectorSet`] (shape + raw f32 bit patterns). Only the logical
-/// n·d values are written, row by row — the blocked layout's padding never
-/// reaches disk, so these bytes are identical across layout changes.
-pub fn put_vectors(out: &mut Vec<u8>, vs: &VectorSet) {
-    put_len(out, vs.len());
-    put_len(out, vs.dim());
-    put_len(out, vs.len() * vs.dim());
-    for row in vs.rows() {
-        for &v in row {
-            out.extend_from_slice(&v.to_bits().to_le_bytes());
-        }
-    }
+/// Encode a [`VectorSet`] through `w` — see [`SnapshotWriter::vectors`].
+pub fn put_vectors(w: &mut SnapshotWriter<'_>, vs: &VectorSet) {
+    w.vectors(vs);
 }
 
-/// Decode a [`VectorSet`], validating `data.len() == n × d`.
+/// Decode a [`VectorSet`] written by [`SnapshotWriter::vectors`]: tag 0
+/// reads the inline shape + data (validating `data.len() == n × d`),
+/// tag 1 resolves a pre-restored artifact section.
 pub fn read_vectors(r: &mut SnapshotReader<'_>) -> Result<VectorSet, SnapshotError> {
-    let n = r.u64_as_usize()?;
-    let d = r.u64_as_usize()?;
-    let data = r.f32s()?;
-    if n.checked_mul(d) != Some(data.len()) {
-        return Err(malformed(format!(
-            "vector set shape {n}×{d} does not match {} stored values",
-            data.len()
-        )));
+    match r.u8()? {
+        0 => {
+            let n = r.u64_as_usize()?;
+            let d = r.u64_as_usize()?;
+            let data = r.f32s()?;
+            if n.checked_mul(d) != Some(data.len()) {
+                return Err(malformed(format!(
+                    "vector set shape {n}×{d} does not match {} stored values",
+                    data.len()
+                )));
+            }
+            Ok(VectorSet::new(data, n, d))
+        }
+        1 => {
+            let idx = r.u64_as_usize()?;
+            r.take_section(idx)
+        }
+        tag => Err(malformed(format!("unknown vector storage tag {tag}"))),
     }
-    Ok(VectorSet::new(data, n, d))
 }
 
 /// Encode any built index behind the [`MipsIndex`] trait: a one-byte
 /// [`IndexKind`] tag followed by the concrete codec's payload
 /// ([`MipsIndex::write_snapshot`] dispatches to it).
-pub fn encode_index(index: &dyn MipsIndex, out: &mut Vec<u8>) {
-    put_u8(out, index.kind().tag());
-    index.write_snapshot(out);
+pub fn encode_index(index: &dyn MipsIndex, w: &mut SnapshotWriter<'_>) {
+    w.u8(index.kind().tag());
+    index.write_snapshot(w);
 }
 
 /// Decode an index encoded by [`encode_index`]: read the kind tag, then
@@ -331,26 +502,70 @@ mod tests {
     fn vectors_round_trip_and_validate_shape() {
         let vs = random_set(7, 3, 1);
         let mut buf = Vec::new();
-        put_vectors(&mut buf, &vs);
+        put_vectors(&mut SnapshotWriter::inline(&mut buf), &vs);
         let back = read_vectors(&mut SnapshotReader::new(&buf)).unwrap();
         assert_eq!((back.len(), back.dim()), (7, 3));
         for (a, b) in vs.to_vec().iter().zip(back.to_vec().iter()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
-        // the encoding equals the pre-blocked-layout flat encoding:
-        // n, d, then one length-prefixed n·d f32 run
-        let mut flat = Vec::new();
+        // the inline encoding is the storage tag + the layout-independent
+        // flat encoding: n, d, then one length-prefixed n·d f32 run
+        let mut flat = vec![0u8];
         put_len(&mut flat, vs.len());
         put_len(&mut flat, vs.dim());
         put_f32s(&mut flat, &vs.to_vec());
         assert_eq!(buf, flat, "padding must not leak into snapshot bytes");
 
         // inconsistent shape vs data length is malformed, not a panic
-        let mut bad = Vec::new();
+        let mut bad = vec![0u8];
         put_len(&mut bad, 4);
         put_len(&mut bad, 3);
         put_f32s(&mut bad, &[0.0; 5]);
         assert!(read_vectors(&mut SnapshotReader::new(&bad)).is_err());
+    }
+
+    /// Paged mode spills blocked row data to sections and writes only a
+    /// reference; a sectioned reader resolves it back — and refuses
+    /// out-of-range or duplicate references and sectionless readers.
+    #[test]
+    fn paged_vectors_round_trip_through_sections() {
+        let vs = random_set(5, 17, 4);
+        let mut meta = Vec::new();
+        let mut sections = Vec::new();
+        {
+            let mut w = SnapshotWriter::paged(&mut meta, &mut sections);
+            w.vectors(&vs);
+        }
+        assert_eq!(sections.len(), 1);
+        let sec = &sections[0];
+        assert_eq!((sec.rows, sec.dim), (5, 17));
+        let stride = crate::mips::row_stride(17);
+        assert_eq!(sec.bytes.len(), 5 * stride * 4, "blocked layout on disk");
+
+        // reconstruct the section as an owned VectorSet (what the decode
+        // restore path does) and resolve the reference
+        let mut vals = Vec::with_capacity(5 * 17);
+        for row in 0..5 {
+            for c in sec.bytes[row * stride * 4..(row * stride + 17) * 4].chunks_exact(4) {
+                vals.push(f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())));
+            }
+        }
+        let restored_section = VectorSet::new(vals, 5, 17);
+        let mut r = SnapshotReader::with_sections(&meta, vec![restored_section]);
+        let back = read_vectors(&mut r).unwrap();
+        assert!(r.all_sections_consumed());
+        for (a, b) in vs.to_vec().iter().zip(back.to_vec().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // a sectionless reader must reject the reference, not panic
+        assert!(read_vectors(&mut SnapshotReader::new(&meta)).is_err());
+        // a double reference is malformed
+        let mut twice = meta.clone();
+        twice.extend_from_slice(&meta);
+        let mut r = SnapshotReader::with_sections(&twice, vec![VectorSet::zeros(5, 17)]);
+        assert!(read_vectors(&mut r).is_ok());
+        assert!(read_vectors(&mut r).is_err(), "section handed out once only");
     }
 
     #[test]
@@ -359,7 +574,7 @@ mod tests {
         for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
             let built = build_index(kind, vs.clone(), 9);
             let mut buf = Vec::new();
-            encode_index(built.as_ref(), &mut buf);
+            encode_index(built.as_ref(), &mut SnapshotWriter::inline(&mut buf));
             let mut r = SnapshotReader::new(&buf);
             let restored = decode_index(&mut r).unwrap();
             assert!(r.is_exhausted(), "{kind}: trailing bytes");

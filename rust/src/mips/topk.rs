@@ -71,14 +71,19 @@ impl TopK {
         self.heap.is_empty()
     }
 
-    /// Drain into a descending-score Vec<Neighbor>.
+    /// Drain into a descending-score Vec<Neighbor>, ascending id among
+    /// equal scores. The id tie-break makes the output a pure function of
+    /// the retained *set*: the quantized shortlist path pushes a subset of
+    /// the rows a full scan pushes, so the heap's internal order differs,
+    /// and an unstable score-only sort could permute equal-scored
+    /// neighbors between the two paths.
     pub fn into_sorted(self) -> Vec<Neighbor> {
         let mut v: Vec<Neighbor> = self
             .heap
             .into_iter()
             .map(|std::cmp::Reverse((OrdF32(score), id))| Neighbor { id, score })
             .collect();
-        v.sort_unstable_by(|a, b| b.score.total_cmp(&a.score));
+        v.sort_unstable_by(|a, b| b.score.total_cmp(&a.score).then(a.id.cmp(&b.id)));
         v
     }
 }
@@ -128,6 +133,41 @@ mod tests {
         assert_eq!(t.threshold(), Some(1.0));
         t.push(2, 3.0);
         assert_eq!(t.threshold(), Some(3.0));
+    }
+
+    /// The invariant the shortlist-rescore path leans on: scanning any
+    /// ascending-id superset of the rows whose score reaches the k-th
+    /// largest yields the identical retained set, and the id tie-break
+    /// makes the drained order identical too.
+    #[test]
+    fn subset_scans_retain_the_same_set_with_ties() {
+        let scores = [5.0f32, 3.0, 5.0, 9.0, 5.0, 1.0, 9.0, 5.0];
+        let k = 3;
+        let full = {
+            let mut t = TopK::new(k);
+            for (i, s) in scores.iter().enumerate() {
+                t.push(i as u32, *s);
+            }
+            t.into_sorted()
+        };
+        // threshold = 3rd largest = 5.0; every superset of {score >= 5.0}
+        // must reproduce `full` exactly
+        for extra in [vec![], vec![1], vec![5], vec![1, 5]] {
+            let mut ids: Vec<u32> = (0..scores.len() as u32)
+                .filter(|i| scores[*i as usize] >= 5.0)
+                .collect();
+            ids.extend(extra);
+            ids.sort_unstable();
+            let mut t = TopK::new(k);
+            for id in ids {
+                t.push(id, scores[id as usize]);
+            }
+            let sub = t.into_sorted();
+            assert_eq!(full.len(), sub.len());
+            for (a, b) in full.iter().zip(&sub) {
+                assert_eq!((a.id, a.score.to_bits()), (b.id, b.score.to_bits()));
+            }
+        }
     }
 
     #[test]

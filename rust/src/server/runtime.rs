@@ -14,11 +14,11 @@
 
 use super::budget::{AdmissionError, TenantBudget, TenantSpend};
 use super::queue::{BoundedQueue, PushError, QueuePolicy};
-use crate::config::{CacheConfig, Config, StoreConfig};
+use crate::config::{CacheConfig, Config, PagerConfig, StoreConfig};
 use crate::coordinator::pool::finalize_serving_metrics;
 use crate::coordinator::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
-use crate::store::TieredIndexCache;
+use crate::store::{HeapBudget, PagerSettings, TieredIndexCache};
 use crate::workloads::WorkloadRegistry;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
@@ -44,6 +44,12 @@ pub struct ServerConfig {
     /// Persistent artifact store directory (DESIGN.md §7); `None` keeps
     /// warm serving in-memory only.
     pub store_dir: Option<PathBuf>,
+    /// Heap ceiling for L1-resident index data (DESIGN.md §12);
+    /// mmap-borrowed rows count as zero against it.
+    pub heap_budget: HeapBudget,
+    /// How store artifacts are restored: zero-copy mmap paging vs heap
+    /// decode (DESIGN.md §12).
+    pub pager: PagerSettings,
 }
 
 impl Default for ServerConfig {
@@ -55,6 +61,8 @@ impl Default for ServerConfig {
             eps_per_tenant: None,
             cache_capacity: 8,
             store_dir: None,
+            heap_budget: HeapBudget::unlimited(),
+            pager: PagerSettings::default(),
         }
     }
 }
@@ -82,6 +90,7 @@ impl ServerConfig {
             Some(v) => Some(v),
             None => cfg.get("server.eps_per_tenant")?,
         };
+        let pager = PagerConfig::from_config(cfg)?;
         Ok(ServerConfig {
             workers: cfg.or("workers", cfg.or("server.workers", d.workers)?)?,
             queue_depth: cfg
@@ -90,6 +99,8 @@ impl ServerConfig {
             eps_per_tenant,
             cache_capacity: CacheConfig::from_config(cfg)?.capacity,
             store_dir: StoreConfig::from_config(cfg)?.dir.map(PathBuf::from),
+            heap_budget: pager.heap_budget(),
+            pager: pager.settings(),
         })
     }
 }
@@ -186,15 +197,26 @@ impl Server {
         let cache: Option<Arc<TieredIndexCache>> =
             if cfg.cache_capacity > 0 || cfg.store_dir.is_some() {
                 let tiered = match &cfg.store_dir {
-                    Some(dir) => TieredIndexCache::with_store(cfg.cache_capacity, dir)
-                        .unwrap_or_else(|e| {
-                            eprintln!(
-                                "warning: cannot open artifact store {dir:?} ({e:#}); \
-                                 serving in-memory only"
-                            );
-                            TieredIndexCache::memory_only(cfg.cache_capacity)
-                        }),
-                    None => TieredIndexCache::memory_only(cfg.cache_capacity),
+                    Some(dir) => TieredIndexCache::with_settings(
+                        cfg.cache_capacity,
+                        cfg.heap_budget,
+                        dir,
+                        cfg.pager,
+                    )
+                    .unwrap_or_else(|e| {
+                        eprintln!(
+                            "warning: cannot open artifact store {dir:?} ({e:#}); \
+                             serving in-memory only"
+                        );
+                        TieredIndexCache::memory_only_with_budget(
+                            cfg.cache_capacity,
+                            cfg.heap_budget,
+                        )
+                    }),
+                    None => TieredIndexCache::memory_only_with_budget(
+                        cfg.cache_capacity,
+                        cfg.heap_budget,
+                    ),
                 };
                 Some(Arc::new(tiered))
             } else {
@@ -539,5 +561,16 @@ mod tests {
         assert_eq!((d.workers, d.queue_depth), (4, 64));
         assert_eq!(d.policy, QueuePolicy::Block);
         assert_eq!(d.eps_per_tenant, None);
+        assert_eq!(d.heap_budget, HeapBudget::unlimited());
+        assert_eq!(d.pager, PagerSettings::default());
+
+        // the [pager] section flows into the server's tier settings, with
+        // the --heap-budget-mb shorthand winning over the section value
+        let mut cfg =
+            Config::parse("[pager]\nenabled = false\nheap_budget_mb = 2\n").unwrap();
+        cfg.apply_overrides(["--heap-budget-mb=5"]).unwrap();
+        let s = ServerConfig::from_config(&cfg).unwrap();
+        assert!(!s.pager.enabled && s.pager.verify);
+        assert_eq!(s.heap_budget.limit(), Some(5 << 20));
     }
 }

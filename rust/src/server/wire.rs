@@ -17,6 +17,9 @@
 //!   not a transient state — no Retry-After)
 //! * [`SubmitError::QueueFull`] under [`QueuePolicy::Reject`] → **429**
 //!   with `Retry-After`
+//! * a drained per-connection token bucket ([`WireConfig::rate_limit`])
+//!   → **429** with the seconds until the next token as `Retry-After`,
+//!   before parsing or submission (zero ε touched, keep-alive survives)
 //! * [`SubmitError::Draining`] / connection overflow → **503** with
 //!   `Retry-After`
 //!
@@ -65,6 +68,13 @@ pub struct WireConfig {
     pub retry_after_secs: u64,
     /// Per-request body cap (bytes).
     pub max_body_bytes: usize,
+    /// Per-connection sustained request rate (requests/second; 0 turns
+    /// the limiter off). Enforced as a token bucket per connection, so
+    /// one chatty client cannot starve the connection workers.
+    pub rate_limit: f64,
+    /// Token-bucket capacity: requests one connection may issue
+    /// back-to-back before the sustained rate applies.
+    pub rate_burst: u32,
 }
 
 impl Default for WireConfig {
@@ -77,14 +87,16 @@ impl Default for WireConfig {
             tenants: 4,
             retry_after_secs: 1,
             max_body_bytes: HttpLimits::default().max_body_bytes,
+            rate_limit: 0.0,
+            rate_burst: 8,
         }
     }
 }
 
 impl WireConfig {
     /// Read the `[wire]` section, honoring the CLI shorthands `--listen`,
-    /// `--max-conns`, `--conn-workers` and `--tenants` (shorthands win
-    /// over section values).
+    /// `--max-conns`, `--conn-workers`, `--tenants` and `--rate-limit`
+    /// (shorthands win over section values).
     ///
     /// ```text
     /// [wire]
@@ -93,6 +105,8 @@ impl WireConfig {
     /// conn_workers = 8
     /// auth = "s3cret:0,t0ken:1"   # token:tenant pairs; unset = dev tokens
     /// retry_after_secs = 1
+    /// rate_limit = 0.0            # per-conn requests/second (0 = off)
+    /// rate_burst = 8              # back-to-back allowance per connection
     /// ```
     pub fn from_config(cfg: &Config) -> anyhow::Result<Self> {
         let d = WireConfig::default();
@@ -116,6 +130,8 @@ impl WireConfig {
             tenants: cfg.or("tenants", cfg.or("wire.tenants", d.tenants)?)?,
             retry_after_secs: cfg.or("wire.retry_after_secs", d.retry_after_secs)?,
             max_body_bytes: cfg.or("wire.max_body_bytes", d.max_body_bytes)?,
+            rate_limit: cfg.or("rate-limit", cfg.or("wire.rate_limit", d.rate_limit)?)?,
+            rate_burst: cfg.or("wire.rate_burst", d.rate_burst)?,
         })
     }
 
@@ -143,6 +159,39 @@ struct WireShared {
     shutdown_signal: (Mutex<bool>, Condvar),
     retry_after_secs: u64,
     limits: HttpLimits,
+    rate_limit: f64,
+    rate_burst: u32,
+}
+
+/// Per-connection token bucket: `rate` tokens/second sustained, `burst`
+/// capacity, one token per request. An empty bucket reports the seconds
+/// (rounded up, at least 1) until the next token accrues — the value the
+/// 429 response carries as `Retry-After`.
+struct TokenBucket {
+    tokens: f64,
+    burst: f64,
+    rate: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    fn new(rate: f64, burst: u32) -> TokenBucket {
+        let burst = f64::from(burst.max(1));
+        TokenBucket { tokens: burst, burst, rate, last: Instant::now() }
+    }
+
+    fn admit(&mut self) -> Result<(), u64> {
+        let now = Instant::now();
+        self.tokens = (self.tokens + now.duration_since(self.last).as_secs_f64() * self.rate)
+            .min(self.burst);
+        self.last = now;
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            Ok(())
+        } else {
+            Err(((1.0 - self.tokens) / self.rate).ceil().max(1.0) as u64)
+        }
+    }
 }
 
 impl WireShared {
@@ -195,6 +244,8 @@ impl WireServer {
                 max_body_bytes: cfg.max_body_bytes,
                 ..HttpLimits::default()
             },
+            rate_limit: cfg.rate_limit,
+            rate_burst: cfg.rate_burst,
         });
 
         let accept_thread = {
@@ -318,6 +369,8 @@ fn serve_connection(shared: &WireShared, stream: TcpStream) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
+    let mut bucket =
+        (shared.rate_limit > 0.0).then(|| TokenBucket::new(shared.rate_limit, shared.rate_burst));
     loop {
         // Idle phase: wait for the first byte of a request (or EOF), so
         // keep-alive idle time never counts against request parsing and
@@ -339,9 +392,27 @@ fn serve_connection(shared: &WireShared, stream: TcpStream) {
             Ok(req) => {
                 shared.meter(|m| m.inc("bytes_in", req.bytes_read as u64));
                 let keep_alive = req.keep_alive();
-                match handle_request(shared, &req, &mut writer) {
-                    Ok(()) => {}
-                    Err(_) => return, // write side failed; connection unusable
+                // Rate limit before routing: a drained bucket sheds the
+                // request with 429 + the exact wait, spends no ε, and
+                // keeps the connection alive for the retry.
+                let outcome = match bucket.as_mut().map(TokenBucket::admit) {
+                    Some(Err(secs)) => {
+                        shared.meter(|m| m.inc("rate_limited", 1));
+                        respond(
+                            shared,
+                            &mut writer,
+                            429,
+                            &[("retry-after", secs.to_string())],
+                            b"per-connection rate limit exceeded; retry later\n",
+                        )
+                        .map(|written| {
+                            shared.meter(|m| m.inc("bytes_out", written as u64));
+                        })
+                    }
+                    _ => handle_request(shared, &req, &mut writer),
+                };
+                if outcome.is_err() {
+                    return; // write side failed; connection unusable
                 }
                 if !keep_alive || shared.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -734,6 +805,21 @@ mod tests {
     }
 
     #[test]
+    fn token_bucket_admits_burst_then_meters_with_wait_hint() {
+        let mut b = TokenBucket::new(0.5, 2);
+        assert!(b.admit().is_ok());
+        assert!(b.admit().is_ok());
+        let secs = b.admit().expect_err("bucket drained after the burst");
+        assert!(secs >= 1, "Retry-After must be at least one second");
+        // backdate the bucket by 4 seconds: 2 tokens accrue at 0.5/s
+        let Some(earlier) = b.last.checked_sub(Duration::from_secs(4)) else { return };
+        b.last = earlier;
+        assert!(b.admit().is_ok());
+        assert!(b.admit().is_ok());
+        assert!(b.admit().is_err(), "refill is capped at the burst size");
+    }
+
+    #[test]
     fn wire_config_from_config_parses_auth_and_shorthands() {
         let mut cfg = Config::parse(
             "[wire]\nlisten = \"127.0.0.1:9999\"\nmax_conns = 7\n\
@@ -749,8 +835,17 @@ mod tests {
         let w = WireConfig::from_config(&cfg).unwrap();
         assert_eq!((w.listen.as_str(), w.max_conns), ("0.0.0.0:80", 3));
 
+        // rate-limit knobs: section values, with the --rate-limit shorthand
+        let mut cfg =
+            Config::parse("[wire]\nrate_limit = 2.5\nrate_burst = 3\n").unwrap();
+        let w = WireConfig::from_config(&cfg).unwrap();
+        assert_eq!((w.rate_limit, w.rate_burst), (2.5, 3));
+        cfg.apply_overrides(["--rate-limit=0.5"]).unwrap();
+        assert_eq!(WireConfig::from_config(&cfg).unwrap().rate_limit, 0.5);
+
         let d = WireConfig::from_config(&Config::new()).unwrap();
         assert_eq!(d.listen, "127.0.0.1:0");
+        assert_eq!((d.rate_limit, d.rate_burst), (0.0, 8), "limiter defaults off");
         assert_eq!(d.auth_map().len(), 4, "dev tokens tenant-0..3");
         assert_eq!(d.auth_map().get("tenant-2"), Some(&2));
 

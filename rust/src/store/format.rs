@@ -1,42 +1,68 @@
 //! On-disk artifact format: a versioned, checksummed envelope around one
-//! index snapshot (DESIGN.md §7).
+//! index snapshot (DESIGN.md §7, §12).
+//!
+//! Version 3 splits an artifact into a small **meta** stream (index
+//! structure: lists, links, quantized codes — everything the decoder
+//! walks) and zero or more page-aligned **sections** holding raw blocked
+//! f32 row data. The section layout on disk is exactly the in-memory
+//! blocked layout of [`crate::mips::VectorSet`], so a mapped file can be
+//! borrowed as vector storage with zero copies (`store::pager`).
 //!
 //! ```text
 //! offset  size  field
 //! 0       8     magic  "FMWEMIDX"
-//! 8       4     format version (u32 LE, currently 2)
+//! 8       4     format version (u32 LE, currently 3)
 //! 12      16    WorkloadKey.fingerprint (u128 LE)
 //! 28      1     WorkloadKey.kind tag (IndexKind::tag)
 //! 29      8     WorkloadKey.shards (u64 LE)
 //! 37      8     WorkloadKey.generation (u64 LE)
-//! 45      8     payload length (u64 LE)
-//! 53      16    FNV-128 payload checksum (u128 LE)
-//! 69      ..    payload — a mips/lazy snapshot (see `encode_payload`)
+//! 45      8     meta payload length (u64 LE)
+//! 53      16    FNV-128 meta checksum (u128 LE)
+//! 69      8     section count (u64 LE)
+//! 77      ..    section table — 40 bytes per entry:
+//!                 offset u64 (from file start, multiple of 4096)
+//!                 rows u64, dim u64
+//!                 FNV-128 section checksum u128
+//! ..      ..    meta payload — a mips/lazy snapshot (see `encode_payload`)
+//! ..      ..    zero padding to the first section offset
+//! ..      ..    sections: rows × row_stride(dim) f32s each, LE, blocked,
+//!               page-aligned, in table order, back to back (page-padded)
 //! ```
 //!
 //! Dynamic workloads (DESIGN.md §9) add a second artifact species: compact
 //! **delta artifacts** ([`encode_delta_artifact`]) carrying one
 //! [`crate::mips::WorkloadDelta`] under their own magic `"FMWEMDLT"`, keyed by the
-//! workload family fingerprint plus the generation the delta produces. A
-//! restore at generation g decodes the newest snapshot at g′ ≤ g and
-//! replays the deltas g′+1..=g.
+//! workload family fingerprint plus the generation the delta produces.
+//! Deltas are small and short-lived, so their vector payloads stay inline
+//! (no sections) and their header keeps the v2 shape.
 //!
 //! The header carries the full [`WorkloadKey`] so an artifact is
 //! self-describing: [`decode_artifact`] refuses to hand back an index for
 //! a key other than the one the caller asked for, even if a file was
 //! renamed or the content-addressed name collided. Every failure mode —
-//! bad magic, unknown version, truncation, checksum mismatch, malformed
-//! payload — is a typed [`StoreError`], never a panic, so the tiered
-//! cache can always fall back to a rebuild.
+//! bad magic, unknown version, truncation, checksum mismatch, misaligned
+//! or overlapping sections, malformed payload — is a typed [`StoreError`],
+//! never a panic, so the tiered cache can always fall back to a rebuild.
+//!
+//! Integrity: the envelope checksum covers the meta stream (including any
+//! quantized code payloads, which always encode inline); each section
+//! carries its own checksum in the table. A flipped bit in the table
+//! itself either breaks a structural invariant (alignment, bounds,
+//! ordering) or makes the named section fail its checksum — both end in a
+//! typed error and a rebuild, never a silently wrong index.
 //!
 //! The codec is hand-rolled on the vendored-offline discipline (DESIGN.md
 //! §3 — no serde/bincode) and endianness-pinned (everything
-//! little-endian), so artifacts are portable across hosts.
+//! little-endian), so artifacts are portable across hosts; only the
+//! zero-copy *borrow* of a mapped section is gated to little-endian hosts
+//! (`VectorSet::borrowed`), with the copying decode path as the portable
+//! fallback.
 
 use crate::coordinator::cache::{CachedIndex, WorkloadKey};
 use crate::lazy::ShardSet;
-use crate::mips::snapshot::{self, SnapshotReader};
-use crate::mips::{IndexKind, SnapshotCodec, SnapshotError};
+use crate::mips::snapshot::{self, SectionBuf, SnapshotReader, SnapshotWriter};
+use crate::mips::{row_stride, IndexKind, SnapshotCodec, SnapshotError, VectorSet};
+use crate::util::mmap::PAGE_SIZE;
 use std::fmt;
 use std::sync::Arc;
 
@@ -47,13 +73,20 @@ pub const MAGIC: [u8; 8] = *b"FMWEMIDX";
 pub const DELTA_MAGIC: [u8; 8] = *b"FMWEMDLT";
 
 /// Current artifact format version. Bump on any layout change; old
-/// versions are rejected (and rebuilt), never reinterpreted. Version 2
-/// added the workload generation to the envelope key and the tombstone
-/// state to the index payloads.
-pub const FORMAT_VERSION: u32 = 2;
+/// versions are rejected (and rebuilt), never reinterpreted. Version 3
+/// moved bulk vector data out of the payload stream into page-aligned
+/// sections so restores can borrow a mapped file instead of decoding.
+pub const FORMAT_VERSION: u32 = 3;
 
-/// Fixed header size in bytes (everything before the payload).
+/// Fixed header size in bytes: everything before the section count.
 pub const HEADER_LEN: usize = 8 + 4 + 16 + 1 + 8 + 8 + 8 + 16;
+
+/// Bytes per section-table entry: offset, rows, dim, checksum.
+pub const SECTION_DESC_LEN: usize = 8 + 8 + 8 + 16;
+
+/// Alignment of every section offset — one OS page, so a mapped section
+/// can be handed to the kernels without copying.
+pub const SECTION_ALIGN: usize = PAGE_SIZE;
 
 /// Why an artifact failed to decode.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -64,7 +97,8 @@ pub enum StoreError {
     BadVersion(u32),
     /// The file ended before the declared structure did.
     Truncated,
-    /// The payload checksum does not match — bit rot or a torn write.
+    /// A meta or section checksum does not match — bit rot or a torn
+    /// write.
     ChecksumMismatch,
     /// The artifact is valid but describes a different [`WorkloadKey`]
     /// than the one requested.
@@ -81,7 +115,7 @@ impl fmt::Display for StoreError {
                 write!(f, "unsupported artifact format version {v} (expected {FORMAT_VERSION})")
             }
             StoreError::Truncated => write!(f, "artifact truncated"),
-            StoreError::ChecksumMismatch => write!(f, "artifact payload checksum mismatch"),
+            StoreError::ChecksumMismatch => write!(f, "artifact checksum mismatch"),
             StoreError::KeyMismatch => write!(f, "artifact describes a different workload key"),
             StoreError::Snapshot(e) => write!(f, "artifact payload: {e}"),
         }
@@ -94,6 +128,10 @@ impl From<SnapshotError> for StoreError {
     fn from(e: SnapshotError) -> Self {
         StoreError::Snapshot(e)
     }
+}
+
+fn structural(msg: impl Into<String>) -> StoreError {
+    StoreError::Snapshot(SnapshotError::Malformed(msg.into()))
 }
 
 /// FNV-128 over a byte slice: two independent FNV-1a passes (different
@@ -113,66 +151,132 @@ pub fn fnv128(bytes: &[u8]) -> u128 {
     ((h1 as u128) << 64) | h2 as u128
 }
 
-/// Encode one cache entry as a snapshot payload (no envelope): a one-byte
-/// mono/sharded tag, then the nested index snapshot.
-pub fn encode_payload(value: &CachedIndex) -> Vec<u8> {
-    let mut out = Vec::new();
-    match value {
-        CachedIndex::Mono(index) => {
-            snapshot::put_u8(&mut out, 0);
-            snapshot::encode_index(index.as_ref(), &mut out);
-        }
-        CachedIndex::Sharded(set) => {
-            snapshot::put_u8(&mut out, 1);
-            set.encode(&mut out);
-        }
-    }
-    out
+/// One section-table entry, as validated by [`open_artifact`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionDesc {
+    /// Byte offset of the section from the start of the file; always a
+    /// multiple of [`SECTION_ALIGN`].
+    pub offset: usize,
+    /// Rows in the section.
+    pub rows: usize,
+    /// Logical dimension (on-disk stride is `row_stride(dim)`).
+    pub dim: usize,
+    /// FNV-128 over the section's `rows × row_stride(dim) × 4` bytes.
+    pub checksum: u128,
 }
 
-/// Decode a payload produced by [`encode_payload`], consuming the whole
-/// buffer (trailing bytes are treated as corruption).
-pub fn decode_payload(payload: &[u8]) -> Result<CachedIndex, StoreError> {
-    let mut r = SnapshotReader::new(payload);
+impl SectionDesc {
+    /// Section length in bytes (validated non-overflowing at open time).
+    pub fn byte_len(&self) -> usize {
+        self.rows * row_stride(self.dim) * 4
+    }
+}
+
+/// A validated artifact, opened in place: the embedded key, the meta
+/// stream, and the section table. Structural invariants (bounds,
+/// alignment, ordering, meta checksum) have been checked; section
+/// *checksums* have not — call [`verify_sections`] (the decode path always
+/// does; the mmap pager does unless `pager.verify` is off).
+pub struct ArtifactView<'a> {
+    /// The workload key the artifact claims to serve.
+    pub key: WorkloadKey,
+    /// The meta payload (index structure, quantized codes, section refs).
+    pub meta: &'a [u8],
+    /// Section descriptors in table order.
+    pub sections: Vec<SectionDesc>,
+}
+
+/// Encode one cache entry as a paged snapshot: a one-byte mono/sharded
+/// tag plus the nested index snapshot in the returned meta stream, bulk
+/// vector data spilled to the returned sections.
+pub fn encode_payload(value: &CachedIndex) -> (Vec<u8>, Vec<SectionBuf>) {
+    let mut meta = Vec::new();
+    let mut sections = Vec::new();
+    let mut w = SnapshotWriter::paged(&mut meta, &mut sections);
+    match value {
+        CachedIndex::Mono(index) => {
+            w.u8(0);
+            snapshot::encode_index(index.as_ref(), &mut w);
+        }
+        CachedIndex::Sharded(set) => {
+            w.u8(1);
+            set.encode(&mut w);
+        }
+    }
+    (meta, sections)
+}
+
+/// Decode a meta payload produced by [`encode_payload`] against its
+/// pre-restored sections (owned copies on the decode path, mmap-borrowed
+/// on the pager path). Consumes the whole meta buffer and every section —
+/// leftovers of either kind are corruption.
+pub fn decode_payload(
+    meta: &[u8],
+    sections: Vec<VectorSet>,
+) -> Result<CachedIndex, StoreError> {
+    let mut r = SnapshotReader::with_sections(meta, sections);
     let value = match r.u8()? {
         0 => CachedIndex::Mono(snapshot::decode_index(&mut r)?),
         1 => CachedIndex::Sharded(Arc::new(ShardSet::decode(&mut r)?)),
-        tag => {
-            return Err(StoreError::Snapshot(SnapshotError::Malformed(format!(
-                "unknown cache entry tag {tag}"
-            ))))
-        }
+        tag => return Err(structural(format!("unknown cache entry tag {tag}"))),
     };
     if !r.is_exhausted() {
-        return Err(StoreError::Snapshot(SnapshotError::Malformed(format!(
-            "{} trailing bytes after payload",
-            r.remaining()
-        ))));
+        return Err(structural(format!("{} trailing bytes after payload", r.remaining())));
+    }
+    if !r.all_sections_consumed() {
+        return Err(structural("payload left artifact sections unreferenced"));
     }
     Ok(value)
 }
 
-/// Seal `value` into a complete artifact file image for `key`:
-/// header (magic, version, key, length, checksum) + payload.
+/// Seal `value` into a complete artifact file image for `key`: header,
+/// section table, meta payload, then each section zero-padded out to a
+/// page boundary.
 pub fn encode_artifact(key: &WorkloadKey, value: &CachedIndex) -> Vec<u8> {
-    let payload = encode_payload(value);
-    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    let (meta, sections) = encode_payload(value);
+
+    // lay the sections out page-aligned after the prefix
+    let prefix_len = HEADER_LEN + 8 + sections.len() * SECTION_DESC_LEN + meta.len();
+    let mut offsets = Vec::with_capacity(sections.len());
+    let mut cursor = prefix_len;
+    for sec in &sections {
+        let offset = cursor.next_multiple_of(SECTION_ALIGN);
+        offsets.push(offset);
+        cursor = offset + sec.bytes.len();
+    }
+
+    let mut out = Vec::with_capacity(cursor);
     out.extend_from_slice(&MAGIC);
     snapshot::put_u32(&mut out, FORMAT_VERSION);
     snapshot::put_u128(&mut out, key.fingerprint);
     snapshot::put_u8(&mut out, key.kind.tag());
     snapshot::put_u64(&mut out, key.shards as u64);
     snapshot::put_u64(&mut out, key.generation);
-    snapshot::put_u64(&mut out, payload.len() as u64);
-    snapshot::put_u128(&mut out, fnv128(&payload));
-    out.extend_from_slice(&payload);
+    snapshot::put_u64(&mut out, meta.len() as u64);
+    snapshot::put_u128(&mut out, fnv128(&meta));
+    snapshot::put_u64(&mut out, sections.len() as u64);
+    for (sec, &offset) in sections.iter().zip(&offsets) {
+        snapshot::put_u64(&mut out, offset as u64);
+        snapshot::put_u64(&mut out, sec.rows as u64);
+        snapshot::put_u64(&mut out, sec.dim as u64);
+        snapshot::put_u128(&mut out, fnv128(&sec.bytes));
+    }
+    out.extend_from_slice(&meta);
+    for (sec, &offset) in sections.iter().zip(&offsets) {
+        out.resize(offset, 0);
+        out.extend_from_slice(&sec.bytes);
+    }
     out
 }
 
-/// Open an artifact image: verify magic, version, length and checksum,
-/// and return the embedded [`WorkloadKey`] plus the payload slice.
-pub fn open_artifact(bytes: &[u8]) -> Result<(WorkloadKey, &[u8]), StoreError> {
-    if bytes.len() < HEADER_LEN {
+/// Open an artifact image in place: verify magic, version, bounds, the
+/// meta checksum and every structural section invariant (page alignment,
+/// non-overlap, ascending order, exact file length), and return the
+/// validated [`ArtifactView`]. Section payload checksums are *not*
+/// verified here — see [`verify_sections`].
+pub fn open_artifact(bytes: &[u8]) -> Result<ArtifactView<'_>, StoreError> {
+    let fixed = HEADER_LEN + 8;
+    if bytes.len() < fixed {
         return if bytes.len() >= MAGIC.len() && bytes[..MAGIC.len()] != MAGIC {
             Err(StoreError::BadMagic)
         } else {
@@ -182,7 +286,7 @@ pub fn open_artifact(bytes: &[u8]) -> Result<(WorkloadKey, &[u8]), StoreError> {
     if bytes[..MAGIC.len()] != MAGIC {
         return Err(StoreError::BadMagic);
     }
-    let mut r = SnapshotReader::new(&bytes[MAGIC.len()..HEADER_LEN]);
+    let mut r = SnapshotReader::new(&bytes[MAGIC.len()..fixed]);
     let version = r.u32()?;
     if version != FORMAT_VERSION {
         return Err(StoreError::BadVersion(version));
@@ -191,29 +295,118 @@ pub fn open_artifact(bytes: &[u8]) -> Result<(WorkloadKey, &[u8]), StoreError> {
     let kind_tag = r.u8()?;
     let shards = r.u64()?;
     let generation = r.u64()?;
-    let payload_len = r.u64()?;
-    let checksum = r.u128()?;
-
+    let meta_len = r.u64()?;
+    let meta_checksum = r.u128()?;
+    let section_count = r.u64()?;
     let kind = IndexKind::from_tag(kind_tag).ok_or(StoreError::KeyMismatch)?;
-    let payload = &bytes[HEADER_LEN..];
-    if payload.len() as u64 != payload_len {
-        return Err(StoreError::Truncated);
-    }
-    if fnv128(payload) != checksum {
+
+    // section table bounds
+    let table_bytes = (section_count as usize)
+        .checked_mul(SECTION_DESC_LEN)
+        .filter(|&t| section_count <= usize::MAX as u64 && t <= bytes.len() - fixed)
+        .ok_or(StoreError::Truncated)?;
+    let meta_start = fixed + table_bytes;
+    let meta_end = meta_start
+        .checked_add(meta_len as usize)
+        .filter(|&e| meta_len <= usize::MAX as u64 && e <= bytes.len())
+        .ok_or(StoreError::Truncated)?;
+    let meta = &bytes[meta_start..meta_end];
+    if fnv128(meta) != meta_checksum {
         return Err(StoreError::ChecksumMismatch);
     }
+
+    let mut tr = SnapshotReader::new(&bytes[fixed..meta_start]);
+    let mut sections = Vec::with_capacity(section_count as usize);
+    let mut prev_end = meta_end;
+    for i in 0..section_count {
+        let offset = tr.u64_as_usize()?;
+        let rows = tr.u64_as_usize()?;
+        let dim = tr.u64_as_usize()?;
+        let checksum = tr.u128()?;
+        if rows == 0 || dim == 0 {
+            return Err(structural(format!("section {i} is empty ({rows}×{dim})")));
+        }
+        if offset % SECTION_ALIGN != 0 {
+            return Err(structural(format!("section {i} offset {offset} not page-aligned")));
+        }
+        let len = rows
+            .checked_mul(row_stride(dim))
+            .and_then(|f| f.checked_mul(4))
+            .ok_or_else(|| structural(format!("section {i} size overflows")))?;
+        if offset < prev_end {
+            return Err(structural(format!(
+                "section {i} at {offset} overlaps preceding bytes (end {prev_end})"
+            )));
+        }
+        let Some(end) = offset.checked_add(len).filter(|&e| e <= bytes.len()) else {
+            return Err(StoreError::Truncated);
+        };
+        prev_end = end;
+        sections.push(SectionDesc { offset, rows, dim, checksum });
+    }
+    // the file must end exactly where the structure does — bytes past the
+    // last section (or past the meta, with no sections) are corruption
+    if bytes.len() != prev_end {
+        return Err(structural(format!(
+            "{} bytes past the end of the artifact structure",
+            bytes.len() - prev_end
+        )));
+    }
+
     let key = WorkloadKey { fingerprint, kind, shards: shards as usize, generation };
-    Ok((key, payload))
+    Ok(ArtifactView { key, meta, sections })
+}
+
+/// The raw bytes of one section (bounds were validated at open time).
+pub fn section_slice<'a>(bytes: &'a [u8], desc: &SectionDesc) -> &'a [u8] {
+    &bytes[desc.offset..desc.offset + desc.byte_len()]
+}
+
+/// Verify every section's checksum against the table. The decode path
+/// always runs this; the mmap pager runs it eagerly at open time unless
+/// `pager.verify` is disabled (DESIGN.md §12 — verification walks every
+/// page once, which trades the lazy page-in win for earlier corruption
+/// detection).
+pub fn verify_sections(bytes: &[u8], view: &ArtifactView<'_>) -> Result<(), StoreError> {
+    for desc in &view.sections {
+        if fnv128(section_slice(bytes, desc)) != desc.checksum {
+            return Err(StoreError::ChecksumMismatch);
+        }
+    }
+    Ok(())
+}
+
+/// Copy every section out of the file image into owned, heap-backed
+/// [`VectorSet`]s (the portable decode-restore path).
+pub fn owned_sections(bytes: &[u8], view: &ArtifactView<'_>) -> Vec<VectorSet> {
+    view.sections
+        .iter()
+        .map(|desc| {
+            let stride = row_stride(desc.dim);
+            let raw = section_slice(bytes, desc);
+            let mut vals = Vec::with_capacity(desc.rows * desc.dim);
+            for row in 0..desc.rows {
+                let start = row * stride * 4;
+                for c in raw[start..start + desc.dim * 4].chunks_exact(4) {
+                    vals.push(f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())));
+                }
+            }
+            VectorSet::new(vals, desc.rows, desc.dim)
+        })
+        .collect()
 }
 
 /// Decode a complete artifact for `expect`: open the envelope, refuse a
-/// key mismatch, then decode the payload.
+/// key mismatch, verify every section checksum, copy the sections into
+/// heap storage and decode the payload.
 pub fn decode_artifact(bytes: &[u8], expect: &WorkloadKey) -> Result<CachedIndex, StoreError> {
-    let (key, payload) = open_artifact(bytes)?;
-    if key != *expect {
+    let view = open_artifact(bytes)?;
+    if view.key != *expect {
         return Err(StoreError::KeyMismatch);
     }
-    decode_payload(payload)
+    verify_sections(bytes, &view)?;
+    let sections = owned_sections(bytes, &view);
+    decode_payload(view.meta, sections)
 }
 
 /// Fixed delta-artifact header size: magic, version, fingerprint,
@@ -222,14 +415,15 @@ pub const DELTA_HEADER_LEN: usize = 8 + 4 + 16 + 8 + 8 + 16;
 
 /// Seal one workload delta into a complete delta-artifact file image:
 /// header (magic, version, family fingerprint, produced generation,
-/// length, checksum) + the delta snapshot payload.
+/// length, checksum) + the delta snapshot payload. Deltas keep their
+/// vectors inline — they are small, short-lived, and compacted away.
 pub fn encode_delta_artifact(
     fingerprint: u128,
     generation: u64,
     delta: &crate::mips::WorkloadDelta,
 ) -> Vec<u8> {
     let mut payload = Vec::new();
-    delta.encode(&mut payload);
+    delta.encode(&mut SnapshotWriter::inline(&mut payload));
     let mut out = Vec::with_capacity(DELTA_HEADER_LEN + payload.len());
     out.extend_from_slice(&DELTA_MAGIC);
     snapshot::put_u32(&mut out, FORMAT_VERSION);
@@ -324,8 +518,13 @@ mod tests {
         ];
         for (key, value) in cases {
             let bytes = encode_artifact(&key, &value);
-            let (got_key, _) = open_artifact(&bytes).unwrap();
-            assert_eq!(got_key, key);
+            let view = open_artifact(&bytes).unwrap();
+            assert_eq!(view.key, key);
+            assert!(!view.sections.is_empty(), "vector data must be paged out");
+            for desc in &view.sections {
+                assert_eq!(desc.offset % SECTION_ALIGN, 0);
+            }
+            verify_sections(&bytes, &view).unwrap();
             let restored = decode_artifact(&bytes, &key).unwrap();
             match (&value, &restored) {
                 (CachedIndex::Mono(a), CachedIndex::Mono(b)) => {
@@ -346,12 +545,12 @@ mod tests {
     fn wrong_key_is_refused() {
         let bytes = encode_artifact(&mono_key(), &mono_value());
         let other = WorkloadKey { fingerprint: 999, ..mono_key() };
-        assert_eq!(decode_artifact(&bytes, &other), Err(StoreError::KeyMismatch));
+        assert!(matches!(decode_artifact(&bytes, &other), Err(StoreError::KeyMismatch)));
         // a different generation of the same family is also a mismatch —
         // serving an older generation as the requested one would be a
         // stale serve
         let stale = mono_key().at_generation(3);
-        assert_eq!(decode_artifact(&bytes, &stale), Err(StoreError::KeyMismatch));
+        assert!(matches!(decode_artifact(&bytes, &stale), Err(StoreError::KeyMismatch)));
     }
 
     #[test]
@@ -391,12 +590,17 @@ mod tests {
         // bad magic
         let mut bad = good.clone();
         bad[0] ^= 0xFF;
-        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::BadMagic));
+        assert!(matches!(decode_artifact(&bad, &key), Err(StoreError::BadMagic)));
 
         // wrong version
         let mut bad = good.clone();
         bad[8] = 99;
-        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::BadVersion(99)));
+        assert!(matches!(decode_artifact(&bad, &key), Err(StoreError::BadVersion(99))));
+
+        // a v2 artifact (version field only) is rejected, not reinterpreted
+        let mut v2 = good.clone();
+        v2[8] = 2;
+        assert!(matches!(decode_artifact(&v2, &key), Err(StoreError::BadVersion(2))));
 
         // truncation at every prefix length must error, never panic
         for cut in [0, 4, HEADER_LEN - 1, HEADER_LEN + 3, good.len() - 1] {
@@ -406,15 +610,72 @@ mod tests {
             );
         }
 
-        // flipped payload byte -> checksum mismatch
+        // flipped last byte lands in the final section -> checksum mismatch
         let mut bad = good.clone();
         let last = bad.len() - 1;
         bad[last] ^= 0x01;
-        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::ChecksumMismatch));
+        assert!(matches!(decode_artifact(&bad, &key), Err(StoreError::ChecksumMismatch)));
 
-        // trailing garbage changes the length -> truncated
+        // flipped meta byte -> meta checksum mismatch
+        let meta_start = {
+            let view = open_artifact(&good).unwrap();
+            HEADER_LEN + 8 + view.sections.len() * SECTION_DESC_LEN
+        };
+        let mut bad = good.clone();
+        bad[meta_start] ^= 0x01;
+        assert!(matches!(decode_artifact(&bad, &key), Err(StoreError::ChecksumMismatch)));
+
+        // trailing garbage past the last section is structural corruption
         let mut bad = good.clone();
         bad.push(0);
-        assert_eq!(decode_artifact(&bad, &key), Err(StoreError::Truncated));
+        assert!(decode_artifact(&bad, &key).is_err());
+    }
+
+    #[test]
+    fn section_table_violations_are_rejected() {
+        let key = mono_key();
+        let good = encode_artifact(&key, &mono_value());
+        let table_start = HEADER_LEN + 8;
+
+        // misaligned offset: add 1 to the first section offset
+        let mut bad = good.clone();
+        let raw: [u8; 8] = bad[table_start..table_start + 8].try_into().unwrap();
+        let offset = u64::from_le_bytes(raw);
+        bad[table_start..table_start + 8].copy_from_slice(&(offset + 1).to_le_bytes());
+        assert!(matches!(open_artifact(&bad), Err(StoreError::Snapshot(_))));
+
+        // offset pointing before the meta end overlaps the prefix
+        let mut bad = good.clone();
+        bad[table_start..table_start + 8].copy_from_slice(&0u64.to_le_bytes());
+        assert!(open_artifact(&bad).is_err());
+
+        // offset past the file end is truncation
+        let mut bad = good.clone();
+        let huge =
+            (good.len() as u64).next_multiple_of(SECTION_ALIGN as u64) + SECTION_ALIGN as u64;
+        bad[table_start..table_start + 8].copy_from_slice(&huge.to_le_bytes());
+        assert!(open_artifact(&bad).is_err());
+
+        // absurd section count cannot allocate or scan past the file
+        let mut bad = good.clone();
+        bad[HEADER_LEN..HEADER_LEN + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(matches!(open_artifact(&bad), Err(StoreError::Truncated)));
+
+        // zero-row section geometry is malformed
+        let mut bad = good.clone();
+        bad[table_start + 8..table_start + 16].copy_from_slice(&0u64.to_le_bytes());
+        assert!(open_artifact(&bad).is_err());
+    }
+
+    #[test]
+    fn decode_payload_refuses_orphaned_sections() {
+        // a meta stream that never references its section is a layout
+        // mismatch, not a silent leak
+        let key = mono_key();
+        let bytes = encode_artifact(&key, &mono_value());
+        let view = open_artifact(&bytes).unwrap();
+        let mut sections = owned_sections(&bytes, &view);
+        sections.push(VectorSet::new(vec![0.0; 8], 2, 4));
+        assert!(decode_payload(view.meta, sections).is_err());
     }
 }

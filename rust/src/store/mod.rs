@@ -26,10 +26,12 @@
 
 pub mod format;
 pub mod manifest;
+pub mod pager;
 pub mod tiered;
 
 pub use format::StoreError;
 pub use manifest::{DeltaEntry, Manifest, ManifestEntry, MANIFEST_FILE};
+pub use pager::{HeapBudget, PagerSettings};
 pub use tiered::{TieredEvent, TieredIndexCache};
 
 use crate::coordinator::cache::{CachedIndex, WorkloadKey};
@@ -53,6 +55,12 @@ pub struct StoreStats {
     /// Loads that found an artifact but failed to decode it (counted in
     /// addition to a miss; the stale catalog entry is dropped).
     pub load_failures: u64,
+    /// Successful loads served by mapping the artifact and borrowing its
+    /// sections (DESIGN.md §12) — zero heap for the row data.
+    pub mmap_restores: u64,
+    /// Successful loads that decoded the artifact into heap — the pager
+    /// was disabled, or mapping failed on this platform.
+    pub decode_restores: u64,
     /// Artifacts written.
     pub writes: u64,
     /// Total artifact bytes written (excluding manifest rewrites).
@@ -96,20 +104,30 @@ struct DiskInner {
 /// consistent — are serialized under it.
 pub struct DiskStore {
     dir: PathBuf,
+    pager: PagerSettings,
     inner: Mutex<DiskInner>,
 }
 
 impl DiskStore {
     /// Open (creating if needed) the store directory and load its
-    /// manifest. A corrupt manifest degrades to empty — the artifacts are
-    /// self-describing, so the catalog repopulates as jobs re-save.
+    /// manifest, restoring artifacts with the default [`PagerSettings`]
+    /// (mmap paging on, eager section verification on). A corrupt
+    /// manifest degrades to empty — the artifacts are self-describing, so
+    /// the catalog repopulates as jobs re-save.
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(dir, PagerSettings::default())
+    }
+
+    /// Open the store with explicit pager settings (the `[pager]` config
+    /// section).
+    pub fn open_with(dir: impl AsRef<Path>, pager: PagerSettings) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating store directory {dir:?}"))?;
         let manifest = Manifest::load_or_empty(dir.join(MANIFEST_FILE));
         Ok(DiskStore {
             dir,
+            pager,
             inner: Mutex::new(DiskInner { manifest, stats: StoreStats::default() }),
         })
     }
@@ -117,6 +135,11 @@ impl DiskStore {
     /// The store's root directory.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// How this store restores artifacts.
+    pub fn pager_settings(&self) -> PagerSettings {
+        self.pager
     }
 
     /// Statistics snapshot.
@@ -130,12 +153,13 @@ impl DiskStore {
         self.inner.lock().unwrap().manifest.get(key).is_some()
     }
 
-    /// Load and decode the artifact for `key`. Returns the restored entry,
-    /// the build cost recorded at save time (what a promotion saves), and
-    /// the decode wall-clock (what it cost instead). Any failure — no
-    /// catalog entry, unreadable file, bad envelope, malformed payload —
-    /// returns `None` after dropping the stale catalog entry; the caller
-    /// rebuilds.
+    /// Load the artifact for `key` — by mmap paging when the pager is
+    /// enabled (decode-into-heap only as the platform fallback), plain
+    /// decode otherwise. Returns the restored entry, the build cost
+    /// recorded at save time (what a promotion saves), and the restore
+    /// wall-clock (what it cost instead). Any corruption — unreadable
+    /// file, bad envelope, checksum mismatch, malformed payload — returns
+    /// `None` after dropping the stale catalog entry; the caller rebuilds.
     pub fn load(&self, key: &WorkloadKey) -> Option<(CachedIndex, Duration, Duration)> {
         let entry = {
             let mut g = self.inner.lock().unwrap();
@@ -149,17 +173,40 @@ impl DiskStore {
         };
         let path = self.dir.join(&entry.file);
         let t0 = Instant::now();
-        let decoded = std::fs::read(&path)
-            .map_err(|e| e.to_string())
-            .and_then(|bytes| {
-                format::decode_artifact(&bytes, key).map_err(|e| e.to_string())
-            });
-        match decoded {
-            Ok(value) => {
+        let restored: Result<(CachedIndex, bool), String> = if self.pager.enabled {
+            match pager::mmap_artifact(&path, key, self.pager.verify) {
+                Ok(value) => Ok((value, true)),
+                // the artifact itself is bad — decoding the same bytes
+                // would fail identically, so fall through to the drop path
+                Err(pager::PagerFailure::Artifact(e)) => Err(e.to_string()),
+                // mapping is unavailable (platform, syscall, endianness):
+                // the copying decode path restores the same entry
+                Err(pager::PagerFailure::Map(_)) => std::fs::read(&path)
+                    .map_err(|e| e.to_string())
+                    .and_then(|bytes| {
+                        format::decode_artifact(&bytes, key).map_err(|e| e.to_string())
+                    })
+                    .map(|value| (value, false)),
+            }
+        } else {
+            std::fs::read(&path)
+                .map_err(|e| e.to_string())
+                .and_then(|bytes| {
+                    format::decode_artifact(&bytes, key).map_err(|e| e.to_string())
+                })
+                .map(|value| (value, false))
+        };
+        match restored {
+            Ok((value, mmapped)) => {
                 let took = t0.elapsed();
                 let mut g = self.inner.lock().unwrap();
                 g.stats.hits += 1;
                 g.stats.promote_time += took;
+                if mmapped {
+                    g.stats.mmap_restores += 1;
+                } else {
+                    g.stats.decode_restores += 1;
+                }
                 Some((value, Duration::from_micros(entry.build_us), took))
             }
             Err(e) => {
@@ -433,6 +480,12 @@ mod tests {
         assert_eq!((s.hits, s.misses, s.writes, s.artifacts), (1, 1, 1, 1));
         assert_eq!(s.bytes_written, bytes);
         assert_eq!(s.load_failures, 0);
+        #[cfg(unix)]
+        assert_eq!(
+            (s.mmap_restores, s.decode_restores),
+            (1, 0),
+            "with the pager on, a restore maps instead of decoding"
+        );
 
         // a second process (fresh DiskStore) sees the same artifact
         let store2 = DiskStore::open(&dir).unwrap();
@@ -488,6 +541,20 @@ mod tests {
         assert_eq!(chains.len(), 1);
         assert_eq!(chains[0].0, fp);
         assert_eq!(chains[0].1.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pager_disabled_store_restores_by_decoding() {
+        let dir = scratch_dir("pager-off");
+        let store =
+            DiskStore::open_with(&dir, PagerSettings { enabled: false, verify: true }).unwrap();
+        let key = WorkloadKey { fingerprint: 9, kind: IndexKind::Flat, shards: 1, generation: 0 };
+        let value = CachedIndex::Mono(build_index(IndexKind::Flat, random_set(20, 3, 4), 1));
+        store.save(&key, &value, Duration::ZERO).unwrap();
+        assert!(store.load(&key).is_some());
+        let s = store.stats();
+        assert_eq!((s.mmap_restores, s.decode_restores), (0, 1));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

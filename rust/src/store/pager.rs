@@ -1,0 +1,267 @@
+//! Zero-copy artifact paging: restore an index over a memory-mapped v3
+//! artifact instead of decoding it into heap (DESIGN.md §12).
+//!
+//! A v3 artifact ([`super::format`]) keeps its bulk row data in
+//! page-aligned sections whose on-disk layout is byte-identical to the
+//! in-memory blocked layout of [`VectorSet`]. [`mmap_artifact`] therefore
+//! maps the whole file once ([`MmapRegion`]), validates the envelope, and
+//! hands the decoder *borrowed* vector storage pointing straight into the
+//! mapping — the OS pages rows in on first touch, and resident pages are
+//! the kernel's to reclaim, not heap the process must budget. Only the
+//! small meta structures (IVF lists, HNSW links, quantized codes, the
+//! augmented-space norms recomputed from the rows) live on the heap.
+//!
+//! Exactness: a borrowed [`VectorSet`] serves `row(i)` as the same f32
+//! bit patterns the owned copy would hold (the format is little-endian
+//! and the blocked stride matches), so every score, every shortlist and
+//! every lazy-Gumbel `select()` draw through an mmap-restored index is
+//! bit-identical to the decode-restored and freshly built paths. The
+//! restore-equivalence suite (`tests/mmap_equivalence.rs`) pins this.
+//!
+//! Failure philosophy: mapping is an accelerator. A platform without
+//! `mmap`, a syscall failure, or a big-endian host ([`VectorSet::borrowed`]
+//! refuses the reinterpretation) degrades to the copying decode path —
+//! [`PagerFailure::Map`]. Corruption ([`PagerFailure::Artifact`]) is not
+//! retried by decode: the same bytes would fail the same checks, so the
+//! store drops the artifact and rebuilds.
+
+use super::format::{self, StoreError};
+use crate::coordinator::cache::{CachedIndex, WorkloadKey};
+use crate::mips::VectorSet;
+use crate::util::mmap::MmapRegion;
+use std::fmt;
+use std::path::Path;
+use std::sync::Arc;
+
+/// How the store restores artifacts (the `[pager]` config section).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PagerSettings {
+    /// Map artifacts and borrow their sections (default). Off = always
+    /// decode into heap (pre-v12 behavior).
+    pub enabled: bool,
+    /// Verify every section checksum eagerly at open time (default).
+    /// Costs one sequential walk of the file — disabling keeps page-in
+    /// fully lazy at the price of detecting bit rot only via the meta
+    /// checksum and structural invariants.
+    pub verify: bool,
+}
+
+impl Default for PagerSettings {
+    fn default() -> Self {
+        PagerSettings { enabled: true, verify: true }
+    }
+}
+
+/// A byte ceiling for *heap-resident* index data — what the in-memory
+/// cache tier is allowed to pin. Mmap-borrowed rows cost no heap
+/// ([`VectorSet::heap_bytes`] counts them as zero), which is exactly what
+/// lets a larger-than-RAM artifact serve under a small budget: the cache
+/// accounts the meta structures, the kernel pages the rows.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HeapBudget(Option<usize>);
+
+impl HeapBudget {
+    /// No ceiling: entry-count capacity alone bounds the cache.
+    pub fn unlimited() -> Self {
+        HeapBudget(None)
+    }
+
+    /// A ceiling of `bytes` heap bytes.
+    pub fn bytes(bytes: usize) -> Self {
+        HeapBudget(Some(bytes))
+    }
+
+    /// A ceiling of `mb` mebibytes (an overflowing product means
+    /// unlimited — no real budget is that large).
+    pub fn from_mb(mb: usize) -> Self {
+        HeapBudget(mb.checked_mul(1 << 20))
+    }
+
+    /// The ceiling in bytes; `None` means unlimited.
+    pub fn limit(&self) -> Option<usize> {
+        self.0
+    }
+
+    /// True when `resident` heap bytes exceed the ceiling.
+    pub fn exceeded_by(&self, resident: usize) -> bool {
+        self.0.is_some_and(|limit| resident > limit)
+    }
+}
+
+/// Why an mmap restore did not produce an index.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PagerFailure {
+    /// The mapping itself failed (unsupported platform, syscall error,
+    /// big-endian borrow refusal). The artifact may be fine — the caller
+    /// falls back to the decode path.
+    Map(String),
+    /// The artifact is unusable (corrupt, truncated, wrong key). Decoding
+    /// the same bytes would fail identically — the caller drops the
+    /// artifact and rebuilds.
+    Artifact(StoreError),
+}
+
+impl fmt::Display for PagerFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PagerFailure::Map(why) => write!(f, "mmap unavailable: {why}"),
+            PagerFailure::Artifact(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+/// Restore the artifact at `path` for `expect` over a shared memory
+/// mapping: map the file, validate the envelope (and, when `verify`, every
+/// section checksum), then decode the meta stream against *borrowed*
+/// section storage. The returned entry keeps the mapping alive through
+/// `Arc<MmapRegion>` references inside its [`VectorSet`]s; dropping the
+/// last clone unmaps the file.
+pub fn mmap_artifact(
+    path: &Path,
+    expect: &WorkloadKey,
+    verify: bool,
+) -> Result<CachedIndex, PagerFailure> {
+    let region = Arc::new(
+        MmapRegion::map_file(path).map_err(|e| PagerFailure::Map(e.to_string()))?,
+    );
+    let view = format::open_artifact(region.bytes()).map_err(PagerFailure::Artifact)?;
+    if view.key != *expect {
+        return Err(PagerFailure::Artifact(StoreError::KeyMismatch));
+    }
+    if verify {
+        format::verify_sections(region.bytes(), &view).map_err(PagerFailure::Artifact)?;
+    }
+    let mut sections = Vec::with_capacity(view.sections.len());
+    for desc in &view.sections {
+        let vs = VectorSet::borrowed(Arc::clone(&region), desc.offset, desc.rows, desc.dim)
+            .map_err(PagerFailure::Map)?;
+        sections.push(vs);
+    }
+    format::decode_payload(view.meta, sections).map_err(PagerFailure::Artifact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lazy::ShardSet;
+    use crate::mips::{build_index, IndexKind, VectorSet};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        VectorSet::new(data, n, d)
+    }
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fastmwem-pager-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn heap_budget_arithmetic() {
+        assert_eq!(HeapBudget::unlimited().limit(), None);
+        assert!(!HeapBudget::unlimited().exceeded_by(usize::MAX));
+        let b = HeapBudget::from_mb(2);
+        assert_eq!(b.limit(), Some(2 << 20));
+        assert!(b.exceeded_by(2 * 1024 * 1024 + 1));
+        assert!(!b.exceeded_by(2 * 1024 * 1024));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_restore_is_bit_identical_and_borrows_rows() {
+        let dir = scratch("equiv");
+        let vs = random_set(150, 9, 1);
+        let key = WorkloadKey::for_vectors(&vs, IndexKind::Flat, 1);
+        let value = CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1));
+        let path = dir.join("a.idx");
+        std::fs::write(&path, format::encode_artifact(&key, &value)).unwrap();
+
+        let mapped = mmap_artifact(&path, &key, true).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let decoded = format::decode_artifact(&bytes, &key).unwrap();
+
+        // borrowed storage costs no heap for the rows; the decoded copy
+        // pays the full n×stride
+        assert!(
+            mapped.heap_bytes() < decoded.heap_bytes(),
+            "mapped {} vs decoded {}",
+            mapped.heap_bytes(),
+            decoded.heap_bytes()
+        );
+
+        let (CachedIndex::Mono(a), CachedIndex::Mono(b)) = (&mapped, &decoded) else {
+            panic!("mono in, mono out");
+        };
+        let mut qrng = Rng::new(2);
+        for _ in 0..20 {
+            let q: Vec<f32> = (0..9).map(|_| qrng.uniform(-1.0, 1.0) as f32).collect();
+            for (x, y) in a.top_k(&q, 7).iter().zip(b.top_k(&q, 7).iter()) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.score.to_bits(), y.score.to_bits());
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mmap_restore_covers_sharded_sets() {
+        let dir = scratch("sharded");
+        let vs = random_set(80, 5, 3);
+        let set = ShardSet::build(IndexKind::Flat, &vs, 3, 9);
+        let key = WorkloadKey::for_vectors(&vs, IndexKind::Flat, 3);
+        let value = CachedIndex::Sharded(Arc::new(set));
+        let path = dir.join("s.idx");
+        std::fs::write(&path, format::encode_artifact(&key, &value)).unwrap();
+
+        let mapped = mmap_artifact(&path, &key, true).unwrap();
+        let CachedIndex::Sharded(s) = &mapped else { panic!("sharded in, sharded out") };
+        assert_eq!(s.len(), 80);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn failure_modes_split_map_from_artifact() {
+        let dir = scratch("failures");
+        let vs = random_set(40, 4, 4);
+        let key = WorkloadKey::for_vectors(&vs, IndexKind::Flat, 1);
+        let value = CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1));
+        let path = dir.join("f.idx");
+        let good = format::encode_artifact(&key, &value);
+        std::fs::write(&path, &good).unwrap();
+
+        // a missing file is a mapping failure (fallback territory)
+        assert!(matches!(
+            mmap_artifact(&dir.join("nope.idx"), &key, true),
+            Err(PagerFailure::Map(_))
+        ));
+
+        // a wrong key is an artifact failure
+        let other = WorkloadKey { fingerprint: 1, ..key };
+        assert!(matches!(
+            mmap_artifact(&path, &other, true),
+            Err(PagerFailure::Artifact(StoreError::KeyMismatch))
+        ));
+
+        // a flipped section byte is caught eagerly when verify is on...
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(
+            mmap_artifact(&path, &key, true),
+            Err(PagerFailure::Artifact(StoreError::ChecksumMismatch))
+        ));
+        // ...and sails through structurally when verify is off — the
+        // documented trade; meta corruption is still always caught
+        assert!(mmap_artifact(&path, &key, false).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -16,7 +16,7 @@
 //! keeps serving (the store is an accelerator, never a correctness
 //! dependency — see the failure philosophy in [`crate::store`]).
 
-use super::DiskStore;
+use super::{DiskStore, HeapBudget, PagerSettings};
 use crate::coordinator::cache::{CacheReport, CachedIndex, IndexCache, WorkloadKey};
 use crate::mips::{VectorSet, WorkloadDelta};
 use anyhow::Result;
@@ -88,15 +88,40 @@ impl TieredIndexCache {
     /// An in-memory-only cache (no persistence) of at most `capacity`
     /// indices — PR 2 behavior, byte for byte.
     pub fn memory_only(capacity: usize) -> Self {
-        TieredIndexCache { l1: IndexCache::new(capacity), l2: None }
+        Self::memory_only_with_budget(capacity, HeapBudget::unlimited())
+    }
+
+    /// An in-memory-only cache bounded by an entry count *and* a heap-byte
+    /// budget ([`CachedIndex::heap_bytes`] accounting — mmap-borrowed
+    /// storage counts as zero, DESIGN.md §12).
+    pub fn memory_only_with_budget(capacity: usize, budget: HeapBudget) -> Self {
+        let l1 = IndexCache::with_byte_budget(capacity, budget.limit().unwrap_or(0));
+        TieredIndexCache { l1, l2: None }
     }
 
     /// A tiered cache persisting to `dir` (created if needed), with an L1
-    /// of at most `capacity` indices. `capacity` 0 keeps L1 disabled:
-    /// every warm consultation decodes from disk — slower than resident
-    /// serving but still far cheaper than a rebuild.
+    /// of at most `capacity` indices, no byte budget, and default pager
+    /// settings. `capacity` 0 keeps L1 disabled: every warm consultation
+    /// restores from disk — slower than resident serving but still far
+    /// cheaper than a rebuild.
     pub fn with_store(capacity: usize, dir: impl AsRef<Path>) -> Result<Self> {
-        Ok(TieredIndexCache { l1: IndexCache::new(capacity), l2: Some(DiskStore::open(dir)?) })
+        Self::with_settings(capacity, HeapBudget::unlimited(), dir, PagerSettings::default())
+    }
+
+    /// The fully configured tiered cache: L1 bounded by `capacity` entries
+    /// and `budget` heap bytes, L2 at `dir` restoring artifacts under
+    /// `pager`. With the pager on, a promoted artifact larger than the
+    /// heap budget still serves resident: its rows stay in the mapping
+    /// (zero heap accounted), only its meta structures count against the
+    /// budget.
+    pub fn with_settings(
+        capacity: usize,
+        budget: HeapBudget,
+        dir: impl AsRef<Path>,
+        pager: PagerSettings,
+    ) -> Result<Self> {
+        let l1 = IndexCache::with_byte_budget(capacity, budget.limit().unwrap_or(0));
+        Ok(TieredIndexCache { l1, l2: Some(DiskStore::open_with(dir, pager)?) })
     }
 
     /// The in-memory tier.
@@ -479,6 +504,54 @@ mod tests {
         let (_, ev) = memory.get_or_build(k, make);
         assert!(!ev.l2_hit && builds.get() == 2);
         assert!(memory.store().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The §12 headline: an artifact whose owned row data exceeds the
+    /// heap budget is served by mmap paging — zero decode restores, L1
+    /// accounting under budget, and draws bit-identical to a fresh build.
+    #[cfg(unix)]
+    #[test]
+    fn over_budget_artifact_serves_via_paging() {
+        let dir = scratch_dir("budget");
+        let vs = random_set(400, 16, 11);
+        let k = key(&vs, IndexKind::Flat, 1);
+        let make = || {
+            (CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)), Duration::ZERO)
+        };
+        let owned_bytes = make().0.heap_bytes();
+
+        // seed the store, then restart with a budget far below the rows
+        TieredIndexCache::with_store(2, &dir).unwrap().get_or_build(k, make);
+        let budget = HeapBudget::bytes(owned_bytes / 4);
+        let tiered =
+            TieredIndexCache::with_settings(2, budget, &dir, PagerSettings::default()).unwrap();
+        let (value, ev) =
+            tiered.get_or_build(k, || unreachable!("artifact on disk: must restore"));
+        assert!(ev.l2_hit);
+
+        let s = tiered.store().unwrap().stats();
+        assert_eq!(
+            (s.mmap_restores, s.decode_restores),
+            (1, 0),
+            "an over-budget restore must page, never decode"
+        );
+        assert!(
+            value.heap_bytes() < owned_bytes / 4,
+            "borrowed rows pin no heap ({} vs owned {owned_bytes})",
+            value.heap_bytes()
+        );
+        assert!(tiered.l1().resident_bytes() <= budget.limit().unwrap());
+
+        let fresh = build_index(IndexKind::Flat, vs.clone(), 1);
+        match value {
+            CachedIndex::Mono(idx) => assert_eq!(
+                draw_sequence(fresh.as_ref(), &vs, 5),
+                draw_sequence(idx.as_ref(), &vs, 5),
+                "paged index must reproduce draws exactly"
+            ),
+            _ => panic!("mono in, mono out"),
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

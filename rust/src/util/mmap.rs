@@ -1,0 +1,288 @@
+//! Read-only memory-mapped file regions for the zero-copy artifact pager
+//! (DESIGN.md §12).
+//!
+//! The store's v3 artifact format places raw row data in page-aligned
+//! *sections* precisely so a restore can point the index at the bytes on
+//! disk instead of decoding them into heap. This module owns the one
+//! `unsafe` boundary that makes that possible: a [`MmapRegion`] wraps a
+//! whole artifact file mapped `PROT_READ`/`MAP_PRIVATE` and unmaps it on
+//! drop. Everything above (the borrowed [`crate::mips::VectorSet`]
+//! storage, the pager, the tiered cache) shares the region through an
+//! `Arc` and sees only safe `&[u8]` / `&[f32]` views.
+//!
+//! The offline build vendors no `libc` crate, but `std` itself links the
+//! platform C library on unix targets, so the two syscall wrappers the
+//! pager needs are declared directly. On non-unix targets (or when the
+//! syscall fails) [`MmapRegion::map_file`] returns an error and the store
+//! falls back to its decode-into-heap restore path — paging is an
+//! optimization, never a correctness requirement.
+
+use std::fmt;
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+/// The page size the v3 artifact format aligns sections to. Fixed at the
+/// smallest page size of the supported targets (4 KiB) and embedded in the
+/// format contract, so artifacts written on one machine map on another.
+pub const PAGE_SIZE: usize = 4096;
+
+#[cfg(unix)]
+mod sys {
+    // std links the platform libc on unix; declare the two calls we need
+    // rather than vendoring a crate (DESIGN.md §3 keeps the build offline).
+    use std::ffi::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+/// How a region's bytes are held.
+enum Backing {
+    /// A live `mmap(2)` mapping, unmapped on drop (unix only).
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Whole file copied into a 64-byte-aligned heap buffer — the
+    /// portability fallback, also used by tests to exercise borrowed
+    /// storage without touching the filesystem. The aligned base keeps
+    /// `f32` views valid at the same offsets a page-aligned mapping
+    /// would give them (a plain `Vec<u8>` guarantees no alignment).
+    Heap {
+        buf: crate::util::align::AlignedVec,
+        len: usize,
+    },
+}
+
+/// An immutable byte region backed by a memory-mapped file (or, as a
+/// fallback, a heap copy). Shared via `Arc` by every borrowed
+/// [`crate::mips::VectorSet`] restored from one artifact, so the mapping
+/// outlives all views into it.
+pub struct MmapRegion {
+    backing: Backing,
+}
+
+// SAFETY: the region is immutable after construction — the mapping is
+// PROT_READ and no API hands out `&mut` — so shared references may cross
+// threads freely.
+unsafe impl Send for MmapRegion {}
+unsafe impl Sync for MmapRegion {}
+
+impl MmapRegion {
+    /// Map `path` read-only. Errors if the file cannot be opened, is
+    /// empty, or the mapping syscall fails; on non-unix targets this
+    /// always errors and callers fall back to [`MmapRegion::read_file`].
+    pub fn map_file(path: &Path) -> std::io::Result<MmapRegion> {
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = File::open(path)?;
+            let len = file.metadata()?.len();
+            if len == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "cannot map an empty file",
+                ));
+            }
+            if len > usize::MAX as u64 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "file exceeds address space",
+                ));
+            }
+            let len = len as usize;
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED || ptr.is_null() {
+                return Err(std::io::Error::last_os_error());
+            }
+            // File descriptor can close now; the mapping keeps its own
+            // reference to the pages.
+            Ok(MmapRegion { backing: Backing::Mapped { ptr: ptr as *const u8, len } })
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = path;
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Unsupported,
+                "mmap is only available on unix targets",
+            ))
+        }
+    }
+
+    /// Read `path` fully into a heap-backed region — the decode-path
+    /// equivalent, used when mapping is unavailable.
+    pub fn read_file(path: &Path) -> std::io::Result<MmapRegion> {
+        let mut bytes = Vec::new();
+        File::open(path)?.read_to_end(&mut bytes)?;
+        Ok(MmapRegion::from_bytes(bytes))
+    }
+
+    /// Copy an in-memory buffer into an aligned heap region (tests,
+    /// decode fallback).
+    pub fn from_bytes(bytes: Vec<u8>) -> MmapRegion {
+        let len = bytes.len();
+        let mut buf = crate::util::align::AlignedVec::zeroed(len.div_ceil(4));
+        // SAFETY: the AlignedVec owns len.div_ceil(4) f32s = at least
+        // `len` writable bytes, disjoint from `bytes`.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), buf.as_mut_ptr() as *mut u8, len);
+        }
+        MmapRegion { backing: Backing::Heap { buf, len } }
+    }
+
+    /// True when the bytes live in a real `mmap` mapping (resident pages
+    /// are the kernel's to reclaim, not heap the process must budget).
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { .. } => true,
+            Backing::Heap { .. } => false,
+        }
+    }
+
+    /// The whole region as bytes.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(unix)]
+            // SAFETY: ptr/len came from a successful mmap that lives until
+            // drop, and the mapping is never mutated.
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            // SAFETY: buf owns at least `len` initialized bytes.
+            Backing::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+
+    /// Total length in bytes.
+    pub fn len(&self) -> usize {
+        match &self.backing {
+            #[cfg(unix)]
+            Backing::Mapped { len, .. } => *len,
+            Backing::Heap { len, .. } => *len,
+        }
+    }
+
+    /// True when the region holds no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// View `byte_offset..byte_offset + n_f32s*4` as an `f32` slice.
+    /// Panics if the range is out of bounds or `byte_offset` is not
+    /// 4-byte aligned relative to an aligned base — callers
+    /// ([`crate::mips::VectorSet::borrowed`]) validate alignment against
+    /// the format's page-aligned section contract before constructing
+    /// views. Only meaningful on little-endian targets, where the on-disk
+    /// LE f32 bit patterns coincide with the in-memory representation;
+    /// the pager refuses to borrow on big-endian builds.
+    pub fn f32_slice(&self, byte_offset: usize, n_f32s: usize) -> &[f32] {
+        let bytes = self.bytes();
+        let end = byte_offset.checked_add(n_f32s * 4).expect("f32 view overflows");
+        assert!(end <= bytes.len(), "f32 view out of region bounds");
+        let base = bytes[byte_offset..end].as_ptr();
+        assert_eq!(base as usize % 4, 0, "f32 view must be 4-byte aligned");
+        // SAFETY: range checked above, alignment asserted, f32 has no
+        // invalid bit patterns, and the region is immutable.
+        unsafe { std::slice::from_raw_parts(base as *const f32, n_f32s) }
+    }
+}
+
+impl Drop for MmapRegion {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            // SAFETY: ptr/len are the exact values a successful mmap
+            // returned, unmapped exactly once.
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+impl fmt::Debug for MmapRegion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MmapRegion")
+            .field("len", &self.len())
+            .field("mapped", &self.is_mapped())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heap_region_views_bytes_and_f32s() {
+        let mut bytes = Vec::new();
+        for v in [1.0f32, -2.5, 0.0, 3.25] {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        let region = MmapRegion::from_bytes(bytes.clone());
+        assert!(!region.is_mapped());
+        assert_eq!(region.len(), 16);
+        assert_eq!(region.bytes(), &bytes[..]);
+        let fs = region.f32_slice(4, 2);
+        assert_eq!(fs[0].to_bits(), (-2.5f32).to_bits());
+        assert_eq!(fs[1].to_bits(), 0.0f32.to_bits());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapped_region_matches_file_contents() {
+        let dir = std::env::temp_dir().join(format!("fmwem_mmap_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("region.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(3 * PAGE_SIZE + 17).collect();
+        std::fs::write(&path, &payload).unwrap();
+
+        let region = MmapRegion::map_file(&path).unwrap();
+        assert!(region.is_mapped());
+        assert_eq!(region.len(), payload.len());
+        assert_eq!(region.bytes(), &payload[..]);
+        // page-aligned base: the format relies on section offsets staying
+        // 4-byte aligned once the mapping base is page-aligned
+        assert_eq!(region.bytes().as_ptr() as usize % PAGE_SIZE, 0);
+
+        drop(region);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn mapping_missing_or_empty_file_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("fmwem_mmap_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let missing = dir.join("nope.bin");
+        assert!(MmapRegion::map_file(&missing).is_err());
+        let empty = dir.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        assert!(MmapRegion::map_file(&empty).is_err());
+        let _ = std::fs::remove_file(&empty);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

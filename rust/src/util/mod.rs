@@ -6,6 +6,7 @@ pub mod bench;
 pub mod csv;
 pub mod json;
 pub mod math;
+pub mod mmap;
 pub mod rng;
 
 pub use rng::Rng;

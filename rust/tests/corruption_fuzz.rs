@@ -1,25 +1,38 @@
-//! Fuzz-style robustness sweep over the persistence layer (DESIGN.md §7/§9).
+//! Fuzz-style robustness sweep over the persistence layer (DESIGN.md §7/§9/§12).
 //!
 //! The artifact codec's contract is that **every** failure mode — bad
-//! magic, truncation at any byte, any flipped bit, outright garbage — is a
-//! typed [`StoreError`] / `SnapshotError`, never a panic and never a
-//! silently wrong decode. This harness enforces that byte-by-byte with
-//! seeded corruption over valid snapshot and delta artifacts:
+//! magic, truncation at any byte, any flipped bit in a checksummed
+//! region, outright garbage — is a typed [`StoreError`] / `SnapshotError`,
+//! never a panic and never a silently wrong decode. This harness enforces
+//! that byte-by-byte with seeded corruption over valid snapshot and delta
+//! artifacts:
 //!
-//! * every possible truncation length of both artifact species,
-//! * seeded single-bit flips across every header field and the payload
-//!   (the FNV-128 payload checksum makes a one-bit payload flip
+//! * every possible truncation length of both artifact species, and of
+//!   the meta payload with the envelope stripped,
+//! * seeded single-bit flips across the header, the meta stream and the
+//!   page-aligned sections (the FNV-128 checksums make a one-bit flip
 //!   *provably* detectable: the per-byte xor-then-multiply-by-odd-prime
 //!   step is bijective, so equal-length payloads differing in one byte
-//!   cannot collide),
+//!   cannot collide) — while flips in the zero padding *between* meta and
+//!   sections must be ignored, because padding is outside the integrity
+//!   envelope by design,
+//! * an exhaustive bit-flip sweep of the v3 section table (count,
+//!   offsets, geometry, per-section checksums): every flip must break a
+//!   structural invariant or a checksum, never reinterpret,
+//! * quantized-shortlist artifacts (DESIGN.md §12): the inline quant
+//!   codes ride the meta checksum, so any envelope-checked flip is a
+//!   [`StoreError::ChecksumMismatch`]; the unshielded payload decoder
+//!   must never panic and never change the index shape,
 //! * random garbage and valid-prefix-then-garbage buffers,
 //! * the same corruption replayed through [`DiskStore`] on real files,
 //!   which must degrade to a miss-and-rebuild, never a crash.
 
 use fast_mwem::coordinator::{CachedIndex, WorkloadKey};
 use fast_mwem::lazy::ShardSet;
-use fast_mwem::mips::{build_index, IndexKind, VectorSet, WorkloadDelta};
-use fast_mwem::store::format::{self, DELTA_HEADER_LEN};
+use fast_mwem::mips::{
+    build_index, FlatIndex, IndexKind, QuantMode, VectorSet, WorkloadDelta,
+};
+use fast_mwem::store::format::{self, ArtifactView, DELTA_HEADER_LEN};
 use fast_mwem::store::DiskStore;
 use fast_mwem::util::rng::Rng;
 use std::path::{Path, PathBuf};
@@ -47,6 +60,21 @@ fn sharded_case() -> (WorkloadKey, Vec<u8>) {
     (key, bytes)
 }
 
+/// A flat artifact carrying a quantized shortlist tier (DESIGN.md §12).
+/// The codes encode inline in the meta stream, under the meta checksum.
+fn quant_case(mode: QuantMode) -> (WorkloadKey, Vec<u8>) {
+    let ix = FlatIndex::with_quant(random_set(48, 6, 9), Some(mode));
+    assert_eq!(ix.quant_mode(), Some(mode), "fixture data must accept quantization");
+    let key = WorkloadKey {
+        fingerprint: 0xC0DE5 + mode.tag() as u128,
+        kind: IndexKind::Flat,
+        shards: 1,
+        generation: 2,
+    };
+    let bytes = format::encode_artifact(&key, &CachedIndex::Mono(Arc::new(ix)));
+    (key, bytes)
+}
+
 fn delta_case() -> (u128, u64, Vec<u8>) {
     let (fp, generation) = (0xF00Du128, 1u64);
     let delta = WorkloadDelta::new(random_set(6, 4, 3), vec![1, 7, 12]);
@@ -54,11 +82,25 @@ fn delta_case() -> (u128, u64, Vec<u8>) {
     (fp, generation, bytes)
 }
 
+/// End of the checksummed prefix: header + section table + meta stream.
+fn meta_end(view: &ArtifactView<'_>) -> usize {
+    format::HEADER_LEN + 8 + view.sections.len() * format::SECTION_DESC_LEN + view.meta.len()
+}
+
+/// Whether byte `i` of the artifact is covered by a checksum or a
+/// structural invariant. Everything except the zero padding between the
+/// meta stream and the page-aligned sections (and between sections) is.
+fn is_checked(view: &ArtifactView<'_>, i: usize) -> bool {
+    i < meta_end(view)
+        || view.sections.iter().any(|s| i >= s.offset && i < s.offset + s.byte_len())
+}
+
 #[test]
 fn every_truncation_is_a_typed_error() {
     for (name, key, bytes) in [
         ("mono", mono_case().0, mono_case().1),
         ("sharded", sharded_case().0, sharded_case().1),
+        ("quant", quant_case(QuantMode::Int8).0, quant_case(QuantMode::Int8).1),
     ] {
         assert!(format::decode_artifact(&bytes, &key).is_ok(), "{name}: baseline must decode");
         for cut in 0..bytes.len() {
@@ -68,11 +110,13 @@ fn every_truncation_is_a_typed_error() {
             assert!(r.is_err(), "{name}: open of truncation to {cut} succeeded");
         }
         // the payload decoder itself (the SnapshotReader walk), with the
-        // envelope stripped: truncations must hit a typed reader error
-        let (_, payload) = format::open_artifact(&bytes).unwrap();
-        for cut in 0..payload.len() {
-            let r = format::decode_payload(&payload[..cut]);
-            assert!(r.is_err(), "{name}: payload truncation to {cut} decoded");
+        // envelope stripped but the sections intact: meta truncations
+        // must hit a typed reader error, never a panic or a short decode
+        let view = format::open_artifact(&bytes).unwrap();
+        for cut in 0..view.meta.len() {
+            let sections = format::owned_sections(&bytes, &view);
+            let r = format::decode_payload(&view.meta[..cut], sections);
+            assert!(r.is_err(), "{name}: meta truncation to {cut} decoded");
         }
     }
 
@@ -90,8 +134,9 @@ fn single_bit_flips_never_decode_for_the_expected_key() {
         ("mono", mono_case().0, mono_case().1),
         ("sharded", sharded_case().0, sharded_case().1),
     ] {
+        let view = format::open_artifact(&bytes).unwrap();
         let mut rng = Rng::new(0xF11F);
-        // every header byte, plus a seeded sweep of the payload
+        // every header byte, plus a seeded sweep of the rest of the file
         let targets: Vec<usize> = (0..format::HEADER_LEN)
             .chain((0..256).map(|_| rng.usize_below(bytes.len())))
             .collect();
@@ -100,7 +145,96 @@ fn single_bit_flips_never_decode_for_the_expected_key() {
                 let mut corrupt = bytes.clone();
                 corrupt[i] ^= 1 << bit;
                 let r = format::decode_artifact(&corrupt, &key);
-                assert!(r.is_err(), "{name}: flip of byte {i} bit {bit} decoded for key");
+                if is_checked(&view, i) {
+                    assert!(r.is_err(), "{name}: flip of byte {i} bit {bit} decoded for key");
+                } else {
+                    // v3 page padding carries no data: a flip there must
+                    // be invisible, not a spurious rebuild
+                    assert!(r.is_ok(), "{name}: padding flip at byte {i} broke the decode");
+                }
+            }
+        }
+    }
+}
+
+/// Exhaustive bit-flip sweep of the v3 section count + section table
+/// (offsets, rows, dim, per-section checksums). Every flip must end in a
+/// typed error: offsets break alignment/overlap/bounds/the exact-length
+/// invariant, geometry changes break the layout, checksum flips fail
+/// verification. Never a panic, never a reinterpreted section.
+#[test]
+fn section_table_bit_flips_never_decode() {
+    for (name, key, bytes) in [
+        ("mono", mono_case().0, mono_case().1),
+        ("sharded", sharded_case().0, sharded_case().1),
+    ] {
+        let n_sections = format::open_artifact(&bytes).unwrap().sections.len();
+        assert!(n_sections > 0, "{name}: vector data must be paged out into sections");
+        let table_end = format::HEADER_LEN + 8 + n_sections * format::SECTION_DESC_LEN;
+        for i in format::HEADER_LEN..table_end {
+            for bit in 0..8 {
+                let mut corrupt = bytes.clone();
+                corrupt[i] ^= 1 << bit;
+                assert!(
+                    format::decode_artifact(&corrupt, &key).is_err(),
+                    "{name}: table flip of byte {i} bit {bit} decoded"
+                );
+            }
+        }
+    }
+}
+
+/// Quant-tier corruption (DESIGN.md §12): the shortlist codes encode
+/// inline in the meta stream, so through the envelope every meta flip is
+/// a checksum mismatch — a corrupt tier can never serve a silently wrong
+/// shortlist; the store rebuilds instead. The unshielded payload decoder
+/// (no envelope checksum) must still never panic, and on the rare flip it
+/// accepts (a changed code value) the index shape must be unchanged —
+/// shape lives in the section table, which the flip cannot reach.
+#[test]
+fn quant_tier_flips_are_checksum_mismatches_never_wrong_shortlists() {
+    for mode in [QuantMode::Int8, QuantMode::F16] {
+        let (key, bytes) = quant_case(mode);
+        let view = format::open_artifact(&bytes).unwrap();
+        let meta_start = format::HEADER_LEN + 8 + view.sections.len() * format::SECTION_DESC_LEN;
+
+        // through the envelope: every meta bit flip (index structure and
+        // quant codes alike) is exactly a checksum mismatch
+        for i in meta_start..meta_end(&view) {
+            for bit in 0..8 {
+                let mut corrupt = bytes.clone();
+                corrupt[i] ^= 1 << bit;
+                assert!(
+                    matches!(
+                        format::decode_artifact(&corrupt, &key),
+                        Err(format::StoreError::ChecksumMismatch)
+                    ),
+                    "{mode}: meta flip at byte {i} bit {bit} was not a checksum mismatch"
+                );
+            }
+        }
+
+        // past the shield: corrupt meta handed straight to the payload
+        // decoder. It may reject (typed error) or accept a changed code
+        // value — but it must never panic and never change the shape.
+        let mut rng = Rng::new(0x9A17 + mode.tag() as u64);
+        for round in 0..200 {
+            let mut meta = view.meta.to_vec();
+            let i = rng.usize_below(meta.len());
+            meta[i] ^= 1 << (rng.next_u64() % 8);
+            let sections = format::owned_sections(&bytes, &view);
+            match format::decode_payload(&meta, sections) {
+                Err(_) => {}
+                Ok(CachedIndex::Mono(ix)) => {
+                    assert_eq!(
+                        (ix.len(), ix.dim()),
+                        (48, 6),
+                        "{mode}: round {round} flip at byte {i} changed the index shape"
+                    );
+                }
+                Ok(CachedIndex::Sharded(_)) => {
+                    panic!("{mode}: round {round} flip at byte {i} changed mono to sharded")
+                }
             }
         }
     }
@@ -149,8 +283,9 @@ fn garbage_buffers_never_panic_or_decode() {
         assert!(format::decode_artifact(&buf, &key).is_err(), "garbage round {round} decoded");
         assert!(format::decode_delta_artifact(&buf).is_err(), "garbage delta round {round}");
         // decode_payload has no checksum shield — it must still never
-        // panic (length-prefix reads are clamped to the bytes remaining)
-        let _ = format::decode_payload(&buf);
+        // panic, with or without sections to resolve references against
+        let _ = format::decode_payload(&buf, Vec::new());
+        let _ = format::decode_payload(&buf, vec![VectorSet::new(vec![0.0; 8], 2, 4)]);
 
         // adversarial variant: a valid header prefix spliced onto garbage
         let keep = rng.usize_below(valid.len().min(format::HEADER_LEN + 16));
@@ -191,10 +326,14 @@ fn disk_store_degrades_to_rebuild_on_corrupt_files() {
     store.save(&key, &value, Duration::from_millis(5)).unwrap();
     store.save_delta(key.fingerprint, 1, &delta).unwrap();
 
-    // flip one byte in the middle of the artifact payload on disk
+    // flip one byte of the meta stream of the artifact on disk (the file
+    // tail is section + padding, so aim at the checksummed prefix)
     let idx = &files_with_ext(&dir, "idx")[0];
     let mut bytes = std::fs::read(idx).unwrap();
-    let mid = bytes.len() / 2;
+    let mid = {
+        let view = format::open_artifact(&bytes).unwrap();
+        meta_end(&view) - 1
+    };
     bytes[mid] ^= 0x10;
     std::fs::write(idx, &bytes).unwrap();
     assert!(store.load(&key).is_none(), "corrupt artifact must load as a miss");

@@ -128,6 +128,7 @@ fn repeated_workload_batch_hits_warm_index_cache() {
         eps_cap: None,
         cache_capacity: 4,
         store_dir: None,
+        ..Default::default()
     });
     let spec = |workload: u64, seed: u64, shards: usize| {
         JobSpec::Release(ReleaseJobSpec {

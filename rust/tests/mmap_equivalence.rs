@@ -1,0 +1,299 @@
+//! Restore-path equivalence (DESIGN.md §12): an index restored by the
+//! zero-copy mmap pager must be indistinguishable — bit for bit — from
+//! the same artifact restored by the portable decode path, and from the
+//! freshly built index it snapshotted. Covered for every index kind
+//! (flat / IVF / HNSW), for sharded workloads, and with the quantized
+//! shortlist tier on and off, at two observation levels:
+//!
+//! * raw `select()` draws through the lazy exponential mechanism —
+//!   compared by (index, work, Gumbel-perturbed value bits),
+//! * whole released histograms out of Fast-MWEM (`p_avg` / `p_final`).
+//!
+//! On non-unix hosts the pager falls back to the decode path, so every
+//! equivalence here still holds; only the assertions that restores
+//! actually went through the mapping are unix-gated.
+
+use fast_mwem::coordinator::{CachedIndex, WorkloadKey};
+use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardSet, ShardedLazyEm};
+use fast_mwem::mips::{build_index, FlatIndex, IndexKind, MipsIndex, QuantMode, VectorSet};
+use fast_mwem::mwem::{
+    run_fast_with_index, run_fast_with_shard_set, FastMwemConfig, Histogram, MwemConfig,
+    NativeBackend, QuerySet,
+};
+use fast_mwem::store::{HeapBudget, PagerSettings, TieredIndexCache};
+use fast_mwem::util::rng::Rng;
+use fast_mwem::workloads::linear_queries::{binary_queries, gaussian_histogram};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("fastmwem-mmapeq-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn workload(u: usize, m: usize, seed: u64) -> (Histogram, QuerySet) {
+    let mut rng = Rng::new(seed);
+    let h = gaussian_histogram(&mut rng, u, 500);
+    let q = binary_queries(&mut rng, m, u);
+    (h, q)
+}
+
+fn random_set(n: usize, d: usize, seed: u64) -> VectorSet {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    VectorSet::new(data, n, d)
+}
+
+/// The portable restore path: pager off, every promotion decodes into
+/// heap-owned storage.
+fn decode_settings() -> PagerSettings {
+    PagerSettings { enabled: false, verify: true }
+}
+
+/// Restore `k` from the artifacts in `dir` under the given pager
+/// settings, asserting the value came from the store tier. The cache is
+/// returned too so callers can inspect its restore counters.
+fn restore(
+    dir: &Path,
+    k: WorkloadKey,
+    pager: PagerSettings,
+) -> (CachedIndex, TieredIndexCache) {
+    let tiered =
+        TieredIndexCache::with_settings(4, HeapBudget::unlimited(), dir, pager).unwrap();
+    let (value, ev) = tiered.get_or_build(k, || unreachable!("artifact on disk: must restore"));
+    assert!(ev.l2_hit && !ev.l1_hit, "expected an L2 restore");
+    (value, tiered)
+}
+
+#[cfg(unix)]
+fn assert_mapped(tiered: &TieredIndexCache, what: &str) {
+    let s = tiered.store().unwrap().stats();
+    assert_eq!(
+        (s.mmap_restores, s.decode_restores),
+        (1, 0),
+        "{what}: a pager-on restore must map, never decode"
+    );
+}
+
+#[cfg(not(unix))]
+fn assert_mapped(_tiered: &TieredIndexCache, _what: &str) {}
+
+fn as_mono(value: CachedIndex, what: &str) -> Arc<dyn MipsIndex + Send + Sync> {
+    match value {
+        CachedIndex::Mono(ix) => ix,
+        _ => panic!("{what}: mono in, mono out"),
+    }
+}
+
+fn as_sharded(value: CachedIndex, what: &str) -> Arc<ShardSet> {
+    match value {
+        CachedIndex::Sharded(set) => set,
+        _ => panic!("{what}: sharded in, sharded out"),
+    }
+}
+
+/// A fixed sequence of lazy-EM selections, captured bit-exactly.
+fn draws(index: &dyn MipsIndex, vs: &VectorSet) -> Vec<(usize, usize, u64)> {
+    let em = LazyEm::new(index, vs, ScoreTransform::Abs);
+    let mut rng = Rng::new(17);
+    let q: Vec<f32> = (0..vs.dim()).map(|i| ((i + 1) as f32 * 0.37).sin()).collect();
+    (0..60)
+        .map(|_| {
+            let s = em.select(&mut rng, &q, 1.0, 0.1);
+            (s.index, s.work, s.value.to_bits())
+        })
+        .collect()
+}
+
+/// Flat, IVF and HNSW snapshots restored by both paths reproduce the
+/// fresh index's draws and its whole released histograms, bit for bit.
+#[test]
+fn mono_restores_draw_and_release_identically_for_every_kind() {
+    for kind in [IndexKind::Flat, IndexKind::Ivf, IndexKind::Hnsw] {
+        let dir = scratch_dir(&format!("mono-{kind}"));
+        let (h, q) = workload(64, 120, 5);
+        let fresh = build_index(kind, q.vectors().clone(), 21);
+        let k = WorkloadKey::for_vectors(q.vectors(), kind, 1);
+        TieredIndexCache::with_store(4, &dir).unwrap().get_or_build(k, || {
+            (CachedIndex::Mono(Arc::clone(&fresh)), Duration::ZERO)
+        });
+
+        let (via_decode, _) = restore(&dir, k, decode_settings());
+        let (via_mmap, mapped) = restore(&dir, k, PagerSettings::default());
+        assert_mapped(&mapped, &format!("{kind}"));
+        let decode_ix = as_mono(via_decode, "decode");
+        let mmap_ix = as_mono(via_mmap, "mmap");
+
+        let want = draws(fresh.as_ref(), q.vectors());
+        assert_eq!(want, draws(decode_ix.as_ref(), q.vectors()), "{kind}: decode draws");
+        assert_eq!(want, draws(mmap_ix.as_ref(), q.vectors()), "{kind}: mmap draws");
+
+        let mut cfg = MwemConfig::paper(40, 64, 1.0, 1e-3, 31);
+        cfg.log_every = 0;
+        let fcfg = FastMwemConfig::new(cfg, kind);
+        let base =
+            run_fast_with_index(&fcfg, &q, &h, &mut NativeBackend, fresh.as_ref(), Duration::ZERO);
+        for (name, ix) in [("decode", decode_ix), ("mmap", mmap_ix)] {
+            let out =
+                run_fast_with_index(&fcfg, &q, &h, &mut NativeBackend, ix.as_ref(), Duration::ZERO);
+            assert_eq!(
+                base.result.p_avg, out.result.p_avg,
+                "{kind}/{name}: released averaged histogram must be bit-identical"
+            );
+            assert_eq!(
+                base.result.p_final, out.result.p_final,
+                "{kind}/{name}: released final histogram must be bit-identical"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Sharded workloads: the restored `ShardSet` reproduces
+/// `ShardedLazyEm::select` draws and the sharded Fast-MWEM release
+/// bit-identically through both restore paths.
+#[test]
+fn sharded_restore_is_bit_identical_end_to_end() {
+    let dir = scratch_dir("sharded");
+    let (h, q) = workload(48, 90, 7);
+    let set = Arc::new(ShardSet::build(IndexKind::Flat, q.vectors(), 3, 0x77));
+    let k = WorkloadKey::for_vectors(q.vectors(), IndexKind::Flat, 3);
+    TieredIndexCache::with_store(4, &dir).unwrap().get_or_build(k, || {
+        (CachedIndex::Sharded(Arc::clone(&set)), Duration::ZERO)
+    });
+
+    let (via_decode, _) = restore(&dir, k, decode_settings());
+    let (via_mmap, mapped) = restore(&dir, k, PagerSettings::default());
+    assert_mapped(&mapped, "sharded");
+    let decode_set = as_sharded(via_decode, "decode");
+    let mmap_set = as_sharded(via_mmap, "mmap");
+    assert_eq!(decode_set.bounds(), set.bounds());
+    assert_eq!(mmap_set.bounds(), set.bounds());
+
+    let ems = [Arc::clone(&set), Arc::clone(&decode_set), Arc::clone(&mmap_set)]
+        .map(|s| ShardedLazyEm::with_shard_set(s, q.vectors(), ScoreTransform::Abs));
+    let probe: Vec<f32> = (0..q.vectors().dim()).map(|i| (i as f32 * 0.21).cos()).collect();
+    let mut rngs = [Rng::new(8), Rng::new(8), Rng::new(8)];
+    for round in 0..50 {
+        let samples: Vec<_> = ems
+            .iter()
+            .zip(rngs.iter_mut())
+            .map(|(em, rng)| em.select(rng, &probe, 1.0, 0.1))
+            .collect();
+        for (name, s) in [("decode", &samples[1]), ("mmap", &samples[2])] {
+            assert_eq!(s.index, samples[0].index, "{name}: draw {round} index");
+            assert_eq!(s.work, samples[0].work, "{name}: draw {round} work");
+            assert_eq!(
+                s.value.to_bits(),
+                samples[0].value.to_bits(),
+                "{name}: draw {round} perturbed value must be bit-identical"
+            );
+        }
+    }
+
+    let mut cfg = MwemConfig::paper(40, 48, 1.0, 1e-3, 19);
+    cfg.log_every = 0;
+    let fcfg = FastMwemConfig::new(cfg, IndexKind::Flat).with_shards(3);
+    let base =
+        run_fast_with_shard_set(&fcfg, &q, &h, &mut NativeBackend, &set, Duration::ZERO);
+    for (name, restored) in [("decode", decode_set), ("mmap", mmap_set)] {
+        let out =
+            run_fast_with_shard_set(&fcfg, &q, &h, &mut NativeBackend, &restored, Duration::ZERO);
+        assert_eq!(
+            base.result.p_avg, out.result.p_avg,
+            "{name}: sharded release must be bit-identical"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The quantized shortlist tier (DESIGN.md §12) survives the artifact
+/// round trip through both restore paths, and — quantization being a
+/// pure accelerator — every variant draws and releases bit-identically
+/// to the plain flat index over the same vectors.
+#[test]
+fn quant_tier_restores_bit_identically_and_matches_plain_flat() {
+    for mode in [QuantMode::Int8, QuantMode::F16] {
+        let dir = scratch_dir(&format!("quant-{mode}"));
+        let (h, q) = workload(56, 100, 11 + mode.tag() as u64);
+        let plain = build_index(IndexKind::Flat, q.vectors().clone(), 1);
+        let quant = FlatIndex::with_quant(q.vectors().clone(), Some(mode));
+        assert_eq!(quant.quant_mode(), Some(mode), "fixture data must accept quantization");
+        let quant: Arc<dyn MipsIndex + Send + Sync> = Arc::new(quant);
+        let k = WorkloadKey::for_vectors(q.vectors(), IndexKind::Flat, 1);
+        TieredIndexCache::with_store(4, &dir).unwrap().get_or_build(k, || {
+            (CachedIndex::Mono(Arc::clone(&quant)), Duration::ZERO)
+        });
+
+        let (via_decode, _) = restore(&dir, k, decode_settings());
+        let (via_mmap, mapped) = restore(&dir, k, PagerSettings::default());
+        assert_mapped(&mapped, &format!("quant-{mode}"));
+        let decode_ix = as_mono(via_decode, "decode");
+        let mmap_ix = as_mono(via_mmap, "mmap");
+
+        // four-way draw identity: plain scan, fresh tier, both restores
+        let want = draws(plain.as_ref(), q.vectors());
+        assert_eq!(want, draws(quant.as_ref(), q.vectors()), "{mode}: tier changes draws");
+        assert_eq!(want, draws(decode_ix.as_ref(), q.vectors()), "{mode}: decode draws");
+        assert_eq!(want, draws(mmap_ix.as_ref(), q.vectors()), "{mode}: mmap draws");
+
+        let mut cfg = MwemConfig::paper(40, 56, 1.0, 1e-3, 29);
+        cfg.log_every = 0;
+        let fcfg = FastMwemConfig::new(cfg, IndexKind::Flat);
+        let base =
+            run_fast_with_index(&fcfg, &q, &h, &mut NativeBackend, plain.as_ref(), Duration::ZERO);
+        for (name, ix) in [("fresh-tier", quant), ("decode", decode_ix), ("mmap", mmap_ix)] {
+            let out =
+                run_fast_with_index(&fcfg, &q, &h, &mut NativeBackend, ix.as_ref(), Duration::ZERO);
+            assert_eq!(
+                base.result.p_avg, out.result.p_avg,
+                "{mode}/{name}: quantized release must equal the plain release"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The ISSUE 8 acceptance bar, quant tier included: an artifact whose
+/// owned row data exceeds the heap budget serves through the mapping
+/// (zero decode restores, near-zero heap) and still draws exactly like a
+/// fresh build — larger-than-RAM serving changes residency, never output.
+#[cfg(unix)]
+#[test]
+fn over_budget_quant_artifact_pages_and_draws_identically() {
+    let dir = scratch_dir("budget-quant");
+    let vs = random_set(600, 16, 13);
+    let quant = FlatIndex::with_quant(vs.clone(), Some(QuantMode::Int8));
+    assert_eq!(quant.quant_mode(), Some(QuantMode::Int8));
+    let quant: Arc<dyn MipsIndex + Send + Sync> = Arc::new(quant);
+    let owned_bytes = CachedIndex::Mono(Arc::clone(&quant)).heap_bytes();
+    let k = WorkloadKey::for_vectors(&vs, IndexKind::Flat, 1);
+    TieredIndexCache::with_store(2, &dir).unwrap().get_or_build(k, || {
+        (CachedIndex::Mono(Arc::clone(&quant)), Duration::ZERO)
+    });
+
+    let budget = HeapBudget::bytes(owned_bytes / 4);
+    let tiered =
+        TieredIndexCache::with_settings(2, budget, &dir, PagerSettings::default()).unwrap();
+    let (value, ev) = tiered.get_or_build(k, || unreachable!("artifact on disk: must restore"));
+    assert!(ev.l2_hit);
+    assert_mapped(&tiered, "over-budget quant");
+    assert!(
+        value.heap_bytes() < owned_bytes / 4,
+        "mapped rows must not count against the heap ({} vs owned {owned_bytes})",
+        value.heap_bytes()
+    );
+    assert!(tiered.l1().resident_bytes() <= budget.limit().unwrap());
+
+    let plain = build_index(IndexKind::Flat, vs.clone(), 1);
+    let paged = as_mono(value, "over-budget");
+    assert_eq!(
+        draws(plain.as_ref(), &vs),
+        draws(paged.as_ref(), &vs),
+        "paged quantized index must reproduce draws exactly"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

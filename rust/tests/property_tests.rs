@@ -224,6 +224,7 @@ fn prop_coordinator_invariants() {
             // alternate cache-enabled and cache-disabled coordinators
             cache_capacity: if cached_round { 3 } else { 0 },
             store_dir: None,
+            ..Default::default()
         });
         let mut accepted_eps = 0.0;
         let mut accepted = 0usize;
@@ -305,6 +306,7 @@ fn prop_server_invariants() {
             eps_per_tenant: Some(cap),
             cache_capacity: 2,
             store_dir: None,
+            ..Default::default()
         });
         let mut tickets = Vec::new();
         let (mut denied, mut shed) = (0usize, 0usize);

@@ -74,6 +74,7 @@ fn reject_policy_surfaces_queue_full_to_the_submitter() {
         eps_per_tenant: None,
         cache_capacity: 2,
         store_dir: None,
+        ..Default::default()
     });
     let mut tickets = vec![server.submit(slow_release(0, 1)).unwrap()];
     let mut rejected = 0usize;
@@ -113,6 +114,7 @@ fn admission_denied_jobs_spend_zero_eps() {
         eps_per_tenant: Some(1.0),
         cache_capacity: 0,
         store_dir: None,
+        ..Default::default()
     });
     let t1 = server.submit(cheap_lp(1, 1, 0.6)).unwrap();
     match server.submit(cheap_lp(1, 2, 0.6)) {
@@ -151,6 +153,7 @@ fn failed_jobs_refund_their_reservation() {
         eps_per_tenant: Some(1.0),
         cache_capacity: 0,
         store_dir: None,
+        ..Default::default()
     });
     let bad = server.submit(invalid_release(5, 0.8)).unwrap();
     let r = bad.wait();
@@ -184,6 +187,7 @@ fn drain_completes_all_in_flight_jobs() {
         eps_per_tenant: None,
         cache_capacity: 0,
         store_dir: None,
+        ..Default::default()
     });
     for seed in 0..6 {
         // drop the tickets: drain must not depend on anyone waiting
@@ -237,6 +241,7 @@ fn single_worker_server_matches_batch_coordinator() {
         eps_per_tenant: None,
         cache_capacity: 4,
         store_dir: None,
+        ..Default::default()
     });
     let tickets: Vec<_> =
         specs.iter().map(|s| server.submit(s.clone()).unwrap()).collect();
@@ -248,6 +253,7 @@ fn single_worker_server_matches_batch_coordinator() {
         eps_cap: None,
         cache_capacity: 4,
         store_dir: None,
+        ..Default::default()
     });
     for s in &specs {
         coord.submit(s.clone()).unwrap();
@@ -280,6 +286,7 @@ fn concurrent_mixed_tenants_stay_within_caps() {
         eps_per_tenant: Some(2.0),
         cache_capacity: 4,
         store_dir: None,
+        ..Default::default()
     });
     std::thread::scope(|s| {
         for tenant in 0..3u64 {

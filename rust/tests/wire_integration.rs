@@ -37,6 +37,7 @@ fn malformed_bodies_answer_400_and_spend_nothing() {
         eps_per_tenant: Some(1.0),
         cache_capacity: 2,
         store_dir: None,
+        ..ServerConfig::default()
     });
     let addr = wire.local_addr().to_string();
     let mut c = WireClient::connect(&addr).expect("connect");
@@ -92,6 +93,7 @@ fn unknown_tokens_are_rejected_with_401() {
         eps_per_tenant: Some(1.0),
         cache_capacity: 0,
         store_dir: None,
+        ..ServerConfig::default()
     });
     let addr = wire.local_addr().to_string();
     let mut c = WireClient::connect(&addr).expect("connect");
@@ -124,6 +126,7 @@ fn reject_queue_answers_429_and_retry_after_is_honored() {
         eps_per_tenant: None,
         cache_capacity: 2,
         store_dir: None,
+        ..ServerConfig::default()
     });
     let addr = wire.local_addr().to_string();
 
@@ -177,6 +180,64 @@ fn reject_queue_answers_429_and_retry_after_is_honored() {
     assert!(m.counter("http_429") >= 1);
 }
 
+/// Per-connection rate limiting: a token bucket admits the configured
+/// burst, then sheds with 429 + a numeric `Retry-After` *before* parsing
+/// or submission — zero ε spent, keep-alive survives every shed, and a
+/// fresh connection gets a fresh bucket (the limit is per connection,
+/// not global).
+#[test]
+fn per_connection_rate_limit_answers_429_and_spends_nothing() {
+    let server = Server::start(ServerConfig {
+        workers: 2,
+        queue_depth: 8,
+        eps_per_tenant: Some(1.0),
+        cache_capacity: 2,
+        ..ServerConfig::default()
+    });
+    let wire = WireServer::start(
+        server,
+        &WireConfig { rate_limit: 0.25, rate_burst: 2, ..WireConfig::default() },
+    )
+    .expect("bind loopback");
+    let addr = wire.local_addr().to_string();
+
+    // The burst admits 2 back-to-back jobs; with refill at one token per
+    // 4 seconds the rest of the flood sheds deterministically.
+    let body = r#"{"kind":"lp","m":50,"d":6,"t":10,"eps":0.25,"mode":"exhaustive"}"#;
+    let mut c = WireClient::connect(&addr).expect("connect");
+    for i in 0..6 {
+        let r = c.post_job("tenant-0", body).expect("flood");
+        if i < 2 {
+            assert_eq!(r.status, 200, "burst request {i} must pass: {}", r.body_str());
+        } else {
+            assert_eq!(r.status, 429, "drained bucket must shed request {i}");
+            let secs: u64 = r
+                .header("retry-after")
+                .expect("rate-limit 429 must carry Retry-After")
+                .parse()
+                .expect("Retry-After must be numeric");
+            assert!(secs >= 1, "the wait hint is at least one second");
+        }
+    }
+
+    // the limit is per connection: a fresh socket starts a fresh bucket
+    let mut c2 = WireClient::connect(&addr).expect("connect 2");
+    let r = c2.get("/v1/metrics", Some("tenant-0")).expect("fresh conn");
+    assert_eq!(r.status, 200, "another connection is unaffected");
+
+    wire.shutdown();
+    let m = wire.drain();
+    assert_eq!(m.counter("rate_limited"), 4);
+    assert_eq!(m.counter("http_429"), 4);
+    assert_eq!(m.counter("jobs_completed"), 2, "only the burst ran");
+    assert_eq!(m.counter("parse_errors"), 0, "the shed precedes parsing");
+    assert_eq!(
+        m.gauge("tenant_0_eps_spent"),
+        Some(0.5),
+        "shed requests spend no ε — only the two admitted jobs appear"
+    );
+}
+
 /// The byte-identity contract: for a fixed spec the chunked wire body
 /// equals the in-process encoding exactly, under concurrent mixed-tenant
 /// load and for repeated (cold, then warm-cache) executions — and release
@@ -190,6 +251,7 @@ fn wire_bodies_are_byte_identical_to_in_process_execution() {
         eps_per_tenant: None,
         cache_capacity: 8,
         store_dir: None,
+        ..ServerConfig::default()
     });
     let addr = wire.local_addr().to_string();
 

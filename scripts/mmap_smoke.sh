@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Larger-than-RAM paging smoke (DESIGN.md §12), runnable locally and in CI:
+#
+#   ./scripts/mmap_smoke.sh [STORE_DIR]
+#
+# Exercises the zero-copy restore path across processes:
+#
+#   1. serve a batch against a fresh artifact store — every index is a
+#      cold build and is persisted as a page-aligned v3 artifact;
+#   2. serve the same batch again under a 1 MiB heap budget — every index
+#      must come back from the store (store_hit > 0, store_miss == 0) and
+#      every promotion must page through the mmap pager rather than the
+#      copying decode path (store_mmap_restore > 0, store_decode_restore
+#      == 0), with the L1 byte gauge published for the budget to act on.
+#
+# The decode==0 assertion is safe on the Linux CI runners: the mapped
+# restore only falls back to a heap decode where mmap is unavailable.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+STORE="${1:-/tmp/fastmwem-mmap-smoke}"
+rm -rf "$STORE"
+
+cargo build --release
+
+echo "== 1. cold serve: build and persist paged artifacts =="
+cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 --store-dir="$STORE"
+
+echo "== 2. budget-constrained serve: restore by paging, never by decoding =="
+out=$(cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 \
+    --store-dir="$STORE" --heap-budget-mb=1)
+echo "$out"
+
+echo "$out" | grep -Eq '"store_hit":[1-9]' \
+    || { echo "FAIL: restarted serve must restore indices from the store (store_hit > 0)"; exit 1; }
+echo "$out" | grep -Eq '"store_miss":0[,}]' \
+    || { echo "FAIL: restarted serve must rebuild zero indices (store_miss == 0)"; exit 1; }
+echo "$out" | grep -Eq '"store_mmap_restore":[1-9]' \
+    || { echo "FAIL: budget-constrained restores must page via mmap (store_mmap_restore > 0)"; exit 1; }
+echo "$out" | grep -Eq '"store_decode_restore":0[,}]' \
+    || { echo "FAIL: budget-constrained restores must never heap-decode (store_decode_restore == 0)"; exit 1; }
+echo "$out" | grep -q '"index_cache_bytes":' \
+    || { echo "FAIL: serve must publish the index_cache_bytes gauge"; exit 1; }
+
+echo "mmap smoke passed"
