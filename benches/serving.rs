@@ -127,6 +127,47 @@ fn run_wire_mix(workers: usize, jobs: usize, quick: bool, clients: usize) -> (f6
     (jobs as f64 / wall.as_secs_f64().max(1e-9), wall)
 }
 
+/// Fleet axis (DESIGN.md §13): the same mix through TWO servers sharing
+/// one artifact store directory — the multi-process serving topology,
+/// in-process. Jobs partition across the pair the way the router example
+/// partitions tenants, so both servers see both repeated workloads and
+/// the build lease must collapse each workload's cold miss to one build
+/// fleet-wide. Returns (jobs/sec, total store builds across the fleet).
+fn run_fleet_mix(jobs: usize, quick: bool) -> (f64, u64) {
+    let dir = std::env::temp_dir()
+        .join(format!("fastmwem-bench-fleet-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let servers: Vec<_> = (0..2)
+        .map(|_| {
+            Server::start(ServerConfig {
+                workers: 2,
+                queue_depth: jobs.max(8),
+                policy: QueuePolicy::Block,
+                eps_per_tenant: None,
+                cache_capacity: 8,
+                store_dir: Some(dir.clone()),
+                ..Default::default()
+            })
+        })
+        .collect();
+    // No warmup: the cold builds are the point — the fleet pays each one
+    // exactly once, wherever it lands.
+    let t0 = Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| servers[(i / 2) % 2].submit(mixed_spec(i, quick)).expect("submit"))
+        .collect();
+    for t in tickets {
+        t.wait().outcome.expect("job ok");
+    }
+    let wall = t0.elapsed();
+    let builds: u64 = servers
+        .into_iter()
+        .map(|s| s.drain().counter("store_miss"))
+        .sum();
+    let _ = std::fs::remove_dir_all(&dir);
+    (jobs as f64 / wall.as_secs_f64().max(1e-9), builds)
+}
+
 /// Run `jobs` mixed jobs through a fresh server at the given worker count;
 /// returns (jobs/sec, timed wall-clock, drained metrics).
 fn run_mix(workers: usize, jobs: usize, quick: bool) -> (f64, Duration, Metrics) {
@@ -239,6 +280,19 @@ fn main() {
         wire_wall.as_secs_f64() * 1e3,
     );
 
+    // Fleet axis: two servers on one store — the cross-process lease must
+    // hold the fleet to one build per repeated workload (DESIGN.md §13).
+    let (fleet_jps, fleet_builds) = run_fleet_mix(jobs, quick);
+    println!(
+        "fleet (2 servers x 2 workers, 1 store): {fleet_jps:>7.2} jobs/sec  \
+         ({fleet_builds} builds for 2 workloads)"
+    );
+    assert!(
+        fleet_builds <= 2,
+        "the build lease must dedup cold misses fleet-wide \
+         (2 workloads, got {fleet_builds} builds)"
+    );
+
     if let Some(path) = json_path {
         let mut wire_row = BTreeMap::new();
         wire_row.insert("jobs_per_sec".to_string(), Json::Num(wire_jps));
@@ -251,6 +305,10 @@ fn main() {
         obj.insert("speedup_4v1".to_string(), Json::Num(speedup));
         obj.insert("wire".to_string(), Json::Obj(wire_row));
         obj.insert("wire_over_inproc".to_string(), Json::Num(wire_over_inproc));
+        let mut fleet_row = BTreeMap::new();
+        fleet_row.insert("jobs_per_sec".to_string(), Json::Num(fleet_jps));
+        fleet_row.insert("store_builds".to_string(), Json::Num(fleet_builds as f64));
+        obj.insert("fleet".to_string(), Json::Obj(fleet_row));
         std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
         println!("wrote {path}");
     }

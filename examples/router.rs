@@ -1,0 +1,194 @@
+//! Tenant-partitioned router over a multi-daemon fleet (DESIGN.md §13):
+//! N wire daemons share ONE artifact store directory, and a thin HTTP
+//! router in front hash-partitions tenants across them. The store is the
+//! only coordination between the daemons — build leases make a shared
+//! cold miss build once fleet-wide, and the manifest watch propagates
+//! workload updates committed by one daemon to the others before they
+//! can serve a stale generation.
+//!
+//! The demo starts two in-process daemons on one scratch store, routes
+//! four tenants' traffic through the partitioner, evolves a workload
+//! from one side of the fleet, and then reads both daemons' metrics to
+//! show: one build per workload fleet-wide (`store_hit` on the daemon
+//! that did not build), `stale_generation_serves == 0` on both, and the
+//! peer invalidation the router's partitioning made necessary.
+//!
+//! Run:  cargo run --release --example router
+//!
+//! `scripts/multiproc_smoke.sh` drives the same topology across real
+//! process boundaries in CI.
+
+use fast_mwem::server::{
+    QueuePolicy, Server, ServerConfig, WireClient, WireConfig, WireServer,
+};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+
+/// FNV-1a over the bearer token: the router's partition function. Stable
+/// across restarts and router replicas — a tenant always lands on the
+/// same daemon, so per-tenant queue ordering is preserved fleet-wide.
+fn partition(token: &str, backends: usize) -> usize {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in token.bytes() {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % backends as u64) as usize
+}
+
+/// One relayed request: parse the head far enough to route (method, path,
+/// bearer token, content-length), re-issue it to the chosen backend with
+/// a [`WireClient`], and write the backend's answer back with
+/// Content-Length framing. Returns false when the client closed.
+fn relay(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    backends: &[String],
+) -> std::io::Result<bool> {
+    let mut line = String::new();
+    if reader.read_line(&mut line)? == 0 {
+        return Ok(false); // client hung up between requests
+    }
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => return Ok(false),
+    };
+    let (mut token, mut content_len) = (None, 0usize);
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 || h.trim().is_empty() {
+            break;
+        }
+        let Some((name, value)) = h.split_once(':') else { continue };
+        let (name, value) = (name.trim().to_ascii_lowercase(), value.trim());
+        if name == "authorization" {
+            token = value.strip_prefix("Bearer ").map(str::to_string);
+        } else if name == "content-length" {
+            content_len = value.parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8_lossy(&body).into_owned();
+
+    // Route on the token; tokenless probes (health checks) go to backend
+    // 0 — they are tenant-free, any daemon can answer.
+    let chosen = token.as_deref().map_or(0, |t| partition(t, backends.len()));
+    let r = WireClient::connect(&backends[chosen])?.request(
+        &method,
+        &path,
+        token.as_deref(),
+        if content_len > 0 { Some(&body) } else { None },
+    )?;
+    let content_type = r.header("content-type").unwrap_or("application/json");
+    write!(
+        writer,
+        "HTTP/1.1 {} relayed\r\ncontent-type: {}\r\nx-backend: {}\r\n\
+         content-length: {}\r\n\r\n",
+        r.status,
+        content_type,
+        chosen,
+        r.body.len()
+    )?;
+    writer.write_all(&r.body)?;
+    writer.flush()?;
+    Ok(true)
+}
+
+fn spawn_router(backends: Vec<String>) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind router");
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        for conn in listener.incoming().flatten() {
+            let backends = backends.clone();
+            std::thread::spawn(move || {
+                conn.set_nodelay(true).ok();
+                let mut writer = match conn.try_clone() {
+                    Ok(w) => w,
+                    Err(_) => return,
+                };
+                let mut reader = BufReader::new(conn);
+                while matches!(relay(&mut reader, &mut writer, &backends), Ok(true)) {}
+            });
+        }
+    });
+    addr
+}
+
+fn main() {
+    // One shared store dir — the fleet's entire coordination substrate.
+    let store = std::env::temp_dir()
+        .join(format!("fastmwem-router-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store);
+
+    let daemon = || {
+        let server = Server::start(ServerConfig {
+            workers: 2,
+            queue_depth: 16,
+            policy: QueuePolicy::Block,
+            eps_per_tenant: None,
+            cache_capacity: 4,
+            store_dir: Some(store.clone()),
+            ..Default::default()
+        });
+        WireServer::start(server, &WireConfig { tenants: 4, ..WireConfig::default() })
+            .expect("bind daemon")
+    };
+    let daemons = [daemon(), daemon()];
+    let backends: Vec<String> =
+        daemons.iter().map(|d| d.local_addr().to_string()).collect();
+    let router = spawn_router(backends.clone());
+    println!("router on {router} over daemons {backends:?} sharing {store:?}\n");
+
+    // Four tenants hit ONE workload through the router. Tenants split
+    // across both daemons, yet the fleet builds the index once: the
+    // second daemon's cold miss finds the first's committed artifact.
+    let spec = |seed: usize| {
+        format!(r#"{{"kind":"release","u":64,"m":120,"t":40,"workload":7,"seed":{seed}}}"#)
+    };
+    for tenant in 0..4u64 {
+        let token = format!("tenant-{tenant}");
+        let mut c = WireClient::connect(&router).expect("connect router");
+        let r = c.post_job(&token, &spec(tenant as usize)).expect("job");
+        println!(
+            "  {token} -> daemon {} ({}, {} body bytes)",
+            r.header("x-backend").unwrap_or("?"),
+            r.status,
+            r.body.len()
+        );
+    }
+
+    // One tenant evolves the workload; every tenant's next release — on
+    // BOTH daemons — must answer the new generation (the manifest watch
+    // carries the update across the process boundary).
+    let mut c = WireClient::connect(&router).expect("connect router");
+    let r = c
+        .post_job("tenant-0", r#"{"kind":"update","workload":7,"insert":4,"tombstone":2}"#)
+        .expect("update");
+    println!("\n  tenant-0 update -> daemon {} ({})", r.header("x-backend").unwrap_or("?"), r.status);
+    for tenant in 0..4u64 {
+        let token = format!("tenant-{tenant}");
+        let r = WireClient::connect(&router)
+            .expect("connect router")
+            .post_job(&token, &spec(100 + tenant as usize))
+            .expect("job");
+        println!("  {token} -> daemon {} ({})", r.header("x-backend").unwrap_or("?"), r.status);
+    }
+
+    // Drain the fleet and read the coordination counters.
+    println!();
+    for (i, d) in daemons.into_iter().enumerate() {
+        d.shutdown();
+        d.wait_for_shutdown();
+        let m = d.drain();
+        println!(
+            "daemon {i}: store_miss {} (built), store_hit {} (reused a peer's build), \
+             peer_invalidations {}, stale_generation_serves {}",
+            m.counter("store_miss"),
+            m.counter("store_hit"),
+            m.counter("peer_invalidations"),
+            m.counter("stale_generation_serves"),
+        );
+    }
+    let _ = std::fs::remove_dir_all(&store);
+}

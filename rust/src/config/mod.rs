@@ -214,26 +214,81 @@ impl CacheConfig {
 /// ```text
 /// [store]
 /// dir = "artifacts/index-store"   # unset disables persistence
+/// lease = true          # build-lease dedup across processes (DESIGN.md §13)
+/// lease_ttl_ms = 30000  # lease expiry (max expected build time)
+/// lease_poll_ms = 25    # waiter poll cadence
+/// lease_wait_ms = 120000  # give up waiting and build independently
+/// watch = true          # manifest generation watch across processes
 /// ```
 ///
 /// The CLI also accepts `--store-dir=PATH` as shorthand for
-/// `--store.dir=PATH` (the shorthand wins over the section value).
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// `--store.dir=PATH` (the shorthand wins over the section value). The
+/// lease and watch knobs only matter when two or more processes share
+/// one `dir` (DESIGN.md §13); single-process serving pays one
+/// uncontended lock-file create per build and one stat per miss.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct StoreConfig {
     /// Store directory (`None` = no persistence; warm serving stays
     /// in-memory only).
     pub dir: Option<String>,
+    /// Build-lease deduplication across processes sharing `dir`.
+    pub lease: bool,
+    /// Lease expiry in ms — a holder silent this long is presumed dead
+    /// and its lease is taken over.
+    pub lease_ttl_ms: u64,
+    /// Waiter poll cadence in ms while a peer holds the build lease.
+    pub lease_poll_ms: u64,
+    /// Upper bound in ms on waiting for a peer's build before degrading
+    /// to an independent build.
+    pub lease_wait_ms: u64,
+    /// Manifest generation watch: adopt peer-committed workload updates
+    /// before serving (keeps `stale_generation_serves == 0` across
+    /// processes).
+    pub watch: bool,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        let l = crate::store::LeaseSettings::default();
+        StoreConfig {
+            dir: None,
+            lease: l.enabled,
+            lease_ttl_ms: l.ttl.as_millis() as u64,
+            lease_poll_ms: l.poll.as_millis() as u64,
+            lease_wait_ms: l.max_wait.as_millis() as u64,
+            watch: true,
+        }
+    }
 }
 
 impl StoreConfig {
     /// Read the `[store]` section, honoring the `--store-dir=PATH`
     /// shorthand (the shorthand wins over `store.dir`).
     pub fn from_config(cfg: &Config) -> Result<Self> {
+        let d = StoreConfig::default();
         let dir = cfg
             .get_str("store-dir")
             .or_else(|| cfg.get_str("store.dir"))
             .map(str::to_string);
-        Ok(StoreConfig { dir })
+        Ok(StoreConfig {
+            dir,
+            lease: cfg.or("store.lease", d.lease)?,
+            lease_ttl_ms: cfg.or("store.lease_ttl_ms", d.lease_ttl_ms)?,
+            lease_poll_ms: cfg.or("store.lease_poll_ms", d.lease_poll_ms)?,
+            lease_wait_ms: cfg.or("store.lease_wait_ms", d.lease_wait_ms)?,
+            watch: cfg.or("store.watch", d.watch)?,
+        })
+    }
+
+    /// The `[store]` lease knobs as the store layer's
+    /// [`crate::store::LeaseSettings`].
+    pub fn lease_settings(&self) -> crate::store::LeaseSettings {
+        crate::store::LeaseSettings {
+            enabled: self.lease,
+            ttl: std::time::Duration::from_millis(self.lease_ttl_ms),
+            poll: std::time::Duration::from_millis(self.lease_poll_ms),
+            max_wait: std::time::Duration::from_millis(self.lease_wait_ms),
+        }
     }
 }
 
@@ -502,6 +557,25 @@ mod tests {
             StoreConfig::from_config(&c).unwrap().dir.as_deref(),
             Some("/tmp/other")
         );
+
+        // multi-process knobs (DESIGN.md §13) parse and map onto the
+        // store layer's LeaseSettings
+        let c = Config::parse(
+            "[store]\nlease = false\nlease_ttl_ms = 5000\nlease_poll_ms = 10\n\
+             lease_wait_ms = 9000\nwatch = false\n",
+        )
+        .unwrap();
+        let s = StoreConfig::from_config(&c).unwrap();
+        assert!(!s.lease && !s.watch);
+        let l = s.lease_settings();
+        assert!(!l.enabled);
+        assert_eq!(l.ttl, std::time::Duration::from_millis(5000));
+        assert_eq!(l.poll, std::time::Duration::from_millis(10));
+        assert_eq!(l.max_wait, std::time::Duration::from_millis(9000));
+        // defaults: lease + watch on, TTL in the tens of seconds
+        let d = StoreConfig::default();
+        assert!(d.lease && d.watch);
+        assert_eq!(d.lease_settings(), crate::store::LeaseSettings::default());
     }
 
     #[test]

@@ -198,6 +198,18 @@ pub struct CacheReport {
     /// (DESIGN.md §9) — kept separate from `promoted` so the store's
     /// decode metric is never inflated by in-memory patch work.
     pub patch_time: Duration,
+    /// Misses where this process won the build lease and paid the build
+    /// on behalf of every peer sharing the store dir (DESIGN.md §13).
+    pub lease_acquired: u64,
+    /// Consultations that waited on a peer's build lease — whether they
+    /// then promoted the peer's artifact from L2 or acquired the expired
+    /// lease themselves.
+    pub lease_waited: u64,
+    /// Leases expired and taken over from a crashed or stalled peer.
+    pub lease_takeovers: u64,
+    /// Peer-committed workload generations adopted via the manifest watch
+    /// before this process could serve a stale generation (DESIGN.md §13).
+    pub peer_invalidations: u64,
 }
 
 impl CacheReport {
@@ -228,6 +240,10 @@ impl CacheReport {
             m.inc("store_hit", self.l2_hits);
             m.inc("store_miss", self.misses);
             m.inc("store_promote_us", self.promoted.as_micros() as u64);
+            m.inc("lease_acquired", self.lease_acquired);
+            m.inc("lease_waited", self.lease_waited);
+            m.inc("lease_takeovers", self.lease_takeovers);
+            m.inc("peer_invalidations", self.peer_invalidations);
         }
     }
 }

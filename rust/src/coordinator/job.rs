@@ -301,6 +301,13 @@ pub fn execute_with_cache(
                         None => fingerprint_vectors(base_q.vectors()),
                     };
                     reg.ensure_base(fp, r.m);
+                    // Adopt any generations a peer process committed to the
+                    // shared store before we read the family's generation —
+                    // the cross-process half of the never-serve-stale
+                    // invariant (DESIGN.md §13).
+                    if let Some(c) = cache {
+                        report.peer_invalidations += c.sync_peer_updates(fp, reg);
+                    }
                     if reg.generation(fp) == 0 {
                         (0, Some(fp), base_q)
                     } else {
@@ -461,6 +468,12 @@ pub fn execute_with_cache(
                 None => fingerprint_vectors(base_q.vectors()),
             };
             reg.ensure_base(fp, u.m);
+            // Land this update on top of any chain a peer already
+            // committed, not beside it: sync first so the generation we
+            // mint extends the store's delta log (DESIGN.md §13).
+            if let Some(c) = cache {
+                report.peer_invalidations += c.sync_peer_updates(fp, reg);
+            }
             let (generation, delta) =
                 reg.append_synthesized(fp, u.u, u.insert, u.tombstone)?;
             // Persist the compact delta artifact so the new generation

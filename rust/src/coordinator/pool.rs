@@ -5,7 +5,7 @@
 use super::cache::IndexCache;
 use super::job::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
-use crate::store::{DiskStore, HeapBudget, PagerSettings, TieredIndexCache};
+use crate::store::{DiskStore, HeapBudget, LeaseSettings, PagerSettings, TieredIndexCache};
 use crate::workloads::WorkloadRegistry;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -83,6 +83,14 @@ pub struct CoordinatorConfig {
     /// How store artifacts are restored: zero-copy mmap paging vs heap
     /// decode (DESIGN.md §12).
     pub pager: PagerSettings,
+    /// Build-lease protocol for multi-process store sharing (DESIGN.md
+    /// §13): on a shared miss exactly one process builds while peers
+    /// wait-and-promote. Ignored without a store.
+    pub lease: LeaseSettings,
+    /// Manifest generation watch (DESIGN.md §13): poll the shared
+    /// manifest's stamp so peer-committed workload updates invalidate
+    /// stale local state before it can serve. Ignored without a store.
+    pub watch: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -94,6 +102,8 @@ impl Default for CoordinatorConfig {
             store_dir: None,
             heap_budget: HeapBudget::unlimited(),
             pager: PagerSettings::default(),
+            lease: LeaseSettings::default(),
+            watch: true,
         }
     }
 }
@@ -133,6 +143,14 @@ pub(crate) fn finalize_serving_metrics(m: &mut Metrics, cache: Option<&TieredInd
             m.set_gauge("store_artifacts", st.artifacts as f64);
             m.set_gauge("store_deltas", st.deltas as f64);
             m.set_gauge("store_load_failures", st.load_failures as f64);
+            // Multi-process coordination counters (DESIGN.md §13),
+            // materialized even at zero so the CI multi-process smoke can
+            // assert on every process's metrics dump uniformly.
+            m.inc("lease_acquired", 0);
+            m.inc("lease_waited", 0);
+            m.inc("lease_takeovers", 0);
+            m.inc("peer_invalidations", 0);
+            m.set_gauge("store_manifest_reloads", st.manifest_reloads as f64);
         }
     }
 }
@@ -190,7 +208,9 @@ impl Coordinator {
                         cfg.cache_capacity,
                         cfg.heap_budget,
                     ),
-                };
+                }
+                .with_lease(cfg.lease)
+                .with_watch(cfg.watch);
                 Some(Arc::new(tiered))
             } else {
                 None

@@ -201,6 +201,18 @@ lookup instead of rebuilt, and a stale generation is never served. In
 every tenant submit one update per N jobs, mixing updates into the release
 stream.
 
+Multi-process serving (DESIGN.md §13): N daemons may share one
+--store-dir. A shared cold miss takes a build *lease* (a lock file next
+to the artifact) so exactly one process builds while peers wait and
+promote the committed artifact (lease_acquired / lease_waited /
+lease_takeovers counters); a crashed builder's lease expires after
+[store] lease_ttl_ms and is taken over. A manifest *watch* (one stat per
+miss) adopts peer-committed workload updates before serving, keeping
+stale_generation_serves == 0 across processes (peer_invalidations
+counter). Knobs in the [store] section: lease, lease_ttl_ms,
+lease_poll_ms, lease_wait_ms, watch. examples/router.rs hash-partitions
+tenants across such a daemon fleet.
+
 Perf gate: `bench-compare` checks fresh bench JSON (machine-independent
 warm-path ratios) against BENCH_baseline.json and exits nonzero on a
 regression beyond the tolerance — the same gate CI runs per commit.
@@ -367,9 +379,11 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         workers,
         eps_cap,
         cache_capacity: cache.capacity,
-        store_dir: store.dir.map(std::path::PathBuf::from),
+        store_dir: store.dir.as_deref().map(std::path::PathBuf::from),
         heap_budget: pager.heap_budget(),
         pager: pager.settings(),
+        lease: store.lease_settings(),
+        watch: store.watch,
     });
     let mut accepted = 0usize;
     for i in 0..jobs {
@@ -723,7 +737,9 @@ fn cmd_update_workload(cfg: &Config) -> Result<()> {
             );
             TieredIndexCache::memory_only(cache_cfg.capacity)
         }
-    };
+    }
+    .with_lease(store.lease_settings())
+    .with_watch(store.watch);
     let registry = WorkloadRegistry::new();
     if let Some(s) = cache.store() {
         registry.restore(s.delta_chains());

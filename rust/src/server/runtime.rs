@@ -18,7 +18,7 @@ use crate::config::{CacheConfig, Config, PagerConfig, StoreConfig};
 use crate::coordinator::pool::finalize_serving_metrics;
 use crate::coordinator::{execute_with_cache, JobResult, JobSpec};
 use crate::metrics::Metrics;
-use crate::store::{HeapBudget, PagerSettings, TieredIndexCache};
+use crate::store::{HeapBudget, LeaseSettings, PagerSettings, TieredIndexCache};
 use crate::workloads::WorkloadRegistry;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
@@ -50,6 +50,13 @@ pub struct ServerConfig {
     /// How store artifacts are restored: zero-copy mmap paging vs heap
     /// decode (DESIGN.md §12).
     pub pager: PagerSettings,
+    /// Build-lease protocol for N servers sharing one store dir
+    /// (DESIGN.md §13): a shared miss builds once, peers wait-and-promote.
+    pub lease: LeaseSettings,
+    /// Manifest generation watch (DESIGN.md §13): adopt peer-committed
+    /// workload updates before serving, keeping the
+    /// `stale_generation_serves == 0` invariant across processes.
+    pub watch: bool,
 }
 
 impl Default for ServerConfig {
@@ -63,6 +70,8 @@ impl Default for ServerConfig {
             store_dir: None,
             heap_budget: HeapBudget::unlimited(),
             pager: PagerSettings::default(),
+            lease: LeaseSettings::default(),
+            watch: true,
         }
     }
 }
@@ -91,6 +100,7 @@ impl ServerConfig {
             None => cfg.get("server.eps_per_tenant")?,
         };
         let pager = PagerConfig::from_config(cfg)?;
+        let store = StoreConfig::from_config(cfg)?;
         Ok(ServerConfig {
             workers: cfg.or("workers", cfg.or("server.workers", d.workers)?)?,
             queue_depth: cfg
@@ -98,9 +108,11 @@ impl ServerConfig {
             policy,
             eps_per_tenant,
             cache_capacity: CacheConfig::from_config(cfg)?.capacity,
-            store_dir: StoreConfig::from_config(cfg)?.dir.map(PathBuf::from),
+            store_dir: store.dir.as_deref().map(PathBuf::from),
             heap_budget: pager.heap_budget(),
             pager: pager.settings(),
+            lease: store.lease_settings(),
+            watch: store.watch,
         })
     }
 }
@@ -217,7 +229,9 @@ impl Server {
                         cfg.cache_capacity,
                         cfg.heap_budget,
                     ),
-                };
+                }
+                .with_lease(cfg.lease)
+                .with_watch(cfg.watch);
                 Some(Arc::new(tiered))
             } else {
                 None
@@ -572,5 +586,17 @@ mod tests {
         let s = ServerConfig::from_config(&cfg).unwrap();
         assert!(!s.pager.enabled && s.pager.verify);
         assert_eq!(s.heap_budget.limit(), Some(5 << 20));
+
+        // the [store] multi-process knobs flow into the server's lease
+        // and watch settings (DESIGN.md §13); defaults keep both on
+        assert_eq!(d.lease, LeaseSettings::default());
+        assert!(d.watch);
+        let cfg = Config::parse(
+            "[store]\nlease_ttl_ms = 7000\nwatch = false\n",
+        )
+        .unwrap();
+        let s = ServerConfig::from_config(&cfg).unwrap();
+        assert_eq!(s.lease.ttl, std::time::Duration::from_millis(7000));
+        assert!(s.lease.enabled && !s.watch);
     }
 }

@@ -1,0 +1,377 @@
+//! Cross-process build leases: lock-file deduplication of index builds
+//! over a shared artifact store (DESIGN.md §13).
+//!
+//! When N serving processes share one `--store-dir`, a cold workload
+//! would otherwise be built N times — once per process — even though the
+//! first finished build is immediately loadable by everyone else. A
+//! *build lease* is a tiny lock file (`<artifact_id>.lease`) created with
+//! `O_CREAT|O_EXCL` next to the artifact it guards: exactly one process
+//! wins the create, builds, persists, and releases; the others observe
+//! [`Acquire::Busy`], poll the store, and promote the winner's artifact
+//! from L2 instead of building ([`crate::store::TieredIndexCache`] drives
+//! that loop).
+//!
+//! Failure philosophy, same as the rest of the store: the lease is an
+//! *optimization*, never a correctness dependency.
+//!
+//! * A holder that crashes mid-build leaves its lock file behind — with
+//!   no heartbeat its mtime goes stale, and after [`LeaseSettings::ttl`]
+//!   any waiter may remove the file and retake the lease (the `O_EXCL`
+//!   re-create arbitrates racing takeovers: exactly one wins).
+//! * A holder that is merely *slow* (build time > ttl) loses exclusivity
+//!   and some peer duplicates the build. That is wasted work, not a
+//!   hazard: artifact writes are content-deterministic, catalog commits
+//!   merge with the on-disk manifest, and generation supersession only
+//!   ever removes *older* snapshots — a late loser cannot clobber a
+//!   newer artifact. Long builds can call [`Lease::refresh`] to keep the
+//!   mtime live.
+//! * A directory that cannot host lock files at all (permissions, exotic
+//!   filesystems) surfaces [`LeaseError::Unsupported`]; callers degrade
+//!   to independent builds — N processes behave like N strangers, which
+//!   is exactly the pre-lease world.
+
+use std::fmt;
+use std::fs::{self, OpenOptions};
+use std::io::{ErrorKind, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, SystemTime};
+
+/// Knobs for the cross-process build-dedup protocol, carried by
+/// [`crate::store::TieredIndexCache`] and settable from the `[store]`
+/// config section (`lease`, `lease_ttl_ms`, `lease_poll_ms`,
+/// `lease_wait_ms`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeaseSettings {
+    /// Whether misses try to acquire a build lease at all. Off means
+    /// every process builds independently (the pre-lease behavior).
+    pub enabled: bool,
+    /// Age past which an unrefreshed lock file is considered abandoned
+    /// and may be taken over. This is the "longest expected index build"
+    /// knob: too short duplicates slow builds, too long stalls waiters
+    /// behind a crashed holder.
+    pub ttl: Duration,
+    /// How often a waiter re-polls the store (and the lease) while the
+    /// holder builds.
+    pub poll: Duration,
+    /// Upper bound on total waiting before a peer gives up on the holder
+    /// and builds independently. A liveness backstop, not a tuning knob.
+    pub max_wait: Duration,
+}
+
+impl Default for LeaseSettings {
+    fn default() -> Self {
+        LeaseSettings {
+            enabled: true,
+            ttl: Duration::from_secs(30),
+            poll: Duration::from_millis(25),
+            max_wait: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Why a lease could not be used on this store directory. These degrade
+/// the caller to an independent build — never to a failed job.
+#[derive(Debug)]
+pub enum LeaseError {
+    /// The directory refused the lock-file protocol itself (create or
+    /// stat failed for a reason other than contention), e.g. a read-only
+    /// mount. Contains the offending path and the OS detail.
+    Unsupported {
+        /// The lock-file path that could not be created or inspected.
+        path: PathBuf,
+        /// Stringified OS error.
+        detail: String,
+    },
+}
+
+impl fmt::Display for LeaseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            LeaseError::Unsupported { path, detail } => {
+                write!(f, "store dir does not support lock files at {}: {detail}", path.display())
+            }
+        }
+    }
+}
+
+impl std::error::Error for LeaseError {}
+
+/// Outcome of one (non-blocking) acquisition attempt.
+#[derive(Debug)]
+pub enum Acquire {
+    /// We hold the lease: build, persist, then drop the guard.
+    Held(Lease),
+    /// A live peer holds it; `age` is how old their lock file is. Poll
+    /// the store and retry.
+    Busy {
+        /// Age of the current holder's lock file at the time we looked.
+        age: Duration,
+    },
+}
+
+/// RAII guard for a held build lease. Dropping it releases the lock file
+/// (only if we still own it — a takeover by a peer after our TTL lapsed
+/// is left untouched).
+#[derive(Debug)]
+pub struct Lease {
+    path: PathBuf,
+    token: String,
+    took_over: bool,
+}
+
+/// Process-wide acquisition counter; combined with the pid it makes each
+/// lease token unique without needing a clock or RNG.
+static ACQUISITIONS: AtomicU64 = AtomicU64::new(0);
+
+fn next_token() -> String {
+    let n = ACQUISITIONS.fetch_add(1, Ordering::Relaxed);
+    format!("{}:{n}", std::process::id())
+}
+
+impl Lease {
+    /// True when this lease was obtained by expiring a stale lock file
+    /// left behind by a crashed (or stalled) peer.
+    pub fn took_over(&self) -> bool {
+        self.took_over
+    }
+
+    /// Re-stamp the lock file's mtime so a long build keeps its
+    /// exclusivity past [`LeaseSettings::ttl`]. Returns `false` if the
+    /// file is gone or no longer ours (a peer already expired us) — the
+    /// build should continue regardless; the worst case is a duplicate.
+    pub fn refresh(&self) -> bool {
+        if !self.owned() {
+            return false;
+        }
+        // Rewriting the (tiny) body updates mtime on every platform we
+        // care about; O_EXCL is deliberately absent — the file exists.
+        fs::write(&self.path, format!("token {}\n", self.token)).is_ok()
+    }
+
+    fn owned(&self) -> bool {
+        let mut body = String::new();
+        match fs::File::open(&self.path).and_then(|mut f| f.read_to_string(&mut body)) {
+            Ok(_) => body.contains(&self.token),
+            Err(_) => false,
+        }
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        // Read-check-delete is not atomic: a peer could take over in the
+        // gap and we would delete *their* file. The consequence is one
+        // duplicated build, which the store's merge-and-supersede write
+        // path already tolerates — not worth a platform-locking API.
+        if self.owned() {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Path of the lock file guarding `artifact_id` inside `dir`.
+pub fn lease_path(dir: &Path, artifact_id: &str) -> PathBuf {
+    dir.join(format!("{artifact_id}.lease"))
+}
+
+/// One non-blocking attempt to acquire the build lease for `artifact_id`
+/// in store directory `dir`.
+///
+/// Returns [`Acquire::Held`] if we created the lock file (or expired a
+/// stale one and won the re-create race), [`Acquire::Busy`] if a peer's
+/// lock file is younger than `ttl`, and [`LeaseError`] if the directory
+/// rejected the protocol entirely. Never blocks and never sleeps; the
+/// waiting loop (with its poll interval and max wait) belongs to the
+/// caller, which interleaves store polls between attempts.
+pub fn try_acquire(dir: &Path, artifact_id: &str, ttl: Duration) -> Result<Acquire, LeaseError> {
+    let path = lease_path(dir, artifact_id);
+    let mut took_over = false;
+    // A few create→stat→expire rounds: each loop either creates the
+    // file, observes a live holder, or removes a stale file and retries.
+    // Bounded so a pathological directory (e.g. mtimes pinned in the
+    // past) degrades to Busy instead of spinning.
+    for _ in 0..4 {
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                let token = next_token();
+                // Body content is diagnostic; ownership is checked by
+                // token match. A failed write still holds the O_EXCL
+                // file, so the lease stands.
+                let _ = writeln!(f, "token {token}");
+                return Ok(Acquire::Held(Lease { path, token, took_over }));
+            }
+            Err(e) if e.kind() == ErrorKind::AlreadyExists => {
+                let age = match fs::metadata(&path) {
+                    Ok(md) => match md.modified() {
+                        Ok(mtime) => SystemTime::now()
+                            .duration_since(mtime)
+                            .unwrap_or(Duration::ZERO),
+                        Err(e) => {
+                            return Err(LeaseError::Unsupported { path, detail: e.to_string() })
+                        }
+                    },
+                    // Holder released between our create and stat: retry
+                    // the create.
+                    Err(e) if e.kind() == ErrorKind::NotFound => continue,
+                    Err(e) => {
+                        return Err(LeaseError::Unsupported { path, detail: e.to_string() })
+                    }
+                };
+                if age <= ttl {
+                    return Ok(Acquire::Busy { age });
+                }
+                // Stale: expire it and race for the re-create. NotFound
+                // here means another waiter expired it first — fine, the
+                // O_EXCL create above arbitrates.
+                match fs::remove_file(&path) {
+                    Ok(()) => took_over = true,
+                    Err(e) if e.kind() == ErrorKind::NotFound => {}
+                    Err(e) => {
+                        return Err(LeaseError::Unsupported { path, detail: e.to_string() })
+                    }
+                }
+            }
+            Err(e) => return Err(LeaseError::Unsupported { path, detail: e.to_string() }),
+        }
+    }
+    Ok(Acquire::Busy { age: Duration::ZERO })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fastmwem-lease-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Age a lock file by rewinding its mtime — deterministic staleness
+    /// without sleeping through real TTLs.
+    fn backdate(path: &Path, secs: u64) {
+        let f = OpenOptions::new().append(true).open(path).unwrap();
+        f.set_modified(SystemTime::now() - Duration::from_secs(secs)).unwrap();
+    }
+
+    #[test]
+    fn second_acquire_is_busy_and_release_reopens() {
+        let dir = scratch_dir("busy");
+        let ttl = Duration::from_secs(30);
+        let a = match try_acquire(&dir, "art-1", ttl).unwrap() {
+            Acquire::Held(l) => l,
+            other => panic!("first acquire must hold, got {other:?}"),
+        };
+        assert!(!a.took_over());
+        match try_acquire(&dir, "art-1", ttl).unwrap() {
+            Acquire::Busy { age } => assert!(age < ttl),
+            other => panic!("second acquire must be busy, got {other:?}"),
+        }
+        // Distinct artifacts don't contend.
+        assert!(matches!(try_acquire(&dir, "art-2", ttl).unwrap(), Acquire::Held(_)));
+        drop(a);
+        assert!(!lease_path(&dir, "art-1").exists(), "drop must release the lock file");
+        assert!(matches!(try_acquire(&dir, "art-1", ttl).unwrap(), Acquire::Held(_)));
+    }
+
+    #[test]
+    fn stale_lease_is_taken_over_after_ttl() {
+        let dir = scratch_dir("stale");
+        // A lock file left behind by a "crashed" holder: no guard ever
+        // drops, no refresh ever runs.
+        let ttl = Duration::from_secs(10);
+        fs::write(lease_path(&dir, "art"), "token 99999:0\n").unwrap();
+        match try_acquire(&dir, "art", ttl).unwrap() {
+            Acquire::Busy { .. } => {}
+            other => panic!("fresh file must read as busy, got {other:?}"),
+        }
+        backdate(&lease_path(&dir, "art"), 60);
+        match try_acquire(&dir, "art", ttl).unwrap() {
+            Acquire::Held(l) => assert!(l.took_over(), "expiry path must report takeover"),
+            other => panic!("stale file must be expired and retaken, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn refresh_keeps_a_slow_holder_live() {
+        let dir = scratch_dir("refresh");
+        let ttl = Duration::from_secs(10);
+        let l = match try_acquire(&dir, "art", ttl).unwrap() {
+            Acquire::Held(l) => l,
+            other => panic!("must hold, got {other:?}"),
+        };
+        // The build has (notionally) outlived the TTL...
+        backdate(&lease_path(&dir, "art"), 60);
+        // ...but a refresh re-stamps the mtime, so waiters still see a
+        // live holder instead of expiring it.
+        assert!(l.refresh());
+        match try_acquire(&dir, "art", ttl).unwrap() {
+            Acquire::Busy { age } => assert!(age <= ttl),
+            other => panic!("refreshed lease must stay busy, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn drop_after_takeover_leaves_the_new_owner_alone() {
+        let dir = scratch_dir("expired-drop");
+        let ttl = Duration::from_secs(10);
+        let old = match try_acquire(&dir, "art", ttl).unwrap() {
+            Acquire::Held(l) => l,
+            other => panic!("must hold, got {other:?}"),
+        };
+        backdate(&lease_path(&dir, "art"), 60);
+        // A waiter expires us and takes over.
+        let new = match try_acquire(&dir, "art", ttl).unwrap() {
+            Acquire::Held(l) => l,
+            other => panic!("stale lease must be retaken, got {other:?}"),
+        };
+        assert!(new.took_over());
+        // Our (stale) guard must notice it no longer owns the file and
+        // leave the new holder's lock in place.
+        drop(old);
+        assert!(lease_path(&dir, "art").exists(), "usurped drop must not release the new lease");
+        drop(new);
+        assert!(!lease_path(&dir, "art").exists());
+    }
+
+    #[test]
+    fn unsupported_dir_reports_typed_error() {
+        let dir = scratch_dir("unsupported").join("does-not-exist");
+        match try_acquire(&dir, "art", Duration::from_secs(1)) {
+            Err(LeaseError::Unsupported { path, .. }) => {
+                assert_eq!(path, lease_path(&dir, "art"));
+            }
+            other => panic!("missing dir must be Unsupported, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn contended_takeover_admits_exactly_one_winner() {
+        let dir = scratch_dir("contended");
+        fs::write(lease_path(&dir, "art"), "token 0:0\n").unwrap();
+        backdate(&lease_path(&dir, "art"), 60);
+        let ttl = Duration::from_secs(10);
+        // Many threads race to expire the same stale lock: the O_EXCL
+        // re-create must admit exactly one. Winners keep their guard
+        // alive until every racer has attempted, so a late thread sees a
+        // fresh Busy file rather than a released lock.
+        let leases: Vec<Option<Lease>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    s.spawn(|| match try_acquire(&dir, "art", ttl) {
+                        Ok(Acquire::Held(l)) => Some(l),
+                        _ => None,
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            leases.iter().flatten().count(),
+            1,
+            "exactly one racer may win the takeover"
+        );
+    }
+}

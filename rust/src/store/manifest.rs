@@ -25,9 +25,11 @@ pub const MANIFEST_FILE: &str = "manifest.json";
 
 /// Manifest schema version (bumped on incompatible layout changes).
 /// Version 2 added the workload generation to snapshot entries plus the
-/// delta catalog (DESIGN.md §9); version-1 manifests degrade to empty and
-/// their orphaned artifacts are rebuilt under the new ids.
-pub const MANIFEST_VERSION: u64 = 2;
+/// delta catalog (DESIGN.md §9); version 3 added the change `counter`
+/// that backs cross-process generation watches (DESIGN.md §13). Older
+/// manifests degrade to empty and their orphaned artifacts are rebuilt
+/// under the current ids.
+pub const MANIFEST_VERSION: u64 = 3;
 
 /// One cataloged snapshot artifact.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -71,6 +73,13 @@ pub struct DeltaEntry {
 pub struct Manifest {
     entries: BTreeMap<String, ManifestEntry>,
     deltas: BTreeMap<String, DeltaEntry>,
+    /// Monotone change counter, bumped on every catalog commit
+    /// (DESIGN.md §13). Peer processes sharing the store directory watch
+    /// the manifest file's (mtime, len) stamp and use this counter to
+    /// tell a real catalog change from an equal-length rewrite — the
+    /// cheap cross-process invalidation signal behind
+    /// `peer_invalidations`.
+    counter: u64,
 }
 
 impl Manifest {
@@ -115,6 +124,19 @@ impl Manifest {
     /// Number of cataloged artifacts.
     pub fn len(&self) -> usize {
         self.entries.len()
+    }
+
+    /// The catalog change counter (see the field docs).
+    pub fn counter(&self) -> u64 {
+        self.counter
+    }
+
+    /// Advance the change counter past `floor` (normally the counter of
+    /// the on-disk document this save will replace, so concurrent writers
+    /// that both merged from disk still produce strictly increasing
+    /// counters).
+    pub fn bump_counter(&mut self, floor: u64) {
+        self.counter = self.counter.max(floor) + 1;
     }
 
     /// True when nothing is cataloged.
@@ -228,6 +250,7 @@ impl Manifest {
             .collect();
         let mut doc = BTreeMap::new();
         doc.insert("version".to_string(), Json::Num(MANIFEST_VERSION as f64));
+        doc.insert("counter".to_string(), Json::Num(self.counter as f64));
         doc.insert("artifacts".to_string(), Json::Obj(artifacts));
         doc.insert("deltas".to_string(), Json::Obj(deltas));
         Json::Obj(doc)
@@ -244,6 +267,9 @@ impl Manifest {
             version == MANIFEST_VERSION,
             "manifest: unsupported version {version} (expected {MANIFEST_VERSION})"
         );
+        // Absent on hand-rolled documents; 0 is a valid starting point —
+        // the watch compares file stamps first, the counter is a tiebreak.
+        let counter = doc.get("counter").and_then(Json::as_u64).unwrap_or(0);
         let artifacts = match doc.get("artifacts") {
             Some(Json::Obj(m)) => m,
             _ => anyhow::bail!("manifest: missing artifacts object"),
@@ -321,7 +347,7 @@ impl Manifest {
                 );
             }
         }
-        Ok(Manifest { entries, deltas })
+        Ok(Manifest { entries, deltas, counter })
     }
 
     /// Load a manifest from disk, strictly: a missing file is an empty
@@ -476,11 +502,33 @@ mod tests {
         let mut m = Manifest::new();
         m.insert(&key(1, IndexKind::Hnsw, 1), entry("a.idx", IndexKind::Hnsw, 1));
         m.insert(&key(2, IndexKind::Ivf, 4), entry("b.idx", IndexKind::Ivf, 4));
+        m.bump_counter(0);
+        m.bump_counter(0);
         let doc = m.to_json();
         let back = Manifest::from_json(&Json::parse(&doc.to_string()).unwrap()).unwrap();
         assert_eq!(m, back);
         assert_eq!(back.len(), 2);
+        assert_eq!(back.counter(), 2, "the change counter round-trips");
         assert_eq!(back.get(&key(1, IndexKind::Hnsw, 1)).unwrap().file, "a.idx");
+    }
+
+    /// The change counter behind cross-process watches (DESIGN.md §13):
+    /// strictly monotone, and `bump_counter(floor)` jumps past a larger
+    /// on-disk counter so concurrent merge-then-save writers never emit a
+    /// repeated value.
+    #[test]
+    fn change_counter_is_monotone_and_floors() {
+        let mut m = Manifest::new();
+        assert_eq!(m.counter(), 0);
+        m.bump_counter(0);
+        assert_eq!(m.counter(), 1);
+        m.bump_counter(7); // a peer committed counter=7 meanwhile
+        assert_eq!(m.counter(), 8);
+        m.bump_counter(3); // stale floor never rewinds
+        assert_eq!(m.counter(), 9);
+        // absent counter parses as 0 (hand-rolled v3 document)
+        let doc = Json::parse("{\"version\":3,\"artifacts\":{},\"deltas\":{}}").unwrap();
+        assert_eq!(Manifest::from_json(&doc).unwrap().counter(), 0);
     }
 
     #[test]
@@ -517,11 +565,13 @@ mod tests {
         assert!(Manifest::load(&path).is_err(), "strict load must report corruption");
         assert!(Manifest::load_or_empty(&path).is_empty(), "tolerant load degrades");
 
-        // wrong versions (including the retired v1) are rejected strictly
+        // wrong versions (including the retired v1/v2) are rejected strictly
         std::fs::write(&path, "{\"version\":99,\"artifacts\":{}}").unwrap();
         assert!(Manifest::load(&path).is_err());
         std::fs::write(&path, "{\"version\":1,\"artifacts\":{}}").unwrap();
         assert!(Manifest::load(&path).is_err(), "v1 manifests are not reinterpreted");
+        std::fs::write(&path, "{\"version\":2,\"artifacts\":{},\"deltas\":{}}").unwrap();
+        assert!(Manifest::load(&path).is_err(), "v2 manifests are not reinterpreted");
 
         // a file field that escapes the store directory is rejected — the
         // loader deletes the resolved path on decode failure, so a
@@ -530,7 +580,7 @@ mod tests {
             std::fs::write(
                 &path,
                 format!(
-                    "{{\"version\":2,\"artifacts\":{{\"x\":{{\"file\":{},\
+                    "{{\"version\":3,\"artifacts\":{{\"x\":{{\"file\":{},\
                      \"kind\":\"flat\",\"shards\":1,\"fingerprint\":\"2a\",\
                      \"generation\":0,\"bytes\":1,\"build_us\":1}}}},\"deltas\":{{}}}}",
                     Json::Str(bad.to_string())
@@ -542,7 +592,7 @@ mod tests {
         // the same traversal guard covers the delta catalog
         std::fs::write(
             &path,
-            "{\"version\":2,\"artifacts\":{},\"deltas\":{\"x\":{\"file\":\"../d\",\
+            "{\"version\":3,\"artifacts\":{},\"deltas\":{\"x\":{\"file\":\"../d\",\
              \"fingerprint\":\"2a\",\"generation\":1,\"bytes\":1}}}",
         )
         .unwrap();

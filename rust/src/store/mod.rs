@@ -25,11 +25,13 @@
 //! answered by falling back to a rebuild.
 
 pub mod format;
+pub mod lease;
 pub mod manifest;
 pub mod pager;
 pub mod tiered;
 
 pub use format::StoreError;
+pub use lease::{Acquire, Lease, LeaseError, LeaseSettings};
 pub use manifest::{DeltaEntry, Manifest, ManifestEntry, MANIFEST_FILE};
 pub use pager::{HeapBudget, PagerSettings};
 pub use tiered::{TieredEvent, TieredIndexCache};
@@ -65,6 +67,12 @@ pub struct StoreStats {
     pub writes: u64,
     /// Total artifact bytes written (excluding manifest rewrites).
     pub bytes_written: u64,
+    /// Manifest re-reads triggered by a peer process changing the file
+    /// (DESIGN.md §13). The watch itself is one `stat` per poll; this
+    /// counts only the polls that found a new (mtime, len) stamp and paid
+    /// for a parse — the O(1)-poll regression test pins it at zero across
+    /// unchanged polls.
+    pub manifest_reloads: u64,
     /// Total wall-clock spent decoding artifacts on successful loads.
     pub promote_time: Duration,
 }
@@ -91,9 +99,26 @@ pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
+/// (mtime, len) identity of the manifest file as last read or written by
+/// this process — the O(1) cross-process change detector (DESIGN.md §13):
+/// one `stat` per poll, a full reload + parse only when the stamp moves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct FileStamp {
+    mtime: std::time::SystemTime,
+    len: u64,
+}
+
+fn stamp(path: &Path) -> Option<FileStamp> {
+    let md = std::fs::metadata(path).ok()?;
+    Some(FileStamp { mtime: md.modified().ok()?, len: md.len() })
+}
+
 struct DiskInner {
     manifest: Manifest,
     stats: StoreStats,
+    /// Stamp of the manifest file backing `manifest`; `None` when the
+    /// file does not exist (fresh store) or the stamp was unreadable.
+    seen: Option<FileStamp>,
 }
 
 /// A content-addressed artifact store rooted at one directory: artifact
@@ -124,11 +149,13 @@ impl DiskStore {
         let dir = dir.as_ref().to_path_buf();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating store directory {dir:?}"))?;
-        let manifest = Manifest::load_or_empty(dir.join(MANIFEST_FILE));
+        let manifest_path = dir.join(MANIFEST_FILE);
+        let seen = stamp(&manifest_path);
+        let manifest = Manifest::load_or_empty(manifest_path);
         Ok(DiskStore {
             dir,
             pager,
-            inner: Mutex::new(DiskInner { manifest, stats: StoreStats::default() }),
+            inner: Mutex::new(DiskInner { manifest, stats: StoreStats::default(), seen }),
         })
     }
 
@@ -151,6 +178,77 @@ impl DiskStore {
     /// True when an artifact for `key` is cataloged (no I/O).
     pub fn contains(&self, key: &WorkloadKey) -> bool {
         self.inner.lock().unwrap().manifest.get(key).is_some()
+    }
+
+    /// Poll the manifest file for changes committed by peer processes
+    /// sharing this directory (DESIGN.md §13). One `stat`; only when the
+    /// (mtime, len) stamp differs from the last read/write by this
+    /// process is the catalog re-read and adopted. Returns `true` when
+    /// the in-memory catalog actually changed — the signal the tiered
+    /// cache and registry use to invalidate before serving.
+    pub fn refresh(&self) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        self.refresh_locked(&mut g)
+    }
+
+    /// The manifest change counter as currently known to this process.
+    pub fn manifest_counter(&self) -> u64 {
+        self.inner.lock().unwrap().manifest.counter()
+    }
+
+    /// Newest cataloged delta generation of `fingerprint`'s family (no
+    /// I/O) — compared against a [`crate::workloads::WorkloadRegistry`]'s
+    /// generation to detect updates committed by peer processes.
+    pub fn max_delta_generation(&self, fingerprint: u128) -> u64 {
+        let g = self.inner.lock().unwrap();
+        g.manifest
+            .iter_deltas()
+            .filter(|d| d.fingerprint == fingerprint)
+            .map(|d| d.generation)
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn refresh_locked(&self, g: &mut DiskInner) -> bool {
+        let path = self.dir.join(MANIFEST_FILE);
+        // Stamp before read, so a write racing between the two leaves us
+        // with an old stamp over new content — the next poll re-reads
+        // (spurious but safe), rather than a new stamp over old content,
+        // which would mask the change forever.
+        let now = stamp(&path);
+        if now == g.seen {
+            return false;
+        }
+        match Manifest::load(&path) {
+            Ok(m) => {
+                let changed = m != g.manifest;
+                g.manifest = m;
+                g.seen = now;
+                g.stats.manifest_reloads += 1;
+                changed
+            }
+            Err(e) => {
+                // A torn or corrupt concurrent write: keep our catalog
+                // and our stamp, so the next poll retries the read once
+                // the writer's rename lands.
+                eprintln!(
+                    "warning: ignoring concurrently-modified store manifest in {:?}: {e:#}",
+                    self.dir
+                );
+                false
+            }
+        }
+    }
+
+    /// Commit the in-memory catalog: bump the change counter past
+    /// whatever was merged from disk, write atomically, and re-stamp so
+    /// our own write does not read back as a peer change.
+    fn commit_locked(&self, g: &mut DiskInner) -> Result<()> {
+        let path = self.dir.join(MANIFEST_FILE);
+        g.manifest.bump_counter(0);
+        g.manifest.save(&path)?;
+        g.seen = stamp(&path);
+        Ok(())
     }
 
     /// Load the artifact for `key` — by mmap paging when the pager is
@@ -217,12 +315,12 @@ impl DiskStore {
                 // reclaim the dead file too — content addressing would
                 // otherwise never overwrite it for a non-recurring key
                 let _ = std::fs::remove_file(&path);
-                let manifest_path = self.dir.join(MANIFEST_FILE);
                 let mut g = self.inner.lock().unwrap();
                 g.stats.misses += 1;
                 g.stats.load_failures += 1;
+                self.refresh_locked(&mut g);
                 if g.manifest.remove(key).is_some() {
-                    let _ = g.manifest.save(&manifest_path);
+                    let _ = self.commit_locked(&mut g);
                 }
                 None
             }
@@ -240,6 +338,14 @@ impl DiskStore {
     /// retained: they are tiny, and the full chain is what reconstructs
     /// the effective workload (and the registry's generation state) after
     /// a restart.
+    ///
+    /// Multi-process safety (DESIGN.md §13): the catalog commit merges
+    /// with whatever peers wrote since our last read, so a concurrent
+    /// save never erases another process's entries; an artifact a peer
+    /// already cataloged for this exact key is left alone (builds are
+    /// deterministic per key, ours adds nothing); and supersession only
+    /// ever removes *strictly older* generations of the family, so a
+    /// build that lost a lease race cannot clobber a newer artifact.
     pub fn save(
         &self,
         key: &WorkloadKey,
@@ -249,11 +355,17 @@ impl DiskStore {
         let id = Manifest::artifact_id(key);
         let file = format!("{id}.idx");
         let path = self.dir.join(&file);
+        {
+            let mut g = self.inner.lock().unwrap();
+            self.refresh_locked(&mut g);
+            if let Some(existing) = g.manifest.get(key) {
+                return Ok(existing.bytes);
+            }
+        }
         let bytes = format::encode_artifact(key, value);
         write_atomic(&path, &bytes)
             .with_context(|| format!("persisting artifact {file}"))?;
 
-        let manifest_path = self.dir.join(MANIFEST_FILE);
         let entry = ManifestEntry {
             file,
             kind: key.kind,
@@ -265,9 +377,10 @@ impl DiskStore {
         };
         let superseded = {
             let mut g = self.inner.lock().unwrap();
+            self.refresh_locked(&mut g);
             g.manifest.insert(key, entry);
             let superseded = g.manifest.remove_superseded_snapshots(key);
-            g.manifest.save(&manifest_path)?;
+            self.commit_locked(&mut g)?;
             g.stats.writes += 1;
             g.stats.bytes_written += bytes.len() as u64;
             superseded
@@ -290,7 +403,8 @@ impl DiskStore {
         delta: &WorkloadDelta,
     ) -> Result<u64> {
         {
-            let g = self.inner.lock().unwrap();
+            let mut g = self.inner.lock().unwrap();
+            self.refresh_locked(&mut g);
             if let Some(existing) = g.manifest.get_delta(fingerprint, generation) {
                 return Ok(existing.bytes);
             }
@@ -302,7 +416,6 @@ impl DiskStore {
         write_atomic(&path, &bytes)
             .with_context(|| format!("persisting delta artifact {file}"))?;
 
-        let manifest_path = self.dir.join(MANIFEST_FILE);
         let entry = DeltaEntry {
             file,
             fingerprint,
@@ -310,8 +423,9 @@ impl DiskStore {
             bytes: bytes.len() as u64,
         };
         let mut g = self.inner.lock().unwrap();
+        self.refresh_locked(&mut g);
         g.manifest.insert_delta(entry);
-        g.manifest.save(&manifest_path)?;
+        self.commit_locked(&mut g)?;
         g.stats.writes += 1;
         g.stats.bytes_written += bytes.len() as u64;
         Ok(bytes.len() as u64)
@@ -353,11 +467,11 @@ impl DiskStore {
                          (falling back to rebuild)"
                     );
                     let _ = std::fs::remove_file(&path);
-                    let manifest_path = self.dir.join(MANIFEST_FILE);
                     let mut g = self.inner.lock().unwrap();
                     g.stats.load_failures += 1;
+                    self.refresh_locked(&mut g);
                     if g.manifest.remove_delta(fingerprint, generation).is_some() {
-                        let _ = g.manifest.save(&manifest_path);
+                        let _ = self.commit_locked(&mut g);
                     }
                     return None;
                 }
@@ -555,6 +669,79 @@ mod tests {
         assert!(store.load(&key).is_some());
         let s = store.stats();
         assert_eq!((s.mmap_restores, s.decode_restores), (0, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Two processes (modeled as two `DiskStore` handles) sharing one
+    /// directory (DESIGN.md §13): commits merge instead of erasing each
+    /// other, the change watch is one `stat` per poll (a parse only when
+    /// the stamp moves), and counters stay strictly increasing across
+    /// writers.
+    #[test]
+    fn peer_commits_merge_and_unchanged_polls_never_reparse() {
+        let dir = scratch_dir("peers");
+        let a = DiskStore::open(&dir).unwrap();
+        let b = DiskStore::open(&dir).unwrap();
+        let key_a = WorkloadKey { fingerprint: 1, kind: IndexKind::Flat, shards: 1, generation: 0 };
+        let key_b = WorkloadKey { fingerprint: 2, kind: IndexKind::Flat, shards: 1, generation: 0 };
+        let value = CachedIndex::Mono(build_index(IndexKind::Flat, random_set(20, 3, 1), 1));
+
+        a.save(&key_a, &value, Duration::ZERO).unwrap();
+        assert!(b.refresh(), "A's commit must show up on B's next poll");
+        assert!(b.contains(&key_a));
+        assert_eq!(b.stats().manifest_reloads, 1);
+        // O(1) watch: polls with an unchanged stamp never re-read the file
+        for _ in 0..100 {
+            assert!(!b.refresh());
+        }
+        assert_eq!(b.stats().manifest_reloads, 1);
+        // our own commits re-stamp, so they don't read back as changes
+        b.save(&key_b, &value, Duration::ZERO).unwrap();
+        assert!(!b.refresh());
+
+        // merge-before-write: B's commit must not erase A's entry
+        assert!(b.contains(&key_a) && b.contains(&key_b));
+        assert!(a.refresh());
+        assert!(a.contains(&key_b), "B's commit must show up on A's next poll");
+        assert_eq!(a.manifest_counter(), 2, "two commits, strictly increasing counter");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A builder that lost a lease race and saves late (DESIGN.md §13):
+    /// re-saving an already-cataloged key is skipped (no duplicate
+    /// write), and saving an *older* generation never clobbers the newer
+    /// snapshot a peer committed meanwhile — supersession is strictly
+    /// one-directional.
+    #[test]
+    fn losing_builder_never_clobbers_newer_generation() {
+        let dir = scratch_dir("no-clobber");
+        let winner = DiskStore::open(&dir).unwrap();
+        let loser = DiskStore::open(&dir).unwrap();
+        let fam = WorkloadKey { fingerprint: 7, kind: IndexKind::Flat, shards: 1, generation: 0 };
+        let v0 = CachedIndex::Mono(build_index(IndexKind::Flat, random_set(20, 3, 2), 1));
+        let v1 = CachedIndex::Mono(build_index(IndexKind::Flat, random_set(21, 3, 3), 1));
+
+        // the winner has already advanced the family to generation 1
+        winner.save(&fam.at_generation(1), &v1, Duration::ZERO).unwrap();
+        let g1_file = dir.join(format!("{}.idx", Manifest::artifact_id(&fam.at_generation(1))));
+        assert!(g1_file.exists());
+
+        // the loser finishes its stale generation-0 build and saves late
+        loser.save(&fam, &v0, Duration::ZERO).unwrap();
+        assert!(g1_file.exists(), "an older-generation save must not remove the newer file");
+        assert!(loser.contains(&fam.at_generation(1)), "…nor its catalog entry");
+        let (found, _, _, _) = loser.load_latest(&fam.at_generation(1)).unwrap();
+        assert_eq!(found, 1, "the newer snapshot still serves");
+
+        // duplicate save of an already-cataloged key is skipped entirely
+        let writes_before = loser.stats().writes;
+        loser.save(&fam.at_generation(1), &v1, Duration::ZERO).unwrap();
+        assert_eq!(loser.stats().writes, writes_before, "peer-won keys are not rewritten");
+
+        // a *newer* save still supersedes: the winner compacts to g2
+        winner.refresh();
+        winner.save(&fam.at_generation(2), &v1, Duration::ZERO).unwrap();
+        assert!(!g1_file.exists(), "forward supersession still prunes old snapshots");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

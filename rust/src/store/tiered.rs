@@ -16,9 +16,11 @@
 //! keeps serving (the store is an accelerator, never a correctness
 //! dependency — see the failure philosophy in [`crate::store`]).
 
-use super::{DiskStore, HeapBudget, PagerSettings};
+use super::lease::{self, Acquire, Lease, LeaseSettings};
+use super::{DiskStore, HeapBudget, Manifest, PagerSettings};
 use crate::coordinator::cache::{CacheReport, CachedIndex, IndexCache, WorkloadKey};
 use crate::mips::{VectorSet, WorkloadDelta};
+use crate::workloads::WorkloadRegistry;
 use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
@@ -52,6 +54,16 @@ pub struct TieredEvent {
     pub promote_time: Duration,
     /// Wall-clock spent applying workload deltas (patched serves only).
     pub patch_time: Duration,
+    /// This call won the cross-process build lease and built under it
+    /// (DESIGN.md §13).
+    pub lease_acquired: bool,
+    /// This call found a peer holding the build lease and waited —
+    /// whether it then promoted the peer's artifact or (after the lease
+    /// backstop) built independently.
+    pub lease_waited: bool,
+    /// The lease was obtained by expiring a stale lock file left by a
+    /// crashed or stalled peer.
+    pub lease_takeover: bool,
 }
 
 impl TieredEvent {
@@ -62,6 +74,15 @@ impl TieredEvent {
         if self.patched {
             report.patched += 1;
             report.patch_time += self.patch_time;
+        }
+        if self.lease_acquired {
+            report.lease_acquired += 1;
+        }
+        if self.lease_waited {
+            report.lease_waited += 1;
+        }
+        if self.lease_takeover {
+            report.lease_takeovers += 1;
         }
         if self.l1_hit {
             report.hits += 1;
@@ -79,9 +100,18 @@ impl TieredEvent {
 /// The coordinator's two-tier warm-index cache: [`IndexCache`] (L1) over
 /// an optional [`DiskStore`] (L2). With no store attached it behaves
 /// exactly like the bare L1 cache, so cold-only deployments pay nothing.
+///
+/// With a store attached, the cache is also the coordination point for N
+/// independent processes sharing the store directory (DESIGN.md §13): a
+/// shared miss takes a build *lease* so exactly one process builds while
+/// peers wait-and-promote, and the manifest *watch*
+/// ([`TieredIndexCache::sync_peer_updates`]) invalidates stale L1 entries
+/// when a peer commits a workload update.
 pub struct TieredIndexCache {
     l1: IndexCache,
     l2: Option<DiskStore>,
+    lease: LeaseSettings,
+    watch: bool,
 }
 
 impl TieredIndexCache {
@@ -96,7 +126,7 @@ impl TieredIndexCache {
     /// storage counts as zero, DESIGN.md §12).
     pub fn memory_only_with_budget(capacity: usize, budget: HeapBudget) -> Self {
         let l1 = IndexCache::with_byte_budget(capacity, budget.limit().unwrap_or(0));
-        TieredIndexCache { l1, l2: None }
+        TieredIndexCache { l1, l2: None, lease: LeaseSettings::default(), watch: true }
     }
 
     /// A tiered cache persisting to `dir` (created if needed), with an L1
@@ -121,7 +151,26 @@ impl TieredIndexCache {
         pager: PagerSettings,
     ) -> Result<Self> {
         let l1 = IndexCache::with_byte_budget(capacity, budget.limit().unwrap_or(0));
-        Ok(TieredIndexCache { l1, l2: Some(DiskStore::open_with(dir, pager)?) })
+        Ok(TieredIndexCache {
+            l1,
+            l2: Some(DiskStore::open_with(dir, pager)?),
+            lease: LeaseSettings::default(),
+            watch: true,
+        })
+    }
+
+    /// Override the cross-process build-lease settings (the `[store]`
+    /// config section; DESIGN.md §13). Irrelevant without a store tier.
+    pub fn with_lease(mut self, lease: LeaseSettings) -> Self {
+        self.lease = lease;
+        self
+    }
+
+    /// Enable/disable the cross-process manifest watch
+    /// ([`TieredIndexCache::sync_peer_updates`]). On by default.
+    pub fn with_watch(mut self, watch: bool) -> Self {
+        self.watch = watch;
+        self
     }
 
     /// The in-memory tier.
@@ -142,8 +191,11 @@ impl TieredIndexCache {
 
     /// The tiered serving-path primitive: L1, then L2 (promote), then
     /// `build` (populate both tiers). The build and all file I/O run
-    /// outside every lock; racing workers on one cold key both build —
-    /// wasted work, never a wrong result, exactly like the L1-only cache.
+    /// outside every lock. With a store attached, a shared miss is gated
+    /// on the cross-process build lease (DESIGN.md §13): one racer —
+    /// whether a worker thread here or a whole peer process — builds
+    /// while the rest wait and promote its artifact; with leases off the
+    /// racers all build, wasted work but never a wrong result.
     ///
     /// Static-workload entry point: equivalent to
     /// [`TieredIndexCache::get_or_build_dynamic`] with no delta source, so
@@ -180,11 +232,64 @@ impl TieredIndexCache {
         deltas_from: impl Fn(u64) -> Option<Vec<Arc<WorkloadDelta>>>,
         build: impl FnOnce() -> (CachedIndex, Duration),
     ) -> (CachedIndex, TieredEvent) {
-        if let Some((value, saved)) = self.l1.lookup(&key) {
-            return (value, TieredEvent { l1_hit: true, saved, ..Default::default() });
+        if let Some(hit) = self.try_memory(key, &deltas_from) {
+            return hit;
         }
-        // stale-but-patchable in memory: patch forward, promote, evict the
-        // superseded generation so it can never be offered again
+        if let Some(hit) = self.try_store(key, &deltas_from) {
+            return hit;
+        }
+        // Both tiers missed under our current view of the catalog. Before
+        // committing to a build, one stat of the shared manifest: a peer
+        // process may have persisted this artifact since our last read
+        // (DESIGN.md §13).
+        if let Some(store) = &self.l2 {
+            if store.refresh() {
+                if let Some(hit) = self.try_store(key, &deltas_from) {
+                    return hit;
+                }
+            }
+        }
+        // A real shared miss: gate the build on the cross-process lease —
+        // either we hold it (and peers wait on us), or a peer built while
+        // we waited and we serve their artifact.
+        let (lease, waited, takeover) = match self.build_gate(&key, &deltas_from) {
+            Gate::Serve(value, ev) => return (value, ev),
+            Gate::Build { lease, waited, takeover } => (lease, waited, takeover),
+        };
+        let lease_acquired = lease.is_some();
+        let (value, build_time) = build();
+        self.l1.insert(key, value.clone(), build_time);
+        if let Some(store) = &self.l2 {
+            if let Err(e) = store.save(&key, &value, build_time) {
+                eprintln!("warning: artifact store write failed ({e:#}); serving from memory");
+            }
+        }
+        // Release only after the artifact is committed, so a waiter that
+        // sees the lease vanish finds the artifact on its next poll.
+        drop(lease);
+        (
+            value,
+            TieredEvent {
+                build_time,
+                lease_acquired,
+                lease_waited: waited,
+                lease_takeover: takeover,
+                ..Default::default()
+            },
+        )
+    }
+
+    /// L1 consultation: exact hit, or stale-but-patchable entry patched
+    /// forward (promote, evict the superseded generation so it can never
+    /// be offered again).
+    fn try_memory(
+        &self,
+        key: WorkloadKey,
+        deltas_from: &impl Fn(u64) -> Option<Vec<Arc<WorkloadDelta>>>,
+    ) -> Option<(CachedIndex, TieredEvent)> {
+        if let Some((value, saved)) = self.l1.lookup(&key) {
+            return Some((value, TieredEvent { l1_hit: true, saved, ..Default::default() }));
+        }
         if key.generation > 0 {
             if let Some((stale_key, value, recorded_build)) = self.l1.lookup_patchable(&key) {
                 if let Some(deltas) = self.chain_for(&key, stale_key.generation, &deltas_from)
@@ -196,7 +301,7 @@ impl TieredIndexCache {
                             self.l1.remove(&stale_key);
                             self.l1.insert(key, patched.clone(), recorded_build);
                             self.maybe_compact(&key, &patched, recorded_build);
-                            return (
+                            return Some((
                                 patched,
                                 TieredEvent {
                                     l1_hit: true,
@@ -205,7 +310,7 @@ impl TieredIndexCache {
                                     patch_time,
                                     ..Default::default()
                                 },
-                            );
+                            ));
                         }
                         Err(e) => {
                             eprintln!(
@@ -218,12 +323,24 @@ impl TieredIndexCache {
                 }
             }
         }
+        None
+    }
+
+    /// L2 consultation: exact-generation snapshot promoted, or an older
+    /// family snapshot decoded and patched forward. `None` on a store
+    /// miss (or with no store attached) — the caller decides whether to
+    /// poll again or build.
+    fn try_store(
+        &self,
+        key: WorkloadKey,
+        deltas_from: &impl Fn(u64) -> Option<Vec<Arc<WorkloadDelta>>>,
+    ) -> Option<(CachedIndex, TieredEvent)> {
         if let Some(store) = &self.l2 {
             if let Some((found, value, recorded_build, promote_time)) = store.load_latest(&key)
             {
                 if found == key.generation {
                     self.l1.insert(key, value.clone(), recorded_build);
-                    return (
+                    return Some((
                         value,
                         TieredEvent {
                             l2_hit: true,
@@ -231,7 +348,7 @@ impl TieredIndexCache {
                             promote_time,
                             ..Default::default()
                         },
-                    );
+                    ));
                 }
                 if let Some(deltas) = self.chain_for(&key, found, &deltas_from) {
                     let t0 = Instant::now();
@@ -240,7 +357,7 @@ impl TieredIndexCache {
                             let patch_time = t0.elapsed();
                             self.l1.insert(key, patched.clone(), recorded_build);
                             self.maybe_compact(&key, &patched, recorded_build);
-                            return (
+                            return Some((
                                 patched,
                                 TieredEvent {
                                     l2_hit: true,
@@ -250,7 +367,7 @@ impl TieredIndexCache {
                                     patch_time,
                                     ..Default::default()
                                 },
-                            );
+                            ));
                         }
                         Err(e) => {
                             eprintln!(
@@ -263,14 +380,94 @@ impl TieredIndexCache {
                 }
             }
         }
-        let (value, build_time) = build();
-        self.l1.insert(key, value.clone(), build_time);
-        if let Some(store) = &self.l2 {
-            if let Err(e) = store.save(&key, &value, build_time) {
-                eprintln!("warning: artifact store write failed ({e:#}); serving from memory");
+        None
+    }
+
+    /// The cross-process build gate (DESIGN.md §13). Tries to acquire
+    /// the build lease for `key`'s artifact; while a peer holds it, polls
+    /// the store between sleeps and serves the peer's artifact the moment
+    /// it lands. Degrades to an ungated build when leases are disabled,
+    /// unsupported by the directory, or the holder outlives
+    /// [`LeaseSettings::max_wait`].
+    fn build_gate(
+        &self,
+        key: &WorkloadKey,
+        deltas_from: &impl Fn(u64) -> Option<Vec<Arc<WorkloadDelta>>>,
+    ) -> Gate {
+        let store = match &self.l2 {
+            Some(s) if self.lease.enabled => s,
+            _ => return Gate::Build { lease: None, waited: false, takeover: false },
+        };
+        let id = Manifest::artifact_id(key);
+        let t0 = Instant::now();
+        let mut waited = false;
+        loop {
+            match lease::try_acquire(store.dir(), &id, self.lease.ttl) {
+                Ok(Acquire::Held(l)) => {
+                    // If we waited or expired a holder, their build may
+                    // have landed between our last poll and this acquire
+                    // — don't rebuild an artifact that just arrived.
+                    if waited || l.took_over() {
+                        store.refresh();
+                        if let Some((value, mut ev)) = self.try_store(*key, deltas_from) {
+                            ev.lease_waited = waited;
+                            return Gate::Serve(value, ev);
+                        }
+                    }
+                    let takeover = l.took_over();
+                    return Gate::Build { lease: Some(l), waited, takeover };
+                }
+                Ok(Acquire::Busy { .. }) => {
+                    waited = true;
+                    if t0.elapsed() >= self.lease.max_wait {
+                        eprintln!(
+                            "warning: waited {:?} on the build lease for {id}; \
+                             building independently",
+                            self.lease.max_wait
+                        );
+                        return Gate::Build { lease: None, waited, takeover: false };
+                    }
+                    std::thread::sleep(self.lease.poll);
+                    store.refresh();
+                    if let Some((value, mut ev)) = self.try_store(*key, deltas_from) {
+                        ev.lease_waited = true;
+                        return Gate::Serve(value, ev);
+                    }
+                }
+                Err(e) => {
+                    eprintln!("warning: build lease unavailable ({e}); building independently");
+                    return Gate::Build { lease: None, waited, takeover: false };
+                }
             }
         }
-        (value, TieredEvent { build_time, ..Default::default() })
+    }
+
+    /// The generation watch (DESIGN.md §13): poll the shared manifest
+    /// (one `stat`) and, when peer processes have committed workload
+    /// updates for `fingerprint` beyond `registry`'s current generation,
+    /// bridge the persisted delta chain into the registry. Subsequent
+    /// lookups then carry the advanced generation, so a stale L1 entry is
+    /// patched forward or rebuilt — never served — keeping the
+    /// `stale_generation_serves == 0` invariant across process
+    /// boundaries. Returns the number of generations advanced (0 when
+    /// already current, the watch is off, or no store is attached).
+    pub fn sync_peer_updates(&self, fingerprint: u128, registry: &WorkloadRegistry) -> u64 {
+        let store = match &self.l2 {
+            Some(s) if self.watch => s,
+            _ => return 0,
+        };
+        store.refresh();
+        let top = store.max_delta_generation(fingerprint);
+        let cur = registry.generation(fingerprint);
+        if top <= cur {
+            return 0;
+        }
+        match store.load_deltas(fingerprint, cur, top) {
+            Some(chain) => registry.extend_family(fingerprint, cur, chain),
+            // a broken/incomplete persisted chain: leave the registry
+            // alone; affected lookups will rebuild at their generation
+            None => 0,
+        }
     }
 
     /// The delta chain from `from` to `key.generation`: the caller's
@@ -314,6 +511,14 @@ impl TieredIndexCache {
             }
         }
     }
+}
+
+/// Outcome of [`TieredIndexCache::build_gate`]: either serve what a peer
+/// built while we waited, or go build — holding the lease when we won it,
+/// ungated when leases are off/unsupported/timed out.
+enum Gate {
+    Serve(CachedIndex, TieredEvent),
+    Build { lease: Option<Lease>, waited: bool, takeover: bool },
 }
 
 /// Derive the deterministic patch seed for generation `g` of a workload
@@ -671,6 +876,109 @@ mod tests {
         });
         assert!(rebuilt.get(), "missing deltas g2..g3: must rebuild");
         assert!(!ev.patched && !ev.l1_hit && !ev.l2_hit);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The cross-process build-dedup headline (DESIGN.md §13): two caches
+    /// (modeling two processes) miss the same cold key concurrently —
+    /// exactly one builds under the lease, the other waits and promotes
+    /// the winner's artifact from the store.
+    #[test]
+    fn shared_miss_builds_once_and_the_peer_promotes() {
+        use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+        let dir = scratch_dir("lease-dedup");
+        let vs = random_set(60, 4, 12);
+        let k = key(&vs, IndexKind::Flat, 1);
+        let fast_poll = LeaseSettings {
+            poll: Duration::from_millis(5),
+            ..LeaseSettings::default()
+        };
+        let a = TieredIndexCache::with_store(2, &dir).unwrap().with_lease(fast_poll);
+        let b = TieredIndexCache::with_store(2, &dir).unwrap().with_lease(fast_poll);
+        let builds = AtomicUsize::new(0);
+        let a_building = AtomicBool::new(false);
+
+        let (ev_a, ev_b) = std::thread::scope(|s| {
+            let ha = s.spawn(|| {
+                a.get_or_build(k, || {
+                    a_building.store(true, Ordering::SeqCst);
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    // a deliberately slow build: B must arrive mid-flight
+                    std::thread::sleep(Duration::from_millis(300));
+                    (
+                        CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)),
+                        Duration::from_millis(300),
+                    )
+                })
+                .1
+            });
+            // start B only once A provably holds the lease (its build
+            // closure runs strictly after acquisition)
+            while !a_building.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let hb = s.spawn(|| {
+                b.get_or_build(k, || {
+                    builds.fetch_add(1, Ordering::SeqCst);
+                    (
+                        CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)),
+                        Duration::ZERO,
+                    )
+                })
+                .1
+            });
+            (ha.join().unwrap(), hb.join().unwrap())
+        });
+
+        assert_eq!(builds.load(Ordering::SeqCst), 1, "exactly one build per shared miss");
+        assert!(ev_a.lease_acquired && !ev_a.lease_waited && !ev_a.lease_takeover);
+        assert!(ev_b.l2_hit, "the waiter serves the winner's artifact");
+        assert!(ev_b.lease_waited && !ev_b.lease_acquired);
+
+        // the metrics pipeline sees both sides
+        let mut rep = CacheReport::default();
+        ev_a.fold_into(&mut rep);
+        ev_b.fold_into(&mut rep);
+        assert_eq!((rep.lease_acquired, rep.lease_waited, rep.lease_takeovers), (1, 1, 0));
+        assert_eq!((rep.misses, rep.l2_hits), (1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Crash-mid-lease recovery (DESIGN.md §13 failure modes): a lock
+    /// file left behind by a killed process — never refreshed, never
+    /// released — must be expired and taken over after the TTL, not
+    /// deadlock peers; and the takeover's own release leaves the dir
+    /// clean.
+    #[test]
+    fn abandoned_lease_is_expired_and_taken_over() {
+        let dir = scratch_dir("lease-crash");
+        let vs = random_set(30, 3, 13);
+        let k = key(&vs, IndexKind::Flat, 1);
+        let tiered = TieredIndexCache::with_store(2, &dir).unwrap().with_lease(LeaseSettings {
+            ttl: Duration::from_millis(100),
+            poll: Duration::from_millis(10),
+            ..LeaseSettings::default()
+        });
+        // the "crashed" holder's lock file, freshly written — peers must
+        // honor it for a TTL before expiring it
+        let lock = dir.join(format!("{}.lease", Manifest::artifact_id(&k)));
+        std::fs::write(&lock, "token 424242:0\n").unwrap();
+
+        let built = Cell::new(false);
+        let (_, ev) = tiered.get_or_build(k, || {
+            built.set(true);
+            (CachedIndex::Mono(build_index(IndexKind::Flat, vs.clone(), 1)), Duration::ZERO)
+        });
+        assert!(built.get(), "the takeover must build (nothing was persisted)");
+        assert!(ev.lease_takeover, "recovery must be reported as a takeover");
+        assert!(ev.lease_waited, "the TTL grace period counts as waiting");
+        assert!(ev.lease_acquired);
+        assert!(!lock.exists(), "the recovered lease is released after the build");
+        assert!(
+            tiered.store().unwrap().contains(&k),
+            "the artifact persisted despite the crashed predecessor"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

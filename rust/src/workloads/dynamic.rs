@@ -136,6 +136,42 @@ impl WorkloadRegistry {
         Ok((generation, delta))
     }
 
+    /// Graft a delta chain committed by a *peer process* (read back from
+    /// the shared store, see `TieredIndexCache::sync_peer_updates`) onto
+    /// the local family state. `chain` must cover generations
+    /// `chain_from + 1 ..= chain_from + chain.len()`; links the local
+    /// registry already has (because it advanced past `chain_from` on its
+    /// own, or the peer's update is the one we committed) are skipped, so
+    /// the call is idempotent and safe under races. Returns how many
+    /// generations the family advanced (0 = nothing new).
+    ///
+    /// A chain starting beyond the local generation is rejected (returns
+    /// 0): grafting it would leave a hole in the delta log, and the caller
+    /// should fall back to a full rebuild via the store instead.
+    pub fn extend_family(
+        &self,
+        fingerprint: u128,
+        chain_from: u64,
+        chain: Vec<Arc<WorkloadDelta>>,
+    ) -> u64 {
+        let mut families = self.families.lock().unwrap();
+        let fam = families.entry(fingerprint).or_default();
+        if chain_from > fam.generation {
+            return 0;
+        }
+        let already = (fam.generation - chain_from) as usize;
+        let mut advanced = 0u64;
+        for delta in chain.into_iter().skip(already) {
+            if let Some(live) = fam.live_m {
+                fam.live_m = Some(delta.live_after(live));
+            }
+            fam.deltas.push(delta);
+            fam.generation += 1;
+            advanced += 1;
+        }
+        advanced
+    }
+
     /// Install restored delta chains (from
     /// [`crate::store::DiskStore::delta_chains`]) into an empty registry —
     /// generation state surviving a restart. Families already present are
@@ -265,6 +301,34 @@ mod tests {
         }
         assert_eq!(effective.to_vec(), manual.to_vec());
         assert_eq!(effective.len(), 20 - 1 + 2 - 2 + 1);
+    }
+
+    #[test]
+    fn extend_family_grafts_peer_chains_idempotently() {
+        let reg = WorkloadRegistry::new();
+        let fp = 0xCAFE;
+        reg.ensure_base(fp, 40);
+        let d1 = Arc::new(synthesize_delta(fp, 1, 40, 4, 2, 1));
+        let d2 = Arc::new(synthesize_delta(fp, 2, 41, 4, 1, 0));
+
+        // a peer committed two updates we have not seen
+        let advanced = reg.extend_family(fp, 0, vec![Arc::clone(&d1), Arc::clone(&d2)]);
+        assert_eq!(advanced, 2);
+        assert_eq!(reg.generation(fp), 2);
+        assert_eq!(reg.deltas(fp, 0, 2).unwrap().len(), 2);
+
+        // replaying the same chain is a no-op
+        assert_eq!(reg.extend_family(fp, 0, vec![d1, d2]), 0);
+        assert_eq!(reg.generation(fp), 2);
+
+        // a chain that starts beyond our generation would leave a hole
+        let d4 = Arc::new(synthesize_delta(fp, 4, 43, 4, 1, 0));
+        assert_eq!(reg.extend_family(fp, 3, vec![d4]), 0);
+        assert_eq!(reg.generation(fp), 2);
+
+        // local appends continue from the grafted state
+        let (g3, _) = reg.append_synthesized(fp, 4, 1, 0).unwrap();
+        assert_eq!(g3, 3);
     }
 
     #[test]

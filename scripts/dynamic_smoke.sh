@@ -13,12 +13,13 @@
 #      snapshot + delta — store_hit > 0, zero cold rebuilds, at least one
 #      patched promotion, and zero stale-generation serves.
 set -euo pipefail
-cd "$(dirname "$0")/.."
+source "$(dirname "$0")/smoke_lib.sh"
+smoke_cd_root
 
 STORE="${1:-/tmp/fastmwem-dynamic-smoke}"
 rm -rf "$STORE"
 
-cargo build --release
+smoke_build
 
 echo "== 1. cold serve: build + persist generation 0 =="
 cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 --store-dir="$STORE"
@@ -34,13 +35,13 @@ echo "== 3. warm serve: restore + patch forward, never serve stale =="
 out=$(cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 --store-dir="$STORE")
 echo "$out"
 
-echo "$out" | grep -Eq '"store_hit":[1-9]' \
-    || { echo "FAIL: restarted serve must restore indices (store_hit > 0)"; exit 1; }
-echo "$out" | grep -Eq '"store_miss":0[,}]' \
-    || { echo "FAIL: restarted serve must build zero indices (store_miss == 0)"; exit 1; }
-echo "$out" | grep -Eq '"index_cache_patched":[1-9]' \
-    || { echo "FAIL: the updated workload must be patched forward (index_cache_patched > 0)"; exit 1; }
-echo "$out" | grep -Eq '"stale_generation_serves":0[,}]' \
-    || { echo "FAIL: a stale generation must never be served"; exit 1; }
+smoke_out_counter_pos "$out" store_hit \
+    "restarted serve must restore indices"
+smoke_out_counter_zero "$out" store_miss \
+    "restarted serve must build zero indices"
+smoke_out_counter_pos "$out" index_cache_patched \
+    "the updated workload must be patched forward"
+smoke_out_counter_zero "$out" stale_generation_serves \
+    "a stale generation must never be served"
 
 echo "dynamic-workload smoke passed"

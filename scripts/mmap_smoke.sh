@@ -16,12 +16,13 @@
 # The decode==0 assertion is safe on the Linux CI runners: the mapped
 # restore only falls back to a heap decode where mmap is unavailable.
 set -euo pipefail
-cd "$(dirname "$0")/.."
+source "$(dirname "$0")/smoke_lib.sh"
+smoke_cd_root
 
 STORE="${1:-/tmp/fastmwem-mmap-smoke}"
 rm -rf "$STORE"
 
-cargo build --release
+smoke_build
 
 echo "== 1. cold serve: build and persist paged artifacts =="
 cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 --store-dir="$STORE"
@@ -31,14 +32,14 @@ out=$(cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 \
     --store-dir="$STORE" --heap-budget-mb=1)
 echo "$out"
 
-echo "$out" | grep -Eq '"store_hit":[1-9]' \
-    || { echo "FAIL: restarted serve must restore indices from the store (store_hit > 0)"; exit 1; }
-echo "$out" | grep -Eq '"store_miss":0[,}]' \
-    || { echo "FAIL: restarted serve must rebuild zero indices (store_miss == 0)"; exit 1; }
-echo "$out" | grep -Eq '"store_mmap_restore":[1-9]' \
-    || { echo "FAIL: budget-constrained restores must page via mmap (store_mmap_restore > 0)"; exit 1; }
-echo "$out" | grep -Eq '"store_decode_restore":0[,}]' \
-    || { echo "FAIL: budget-constrained restores must never heap-decode (store_decode_restore == 0)"; exit 1; }
+smoke_out_counter_pos "$out" store_hit \
+    "restarted serve must restore indices from the store"
+smoke_out_counter_zero "$out" store_miss \
+    "restarted serve must rebuild zero indices"
+smoke_out_counter_pos "$out" store_mmap_restore \
+    "budget-constrained restores must page via mmap"
+smoke_out_counter_zero "$out" store_decode_restore \
+    "budget-constrained restores must never heap-decode"
 echo "$out" | grep -q '"index_cache_bytes":' \
     || { echo "FAIL: serve must publish the index_cache_bytes gauge"; exit 1; }
 

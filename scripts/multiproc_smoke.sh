@@ -1,0 +1,192 @@
+#!/usr/bin/env bash
+# Multi-process smoke (DESIGN.md §13): boot TWO wire daemons over ONE
+# artifact store directory, drive a tenant-partitioned job mix at the
+# fleet (tenant t -> daemon t % 2, the examples/router.rs partitioning),
+# and assert the coordination contract from the merged metrics:
+#   1. exactly one build per workload fingerprint fleet-wide — the sum of
+#      `store_miss` across processes equals the number of distinct
+#      workloads, and at least one process waited on a peer's build lease
+#      (`lease_waited > 0`) because the mix opens with the SAME heavy
+#      workload landing on both daemons at once;
+#   2. a workload update committed by one process is adopted by the other
+#      before it serves (`peer_invalidations > 0` fleet-wide and
+#      `stale_generation_serves == 0` in EVERY process);
+#   3. the fleet outruns a single daemon serving the identical mix
+#      (aggregate throughput strictly above the one-process baseline);
+#   4. both daemons drain cleanly on `POST /v1/shutdown` (exit 0, every
+#      admitted job completed, none failed).
+# The same check runs in CI (.github/workflows/ci.yml, multiproc-smoke
+# job), which uploads the logs and metrics JSON on failure.
+#
+#   ./scripts/multiproc_smoke.sh [EPS_PER_TENANT]
+set -euo pipefail
+source "$(dirname "$0")/smoke_lib.sh"
+smoke_cd_root
+
+EPS_CAP="${1:-6.0}"
+SCRATCH="${MULTIPROC_SCRATCH:-/tmp/fastmwem-multiproc-smoke}"
+rm -rf "$SCRATCH"
+mkdir -p "$SCRATCH"
+
+smoke_build
+
+# Drive the fixed mix at a fleet: tenants hash across the given addresses
+# (tenant t -> addrs[t % N]), so one address gets the whole mix and two
+# addresses split it — identical work either way, which is what makes the
+# throughput comparison fair. Writes the drive's wall-clock seconds to
+# ELAPSED_FILE.
+drive_mix() {
+    python3 - "$@" <<'EOF'
+import http.client, sys, threading, time
+
+elapsed_file, addrs = sys.argv[1], sys.argv[2:]
+failures, lock = [], threading.Lock()
+
+def post(addr, tenant, body):
+    try:
+        host, port = addr.rsplit(":", 1)
+        c = http.client.HTTPConnection(host, int(port), timeout=600)
+        c.request("POST", "/v1/jobs", body=body,
+                  headers={"Authorization": f"Bearer tenant-{tenant}"})
+        r = c.getresponse()
+        data = r.read()
+        c.close()
+        if r.status != 200:
+            raise AssertionError(f"status {r.status}: {data[:200]!r}")
+    except Exception as e:  # noqa: BLE001 - any failure fails the smoke
+        with lock:
+            failures.append(f"tenant {tenant} -> {addr}: {e}")
+
+def route(tenant):
+    return addrs[tenant % len(addrs)]
+
+def run_all(threads):
+    for t in threads: t.start()
+    for t in threads: t.join()
+    assert not failures, "drive failures:\n  " + "\n  ".join(failures)
+
+HEAVY = ('{"kind":"release","u":128,"m":1200,"n":400,"t":60,"eps":0.25,'
+         '"index":"hnsw","workload":9,"seed":1}')
+def rel(w, seed):
+    return ('{"kind":"release","u":64,"m":300,"n":400,"t":50,"eps":0.25,'
+            f'"index":"hnsw","workload":{w},"seed":{seed}}}')
+UPDATE = '{"kind":"update","workload":0,"u":64,"m":300,"n":400,"insert":4,"tombstone":2}'
+
+t0 = time.monotonic()
+
+# 1. The SAME heavy workload lands everywhere at once: a shared cold miss
+# that the build lease must collapse to one build fleet-wide.
+run_all([threading.Thread(target=post, args=(route(t), t, HEAVY))
+         for t in (0, 1)])
+
+# 2. Four tenants sweep four workloads (16 jobs, the throughput body).
+def sweep(tenant, seed_base):
+    for w in range(4):
+        post(route(tenant), tenant, rel(w, seed_base + tenant))
+run_all([threading.Thread(target=sweep, args=(t, 10)) for t in range(4)])
+
+# 3. One tenant evolves workload 0 from its side of the fleet...
+post(route(0), 0, UPDATE)
+
+# 4. ...and every tenant's next release of it — on BOTH daemons — must
+# answer the new generation.
+run_all([threading.Thread(target=post, args=(route(t), t, rel(0, 100 + t)))
+         for t in range(4)])
+
+elapsed = time.monotonic() - t0
+open(elapsed_file, "w").write(f"{elapsed:.3f}")
+print(f"  drove 23 jobs across {len(addrs)} daemon(s) in {elapsed:.1f}s")
+EOF
+}
+
+post_shutdown() {
+    python3 - "$1" <<'EOF'
+import http.client, sys
+host, port = sys.argv[1].rsplit(":", 1)
+c = http.client.HTTPConnection(host, int(port), timeout=60)
+c.request("POST", "/v1/shutdown", headers={"Authorization": "Bearer tenant-0"})
+assert c.getresponse().status == 200
+EOF
+}
+
+DAEMON_ARGS=(--workers=2 --queue-depth=16 --policy=block --tenants=4
+    "--eps-per-tenant=$EPS_CAP" --conn-workers=8 --listen=127.0.0.1:0)
+
+echo "== 1. baseline: ONE daemon serves the whole mix =="
+smoke_spawn_daemon "$SCRATCH/base.log" "${DAEMON_ARGS[@]}" \
+    --store-dir="$SCRATCH/base_store" "--metrics-out=$SCRATCH/base.json"
+BASE_PID=$SMOKE_DAEMON_PID
+BASE_ADDR=$(smoke_wait_listen "$SCRATCH/base.log") \
+    || { kill "$BASE_PID" 2>/dev/null || true; exit 1; }
+drive_mix "$SCRATCH/base_elapsed" "$BASE_ADDR"
+post_shutdown "$BASE_ADDR"
+wait "$BASE_PID"
+smoke_assert_clean_drain "$SCRATCH/base.json"
+
+echo "== 2. fleet: TWO daemons share one store, tenants partitioned =="
+smoke_spawn_daemon "$SCRATCH/proc0.log" "${DAEMON_ARGS[@]}" \
+    --store-dir="$SCRATCH/shared_store" "--metrics-out=$SCRATCH/proc0.json"
+PID0=$SMOKE_DAEMON_PID
+smoke_spawn_daemon "$SCRATCH/proc1.log" "${DAEMON_ARGS[@]}" \
+    --store-dir="$SCRATCH/shared_store" "--metrics-out=$SCRATCH/proc1.json"
+PID1=$SMOKE_DAEMON_PID
+ADDR0=$(smoke_wait_listen "$SCRATCH/proc0.log") \
+    || { kill "$PID0" "$PID1" 2>/dev/null || true; exit 1; }
+ADDR1=$(smoke_wait_listen "$SCRATCH/proc1.log") \
+    || { kill "$PID0" "$PID1" 2>/dev/null || true; exit 1; }
+drive_mix "$SCRATCH/multi_elapsed" "$ADDR0" "$ADDR1"
+
+# Clean drain on every process: shutdown over the wire, exit status 0.
+post_shutdown "$ADDR0"
+post_shutdown "$ADDR1"
+wait "$PID0"
+wait "$PID1"
+smoke_assert_clean_drain "$SCRATCH/proc0.json"
+smoke_assert_clean_drain "$SCRATCH/proc1.json"
+
+echo "== 3. merged-metrics coordination contract =="
+python3 - "$SCRATCH" <<'EOF'
+import json, sys
+
+scratch = sys.argv[1]
+procs = [json.load(open(f"{scratch}/proc{i}.json"))["counters"] for i in (0, 1)]
+base = json.load(open(f"{scratch}/base.json"))["counters"]
+tot = lambda name: sum(c.get(name, 0) for c in procs)
+
+# The mix touches 5 distinct workload fingerprints (workloads 0-3 + the
+# heavy contended one). Exactly one process built each: every other
+# lookup promoted a peer's committed artifact or hit L1.
+DISTINCT = 5
+assert base.get("store_miss", 0) == DISTINCT, f"baseline builds: {base}"
+assert tot("store_miss") == DISTINCT, (
+    f"fleet must build once per workload, not per process: "
+    f"{[c.get('store_miss', 0) for c in procs]}")
+assert tot("lease_waited") > 0, (
+    "the shared cold miss must make one process wait on the peer's build "
+    f"lease: {[c.get('lease_waited', 0) for c in procs]}")
+assert tot("lease_acquired") == tot("store_miss"), (
+    f"every build runs under a lease: {[c.get('lease_acquired', 0) for c in procs]}")
+
+# The update committed by one process reached the other before it served.
+assert tot("peer_invalidations") > 0, (
+    f"the peer never adopted the update: {procs}")
+for i, c in enumerate(procs):
+    assert c.get("stale_generation_serves", 0) == 0, (
+        f"proc{i} served a stale generation: {c}")
+    assert "lease_takeovers" in c, f"proc{i} lease counters not materialized: {c}"
+
+# Same 23-job mix, so throughput compares as inverse wall-clock.
+base_s = float(open(f"{scratch}/base_elapsed").read())
+multi_s = float(open(f"{scratch}/multi_elapsed").read())
+assert multi_s < base_s, (
+    f"two daemons must outrun one on the same mix: "
+    f"fleet {multi_s:.1f}s vs single {base_s:.1f}s")
+
+print(f"multiproc smoke OK: {tot('jobs_completed')} jobs over 2 procs, "
+      f"{tot('store_miss')} builds for {DISTINCT} workloads "
+      f"({tot('lease_waited')} lease waits, "
+      f"{tot('peer_invalidations')} peer invalidations), "
+      f"fleet {base_s / multi_s:.2f}x faster than one process")
+EOF
+
+echo "multiproc smoke passed"

@@ -1,0 +1,101 @@
+# Shared harness for the smoke/soak scripts (sourced, never executed):
+# repo-root discovery, release builds, wire-daemon spawn / wait-for-listen,
+# and the metrics-JSON assertions every gate repeats. Used by
+# serve_soak.sh, dynamic_smoke.sh, mmap_smoke.sh, wire_soak.sh and
+# multiproc_smoke.sh so the five gates speak one dialect and a harness
+# fix lands everywhere at once.
+#
+# Conventions: callers run `set -euo pipefail` themselves; helpers print a
+# "FAIL: ..." line and return nonzero instead of exiting, so callers keep
+# control of cleanup.
+
+# cd to the repository root (the scripts all live in scripts/).
+smoke_cd_root() {
+    cd "$(dirname "${BASH_SOURCE[1]}")/.."
+}
+
+# Build the release binary once; SMOKE_SKIP_BUILD=1 skips (CI builds in a
+# prior step and the smokes must not pay it twice).
+smoke_build() {
+    if [ "${SMOKE_SKIP_BUILD:-0}" != "1" ]; then
+        cargo build --release
+    fi
+}
+
+# smoke_spawn_daemon LOG ARGS... — start a bounded wire daemon in the
+# background, stdout+stderr to LOG, and leave its pid in
+# SMOKE_DAEMON_PID (not echoed: command substitution would orphan the
+# daemon into a subshell and break the caller's `wait`). `timeout`
+# bounds the run so a drain deadlock fails the gate instead of hanging it.
+smoke_spawn_daemon() {
+    local log="$1"; shift
+    timeout "${SMOKE_TIMEOUT:-900}" ./target/release/repro serve --daemon \
+        "$@" > "$log" 2>&1 &
+    SMOKE_DAEMON_PID=$!
+}
+
+# smoke_wait_listen LOG — poll LOG for the daemon's listen line and echo
+# the bound address; fails (with the log) if it never appears.
+smoke_wait_listen() {
+    local log="$1" addr=""
+    for _ in $(seq 1 "${SMOKE_LISTEN_TRIES:-150}"); do
+        addr=$(grep -m1 -oE 'wire: listening on [0-9.]+:[0-9]+' "$log" \
+            | awk '{print $4}' || true)
+        [ -n "$addr" ] && { echo "$addr"; return 0; }
+        sleep 0.2
+    done
+    echo "FAIL: daemon never reported its listen address (log: $log)" >&2
+    cat "$log" >&2
+    return 1
+}
+
+# smoke_counter FILE NAME — a counter's value from a metrics JSON dump
+# (0 when absent, matching the Metrics counter semantics).
+smoke_counter() {
+    python3 - "$1" "$2" <<'EOF'
+import json, sys
+print(json.load(open(sys.argv[1])).get("counters", {}).get(sys.argv[2], 0))
+EOF
+}
+
+# smoke_assert_clean_drain FILE — the drain contract every daemon gate
+# shares: zero failed jobs and every admitted job completed.
+smoke_assert_clean_drain() {
+    python3 - "$1" <<'EOF'
+import json, sys
+c = json.load(open(sys.argv[1]))["counters"]
+assert c.get("jobs_failed", 0) == 0, f"failed jobs: {c}"
+assert c["jobs_completed"] == c["jobs_admitted"], (
+    "clean drain must complete every admitted job: " f"{c}")
+EOF
+}
+
+# smoke_assert_caps FILE CAP — no tenant's spent ε exceeds the cap, and
+# more than one tenant actually ran.
+smoke_assert_caps() {
+    python3 - "$1" "$2" <<'EOF'
+import json, sys
+m = json.load(open(sys.argv[1]))
+cap = float(sys.argv[2])
+g = m["gauges"]
+assert g["tenant_eps_cap"] == cap
+spent = {k: v for k, v in g.items()
+         if k.startswith("tenant_") and k.endswith("_eps_spent")}
+assert len(spent) >= 2, f"expected multiple tenants, got {spent}"
+over = {k: v for k, v in spent.items() if v > cap + 1e-9}
+assert not over, f"tenants over their cap: {over}"
+EOF
+}
+
+# smoke_out_counter_pos OUT NAME — assert a serve run's stdout metrics
+# JSON shows counter NAME > 0.
+smoke_out_counter_pos() {
+    echo "$1" | grep -Eq "\"$2\":[1-9]" \
+        || { echo "FAIL: expected $2 > 0 — $3"; return 1; }
+}
+
+# smoke_out_counter_zero OUT NAME — assert counter NAME == 0.
+smoke_out_counter_zero() {
+    echo "$1" | grep -Eq "\"$2\":0[,}]" \
+        || { echo "FAIL: expected $2 == 0 — $3"; return 1; }
+}

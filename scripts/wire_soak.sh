@@ -13,7 +13,8 @@
 #
 #   ./scripts/wire_soak.sh [CONNS] [REQS_PER_CONN] [EPS_PER_TENANT] [P99_MS]
 set -euo pipefail
-cd "$(dirname "$0")/.."
+source "$(dirname "$0")/smoke_lib.sh"
+smoke_cd_root
 
 CONNS="${1:-16}"
 REQS="${2:-3}"
@@ -23,7 +24,7 @@ OUT="${WIRE_METRICS_OUT:-wire_metrics.json}"
 LOG="${WIRE_LOG:-wire_soak.log}"
 ORACLE_DIR="${WIRE_ORACLE_DIR:-wire_oracle}"
 
-cargo build --release
+smoke_build
 
 # The fixed spec set: one release + one lp per tenant, seeds pinned. Every
 # wire response is compared byte-for-byte against the in-process oracle
@@ -43,21 +44,13 @@ for tenant in 0 1 2 3; do
     done
 done
 
-# Boot the daemon on an ephemeral port; `timeout` bounds the whole soak so
-# a drain deadlock fails the gate instead of hanging it.
-timeout 900 ./target/release/repro serve --daemon --listen=127.0.0.1:0 \
+# Boot the daemon on an ephemeral port and wait for its listen line.
+smoke_spawn_daemon "$LOG" --listen=127.0.0.1:0 \
     --workers=4 --queue-depth=16 --policy=block "--eps-per-tenant=$EPS_CAP" \
-    "--conn-workers=$CONNS" --tenants=4 "--metrics-out=$OUT" > "$LOG" 2>&1 &
-DAEMON=$!
+    "--conn-workers=$CONNS" --tenants=4 "--metrics-out=$OUT"
+DAEMON=$SMOKE_DAEMON_PID
 
-ADDR=""
-for _ in $(seq 1 150); do
-    ADDR=$(grep -m1 -oE 'wire: listening on [0-9.]+:[0-9]+' "$LOG" | awk '{print $4}' || true)
-    [ -n "$ADDR" ] && break
-    sleep 0.2
-done
-if [ -z "$ADDR" ]; then
-    echo "FAIL: daemon never reported its listen address"; cat "$LOG"
+if ! ADDR=$(smoke_wait_listen "$LOG"); then
     kill "$DAEMON" 2>/dev/null || true
     exit 1
 fi
@@ -122,6 +115,9 @@ wait "$DAEMON"
 echo "daemon drained cleanly"
 tail -n 12 "$LOG"
 
+smoke_assert_clean_drain "$OUT"
+smoke_assert_caps "$OUT" "$EPS_CAP"
+
 python3 - "$OUT" "$EPS_CAP" "$CONNS" "$REQS" <<'EOF'
 import json, sys
 
@@ -131,10 +127,6 @@ counters = metrics["counters"]
 gauges = metrics["gauges"]
 
 assert counters.get("parse_errors", 0) == 0, f"parse errors on valid traffic: {counters}"
-assert counters.get("jobs_failed", 0) == 0, f"failed jobs: {counters}"
-assert counters["jobs_completed"] == counters["jobs_admitted"], (
-    "clean drain must complete every admitted job: " f"{counters}"
-)
 assert counters["http_200"] >= conns * reqs, f"missing successes: {counters}"
 assert counters.get("http_400", 0) == 0 and counters.get("http_401", 0) == 0, (
     "valid authenticated traffic must never 4xx: " f"{counters}"
@@ -143,9 +135,6 @@ assert gauges.get("conns_open", 0) == 0, f"connections left open: {gauges}"
 
 spent = {k: v for k, v in gauges.items()
          if k.startswith("tenant_") and k.endswith("_eps_spent")}
-assert len(spent) >= 2, f"expected multiple tenants, got {spent}"
-over = {k: v for k, v in spent.items() if v > cap + 1e-9}
-assert not over, f"tenants over their cap: {over}"
 
 timings = metrics["timings"]
 assert "wire_request" in timings, f"wire latency series missing: {sorted(timings)}"
