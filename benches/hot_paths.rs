@@ -25,7 +25,7 @@ use fast_mwem::util::bench::{bench, fmt_dur, header, BenchResult};
 use fast_mwem::util::json::Json;
 use fast_mwem::util::math::dot;
 use fast_mwem::util::rng::Rng;
-use fast_mwem::workloads::binary_queries;
+use fast_mwem::workloads::{binary_queries, synthesize_queries, QueryClassKind};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -95,6 +95,37 @@ fn main() {
         em.select(&mut rng3, &d, 1.0, sens).index
     }));
 
+    // ---------------- convex-loss query class (DESIGN.md §14) ----------------
+    // The beyond-linear axis: the same lazy oracle drawing over embedded
+    // convex-loss score vectors instead of binary counting queries.
+    // `convex.lazy_over_exhaustive` is the machine-independent per-draw
+    // ratio the perf gate tracks (< 1 means the k-MIPS shortcut pays off
+    // on the loss embedding too).
+    header(&format!("convex-loss selection: lazy hnsw vs exhaustive (m={m}, U={u})"));
+    let mut crng = Rng::new(11);
+    let cq = synthesize_queries(&mut crng, QueryClassKind::ConvexLsq, m, u);
+    let chnsw = build_index(IndexKind::Hnsw, cq.vectors().clone(), 13);
+    let cem = LazyEm::new(chnsw.as_ref(), cq.vectors(), ScoreTransform::Abs);
+    let mut rng_ce = Rng::new(14);
+    let convex_exhaustive = bench("convex exhaustive: abs_scores + EM scan", budget, || {
+        let scores = cq.abs_scores(&d);
+        exponential_mechanism(&mut rng_ce, &scores, 1.0, sens)
+    });
+    let mut rng_cl = Rng::new(15);
+    let convex_lazy = bench("convex lazy EM draw (hnsw)", budget, || {
+        cem.select(&mut rng_cl, &d, 1.0, sens).index
+    });
+    let lazy_over_exhaustive =
+        convex_lazy.p50.as_secs_f64() / convex_exhaustive.p50.as_secs_f64().max(1e-12);
+    println!(
+        "  -> convex lazy_over_exhaustive = {lazy_over_exhaustive:.3} ({:.1}x)",
+        1.0 / lazy_over_exhaustive.max(1e-12)
+    );
+    let convex_exhaustive_ns = convex_exhaustive.p50.as_nanos() as f64;
+    let convex_lazy_ns = convex_lazy.p50.as_nanos() as f64;
+    recorded.push(convex_exhaustive);
+    recorded.push(convex_lazy);
+
     // ---------------- shard-count axis (DESIGN.md §5) ----------------
     // Build time is the headline: S per-shard HNSW builds run in parallel
     // on the pool, and each shard is smaller, so build drops superlinearly
@@ -140,6 +171,7 @@ fn main() {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards: 1,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload: 42,
             tenant: 0,
             seed,
@@ -393,6 +425,15 @@ fn main() {
             .insert("patch_over_rebuild".to_string(), Json::Num(patch_over_rebuild));
         dynamic_obj.insert("rows_patched".to_string(), Json::Num(touched as f64));
 
+        // the convex-loss query-class ratio the perf gate tracks: lazy /
+        // exhaustive per-draw p50 over the loss embedding (< 1 means the
+        // k-MIPS shortcut carries over to the beyond-linear class)
+        let mut convex_obj = BTreeMap::new();
+        convex_obj.insert("exhaustive_ns".to_string(), Json::Num(convex_exhaustive_ns));
+        convex_obj.insert("lazy_ns".to_string(), Json::Num(convex_lazy_ns));
+        convex_obj
+            .insert("lazy_over_exhaustive".to_string(), Json::Num(lazy_over_exhaustive));
+
         // the kernel-dispatch ratio the perf gate tracks: dispatched /
         // scalar p50 (≤ ~1 always; < 1 when a SIMD arm is active)
         let mut kernels_obj = BTreeMap::new();
@@ -411,6 +452,7 @@ fn main() {
         obj.insert("index_cache".to_string(), Json::Obj(cache_obj));
         obj.insert("store".to_string(), Json::Obj(store_obj));
         obj.insert("dynamic".to_string(), Json::Obj(dynamic_obj));
+        obj.insert("convex".to_string(), Json::Obj(convex_obj));
         obj.insert("kernels".to_string(), Json::Obj(kernels_obj));
         std::fs::write(&path, Json::Obj(obj).to_string()).expect("write bench json");
         println!("\nwrote {path}");

@@ -54,6 +54,7 @@ fn mixed_spec(i: usize, quick: bool) -> JobSpec {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards: 1,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload: (i % 2) as u64, // two repeated workloads
             tenant: (i % 2) as u64,
             seed: i as u64,

@@ -61,6 +61,7 @@ fn spec_for(tenant: u64, i: u64) -> JobSpec {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards: 1,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload: i % 2, // two repeated workloads -> cache hits
             tenant,
             seed: tenant * 100 + i,

@@ -12,9 +12,10 @@
 //! Keys are addressed as `section.key` (top-level keys have no prefix).
 //!
 //! Typed section views live next to their consumers: `[sharding]`,
-//! `[cache]`, `[store]`, `[dynamic]`, `[kernels]` and `[pager]` below
-//! ([`ShardingConfig`], [`CacheConfig`], [`StoreConfig`],
-//! [`DynamicConfig`], [`KernelConfig`], [`PagerConfig`]); the `[server]`
+//! `[cache]`, `[store]`, `[dynamic]`, `[kernels]`, `[pager]` and
+//! `[workload]` below ([`ShardingConfig`], [`CacheConfig`],
+//! [`StoreConfig`], [`DynamicConfig`], [`KernelConfig`], [`PagerConfig`],
+//! [`WorkloadConfig`]); the `[server]`
 //! section of the
 //! long-lived serving runtime is read by
 //! [`crate::server::ServerConfig::from_config`] (DESIGN.md §8), and the
@@ -467,6 +468,41 @@ impl PagerConfig {
     }
 }
 
+/// Typed view of the `[workload]` section (DESIGN.md §14): which query
+/// class release jobs synthesize and answer through the generic
+/// mechanism engine.
+///
+/// ```text
+/// [workload]
+/// class = "linear"   # linear | convex-lsq | convex-logistic
+/// ```
+///
+/// The CLI also accepts `--class=NAME` as shorthand for
+/// `--workload.class=NAME` (the shorthand wins over the section value).
+/// The class enters [`crate::coordinator::WorkloadKey`] through the
+/// fingerprint, so the tiered store never serves one class's artifact
+/// for another.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkloadConfig {
+    /// Query class released by `repro release` / served release jobs.
+    pub class: crate::workloads::QueryClassKind,
+}
+
+impl WorkloadConfig {
+    /// Read the `[workload]` section, honoring the `--class=NAME`
+    /// shorthand (the shorthand wins over `workload.class`).
+    pub fn from_config(cfg: &Config) -> Result<Self> {
+        let name = cfg
+            .get_str("class")
+            .or_else(|| cfg.get_str("workload.class"))
+            .unwrap_or("linear");
+        let class = name
+            .parse::<crate::workloads::QueryClassKind>()
+            .map_err(|e| anyhow::anyhow!("[workload] class: {e}"))?;
+        Ok(WorkloadConfig { class })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -653,6 +689,33 @@ mod tests {
         // an unknown quant mode is a typed config error, caught at apply
         let c = Config::parse("[pager]\nquant = \"int4\"\n").unwrap();
         assert!(PagerConfig::from_config(&c).unwrap().apply_quant().is_err());
+    }
+
+    #[test]
+    fn workload_section_parses_with_defaults_and_shorthand() {
+        use crate::workloads::QueryClassKind;
+        // default: linear
+        let c = Config::new();
+        assert_eq!(WorkloadConfig::from_config(&c).unwrap().class, QueryClassKind::Linear);
+
+        // section value
+        let c = Config::parse("[workload]\nclass = \"convex-lsq\"\n").unwrap();
+        assert_eq!(
+            WorkloadConfig::from_config(&c).unwrap().class,
+            QueryClassKind::ConvexLsq
+        );
+
+        // --class shorthand beats the section value
+        let mut c = Config::parse("[workload]\nclass = \"convex-lsq\"\n").unwrap();
+        c.apply_overrides(["--class=convex-logistic"]).unwrap();
+        assert_eq!(
+            WorkloadConfig::from_config(&c).unwrap().class,
+            QueryClassKind::ConvexLogistic
+        );
+
+        // an unknown class is a typed config error
+        let c = Config::parse("[workload]\nclass = \"cubic\"\n").unwrap();
+        assert!(WorkloadConfig::from_config(&c).is_err());
     }
 
     #[test]

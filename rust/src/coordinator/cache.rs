@@ -279,9 +279,9 @@ struct Inner {
     entries: HashMap<WorkloadKey, Entry>,
     /// Running sum of every resident entry's `bytes`.
     bytes: usize,
-    /// Memoized content fingerprints by (workload id, rows, dim) — see
-    /// [`IndexCache::fingerprint_for`].
-    fingerprints: HashMap<(u64, usize, usize), u128>,
+    /// Memoized content fingerprints by (workload id, class tag, rows,
+    /// dim) — see [`IndexCache::fingerprint_for`].
+    fingerprints: HashMap<(u64, u64, usize, usize), u128>,
     /// Monotonic use counter backing the LRU order.
     tick: u64,
     hits: u64,
@@ -338,16 +338,21 @@ impl IndexCache {
         }
     }
 
-    /// [`fingerprint_vectors`] memoized by `(workload_id, rows, dim)`: a
-    /// workload id names deterministic content, so the m×d content scan
-    /// runs once per workload instead of once per job — the warm path
-    /// then pays only a map probe. Sound only when the caller guarantees
-    /// one id ↔ one content per shape (true for the coordinator's
-    /// seed-synthesized workloads); callers without that guarantee should
-    /// use [`fingerprint_vectors`] directly. The memo is cleared if it
-    /// ever outgrows 64× the entry capacity, bounding memory.
-    pub fn fingerprint_for(&self, workload_id: u64, vs: &VectorSet) -> u128 {
-        let memo_key = (workload_id, vs.len(), vs.dim());
+    /// [`fingerprint_vectors`] memoized by `(workload_id, class_tag, rows,
+    /// dim)`: a (workload id, query class) pair names deterministic
+    /// content, so the m×d content scan runs once per workload instead of
+    /// once per job — the warm path then pays only a map probe. The class
+    /// tag ([`crate::workloads::QueryClassKind::tag`]) is part of the memo
+    /// key because two classes of one workload id synthesize *different*
+    /// content at the same shape; without it a memoized linear fingerprint
+    /// would be served for a convex workload (and the wrong cached index
+    /// with it). Sound only when the caller guarantees one (id, class) ↔
+    /// one content per shape (true for the coordinator's seed-synthesized
+    /// workloads); callers without that guarantee should use
+    /// [`fingerprint_vectors`] directly. The memo is cleared if it ever
+    /// outgrows 64× the entry capacity, bounding memory.
+    pub fn fingerprint_for(&self, workload_id: u64, class_tag: u64, vs: &VectorSet) -> u128 {
+        let memo_key = (workload_id, class_tag, vs.len(), vs.dim());
         if let Some(&fp) = self.inner.lock().unwrap().fingerprints.get(&memo_key) {
             return fp;
         }
@@ -607,9 +612,10 @@ mod tests {
         let cache = IndexCache::new(2);
         let v = vs(6, 3, 4.0);
         let direct = fingerprint_vectors(&v);
-        assert_eq!(cache.fingerprint_for(11, &v), direct);
-        assert_eq!(cache.fingerprint_for(11, &v), direct); // memoized path
-        assert_eq!(cache.fingerprint_for(12, &v), direct); // same content, new id
+        assert_eq!(cache.fingerprint_for(11, 0, &v), direct);
+        assert_eq!(cache.fingerprint_for(11, 0, &v), direct); // memoized path
+        assert_eq!(cache.fingerprint_for(12, 0, &v), direct); // same content, new id
+        assert_eq!(cache.fingerprint_for(11, 1, &v), direct); // same id, new class tag
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::lp::{run_scalar, ScalarLpConfig, SelectionMode};
 use crate::mips::{build_index, IndexKind};
 use crate::mwem::{FastMwemConfig, Histogram, MwemConfig, NativeBackend, QuerySet};
 use crate::util::rng::Rng;
-use crate::workloads::{self, LpInstance, WorkloadRegistry};
+use crate::workloads::{self, LpInstance, QueryClassKind, WorkloadRegistry};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -60,6 +60,12 @@ pub struct ReleaseJobSpec {
     pub index: Option<IndexKind>,
     /// Number of lazy-EM shards (≤ 1 → one monolithic index).
     pub shards: usize,
+    /// Query class answered by this release: linear counting queries or a
+    /// beyond-linear convex-loss workload (DESIGN.md §14). The class picks
+    /// the synthesis generator, so it is part of the workload's content
+    /// identity: two classes of one `workload` seed fingerprint — and
+    /// cache — independently.
+    pub class: QueryClassKind,
     /// Workload identity — the synthesis seed for the (histogram, query
     /// set) pair. Jobs sharing `workload` (and shape) answer the same
     /// query set, so their k-MIPS index is shared through the
@@ -290,14 +296,16 @@ pub fn execute_with_cache(
         JobSpec::Release(r) => {
             let mut rng = Rng::new(r.workload);
             let h: Histogram = workloads::gaussian_histogram(&mut rng, r.u, r.n);
-            let base_q: QuerySet = workloads::binary_queries(&mut rng, r.m, r.u);
+            let base_q: QuerySet = workloads::synthesize_queries(&mut rng, r.class, r.m, r.u);
             // Resolve the family's current generation and materialize the
             // effective query set. Static serving (no registry) stays on
             // the generation-0 fast path with zero extra work.
             let (generation, family_fp, q) = match registry {
                 Some(reg) => {
                     let fp = match cache {
-                        Some(c) => c.fingerprint_for(r.workload, base_q.vectors()),
+                        Some(c) => {
+                            c.fingerprint_for(r.workload, r.class.tag(), base_q.vectors())
+                        }
                         None => fingerprint_vectors(base_q.vectors()),
                     };
                     reg.ensure_base(fp, r.m);
@@ -366,7 +374,11 @@ pub fn execute_with_cache(
                             let key = WorkloadKey {
                                 fingerprint: match family_fp {
                                     Some(fp) => fp,
-                                    None => c.fingerprint_for(r.workload, q.vectors()),
+                                    None => c.fingerprint_for(
+                                        r.workload,
+                                        r.class.tag(),
+                                        q.vectors(),
+                                    ),
                                 },
                                 kind,
                                 shards,
@@ -464,7 +476,13 @@ pub fn execute_with_cache(
             let _h: Histogram = workloads::gaussian_histogram(&mut rng, u.u, u.n);
             let base_q: QuerySet = workloads::binary_queries(&mut rng, u.m, u.u);
             let fp = match cache {
-                Some(c) => c.fingerprint_for(u.workload, base_q.vectors()),
+                // updates evolve linear-query families only, so the memo
+                // tag matches the releases they target
+                Some(c) => c.fingerprint_for(
+                    u.workload,
+                    QueryClassKind::Linear.tag(),
+                    base_q.vectors(),
+                ),
                 None => fingerprint_vectors(base_q.vectors()),
             };
             reg.ensure_base(fp, u.m);
@@ -520,6 +538,7 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 1,
+            class: QueryClassKind::Linear,
             workload: 1,
             tenant: 0,
             seed: 1,
@@ -527,6 +546,45 @@ mod tests {
         let out = execute(&spec).unwrap();
         assert!(out.quality.is_finite() && out.quality >= 0.0);
         assert!(out.eps_spent > 0.0);
+    }
+
+    /// Convex-loss release rides the same executor: lazy selection over
+    /// the loss rows, sublinear work, and a distinct cache identity from
+    /// the linear class of the same workload seed.
+    #[test]
+    fn convex_release_job_executes_and_caches_separately() {
+        let cache = TieredIndexCache::memory_only(4);
+        let spec = |class| {
+            JobSpec::Release(ReleaseJobSpec {
+                u: 64,
+                m: 400,
+                n: 300,
+                t: 40,
+                eps: 1.0,
+                delta: 1e-3,
+                index: Some(IndexKind::Flat),
+                shards: 1,
+                class,
+                workload: 7,
+                tenant: 0,
+                seed: 1,
+            })
+        };
+        for class in [QueryClassKind::ConvexLsq, QueryClassKind::ConvexLogistic] {
+            let (out, _) = execute_with_cache(&spec(class), Some(&cache), None).unwrap();
+            assert!(out.quality.is_finite() && out.quality >= 0.0);
+            assert!(out.eps_spent > 0.0);
+            // lazy selection stays sublinear on the dense loss rows
+            assert!(out.avg_select_work < 400.0, "work {}", out.avg_select_work);
+        }
+        let (_, rep) =
+            execute_with_cache(&spec(QueryClassKind::Linear), Some(&cache), None).unwrap();
+        assert_eq!(
+            (rep.hits, rep.misses),
+            (0, 1),
+            "linear class of the same workload seed must not hit a convex entry"
+        );
+        assert_eq!(cache.l1().len(), 3, "three classes -> three cache entries");
     }
 
     #[test]
@@ -540,6 +598,7 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 4,
+            class: QueryClassKind::Linear,
             workload: 1,
             tenant: 0,
             seed: 1,
@@ -565,6 +624,7 @@ mod tests {
                 delta: 1e-3,
                 index: Some(IndexKind::Flat),
                 shards: 1,
+                class: QueryClassKind::Linear,
                 workload: 9,
                 tenant: 0,
                 seed,
@@ -596,6 +656,7 @@ mod tests {
                 delta: 1e-3,
                 index: Some(IndexKind::Flat),
                 shards: 1,
+                class: QueryClassKind::Linear,
                 workload: 9,
                 tenant: 0,
                 seed,
@@ -666,6 +727,7 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 1,
+            class: QueryClassKind::Linear,
             workload: 1,
             tenant: 0,
             seed: 1,

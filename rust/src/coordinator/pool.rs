@@ -375,6 +375,7 @@ mod tests {
             delta: 1e-3,
             index: Some(IndexKind::Flat),
             shards: 1,
+            class: crate::workloads::QueryClassKind::Linear,
             workload,
             tenant: 0,
             seed,
@@ -522,6 +523,7 @@ mod tests {
                 delta: 1e-3,
                 index: Some(IndexKind::Hnsw),
                 shards: 1,
+                class: crate::workloads::QueryClassKind::Linear,
                 workload: 7,
                 tenant: 0,
                 seed,

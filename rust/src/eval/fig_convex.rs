@@ -1,0 +1,82 @@
+//! Figure driver for the beyond-linear convex-loss release axis
+//! (DESIGN.md §14): least-squares and logistic loss workloads driven
+//! through the same [`MwemEngine`](crate::mwem::MwemEngine) as the
+//! linear-query figures, with exhaustive vs lazy selection compared on
+//! both error and per-round selection work.
+
+use super::common::{print_row, EvalOpts};
+use crate::mips::IndexKind;
+use crate::mwem::{run_classic, run_fast, FastMwemConfig, MwemConfig, NativeBackend};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::workloads::{gaussian_histogram, synthesize_queries, QueryClassKind};
+use anyhow::Result;
+
+/// Convex-loss release: classic exhaustive selection vs the lazy HNSW
+/// oracle over the same engine, for both loss families. The headline is
+/// twofold — the lazy run's final error tracks the exhaustive run (same
+/// softmax selection distribution over the embedded loss vectors), and
+/// its per-round selection work is sublinear in `m`.
+pub fn fig_convex_losses(opts: &EvalOpts) -> Result<()> {
+    let u = opts.pick(1024usize, 256);
+    let n = 500;
+    let t = opts.pick(2_000usize, 200);
+    let ms = opts.pick_vec(&[2_000usize, 10_000], &[1_000usize]);
+
+    let mut csv = CsvWriter::create(
+        opts.csv_path("fig_convex"),
+        &["class", "m", "err_classic", "err_lazy", "work_classic", "work_lazy", "work_ratio"],
+    )?;
+    println!(
+        "Convex-loss release: classic vs lazy HNSW (U={u}, T={t}, shards={})",
+        opts.shards
+    );
+    print_row(&[
+        "class".into(),
+        "m".into(),
+        "err classic".into(),
+        "err lazy".into(),
+        "work lazy/classic".into(),
+    ]);
+
+    for class in [QueryClassKind::ConvexLsq, QueryClassKind::ConvexLogistic] {
+        for &m in &ms {
+            let mut rng = Rng::new(opts.seed ^ class.tag() ^ m as u64);
+            let h = gaussian_histogram(&mut rng, u, n);
+            let q = synthesize_queries(&mut rng, class, m, u);
+            let mut cfg = MwemConfig::paper(t, u, 1.0, 1e-3, opts.seed ^ class.tag());
+            cfg.log_every = 0;
+
+            let classic = run_classic(&cfg, &q, &h, &mut NativeBackend);
+            let err_classic = q.max_error(h.probs(), &classic.p_avg);
+
+            let out = run_fast(
+                &FastMwemConfig::new(cfg, IndexKind::Hnsw).with_shards(opts.shards),
+                &q,
+                &h,
+                &mut NativeBackend,
+            );
+            let err_lazy = q.max_error(h.probs(), &out.result.p_avg);
+            let ratio = out.result.avg_select_work / classic.avg_select_work.max(1.0);
+
+            csv.row(&[
+                class.to_string(),
+                m.to_string(),
+                format!("{err_classic}"),
+                format!("{err_lazy}"),
+                format!("{}", classic.avg_select_work),
+                format!("{}", out.result.avg_select_work),
+                format!("{ratio}"),
+            ])?;
+            print_row(&[
+                class.to_string(),
+                format!("{m}"),
+                format!("{err_classic:.4}"),
+                format!("{err_lazy:.4}"),
+                format!("{ratio:.3}"),
+            ]);
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}

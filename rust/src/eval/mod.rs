@@ -7,6 +7,7 @@
 //! the shapes (who wins, scaling exponents, crossovers) are preserved.
 
 pub mod common;
+pub mod fig_convex;
 pub mod fig_lp;
 pub mod fig_queries;
 
@@ -15,9 +16,11 @@ pub use common::EvalOpts;
 use anyhow::{bail, Result};
 
 /// All figure ids: the paper's figures in paper order, then the repo's own
-/// extension figures (`shards` — the sharded-LazyEM sweep of DESIGN.md §5).
+/// extension figures (`shards` — the sharded-LazyEM sweep of DESIGN.md §5;
+/// `convex` — the convex-loss query-class axis of DESIGN.md §14).
 pub const ALL: &[&str] = &[
     "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "shards",
+    "convex",
 ];
 
 /// Run one driver (or "all").
@@ -33,6 +36,7 @@ pub fn run(which: &str, opts: &EvalOpts) -> Result<()> {
         "fig8" => fig_lp::fig8_runtime_large_m(opts),
         "fig9" => fig_lp::fig9_error_and_violations(opts),
         "shards" => fig_queries::fig_shards_sweep(opts),
+        "convex" => fig_convex::fig_convex_losses(opts),
         "all" => {
             for f in ALL {
                 println!("\n================ {f} ================");

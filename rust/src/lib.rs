@@ -25,8 +25,9 @@
 //! substitutions (§3), the per-figure experiment index (§4), the
 //! sharded-LazyEM design (§5), the warm-index serving cache (§6), the
 //! persistent artifact store (§7), the long-lived serving runtime with
-//! per-tenant budget admission (§8), the kernel layer (§10) and the
-//! HTTP/1.1 wire front end (§11); `EXPERIMENTS.md` records
+//! per-tenant budget admission (§8), the kernel layer (§10), the
+//! HTTP/1.1 wire front end (§11) and the generic private-mechanism
+//! engine with its query-class seam (§14); `EXPERIMENTS.md` records
 //! paper-vs-measured results; `README.md` has the build/run quickstart.
 //! A generated markdown API reference lives in `docs/api/`
 //! (`./scripts/gen_api_docs.py`, drift-gated in CI).

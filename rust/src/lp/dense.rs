@@ -10,18 +10,16 @@
 //! per-round cost drops from O(m·d) to O(m·√d) (Theorem 4.4).
 
 use crate::dp::accountant::per_step_epsilon;
-use crate::dp::mechanisms::exponential_mechanism;
 use crate::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
-use crate::mips::{build_index, MipsIndex, VectorSet};
 #[cfg(test)]
 use crate::mips::IndexKind;
+use crate::mips::{build_index, MipsIndex, VectorSet};
+use crate::mwem::engine::{MwemEngine, SelectionOracle};
 use crate::runtime::kernels::dot;
-use crate::util::rng::Rng;
-use crate::workloads::PackingLp;
+use crate::workloads::{LpConstraints, PackingLp};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::bregman::bregman_project;
 use super::scalar::SelectionMode;
 
 /// Configuration for the §4.2 dense-MWU constraint-private solver.
@@ -76,9 +74,12 @@ pub fn oracle_vectors(lp: &PackingLp) -> VectorSet {
     VectorSet::new(data, d, m)
 }
 
-/// Run the dense-MWU constraint-private solver on a packing LP.
+/// Run the dense-MWU constraint-private solver on a packing LP. Since the
+/// engine refactor (DESIGN.md §14) this is a shell: derive the width /
+/// step-size / sensitivity constants, build the dual-oracle
+/// [`SelectionOracle`], then drive [`LpConstraints::dual`] through the
+/// shared [`MwemEngine`].
 pub fn run_dense(cfg: &DenseLpConfig, lp: &PackingLp) -> DenseLpResult {
-    let mut rng = Rng::new(cfg.seed);
     let (m, d) = (lp.m(), lp.d());
     let eps0 = cfg.eps0();
     let s = cfg.s.clamp(1, m);
@@ -100,73 +101,26 @@ pub fn run_dense(cfg: &DenseLpConfig, lp: &PackingLp) -> DenseLpResult {
 
     let build_started = Instant::now();
     let nvecs = oracle_vectors(lp);
-    let mut index: Option<Arc<dyn MipsIndex>> = None;
-    let mut sharded: Option<ShardedLazyEm> = None;
-    match cfg.mode {
-        SelectionMode::Exhaustive => {}
-        SelectionMode::Lazy(kind) => {
-            index = Some(build_index(kind, nvecs.clone(), cfg.seed ^ 0xDEA1));
-        }
-        SelectionMode::LazySharded(kind, shards) => {
-            sharded = Some(ShardedLazyEm::build(
-                kind,
-                &nvecs,
-                shards,
-                ScoreTransform::Signed,
-                cfg.seed ^ 0xDEA1,
-            ));
-        }
-    }
+    let index: Option<Arc<dyn MipsIndex>> = match cfg.mode {
+        SelectionMode::Lazy(kind) => Some(build_index(kind, nvecs.clone(), cfg.seed ^ 0xDEA1)),
+        _ => None,
+    };
+    let oracle = match cfg.mode {
+        SelectionMode::Exhaustive => SelectionOracle::Exhaustive,
+        SelectionMode::Lazy(_) => SelectionOracle::Lazy(LazyEm::new(
+            index.as_deref().expect("index built for lazy mode"),
+            &nvecs,
+            ScoreTransform::Signed,
+        )),
+        SelectionMode::LazySharded(kind, shards) => SelectionOracle::Sharded(
+            ShardedLazyEm::build(kind, &nvecs, shards, ScoreTransform::Signed, cfg.seed ^ 0xDEA1),
+        ),
+    };
     let index_build_time = build_started.elapsed();
 
-    let mut w = vec![1.0f32; m];
-    let mut x_sum = vec![0.0f64; d];
-    let started = Instant::now();
-    let mut work_total = 0usize;
-
-    for _t in 0..cfg.t {
-        // project onto the 1/s-dense simplex (constraint privacy, Lemma A.3)
-        let y = bregman_project(&w, s);
-
-        // dual oracle: pick vertex j maximizing ⟨y, N_j⟩ privately
-        let (j_t, work) = if let Some(em) = &sharded {
-            let smp = em.select(&mut rng, &y, eps0, sens);
-            (smp.index, smp.work)
-        } else if let Some(idx) = &index {
-            let em = LazyEm::new(idx.as_ref(), &nvecs, ScoreTransform::Signed);
-            let smp = em.select(&mut rng, &y, eps0, sens);
-            (smp.index, smp.work)
-        } else {
-            let scores: Vec<f32> = (0..d).map(|j| dot(nvecs.row(j), &y)).collect();
-            (exponential_mechanism(&mut rng, &scores, eps0, sens), d)
-        };
-        work_total += work;
-
-        // primal vertex x* = (OPT/c_j)·e_j; losses ℓ_i = (A_i x* − b_i)/ρ
-        let scale = lp.opt / lp.c[j_t] as f64;
-        x_sum[j_t] += scale;
-        for i in 0..m {
-            let viol = (scale * lp.a.row(i)[j_t] as f64 - lp.b[i] as f64) / rho;
-            // up-weight violated constraints so the oracle avoids them next
-            w[i] *= (eta * viol).exp() as f32;
-        }
-        // renormalize weights occasionally for numeric stability
-        let max_w = w.iter().cloned().fold(0f32, f32::max);
-        if max_w > 1e20 {
-            for v in w.iter_mut() {
-                *v /= max_w;
-            }
-        }
-    }
-
-    let inv = 1.0 / cfg.t.max(1) as f64;
-    DenseLpResult {
-        x: x_sum.iter().map(|&v| (v * inv) as f32).collect(),
-        total_time: started.elapsed(),
-        index_build_time,
-        avg_select_work: work_total as f64 / cfg.t.max(1) as f64,
-        eps0,
-    }
+    let mut class = LpConstraints::dual(lp, &nvecs, rho, eta, sens, s);
+    let report = MwemEngine::new(oracle, cfg.t, eps0, cfg.seed).run(&mut class);
+    class.into_dense_result(&report, index_build_time)
 }
 
 /// Count constraints violated by more than alpha (Theorem 4.4's metric).
@@ -179,6 +133,7 @@ pub fn violated_constraints(lp: &PackingLp, x: &[f32], alpha: f64) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
     use crate::workloads::random_packing_lp;
 
     #[test]

@@ -7,12 +7,10 @@
 //! expected (Theorem 4.1).
 
 use crate::dp::accountant::per_step_epsilon;
-use crate::dp::mechanisms::exponential_mechanism;
 use crate::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
 use crate::mips::{build_index, IndexKind, MipsIndex, VectorSet};
-use crate::util::math::{dot, normalize_l1};
-use crate::util::rng::Rng;
-use crate::workloads::LpInstance;
+use crate::mwem::engine::{MwemEngine, SelectionOracle};
+use crate::workloads::{LpConstraints, LpInstance};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -122,10 +120,12 @@ pub fn concat_constraints(lp: &LpInstance) -> VectorSet {
     VectorSet::new(data, m, d + 1)
 }
 
-/// Run Algorithm 3 on a feasibility LP over the simplex.
+/// Run Algorithm 3 on a feasibility LP over the simplex. Since the engine
+/// refactor (DESIGN.md §14) this is a shell: build the static MIPS dataset
+/// and the configured [`SelectionOracle`], then drive
+/// [`LpConstraints::primal`] through the shared [`MwemEngine`].
 pub fn run_scalar(cfg: &ScalarLpConfig, lp: &LpInstance) -> ScalarLpResult {
-    let mut rng = Rng::new(cfg.seed);
-    let (m, d) = (lp.m(), lp.d());
+    let d = lp.d();
     let rho = lp.width().max(1e-12);
     let eps0 = cfg.eps0();
     let eta = ((d as f64).ln() / cfg.t as f64).sqrt();
@@ -133,96 +133,32 @@ pub fn run_scalar(cfg: &ScalarLpConfig, lp: &LpInstance) -> ScalarLpResult {
     // Static MIPS dataset {A_i ∘ b_i}; query x̃ ∘ −1 gives A_i x̃ − b_i.
     let build_started = Instant::now();
     let cat = concat_constraints(lp);
-    let mut index: Option<Arc<dyn MipsIndex>> = None;
-    let mut sharded: Option<ShardedLazyEm> = None;
-    match cfg.mode {
-        SelectionMode::Exhaustive => {}
-        SelectionMode::Lazy(kind) => {
-            index = Some(build_index(kind, cat.clone(), cfg.seed ^ 0xA11CE));
-        }
-        SelectionMode::LazySharded(kind, shards) => {
-            sharded = Some(ShardedLazyEm::build(
-                kind,
-                &cat,
-                shards,
-                ScoreTransform::Signed,
-                cfg.seed ^ 0xA11CE,
-            ));
-        }
-    }
+    let index: Option<Arc<dyn MipsIndex>> = match cfg.mode {
+        SelectionMode::Lazy(kind) => Some(build_index(kind, cat.clone(), cfg.seed ^ 0xA11CE)),
+        _ => None,
+    };
+    let oracle = match cfg.mode {
+        SelectionMode::Exhaustive => SelectionOracle::Exhaustive,
+        SelectionMode::Lazy(_) => SelectionOracle::Lazy(LazyEm::new(
+            index.as_deref().expect("index built for lazy mode"),
+            &cat,
+            ScoreTransform::Signed,
+        )),
+        SelectionMode::LazySharded(kind, shards) => SelectionOracle::Sharded(
+            ShardedLazyEm::build(kind, &cat, shards, ScoreTransform::Signed, cfg.seed ^ 0xA11CE),
+        ),
+    };
     let index_build_time = build_started.elapsed();
 
-    let mut x = vec![1.0 / d as f32; d];
-    let mut w = vec![1.0f32; d];
-    let mut x_sum = vec![0.0f64; d];
-    let mut stats = Vec::new();
-    let started = Instant::now();
-    let mut select_total = Duration::ZERO;
-    let mut work_total = 0usize;
-
-    // query vector buffer x' = x̃ ∘ −1
-    let mut xq = vec![0f32; d + 1];
-
-    for t in 0..cfg.t {
-        xq[..d].copy_from_slice(&x);
-        xq[d] = -1.0;
-
-        let sel_started = Instant::now();
-        let (p_t, work) = if let Some(em) = &sharded {
-            let s = em.select(&mut rng, &xq, eps0, cfg.delta_inf);
-            (s.index, s.work)
-        } else if let Some(idx) = &index {
-            let em = LazyEm::new(idx.as_ref(), &cat, ScoreTransform::Signed);
-            let s = em.select(&mut rng, &xq, eps0, cfg.delta_inf);
-            (s.index, s.work)
-        } else {
-            let scores: Vec<f32> = (0..m).map(|i| dot(cat.row(i), &xq)).collect();
-            (exponential_mechanism(&mut rng, &scores, eps0, cfg.delta_inf), m)
-        };
-        select_total += sel_started.elapsed();
-        work_total += work;
-
-        // MWU on the primal: losses ℓ = A_{p_t} / ρ
-        let a_row = lp.a.row(p_t);
-        for j in 0..d {
-            w[j] *= (-eta * (a_row[j] as f64 / rho)).exp() as f32;
-        }
-        x.copy_from_slice(&w);
-        normalize_l1(&mut x);
-        // rebase weights to avoid f32 under/overflow over long horizons
-        w.copy_from_slice(&x);
-        for (acc, &xi) in x_sum.iter_mut().zip(x.iter()) {
-            *acc += xi as f64;
-        }
-
-        if cfg.log_every > 0 && (t + 1) % cfg.log_every == 0 {
-            let inv = 1.0 / (t + 1) as f64;
-            let x_avg: Vec<f32> = x_sum.iter().map(|&v| (v * inv) as f32).collect();
-            stats.push(LpIterStat {
-                iter: t + 1,
-                violation_fraction: lp.violation_fraction(&x_avg, 0.0),
-                max_violation: lp.max_violation(&x_avg),
-                selection_work: work,
-            });
-        }
-    }
-
-    let total_time = started.elapsed();
-    let inv = 1.0 / cfg.t.max(1) as f64;
-    ScalarLpResult {
-        x: x_sum.iter().map(|&v| (v * inv) as f32).collect(),
-        stats,
-        total_time,
-        index_build_time,
-        avg_select_time: select_total / cfg.t.max(1) as u32,
-        avg_select_work: work_total as f64 / cfg.t.max(1) as f64,
-        eps0,
-    }
+    let mut class = LpConstraints::primal(lp, &cat, rho, eta, cfg.delta_inf, cfg.log_every);
+    let report = MwemEngine::new(oracle, cfg.t, eps0, cfg.seed).run(&mut class);
+    class.into_scalar_result(&report, index_build_time)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
     use crate::workloads::random_feasibility_lp;
 
     fn solve(mode: SelectionMode, seed: u64) -> (LpInstance, ScalarLpResult) {

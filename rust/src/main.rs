@@ -1,7 +1,7 @@
 //! `repro` — the Fast-MWEM coordinator CLI.
 //!
 //! Subcommands:
-//!   eval <fig1..fig9|all> [--quick] [--out=DIR] [--seed=N]
+//!   eval <fig1..fig9|shards|convex|all> [--quick] [--out=DIR] [--seed=N]
 //!       regenerate a paper figure (CSV + stdout table)
 //!   release [--m=..] [--u=..] [--n=..] [--t=..] [--index=flat|ivf|hnsw|none]
 //!           [--eps=..] [--delta=..] run one private release job
@@ -33,7 +33,7 @@
 use anyhow::{bail, Context, Result};
 use fast_mwem::config::{
     CacheConfig, Config, DynamicConfig, KernelConfig, PagerConfig, ShardingConfig,
-    StoreConfig,
+    StoreConfig, WorkloadConfig,
 };
 use fast_mwem::coordinator::{
     execute, execute_with_cache, Coordinator, CoordinatorConfig, JobSpec, LpJobSpec,
@@ -53,7 +53,7 @@ use fast_mwem::server::{
 };
 use fast_mwem::util::json::Json;
 use fast_mwem::util::rng::Rng;
-use fast_mwem::workloads;
+use fast_mwem::workloads::{self, QueryClassKind};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -124,15 +124,15 @@ const HELP: &str = "\
 repro — Fast-MWEM reproduction CLI
 
 USAGE:
-  repro eval <fig1..fig9|shards|all> [--quick] [--out=DIR] [--seed=N] [--shards=S]
+  repro eval <fig1..fig9|shards|convex|all> [--quick] [--out=DIR] [--seed=N] [--shards=S]
   repro release [--m=1000] [--u=1024] [--n=500] [--t=2000]
                 [--index=hnsw|ivf|flat|none] [--eps=1.0] [--delta=1e-3]
-                [--shards=S]
+                [--shards=S] [--class=linear|convex-lsq|convex-logistic]
   repro lp [--m=20000] [--d=20] [--t=2000] [--mode=hnsw|ivf|flat|exhaustive]
            [--shards=S]
   repro serve [--jobs=8] [--workers=4] [--eps-cap=N] [--shards=S]
-              [--workloads=W] [--cache-capacity=C] [--store-dir=PATH]
-              [--heap-budget-mb=N] [--quant=off|int8|f16]
+              [--workloads=W] [--class=NAME] [--cache-capacity=C]
+              [--store-dir=PATH] [--heap-budget-mb=N] [--quant=off|int8|f16]
   repro serve --daemon [--jobs=24] [--tenants=3] [--workers=4]
               [--queue-depth=64] [--policy=block|reject]
               [--eps-per-tenant=E] [--workloads=W] [--cache-capacity=C]
@@ -154,6 +154,14 @@ auto-detection. The `kernel` metrics gauge reports the active arm.
 
 Sharding (DESIGN.md §5): --shards=S (or a [sharding] config section) splits
 the lazy EM across S per-shard indices, built in parallel on the pool.
+
+Query classes (DESIGN.md §14): --class=NAME (or a [workload] config
+section) selects the released query family: linear counting queries (the
+default) or the low-sensitivity convex-loss releases convex-lsq /
+convex-logistic, all driven through the same engine and lazy selection
+oracle. The class travels in the wire spec (\"class\" field), enters the
+workload fingerprint (so the store never serves one class's artifact for
+another), and `repro eval convex` plots the convex error/work axis.
 
 Warm-index serving (DESIGN.md §6): the coordinator keeps up to C pre-built
 k-MIPS indices resident (--cache-capacity=C, or a [cache] section;
@@ -239,10 +247,11 @@ fn cmd_release(cfg: &Config) -> Result<()> {
     let seed: u64 = cfg.or("seed", 1u64)?;
     let index = cfg.str_or("index", "hnsw");
     let sharding = ShardingConfig::from_config(cfg)?;
+    let class = WorkloadConfig::from_config(cfg)?.class;
 
     let mut rng = Rng::new(seed);
     let h = workloads::gaussian_histogram(&mut rng, u, n);
-    let q = workloads::binary_queries(&mut rng, m, u);
+    let q = workloads::synthesize_queries(&mut rng, class, m, u);
     let mut mwem_cfg = MwemConfig::paper(t, u, eps, delta, seed ^ 7);
     mwem_cfg.log_every = (t / 10).max(1);
 
@@ -250,7 +259,7 @@ fn cmd_release(cfg: &Config) -> Result<()> {
         println!("note: --shards only applies to Fast-MWEM; ignored with --index=none");
     }
     println!(
-        "release: U={u} m={m} n={n} T={t} eps={eps} index={index} shards={} kernels={}",
+        "release: U={u} m={m} n={n} T={t} eps={eps} index={index} class={class} shards={} kernels={}",
         if index == "none" { 1 } else { sharding.shards },
         kernels::active().arm,
     );
@@ -355,11 +364,12 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     let cache = CacheConfig::from_config(cfg)?;
     let store = StoreConfig::from_config(cfg)?;
     let pager = PagerConfig::from_config(cfg)?;
+    let class = WorkloadConfig::from_config(cfg)?.class;
     let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
     println!(
         "serve: {jobs} jobs on {workers} workers (eps cap {eps_cap:?}, shards {}, \
-         {workload_count} workloads, cache capacity {}, store {}, pager {}, \
-         heap budget {})",
+         {workload_count} workloads (class {class}), cache capacity {}, store {}, \
+         pager {}, heap budget {})",
         sharding.shards,
         cache.capacity,
         store.dir.as_deref().unwrap_or("off"),
@@ -397,6 +407,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
                 delta: 1e-3,
                 index: Some(IndexKind::Hnsw),
                 shards: sharding.shards,
+                class,
                 // spread release jobs across a few repeated workloads so
                 // the warm-index cache sees serving-shaped traffic
                 workload: (i / 2 % workload_count) as u64,
@@ -472,6 +483,7 @@ fn daemon_spec(
     i: usize,
     shards: usize,
     workload_count: usize,
+    class: QueryClassKind,
     lp_mode: SelectionMode,
     dynamic: DynamicConfig,
 ) -> JobSpec {
@@ -496,6 +508,7 @@ fn daemon_spec(
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards,
+            class,
             workload: (i / 2 % workload_count) as u64,
             tenant,
             seed: tenant * 10_000 + i as u64,
@@ -525,6 +538,7 @@ fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
     let tenants: u64 = cfg.or("tenants", 3u64)?.max(1);
     let sharding = ShardingConfig::from_config(cfg)?;
     let dynamic = DynamicConfig::from_config(cfg)?;
+    let class = WorkloadConfig::from_config(cfg)?.class;
     let workload_count: usize = cfg.or("workloads", 2usize)?.max(1);
     let metrics_out = cfg.get_str("metrics-out").map(str::to_string);
     let server_cfg = ServerConfig::from_config(cfg)?;
@@ -564,6 +578,7 @@ fn cmd_serve_daemon(cfg: &Config) -> Result<()> {
                             i,
                             sharding.shards,
                             workload_count,
+                            class,
                             lp_mode,
                             dynamic,
                         );
@@ -757,10 +772,11 @@ fn cmd_update_workload(cfg: &Config) -> Result<()> {
     let (outcome, _) = execute_with_cache(&spec, Some(&cache), Some(&registry))?;
 
     // re-derive the family fingerprint to report the new generation
+    // (updates evolve linear-query families only, hence the Linear tag)
     let mut rng = Rng::new(workload);
     let _h = workloads::gaussian_histogram(&mut rng, u, n);
     let base = workloads::binary_queries(&mut rng, m, u);
-    let fp = cache.fingerprint_for(workload, base.vectors());
+    let fp = cache.fingerprint_for(workload, QueryClassKind::Linear.tag(), base.vectors());
     println!(
         "workload {workload} (family {fp:032x}) now at generation {}: \
          +{insert} rows, -{tombstone} rows in {:.1}ms",

@@ -1,10 +1,17 @@
 //! Classic MWEM (Algorithm 1): exhaustive exponential mechanism per round.
+//!
+//! Since the engine refactor (DESIGN.md §14) the loop itself lives in
+//! [`MwemEngine`]; this module keeps the config/result types, the shared
+//! [`measured_update`] step, and [`run_classic`] as the exhaustive-oracle
+//! shell over [`crate::workloads::LinearQueries`].
 
+use super::engine::{MwemEngine, SelectionOracle};
 use super::{Histogram, MwemBackend, MwuState, QuerySet};
-use crate::dp::{accountant::per_step_epsilon, mechanisms::exponential_mechanism, Accountant};
+use crate::dp::accountant::per_step_epsilon;
 use crate::util::math::dot;
 use crate::util::rng::Rng;
-use std::time::{Duration, Instant};
+use crate::workloads::LinearQueries;
+use std::time::Duration;
 
 /// Multiplicative-update rule.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -125,61 +132,12 @@ pub fn run_classic(
     h: &Histogram,
     backend: &mut dyn MwemBackend,
 ) -> MwemResult {
-    let mut rng = Rng::new(cfg.seed);
-    let mut state = MwuState::new(q.u());
-    let mut accountant = Accountant::new(cfg.delta);
     let eps0 = cfg.eps0();
-    let sens = 1.0 / h.record_count() as f64;
-    // Hardt splits the round budget between EM and the measurement.
-    let eps_em = match cfg.update {
-        UpdateRule::Paper { .. } => eps0,
-        UpdateRule::Hardt => eps0 / 2.0,
-    };
-
-    let mut stats = Vec::new();
-    let started = Instant::now();
-    let mut select_total = Duration::ZERO;
-    let mut work_total = 0usize;
-
-    for t in 0..cfg.t {
-        let d: Vec<f32> =
-            h.probs().iter().zip(state.p.iter()).map(|(&a, &b)| a - b).collect();
-
-        let sel_started = Instant::now();
-        let scores = backend.abs_scores(q, &d);
-        let i_t = exponential_mechanism(&mut rng, &scores, eps_em, sens);
-        let sel_time = sel_started.elapsed();
-        select_total += sel_time;
-        work_total += q.m();
-        accountant.record(eps0, 0.0);
-
-        let s = measured_update(&mut rng, cfg.update, q, h, &state, i_t, eps0);
-        let c = q.query(i_t).to_vec();
-        state.update(backend, &c, s);
-
-        if cfg.log_every > 0 && (t + 1) % cfg.log_every == 0 {
-            stats.push(IterStat {
-                iter: t + 1,
-                max_error_avg: q.max_error(h.probs(), &state.p_avg()),
-                max_error_cur: q.max_error(h.probs(), &state.p),
-                selected: i_t,
-                selection_work: q.m(),
-                selection_time: sel_time,
-            });
-        }
-    }
-
-    let total_time = started.elapsed();
-    MwemResult {
-        p_avg: state.p_avg(),
-        p_final: state.p,
-        stats,
-        total_time,
-        avg_select_time: select_total / cfg.t.max(1) as u32,
-        avg_select_work: work_total as f64 / cfg.t.max(1) as f64,
-        eps0,
-        privacy_spent: accountant.best_total(),
-    }
+    let mut class = LinearQueries::new(q, h, backend, cfg.update, cfg.log_every);
+    let report = MwemEngine::new(SelectionOracle::Exhaustive, cfg.t, eps0, cfg.seed)
+        .with_accounting(cfg.delta)
+        .run(&mut class);
+    class.into_result(&report)
 }
 
 #[cfg(test)]

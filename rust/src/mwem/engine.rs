@@ -1,0 +1,156 @@
+//! The generic private-mechanism engine (DESIGN.md §14).
+//!
+//! Every private MWU loop in the repo — classic MWEM, Fast-MWEM's
+//! lazy/sharded variants, the scalar-private LP and the dense packing-LP
+//! solver — runs the same per-round skeleton:
+//!
+//! 1. ask the query class for the round's query vector,
+//! 2. select a candidate through the selection oracle (exhaustive
+//!    exponential mechanism, lazy Gumbel top-k, or sharded lazy Gumbel),
+//! 3. record the round's ε₀ with the accountant (when one is attached),
+//! 4. apply the class's measured multiplicative update,
+//! 5. hand the round's observation back for per-round statistics.
+//!
+//! [`MwemEngine`] owns exactly that skeleton, plus the RNG and the
+//! timers; everything mechanism-specific lives behind
+//! [`QueryClass`](crate::workloads::QueryClass). The engine reproduces
+//! the pre-refactor loops draw-for-draw: selection noise first, then any
+//! measurement noise, nothing else touches the RNG
+//! (`tests/engine_equivalence.rs` pins this bit-for-bit).
+
+use crate::dp::Accountant;
+use crate::lazy::{LazyEm, ShardedLazyEm};
+use crate::util::rng::Rng;
+use crate::workloads::{QueryClass, RoundObservation};
+use std::time::{Duration, Instant};
+
+/// How the engine privately selects a candidate each round.
+pub enum SelectionOracle<'a> {
+    /// Score every candidate exactly, then run the exponential mechanism
+    /// over the full score vector (work = m per round).
+    Exhaustive,
+    /// Lazy Gumbel top-k over one k-MIPS index.
+    Lazy(LazyEm<'a>),
+    /// Exact-by-max-stability sharded lazy Gumbel selection.
+    Sharded(ShardedLazyEm<'a>),
+}
+
+/// What one engine run produced, besides the class's own state: totals
+/// for the timing/work columns of every result struct, lazy-oracle
+/// diagnostics, and the accounted privacy spend.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    /// Rounds executed.
+    pub rounds: usize,
+    /// Per-round budget the run was configured with.
+    pub eps0: f64,
+    /// Wall-clock of the whole loop.
+    pub total_time: Duration,
+    /// Summed selection wall-clock across rounds.
+    pub select_total: Duration,
+    /// Summed selection work (score evaluations) across rounds.
+    pub work_total: usize,
+    /// Per-round lazy tail-candidate counts (empty for exhaustive runs).
+    pub tail_counts: Vec<usize>,
+    /// Per-round lazy threshold margins `b` (empty for exhaustive runs).
+    pub margins: Vec<f64>,
+    /// `(ε, δ)` actually spent per the accountant's best composition
+    /// bound, or `(0, 0)` when the run carried no accountant.
+    pub privacy_spent: (f64, f64),
+}
+
+/// The shared per-round driver. Construct with the oracle and schedule,
+/// optionally attach accounting, then [`run`](MwemEngine::run) a
+/// [`QueryClass`](crate::workloads::QueryClass) through it.
+pub struct MwemEngine<'a> {
+    oracle: SelectionOracle<'a>,
+    rounds: usize,
+    eps0: f64,
+    seed: u64,
+    accountant_delta: Option<f64>,
+}
+
+impl<'a> MwemEngine<'a> {
+    /// An engine running `rounds` rounds at per-round budget `eps0`,
+    /// drawing all noise from `Rng::new(seed)`.
+    pub fn new(oracle: SelectionOracle<'a>, rounds: usize, eps0: f64, seed: u64) -> Self {
+        MwemEngine { oracle, rounds, eps0, seed, accountant_delta: None }
+    }
+
+    /// Attach an [`Accountant`] with composition slack `delta`; each round
+    /// records `(eps0, 0)` and the report carries
+    /// [`Accountant::best_total`]. LP runs leave this off (their results
+    /// report ε₀ only, as before the engine).
+    pub fn with_accounting(mut self, delta: f64) -> Self {
+        self.accountant_delta = Some(delta);
+        self
+    }
+
+    /// Drive `class` through the full loop and return the run's totals.
+    pub fn run(self, class: &mut dyn QueryClass) -> EngineReport {
+        let MwemEngine { oracle, rounds, eps0, seed, accountant_delta } = self;
+        let mut rng = Rng::new(seed);
+        let mut accountant = accountant_delta.map(Accountant::new);
+        let sens = class.sensitivity();
+        let eps_sel = class.selection_epsilon(eps0);
+
+        let started = Instant::now();
+        let mut select_total = Duration::ZERO;
+        let mut work_total = 0usize;
+        let mut tail_counts = Vec::new();
+        let mut margins = Vec::new();
+
+        for t in 0..rounds {
+            let query = class.query_vector();
+
+            let sel_started = Instant::now();
+            let (selected, work) = match &oracle {
+                SelectionOracle::Exhaustive => {
+                    let scores = class.exhaustive_scores(&query);
+                    let work = scores.len();
+                    let i =
+                        crate::dp::exponential_mechanism(&mut rng, &scores, eps_sel, sens);
+                    (i, work)
+                }
+                SelectionOracle::Lazy(em) => {
+                    let sample = em.select(&mut rng, &query, eps_sel, sens);
+                    tail_counts.push(sample.tail_count);
+                    margins.push(sample.b);
+                    (sample.index, sample.work)
+                }
+                SelectionOracle::Sharded(em) => {
+                    let sample = em.select(&mut rng, &query, eps_sel, sens);
+                    tail_counts.push(sample.tail_count);
+                    margins.push(sample.b);
+                    (sample.index, sample.work)
+                }
+            };
+            let selection_time = sel_started.elapsed();
+            select_total += selection_time;
+            work_total += work;
+
+            if let Some(a) = accountant.as_mut() {
+                a.record(eps0, 0.0);
+            }
+
+            class.update(&mut rng, selected, eps0);
+            class.observe_round(&RoundObservation {
+                iter: t + 1,
+                selected,
+                work,
+                selection_time,
+            });
+        }
+
+        EngineReport {
+            rounds,
+            eps0,
+            total_time: started.elapsed(),
+            select_total,
+            work_total,
+            tail_counts,
+            margins,
+            privacy_spent: accountant.map(|a| a.best_total()).unwrap_or((0.0, 0.0)),
+        }
+    }
+}

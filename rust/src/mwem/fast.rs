@@ -3,15 +3,17 @@
 //! Identical MWU loop to Algorithm 1; the only change is the selection
 //! oracle — `LazyEM` backed by a k-MIPS index over the query vectors —
 //! which drops the per-round selection cost from Θ(m·U) to Θ(√m·U)
-//! expected (Theorem 3.3).
+//! expected (Theorem 3.3). Since the engine refactor (DESIGN.md §14) the
+//! loop lives in [`MwemEngine`]; this module builds the lazy/sharded
+//! [`SelectionOracle`] and runs [`crate::workloads::LinearQueries`]
+//! through it.
 
-use super::classic::{measured_update, IterStat, MwemConfig, MwemResult};
-use super::{Histogram, MwemBackend, MwuState, QuerySet};
-use crate::dp::Accountant;
-use crate::lazy::{LazyEm, LazySample, ScoreTransform, ShardSet, ShardedLazyEm};
+use super::classic::{MwemConfig, MwemResult};
+use super::engine::{EngineReport, MwemEngine, SelectionOracle};
+use super::{Histogram, MwemBackend, QuerySet};
+use crate::lazy::{LazyEm, ScoreTransform, ShardSet, ShardedLazyEm};
 use crate::mips::{build_index, IndexKind, MipsIndex};
-use crate::mwem::classic::UpdateRule;
-use crate::util::rng::Rng;
+use crate::workloads::LinearQueries;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -22,10 +24,10 @@ pub struct FastMwemConfig {
     pub base: MwemConfig,
     /// Which k-MIPS index backs the lazy mechanism.
     pub index: IndexKind,
-    /// Top-k size. Defaults to ⌈√m⌉ per the paper, or ⌈√(m/S)⌉ per shard
-    /// when sharded. NOTE: an explicit value is applied *per shard* when
-    /// `shards > 1` (total retrieval S·k) — leave `None` for sweeps that
-    /// compare shard counts.
+    /// Total top-k retrieval budget per round, across all shards. Defaults
+    /// (`None`) to ⌈√m⌉ per the paper, or ⌈√(m/S)⌉ per shard when sharded.
+    /// An explicit value is split evenly over shards (⌈k/S⌉ each), so the
+    /// retrieval budget no longer silently scales with the shard count.
     pub k: Option<usize>,
     /// Algorithm 6's margin reduction `c` (0 = Algorithms 4/5 behaviour).
     pub margin_slack: f64,
@@ -67,6 +69,32 @@ impl FastMwemConfig {
         self.shard_workers = sharding.workers;
         self.parallel_shard_select = sharding.parallel_select;
         self
+    }
+
+    /// Set the *total* per-round retrieval budget (clamped ≥ 1); shards
+    /// split it evenly. Sweeps comparing shard counts at fixed k now hold
+    /// total work constant.
+    pub fn with_total_k(mut self, k: usize) -> Self {
+        self.k = Some(k.max(1));
+        self
+    }
+
+    /// Pre-refactor semantics: `k` retrieved from *each* shard (total S·k).
+    #[deprecated(
+        note = "FastMwemConfig::k is now a total across shards; use with_total_k"
+    )]
+    pub fn with_per_shard_k(mut self, k: usize) -> Self {
+        self.k = Some(k.max(1).saturating_mul(self.shards.max(1)));
+        self
+    }
+
+    /// The per-shard retrieval budget implied by the total `k` for a run
+    /// over `shards` shards: ⌈k/S⌉, `None` when `k` is defaulted.
+    pub fn per_shard_k_for(&self, shards: usize) -> Option<usize> {
+        self.k.map(|k| {
+            let s = shards.max(1);
+            k.div_ceil(s).max(1)
+        })
     }
 }
 
@@ -113,13 +141,11 @@ pub fn run_fast(
         if cfg.shard_workers > 0 {
             em = em.with_workers(cfg.shard_workers);
         }
-        if let Some(k) = cfg.k {
+        if let Some(k) = cfg.per_shard_k_for(cfg.shards) {
             em = em.with_k(k);
         }
         let build_time = build_started.elapsed();
-        return run_fast_loop(cfg, q, h, backend, build_time, |rng, d, eps, sens| {
-            em.select(rng, d, eps, sens)
-        });
+        return run_engine(cfg, q, h, backend, SelectionOracle::Sharded(em), build_time);
     }
     let index = build_index(cfg.index, q.vectors().clone(), cfg.base.seed ^ 0x5EED);
     let build_time = build_started.elapsed();
@@ -141,12 +167,10 @@ pub fn run_fast_with_index(
 ) -> FastMwemOutput {
     let mut em = LazyEm::new(index, q.vectors(), ScoreTransform::Abs)
         .with_margin_slack(cfg.margin_slack);
-    if let Some(k) = cfg.k {
+    if let Some(k) = cfg.per_shard_k_for(1) {
         em = em.with_k(k);
     }
-    run_fast_loop(cfg, q, h, backend, build_time, |rng, d, eps, sens| {
-        em.select(rng, d, eps, sens)
-    })
+    run_engine(cfg, q, h, backend, SelectionOracle::Lazy(em), build_time)
 }
 
 /// Sharded sibling of [`run_fast_with_index`]: run Algorithm 2 over a
@@ -169,84 +193,36 @@ pub fn run_fast_with_shard_set(
     if cfg.shard_workers > 0 {
         em = em.with_workers(cfg.shard_workers);
     }
-    if let Some(k) = cfg.k {
+    if let Some(k) = cfg.per_shard_k_for(em.num_shards()) {
         em = em.with_k(k);
     }
-    run_fast_loop(cfg, q, h, backend, build_time, |rng, d, eps, sens| {
-        em.select(rng, d, eps, sens)
-    })
+    run_engine(cfg, q, h, backend, SelectionOracle::Sharded(em), build_time)
 }
 
-/// The shared Algorithm 2 MWU loop, generic over the selection oracle —
-/// the only piece that differs between the monolithic and sharded paths.
-fn run_fast_loop(
+/// The shared Algorithm 2 shell: drive [`LinearQueries`] through the
+/// engine with the prepared lazy oracle, then split the report into the
+/// MWEM result and the lazy diagnostics.
+fn run_engine(
     cfg: &FastMwemConfig,
     q: &QuerySet,
     h: &Histogram,
     backend: &mut dyn MwemBackend,
+    oracle: SelectionOracle<'_>,
     build_time: Duration,
-    mut select: impl FnMut(&mut Rng, &[f32], f64, f64) -> LazySample,
 ) -> FastMwemOutput {
-    let mut rng = Rng::new(cfg.base.seed);
-    let mut state = MwuState::new(q.u());
-    let mut accountant = Accountant::new(cfg.base.delta);
     let eps0 = cfg.base.eps0();
-    let sens = 1.0 / h.record_count() as f64;
-    let eps_em = match cfg.base.update {
-        UpdateRule::Paper { .. } => eps0,
-        UpdateRule::Hardt => eps0 / 2.0,
-    };
-
-    let mut stats = Vec::new();
-    let mut lazy = LazyDiagnostics { build_time, ..Default::default() };
-    let started = Instant::now();
-    let mut select_total = Duration::ZERO;
-    let mut work_total = 0usize;
-
-    for t in 0..cfg.base.t {
-        let d: Vec<f32> =
-            h.probs().iter().zip(state.p.iter()).map(|(&a, &b)| a - b).collect();
-
-        let sel_started = Instant::now();
-        let sample = select(&mut rng, &d, eps_em, sens);
-        let sel_time = sel_started.elapsed();
-        select_total += sel_time;
-        work_total += sample.work;
-        accountant.record(eps0, 0.0);
-        lazy.tail_counts.push(sample.tail_count);
-        lazy.margins.push(sample.b);
-
-        let i_t = sample.index;
-        let s = measured_update(&mut rng, cfg.base.update, q, h, &state, i_t, eps0);
-        let c = q.query(i_t).to_vec();
-        state.update(backend, &c, s);
-
-        if cfg.base.log_every > 0 && (t + 1) % cfg.base.log_every == 0 {
-            stats.push(IterStat {
-                iter: t + 1,
-                max_error_avg: q.max_error(h.probs(), &state.p_avg()),
-                max_error_cur: q.max_error(h.probs(), &state.p),
-                selected: i_t,
-                selection_work: sample.work,
-                selection_time: sel_time,
-            });
-        }
-    }
-
-    let total_time = started.elapsed();
-    let t = cfg.base.t.max(1);
+    let mut class = LinearQueries::new(q, h, backend, cfg.base.update, cfg.base.log_every);
+    let report: EngineReport = MwemEngine::new(oracle, cfg.base.t, eps0, cfg.base.seed)
+        .with_accounting(cfg.base.delta)
+        .run(&mut class);
+    let result = class.into_result(&report);
     FastMwemOutput {
-        result: MwemResult {
-            p_avg: state.p_avg(),
-            p_final: state.p,
-            stats,
-            total_time,
-            avg_select_time: select_total / t as u32,
-            avg_select_work: work_total as f64 / t as f64,
-            eps0,
-            privacy_spent: accountant.best_total(),
+        result,
+        lazy: LazyDiagnostics {
+            tail_counts: report.tail_counts,
+            margins: report.margins,
+            build_time,
         },
-        lazy,
     }
 }
 
@@ -383,5 +359,50 @@ mod tests {
         );
         assert_eq!(fast.lazy.tail_counts.len(), 10);
         assert_eq!(fast.lazy.margins.len(), 10);
+    }
+
+    /// The k-footgun fix: an explicit `k` is a *total* retrieval budget.
+    /// Every round retrieves `work − tail_count = Σ_shards k_shard` exact
+    /// top-k candidates, so with k=12 both S=1 and S=4 must charge 12 —
+    /// pre-fix, S=4 charged S·k = 48.
+    #[test]
+    fn explicit_k_is_total_across_shard_counts() {
+        let (h, q) = workload(32, 40, 8);
+        let mut base = MwemConfig::paper(12, 32, 1.0, 1e-3, 19);
+        base.log_every = 1;
+        for shards in [1usize, 4] {
+            let fcfg = FastMwemConfig::new(base.clone(), IndexKind::Flat)
+                .with_shards(shards)
+                .with_total_k(12);
+            let out = run_fast(&fcfg, &q, &h, &mut NativeBackend);
+            assert_eq!(out.result.stats.len(), 12);
+            for (stat, &tail) in out.result.stats.iter().zip(out.lazy.tail_counts.iter()) {
+                assert_eq!(
+                    stat.selection_work - tail,
+                    12,
+                    "S={shards}: retrieval must be 12 total, got {} (tail {tail})",
+                    stat.selection_work - tail
+                );
+            }
+        }
+    }
+
+    /// The deprecation shim preserves the old per-shard meaning: k per
+    /// shard × S shards total.
+    #[test]
+    #[allow(deprecated)]
+    fn per_shard_shim_keeps_old_totals() {
+        let (h, q) = workload(32, 40, 8);
+        let mut base = MwemConfig::paper(6, 32, 1.0, 1e-3, 19);
+        base.log_every = 1;
+        let fcfg = FastMwemConfig::new(base, IndexKind::Flat)
+            .with_shards(4)
+            .with_per_shard_k(3);
+        assert_eq!(fcfg.k, Some(12));
+        assert_eq!(fcfg.per_shard_k_for(4), Some(3));
+        let out = run_fast(&fcfg, &q, &h, &mut NativeBackend);
+        for (stat, &tail) in out.result.stats.iter().zip(out.lazy.tail_counts.iter()) {
+            assert_eq!(stat.selection_work - tail, 12);
+        }
     }
 }

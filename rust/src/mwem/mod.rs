@@ -8,13 +8,20 @@
 //! The dense numeric steps (score matvec, multiplicative update) go through
 //! the [`MwemBackend`] trait; both implementations here route the hot loops
 //! to the runtime-dispatched SIMD kernels ([`crate::runtime::kernels`]).
+//!
+//! Since the engine refactor (DESIGN.md §14) both entry points — and the
+//! private LP solvers in [`crate::lp`] — are thin shells over one shared
+//! per-round driver, [`MwemEngine`], parameterized by
+//! [`crate::workloads::QueryClass`].
 
 pub mod classic;
+pub mod engine;
 pub mod fast;
 pub mod histogram;
 pub mod queries;
 
 pub use classic::{run_classic, IterStat, MwemConfig, MwemResult, UpdateRule};
+pub use engine::{EngineReport, MwemEngine, SelectionOracle};
 pub use fast::{
     run_fast, run_fast_with_index, run_fast_with_shard_set, FastMwemConfig, FastMwemOutput,
     LazyDiagnostics,

@@ -22,6 +22,7 @@ use crate::mips::IndexKind;
 use crate::util::json::{
     fmt_f64, parse_events, DuplicateKeys, JsonError, JsonErrorKind, JsonLimits, JsonVisitor,
 };
+use crate::workloads::QueryClassKind;
 
 /// Values released per chunk when streaming an outcome body.
 const VALUES_PER_CHUNK: usize = 64;
@@ -39,6 +40,7 @@ const FIELDS: &[(&str, &[&str])] = &[
     ("delta", &["release", "lp"]),
     ("delta_inf", &["lp"]),
     ("index", &["release"]),
+    ("class", &["release"]),
     ("mode", &["lp"]),
     ("shards", &["release", "lp"]),
     ("workload", &["release", "update"]),
@@ -75,7 +77,7 @@ const INT_FIELDS: &[&str] = &[
     "u", "m", "n", "t", "d", "shards", "workload", "seed", "insert", "tombstone",
 ];
 const FLOAT_FIELDS: &[&str] = &["eps", "delta", "delta_inf"];
-const STRING_FIELDS: &[&str] = &["kind", "index", "mode"];
+const STRING_FIELDS: &[&str] = &["kind", "index", "class", "mode"];
 
 impl JsonVisitor for SpecVisitor {
     fn begin_object(&mut self, pos: usize) -> Result<(), JsonError> {
@@ -200,6 +202,12 @@ impl SpecVisitor {
                         Some(s.parse::<IndexKind>().map_err(|e| field_err(pos, e))?)
                     }
                 };
+                let class = match str_of("class") {
+                    None => QueryClassKind::Linear,
+                    Some((s, pos)) => {
+                        s.parse::<QueryClassKind>().map_err(|e| field_err(pos, e))?
+                    }
+                };
                 Ok(JobSpec::Release(ReleaseJobSpec {
                     u: int_of("u", 256) as usize,
                     m: int_of("m", 400) as usize,
@@ -209,6 +217,7 @@ impl SpecVisitor {
                     delta: float_of("delta", 1e-3),
                     index,
                     shards,
+                    class,
                     workload: int_of("workload", 0),
                     tenant,
                     seed: int_of("seed", 0),
@@ -359,6 +368,7 @@ mod tests {
         assert_eq!((r.u, r.m, r.n, r.t), (256, 400, 500, 200));
         assert_eq!((r.eps, r.delta), (1.0, 1e-3));
         assert_eq!(r.index, Some(IndexKind::Hnsw));
+        assert_eq!(r.class, QueryClassKind::Linear, "linear is the default class");
         assert_eq!((r.shards, r.workload, r.seed), (1, 0, 0));
         assert_eq!(r.tenant, 3, "tenant comes from authentication");
 
@@ -377,6 +387,27 @@ mod tests {
         let spec = parse_job_spec(r#"{"kind":"release","index":"none"}"#, 0).unwrap();
         let JobSpec::Release(r) = spec else { panic!("expected release") };
         assert_eq!(r.index, None, "classic MWEM");
+    }
+
+    #[test]
+    fn release_spec_parses_query_class() {
+        for (s, want) in [
+            ("convex-lsq", QueryClassKind::ConvexLsq),
+            ("convex-logistic", QueryClassKind::ConvexLogistic),
+            ("linear", QueryClassKind::Linear),
+        ] {
+            let body = format!(r#"{{"kind":"release","class":"{s}"}}"#);
+            let spec = parse_job_spec(&body, 0).unwrap();
+            let JobSpec::Release(r) = spec else { panic!("expected release") };
+            assert_eq!(r.class, want, "class {s:?}");
+        }
+        // an unknown class and a class on a non-release kind are both 4xx
+        let err = parse_job_spec(r#"{"kind":"release","class":"cubic"}"#, 0).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::Visitor);
+        assert!(err.msg.contains("unknown query class"), "{}", err.msg);
+        let err = parse_job_spec(r#"{"kind":"lp","class":"linear"}"#, 0).unwrap_err();
+        assert_eq!(err.kind, JsonErrorKind::Visitor);
+        assert!(err.msg.contains("does not apply"), "{}", err.msg);
     }
 
     #[test]

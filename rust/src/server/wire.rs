@@ -17,9 +17,12 @@
 //!   not a transient state — no Retry-After)
 //! * [`SubmitError::QueueFull`] under [`QueuePolicy::Reject`] → **429**
 //!   with `Retry-After`
-//! * a drained per-connection token bucket ([`WireConfig::rate_limit`])
-//!   → **429** with the seconds until the next token as `Retry-After`,
-//!   before parsing or submission (zero ε touched, keep-alive survives)
+//! * a drained per-tenant token bucket ([`WireConfig::rate_limit`]) →
+//!   **429** with the seconds until the next token as `Retry-After`,
+//!   after authentication but before parsing or submission (zero ε
+//!   touched, keep-alive survives). Buckets are keyed by tenant id and
+//!   shared across connections, so a tenant cannot dodge the limiter by
+//!   opening a fresh connection per request
 //! * [`SubmitError::Draining`] / connection overflow → **503** with
 //!   `Retry-After`
 //!
@@ -34,7 +37,7 @@ use super::queue::{BoundedQueue, PushError, QueuePolicy};
 use super::runtime::{Server, SubmitError};
 use crate::config::Config;
 use crate::metrics::Metrics;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
@@ -68,12 +71,14 @@ pub struct WireConfig {
     pub retry_after_secs: u64,
     /// Per-request body cap (bytes).
     pub max_body_bytes: usize,
-    /// Per-connection sustained request rate (requests/second; 0 turns
-    /// the limiter off). Enforced as a token bucket per connection, so
-    /// one chatty client cannot starve the connection workers.
+    /// Per-tenant sustained request rate (requests/second; 0 turns the
+    /// limiter off). Enforced as one token bucket per authenticated
+    /// tenant, aggregated across every connection that tenant holds, so
+    /// a chatty tenant cannot starve the workers — or dodge the limit —
+    /// by fanning out over many connections.
     pub rate_limit: f64,
-    /// Token-bucket capacity: requests one connection may issue
-    /// back-to-back before the sustained rate applies.
+    /// Token-bucket capacity: requests one tenant may issue back-to-back
+    /// (across all of its connections) before the sustained rate applies.
     pub rate_burst: u32,
 }
 
@@ -105,8 +110,8 @@ impl WireConfig {
     /// conn_workers = 8
     /// auth = "s3cret:0,t0ken:1"   # token:tenant pairs; unset = dev tokens
     /// retry_after_secs = 1
-    /// rate_limit = 0.0            # per-conn requests/second (0 = off)
-    /// rate_burst = 8              # back-to-back allowance per connection
+    /// rate_limit = 0.0            # per-tenant requests/second (0 = off)
+    /// rate_burst = 8              # back-to-back allowance per tenant
     /// ```
     pub fn from_config(cfg: &Config) -> anyhow::Result<Self> {
         let d = WireConfig::default();
@@ -161,9 +166,12 @@ struct WireShared {
     limits: HttpLimits,
     rate_limit: f64,
     rate_burst: u32,
+    /// One token bucket per authenticated tenant, lazily created on the
+    /// tenant's first request and shared by all of its connections.
+    buckets: Mutex<HashMap<u64, TokenBucket>>,
 }
 
-/// Per-connection token bucket: `rate` tokens/second sustained, `burst`
+/// Per-tenant token bucket: `rate` tokens/second sustained, `burst`
 /// capacity, one token per request. An empty bucket reports the seconds
 /// (rounded up, at least 1) until the next token accrues — the value the
 /// 429 response carries as `Retry-After`.
@@ -197,6 +205,22 @@ impl TokenBucket {
 impl WireShared {
     fn meter<R>(&self, f: impl FnOnce(&mut Metrics) -> R) -> R {
         f(&mut self.metrics.lock().unwrap())
+    }
+
+    /// Spend one token from `tenant`'s bucket (creating it at full burst
+    /// on first sight). `Err` carries the `Retry-After` seconds. With the
+    /// limiter off (`rate_limit <= 0`) every request is admitted and no
+    /// bucket is allocated.
+    fn admit_tenant(&self, tenant: u64) -> Result<(), u64> {
+        if self.rate_limit <= 0.0 {
+            return Ok(());
+        }
+        self.buckets
+            .lock()
+            .unwrap()
+            .entry(tenant)
+            .or_insert_with(|| TokenBucket::new(self.rate_limit, self.rate_burst))
+            .admit()
     }
 
     fn count_status(&self, status: u16) {
@@ -246,6 +270,7 @@ impl WireServer {
             },
             rate_limit: cfg.rate_limit,
             rate_burst: cfg.rate_burst,
+            buckets: Mutex::new(HashMap::new()),
         });
 
         let accept_thread = {
@@ -369,8 +394,6 @@ fn serve_connection(shared: &WireShared, stream: TcpStream) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let mut writer = stream;
-    let mut bucket =
-        (shared.rate_limit > 0.0).then(|| TokenBucket::new(shared.rate_limit, shared.rate_burst));
     loop {
         // Idle phase: wait for the first byte of a request (or EOF), so
         // keep-alive idle time never counts against request parsing and
@@ -392,26 +415,7 @@ fn serve_connection(shared: &WireShared, stream: TcpStream) {
             Ok(req) => {
                 shared.meter(|m| m.inc("bytes_in", req.bytes_read as u64));
                 let keep_alive = req.keep_alive();
-                // Rate limit before routing: a drained bucket sheds the
-                // request with 429 + the exact wait, spends no ε, and
-                // keeps the connection alive for the retry.
-                let outcome = match bucket.as_mut().map(TokenBucket::admit) {
-                    Some(Err(secs)) => {
-                        shared.meter(|m| m.inc("rate_limited", 1));
-                        respond(
-                            shared,
-                            &mut writer,
-                            429,
-                            &[("retry-after", secs.to_string())],
-                            b"per-connection rate limit exceeded; retry later\n",
-                        )
-                        .map(|written| {
-                            shared.meter(|m| m.inc("bytes_out", written as u64));
-                        })
-                    }
-                    _ => handle_request(shared, &req, &mut writer),
-                };
-                if outcome.is_err() {
+                if handle_request(shared, &req, &mut writer).is_err() {
                     return; // write side failed; connection unusable
                 }
                 if !keep_alive || shared.shutdown.load(Ordering::SeqCst) {
@@ -453,11 +457,25 @@ fn handle_request(
                 .and_then(|v| v.strip_prefix("Bearer "))
                 .map(str::trim);
             let tenant = token.and_then(|t| shared.auth.get(t).copied());
-            match (method, target, tenant) {
+            // Rate limit after authentication, before routing: a drained
+            // tenant bucket sheds the request with 429 + the exact wait,
+            // spends no ε, and keeps the connection alive for the retry.
+            let admitted = tenant.map(|t| shared.admit_tenant(t).map(|()| t));
+            match (method, target, admitted) {
                 (_, _, None) => {
                     respond(shared, w, 401, &[], b"unknown or missing bearer token\n")?
                 }
-                ("GET", "/v1/metrics", Some(_)) => {
+                (_, _, Some(Err(secs))) => {
+                    shared.meter(|m| m.inc("rate_limited", 1));
+                    respond(
+                        shared,
+                        w,
+                        429,
+                        &[("retry-after", secs.to_string())],
+                        b"per-tenant rate limit exceeded; retry later\n",
+                    )?
+                }
+                ("GET", "/v1/metrics", Some(Ok(_))) => {
                     let body = shared.server.metrics_snapshot().to_json().to_string();
                     respond(
                         shared,
@@ -467,16 +485,16 @@ fn handle_request(
                         body.as_bytes(),
                     )?
                 }
-                ("POST", "/v1/shutdown", Some(_)) => {
+                ("POST", "/v1/shutdown", Some(Ok(_))) => {
                     shared.request_shutdown();
                     respond(shared, w, 200, &[], b"draining\n")?
                 }
-                ("POST", "/v1/jobs", Some(tenant)) => {
+                ("POST", "/v1/jobs", Some(Ok(tenant))) => {
                     handle_job(shared, req, w, tenant)?
                 }
-                (_, "/v1/jobs", Some(_)) => method_not_allowed(shared, w, "POST")?,
-                (_, "/v1/metrics", Some(_)) => method_not_allowed(shared, w, "GET")?,
-                (_, "/v1/shutdown", Some(_)) => method_not_allowed(shared, w, "POST")?,
+                (_, "/v1/jobs", Some(Ok(_))) => method_not_allowed(shared, w, "POST")?,
+                (_, "/v1/metrics", Some(Ok(_))) => method_not_allowed(shared, w, "GET")?,
+                (_, "/v1/shutdown", Some(Ok(_))) => method_not_allowed(shared, w, "POST")?,
                 _ => respond(shared, w, 404, &[], b"unknown endpoint\n")?,
             }
         }

@@ -184,9 +184,10 @@ impl TieredIndexCache {
     }
 
     /// Memoized workload fingerprint — delegates to
-    /// [`IndexCache::fingerprint_for`].
-    pub fn fingerprint_for(&self, workload_id: u64, vs: &VectorSet) -> u128 {
-        self.l1.fingerprint_for(workload_id, vs)
+    /// [`IndexCache::fingerprint_for`] (`class_tag` is the query class's
+    /// [`crate::workloads::QueryClassKind::tag`]).
+    pub fn fingerprint_for(&self, workload_id: u64, class_tag: u64, vs: &VectorSet) -> u128 {
+        self.l1.fingerprint_for(workload_id, class_tag, vs)
     }
 
     /// The tiered serving-path primitive: L1, then L2 (promote), then

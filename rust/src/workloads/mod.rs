@@ -1,11 +1,22 @@
 //! Synthetic workload generators matching the paper's §5 experimental
-//! setup, plus the dynamic-workload registry (generation counters and
-//! delta logs for evolving query sets — DESIGN.md §9).
+//! setup, the dynamic-workload registry (generation counters and delta
+//! logs for evolving query sets — DESIGN.md §9), and the query-class seam
+//! of the generic private-mechanism engine (DESIGN.md §14): the
+//! [`QueryClass`] trait with its [`LinearQueries`] / [`LpConstraints`]
+//! implementations, and the beyond-linear convex-loss workloads of
+//! [`convex`].
 
+pub mod convex;
 pub mod dynamic;
 pub mod linear_queries;
 pub mod lp;
+pub mod query_class;
 
+pub use convex::{convex_loss_queries, ConvexLoss};
 pub use dynamic::{synthesize_delta, WorkloadRegistry};
 pub use linear_queries::{binary_queries, gaussian_histogram};
 pub use lp::{random_feasibility_lp, random_packing_lp, LpInstance, PackingLp};
+pub use query_class::{
+    synthesize_queries, LinearQueries, LpConstraints, QueryClass, QueryClassKind,
+    RoundObservation,
+};

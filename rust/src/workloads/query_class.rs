@@ -1,0 +1,564 @@
+//! The query-class seam of the generic private-mechanism engine
+//! (DESIGN.md §14).
+//!
+//! [`crate::mwem::MwemEngine`] drives one per-round skeleton — selection
+//! oracle → noisy measurement → multiplicative update → accounting — for
+//! *every* private MWU mechanism in the repo. What varies between
+//! mechanisms is captured by the [`QueryClass`] trait: the embedded score
+//! vectors the k-MIPS/lazy oracle searches, the exact (exhaustive) score
+//! evaluation, the per-query sensitivity the exponential mechanism
+//! calibrates to, and the measured-update direction applied after
+//! selection.
+//!
+//! Three implementations cover every pre-existing loop, bit-for-bit:
+//!
+//! | impl | mechanism | embedding | sensitivity | update |
+//! |------|-----------|-----------|-------------|--------|
+//! | [`LinearQueries`] | MWEM / Fast-MWEM (Algorithms 1–2), incl. the convex-loss release of [`super::convex`] | query matrix `Q`, [`ScoreTransform::Abs`] | `1/n` | measured MWU on the domain histogram |
+//! | [`LpConstraints::primal`] | scalar-private LP (Algorithm 3) | `A_i ∘ b_i` rows, [`ScoreTransform::Signed`] | `Δ∞` | MWU on the primal simplex |
+//! | [`LpConstraints::dual`] | dense-MWU packing LP (§4.2) | `N_j = −(OPT/c_j)·(Aᵀ)_j`, [`ScoreTransform::Signed`] | `3·OPT/(c_min·s)` | dual-vertex MWU over constraints |
+//!
+//! [`QueryClassKind`] is the serializable face of the seam: the
+//! release-job query class that flows through job specs, the wire proto,
+//! the `[workload]` config section and workload fingerprint memo keys.
+
+use crate::lazy::ScoreTransform;
+use crate::lp::bregman_project;
+use crate::lp::dense::DenseLpResult;
+use crate::lp::scalar::{LpIterStat, ScalarLpResult};
+use crate::mips::VectorSet;
+use crate::mwem::classic::{measured_update, IterStat, MwemResult, UpdateRule};
+use crate::mwem::engine::EngineReport;
+use crate::mwem::{Histogram, MwemBackend, MwuState, QuerySet};
+use crate::util::math::dot;
+use crate::util::rng::Rng;
+use crate::workloads::convex::{convex_loss_queries, ConvexLoss};
+use crate::workloads::{LpInstance, PackingLp};
+use std::time::Duration;
+
+/// What the engine observed in one completed round — handed to
+/// [`QueryClass::observe_round`] so a class can keep its own per-round
+/// statistics ([`IterStat`] / [`LpIterStat`]) without the engine knowing
+/// their shape.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundObservation {
+    /// Round number (1-based).
+    pub iter: usize,
+    /// Candidate the mechanism selected this round.
+    pub selected: usize,
+    /// Score evaluations charged to selection (m exhaustive, k+C lazy).
+    pub work: usize,
+    /// Wall-clock of this round's selection.
+    pub selection_time: Duration,
+}
+
+/// One private-MWU mechanism, as seen by [`crate::mwem::MwemEngine`].
+///
+/// The engine owns the round loop, the RNG, the privacy accountant and
+/// the selection oracle; the class supplies everything mechanism-specific.
+/// The contract mirrors the pre-engine loops exactly — see the table in
+/// the [module docs](self) — and the draw order per round is fixed:
+/// selection draws first (Gumbel noise over the scores), then whatever
+/// the measured update draws (e.g. one Laplace for the Hardt rule).
+pub trait QueryClass {
+    /// The query vector of the current round (e.g. `h − p` for MWEM,
+    /// `x̃ ∘ −1` for the scalar LP). Consumes no randomness.
+    fn query_vector(&mut self) -> Vec<f32>;
+
+    /// Exact scores of every candidate against `query` — the exhaustive
+    /// selection arm, and the ground truth the lazy oracle's embedded
+    /// vectors must reproduce row-for-row.
+    fn exhaustive_scores(&mut self, query: &[f32]) -> Vec<f32>;
+
+    /// Per-query sensitivity the exponential mechanism is calibrated to.
+    fn sensitivity(&self) -> f64;
+
+    /// The share of the per-round budget ε₀ spent on selection (the
+    /// Hardt rule halves it to pay for the Laplace measurement).
+    fn selection_epsilon(&self, eps0: f64) -> f64;
+
+    /// The static vectors whose inner products against
+    /// [`QueryClass::query_vector`] are the selection scores — the
+    /// dataset a k-MIPS index for this class is built over.
+    fn embedding(&self) -> &VectorSet;
+
+    /// How raw inner products map to scores ([`ScoreTransform::Abs`] for
+    /// error magnitudes, [`ScoreTransform::Signed`] for violations).
+    fn transform(&self) -> ScoreTransform;
+
+    /// Apply the measured update for the selected candidate. Any
+    /// measurement noise (e.g. the Hardt Laplace draw) must come from
+    /// `rng`, *after* the round's selection draws.
+    fn update(&mut self, rng: &mut Rng, selected: usize, eps0: f64);
+
+    /// Per-round bookkeeping hook; default: keep nothing.
+    fn observe_round(&mut self, _obs: &RoundObservation) {}
+}
+
+/// The release-job query class: which generator synthesizes a workload's
+/// query set and which [`QueryClass`] semantics answer it. Serialized on
+/// the wire (`"class"` field), in the `[workload]` config section and in
+/// workload fingerprint memo keys.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum QueryClassKind {
+    /// Random binary linear queries (the paper's §5 workload).
+    #[default]
+    Linear,
+    /// Least-squares convex-loss release (Ullman '15; [`super::convex`]).
+    ConvexLsq,
+    /// Logistic convex-loss release (Ullman '15; [`super::convex`]).
+    ConvexLogistic,
+}
+
+impl QueryClassKind {
+    /// Canonical wire/config spelling.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QueryClassKind::Linear => "linear",
+            QueryClassKind::ConvexLsq => "convex-lsq",
+            QueryClassKind::ConvexLogistic => "convex-logistic",
+        }
+    }
+
+    /// Stable small tag, mixed into workload-fingerprint memo keys so two
+    /// classes of one workload id never share a memoized fingerprint.
+    pub fn tag(&self) -> u64 {
+        match self {
+            QueryClassKind::Linear => 0,
+            QueryClassKind::ConvexLsq => 1,
+            QueryClassKind::ConvexLogistic => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for QueryClassKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for QueryClassKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "linear" => Ok(QueryClassKind::Linear),
+            "convex-lsq" => Ok(QueryClassKind::ConvexLsq),
+            "convex-logistic" => Ok(QueryClassKind::ConvexLogistic),
+            other => Err(format!(
+                "unknown query class {other:?} (expected linear|convex-lsq|convex-logistic)"
+            )),
+        }
+    }
+}
+
+/// Synthesize the query set of a seeded workload for `class` — the single
+/// entry point the coordinator, CLI and eval drivers share, so one
+/// (seed, class, m, u) always names identical content.
+pub fn synthesize_queries(
+    rng: &mut Rng,
+    class: QueryClassKind,
+    m: usize,
+    u: usize,
+) -> QuerySet {
+    match class {
+        QueryClassKind::Linear => crate::workloads::binary_queries(rng, m, u),
+        QueryClassKind::ConvexLsq => {
+            convex_loss_queries(rng, ConvexLoss::LeastSquares, m, u)
+        }
+        QueryClassKind::ConvexLogistic => {
+            convex_loss_queries(rng, ConvexLoss::Logistic, m, u)
+        }
+    }
+}
+
+/// [`QueryClass`] of MWEM / Fast-MWEM (Algorithms 1–2): linear queries
+/// (or any bounded `[0,1]` score-vector workload, e.g. the convex losses
+/// of [`super::convex`]) answered by measured MWU over the domain
+/// histogram.
+pub struct LinearQueries<'a> {
+    q: &'a QuerySet,
+    h: &'a Histogram,
+    backend: &'a mut dyn MwemBackend,
+    rule: UpdateRule,
+    log_every: usize,
+    state: MwuState,
+    stats: Vec<IterStat>,
+}
+
+impl<'a> LinearQueries<'a> {
+    /// A fresh uniform-initialized MWU run over `q`/`h`.
+    pub fn new(
+        q: &'a QuerySet,
+        h: &'a Histogram,
+        backend: &'a mut dyn MwemBackend,
+        rule: UpdateRule,
+        log_every: usize,
+    ) -> Self {
+        let state = MwuState::new(q.u());
+        LinearQueries { q, h, backend, rule, log_every, state, stats: Vec::new() }
+    }
+
+    /// Package the finished run as the classic [`MwemResult`] shape.
+    pub fn into_result(self, report: &EngineReport) -> MwemResult {
+        let t = report.rounds.max(1);
+        MwemResult {
+            p_avg: self.state.p_avg(),
+            p_final: self.state.p,
+            stats: self.stats,
+            total_time: report.total_time,
+            avg_select_time: report.select_total / t as u32,
+            avg_select_work: report.work_total as f64 / t as f64,
+            eps0: report.eps0,
+            privacy_spent: report.privacy_spent,
+        }
+    }
+}
+
+impl QueryClass for LinearQueries<'_> {
+    fn query_vector(&mut self) -> Vec<f32> {
+        self.h
+            .probs()
+            .iter()
+            .zip(self.state.p.iter())
+            .map(|(&a, &b)| a - b)
+            .collect()
+    }
+
+    fn exhaustive_scores(&mut self, query: &[f32]) -> Vec<f32> {
+        self.backend.abs_scores(self.q, query)
+    }
+
+    fn sensitivity(&self) -> f64 {
+        1.0 / self.h.record_count() as f64
+    }
+
+    fn selection_epsilon(&self, eps0: f64) -> f64 {
+        match self.rule {
+            UpdateRule::Paper { .. } => eps0,
+            UpdateRule::Hardt => eps0 / 2.0,
+        }
+    }
+
+    fn embedding(&self) -> &VectorSet {
+        self.q.vectors()
+    }
+
+    fn transform(&self) -> ScoreTransform {
+        ScoreTransform::Abs
+    }
+
+    fn update(&mut self, rng: &mut Rng, selected: usize, eps0: f64) {
+        let s = measured_update(rng, self.rule, self.q, self.h, &self.state, selected, eps0);
+        let c = self.q.query(selected).to_vec();
+        self.state.update(&mut *self.backend, &c, s);
+    }
+
+    fn observe_round(&mut self, obs: &RoundObservation) {
+        if self.log_every > 0 && obs.iter % self.log_every == 0 {
+            self.stats.push(IterStat {
+                iter: obs.iter,
+                max_error_avg: self.q.max_error(self.h.probs(), &self.state.p_avg()),
+                max_error_cur: self.q.max_error(self.h.probs(), &self.state.p),
+                selected: obs.selected,
+                selection_work: obs.work,
+                selection_time: obs.selection_time,
+            });
+        }
+    }
+}
+
+/// The two LP mechanisms' internal state (see [`LpConstraints`]).
+enum LpForm<'a> {
+    /// Algorithm 3: MWU over the primal simplex; the selected candidate is
+    /// the privately-worst constraint `A_i x̃ − b_i`.
+    Primal {
+        lp: &'a LpInstance,
+        cat: &'a VectorSet,
+        rho: f64,
+        eta: f64,
+        delta_inf: f64,
+        log_every: usize,
+        x: Vec<f32>,
+        w: Vec<f32>,
+        x_sum: Vec<f64>,
+        stats: Vec<LpIterStat>,
+    },
+    /// §4.2 dense MWU: measure over constraints, Bregman-projected to the
+    /// 1/s-dense simplex; the selected candidate is a dual vertex j.
+    Dual {
+        lp: &'a PackingLp,
+        nvecs: &'a VectorSet,
+        rho: f64,
+        eta: f64,
+        sens: f64,
+        s: usize,
+        w: Vec<f32>,
+        x_sum: Vec<f64>,
+    },
+}
+
+/// [`QueryClass`] of the private LP solvers: the scalar-private primal
+/// form (Algorithm 3, [`LpConstraints::primal`]) and the
+/// constraint-private dual form (§4.2 dense MWU, [`LpConstraints::dual`]).
+pub struct LpConstraints<'a> {
+    form: LpForm<'a>,
+}
+
+impl<'a> LpConstraints<'a> {
+    /// Algorithm 3 over a feasibility LP: `cat` must be
+    /// [`crate::lp::scalar::concat_constraints`] of `lp`.
+    pub fn primal(
+        lp: &'a LpInstance,
+        cat: &'a VectorSet,
+        rho: f64,
+        eta: f64,
+        delta_inf: f64,
+        log_every: usize,
+    ) -> Self {
+        let d = lp.d();
+        LpConstraints {
+            form: LpForm::Primal {
+                lp,
+                cat,
+                rho,
+                eta,
+                delta_inf,
+                log_every,
+                x: vec![1.0 / d as f32; d],
+                w: vec![1.0f32; d],
+                x_sum: vec![0.0f64; d],
+                stats: Vec::new(),
+            },
+        }
+    }
+
+    /// §4.2 dense MWU over a packing LP: `nvecs` must be
+    /// [`crate::lp::dense::oracle_vectors`] of `lp`, `sens` the §G oracle
+    /// sensitivity and `s` the (clamped) density parameter.
+    pub fn dual(
+        lp: &'a PackingLp,
+        nvecs: &'a VectorSet,
+        rho: f64,
+        eta: f64,
+        sens: f64,
+        s: usize,
+    ) -> Self {
+        LpConstraints {
+            form: LpForm::Dual {
+                lp,
+                nvecs,
+                rho,
+                eta,
+                sens,
+                s,
+                w: vec![1.0f32; lp.m()],
+                x_sum: vec![0.0f64; lp.d()],
+            },
+        }
+    }
+
+    /// Package a finished primal run as [`ScalarLpResult`].
+    ///
+    /// # Panics
+    /// Panics when called on a [`LpConstraints::dual`] run.
+    pub fn into_scalar_result(
+        self,
+        report: &EngineReport,
+        index_build_time: Duration,
+    ) -> ScalarLpResult {
+        let LpForm::Primal { x_sum, stats, .. } = self.form else {
+            panic!("into_scalar_result called on a dual-form LP run");
+        };
+        let t = report.rounds.max(1);
+        let inv = 1.0 / t as f64;
+        ScalarLpResult {
+            x: x_sum.iter().map(|&v| (v * inv) as f32).collect(),
+            stats,
+            total_time: report.total_time,
+            index_build_time,
+            avg_select_time: report.select_total / t as u32,
+            avg_select_work: report.work_total as f64 / t as f64,
+            eps0: report.eps0,
+        }
+    }
+
+    /// Package a finished dual run as [`DenseLpResult`].
+    ///
+    /// # Panics
+    /// Panics when called on a [`LpConstraints::primal`] run.
+    pub fn into_dense_result(
+        self,
+        report: &EngineReport,
+        index_build_time: Duration,
+    ) -> DenseLpResult {
+        let LpForm::Dual { x_sum, .. } = self.form else {
+            panic!("into_dense_result called on a primal-form LP run");
+        };
+        let t = report.rounds.max(1);
+        let inv = 1.0 / t as f64;
+        DenseLpResult {
+            x: x_sum.iter().map(|&v| (v * inv) as f32).collect(),
+            total_time: report.total_time,
+            index_build_time,
+            avg_select_work: report.work_total as f64 / t as f64,
+            eps0: report.eps0,
+        }
+    }
+}
+
+impl QueryClass for LpConstraints<'_> {
+    fn query_vector(&mut self) -> Vec<f32> {
+        match &mut self.form {
+            LpForm::Primal { lp, x, .. } => {
+                // x' = x̃ ∘ −1, so ⟨A_i ∘ b_i, x'⟩ = A_i x̃ − b_i
+                let d = lp.d();
+                let mut xq = vec![0f32; d + 1];
+                xq[..d].copy_from_slice(x);
+                xq[d] = -1.0;
+                xq
+            }
+            LpForm::Dual { w, s, .. } => bregman_project(w, *s),
+        }
+    }
+
+    fn exhaustive_scores(&mut self, query: &[f32]) -> Vec<f32> {
+        match &self.form {
+            LpForm::Primal { lp, cat, .. } => {
+                (0..lp.m()).map(|i| dot(cat.row(i), query)).collect()
+            }
+            LpForm::Dual { lp, nvecs, .. } => (0..lp.d())
+                .map(|j| crate::runtime::kernels::dot(nvecs.row(j), query))
+                .collect(),
+        }
+    }
+
+    fn sensitivity(&self) -> f64 {
+        match &self.form {
+            LpForm::Primal { delta_inf, .. } => *delta_inf,
+            LpForm::Dual { sens, .. } => *sens,
+        }
+    }
+
+    fn selection_epsilon(&self, eps0: f64) -> f64 {
+        eps0 // both LP mechanisms spend the whole round budget on selection
+    }
+
+    fn embedding(&self) -> &VectorSet {
+        match &self.form {
+            LpForm::Primal { cat, .. } => cat,
+            LpForm::Dual { nvecs, .. } => nvecs,
+        }
+    }
+
+    fn transform(&self) -> ScoreTransform {
+        ScoreTransform::Signed
+    }
+
+    fn update(&mut self, _rng: &mut Rng, selected: usize, _eps0: f64) {
+        match &mut self.form {
+            LpForm::Primal { lp, rho, eta, x, w, x_sum, .. } => {
+                // MWU on the primal: losses ℓ = A_{selected} / ρ
+                let a_row = lp.a.row(selected);
+                for j in 0..lp.d() {
+                    w[j] *= (-*eta * (a_row[j] as f64 / *rho)).exp() as f32;
+                }
+                x.copy_from_slice(w);
+                crate::util::math::normalize_l1(x);
+                // rebase weights to avoid f32 under/overflow over long horizons
+                w.copy_from_slice(x);
+                for (acc, &xi) in x_sum.iter_mut().zip(x.iter()) {
+                    *acc += xi as f64;
+                }
+            }
+            LpForm::Dual { lp, rho, eta, w, x_sum, .. } => {
+                // primal vertex x* = (OPT/c_j)·e_j; losses ℓ_i = (A_i x* − b_i)/ρ
+                let scale = lp.opt / lp.c[selected] as f64;
+                x_sum[selected] += scale;
+                for i in 0..lp.m() {
+                    let viol =
+                        (scale * lp.a.row(i)[selected] as f64 - lp.b[i] as f64) / *rho;
+                    // up-weight violated constraints so the oracle avoids them next
+                    w[i] *= (*eta * viol).exp() as f32;
+                }
+                // renormalize weights occasionally for numeric stability
+                let max_w = w.iter().cloned().fold(0f32, f32::max);
+                if max_w > 1e20 {
+                    for v in w.iter_mut() {
+                        *v /= max_w;
+                    }
+                }
+            }
+        }
+    }
+
+    fn observe_round(&mut self, obs: &RoundObservation) {
+        if let LpForm::Primal { lp, log_every, x_sum, stats, .. } = &mut self.form {
+            if *log_every > 0 && obs.iter % *log_every == 0 {
+                let inv = 1.0 / obs.iter as f64;
+                let x_avg: Vec<f32> = x_sum.iter().map(|&v| (v * inv) as f32).collect();
+                stats.push(LpIterStat {
+                    iter: obs.iter,
+                    violation_fraction: lp.violation_fraction(&x_avg, 0.0),
+                    max_violation: lp.max_violation(&x_avg),
+                    selection_work: obs.work,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mwem::NativeBackend;
+    use crate::workloads::{binary_queries, gaussian_histogram};
+
+    #[test]
+    fn kind_parses_and_displays_round_trip() {
+        for kind in [
+            QueryClassKind::Linear,
+            QueryClassKind::ConvexLsq,
+            QueryClassKind::ConvexLogistic,
+        ] {
+            assert_eq!(kind.as_str().parse::<QueryClassKind>().unwrap(), kind);
+        }
+        assert!("bogus".parse::<QueryClassKind>().is_err());
+        assert_eq!(QueryClassKind::default(), QueryClassKind::Linear);
+        // tags are distinct (they salt fingerprint memo keys)
+        assert_ne!(QueryClassKind::Linear.tag(), QueryClassKind::ConvexLsq.tag());
+        assert_ne!(QueryClassKind::ConvexLsq.tag(), QueryClassKind::ConvexLogistic.tag());
+    }
+
+    #[test]
+    fn linear_synthesis_is_byte_identical_to_binary_queries() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let q1 = synthesize_queries(&mut a, QueryClassKind::Linear, 20, 32);
+        let q2 = binary_queries(&mut b, 20, 32);
+        for i in 0..20 {
+            assert_eq!(q1.query(i), q2.query(i));
+        }
+    }
+
+    #[test]
+    fn linear_class_scores_match_query_set() {
+        let mut rng = Rng::new(7);
+        let h = gaussian_histogram(&mut rng, 32, 200);
+        let q = binary_queries(&mut rng, 15, 32);
+        let mut backend = NativeBackend;
+        let mut class = LinearQueries::new(
+            &q,
+            &h,
+            &mut backend,
+            UpdateRule::Paper { eta: 0.1 },
+            0,
+        );
+        let d = class.query_vector();
+        let scores = class.exhaustive_scores(&d);
+        assert_eq!(scores, q.abs_scores(&d));
+        assert!((class.sensitivity() - 1.0 / 200.0).abs() < 1e-12);
+        assert_eq!(class.selection_epsilon(0.5), 0.5);
+        assert_eq!(class.embedding().len(), 15);
+    }
+}

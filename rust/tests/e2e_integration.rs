@@ -140,6 +140,7 @@ fn repeated_workload_batch_hits_warm_index_cache() {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload,
             tenant: 0,
             seed,
@@ -182,6 +183,7 @@ fn cache_hit_skips_build_and_is_deterministic() {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards: 1,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload: 5,
             tenant: 0,
             seed,
@@ -228,6 +230,7 @@ fn release_through_restored_index_is_bit_identical() {
         delta: 1e-3,
         index: Some(IndexKind::Hnsw), // seed-dependent build: the hard case
         shards: 1,
+        class: fast_mwem::workloads::QueryClassKind::Linear,
         workload: 11,
         tenant: 0,
         seed: 3,

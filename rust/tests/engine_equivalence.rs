@@ -1,0 +1,417 @@
+//! Golden-draw equivalence suite for the engine refactor (DESIGN.md §14).
+//!
+//! Every pre-refactor private MWU loop — classic MWEM (Paper and Hardt
+//! rules), Fast-MWEM's monolithic and sharded lazy variants, the scalar
+//! LP solver in all three selection modes and the dense packing-LP
+//! solver — is re-implemented here from public APIs, draw for draw, as it
+//! existed before `MwemEngine` absorbed the loop. The engine runs must be
+//! *bit-identical*: same `Rng` consumption order (selection noise first,
+//! then measurement noise), same selected candidate ids, same per-round
+//! work, same averaged and final iterates.
+//!
+//! A final χ²-style check pins the lazy oracle's selection distribution on
+//! an embedded convex-loss workload (the new query class of this seam) to
+//! the exact softmax the exponential mechanism defines.
+
+use fast_mwem::dp::exponential_mechanism;
+use fast_mwem::lazy::{LazyEm, ScoreTransform, ShardedLazyEm};
+use fast_mwem::lp::dense::{oracle_vectors, run_dense, DenseLpConfig};
+use fast_mwem::lp::scalar::{concat_constraints, run_scalar, ScalarLpConfig};
+use fast_mwem::lp::{bregman_project, SelectionMode};
+use fast_mwem::mips::{build_index, IndexKind};
+use fast_mwem::mwem::{
+    run_classic, run_fast, FastMwemConfig, Histogram, MwemConfig, MwuState, NativeBackend,
+    QuerySet, UpdateRule,
+};
+use fast_mwem::runtime::kernels::dot as kdot;
+use fast_mwem::util::math::{dot, normalize_l1};
+use fast_mwem::workloads::{
+    binary_queries, gaussian_histogram, random_feasibility_lp, random_packing_lp,
+    synthesize_queries, LpInstance, PackingLp, QueryClassKind,
+};
+use fast_mwem::Rng;
+
+fn workload(u: usize, m: usize, n: usize, seed: u64) -> (Histogram, QuerySet) {
+    let mut rng = Rng::new(seed);
+    let h = gaussian_histogram(&mut rng, u, n);
+    let q = binary_queries(&mut rng, m, u);
+    (h, q)
+}
+
+/// How the reference MWEM loop selects each round (mirrors the oracles the
+/// pre-engine loops constructed inline).
+enum RefOracle<'a> {
+    Exhaustive,
+    Lazy(LazyEm<'a>),
+    Sharded(ShardedLazyEm<'a>),
+}
+
+/// What a reference loop replays: the exact per-round trace plus outputs.
+struct RefTrace {
+    p_avg: Vec<f32>,
+    p_final: Vec<f32>,
+    selected: Vec<usize>,
+    work: Vec<usize>,
+}
+
+/// The pre-refactor MWEM round loop, verbatim: difference vector, one EM
+/// draw (exhaustive or lazy), then the measured multiplicative update —
+/// Paper's sign rule or Hardt's clipped Laplace measurement.
+fn reference_mwem(cfg: &MwemConfig, q: &QuerySet, h: &Histogram, oracle: RefOracle) -> RefTrace {
+    let eps0 = cfg.eps0();
+    let eps_sel = match cfg.update {
+        UpdateRule::Paper { .. } => eps0,
+        UpdateRule::Hardt => eps0 / 2.0,
+    };
+    let sens = 1.0 / h.record_count() as f64;
+    let mut rng = Rng::new(cfg.seed);
+    let mut backend = NativeBackend;
+    let mut state = MwuState::new(q.u());
+    let mut selected = Vec::with_capacity(cfg.t);
+    let mut work = Vec::with_capacity(cfg.t);
+
+    for _ in 0..cfg.t {
+        let d: Vec<f32> = h
+            .probs()
+            .iter()
+            .zip(state.p.iter())
+            .map(|(&a, &b)| a - b)
+            .collect();
+        let (i_t, w_t) = match &oracle {
+            RefOracle::Exhaustive => {
+                let scores = q.abs_scores(&d);
+                (exponential_mechanism(&mut rng, &scores, eps_sel, sens), q.m())
+            }
+            RefOracle::Lazy(em) => {
+                let s = em.select(&mut rng, &d, eps_sel, sens);
+                (s.index, s.work)
+            }
+            RefOracle::Sharded(em) => {
+                let s = em.select(&mut rng, &d, eps_sel, sens);
+                (s.index, s.work)
+            }
+        };
+        selected.push(i_t);
+        work.push(w_t);
+
+        let q_row = q.query(i_t);
+        let s = match cfg.update {
+            UpdateRule::Paper { eta } => {
+                let err = dot(q_row, h.probs()) as f64 - dot(q_row, &state.p) as f64;
+                (-(eta) * (-err).signum()) as f32
+            }
+            UpdateRule::Hardt => {
+                let m_t = (dot(q_row, h.probs()) as f64 + rng.laplace(sens / (eps0 / 2.0)))
+                    .clamp(0.0, 1.0);
+                ((m_t - dot(q_row, &state.p) as f64) / 2.0) as f32
+            }
+        };
+        let c = q_row.to_vec();
+        state.update(&mut backend, &c, s);
+    }
+    RefTrace { p_avg: state.p_avg(), p_final: state.p, selected, work }
+}
+
+/// Assert an engine run replayed the reference trace bit for bit.
+fn assert_trace_matches(
+    label: &str,
+    reference: &RefTrace,
+    p_avg: &[f32],
+    p_final: &[f32],
+    stats_selected: &[usize],
+    stats_work: &[usize],
+) {
+    assert_eq!(stats_selected, reference.selected, "{label}: selected ids diverged");
+    assert_eq!(stats_work, reference.work, "{label}: per-round work diverged");
+    assert_eq!(p_avg, reference.p_avg, "{label}: p_avg diverged");
+    assert_eq!(p_final, reference.p_final, "{label}: p_final diverged");
+}
+
+#[test]
+fn classic_paper_rule_is_bit_identical_to_reference_loop() {
+    let (h, q) = workload(64, 60, 400, 1);
+    let mut cfg = MwemConfig::paper(60, 64, 1.0, 1e-3, 21);
+    cfg.log_every = 1;
+    let reference = reference_mwem(&cfg, &q, &h, RefOracle::Exhaustive);
+    let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+    let ids: Vec<usize> = res.stats.iter().map(|s| s.selected).collect();
+    let work: Vec<usize> = res.stats.iter().map(|s| s.selection_work).collect();
+    assert_trace_matches("classic/paper", &reference, &res.p_avg, &res.p_final, &ids, &work);
+}
+
+#[test]
+fn classic_hardt_rule_is_bit_identical_to_reference_loop() {
+    // Hardt interleaves a Laplace measurement draw after each selection —
+    // the strictest test of the engine's RNG ordering contract.
+    let (h, q) = workload(64, 60, 2_000, 2);
+    let mut cfg = MwemConfig::paper(60, 64, 2.0, 1e-3, 22);
+    cfg.update = UpdateRule::Hardt;
+    cfg.log_every = 1;
+    let reference = reference_mwem(&cfg, &q, &h, RefOracle::Exhaustive);
+    let res = run_classic(&cfg, &q, &h, &mut NativeBackend);
+    let ids: Vec<usize> = res.stats.iter().map(|s| s.selected).collect();
+    let work: Vec<usize> = res.stats.iter().map(|s| s.selection_work).collect();
+    assert_trace_matches("classic/hardt", &reference, &res.p_avg, &res.p_final, &ids, &work);
+}
+
+#[test]
+fn fast_monolithic_flat_is_bit_identical_to_reference_loop() {
+    let (h, q) = workload(64, 80, 400, 3);
+    let mut cfg = MwemConfig::paper(60, 64, 1.0, 1e-3, 23);
+    cfg.log_every = 1;
+
+    let index = build_index(IndexKind::Flat, q.vectors().clone(), cfg.seed ^ 0x5EED);
+    let em = LazyEm::new(index.as_ref(), q.vectors(), ScoreTransform::Abs);
+    let reference = reference_mwem(&cfg, &q, &h, RefOracle::Lazy(em));
+
+    let out = run_fast(
+        &FastMwemConfig::new(cfg, IndexKind::Flat),
+        &q,
+        &h,
+        &mut NativeBackend,
+    );
+    let ids: Vec<usize> = out.result.stats.iter().map(|s| s.selected).collect();
+    let work: Vec<usize> = out.result.stats.iter().map(|s| s.selection_work).collect();
+    assert_trace_matches(
+        "fast/flat",
+        &reference,
+        &out.result.p_avg,
+        &out.result.p_final,
+        &ids,
+        &work,
+    );
+    assert_eq!(out.lazy.tail_counts.len(), 60);
+}
+
+#[test]
+fn fast_sharded_is_bit_identical_to_reference_loop() {
+    let (h, q) = workload(64, 80, 400, 4);
+    let mut cfg = MwemConfig::paper(60, 64, 1.0, 1e-3, 24);
+    cfg.log_every = 1;
+
+    let em = ShardedLazyEm::build(
+        IndexKind::Flat,
+        q.vectors(),
+        4,
+        ScoreTransform::Abs,
+        cfg.seed ^ 0x5EED,
+    );
+    let reference = reference_mwem(&cfg, &q, &h, RefOracle::Sharded(em));
+
+    let out = run_fast(
+        &FastMwemConfig::new(cfg, IndexKind::Flat).with_shards(4),
+        &q,
+        &h,
+        &mut NativeBackend,
+    );
+    let ids: Vec<usize> = out.result.stats.iter().map(|s| s.selected).collect();
+    let work: Vec<usize> = out.result.stats.iter().map(|s| s.selection_work).collect();
+    assert_trace_matches(
+        "fast/sharded",
+        &reference,
+        &out.result.p_avg,
+        &out.result.p_final,
+        &ids,
+        &work,
+    );
+}
+
+/// The pre-refactor Algorithm 3 loop, verbatim: query x̃ ∘ −1, one EM draw
+/// over the concatenated constraints, MWU on the primal simplex with
+/// weight rebase, running x̄ average.
+fn reference_scalar_lp(cfg: &ScalarLpConfig, lp: &LpInstance) -> Vec<f32> {
+    let d = lp.d();
+    let rho = lp.width().max(1e-12);
+    let eps0 = cfg.eps0();
+    let eta = ((d as f64).ln() / cfg.t as f64).sqrt();
+    let cat = concat_constraints(lp);
+    let index = match cfg.mode {
+        SelectionMode::Lazy(kind) => Some(build_index(kind, cat.clone(), cfg.seed ^ 0xA11CE)),
+        _ => None,
+    };
+    let lazy = index
+        .as_ref()
+        .map(|ix| LazyEm::new(ix.as_ref(), &cat, ScoreTransform::Signed));
+    let sharded = match cfg.mode {
+        SelectionMode::LazySharded(kind, shards) => Some(ShardedLazyEm::build(
+            kind,
+            &cat,
+            shards,
+            ScoreTransform::Signed,
+            cfg.seed ^ 0xA11CE,
+        )),
+        _ => None,
+    };
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = vec![1.0 / d as f32; d];
+    let mut w = vec![1.0f32; d];
+    let mut x_sum = vec![0.0f64; d];
+    for _ in 0..cfg.t {
+        let mut xq = vec![0f32; d + 1];
+        xq[..d].copy_from_slice(&x);
+        xq[d] = -1.0;
+        let i_t = match (&lazy, &sharded) {
+            (Some(em), _) => em.select(&mut rng, &xq, eps0, cfg.delta_inf).index,
+            (_, Some(em)) => em.select(&mut rng, &xq, eps0, cfg.delta_inf).index,
+            _ => {
+                let scores: Vec<f32> =
+                    (0..lp.m()).map(|i| dot(cat.row(i), &xq)).collect();
+                exponential_mechanism(&mut rng, &scores, eps0, cfg.delta_inf)
+            }
+        };
+        let a_row = lp.a.row(i_t);
+        for (wj, &aj) in w.iter_mut().zip(a_row.iter()) {
+            *wj *= (-eta * (aj as f64 / rho)).exp() as f32;
+        }
+        x.copy_from_slice(&w);
+        normalize_l1(&mut x);
+        w.copy_from_slice(&x);
+        for (acc, &xi) in x_sum.iter_mut().zip(x.iter()) {
+            *acc += xi as f64;
+        }
+    }
+    let inv = 1.0 / cfg.t as f64;
+    x_sum.iter().map(|&v| (v * inv) as f32).collect()
+}
+
+#[test]
+fn scalar_lp_all_modes_are_bit_identical_to_reference_loop() {
+    let mut rng = Rng::new(5);
+    let lp = random_feasibility_lp(&mut rng, 150, 10, 0.6);
+    for mode in [
+        SelectionMode::Exhaustive,
+        SelectionMode::Lazy(IndexKind::Flat),
+        SelectionMode::LazySharded(IndexKind::Flat, 3),
+    ] {
+        let cfg = ScalarLpConfig {
+            t: 80,
+            eps: 2.0,
+            delta: 1e-3,
+            delta_inf: 0.1,
+            mode,
+            seed: 31,
+            log_every: 0,
+        };
+        let reference = reference_scalar_lp(&cfg, &lp);
+        let res = run_scalar(&cfg, &lp);
+        assert_eq!(res.x, reference, "scalar LP {mode}: averaged iterate diverged");
+    }
+}
+
+/// The pre-refactor §4.2 dense-MWU loop, verbatim: Bregman-projected dual
+/// query, one EM draw over the oracle vectors, vertex accumulation and the
+/// violation-driven constraint reweighting with overflow renormalization.
+fn reference_dense_lp(cfg: &DenseLpConfig, lp: &PackingLp) -> Vec<f32> {
+    let (m, d) = (lp.m(), lp.d());
+    let eps0 = cfg.eps0();
+    let s = cfg.s.clamp(1, m);
+    let mut rho = 1e-9f64;
+    for j in 0..d {
+        let scale = lp.opt / lp.c[j] as f64;
+        for i in 0..m {
+            let v = scale * lp.a.row(i)[j] as f64 - lp.b[i] as f64;
+            rho = rho.max(v.abs());
+        }
+    }
+    let eta = (((m as f64).ln() / cfg.t as f64).sqrt()).min(0.5);
+    let c_min = lp.c.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    let sens = 3.0 * lp.opt / (c_min * s as f64);
+
+    let nvecs = oracle_vectors(lp);
+    let index = match cfg.mode {
+        SelectionMode::Lazy(kind) => Some(build_index(kind, nvecs.clone(), cfg.seed ^ 0xDEA1)),
+        _ => None,
+    };
+    let lazy = index
+        .as_ref()
+        .map(|ix| LazyEm::new(ix.as_ref(), &nvecs, ScoreTransform::Signed));
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut w = vec![1.0f32; m];
+    let mut x_sum = vec![0.0f64; d];
+    for _ in 0..cfg.t {
+        let y = bregman_project(&w, s);
+        let j_t = match &lazy {
+            Some(em) => em.select(&mut rng, &y, eps0, sens).index,
+            None => {
+                let scores: Vec<f32> = (0..d).map(|j| kdot(nvecs.row(j), &y)).collect();
+                exponential_mechanism(&mut rng, &scores, eps0, sens)
+            }
+        };
+        let scale = lp.opt / lp.c[j_t] as f64;
+        x_sum[j_t] += scale;
+        for (i, wi) in w.iter_mut().enumerate() {
+            let viol = (scale * lp.a.row(i)[j_t] as f64 - lp.b[i] as f64) / rho;
+            *wi *= (eta * viol).exp() as f32;
+        }
+        let max_w = w.iter().cloned().fold(0f32, f32::max);
+        if max_w > 1e20 {
+            for v in w.iter_mut() {
+                *v /= max_w;
+            }
+        }
+    }
+    let inv = 1.0 / cfg.t as f64;
+    x_sum.iter().map(|&v| (v * inv) as f32).collect()
+}
+
+#[test]
+fn dense_lp_is_bit_identical_to_reference_loop() {
+    let mut rng = Rng::new(6);
+    let lp = random_packing_lp(&mut rng, 80, 12);
+    for mode in [SelectionMode::Exhaustive, SelectionMode::Lazy(IndexKind::Flat)] {
+        let cfg = DenseLpConfig {
+            t: 80,
+            eps: 5.0,
+            delta: 1e-3,
+            s: 10,
+            mode,
+            seed: 41,
+        };
+        let reference = reference_dense_lp(&cfg, &lp);
+        let res = run_dense(&cfg, &lp);
+        assert_eq!(res.x, reference, "dense LP {mode}: averaged solution diverged");
+    }
+}
+
+/// The seam-proving distribution check: on an embedded convex-loss
+/// workload (least-squares rows, DESIGN.md §14) the lazy oracle with an
+/// exact (flat) index must sample from exactly the softmax distribution
+/// the exponential mechanism defines over the transformed scores —
+/// χ²-style frequency comparison, as in the Theorem 3.3 unit test.
+#[test]
+fn convex_lazy_selection_matches_softmax_distribution() {
+    let u = 16;
+    let m = 12;
+    let mut rng = Rng::new(9);
+    let h = gaussian_histogram(&mut rng, u, 120);
+    let q = synthesize_queries(&mut rng, QueryClassKind::ConvexLsq, m, u);
+    let d: Vec<f32> = h.probs().iter().map(|&a| a - 1.0 / u as f32).collect();
+
+    let eps = 1.0;
+    let sens = 0.05;
+    let scale = eps / (2.0 * sens);
+    let weights: Vec<f64> = (0..m)
+        .map(|i| (scale * (kdot(q.query(i), &d) as f64).abs()).exp())
+        .collect();
+    let z: f64 = weights.iter().sum();
+
+    let index = build_index(IndexKind::Flat, q.vectors().clone(), 33);
+    let em = LazyEm::new(index.as_ref(), q.vectors(), ScoreTransform::Abs);
+
+    let mut draw_rng = Rng::new(101);
+    let trials = 300_000;
+    let mut counts = vec![0usize; m];
+    for _ in 0..trials {
+        counts[em.select(&mut draw_rng, &d, eps, sens).index] += 1;
+    }
+    for i in 0..m {
+        let want = weights[i] / z;
+        let got = counts[i] as f64 / trials as f64;
+        assert!(
+            (got - want).abs() < 0.01,
+            "candidate {i}: got {got:.4} want {want:.4}"
+        );
+    }
+}

@@ -32,6 +32,7 @@ fn release(workload: u64, seed: u64) -> JobSpec {
         delta: 1e-3,
         index: Some(IndexKind::Flat),
         shards: 1,
+        class: fast_mwem::workloads::QueryClassKind::Linear,
         workload,
         tenant: 0,
         seed,
@@ -135,6 +136,7 @@ impl RegistryExt for WorkloadRegistry {
         let mut rng = Rng::new(workload);
         let _h: Histogram = fast_mwem::workloads::gaussian_histogram(&mut rng, 32, 200);
         let q: QuerySet = fast_mwem::workloads::binary_queries(&mut rng, 40, 32);
-        self.generation(cache.fingerprint_for(workload, q.vectors()))
+        let tag = fast_mwem::workloads::QueryClassKind::Linear.tag();
+        self.generation(cache.fingerprint_for(workload, tag, q.vectors()))
     }
 }

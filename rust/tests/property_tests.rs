@@ -248,6 +248,7 @@ fn prop_coordinator_invariants() {
                     delta: 1e-3,
                     index: Some(IndexKind::Flat),
                     shards: 1 + rng.usize_below(3),
+                    class: fast_mwem::workloads::QueryClassKind::Linear,
                     workload,
                     tenant: (j % 3) as u64,
                     seed: round as u64 * 100 + j as u64,
@@ -324,6 +325,7 @@ fn prop_server_invariants() {
                     delta: 1e-3,
                     index: Some(IndexKind::Flat),
                     shards: 1,
+                    class: fast_mwem::workloads::QueryClassKind::Linear,
                     workload: (j % 2) as u64,
                     tenant,
                     seed,

@@ -37,6 +37,7 @@ fn slow_release(tenant: u64, seed: u64) -> JobSpec {
         delta: 1e-3,
         index: Some(IndexKind::Hnsw),
         shards: 1,
+        class: fast_mwem::workloads::QueryClassKind::Linear,
         workload: 77,
         tenant,
         seed,
@@ -55,6 +56,7 @@ fn invalid_release(tenant: u64, eps: f64) -> JobSpec {
         delta: 1e-3,
         index: Some(IndexKind::Flat),
         shards: 1,
+        class: fast_mwem::workloads::QueryClassKind::Linear,
         workload: 1,
         tenant,
         seed: 1,
@@ -214,6 +216,7 @@ fn single_worker_server_matches_batch_coordinator() {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards: 1,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload: 7,
             tenant: 0,
             seed: 100,
@@ -227,6 +230,7 @@ fn single_worker_server_matches_batch_coordinator() {
             delta: 1e-3,
             index: Some(IndexKind::Hnsw),
             shards: 1,
+            class: fast_mwem::workloads::QueryClassKind::Linear,
             workload: 7, // repeat: second job hits the warm cache
             tenant: 1,
             seed: 101,
@@ -307,6 +311,7 @@ fn concurrent_mixed_tenants_stay_within_caps() {
                             delta: 1e-3,
                             index: Some(IndexKind::Flat),
                             shards: 1,
+                            class: fast_mwem::workloads::QueryClassKind::Linear,
                             workload: 3,
                             tenant,
                             seed: tenant * 10 + i,

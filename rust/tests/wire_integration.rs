@@ -180,13 +180,15 @@ fn reject_queue_answers_429_and_retry_after_is_honored() {
     assert!(m.counter("http_429") >= 1);
 }
 
-/// Per-connection rate limiting: a token bucket admits the configured
-/// burst, then sheds with 429 + a numeric `Retry-After` *before* parsing
-/// or submission — zero ε spent, keep-alive survives every shed, and a
-/// fresh connection gets a fresh bucket (the limit is per connection,
-/// not global).
+/// Per-tenant rate limiting: one token bucket per tenant, aggregated
+/// across every connection the tenant holds. The burst admits the
+/// configured number of requests *total* (not per socket) — a fresh
+/// connection gets no fresh bucket — then the tenant sheds with 429 + a
+/// numeric `Retry-After` *before* parsing or submission: zero ε spent,
+/// keep-alive survives every shed, and other tenants' buckets are
+/// untouched.
 #[test]
-fn per_connection_rate_limit_answers_429_and_spends_nothing() {
+fn per_tenant_rate_limit_aggregates_across_connections() {
     let server = Server::start(ServerConfig {
         workers: 2,
         queue_depth: 8,
@@ -201,41 +203,46 @@ fn per_connection_rate_limit_answers_429_and_spends_nothing() {
     .expect("bind loopback");
     let addr = wire.local_addr().to_string();
 
-    // The burst admits 2 back-to-back jobs; with refill at one token per
-    // 4 seconds the rest of the flood sheds deterministically.
+    // tenant-0's burst of 2 is spent across TWO connections: one job on
+    // each socket drains the shared bucket.
     let body = r#"{"kind":"lp","m":50,"d":6,"t":10,"eps":0.25,"mode":"exhaustive"}"#;
-    let mut c = WireClient::connect(&addr).expect("connect");
-    for i in 0..6 {
-        let r = c.post_job("tenant-0", body).expect("flood");
-        if i < 2 {
-            assert_eq!(r.status, 200, "burst request {i} must pass: {}", r.body_str());
-        } else {
-            assert_eq!(r.status, 429, "drained bucket must shed request {i}");
-            let secs: u64 = r
-                .header("retry-after")
-                .expect("rate-limit 429 must carry Retry-After")
-                .parse()
-                .expect("Retry-After must be numeric");
-            assert!(secs >= 1, "the wait hint is at least one second");
-        }
+    let mut c1 = WireClient::connect(&addr).expect("connect 1");
+    let mut c2 = WireClient::connect(&addr).expect("connect 2");
+    let r = c1.post_job("tenant-0", body).expect("burst on conn 1");
+    assert_eq!(r.status, 200, "first burst token: {}", r.body_str());
+    let r = c2.post_job("tenant-0", body).expect("burst on conn 2");
+    assert_eq!(r.status, 200, "second burst token (same bucket): {}", r.body_str());
+
+    // The bucket is drained tenant-wide: BOTH connections now shed —
+    // opening another socket bought tenant-0 nothing.
+    for (label, c) in [("conn 2", &mut c2), ("conn 1", &mut c1)] {
+        let r = c.post_job("tenant-0", body).expect("drained flood");
+        assert_eq!(r.status, 429, "{label} must shed from the shared bucket");
+        let secs: u64 = r
+            .header("retry-after")
+            .expect("rate-limit 429 must carry Retry-After")
+            .parse()
+            .expect("Retry-After must be numeric");
+        assert!(secs >= 1, "the wait hint is at least one second");
     }
 
-    // the limit is per connection: a fresh socket starts a fresh bucket
-    let mut c2 = WireClient::connect(&addr).expect("connect 2");
-    let r = c2.get("/v1/metrics", Some("tenant-0")).expect("fresh conn");
-    assert_eq!(r.status, 200, "another connection is unaffected");
+    // Buckets are per tenant, and keep-alive survived the sheds: the same
+    // connection that was just refused serves tenant-1 immediately.
+    let r = c1.post_job("tenant-1", body).expect("other tenant");
+    assert_eq!(r.status, 200, "tenant-1's bucket is independent: {}", r.body_str());
 
     wire.shutdown();
     let m = wire.drain();
-    assert_eq!(m.counter("rate_limited"), 4);
-    assert_eq!(m.counter("http_429"), 4);
-    assert_eq!(m.counter("jobs_completed"), 2, "only the burst ran");
+    assert_eq!(m.counter("rate_limited"), 2);
+    assert_eq!(m.counter("http_429"), 2);
+    assert_eq!(m.counter("jobs_completed"), 3, "two burst jobs + one from tenant-1");
     assert_eq!(m.counter("parse_errors"), 0, "the shed precedes parsing");
     assert_eq!(
         m.gauge("tenant_0_eps_spent"),
         Some(0.5),
         "shed requests spend no ε — only the two admitted jobs appear"
     );
+    assert_eq!(m.gauge("tenant_1_eps_spent"), Some(0.25));
 }
 
 /// The byte-identity contract: for a fixed spec the chunked wire body
@@ -268,6 +275,11 @@ fn wire_bodies_are_byte_identical_to_in_process_execution() {
                     format!(
                         r#"{{"kind":"lp","m":300,"d":8,"t":60,"eps":0.7,"mode":"hnsw","seed":{}}}"#,
                         tenant * 31 + 8,
+                    ),
+                    format!(
+                        r#"{{"kind":"release","u":64,"m":200,"n":300,"t":60,"eps":0.7,"index":"flat","class":"convex-lsq","workload":{},"seed":{}}}"#,
+                        50 + tenant,
+                        tenant * 31 + 9,
                     ),
                 ];
                 let token = format!("tenant-{tenant}");
@@ -308,6 +320,6 @@ fn wire_bodies_are_byte_identical_to_in_process_execution() {
     let m = wire.drain();
     assert_eq!(m.counter("parse_errors"), 0);
     assert_eq!(m.counter("http_400"), 0);
-    assert_eq!(m.counter("jobs_completed"), 16, "4 tenants x 2 specs x 2 rounds");
+    assert_eq!(m.counter("jobs_completed"), 24, "4 tenants x 3 specs x 2 rounds");
     assert_eq!(m.counter("jobs_failed"), 0);
 }

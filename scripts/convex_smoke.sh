@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Convex-loss release smoke (DESIGN.md §14), runnable locally and in CI:
+#
+#   ./scripts/convex_smoke.sh [STORE_DIR]
+#
+# Proves the query-class seam end to end on the serving path:
+#
+#   1. serve a batch of convex-lsq release jobs against a fresh artifact
+#      store — every index over the embedded loss vectors is a cold build
+#      and is persisted under a class-tagged workload fingerprint;
+#   2. serve the same batch again — every index must come back from the
+#      store (store_hit > 0, store_miss == 0), proving the class-salted
+#      fingerprints round-trip through the tiered store;
+#   3. a logistic-loss batch against the same store must make its own
+#      fingerprints (no cross-class cache aliasing) yet still drain clean.
+set -euo pipefail
+source "$(dirname "$0")/smoke_lib.sh"
+smoke_cd_root
+
+STORE="${1:-/tmp/fastmwem-convex-smoke}"
+rm -rf "$STORE"
+
+smoke_build
+
+echo "== 1. cold serve: build and persist convex-lsq class artifacts =="
+cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 \
+    --class=convex-lsq --store-dir="$STORE"
+
+echo "== 2. warm serve: class-tagged fingerprints must hit the store =="
+out=$(cargo run --release -- serve --jobs=8 --workers=2 --workloads=4 \
+    --class=convex-lsq --store-dir="$STORE")
+echo "$out"
+
+smoke_out_counter_pos "$out" store_hit \
+    "restarted convex serve must restore indices from the store"
+smoke_out_counter_zero "$out" store_miss \
+    "restarted convex serve must rebuild zero indices"
+
+echo "== 3. logistic class on the same store: no cross-class aliasing =="
+out=$(cargo run --release -- serve --jobs=4 --workers=2 --workloads=2 \
+    --class=convex-logistic --store-dir="$STORE")
+echo "$out"
+
+# A different class over the same workload ids must MISS (distinct
+# fingerprints) — a hit here would mean logistic jobs served lsq indices.
+smoke_out_counter_pos "$out" store_miss \
+    "a new query class must not alias another class's artifacts"
+
+echo "convex smoke passed"
